@@ -1,0 +1,59 @@
+//! Scalability demonstration on the largest stand-in
+//! (papers100m-sim ≈ 1.1M nodes, directed citation graph, F=128):
+//! DCI completes on the scaled device while RAIN reproduces the
+//! paper's Table V `CUDA out of memory` failure.
+//!
+//! ```bash
+//! cargo run --release --offline --example papers100m_sim
+//! ```
+
+use anyhow::Result;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::run_config;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::format_bytes;
+
+fn main() -> Result<()> {
+    let spec = datasets::spec("papers100m-sim")?;
+    println!(
+        "building papers100m-sim ({} nodes, stands in for {})...",
+        spec.n_nodes, spec.stands_in_for
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "papers100m-sim".into();
+    cfg.fanout = Fanout::parse("15,10,5")?;
+    cfg.batch_size = 1024;
+    cfg.compute = ComputeKind::Skip;
+    cfg.max_batches = Some(20);
+
+    for system in [SystemKind::Dgl, SystemKind::Dci, SystemKind::Rain] {
+        cfg.system = system;
+        let r = run_config(&cfg)?;
+        match &r.oom {
+            Some(oom) => println!(
+                "  {:<6} FAILED after {} batches: {oom}",
+                system.as_str(),
+                r.n_batches
+            ),
+            None => println!(
+                "  {:<6} {} batches, sim-prep {:.1}ms (sample {:.1}ms, load {:.1}ms), \
+                 hits adj {:.1}% feat {:.1}%, cache {}",
+                system.as_str(),
+                r.n_batches,
+                r.sim_prep_ns() / 1e6,
+                r.sample.modeled_ns / 1e6,
+                r.feature.modeled_ns / 1e6,
+                100.0 * r.stats.adj_hit_ratio(),
+                100.0 * r.stats.feat_hit_ratio(),
+                format_bytes(r.cache_bytes),
+            ),
+        }
+    }
+    println!(
+        "\n(the paper's Table V: RAIN requests tens of GB and OOMs on \
+         papers100M;\n DCI serves the same workload within the scaled 4090 budget)"
+    );
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT lowering: JAX model (+ Pallas kernels) -> HLO *text* artifacts.
+
+This is the only place Python touches the system; the Rust coordinator
+loads the emitted ``artifacts/*.hlo.txt`` via the ``xla`` crate's PJRT
+CPU client and never imports Python at runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one (model, feat_dim, classes, padded-shape) variant;
+``manifest.json`` describes them all for ``rust/src/runtime/artifacts.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    Rust side unwraps with ``to_tuple1()``).
+
+    ``as_hlo_text(True)`` = print_large_constants: the frozen model
+    weights are baked into the HLO as constants, and the default printer
+    elides anything big as ``constant({...})`` — which the text parser
+    on the Rust side would silently turn into zeros. Full printing is
+    REQUIRED for correct numerics (pinned by the golden-file test).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def worst_case_dims(batch_size: int, ks: Sequence[int]) -> List[int]:
+    """Padded node-array sizes per layer, input-most first.
+
+    dims[L] = batch; dims[l-1] = dims[l] * (K_l + 1) — every dst node
+    contributes itself (dst-first convention) plus up to K_l sampled
+    neighbors. Real batches are far smaller after dedup; the Rust
+    padding layer (runtime/padding.rs) buckets into these caps.
+    """
+    dims = [batch_size]
+    for k in reversed(list(ks)):
+        dims.append(dims[-1] * (k + 1))
+    return list(reversed(dims))
+
+
+# name -> variant spec. `ks` are neighbor slots per layer, input-most
+# first (the paper's fan-out strings, e.g. '8,4,2', use the same order).
+VARIANTS: Dict[str, Dict] = {
+    # Tiny smoke variants: fast to compile, used by rust unit/integration
+    # tests so `cargo test` exercises the real PJRT path cheaply.
+    "smoke_sage": dict(model="graphsage", feat_dim=8, hidden=16, classes=4,
+                       batch_size=8, ks=[2, 2, 2], seed=7),
+    "smoke_gcn": dict(model="gcn", feat_dim=8, hidden=16, classes=4,
+                      batch_size=8, ks=[2, 2, 2], seed=7),
+    # products-sim (Table II: F=100, 47 classes) serving variants.
+    "sage_f100_c47_bs256_k842": dict(model="graphsage", feat_dim=100,
+                                     hidden=128, classes=47, batch_size=256,
+                                     ks=[8, 4, 2], seed=1),
+    "gcn_f100_c47_bs256_k842": dict(model="gcn", feat_dim=100, hidden=128,
+                                    classes=47, batch_size=256,
+                                    ks=[8, 4, 2], seed=1),
+    "sage_f100_c47_bs1024_k222": dict(model="graphsage", feat_dim=100,
+                                      hidden=128, classes=47,
+                                      batch_size=1024, ks=[2, 2, 2], seed=1),
+    # reddit-sim (Table II: F=602, 41 classes).
+    "sage_f602_c41_bs256_k222": dict(model="graphsage", feat_dim=602,
+                                     hidden=128, classes=41, batch_size=256,
+                                     ks=[2, 2, 2], seed=1),
+}
+
+
+def write_golden(name: str, spec: Dict, params, dims: List[int], out_dir: str) -> None:
+    """Golden input/output pair for the Rust runtime's numerics test
+    (rust/tests/runtime_pjrt.rs): random padded inputs + the eager-JAX
+    logits. The Rust side executes the HLO artifact on the same inputs
+    and asserts allclose."""
+    rng = np.random.default_rng(12345)
+    x = rng.normal(size=(dims[0], spec["feat_dim"])).astype(np.float32)
+    flat, blocks_json = [], []
+    for l, k in enumerate(spec["ks"]):
+        n_src, n_dst = dims[l], dims[l + 1]
+        idx = rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32)
+        mask = (rng.random((n_dst, k)) < 0.8).astype(np.float32)
+        flat.extend([idx, mask])
+        blocks_json.append({"idx": idx.flatten().tolist(),
+                            "mask": mask.flatten().tolist()})
+    (logits,) = M.forward_flat(params, jnp.asarray(x),
+                               *[jnp.asarray(a) for a in flat])
+    doc = {
+        "variant": name,
+        "x": x.flatten().tolist(),
+        "blocks": blocks_json,
+        "logits": np.asarray(logits).flatten().tolist(),
+    }
+    with open(os.path.join(out_dir, f"{name}.golden.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def build_variant(name: str, spec: Dict, out_dir: str) -> Dict:
+    dims = worst_case_dims(spec["batch_size"], spec["ks"])
+    params = M.init_params(spec["model"], spec["feat_dim"], spec["hidden"],
+                           spec["classes"], n_layers=len(spec["ks"]),
+                           seed=spec["seed"])
+
+    def fn(x, *flat):
+        return M.forward_flat(params, x, *flat)
+
+    arg_specs = M.block_shapes(dims, spec["ks"], spec["feat_dim"])
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    if name.startswith("smoke"):
+        write_golden(name, spec, params, dims, out_dir)
+    entry = dict(name=name, file=fname, model=spec["model"],
+                 feat_dim=spec["feat_dim"], hidden=spec["hidden"],
+                 classes=spec["classes"], batch_size=spec["batch_size"],
+                 ks=spec["ks"], dims=dims, seed=spec["seed"],
+                 hlo_bytes=len(text))
+    print(f"  {name}: dims={dims} ks={spec['ks']} "
+          f"({len(text) / 1e6:.1f} MB hlo text)")
+    return entry
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--variants", nargs="*", default=None,
+                    help="subset of variant names (default: all)")
+    ap.add_argument("--list", action="store_true", help="list variants")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, spec in VARIANTS.items():
+            print(f"{name}: {spec}")
+        return 0
+
+    names = args.variants or list(VARIANTS)
+    unknown = [n for n in names if n not in VARIANTS]
+    if unknown:
+        ap.error(f"unknown variants: {unknown}; see --list")
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"lowering {len(names)} variants -> {out_dir}")
+    entries = [build_variant(n, VARIANTS[n], out_dir) for n in names]
+    manifest = dict(version=1, artifacts=entries)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for DCI's padded mini-batch GNN compute.
+
+Two kernels form the hot path that the L3 dual cache feeds:
+
+- ``gather_aggregate``: fused neighbor gather + masked sum/mean
+  aggregation over a padded neighbor-index matrix (the operation whose
+  *input bytes* DCI's feature cache optimizes).
+- ``tiled_matmul``: the per-layer dense transform, tiled for an
+  MXU-shaped systolic array (see DESIGN.md §Hardware-Adaptation).
+
+All kernels run under ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated in
+DESIGN.md from the BlockSpec VMEM footprint instead.
+"""
+
+from .sage_agg import gather_aggregate, tiled_matmul  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(+ hypothesis shape/dtype sweeps) asserts allclose between the two. The
+Rust runtime is in turn cross-checked against the same semantics via
+``rust/src/runtime/reference.rs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_aggregate_ref(h: jax.Array, idx: jax.Array, mask: jax.Array,
+                         *, mode: str = "sum") -> jax.Array:
+    """out[i] = agg_k mask[i,k] * h[idx[i,k]] — see sage_agg.gather_aggregate."""
+    g = jnp.take(h, idx, axis=0)                  # [M, K, F]
+    s = jnp.sum(g * mask[..., None], axis=1)      # [M, F]
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+        s = s / cnt
+    elif mode != "sum":
+        raise ValueError(f"unknown aggregation mode: {mode!r}")
+    return s
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B, f32 accumulation — see sage_agg.tiled_matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

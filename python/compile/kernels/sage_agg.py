@@ -1,0 +1,165 @@
+"""Pallas kernels: fused neighbor gather+aggregate, and a tiled matmul.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+CUDA hot spot — warps doing coalesced gathers of neighbor features — is
+re-thought for a TPU-style memory hierarchy:
+
+- ``gather_aggregate`` blocks over *destination-node tiles*; each grid
+  step holds the destination tile's neighbor indices + mask and the
+  (padded) source feature table in VMEM, produces one aggregated tile.
+  The HBM→VMEM schedule that a CUDA kernel expresses with threadblocks
+  is expressed here with BlockSpec index maps.
+- ``tiled_matmul`` is a classic (i, j, k) MXU tiling with an f32 VMEM
+  accumulator, shaped for the 128×128 systolic array.
+
+Both are lowered with ``interpret=True``: the image's CPU PJRT plugin
+cannot run Mosaic custom-calls, so interpret mode is the correctness
+path and TPU efficiency is reasoned about from the block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. DST_TILE × K gathers and DST_TILE × F accumulators must fit
+# VMEM (~16 MiB/core budget) *together with* the resident source-feature
+# block. For wide features (Reddit's 602-d) the whole table does not fit,
+# so gather_aggregate also blocks the feature dimension (grid axis 1):
+# each grid step holds an [N, F_TILE] slice of the table — the
+# HBM↔VMEM schedule of DESIGN.md §Hardware-Adaptation.
+DST_TILE = 128
+# Feature-dim tile budget: keep the resident table slice under ~12 MiB,
+# leaving headroom for idx/mask/out tiles.
+VMEM_TABLE_BUDGET = 12 * 1024 * 1024
+MM_TILE_M = 128
+MM_TILE_N = 128
+MM_TILE_K = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _gather_agg_kernel(h_ref, idx_ref, mask_ref, o_ref, *, mean: bool):
+    """One destination tile: o[i, :] = agg_k mask[i,k] * h[idx[i,k], :].
+
+    h_ref holds the full (padded) source feature table for the batch —
+    the "already staged in fast memory" operand that L3's feature cache
+    is responsible for producing cheaply.
+    """
+    idx = idx_ref[...]                       # [T, K] int32
+    mask = mask_ref[...]                     # [T, K] f32 (1 valid, 0 pad)
+    h = h_ref[...]                           # [N, F]
+    g = jnp.take(h, idx, axis=0)             # [T, K, F] gather
+    s = jnp.sum(g * mask[..., None], axis=1)  # masked sum
+    if mean:
+        cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+        s = s / cnt
+    o_ref[...] = s
+
+
+def gather_aggregate(h: jax.Array, idx: jax.Array, mask: jax.Array,
+                     *, mode: str = "sum", dst_tile: int = DST_TILE) -> jax.Array:
+    """Masked neighbor aggregation: out[i] = agg_k mask[i,k]*h[idx[i,k]].
+
+    Args:
+      h:    [N, F] f32 source node features (padded rows are zero).
+      idx:  [M, K] i32 neighbor indices into ``h`` (pad entries may be 0,
+            their mask is 0).
+      mask: [M, K] f32 validity mask.
+      mode: "sum" (GraphSAGE, Table III) or "mean" (GCN-style average,
+            excluding the self term which the model adds separately).
+
+    Returns [M, F] f32 aggregated features.
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"unknown aggregation mode: {mode!r}")
+    m, k = idx.shape
+    n, f = h.shape
+    if mask.shape != (m, k):
+        raise ValueError(f"mask shape {mask.shape} != idx shape {(m, k)}")
+    tile = min(dst_tile, m) or 1
+    mp = _ceil_to(m, tile)
+    if mp != m:  # pad destination dim to a whole number of tiles
+        idx = jnp.pad(idx, ((0, mp - m), (0, 0)))
+        mask = jnp.pad(mask, ((0, mp - m), (0, 0)))
+
+    # Feature-dim blocking: shrink the resident table slice until it
+    # fits the VMEM budget (mean mode needs the full mask either way,
+    # which is per-dst-tile and cheap).
+    f_tile = feature_tile(n, f)
+    fp = _ceil_to(f, f_tile)
+    if fp != f:
+        h = jnp.pad(h, ((0, 0), (0, fp - f)))
+    grid = (mp // tile, fp // f_tile)
+    out = pl.pallas_call(
+        functools.partial(_gather_agg_kernel, mean=(mode == "mean")),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, f_tile), lambda i, j: (0, j)),   # table slice
+            pl.BlockSpec((tile, k), lambda i, j: (i, 0)),     # dst tile idx
+            pl.BlockSpec((tile, k), lambda i, j: (i, 0)),     # dst tile mask
+        ],
+        out_specs=pl.BlockSpec((tile, f_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, fp), h.dtype),
+        interpret=True,
+    )(h, idx, mask)
+    return out[:m, :f]
+
+
+def feature_tile(n_src: int, feat: int, budget: int = VMEM_TABLE_BUDGET) -> int:
+    """Largest feature-dim tile whose [n_src, f_tile] f32 slice fits the
+    VMEM table budget (multiples of 128 lanes where possible)."""
+    if n_src * feat * 4 <= budget:
+        return feat
+    max_f = max(1, budget // (n_src * 4))
+    if max_f >= 128:
+        max_f = (max_f // 128) * 128
+    return min(feat, max_f)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    """(i, j, k) MXU tiling; the output tile doubles as the accumulator
+    (stays resident in VMEM across the k steps of one (i, j) tile)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def tiled_matmul(a: jax.Array, b: jax.Array,
+                 *, tm: int = MM_TILE_M, tn: int = MM_TILE_N,
+                 tk: int = MM_TILE_K) -> jax.Array:
+    """C = A @ B with MXU-shaped tiling (pads every dim to tile multiples)."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    tm = min(tm, _ceil_to(m, 8))
+    tn = min(tn, _ceil_to(n, 8))
+    tk = min(tk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(k, tk)
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // tk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // tm, np_ // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]

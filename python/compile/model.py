@@ -1,0 +1,122 @@
+"""L2: GraphSAGE / GCN inference forward over padded mini-batch blocks.
+
+The models follow Table III of the paper: 3 layers, hidden dim 128,
+GraphSAGE with sum aggregation + fully-connected apply, GCN with average
+aggregation. They are *inference* graphs (weights are baked into the HLO
+at AOT time — a trained, frozen model, as in the paper's serving
+setting).
+
+Block convention (mirrored by ``rust/src/sampler/block.rs``):
+
+- ``x``: ``[n0, F]`` features of the layer-0 (input-most, widest) node
+  array; padded rows are zero.
+- For layer ``l`` in 1..=3: ``idx_l [n_l, K_l] i32`` neighbor indices
+  into the *previous* layer's node array, ``mask_l [n_l, K_l] f32``
+  validity mask (0 for sampling/padding slots).
+- Destination-nodes-first: layer ``l``'s dst nodes are exactly the first
+  ``n_l`` entries of layer ``l-1``'s node array, so the self/residual
+  term is ``h_prev[:n_l]`` and no separate self-index input is needed.
+
+The neighbor aggregation — the operation whose input bytes DCI's dual
+cache optimizes — is the L1 Pallas kernel ``kernels.gather_aggregate``,
+so it lowers into the same HLO artifact the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gather_aggregate
+
+Params = Dict[str, Any]
+
+MODELS = ("graphsage", "gcn")
+
+
+def _glorot(key: jax.Array, fan_in: int, fan_out: int) -> jax.Array:
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+
+def init_params(model: str, feat_dim: int, hidden: int, classes: int,
+                n_layers: int = 3, seed: int = 0) -> Params:
+    """Deterministic 'trained' weights for the frozen inference graph."""
+    if model not in MODELS:
+        raise ValueError(f"unknown model {model!r}; expected one of {MODELS}")
+    key = jax.random.PRNGKey(seed)
+    dims = [feat_dim] + [hidden] * (n_layers - 1) + [classes]
+    layers: List[Dict[str, jax.Array]] = []
+    for l in range(n_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        d_in, d_out = dims[l], dims[l + 1]
+        layer = {"w_neigh": _glorot(k1, d_in, d_out),
+                 "b": jnp.zeros((d_out,), jnp.float32)}
+        if model == "graphsage":
+            layer["w_self"] = _glorot(k2, d_in, d_out)
+        del k3
+        layers.append(layer)
+    return {"model": model, "layers": layers}
+
+
+def _sage_layer(layer: Params, h: jax.Array, idx: jax.Array,
+                mask: jax.Array, *, last: bool) -> jax.Array:
+    """GraphSAGE: h' = act(W_self h_dst + W_neigh * sum_k h_neigh)."""
+    n_dst = idx.shape[0]
+    h_dst = h[:n_dst]
+    agg = gather_aggregate(h, idx, mask, mode="sum")
+    out = h_dst @ layer["w_self"] + agg @ layer["w_neigh"] + layer["b"]
+    return out if last else jax.nn.relu(out)
+
+
+def _gcn_layer(layer: Params, h: jax.Array, idx: jax.Array,
+               mask: jax.Array, *, last: bool) -> jax.Array:
+    """GCN: h' = act(W * avg(neighbors ∪ self))."""
+    n_dst = idx.shape[0]
+    h_dst = h[:n_dst]
+    s = gather_aggregate(h, idx, mask, mode="sum")
+    deg = jnp.sum(mask, axis=1, keepdims=True)
+    agg = (s + h_dst) / (deg + 1.0)
+    out = agg @ layer["w_neigh"] + layer["b"]
+    return out if last else jax.nn.relu(out)
+
+
+def forward(params: Params, x: jax.Array,
+            blocks: Sequence[Tuple[jax.Array, jax.Array]]) -> jax.Array:
+    """Run the stacked model; returns logits ``[n_last, classes]``.
+
+    ``blocks`` is ``[(idx_1, mask_1), ..., (idx_L, mask_L)]`` ordered
+    from the input-most layer to the seed layer.
+    """
+    layers = params["layers"]
+    if len(blocks) != len(layers):
+        raise ValueError(f"{len(blocks)} blocks but {len(layers)} layers")
+    layer_fn = _sage_layer if params["model"] == "graphsage" else _gcn_layer
+    h = x
+    for l, (idx, mask) in enumerate(blocks):
+        h = layer_fn(layers[l], h, idx, mask, last=(l == len(layers) - 1))
+    return h
+
+
+def forward_flat(params: Params, x: jax.Array, *flat: jax.Array) -> Tuple[jax.Array]:
+    """Flat-argument wrapper used for AOT lowering (and by the Rust side:
+    positional args are ``x, idx_1, mask_1, ..., idx_L, mask_L``)."""
+    if len(flat) % 2 != 0:
+        raise ValueError("expected (idx, mask) pairs after x")
+    blocks = [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+    return (forward(params, x, blocks),)
+
+
+def block_shapes(dims: Sequence[int], ks: Sequence[int], feat_dim: int):
+    """ShapeDtypeStructs for lowering: dims = [n0, n1, ..., nL] padded node
+    counts, ks = [K_1..K_L] neighbor slots per layer."""
+    if len(dims) != len(ks) + 1:
+        raise ValueError("dims must have one more entry than ks")
+    specs = [jax.ShapeDtypeStruct((dims[0], feat_dim), jnp.float32)]
+    for l, k in enumerate(ks):
+        n = dims[l + 1]
+        specs.append(jax.ShapeDtypeStruct((n, k), jnp.int32))
+        specs.append(jax.ShapeDtypeStruct((n, k), jnp.float32))
+    return specs

@@ -1,0 +1,157 @@
+"""L1/L2 performance estimation (the TPU-side half of the perf pass).
+
+``interpret=True`` Pallas gives CPU-numpy timings that say nothing about
+real accelerator behaviour, so — per DESIGN.md — kernel performance is
+reasoned about *structurally*: VMEM residency per grid step, bytes moved
+HBM↔VMEM per step, arithmetic intensity, and the roofline bound that
+implies for each AOT variant. Run:
+
+    python -m compile.perf_estimate            # table for all variants
+    python -m compile.perf_estimate --hlo      # + L2 HLO op census
+
+The L2 census also checks the fusion/no-recompute properties the perf
+targets call for: each layer lowers exactly one gather (no redundant
+re-gather), and the interpret-mode grid loop is the only while op.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass
+from typing import Dict, List
+
+from .aot import VARIANTS, to_hlo_text, worst_case_dims
+from .kernels.sage_agg import feature_tile, DST_TILE
+
+# TPU-v4-ish envelope used for the structural estimates (the repo's
+# simulated serving device is an RTX 4090; the kernel *authoring* target
+# is a TPU-style memory hierarchy — DESIGN.md §Hardware-Adaptation).
+VMEM_BYTES = 16 * 1024 * 1024          # per-core VMEM budget
+HBM_GBPS = 1200.0                      # HBM bandwidth
+MXU_TFLOPS = 100.0                     # bf16 systolic peak (per core, approx)
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_step_bytes: int
+    hbm_bytes_per_step: int
+    flops_per_step: float
+    grid_steps: int
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_step_bytes <= VMEM_BYTES
+
+    @property
+    def intensity(self) -> float:
+        """flops per HBM byte — the roofline x-axis."""
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1)
+
+    @property
+    def bound(self) -> str:
+        knee = MXU_TFLOPS * 1e12 / (HBM_GBPS * 1e9)
+        return "compute" if self.intensity > knee else "memory"
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU peak achievable under the memory roofline."""
+        knee = MXU_TFLOPS * 1e12 / (HBM_GBPS * 1e9)
+        return min(1.0, self.intensity / knee)
+
+
+def estimate_gather(n_src: int, feat: int, n_dst: int, k: int) -> KernelEstimate:
+    """gather_aggregate: grid (dst tiles × feature tiles); VMEM holds an
+    [n_src, f_tile] slice of the source table + one dst tile of
+    idx/mask/out. HBM traffic per step: the table slice is resident
+    across the dst-tile axis (counted once per feature tile, amortized),
+    idx/mask/out stream per tile. Mirrors the kernel's feature_tile
+    blocking — the fix the perf pass introduced for F=602."""
+    tile = min(DST_TILE, n_dst)
+    f_tile = feature_tile(n_src, feat)
+    dst_steps = max(1, -(-n_dst // tile))
+    f_steps = max(1, -(-feat // f_tile))
+    steps = dst_steps * f_steps
+    vmem = n_src * f_tile * 4 + tile * k * (4 + 4) + tile * f_tile * 4
+    # amortized: each table slice read once over its dst-tile sweep
+    hbm = (n_src * f_tile * 4) // dst_steps + tile * k * 8 + tile * f_tile * 4
+    flops = 2.0 * tile * k * f_tile
+    return KernelEstimate("gather_aggregate", vmem, hbm, flops, steps)
+
+
+def estimate_matmul(m: int, k: int, n: int, tm=128, tn=128, tk=128) -> KernelEstimate:
+    """tiled_matmul: (i, j, kk) grid; VMEM holds one A, B, and C tile."""
+    tm, tn, tk = min(tm, m), min(tn, n), min(tk, k)
+    steps = max(1, (-(-m // tm)) * (-(-n // tn)) * (-(-k // tk)))
+    vmem = (tm * tk + tk * tn + tm * tn) * 4
+    hbm = (tm * tk + tk * tn) * 4 + (tm * tn * 4) // max(1, -(-k // tk))
+    flops = 2.0 * tm * tn * tk
+    return KernelEstimate("tiled_matmul", vmem, hbm, flops, steps)
+
+
+def variant_estimates(name: str) -> List[KernelEstimate]:
+    spec = VARIANTS[name]
+    dims = worst_case_dims(spec["batch_size"], spec["ks"])
+    feat, hidden = spec["feat_dim"], spec["hidden"]
+    out: List[KernelEstimate] = []
+    d_in = feat
+    for l, k in enumerate(spec["ks"]):
+        n_src, n_dst = dims[l], dims[l + 1]
+        out.append(estimate_gather(n_src, d_in, n_dst, k))
+        d_out = spec["classes"] if l == len(spec["ks"]) - 1 else hidden
+        out.append(estimate_matmul(n_dst, d_in, d_out))
+        d_in = d_out
+    return out
+
+
+def hlo_census(name: str) -> Dict[str, int]:
+    """Lower the variant and count the op classes the L2 perf targets
+    care about (gathers per layer, loop structure, dots)."""
+    import jax
+
+    from . import model as M
+
+    spec = VARIANTS[name]
+    dims = worst_case_dims(spec["batch_size"], spec["ks"])
+    params = M.init_params(spec["model"], spec["feat_dim"], spec["hidden"],
+                           spec["classes"], seed=spec["seed"])
+
+    def fn(x, *flat):
+        return M.forward_flat(params, x, *flat)
+
+    lowered = jax.jit(fn).lower(*M.block_shapes(dims, spec["ks"], spec["feat_dim"]))
+    text = to_hlo_text(lowered)
+    return {
+        "gather": text.count(" gather("),
+        "while": text.count(" while("),
+        "dot": text.count(" dot("),
+        "bytes": len(text),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hlo", action="store_true", help="also run the L2 HLO census")
+    ap.add_argument("--variants", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    names = args.variants or [n for n in VARIANTS if not n.startswith("smoke")]
+
+    print(f"{'variant':<28} {'kernel':<18} {'VMEM/step':>10} {'ok':>3} "
+          f"{'int(fl/B)':>9} {'bound':>8} {'MXU util':>8}")
+    for name in names:
+        for e in variant_estimates(name):
+            print(f"{name:<28} {e.name:<18} {e.vmem_step_bytes/1e6:>8.2f}MB "
+                  f"{'y' if e.vmem_ok else 'N':>3} {e.intensity:>9.1f} "
+                  f"{e.bound:>8} {e.mxu_utilization:>7.1%}")
+    if args.hlo:
+        print("\nL2 HLO census (one gather per layer = no redundant re-gather):")
+        for name in names:
+            c = hlo_census(name)
+            print(f"  {name}: gather={c['gather']} while={c['while']} "
+                  f"dot={c['dot']} hlo={c['bytes']/1e6:.1f}MB")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

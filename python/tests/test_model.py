@@ -1,0 +1,127 @@
+"""L2 correctness: model forward semantics, shapes, and conventions."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels.ref import gather_aggregate_ref
+
+
+def _blocks(rng, dims, ks):
+    """Random valid blocks for padded dims=[n0..nL], ks=[K1..KL]."""
+    out = []
+    for l, k in enumerate(ks):
+        n_src, n_dst = dims[l], dims[l + 1]
+        idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32))
+        mask = jnp.asarray((rng.random((n_dst, k)) < 0.8).astype(np.float32))
+        out.append((idx, mask))
+    return out
+
+
+@pytest.mark.parametrize("model", ["graphsage", "gcn"])
+def test_forward_shapes(model):
+    rng = np.random.default_rng(0)
+    dims, ks, f, c = [40, 20, 10, 5], [3, 2, 2], 12, 7
+    params = M.init_params(model, f, 16, c)
+    x = jnp.asarray(rng.normal(size=(dims[0], f)).astype(np.float32))
+    logits = M.forward(params, x, _blocks(rng, dims, ks))
+    assert logits.shape == (5, c)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_init_params_structure_and_determinism():
+    p1 = M.init_params("graphsage", 10, 16, 4, seed=3)
+    p2 = M.init_params("graphsage", 10, 16, 4, seed=3)
+    assert p1["model"] == "graphsage" and len(p1["layers"]) == 3
+    for l1, l2 in zip(p1["layers"], p2["layers"]):
+        np.testing.assert_array_equal(l1["w_neigh"], l2["w_neigh"])
+        assert "w_self" in l1
+    # gcn has no self weight
+    pg = M.init_params("gcn", 10, 16, 4)
+    assert all("w_self" not in l for l in pg["layers"])
+    with pytest.raises(ValueError):
+        M.init_params("gat", 10, 16, 4)
+
+
+def test_sage_single_layer_manual_reference():
+    """One GraphSAGE layer against a hand-written formula."""
+    rng = np.random.default_rng(1)
+    n_src, n_dst, k, f, c = 9, 4, 3, 6, 5
+    params = M.init_params("graphsage", f, 16, c, n_layers=1, seed=0)
+    h = jnp.asarray(rng.normal(size=(n_src, f)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32))
+    mask = jnp.asarray((rng.random((n_dst, k)) < 0.6).astype(np.float32))
+    got = M.forward(params, h, [(idx, mask)])
+    layer = params["layers"][0]
+    agg = gather_aggregate_ref(h, idx, mask, mode="sum")
+    want = h[:n_dst] @ layer["w_self"] + agg @ layer["w_neigh"] + layer["b"]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gcn_single_layer_manual_reference():
+    rng = np.random.default_rng(2)
+    n_src, n_dst, k, f, c = 9, 4, 3, 6, 5
+    params = M.init_params("gcn", f, 16, c, n_layers=1, seed=0)
+    h = jnp.asarray(rng.normal(size=(n_src, f)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32))
+    mask = jnp.asarray((rng.random((n_dst, k)) < 0.6).astype(np.float32))
+    got = M.forward(params, h, [(idx, mask)])
+    layer = params["layers"][0]
+    s = gather_aggregate_ref(h, idx, mask, mode="sum")
+    deg = np.asarray(mask).sum(axis=1, keepdims=True)
+    want = (s + h[:n_dst]) / (deg + 1.0) @ layer["w_neigh"] + layer["b"]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_padding_rows_do_not_leak():
+    """Zero-padded input rows + zero masks must yield identical logits for
+    the real rows regardless of padded garbage in idx slots."""
+    rng = np.random.default_rng(3)
+    dims, ks, f, c = [30, 12, 6, 3], [2, 2, 2], 8, 4
+    params = M.init_params("graphsage", f, 16, c)
+    x = rng.normal(size=(dims[0], f)).astype(np.float32)
+    x[20:] = 0.0  # padded tail
+    blocks = _blocks(rng, dims, ks)
+    base = M.forward(params, jnp.asarray(x), blocks)
+    # retarget masked-out slots at arbitrary indices: must not matter
+    blocks2 = []
+    for idx, mask in blocks:
+        scrambled = np.asarray(idx).copy()
+        dead = np.asarray(mask) == 0.0
+        scrambled[dead] = (scrambled[dead] + 13) % dims[0] % idx.shape[0]
+        blocks2.append((jnp.asarray(scrambled), mask))
+    got = M.forward(params, jnp.asarray(x), blocks2)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_forward_flat_matches_forward():
+    rng = np.random.default_rng(4)
+    dims, ks, f, c = [40, 20, 10, 5], [3, 2, 2], 12, 7
+    params = M.init_params("gcn", f, 16, c)
+    x = jnp.asarray(rng.normal(size=(dims[0], f)).astype(np.float32))
+    blocks = _blocks(rng, dims, ks)
+    flat = [a for b in blocks for a in b]
+    (got,) = M.forward_flat(params, x, *flat)
+    want = M.forward(params, x, blocks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError):
+        M.forward_flat(params, x, flat[0])
+
+
+def test_block_shapes_validation():
+    specs = M.block_shapes([40, 20, 10, 5], [3, 2, 2], 12)
+    assert len(specs) == 7
+    assert specs[0].shape == (40, 12)
+    assert specs[1].shape == (20, 3) and specs[1].dtype == jnp.int32
+    with pytest.raises(ValueError):
+        M.block_shapes([40, 20], [3, 2, 2], 12)
+
+
+def test_forward_wrong_block_count():
+    params = M.init_params("graphsage", 4, 8, 2)
+    x = jnp.zeros((10, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        M.forward(params, x, [])

@@ -1,0 +1,158 @@
+//! Ablation — is the workload-aware Eq. (1) split actually better than
+//! fixed splits? Sweeps the adjacency-cache fraction 0%..100% at a
+//! constrained budget and compares each fixed split against what
+//! Eq. (1) chose (DESIGN.md calls this ablation out; the paper argues
+//! the split should track the sampling/loading time ratio).
+//!
+//! `cargo bench --bench ablation_alloc [-- --quick]`
+
+use dci::bench_support::{fmt_ms, jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Ablation: Eq.(1) vs fixed cache splits (products-sim, 80MB budget)",
+        &["fanout", "adj-share", "sim-prep", "adj-hit%", "feat-hit%"],
+    );
+
+    eprintln!("building products-sim...");
+    let ds = datasets::spec("products-sim")?.build();
+    let budget = 80u64 << 20;
+    let fanouts: &[&str] = if opts.quick { &["8,4,2"] } else { &["2,2,2", "8,4,2", "15,10,5"] };
+    let shares: &[f64] = if opts.quick {
+        &[0.0, 0.5, 1.0]
+    } else {
+        &[0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0]
+    };
+    let max_batches = opts.max_batches(15, 4);
+
+    for fanout in fanouts {
+        let mut best_fixed = f64::MAX;
+        // fixed splits, implemented by overriding the cost-model-driven
+        // ratio: run DCI with an explicit budget and a forced fraction
+        for &share in shares {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "products-sim".into();
+            cfg.system = SystemKind::Dci;
+            cfg.batch_size = 1024;
+            cfg.fanout = Fanout::parse(fanout)?;
+            cfg.budget = Some(budget);
+            cfg.compute = ComputeKind::Skip;
+            cfg.max_batches = max_batches;
+            // forcing: shrink uva costs so the measured ratio equals the
+            // desired share is fragile — instead prepare DCI normally and
+            // then re-run with an explicit fixed allocation via the
+            // low-level API
+            let r = run_fixed_split(&ds, &cfg, share)?;
+            best_fixed = best_fixed.min(r.0);
+            report.row(
+                &[
+                    fanout.to_string(),
+                    format!("{:.0}%", share * 100.0),
+                    fmt_ms(r.0),
+                    format!("{:.1}", 100.0 * r.1),
+                    format!("{:.1}", 100.0 * r.2),
+                ],
+                vec![
+                    ("fanout", s(fanout)),
+                    ("adj_share", jnum(share)),
+                    ("prep_ns", jnum(r.0)),
+                ],
+            );
+        }
+        // Eq. (1)'s own choice
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "products-sim".into();
+        cfg.system = SystemKind::Dci;
+        cfg.batch_size = 1024;
+        cfg.fanout = Fanout::parse(fanout)?;
+        cfg.budget = Some(budget);
+        cfg.compute = ComputeKind::Skip;
+        cfg.max_batches = max_batches;
+        let mut engine = InferenceEngine::prepare(&ds, cfg)?;
+        let r = engine.run()?;
+        let chosen = r
+            .alloc
+            .map(|a| a.c_adj as f64 / a.total().max(1) as f64)
+            .unwrap_or(0.0);
+        eprintln!(
+            "  fanout={fanout}: Eq.(1) chose {:.0}% adj -> {} (best fixed {})",
+            chosen * 100.0,
+            fmt_ms(r.sim_prep_ns()),
+            fmt_ms(best_fixed)
+        );
+        report.row(
+            &[
+                fanout.to_string(),
+                format!("Eq.(1)={:.0}%", chosen * 100.0),
+                fmt_ms(r.sim_prep_ns()),
+                format!("{:.1}", 100.0 * r.stats.adj_hit_ratio()),
+                format!("{:.1}", 100.0 * r.stats.feat_hit_ratio()),
+            ],
+            vec![
+                ("fanout", s(fanout)),
+                ("adj_share", jnum(chosen)),
+                ("prep_ns", jnum(r.sim_prep_ns())),
+                ("eq1", dci::util::json::Json::Bool(true)),
+            ],
+        );
+    }
+    report.finish(&opts)?;
+    println!("expected: Eq.(1)'s choice lands near the fixed-split optimum for");
+    println!("every fan-out, without sweeping (the paper's workload-awareness)");
+    Ok(())
+}
+
+/// Run DCI with an explicitly fixed (c_adj, c_feat) split.
+fn run_fixed_split(
+    ds: &dci::graph::Dataset,
+    cfg: &RunConfig,
+    adj_share: f64,
+) -> anyhow::Result<(f64, f64, f64)> {
+    use dci::baselines::PreparedSystem;
+    use dci::cache::{adj_cache::AdjCache, feat_cache::FeatCache, CacheAllocation};
+    use dci::mem::CostModel;
+    use dci::sampler::presample;
+    use dci::util::Rng;
+
+    let cost = CostModel::default();
+    let mut rng = Rng::new(cfg.seed);
+    let stats = presample(
+        &ds.csc,
+        &ds.features,
+        &ds.test_nodes,
+        cfg.batch_size,
+        &cfg.fanout,
+        cfg.n_presample,
+        &cost,
+        &mut rng,
+    );
+    let total = cfg.budget.unwrap();
+    let c_adj = (total as f64 * adj_share) as u64;
+    let c_feat = total - c_adj;
+    let (adj, _) = AdjCache::fill(&ds.csc, &stats.elem_counts, c_adj);
+    let (feat, _) = FeatCache::fill(&ds.features, &stats.node_visits, c_feat);
+    let prepared = PreparedSystem {
+        kind: SystemKind::Dci,
+        adj_cache: Some(adj),
+        feat_cache: Some(feat),
+        alloc: Some(CacheAllocation { c_adj, c_feat }),
+        presample: Some(stats),
+        batch_order: None,
+        inter_batch_reuse: false,
+        preprocess_ns: 0.0,
+        preprocess_wall_ns: 0.0,
+    };
+    let mut engine = dci::engine::InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    let r = engine.run()?;
+    Ok((
+        r.sim_prep_ns(),
+        r.stats.adj_hit_ratio(),
+        r.stats.feat_hit_ratio(),
+    ))
+}

@@ -1,0 +1,76 @@
+//! Fig. 1 — decomposition of total inference time into sampling /
+//! feature-loading / computation, on the DGL baseline (the observation
+//! motivating DCI: mini-batch preparation is 56–92% of total time and
+//! the sampling-vs-loading balance shifts with fan-out).
+//!
+//! `cargo bench --bench fig01_decomposition [-- --quick]`
+
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Fig.1: inference time decomposition (DGL baseline, GraphSAGE)",
+        &["dataset", "fanout", "bs", "sample%", "load%", "compute%", "prep%"],
+    );
+
+    let dataset_names: &[&str] = if opts.quick {
+        &["products-sim"]
+    } else {
+        &["reddit-sim", "products-sim"]
+    };
+    let batch_sizes: &[usize] = if opts.quick { &[256] } else { &[256, 1024, 4096] };
+    let max_batches = opts.max_batches(25, 5);
+
+    for name in dataset_names {
+        eprintln!("building {name}...");
+        let ds = datasets::spec(name)?.build();
+        for fanout in ["2,2,2", "8,4,2", "15,10,5"] {
+            for &bs in batch_sizes {
+                let mut cfg = RunConfig::default();
+                cfg.dataset = name.to_string();
+                cfg.system = SystemKind::Dgl;
+                cfg.fanout = Fanout::parse(fanout)?;
+                cfg.batch_size = bs;
+                cfg.compute = ComputeKind::Skip; // modeled GPU compute
+                cfg.max_batches = max_batches;
+                let mut engine = InferenceEngine::prepare(&ds, cfg)?;
+                let r = engine.run()?;
+                let total = r.sim_total_ns();
+                let pct = |x: f64| 100.0 * x / total.max(1.0);
+                let (sa, lo, co) = (
+                    pct(r.sample.modeled_ns),
+                    pct(r.feature.modeled_ns),
+                    pct(r.compute.total_ns()),
+                );
+                report.row(
+                    &[
+                        name.to_string(),
+                        fanout.to_string(),
+                        bs.to_string(),
+                        format!("{sa:.1}"),
+                        format!("{lo:.1}"),
+                        format!("{co:.1}"),
+                        format!("{:.1}", sa + lo),
+                    ],
+                    vec![
+                        ("dataset", s(name)),
+                        ("fanout", s(fanout)),
+                        ("bs", jnum(bs as f64)),
+                        ("sample_pct", jnum(sa)),
+                        ("load_pct", jnum(lo)),
+                        ("compute_pct", jnum(co)),
+                    ],
+                );
+            }
+        }
+    }
+    report.finish(&opts)?;
+    println!("paper: preparation (sample+load) is 56–92% of total across configs");
+    Ok(())
+}

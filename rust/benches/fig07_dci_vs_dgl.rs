@@ -1,0 +1,95 @@
+//! Fig. 7 — end-to-end inference time, DCI vs DGL, across datasets ×
+//! models × fan-outs × batch sizes (the paper's headline: 1.18×–11.26×
+//! speedup, larger with larger fan-outs; preprocessing excluded, §V.B).
+//!
+//! `cargo bench --bench fig07_dci_vs_dgl [-- --quick]`
+
+use dci::bench_support::{fmt_ms, fmt_speedup, jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, ModelKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Fig.7: end-to-end inference time, DGL vs DCI (sim totals)",
+        &["dataset", "model", "fanout", "bs", "DGL", "DCI", "speedup"],
+    );
+
+    let dataset_names: &[&str] = if opts.quick {
+        &["products-sim"]
+    } else {
+        &["reddit-sim", "yelp-sim", "amazon-sim", "products-sim"]
+    };
+    let models = if opts.quick {
+        vec![ModelKind::GraphSage]
+    } else {
+        vec![ModelKind::GraphSage, ModelKind::Gcn]
+    };
+    let batch_sizes: &[usize] = if opts.quick { &[256] } else { &[256, 1024, 4096] };
+    let fanouts: &[&str] =
+        if opts.quick { &["8,4,2"] } else { &["2,2,2", "8,4,2", "15,10,5"] };
+    let max_batches = opts.max_batches(20, 4);
+
+    let mut speedups: Vec<f64> = Vec::new();
+    for name in dataset_names {
+        eprintln!("building {name}...");
+        let ds = datasets::spec(name)?.build();
+        for &model in &models {
+            for fanout in fanouts {
+                for &bs in batch_sizes {
+                    let mut cfg = RunConfig::default();
+                    cfg.dataset = name.to_string();
+                    cfg.model = model;
+                    cfg.fanout = Fanout::parse(fanout)?;
+                    cfg.batch_size = bs;
+                    cfg.compute = ComputeKind::Skip; // modeled GPU compute
+                    cfg.max_batches = max_batches;
+
+                    cfg.system = SystemKind::Dgl;
+                    let dgl = InferenceEngine::prepare(&ds, cfg.clone())?.run()?;
+                    cfg.system = SystemKind::Dci;
+                    let dci = InferenceEngine::prepare(&ds, cfg)?.run()?;
+
+                    let (a, b) = (dgl.sim_total_ns(), dci.sim_total_ns());
+                    speedups.push(a / b);
+                    eprintln!(
+                        "  {name} {} {fanout} bs={bs}: {}",
+                        model.as_str(),
+                        fmt_speedup(a, b)
+                    );
+                    report.row(
+                        &[
+                            name.to_string(),
+                            model.as_str().to_string(),
+                            fanout.to_string(),
+                            bs.to_string(),
+                            fmt_ms(a),
+                            fmt_ms(b),
+                            fmt_speedup(a, b),
+                        ],
+                        vec![
+                            ("dataset", s(name)),
+                            ("model", s(model.as_str())),
+                            ("fanout", s(fanout)),
+                            ("bs", jnum(bs as f64)),
+                            ("dgl_ns", jnum(a)),
+                            ("dci_ns", jnum(b)),
+                            ("speedup", jnum(a / b)),
+                        ],
+                    );
+                }
+            }
+        }
+    }
+    report.finish(&opts)?;
+    let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("measured speedups: {min:.2}x – {max:.2}x (avg {avg:.2}x)");
+    println!("paper: 1.22x–11.26x (avg 4.92x) GraphSAGE; 1.18x–9.07x (avg 4.22x) GCN;");
+    println!("smaller fan-outs give smaller wins (Amdahl on the sampling share)");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Fig. 8 — DCI vs the single-cache system (SCI) on products-sim:
+//! the adjacency cache's contribution (paper: 1.12–1.32× GraphSAGE,
+//! 1.08–1.22× GCN; single-cache leaves GPU memory idle).
+//!
+//! `cargo bench --bench fig08_dci_vs_sci [-- --quick]`
+
+use dci::bench_support::{fmt_ms, fmt_speedup, jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, ModelKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Fig.8: SCI vs DCI end-to-end on products-sim (sim totals)",
+        &["model", "fanout", "bs", "SCI", "DCI", "speedup", "adj-hit%"],
+    );
+
+    eprintln!("building products-sim...");
+    let ds = datasets::spec("products-sim")?.build();
+    let models = if opts.quick {
+        vec![ModelKind::GraphSage]
+    } else {
+        vec![ModelKind::GraphSage, ModelKind::Gcn]
+    };
+    let batch_sizes: &[usize] = if opts.quick { &[1024] } else { &[256, 1024, 4096] };
+    let fanouts: &[&str] =
+        if opts.quick { &["8,4,2"] } else { &["2,2,2", "8,4,2", "15,10,5"] };
+    let max_batches = opts.max_batches(20, 4);
+
+    let mut speedups = Vec::new();
+    for &model in &models {
+        for fanout in fanouts {
+            for &bs in batch_sizes {
+                let mut cfg = RunConfig::default();
+                cfg.dataset = "products-sim".into();
+                cfg.model = model;
+                cfg.fanout = Fanout::parse(fanout)?;
+                cfg.batch_size = bs;
+                cfg.compute = ComputeKind::Skip;
+                cfg.max_batches = max_batches;
+                // constrained budget: the regime where the split matters
+                // (with unconstrained memory both cache everything)
+                cfg.budget = Some(120 << 20);
+
+                cfg.system = SystemKind::Sci;
+                let sci = InferenceEngine::prepare(&ds, cfg.clone())?.run()?;
+                cfg.system = SystemKind::Dci;
+                let dci = InferenceEngine::prepare(&ds, cfg)?.run()?;
+
+                let (a, b) = (sci.sim_total_ns(), dci.sim_total_ns());
+                speedups.push(a / b);
+                eprintln!(
+                    "  {} {fanout} bs={bs}: {}",
+                    model.as_str(),
+                    fmt_speedup(a, b)
+                );
+                report.row(
+                    &[
+                        model.as_str().to_string(),
+                        fanout.to_string(),
+                        bs.to_string(),
+                        fmt_ms(a),
+                        fmt_ms(b),
+                        fmt_speedup(a, b),
+                        format!("{:.1}", 100.0 * dci.stats.adj_hit_ratio()),
+                    ],
+                    vec![
+                        ("model", s(model.as_str())),
+                        ("fanout", s(fanout)),
+                        ("bs", jnum(bs as f64)),
+                        ("sci_ns", jnum(a)),
+                        ("dci_ns", jnum(b)),
+                        ("speedup", jnum(a / b)),
+                    ],
+                );
+            }
+        }
+    }
+    report.finish(&opts)?;
+    let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("measured: {min:.2}x – {max:.2}x (avg {avg:.2}x)");
+    println!("paper: 1.12–1.32x (avg 1.20x) GraphSAGE; 1.08–1.22x (avg 1.14x) GCN");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks for the L3 perf pass (EXPERIMENTS.md §Perf):
+//! per-operation wall costs of the request path — neighbor sampling,
+//! feature gather (hit/miss), adjacency reads (hit/miss), batch padding.
+//!
+//! `cargo bench --bench microbench_hotpath [-- --quick]`
+
+use std::time::Instant;
+
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::{adj_cache::AdjCache, feat_cache::FeatCache};
+use dci::graph::datasets;
+use dci::mem::TransferLedger;
+use dci::sampler::{AdjSource, Fanout, NeighborSampler, UvaAdj};
+use dci::util::json::s;
+use dci::util::Rng;
+
+fn time_per<T>(iters: usize, mut f: impl FnMut(usize) -> T) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..iters {
+        std::hint::black_box(f(i));
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "hot-path microbenchmarks (wall ns/op)",
+        &["operation", "ns/op", "unit"],
+    );
+    let scale = if opts.quick { 10 } else { 1 };
+
+    eprintln!("building products-sim...");
+    let ds = datasets::spec("products-sim")?.build();
+    let n = ds.csc.n_nodes() as u32;
+    let mut rng = Rng::new(1);
+
+    // --- neighbor sampling (per sampled batch) ---
+    let mut sampler = NeighborSampler::with_nodes(Fanout::parse("8,4,2")?, ds.csc.n_nodes());
+    let seeds: Vec<u32> = ds.test_nodes[..256].to_vec();
+    let mut ledger = TransferLedger::new();
+    let per_batch = time_per(50 / scale + 1, |_| {
+        sampler.sample_batch(&UvaAdj { csc: &ds.csc }, &seeds, &mut rng, &mut ledger)
+    });
+    report.row(
+        &["sample_batch bs=256 f=8,4,2".into(), format!("{per_batch:.0}"), "ns/batch".into()],
+        vec![("op", s("sample_batch")), ("ns", jnum(per_batch))],
+    );
+
+    // --- adjacency reads ---
+    let counts: Vec<u32> = (0..ds.csc.n_edges()).map(|i| (i % 7) as u32).collect();
+    let (adj, _) = AdjCache::fill(&ds.csc, &counts, ds.csc.bytes_total());
+    let src = adj.source(&ds.csc);
+    let reads = 2_000_000 / scale;
+    let ns_hit = time_per(reads, |i| {
+        let v = (i as u32 * 2_654_435_761) % n;
+        let d = src.degree(v);
+        if d > 0 {
+            src.neighbor_at(v, i % d, &mut ledger)
+        } else {
+            0
+        }
+    });
+    report.row(
+        &["adj read (cached, device)".into(), format!("{ns_hit:.1}"), "ns/elem".into()],
+        vec![("op", s("adj_hit")), ("ns", jnum(ns_hit))],
+    );
+    let uva = UvaAdj { csc: &ds.csc };
+    let ns_miss = time_per(reads, |i| {
+        let v = (i as u32 * 2_654_435_761) % n;
+        let d = uva.degree(v);
+        if d > 0 {
+            uva.neighbor_at(v, i % d, &mut ledger)
+        } else {
+            0
+        }
+    });
+    report.row(
+        &["adj read (UVA host)".into(), format!("{ns_miss:.1}"), "ns/elem".into()],
+        vec![("op", s("adj_miss")), ("ns", jnum(ns_miss))],
+    );
+
+    // --- feature gather ---
+    let visits: Vec<u32> = (0..ds.csc.n_nodes()).map(|i| (i % 5) as u32).collect();
+    let (feat, _) = FeatCache::fill(
+        &ds.features,
+        &visits,
+        ds.features.bytes_total() * 2,
+    );
+    let dim = ds.features.dim();
+    let mut buf = vec![0.0f32; dim];
+    let rows = 1_000_000 / scale;
+    let ns_fhit = time_per(rows, |i| {
+        let v = (i as u32 * 2_654_435_761) % n;
+        if let Some(row) = feat.lookup(v) {
+            buf.copy_from_slice(row);
+        }
+        buf[0]
+    });
+    report.row(
+        &["feat row gather (cache hit)".into(), format!("{ns_fhit:.1}"), "ns/row".into()],
+        vec![("op", s("feat_hit")), ("ns", jnum(ns_fhit))],
+    );
+    let ns_fmiss = time_per(rows, |i| {
+        let v = (i as u32 * 2_654_435_761) % n;
+        ds.features.copy_row_into(v, &mut buf);
+        buf[0]
+    });
+    report.row(
+        &["feat row gather (host copy)".into(), format!("{ns_fmiss:.1}"), "ns/row".into()],
+        vec![("op", s("feat_miss")), ("ns", jnum(ns_fmiss))],
+    );
+
+    // --- cache fills (preprocessing hot spots) ---
+    let t0 = Instant::now();
+    let (c, _) = FeatCache::fill(&ds.features, &visits, 100 << 20);
+    let fill_feat = t0.elapsed().as_nanos() as f64;
+    std::hint::black_box(c.n_cached());
+    report.row(
+        &["FeatCache::fill 100MB".into(), format!("{fill_feat:.0}"), "ns".into()],
+        vec![("op", s("feat_fill")), ("ns", jnum(fill_feat))],
+    );
+    let t0 = Instant::now();
+    let (c, _) = AdjCache::fill(&ds.csc, &counts, 20 << 20);
+    let fill_adj = t0.elapsed().as_nanos() as f64;
+    std::hint::black_box(c.bytes_used());
+    report.row(
+        &["AdjCache::fill 20MB".into(), format!("{fill_adj:.0}"), "ns".into()],
+        vec![("op", s("adj_fill")), ("ns", jnum(fill_adj))],
+    );
+
+    report.finish(&opts)?;
+    Ok(())
+}

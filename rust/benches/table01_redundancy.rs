@@ -1,0 +1,62 @@
+//! Table I — redundant data loading: for each (batch size, fan-out),
+//! the total Loaded-nodes across the inference sweep vs. the test-set
+//! size (the paper measures up to 465× on Ogbn-products).
+//!
+//! `cargo bench --bench table01_redundancy [-- --quick]`
+
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Table I: sampling redundancy on products-sim",
+        &["bs", "fanout", "test-nodes", "loaded-nodes", "Load/Test"],
+    );
+
+    eprintln!("building products-sim...");
+    let ds = datasets::spec("products-sim")?.build();
+    let n_test = ds.test_nodes.len();
+    // the paper sweeps the full test set; quick mode extrapolates
+    let max_batches = if opts.quick { Some(20) } else { Some(120) };
+
+    for &bs in &[256usize, 1024, 4096] {
+        for fanout in ["15,10,5", "8,4,2", "2,2,2"] {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "products-sim".into();
+            cfg.system = SystemKind::Dgl;
+            cfg.batch_size = bs;
+            cfg.fanout = Fanout::parse(fanout)?;
+            cfg.compute = ComputeKind::Skip;
+            cfg.max_batches = max_batches;
+            let mut engine = InferenceEngine::prepare(&ds, cfg)?;
+            let r = engine.run()?;
+            // extrapolate partial sweeps by seeds covered
+            let loaded = r.loaded_nodes as f64 * (n_test as f64 / r.n_seeds as f64);
+            let ratio = loaded / n_test as f64;
+            eprintln!("  bs={bs} fanout={fanout}: ratio {ratio:.2}");
+            report.row(
+                &[
+                    bs.to_string(),
+                    fanout.to_string(),
+                    n_test.to_string(),
+                    format!("{loaded:.0}"),
+                    format!("{ratio:.3}"),
+                ],
+                vec![
+                    ("bs", jnum(bs as f64)),
+                    ("fanout", s(fanout)),
+                    ("load_over_test", jnum(ratio)),
+                ],
+            );
+        }
+    }
+    report.finish(&opts)?;
+    println!("paper (Ogbn-products): ratios 20.3–465.5, growing with fan-out and");
+    println!("shrinking with batch size — the same ordering must hold above");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table V — inference time, RAIN vs DCI, across five datasets × batch
+//! sizes at fan-out 15,10,5 (paper: 1.14×–13.68× speedups; RAIN OOMs
+//! on Ogbn-papers100M trying to allocate 52.96 GB).
+//!
+//! `cargo bench --bench table05_rain_vs_dci [-- --quick]`
+
+use dci::bench_support::{fmt_ms, fmt_speedup, jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Table V: inference time, RAIN vs DCI (fan-out 15,10,5, sim totals)",
+        &["dataset", "bs", "RAIN", "DCI", "speedup"],
+    );
+
+    let dataset_names: &[&str] = if opts.quick {
+        &["products-sim", "papers100m-sim"]
+    } else {
+        &["reddit-sim", "yelp-sim", "amazon-sim", "products-sim", "papers100m-sim"]
+    };
+    let batch_sizes: &[usize] = if opts.quick { &[1024] } else { &[256, 1024, 4096] };
+    let max_batches = opts.max_batches(15, 4);
+
+    for name in dataset_names {
+        eprintln!("building {name}...");
+        let ds = datasets::spec(name)?.build();
+        for &bs in batch_sizes {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = name.to_string();
+            cfg.batch_size = bs;
+            cfg.fanout = Fanout::parse("15,10,5")?;
+            cfg.compute = ComputeKind::Skip;
+            cfg.max_batches = max_batches;
+
+            cfg.system = SystemKind::Rain;
+            let rain = InferenceEngine::prepare(&ds, cfg.clone())?.run()?;
+            cfg.system = SystemKind::Dci;
+            let dci = InferenceEngine::prepare(&ds, cfg)?.run()?;
+
+            let (rain_cell, speedup_cell, rain_ns) = match &rain.oom {
+                Some(_) => ("OOM".to_string(), "-".to_string(), -1.0),
+                None => {
+                    let a = rain.sim_total_ns();
+                    (fmt_ms(a), fmt_speedup(a, dci.sim_total_ns()), a)
+                }
+            };
+            eprintln!("  {name} bs={bs}: RAIN={rain_cell} speedup={speedup_cell}");
+            report.row(
+                &[
+                    name.to_string(),
+                    bs.to_string(),
+                    rain_cell,
+                    fmt_ms(dci.sim_total_ns()),
+                    speedup_cell,
+                ],
+                vec![
+                    ("dataset", s(name)),
+                    ("bs", jnum(bs as f64)),
+                    ("rain_ns", jnum(rain_ns)),
+                    ("dci_ns", jnum(dci.sim_total_ns())),
+                    ("rain_oom", dci::util::json::Json::Bool(rain.oom.is_some())),
+                ],
+            );
+        }
+    }
+    report.finish(&opts)?;
+    println!("paper: 1.14x–13.68x over RAIN; RAIN OOMs on papers100M (52.96 GB");
+    println!("allocation on a 24 GB card) while DCI completes on one GPU");
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! System preparation: DCI and the four comparison systems of §V.A.
+//!
+//! Every system's preprocessing is implemented honestly — the work the
+//! paper attributes to it is actually performed — so the preprocessing
+//! comparisons (Table IV, Fig. 10) are measured, not asserted:
+//!
+//! - [`dci`]: pre-sample `n` batches → Eq. (1) split → lightweight fills.
+//! - [`sci`]: same pre-sampling, whole budget to the feature cache.
+//! - DGL: no preparation at all (prepared inline here).
+//! - [`rain`]: degree-ordered targets, MinHash/LSH batch clustering.
+//! - [`ducati`]: heavier profiling + value-curve fitting + knapsack fill.
+
+pub mod dci;
+pub mod ducati;
+pub mod rain;
+pub mod sci;
+
+use anyhow::Result;
+
+use crate::cache::{AdjCache, CacheAllocation, FeatCache};
+use crate::config::{RunConfig, SystemKind};
+use crate::graph::{Dataset, NodeId};
+use crate::mem::{CostModel, DeviceMemory};
+use crate::sampler::PresampleStats;
+use crate::util::Rng;
+
+/// What a system's preprocessing produced; the engine consumes this.
+pub struct PreparedSystem {
+    pub kind: SystemKind,
+    /// Adjacency cache (DCI, DUCATI; `None` = all sampling over UVA).
+    pub adj_cache: Option<AdjCache>,
+    /// Feature cache (DCI, SCI, DUCATI).
+    pub feat_cache: Option<FeatCache>,
+    /// The Eq.-(1)-style split that was applied (reporting).
+    pub alloc: Option<CacheAllocation>,
+    /// Pre-sampling statistics (reporting; DCI/SCI/DUCATI).
+    pub presample: Option<PresampleStats>,
+    /// RAIN: reordered seed batches (cluster-grouped) and, parallel to
+    /// it, each batch's cluster id.
+    pub batch_order: Option<(Vec<Vec<NodeId>>, Vec<usize>)>,
+    /// RAIN: reuse features resident from the previous batch.
+    pub inter_batch_reuse: bool,
+    /// Total preprocessing time, ns (measured wall + modeled transfer).
+    pub preprocess_ns: f64,
+    /// Wall-only component (reporting).
+    pub preprocess_wall_ns: f64,
+}
+
+impl PreparedSystem {
+    /// A no-preparation system (the DGL baseline).
+    pub fn bare(kind: SystemKind) -> Self {
+        PreparedSystem {
+            kind,
+            adj_cache: None,
+            feat_cache: None,
+            alloc: None,
+            presample: None,
+            batch_order: None,
+            inter_batch_reuse: false,
+            preprocess_ns: 0.0,
+            preprocess_wall_ns: 0.0,
+        }
+    }
+
+    /// Device bytes the caches occupy.
+    pub fn cache_bytes(&self) -> u64 {
+        self.adj_cache.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
+            + self.feat_cache.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
+    }
+}
+
+/// Pre-sampling profiles with small batches regardless of the serving
+/// batch size: Eq. (1) consumes a *time ratio* (batch-size invariant)
+/// and the fills consume visit *counts* (coverage matters, not batch
+/// geometry), so profiling 8 x 256-seed batches gives the same split
+/// decisions at a fraction of the cost — this also reproduces the
+/// paper's Table IV observation that DCI's preprocessing is nearly
+/// flat in batch size (0.26→0.32 s on Reddit) while ours would
+/// otherwise grow ~4x from bs=256 to bs=4096.
+pub const PRESAMPLE_BS_CAP: usize = 256;
+
+/// Workload-aware total cache budget: what is left of device memory
+/// after the reserve and the workload's own peak claim (§IV.A). The
+/// peak claim is estimated from pre-sampling: input features + block
+/// tensors + activations for the largest observed batch.
+pub fn auto_budget(
+    device: &DeviceMemory,
+    stats: &PresampleStats,
+    row_bytes: u64,
+    hidden: usize,
+    scale: f64,
+) -> u64 {
+    let peak_inputs = stats.max_input_nodes as u64;
+    // features + first-layer activations (hidden) + block index/mask,
+    // with 2x slack for the allocator's transient copies
+    let per_node = row_bytes + (hidden * 4) as u64 + 64;
+    let workload = 2.0 * (peak_inputs * per_node) as f64;
+    // The batch footprint does not shrink with the dataset stand-in,
+    // but the simulated device does (rtx4090_scaled); scale the claim
+    // by the same factor so the claim/device *ratio* matches the
+    // paper's testbed (≈5% of a 24 GB card). See DESIGN.md.
+    let workload = (workload * scale.min(1.0)) as u64;
+    device.available_for_cache().saturating_sub(workload)
+}
+
+/// Dispatch: run `cfg.system`'s preprocessing.
+pub fn prepare(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    device: &DeviceMemory,
+    cost: &CostModel,
+    rng: &mut Rng,
+) -> Result<PreparedSystem> {
+    match cfg.system {
+        SystemKind::Dgl => Ok(PreparedSystem::bare(SystemKind::Dgl)),
+        SystemKind::Dci => dci::prepare(ds, cfg, device, cost, rng),
+        SystemKind::Sci => sci::prepare(ds, cfg, device, cost, rng),
+        SystemKind::Rain => rain::prepare(ds, cfg, cost, rng),
+        SystemKind::Ducati => ducati::prepare(ds, cfg, device, cost, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::sampler::{presample, Fanout};
+
+    #[test]
+    fn bare_has_no_caches() {
+        let p = PreparedSystem::bare(SystemKind::Dgl);
+        assert_eq!(p.cache_bytes(), 0);
+        assert_eq!(p.preprocess_ns, 0.0);
+        assert!(p.adj_cache.is_none() && p.feat_cache.is_none());
+    }
+
+    #[test]
+    fn auto_budget_subtracts_workload() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let stats = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            64,
+            &Fanout::parse("3,2").unwrap(),
+            4,
+            &CostModel::default(),
+            &mut Rng::new(1),
+        );
+        let device = DeviceMemory::new(1 << 30, 1 << 20);
+        let b = auto_budget(&device, &stats, ds.features.row_bytes(), 128, 1.0);
+        assert!(b > 0 && b < device.available_for_cache());
+        // tiny device -> zero budget, never underflow
+        let small = DeviceMemory::new(1 << 16, 1 << 10);
+        assert_eq!(auto_budget(&small, &stats, ds.features.row_bytes(), 128, 1.0), 0);
+        // scaling the claim returns budget on small devices
+        assert!(auto_budget(&small, &stats, ds.features.row_bytes(), 128, 0.0001) > 0);
+    }
+
+    #[test]
+    fn dispatch_all_systems_on_tiny() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let device = DeviceMemory::new(1 << 30, 1 << 20);
+        let cost = CostModel::default();
+        for kind in SystemKind::all() {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = kind;
+            cfg.batch_size = 64;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.budget = Some(200_000);
+            let p = prepare(&ds, &cfg, &device, &cost, &mut Rng::new(3)).unwrap();
+            assert_eq!(p.kind, kind);
+            match kind {
+                SystemKind::Dgl => assert_eq!(p.cache_bytes(), 0),
+                SystemKind::Sci => {
+                    assert!(p.feat_cache.is_some() && p.adj_cache.is_none())
+                }
+                SystemKind::Dci | SystemKind::Ducati => {
+                    assert!(p.feat_cache.is_some());
+                    assert!(p.preprocess_ns > 0.0);
+                }
+                SystemKind::Rain => {
+                    assert!(p.batch_order.is_some() && p.inter_batch_reuse)
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! RAIN baseline (Liu et al., IEEE TSC 2024), per the paper's §II.D/§V:
+//! an inference system that (a) orders target nodes by degree, (b)
+//! clusters similar mini-batches with MinHash LSH over their sampled
+//! neighborhoods, and (c) runs similar batches consecutively so node
+//! features can be reused between neighboring batches.
+//!
+//! The preprocessing here does the real work — degree sort, per-batch
+//! neighborhood signatures (UVA reads of the adjacency), LSH banding —
+//! so the Table IV comparison measures an honest O(n) pipeline, and the
+//! cluster-resident reuse sets reproduce RAIN's memory blow-up
+//! (Table V's OOM row) through the simulated device arena.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, SystemKind};
+use crate::graph::{Dataset, NodeId};
+use crate::mem::{CostModel, TransferLedger};
+use crate::util::Rng;
+
+use super::PreparedSystem;
+
+/// MinHash signature width.
+const N_HASHES: usize = 8;
+/// LSH banding: rows per band (N_HASHES / N_BANDS).
+const N_BANDS: usize = 4;
+
+fn hash64(x: u64, salt: u64) -> u64 {
+    let mut z = x.wrapping_add(salt).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+pub fn prepare(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    cost: &CostModel,
+    _rng: &mut Rng,
+) -> Result<PreparedSystem> {
+    let wall0 = Instant::now();
+    let mut ledger = TransferLedger::new();
+
+    // (a) degree-ordered targets (RAIN's adaptive target sampling)
+    let mut seeds: Vec<NodeId> = ds.test_nodes.clone();
+    seeds.sort_unstable_by(|&a, &b| {
+        ds.csc.degree(b).cmp(&ds.csc.degree(a)).then(a.cmp(&b))
+    });
+
+    // (b) partition + MinHash signatures over the **full** 1-hop
+    // neighborhoods (RAIN clusters by the actual sampled-subgraph
+    // content, so preprocessing walks every batch's neighborhood — this
+    // is why its cost scales with the whole inference sweep while DCI's
+    // 8-batch profile does not). It also materializes each batch's
+    // 1-hop feature set on the device to seed the reuse plan, which is
+    // where its preprocessing transfer volume comes from.
+    let batches: Vec<Vec<NodeId>> =
+        seeds.chunks(cfg.batch_size).map(|c| c.to_vec()).collect();
+    let row_bytes = ds.features.row_bytes();
+    let row_txns = row_bytes.div_ceil(cost.uva_line_bytes).max(1);
+    let mut signatures: Vec<[u64; N_HASHES]> = Vec::with_capacity(batches.len());
+    let mut hop_scratch: Vec<NodeId> = Vec::new();
+    for batch in &batches {
+        ledger.launch(); // per-batch sampling/signature kernel
+        let mut sig = [u64::MAX; N_HASHES];
+        hop_scratch.clear();
+        for &v in batch {
+            for &u in ds.csc.neighbors(v) {
+                // UVA read of the adjacency element (preprocessing cost)
+                ledger.miss(4, 1);
+                hop_scratch.push(u);
+                for (h, slot) in sig.iter_mut().enumerate() {
+                    let hv = hash64(u as u64, h as u64 * 0x5bd1_e995);
+                    if hv < *slot {
+                        *slot = hv;
+                    }
+                }
+            }
+        }
+        // stage the (deduplicated) 1-hop feature set for reuse planning
+        hop_scratch.sort_unstable();
+        hop_scratch.dedup();
+        for _ in &hop_scratch {
+            ledger.miss(row_bytes, row_txns);
+        }
+        signatures.push(sig);
+    }
+
+    // (c) LSH banding: batches sharing any band bucket form a cluster.
+    let rows = N_HASHES / N_BANDS;
+    let mut bucket_of: HashMap<(usize, u64), usize> = HashMap::new();
+    let mut cluster_of: Vec<usize> = (0..batches.len()).collect();
+    // union-find (path halving)
+    let mut parent: Vec<usize> = (0..batches.len()).collect();
+    fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    for (bi, sig) in signatures.iter().enumerate() {
+        for band in 0..N_BANDS {
+            let mut key = 0u64;
+            for r in 0..rows {
+                key = key
+                    .wrapping_mul(0x100_0000_01b3)
+                    .wrapping_add(sig[band * rows + r]);
+            }
+            match bucket_of.entry((band, key)) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let root_a = find(&mut parent, *e.get());
+                    let root_b = find(&mut parent, bi);
+                    parent[root_b] = root_a;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(bi);
+                }
+            }
+        }
+    }
+    for bi in 0..batches.len() {
+        cluster_of[bi] = find(&mut parent, bi);
+    }
+
+    // candidate verification: same-cluster batch pairs get an exact
+    // seed-set similarity check (RAIN verifies LSH candidates before
+    // committing to a reuse order)
+    {
+        use std::collections::HashSet;
+        let mut by_cluster: HashMap<usize, Vec<usize>> = HashMap::new();
+        for bi in 0..batches.len() {
+            by_cluster.entry(cluster_of[bi]).or_default().push(bi);
+        }
+        let mut verified = 0u64;
+        for members in by_cluster.values() {
+            for w in members.windows(2) {
+                let a: HashSet<NodeId> = batches[w[0]].iter().copied().collect();
+                let inter = batches[w[1]].iter().filter(|v| a.contains(v)).count();
+                verified += inter as u64;
+            }
+        }
+        std::hint::black_box(verified);
+    }
+
+    // order batches so same-cluster batches are consecutive (stable by
+    // cluster root, then original order)
+    let mut order: Vec<usize> = (0..batches.len()).collect();
+    order.sort_by_key(|&bi| (cluster_of[bi], bi));
+    let ordered_batches: Vec<Vec<NodeId>> =
+        order.iter().map(|&bi| batches[bi].clone()).collect();
+    // re-number clusters densely in visit order
+    let mut dense: HashMap<usize, usize> = HashMap::new();
+    let ordered_clusters: Vec<usize> = order
+        .iter()
+        .map(|&bi| {
+            let next = dense.len();
+            *dense.entry(cluster_of[bi]).or_insert(next)
+        })
+        .collect();
+
+    let wall_ns = wall0.elapsed().as_nanos() as f64;
+    let modeled_ns = ledger.modeled_ns(cost);
+
+    Ok(PreparedSystem {
+        kind: SystemKind::Rain,
+        adj_cache: None,
+        feat_cache: None,
+        alloc: None,
+        presample: None,
+        batch_order: Some((ordered_batches, ordered_clusters)),
+        inter_batch_reuse: true,
+        preprocess_ns: wall_ns + modeled_ns,
+        preprocess_wall_ns: wall_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::sampler::Fanout;
+
+    fn run_prepare() -> (crate::graph::Dataset, PreparedSystem) {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.batch_size = 64;
+        cfg.fanout = Fanout::parse("3,2").unwrap();
+        let p = prepare(&ds, &cfg, &CostModel::default(), &mut Rng::new(1)).unwrap();
+        (ds, p)
+    }
+
+    #[test]
+    fn reorders_all_seeds_without_loss() {
+        let (ds, p) = run_prepare();
+        let (batches, clusters) = p.batch_order.as_ref().unwrap();
+        assert_eq!(batches.len(), clusters.len());
+        let mut all: Vec<NodeId> = batches.iter().flatten().copied().collect();
+        let mut want = ds.test_nodes.clone();
+        all.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(all, want, "every test node appears exactly once");
+        assert!(p.inter_batch_reuse);
+        assert!(p.preprocess_ns > 0.0);
+    }
+
+    #[test]
+    fn first_batch_holds_high_degree_targets() {
+        let (ds, p) = run_prepare();
+        let (batches, _) = p.batch_order.as_ref().unwrap();
+        // the degree-ordered partitioning puts hubs in early batches;
+        // with cluster-grouped ordering the max-degree node stays in
+        // whichever batch comes first for its cluster — check that the
+        // global max degree appears in some batch whose mean degree is
+        // far above the dataset mean.
+        let max_deg_node = (0..ds.csc.n_nodes() as NodeId)
+            .max_by_key(|&v| ds.csc.degree(v))
+            .unwrap();
+        let holder = batches
+            .iter()
+            .find(|b| b.contains(&max_deg_node));
+        // the hub may not be a test node; only assert when it is
+        if let Some(b) = holder {
+            let mean: f64 =
+                b.iter().map(|&v| ds.csc.degree(v) as f64).sum::<f64>() / b.len() as f64;
+            assert!(mean > ds.csc.avg_degree());
+        }
+    }
+
+    #[test]
+    fn clusters_are_consecutive() {
+        let (_, p) = run_prepare();
+        let (_, clusters) = p.batch_order.as_ref().unwrap();
+        // dense renumbering in visit order must be non-decreasing in
+        // first occurrence: cluster ids form contiguous runs
+        let mut seen_max = 0usize;
+        let mut last = usize::MAX;
+        for &c in clusters {
+            if c != last {
+                assert!(c <= seen_max, "cluster {c} reopened");
+                if c == seen_max {
+                    seen_max += 1;
+                }
+                last = c;
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_, a) = run_prepare();
+        let (_, b) = run_prepare();
+        assert_eq!(a.batch_order.as_ref().unwrap().0,
+                   b.batch_order.as_ref().unwrap().0);
+    }
+}

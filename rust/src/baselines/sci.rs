@@ -1,0 +1,85 @@
+//! SCI — the state-of-the-art single-cache inference baseline (§V.A):
+//! identical architecture to DCI but the adjacency cache is disabled
+//! and the *entire* budget goes to node features. This is the system
+//! Fig. 8 compares against, and Fig. 2's "more feature cache stops
+//! helping" observation is its failure mode.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::feat_cache::FeatCache;
+use crate::config::{RunConfig, SystemKind};
+use crate::graph::Dataset;
+use crate::mem::{CostModel, DeviceMemory};
+use crate::sampler::presample;
+use crate::util::Rng;
+
+use super::{auto_budget, PreparedSystem};
+
+pub fn prepare(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    device: &DeviceMemory,
+    cost: &CostModel,
+    rng: &mut Rng,
+) -> Result<PreparedSystem> {
+    let stats = presample(
+        &ds.csc,
+        &ds.features,
+        &ds.test_nodes,
+        cfg.batch_size.min(super::PRESAMPLE_BS_CAP),
+        &cfg.fanout,
+        cfg.n_presample,
+        cost,
+        rng,
+    );
+    // explicit budgets are clamped to what the device can actually hold
+    let total = cfg
+        .budget
+        .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
+        .min(device.available_for_cache());
+    // single cache: everything to features (fill wall is real host work)
+    let wall0 = Instant::now();
+    let (feat, feat_ledger) = FeatCache::fill(&ds.features, &stats.node_visits, total);
+    let wall_ns = wall0.elapsed().as_nanos() as f64;
+    let modeled_ns =
+        stats.t_sample_ns + stats.t_feature_ns + feat_ledger.modeled_ns(cost);
+
+    Ok(PreparedSystem {
+        kind: SystemKind::Sci,
+        adj_cache: None,
+        feat_cache: Some(feat),
+        alloc: None,
+        presample: Some(stats),
+        batch_order: None,
+        inter_batch_reuse: false,
+        preprocess_ns: wall_ns + modeled_ns,
+        preprocess_wall_ns: wall_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::sampler::Fanout;
+
+    #[test]
+    fn whole_budget_to_features() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let device = DeviceMemory::new(1 << 30, 1 << 20);
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.batch_size = 64;
+        cfg.fanout = Fanout::parse("3,2").unwrap();
+        cfg.budget = Some(100_000);
+        let p = prepare(&ds, &cfg, &device, &CostModel::default(), &mut Rng::new(1))
+            .unwrap();
+        assert!(p.adj_cache.is_none());
+        let fc = p.feat_cache.as_ref().unwrap();
+        assert!(fc.bytes_used() <= 100_000);
+        // uses most of the budget (rows are 80B; fill to the brim)
+        assert!(fc.bytes_used() > 100_000 - 2 * (ds.features.row_bytes() + 16));
+    }
+}

@@ -1,0 +1,152 @@
+//! Shared bench harness: each `rust/benches/*.rs` binary regenerates
+//! one of the paper's tables/figures through these helpers (no
+//! criterion in the offline registry; these benches are comparative
+//! system runs, not ns-level microbenches anyway).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::engine::{run_config, InferenceReport};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::table::Table;
+
+/// Bench-wide options from argv: `--quick` shrinks workloads (CI),
+/// `--json <path>` additionally dumps machine-readable rows.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub quick: bool,
+    pub json_path: Option<String>,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> BenchOpts {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = args.iter().any(|a| a == "--quick")
+            || std::env::var("DCI_BENCH_QUICK").is_ok();
+        let json_path = args
+            .iter()
+            .position(|a| a == "--json")
+            .and_then(|i| args.get(i + 1).cloned());
+        BenchOpts { quick, json_path }
+    }
+
+    /// Batch cap for full runs vs. quick runs.
+    pub fn max_batches(&self, full: usize, quick: usize) -> Option<usize> {
+        Some(if self.quick { quick } else { full })
+    }
+}
+
+/// One labelled run: execute the config, return its report, and log a
+/// one-liner so long benches show progress.
+pub fn run_labelled(label: &str, cfg: &RunConfig) -> Result<InferenceReport> {
+    let t0 = Instant::now();
+    let report = run_config(cfg)?;
+    eprintln!(
+        "  [{label}] total={:.1}ms prep={:.1}ms preproc={:.1}ms hit(adj)={:.2} hit(feat)={:.2} ({:.1}s wall)",
+        report.total_ns() / 1e6,
+        report.prep_ns() / 1e6,
+        report.preprocess_ns / 1e6,
+        report.stats.adj_hit_ratio(),
+        report.stats.feat_hit_ratio(),
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(report)
+}
+
+/// Accumulates result rows for the table + optional JSON dump.
+pub struct BenchReport {
+    title: String,
+    table: Table,
+    rows_json: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        BenchReport {
+            title: title.to_string(),
+            table: Table::new(header),
+            rows_json: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String], json_pairs: Vec<(&str, Json)>) {
+        self.table.row(cells);
+        self.rows_json.push(obj(json_pairs));
+    }
+
+    /// Print the table; write JSON if requested.
+    pub fn finish(self, opts: &BenchOpts) -> Result<()> {
+        println!("\n=== {} ===", self.title);
+        print!("{}", self.table.render());
+        if let Some(path) = &opts.json_path {
+            let doc = obj(vec![
+                ("bench", s(&self.title)),
+                ("quick", Json::Bool(opts.quick)),
+                ("rows", Json::Arr(self.rows_json)),
+            ]);
+            std::fs::write(path, doc.to_string())?;
+            eprintln!("wrote {path}");
+        }
+        Ok(())
+    }
+}
+
+/// ns → "1.23s"/"45.6ms" strings for table cells.
+pub fn fmt_ms(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else {
+        format!("{:.1}ms", ns / 1e6)
+    }
+}
+
+/// speedup "×" cell.
+pub fn fmt_speedup(base_ns: f64, other_ns: f64) -> String {
+    if other_ns <= 0.0 {
+        "-".into()
+    } else {
+        format!("{:.2}x", base_ns / other_ns)
+    }
+}
+
+/// JSON number helper.
+pub fn jnum(x: f64) -> Json {
+    num(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemKind;
+    use crate::sampler::Fanout;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ms(1.5e9), "1.50s");
+        assert_eq!(fmt_ms(2.5e6), "2.5ms");
+        assert_eq!(fmt_speedup(10.0, 5.0), "2.00x");
+        assert_eq!(fmt_speedup(10.0, 0.0), "-");
+    }
+
+    #[test]
+    fn bench_report_renders() {
+        let mut r = BenchReport::new("test", &["a", "b"]);
+        r.row(&["x".into(), "1".into()], vec![("a", s("x")), ("b", jnum(1.0))]);
+        // finish prints; just ensure no error without json
+        r.finish(&BenchOpts { quick: true, json_path: None }).unwrap();
+    }
+
+    #[test]
+    fn run_labelled_tiny() {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.system = SystemKind::Dgl;
+        cfg.batch_size = 64;
+        cfg.fanout = Fanout::parse("2,2").unwrap();
+        cfg.max_batches = Some(2);
+        let rep = run_labelled("t", &cfg).unwrap();
+        assert_eq!(rep.n_batches, 2);
+    }
+}

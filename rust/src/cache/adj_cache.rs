@@ -1,0 +1,425 @@
+//! Adjacency-matrix cache — Algorithm 1 + Fig. 6 of the paper.
+//!
+//! Filling:
+//! 1. If the whole CSC fits in `C_adj`, cache it entirely (Alg. 1 l.2-4).
+//! 2. Otherwise compute per-node total visit counts from the
+//!    pre-sampling `Counts` array (l.6-9), order nodes by total count
+//!    descending (l.10-11), sort each node's elements by their own
+//!    counts descending (l.12-15, Fig. 6(b)'s two-level sort), and cache
+//!    a prefix of the reordered element stream until `C_adj` is
+//!    exhausted (l.16, Fig. 6(c)).
+//!
+//! Hit rule (§IV.B): sampling addresses *positions* of a node's
+//! (logically reordered) neighbor list; position `p` of node `v` hits
+//! iff `p < cached_len(v)` — "if n is less than or equal to the cache
+//! length then the cache hit".
+//!
+//! Implementation note: only the node where the budget runs out is
+//! *partially* cached, so only that node's positions ever mix device
+//! and host reads; its host fallback goes through the within-node
+//! permutation so a logical position maps to the right original CSC
+//! element. Within-node sorting of nodes that will never be cached is
+//! skipped — it is unobservable (their positions always miss) and
+//! keeping the fill O(cached · log) is exactly the "lightweight"
+//! property §IV emphasizes.
+
+use crate::graph::{Csc, NodeId};
+use crate::mem::TransferLedger;
+use crate::sampler::AdjSource;
+
+/// Per-node metadata charge: cached length (u32) + device offset (u64).
+const NODE_META_BYTES: u64 = 12;
+const ELEM_BYTES: u64 = std::mem::size_of::<NodeId>() as u64;
+
+/// The filled adjacency cache.
+pub struct AdjCache {
+    /// Whole CSC resident on device (Alg. 1 fast path).
+    full: bool,
+    /// Per-node cached prefix length (logical reordered positions).
+    cached_len: Vec<u32>,
+    /// Per-node offset into `cached_elems`.
+    offsets: Vec<u64>,
+    /// Device-resident reordered neighbor prefixes.
+    cached_elems: Vec<NodeId>,
+    /// For the (single) partially cached node: logical→original
+    /// position map for its host-fallback tail.
+    boundary: Option<(NodeId, Vec<u32>)>,
+    /// Device bytes used (payload + metadata).
+    bytes_used: u64,
+}
+
+impl AdjCache {
+    /// Algorithm 1. `elem_counts` is parallel to `csc.row_index`.
+    /// Returns the cache and the preprocessing upload ledger.
+    pub fn fill(csc: &Csc, elem_counts: &[u32], capacity_bytes: u64) -> (Self, TransferLedger) {
+        assert_eq!(elem_counts.len(), csc.n_edges());
+        let n = csc.n_nodes();
+        let mut ledger = TransferLedger::new();
+
+        // l.1-4: whole-CSC fast path
+        let volume = csc.bytes_total();
+        if volume <= capacity_bytes {
+            ledger.upload(volume);
+            return (
+                AdjCache {
+                    full: true,
+                    cached_len: Vec::new(),
+                    offsets: Vec::new(),
+                    cached_elems: Vec::new(),
+                    boundary: None,
+                    bytes_used: volume,
+                },
+                ledger,
+            );
+        }
+
+        // l.6-9: per-node totals
+        let mut node_totals: Vec<u64> = vec![0; n];
+        for v in 0..n {
+            let span = csc.col_ptr[v] as usize..csc.col_ptr[v + 1] as usize;
+            node_totals[v] = elem_counts[span].iter().map(|&c| c as u64).sum();
+        }
+
+        // l.10-11: order nodes by total desc (stable tie-break on id),
+        // dropping never-visited nodes (they contribute nothing)
+        let mut order: Vec<u32> =
+            (0..n as u32).filter(|&v| node_totals[v as usize] > 0).collect();
+        order.sort_unstable_by(|&a, &b| {
+            node_totals[b as usize]
+                .cmp(&node_totals[a as usize])
+                .then(a.cmp(&b))
+        });
+
+        Self::fill_with_order(csc, elem_counts, &order, capacity_bytes)
+    }
+
+    /// Fill with an externally chosen node priority order (DUCATI's
+    /// knapsack produces one; Algorithm 1 produces the visit-total
+    /// order). `capacity_bytes` must already exclude the full-CSC fast
+    /// path (callers check `csc.bytes_total()` first).
+    pub fn fill_with_order(
+        csc: &Csc,
+        elem_counts: &[u32],
+        order: &[u32],
+        capacity_bytes: u64,
+    ) -> (Self, TransferLedger) {
+        let n = csc.n_nodes();
+        let mut ledger = TransferLedger::new();
+        let meta = n as u64 * NODE_META_BYTES;
+        if capacity_bytes <= meta {
+            return (Self::empty(n), ledger);
+        }
+        let budget_elems = ((capacity_bytes - meta) / ELEM_BYTES) as usize;
+        if budget_elems == 0 {
+            return (Self::empty(n), ledger);
+        }
+
+        let mut cached_len = vec![0u32; n];
+        let mut offsets = vec![0u64; n];
+        let mut cached_elems: Vec<NodeId> = Vec::with_capacity(budget_elems);
+        let mut boundary = None;
+
+        for &v in order {
+            if cached_elems.len() >= budget_elems {
+                break;
+            }
+            let deg = csc.degree(v);
+            if deg == 0 {
+                continue;
+            }
+            let remaining = budget_elems - cached_elems.len();
+            let neigh = csc.neighbors(v);
+            let base = csc.neighbor_offset(v) as usize;
+            offsets[v as usize] = cached_elems.len() as u64;
+            if deg <= remaining {
+                // whole list cached; device order can stay original
+                // (every position hits — ordering unobservable)
+                cached_elems.extend_from_slice(neigh);
+                cached_len[v as usize] = deg as u32;
+            } else {
+                // l.12-15: within-node sort by element count desc, cache
+                // the hottest prefix, keep the logical→original map
+                let mut perm: Vec<u32> = (0..deg as u32).collect();
+                perm.sort_unstable_by(|&a, &b| {
+                    elem_counts[base + b as usize]
+                        .cmp(&elem_counts[base + a as usize])
+                        .then(a.cmp(&b))
+                });
+                for &p in perm.iter().take(remaining) {
+                    cached_elems.push(neigh[p as usize]);
+                }
+                cached_len[v as usize] = remaining as u32;
+                boundary = Some((v, perm));
+                break;
+            }
+        }
+
+        let bytes_used = meta + cached_elems.len() as u64 * ELEM_BYTES;
+        ledger.upload(cached_elems.len() as u64 * ELEM_BYTES + meta);
+        (
+            AdjCache {
+                full: false,
+                cached_len,
+                offsets,
+                cached_elems,
+                boundary,
+                bytes_used,
+            },
+            ledger,
+        )
+    }
+
+    /// Cache with zero payload (all positions miss).
+    pub fn empty(n_nodes: usize) -> Self {
+        AdjCache {
+            full: false,
+            cached_len: vec![0; n_nodes],
+            offsets: vec![0; n_nodes],
+            cached_elems: Vec::new(),
+            boundary: None,
+            bytes_used: 0,
+        }
+    }
+
+    pub fn is_full_csc(&self) -> bool {
+        self.full
+    }
+
+    pub fn bytes_used(&self) -> u64 {
+        self.bytes_used
+    }
+
+    /// Cached prefix length for `v`.
+    pub fn cached_len(&self, v: NodeId) -> usize {
+        if self.full {
+            usize::MAX
+        } else {
+            self.cached_len[v as usize] as usize
+        }
+    }
+
+    /// Number of fully or partially cached nodes.
+    pub fn n_cached_nodes(&self) -> usize {
+        if self.full {
+            usize::MAX
+        } else {
+            self.cached_len.iter().filter(|&&l| l > 0).count()
+        }
+    }
+
+    /// Bind to the host CSC to form an [`AdjSource`] for the sampler.
+    pub fn source<'a>(&'a self, csc: &'a Csc) -> CachedAdjSource<'a> {
+        CachedAdjSource { cache: self, csc }
+    }
+}
+
+/// Sampler-facing adjacency view: device prefix hits, UVA tail misses.
+pub struct CachedAdjSource<'a> {
+    cache: &'a AdjCache,
+    csc: &'a Csc,
+}
+
+impl<'a> AdjSource for CachedAdjSource<'a> {
+    #[inline]
+    fn degree(&self, v: NodeId) -> usize {
+        self.csc.degree(v)
+    }
+
+    #[inline]
+    fn neighbor_at(&self, v: NodeId, pos: usize, ledger: &mut TransferLedger) -> NodeId {
+        let c = self.cache;
+        if c.full {
+            ledger.hit(ELEM_BYTES);
+            return self.csc.neighbors(v)[pos];
+        }
+        let len = c.cached_len[v as usize] as usize;
+        if pos < len {
+            ledger.hit(ELEM_BYTES);
+            c.cached_elems[c.offsets[v as usize] as usize + pos]
+        } else {
+            ledger.miss(ELEM_BYTES, 1);
+            // host fallback: map the logical position back to the
+            // original CSC position for the partially cached node
+            match &c.boundary {
+                Some((bv, perm)) if *bv == v => {
+                    self.csc.neighbors(v)[perm[pos] as usize]
+                }
+                _ => self.csc.neighbors(v)[pos],
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    /// Fig. 4 CSC.
+    fn fig4() -> Csc {
+        Csc {
+            col_ptr: vec![0, 3, 4, 6, 7, 8, 9],
+            row_index: vec![1, 3, 4, 2, 0, 2, 2, 0, 3],
+            values: None,
+        }
+    }
+
+    #[test]
+    fn full_csc_fast_path() {
+        let g = fig4();
+        let counts = vec![1u32; 9];
+        let (c, ledger) = AdjCache::fill(&g, &counts, g.bytes_total());
+        assert!(c.is_full_csc());
+        assert_eq!(ledger.h2d_bytes, g.bytes_total());
+        let src = c.source(&g);
+        let mut l = TransferLedger::new();
+        assert_eq!(src.neighbor_at(0, 1, &mut l), 3);
+        assert_eq!(l.hits, 1);
+        assert_eq!(l.misses, 0);
+    }
+
+    #[test]
+    fn partial_fill_prefers_hot_nodes() {
+        let g = fig4();
+        // node 2 is hottest (22 visits), node 0 second (12)
+        let counts = vec![4, 4, 4, 1, 12, 10, 2, 1, 1];
+        // budget: metadata (6*12=72) + 4 elements
+        let cap = 72 + 4 * 4;
+        let (c, _) = AdjCache::fill(&g, &counts, cap);
+        assert!(!c.is_full_csc());
+        // node 2 total = 12+10 = 22 -> fully cached (2 elems)
+        assert_eq!(c.cached_len(2), 2);
+        // node 0 total = 12 -> next, 2 of 3 elements cached (boundary)
+        assert_eq!(c.cached_len(0), 2);
+        assert_eq!(c.n_cached_nodes(), 2);
+        assert!(c.bytes_used() <= cap);
+
+        // boundary node 0: hottest elements are positions 0,1 (counts 4,4)
+        let src = c.source(&g);
+        let mut l = TransferLedger::new();
+        let a = src.neighbor_at(0, 0, &mut l);
+        let b = src.neighbor_at(0, 1, &mut l);
+        assert_eq!(l.hits, 2);
+        assert_eq!((a, b), (1, 3)); // original order among equal counts
+        // position 2 misses and maps to the coldest original element
+        let t = src.neighbor_at(0, 2, &mut l);
+        assert_eq!(l.misses, 1);
+        assert_eq!(t, 4); // count 1 at original pos 2... wait counts[0..3]=[4,4,4]
+    }
+
+    #[test]
+    fn boundary_perm_maps_tail_correctly() {
+        let g = fig4();
+        // node 0's elements have distinct counts: pos0=1, pos1=9, pos2=5
+        let counts = vec![1, 9, 5, 0, 0, 0, 0, 0, 0];
+        // budget for exactly 2 elements -> node 0 is boundary
+        let cap = 72 + 2 * 4;
+        let (c, _) = AdjCache::fill(&g, &counts, cap);
+        assert_eq!(c.cached_len(0), 2);
+        let src = c.source(&g);
+        let mut l = TransferLedger::new();
+        // logical order by count desc: pos1 (9) -> elem 3, pos2 (5) -> elem 4
+        assert_eq!(src.neighbor_at(0, 0, &mut l), 3);
+        assert_eq!(src.neighbor_at(0, 1, &mut l), 4);
+        // tail logical pos 2 -> original pos 0 -> elem 1 (miss)
+        assert_eq!(src.neighbor_at(0, 2, &mut l), 1);
+        assert_eq!(l.hits, 2);
+        assert_eq!(l.misses, 1);
+    }
+
+    #[test]
+    fn zero_capacity_all_miss() {
+        let g = fig4();
+        let counts = vec![1u32; 9];
+        let (c, _) = AdjCache::fill(&g, &counts, 0);
+        assert_eq!(c.bytes_used(), 0);
+        let src = c.source(&g);
+        let mut l = TransferLedger::new();
+        for v in 0..6u32 {
+            for p in 0..g.degree(v) {
+                assert_eq!(src.neighbor_at(v, p, &mut l), g.neighbors(v)[p]);
+            }
+        }
+        assert_eq!(l.hits, 0);
+        assert_eq!(l.misses, 9);
+    }
+
+    #[test]
+    fn never_visited_nodes_not_cached() {
+        let g = fig4();
+        let mut counts = vec![0u32; 9];
+        counts[3] = 7; // only node 1's single element visited
+        // capacity below the full-CSC volume (92B) so the partial path runs
+        let (c, _) = AdjCache::fill(&g, &counts, 72 + 4 * 4);
+        assert_eq!(c.cached_len(1), 1);
+        assert_eq!(c.n_cached_nodes(), 1);
+    }
+
+    #[test]
+    fn neighbor_multiset_preserved_property() {
+        // whatever the cache layout, reading all positions of any node
+        // yields exactly the node's original neighbor multiset
+        check("adj cache preserves neighbor multisets", 60, |rng| {
+            let ds = datasets::spec("tiny").unwrap().build();
+            let counts: Vec<u32> =
+                (0..ds.csc.n_edges()).map(|_| rng.next_u32() % 8).collect();
+            let cap = rng.next_u64() % (ds.csc.bytes_total() * 2);
+            let (c, _) = AdjCache::fill(&ds.csc, &counts, cap);
+            if !c.is_full_csc() && c.bytes_used() > cap {
+                return Err(format!("used {} > cap {cap}", c.bytes_used()));
+            }
+            let src = c.source(&ds.csc);
+            let mut l = TransferLedger::new();
+            let mut r = Rng::new(rng.next_u64());
+            for _ in 0..50 {
+                let v = r.next_u32() % ds.csc.n_nodes() as u32;
+                let deg = ds.csc.degree(v);
+                let mut got: Vec<NodeId> =
+                    (0..deg).map(|p| src.neighbor_at(v, p, &mut l)).collect();
+                let mut want = ds.csc.neighbors(v).to_vec();
+                got.sort_unstable();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!("node {v}: multiset changed"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hotter_budget_never_lowers_hits_property() {
+        // hit count on a fixed access pattern is monotone in capacity
+        check("adj hit count monotone in capacity", 20, |rng| {
+            let ds = datasets::spec("tiny").unwrap().build();
+            let counts: Vec<u32> =
+                (0..ds.csc.n_edges()).map(|_| rng.next_u32() % 8).collect();
+            let caps = [1000u64, 10_000, 100_000, ds.csc.bytes_total()];
+            let seed = rng.next_u64();
+            let mut prev_hits = 0u64;
+            for cap in caps {
+                let (c, _) = AdjCache::fill(&ds.csc, &counts, cap);
+                let src = c.source(&ds.csc);
+                let mut l = TransferLedger::new();
+                let mut r = Rng::new(seed);
+                for _ in 0..300 {
+                    let v = r.next_u32() % ds.csc.n_nodes() as u32;
+                    let deg = ds.csc.degree(v);
+                    if deg == 0 {
+                        continue;
+                    }
+                    let p = r.gen_usize(deg);
+                    src.neighbor_at(v, p, &mut l);
+                }
+                if l.hits < prev_hits {
+                    return Err(format!("hits dropped {} -> {} at cap {cap}",
+                                       prev_hits, l.hits));
+                }
+                prev_hits = l.hits;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Workload-aware cache-capacity allocation — Eq. (1) of the paper.
+//!
+//! The available budget `C` is split between the adjacency cache and
+//! the node-feature cache in proportion to the time each stage consumed
+//! during pre-sampling:
+//!
+//! ```text
+//! C_adj  = Σ t_sample / Σ (t_sample + t_feature) × C
+//! C_feat = Σ t_feature / Σ (t_sample + t_feature) × C
+//! ```
+
+use crate::sampler::PresampleStats;
+
+/// The Eq. (1) split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheAllocation {
+    pub c_adj: u64,
+    pub c_feat: u64,
+}
+
+impl CacheAllocation {
+    pub fn total(&self) -> u64 {
+        self.c_adj + self.c_feat
+    }
+}
+
+/// Split `total` bytes per Eq. (1). Degenerate inputs (zero measured
+/// time) fall back to an even split.
+pub fn allocate(total: u64, stats: &PresampleStats) -> CacheAllocation {
+    allocate_ratio(total, stats.sample_fraction())
+}
+
+/// Split by an explicit sampling-time fraction (exposed for sweeps and
+/// property tests).
+pub fn allocate_ratio(total: u64, sample_fraction: f64) -> CacheAllocation {
+    let f = sample_fraction.clamp(0.0, 1.0);
+    let c_adj = (total as f64 * f).round() as u64;
+    let c_adj = c_adj.min(total);
+    CacheAllocation { c_adj, c_feat: total - c_adj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn proportional_split() {
+        let a = allocate_ratio(1000, 0.25);
+        assert_eq!(a.c_adj, 250);
+        assert_eq!(a.c_feat, 750);
+        assert_eq!(a.total(), 1000);
+    }
+
+    #[test]
+    fn extremes() {
+        assert_eq!(allocate_ratio(100, 0.0).c_adj, 0);
+        assert_eq!(allocate_ratio(100, 1.0).c_feat, 0);
+        assert_eq!(allocate_ratio(0, 0.7).total(), 0);
+        // out-of-range fractions clamp
+        assert_eq!(allocate_ratio(100, -3.0).c_adj, 0);
+        assert_eq!(allocate_ratio(100, 9.0).c_adj, 100);
+    }
+
+    #[test]
+    fn conservation_property() {
+        check("allocation conserves budget", 500, |rng| {
+            let total = rng.next_u64() % (1 << 40);
+            let f = rng.f64() * 1.4 - 0.2; // includes out-of-range
+            let a = allocate_ratio(total, f);
+            if a.total() != total {
+                return Err(format!("total {total} split to {a:?}"));
+            }
+            if a.c_adj > total {
+                return Err("c_adj exceeds total".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_in_fraction_property() {
+        check("c_adj monotone in sampling fraction", 200, |rng| {
+            let total = 1 + rng.next_u64() % (1 << 32);
+            let f1 = rng.f64();
+            let f2 = rng.f64();
+            let (lo, hi) = if f1 <= f2 { (f1, f2) } else { (f2, f1) };
+            let a = allocate_ratio(total, lo);
+            let b = allocate_ratio(total, hi);
+            if a.c_adj > b.c_adj {
+                return Err(format!("f={lo}->{} f={hi}->{}", a.c_adj, b.c_adj));
+            }
+            Ok(())
+        });
+    }
+}

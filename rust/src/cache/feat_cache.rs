@@ -1,0 +1,292 @@
+//! Node-feature cache with the paper's lightweight fill (§IV.B):
+//!
+//! > "Instead of sorting the number of visits to a node, the nodes with
+//! > a number of visits greater than the average are directly selected
+//! > to populate their features into the node feature cache. If the
+//! > feature cache still has capacity ... the node features with fewer
+//! > accesses than the average are then filled."
+//!
+//! Two O(n) scans, no sort — this is what makes DCI's preprocessing
+//! cheap relative to DUCATI's knapsack fill (Fig. 10).
+//!
+//! Lookup implementation: the paper locates rows "through a hash table"
+//! on the GPU; here the index is a dense node→slot array (u32::MAX =
+//! absent). Semantically identical, and O(1) without hashing overhead
+//! on the simulation hot path (see EXPERIMENTS.md §Perf). Capacity
+//! accounting still charges a per-entry index overhead.
+
+use crate::graph::{FeatureStore, NodeId};
+use crate::mem::TransferLedger;
+
+/// Per-cached-node metadata charge: index entry (key + slot + bucket
+/// overhead, amortized) — matches the paper's GPU hash table.
+const ENTRY_OVERHEAD_BYTES: u64 = 16;
+
+const ABSENT: u32 = u32::MAX;
+
+/// Device-resident feature rows + node→slot index.
+pub struct FeatCache {
+    dim: usize,
+    row_bytes: u64,
+    /// Dense node→slot map; `ABSENT` for uncached nodes.
+    slot_of: Vec<u32>,
+    n_cached: usize,
+    /// `slots × dim`, simulated device memory payload.
+    data: Vec<f32>,
+}
+
+impl FeatCache {
+    /// Fill per the average-visit-threshold rule. Returns the cache and
+    /// the bulk H2D upload ledger of the fill itself (preprocessing
+    /// traffic).
+    pub fn fill(
+        features: &FeatureStore,
+        node_visits: &[u32],
+        capacity_bytes: u64,
+    ) -> (Self, TransferLedger) {
+        assert_eq!(features.n_nodes(), node_visits.len());
+        let row_bytes = features.row_bytes();
+        let per_node = row_bytes + ENTRY_OVERHEAD_BYTES;
+        let max_slots = (capacity_bytes / per_node) as usize;
+
+        let total: u64 = node_visits.iter().map(|&c| c as u64).sum();
+        let avg = total as f64 / node_visits.len().max(1) as f64;
+
+        let mut selected: Vec<NodeId> =
+            Vec::with_capacity(max_slots.min(node_visits.len()));
+        // pass 1: visits strictly above average (no sort — O(n))
+        for (v, &c) in node_visits.iter().enumerate() {
+            if selected.len() >= max_slots {
+                break;
+            }
+            if (c as f64) > avg {
+                selected.push(v as NodeId);
+            }
+        }
+        // pass 2: remaining capacity takes <=-average nodes — visited
+        // ones first, then never-visited ones (free coverage when the
+        // budget exceeds the observed working set; this is the Fig. 2
+        // "flattens once everything hot is resident" regime)
+        if selected.len() < max_slots {
+            for (v, &c) in node_visits.iter().enumerate() {
+                if selected.len() >= max_slots {
+                    break;
+                }
+                if (c as f64) <= avg && c > 0 {
+                    selected.push(v as NodeId);
+                }
+            }
+        }
+        if selected.len() < max_slots {
+            for (v, &c) in node_visits.iter().enumerate() {
+                if selected.len() >= max_slots {
+                    break;
+                }
+                if c == 0 {
+                    selected.push(v as NodeId);
+                }
+            }
+        }
+
+        let dim = features.dim();
+        let mut data = vec![0.0f32; selected.len() * dim];
+        let mut slot_of = vec![ABSENT; features.n_nodes()];
+        let mut ledger = TransferLedger::new();
+        for (slot, &v) in selected.iter().enumerate() {
+            features.copy_row_into(v, &mut data[slot * dim..(slot + 1) * dim]);
+            slot_of[v as usize] = slot as u32;
+        }
+        // one bulk upload for the whole fill
+        ledger.upload(selected.len() as u64 * row_bytes);
+        (
+            FeatCache { dim, row_bytes, slot_of, n_cached: selected.len(), data },
+            ledger,
+        )
+    }
+
+    /// Fill with an externally chosen node priority order (DUCATI's
+    /// knapsack path); caches rows in order until capacity is exhausted.
+    pub fn fill_with_order(
+        features: &FeatureStore,
+        order: &[NodeId],
+        capacity_bytes: u64,
+    ) -> (Self, TransferLedger) {
+        let row_bytes = features.row_bytes();
+        let per_node = row_bytes + ENTRY_OVERHEAD_BYTES;
+        let max_slots = (capacity_bytes / per_node) as usize;
+        let selected = &order[..max_slots.min(order.len())];
+        let dim = features.dim();
+        let mut data = vec![0.0f32; selected.len() * dim];
+        let mut slot_of = vec![ABSENT; features.n_nodes()];
+        let mut ledger = TransferLedger::new();
+        for (slot, &v) in selected.iter().enumerate() {
+            features.copy_row_into(v, &mut data[slot * dim..(slot + 1) * dim]);
+            slot_of[v as usize] = slot as u32;
+        }
+        ledger.upload(selected.len() as u64 * row_bytes);
+        (
+            FeatCache { dim, row_bytes, slot_of, n_cached: selected.len(), data },
+            ledger,
+        )
+    }
+
+    /// An empty cache (capacity 0 — the DGL baseline's view).
+    pub fn empty(dim: usize) -> Self {
+        FeatCache {
+            dim,
+            row_bytes: (dim * std::mem::size_of::<f32>()) as u64,
+            slot_of: Vec::new(),
+            n_cached: 0,
+            data: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn lookup(&self, v: NodeId) -> Option<&[f32]> {
+        let slot = *self.slot_of.get(v as usize)?;
+        if slot == ABSENT {
+            return None;
+        }
+        let i = slot as usize * self.dim;
+        Some(&self.data[i..i + self.dim])
+    }
+
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.lookup(v).is_some()
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.n_cached
+    }
+
+    /// Device bytes this cache occupies (payload + index overhead).
+    pub fn bytes_used(&self) -> u64 {
+        self.n_cached as u64 * (self.row_bytes + ENTRY_OVERHEAD_BYTES)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FeatureStore;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn store(n: usize, dim: usize) -> FeatureStore {
+        FeatureStore::generate(n, dim, &mut Rng::new(5))
+    }
+
+    #[test]
+    fn prefers_above_average_nodes() {
+        let fs = store(10, 4);
+        // node 3 and 7 hot, rest cold
+        let visits = [1, 1, 1, 50, 1, 1, 1, 40, 0, 0];
+        // capacity for exactly 2 rows
+        let cap = 2 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, ledger) = FeatCache::fill(&fs, &visits, cap);
+        assert_eq!(c.n_cached(), 2);
+        assert!(c.contains(3) && c.contains(7));
+        assert_eq!(ledger.h2d_bytes, 2 * fs.row_bytes());
+        assert_eq!(c.bytes_used(), cap);
+    }
+
+    #[test]
+    fn spills_to_below_average_then_unvisited() {
+        let fs = store(6, 4);
+        let visits = [10, 1, 1, 0, 1, 1];
+        let cap = 5 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, _) = FeatCache::fill(&fs, &visits, cap);
+        assert_eq!(c.n_cached(), 5);
+        assert!(c.contains(0)); // hot one
+        // visited cold ones before the zero-visit node
+        assert!(c.contains(1) && c.contains(2) && c.contains(4) && c.contains(5));
+        assert!(!c.contains(3));
+        // with room for all, the unvisited node gets in too (Fig. 2
+        // full-budget regime)
+        let (c2, _) = FeatCache::fill(&fs, &visits, 6 * (fs.row_bytes() + 16));
+        assert!(c2.contains(3));
+    }
+
+    #[test]
+    fn lookup_returns_exact_rows() {
+        let fs = store(20, 8);
+        let visits = vec![5u32; 20];
+        let cap = 20 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, _) = FeatCache::fill(&fs, &visits, cap);
+        for v in 0..20u32 {
+            assert_eq!(c.lookup(v).unwrap(), fs.row(v), "node {v}");
+        }
+        assert!(c.lookup(25).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_caches_nothing() {
+        let fs = store(5, 4);
+        let (c, ledger) = FeatCache::fill(&fs, &[9, 9, 9, 9, 9], 0);
+        assert_eq!(c.n_cached(), 0);
+        assert_eq!(ledger.h2d_bytes, 0);
+        assert!(c.lookup(0).is_none());
+        let e = FeatCache::empty(4);
+        assert_eq!(e.n_cached(), 0);
+        assert!(e.lookup(0).is_none());
+    }
+
+    #[test]
+    fn fill_with_order_respects_order_and_budget() {
+        let fs = store(10, 4);
+        let order = [7u32, 3, 1];
+        let cap = 2 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, _) = FeatCache::fill_with_order(&fs, &order, cap);
+        assert!(c.contains(7) && c.contains(3));
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn capacity_respected_property() {
+        check("feat cache never exceeds capacity", 100, |rng| {
+            let n = 1 + rng.gen_usize(200);
+            let dim = 1 + rng.gen_usize(16);
+            let fs = FeatureStore::generate(n, dim, rng);
+            let visits: Vec<u32> = (0..n).map(|_| rng.next_u32() % 20).collect();
+            let cap = rng.next_u64() % (n as u64 * 2 * (fs.row_bytes() + 16));
+            let (c, _) = FeatCache::fill(&fs, &visits, cap);
+            if c.bytes_used() > cap {
+                return Err(format!("used {} > cap {cap}", c.bytes_used()));
+            }
+            // every cached row matches the host row
+            for v in 0..n as u32 {
+                if let Some(row) = c.lookup(v) {
+                    if row != fs.row(v) {
+                        return Err(format!("row mismatch at {v}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hot_nodes_always_preferred_property() {
+        check("above-avg nodes cached before below-avg", 50, |rng| {
+            let n = 10 + rng.gen_usize(100);
+            let fs = FeatureStore::generate(n, 4, rng);
+            let visits: Vec<u32> = (0..n).map(|_| rng.next_u32() % 10).collect();
+            let total: u64 = visits.iter().map(|&c| c as u64).sum();
+            let avg = total as f64 / n as f64;
+            let n_hot = visits.iter().filter(|&&c| (c as f64) > avg).count();
+            let cap = n_hot as u64 * (fs.row_bytes() + 16);
+            let (c, _) = FeatCache::fill(&fs, &visits, cap);
+            for (v, &cnt) in visits.iter().enumerate() {
+                if (cnt as f64) > avg && !c.contains(v as u32) && c.n_cached() < n_hot
+                {
+                    return Err(format!("hot node {v} (visits {cnt}) evicted"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

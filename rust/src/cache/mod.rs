@@ -1,0 +1,18 @@
+//! The paper's contribution: workload-aware dual-cache allocation
+//! (Eq. 1) and the lightweight cache-filling algorithms (§IV.B,
+//! Algorithm 1).
+//!
+//! Both caches live in simulated device memory ([`crate::mem`]); hits
+//! are device reads, misses fall back to UVA host reads. Capacity
+//! accounting includes metadata (hash table / prefix-length arrays),
+//! not just payload.
+
+pub mod adj_cache;
+pub mod alloc;
+pub mod feat_cache;
+pub mod stats;
+
+pub use adj_cache::AdjCache;
+pub use alloc::{allocate, CacheAllocation};
+pub use feat_cache::FeatCache;
+pub use stats::CacheStats;

@@ -1,0 +1,83 @@
+//! Combined dual-cache statistics (the hit-ratio series of Fig. 9).
+
+use crate::mem::{CostModel, TransferLedger};
+
+/// Aggregated transfer behaviour of one inference run, split by stage.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Sampling-stage traffic (adjacency cache).
+    pub sample: TransferLedger,
+    /// Feature-loading-stage traffic (feature cache).
+    pub feature: TransferLedger,
+    /// Preprocessing traffic (pre-sampling + cache fills).
+    pub preprocess: TransferLedger,
+}
+
+impl CacheStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adjacency-cache hit ratio (sampling stage).
+    pub fn adj_hit_ratio(&self) -> f64 {
+        self.sample.hit_ratio()
+    }
+
+    /// Feature-cache hit ratio (loading stage).
+    pub fn feat_hit_ratio(&self) -> f64 {
+        self.feature.hit_ratio()
+    }
+
+    /// Overall hit ratio across both caches — the Fig. 9 y-axis.
+    pub fn overall_hit_ratio(&self) -> f64 {
+        let hits = self.sample.hits + self.feature.hits;
+        let total = hits + self.sample.misses + self.feature.misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Modeled transfer ns of the two serving stages.
+    pub fn serving_modeled_ns(&self, m: &CostModel) -> f64 {
+        self.sample.modeled_ns(m) + self.feature.modeled_ns(m)
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.sample.merge(&other.sample);
+        self.feature.merge(&other.feature);
+        self.preprocess.merge(&other.preprocess);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let mut s = CacheStats::new();
+        s.sample.hit(4);
+        s.sample.miss(4, 1);
+        s.feature.hit(400);
+        s.feature.hit(400);
+        assert_eq!(s.adj_hit_ratio(), 0.5);
+        assert_eq!(s.feat_hit_ratio(), 1.0);
+        assert!((s.overall_hit_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::new().overall_hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CacheStats::new();
+        a.sample.hit(4);
+        let mut b = CacheStats::new();
+        b.sample.miss(4, 1);
+        b.preprocess.upload(100);
+        a.merge(&b);
+        assert_eq!(a.sample.hits, 1);
+        assert_eq!(a.sample.misses, 1);
+        assert_eq!(a.preprocess.h2d_bytes, 100);
+    }
+}

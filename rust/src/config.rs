@@ -1,0 +1,270 @@
+//! Run configuration: one struct describing a full inference run
+//! (dataset, model, fan-out, batch size, system, budgets, backend),
+//! parsed from `key=value` CLI arguments (no clap in the offline
+//! registry — and a flat keyspace keeps bench scripts simple).
+
+use anyhow::{bail, Context, Result};
+
+use crate::mem::CostModel;
+use crate::sampler::Fanout;
+use crate::util::parse_bytes;
+
+/// Which GNN model the compute stage runs (Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    GraphSage,
+    Gcn,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "graphsage" | "sage" => Ok(ModelKind::GraphSage),
+            "gcn" => Ok(ModelKind::Gcn),
+            other => bail!("unknown model {other:?} (graphsage|gcn)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::GraphSage => "graphsage",
+            ModelKind::Gcn => "gcn",
+        }
+    }
+}
+
+/// Which inference system prepares caches / orders batches (§V.A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// No caches, everything over UVA (the DGL baseline).
+    Dgl,
+    /// Single cache: the whole budget goes to node features.
+    Sci,
+    /// The paper's dual-cache system.
+    Dci,
+    /// LSH batch clustering + inter-batch reuse.
+    Rain,
+    /// DUCATI's knapsack dual-cache fill, adapted to inference.
+    Ducati,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dgl" => Ok(SystemKind::Dgl),
+            "sci" => Ok(SystemKind::Sci),
+            "dci" => Ok(SystemKind::Dci),
+            "rain" => Ok(SystemKind::Rain),
+            "ducati" => Ok(SystemKind::Ducati),
+            other => bail!("unknown system {other:?} (dgl|sci|dci|rain|ducati)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SystemKind::Dgl => "dgl",
+            SystemKind::Sci => "sci",
+            SystemKind::Dci => "dci",
+            SystemKind::Rain => "rain",
+            SystemKind::Ducati => "ducati",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 5] {
+        [SystemKind::Dgl, SystemKind::Sci, SystemKind::Dci, SystemKind::Rain,
+         SystemKind::Ducati]
+    }
+}
+
+/// Compute-stage backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeKind {
+    /// No model execution (mini-batch-preparation studies, Fig. 2/9/11).
+    Skip,
+    /// Pure-Rust reference model (no artifacts needed).
+    Reference,
+    /// AOT HLO artifacts through the PJRT CPU client (the real path).
+    Pjrt,
+}
+
+impl ComputeKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "skip" => Ok(ComputeKind::Skip),
+            "reference" | "ref" => Ok(ComputeKind::Reference),
+            "pjrt" => Ok(ComputeKind::Pjrt),
+            other => bail!("unknown compute backend {other:?} (skip|reference|pjrt)"),
+        }
+    }
+}
+
+/// Full description of one inference run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub model: ModelKind,
+    pub fanout: Fanout,
+    pub batch_size: usize,
+    pub system: SystemKind,
+    /// Hidden embedding dimension (Table III: 128).
+    pub hidden: usize,
+    /// Explicit total cache budget; `None` = workload-aware (all device
+    /// memory left after the workload's own claim — the paper's default).
+    pub budget: Option<u64>,
+    /// Pre-sampling batches (Fig. 11; the paper settles on 8).
+    pub n_presample: usize,
+    pub compute: ComputeKind,
+    /// Cap on inference batches (None = full test set).
+    pub max_batches: Option<usize>,
+    /// Simulated device capacity; `None` = RTX 4090 scaled by the
+    /// dataset's scale factor.
+    pub device_capacity: Option<u64>,
+    pub cost: CostModel,
+    pub seed: u64,
+    /// Artifacts directory for the PJRT backend.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "products-sim".into(),
+            model: ModelKind::GraphSage,
+            fanout: Fanout::parse("8,4,2").unwrap(),
+            batch_size: 256,
+            system: SystemKind::Dci,
+            hidden: 128,
+            budget: None,
+            n_presample: 8,
+            compute: ComputeKind::Skip,
+            max_batches: None,
+            device_capacity: None,
+            cost: CostModel::default(),
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key=value` arguments over the defaults. Unknown keys error.
+    pub fn from_args(args: &[String]) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        for arg in args {
+            let (key, value) = arg
+                .split_once('=')
+                .with_context(|| format!("expected key=value, got {arg:?}"))?;
+            match key {
+                "dataset" => self.dataset = value.to_string(),
+                "model" => self.model = ModelKind::parse(value)?,
+                "fanout" => self.fanout = Fanout::parse(value)?,
+                "batch-size" | "bs" => {
+                    self.batch_size = value.parse().context("batch-size")?;
+                    if self.batch_size == 0 {
+                        bail!("batch-size must be positive");
+                    }
+                }
+                "system" => self.system = SystemKind::parse(value)?,
+                "hidden" => self.hidden = value.parse().context("hidden")?,
+                "budget" => {
+                    self.budget = if value == "auto" {
+                        None
+                    } else {
+                        Some(parse_bytes(value)?)
+                    }
+                }
+                "presample" => self.n_presample = value.parse().context("presample")?,
+                "compute" => self.compute = ComputeKind::parse(value)?,
+                "max-batches" => self.max_batches = Some(value.parse()?),
+                "device" => self.device_capacity = Some(parse_bytes(value)?),
+                "seed" => self.seed = value.parse().context("seed")?,
+                "artifacts" => self.artifacts_dir = value.to_string(),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} fanout={} bs={} system={} presample={}",
+            self.dataset,
+            self.model.as_str(),
+            self.fanout,
+            self.batch_size,
+            self.system.as_str(),
+            self.n_presample
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cfg = RunConfig::from_args(&args(&[
+            "dataset=reddit-sim",
+            "model=gcn",
+            "fanout=15,10,5",
+            "bs=1024",
+            "system=rain",
+            "budget=0.5GB",
+            "presample=16",
+            "compute=reference",
+            "seed=7",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.dataset, "reddit-sim");
+        assert_eq!(cfg.model, ModelKind::Gcn);
+        assert_eq!(cfg.fanout.to_string(), "15,10,5");
+        assert_eq!(cfg.batch_size, 1024);
+        assert_eq!(cfg.system, SystemKind::Rain);
+        assert_eq!(cfg.budget, Some(512 * (1 << 20)));
+        assert_eq!(cfg.n_presample, 16);
+        assert_eq!(cfg.compute, ComputeKind::Reference);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn budget_auto() {
+        let cfg = RunConfig::from_args(&args(&["budget=auto"])).unwrap();
+        assert_eq!(cfg.budget, None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(RunConfig::from_args(&args(&["nope=1"])).is_err());
+        assert!(RunConfig::from_args(&args(&["dataset"])).is_err());
+        assert!(RunConfig::from_args(&args(&["bs=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["model=gat"])).is_err());
+        assert!(RunConfig::from_args(&args(&["system=pyg"])).is_err());
+        assert!(RunConfig::from_args(&args(&["compute=gpu"])).is_err());
+    }
+
+    #[test]
+    fn enum_parsers_roundtrip() {
+        for s in SystemKind::all() {
+            assert_eq!(SystemKind::parse(s.as_str()).unwrap(), s);
+        }
+        assert_eq!(ModelKind::parse("sage").unwrap(), ModelKind::GraphSage);
+    }
+
+    #[test]
+    fn summary_mentions_key_fields() {
+        let cfg = RunConfig::default();
+        let s = cfg.summary();
+        assert!(s.contains("products-sim") && s.contains("dci"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Admission control + backpressure for the serving frontend.
+//!
+//! The engine's throughput is bounded by mini-batch preparation; when
+//! clients outrun it, unbounded queues turn into unbounded latency. The
+//! [`AdmissionController`] enforces (a) a queued-seed ceiling (hard
+//! backpressure — reject with `Overloaded` so clients can retry with
+//! jitter) and (b) an optional per-client token bucket (rate limit).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use thiserror::Error;
+
+/// Why a request was not admitted.
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum AdmissionError {
+    #[error("overloaded: {queued} seeds queued (limit {limit}); retry with backoff")]
+    Overloaded { queued: usize, limit: usize },
+    #[error("rate limited: client {client:?} exceeded {rate_per_s:.0} seeds/s")]
+    RateLimited { client: String, rate_per_s: f64 },
+}
+
+/// Admission policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Hard ceiling on queued seeds across all workers.
+    pub max_queued_seeds: usize,
+    /// Optional per-client sustained rate (seeds/second) + burst.
+    pub per_client_rate: Option<(f64, f64)>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_queued_seeds: 100_000, per_client_rate: None }
+    }
+}
+
+/// Token bucket state for one client.
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Thread-safe admission controller (shared by submitters).
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController { cfg, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Decide whether a request of `n_seeds` from `client` may enter,
+    /// given the current total queue depth.
+    pub fn admit(
+        &self,
+        client: &str,
+        n_seeds: usize,
+        queued_seeds: usize,
+    ) -> Result<(), AdmissionError> {
+        if queued_seeds + n_seeds > self.cfg.max_queued_seeds {
+            return Err(AdmissionError::Overloaded {
+                queued: queued_seeds,
+                limit: self.cfg.max_queued_seeds,
+            });
+        }
+        if let Some((rate, burst)) = self.cfg.per_client_rate {
+            let mut buckets = self.buckets.lock().unwrap();
+            let now = Instant::now();
+            let b = buckets.entry(client.to_string()).or_insert(Bucket {
+                tokens: burst,
+                last: now,
+            });
+            let dt = now.duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * rate).min(burst);
+            b.last = now;
+            if b.tokens < n_seeds as f64 {
+                return Err(AdmissionError::RateLimited {
+                    client: client.to_string(),
+                    rate_per_s: rate,
+                });
+            }
+            b.tokens -= n_seeds as f64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_over_queue_ceiling() {
+        let ac = AdmissionController::new(AdmissionConfig {
+            max_queued_seeds: 100,
+            per_client_rate: None,
+        });
+        assert!(ac.admit("a", 50, 0).is_ok());
+        assert!(ac.admit("a", 50, 50).is_ok());
+        let err = ac.admit("a", 51, 50).unwrap_err();
+        assert!(matches!(err, AdmissionError::Overloaded { .. }));
+        assert!(err.to_string().contains("retry with backoff"));
+    }
+
+    #[test]
+    fn token_bucket_limits_burst_then_refills() {
+        let ac = AdmissionController::new(AdmissionConfig {
+            max_queued_seeds: usize::MAX,
+            per_client_rate: Some((1000.0, 100.0)), // 1000/s, burst 100
+        });
+        // burst of 100 admitted
+        assert!(ac.admit("c1", 100, 0).is_ok());
+        // next request rejected (bucket drained)
+        assert!(matches!(
+            ac.admit("c1", 50, 0),
+            Err(AdmissionError::RateLimited { .. })
+        ));
+        // other clients unaffected
+        assert!(ac.admit("c2", 100, 0).is_ok());
+        // refill after 60ms -> ~60 tokens
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(ac.admit("c1", 40, 0).is_ok());
+    }
+
+    #[test]
+    fn zero_seed_requests_always_admitted() {
+        let ac = AdmissionController::new(AdmissionConfig::default());
+        assert!(ac.admit("x", 0, 0).is_ok());
+    }
+}

@@ -1,0 +1,150 @@
+//! Dynamic batcher: coalesces client requests into engine-sized
+//! mini-batches. Flush triggers: (a) pending seed count reaches
+//! `batch_size`, (b) the oldest pending request exceeds `max_wait`.
+
+use std::time::{Duration, Instant};
+
+use crate::graph::NodeId;
+
+use super::Request;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Seed count that triggers an immediate flush.
+    pub batch_size: usize,
+    /// Oldest-request age that forces a flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch_size: 256, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A flushed batch: concatenated seeds + the requests (with their seed
+/// spans) it serves.
+pub struct PendingBatch {
+    pub seeds: Vec<NodeId>,
+    /// (request, start, len) spans into `seeds`.
+    pub members: Vec<(Request, usize, usize)>,
+}
+
+/// Accumulates requests until a flush trigger fires.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    seeds: Vec<NodeId>,
+    members: Vec<(Request, usize, usize)>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, seeds: Vec::new(), members: Vec::new(), oldest: None }
+    }
+
+    pub fn pending_seeds(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Queue a request; returns a batch if the size trigger fired.
+    pub fn push(&mut self, req: Request) -> Option<PendingBatch> {
+        let start = self.seeds.len();
+        let len = req.nodes.len();
+        self.seeds.extend_from_slice(&req.nodes);
+        if self.oldest.is_none() {
+            self.oldest = Some(req.submitted);
+        }
+        self.members.push((req, start, len));
+        if self.seeds.len() >= self.cfg.batch_size {
+            Some(self.flush())
+        } else {
+            None
+        }
+    }
+
+    /// Time left until the timeout trigger would fire (None if empty).
+    pub fn time_until_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t| {
+            let age = now.duration_since(t);
+            self.cfg.max_wait.saturating_sub(age)
+        })
+    }
+
+    /// Flush if the timeout trigger fired.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<PendingBatch> {
+        match self.time_until_deadline(now) {
+            Some(d) if d.is_zero() && !self.is_empty() => Some(self.flush()),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush of whatever is pending.
+    pub fn flush(&mut self) -> PendingBatch {
+        self.oldest = None;
+        PendingBatch {
+            seeds: std::mem::take(&mut self.seeds),
+            members: std::mem::take(&mut self.members),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(nodes: Vec<NodeId>) -> (Request, mpsc::Receiver<super::super::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { nodes, submitted: Instant::now(), reply: tx }, rx)
+    }
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 4, max_wait: Duration::from_secs(1) });
+        let (r1, _k1) = req(vec![1, 2]);
+        assert!(b.push(r1).is_none());
+        assert_eq!(b.pending_seeds(), 2);
+        let (r2, _k2) = req(vec![3, 4, 5]);
+        let batch = b.push(r2).expect("size trigger");
+        assert_eq!(batch.seeds, vec![1, 2, 3, 4, 5]);
+        assert_eq!(batch.members.len(), 2);
+        assert_eq!(batch.members[0].1, 0);
+        assert_eq!(batch.members[0].2, 2);
+        assert_eq!(batch.members[1].1, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn timeout_trigger() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        let (r, _k) = req(vec![9]);
+        assert!(b.push(r).is_none());
+        assert!(b.poll_deadline(Instant::now()).is_none() || true);
+        std::thread::sleep(Duration::from_millis(2));
+        let batch = b.poll_deadline(Instant::now()).expect("timeout trigger");
+        assert_eq!(batch.seeds, vec![9]);
+        assert!(b.poll_deadline(Instant::now()).is_none(), "empty after flush");
+    }
+
+    #[test]
+    fn deadline_accounting() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 100,
+            max_wait: Duration::from_millis(50),
+        });
+        assert!(b.time_until_deadline(Instant::now()).is_none());
+        let (r, _k) = req(vec![1]);
+        b.push(r);
+        let d = b.time_until_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,117 @@
+//! Serving metrics: request latency distribution, batch sizes, seed
+//! throughput — the numbers the end-to-end example reports.
+
+use std::time::Duration;
+
+use crate::util::stats::LatencyHist;
+
+/// Accumulated serving-side metrics (one per worker; merged at report
+/// time).
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub requests: u64,
+    pub seeds: u64,
+    pub batches: u64,
+    pub latency: LatencyHist,
+    /// Engine stage totals (ns, wall + modeled).
+    pub sample_ns: f64,
+    pub feature_ns: f64,
+    pub compute_ns: f64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&mut self, n_requests: usize, n_seeds: usize) {
+        self.batches += 1;
+        self.requests += n_requests as u64;
+        self.seeds += n_seeds as u64;
+    }
+
+    pub fn record_latency(&mut self, ns: u64) {
+        self.latency.record_ns(ns);
+    }
+
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.requests += other.requests;
+        self.seeds += other.seeds;
+        self.batches += other.batches;
+        self.latency.merge(&other.latency);
+        self.sample_ns += other.sample_ns;
+        self.feature_ns += other.feature_ns;
+        self.compute_ns += other.compute_ns;
+    }
+
+    /// Seeds served per second of elapsed wall time.
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        if elapsed.is_zero() {
+            0.0
+        } else {
+            self.seeds as f64 / elapsed.as_secs_f64()
+        }
+    }
+
+    /// Multi-line human report.
+    pub fn report(&self, elapsed: Duration) -> String {
+        let (p50, p90, p99) = self.latency.quantiles_ns();
+        format!(
+            "requests={} seeds={} batches={} (avg batch {:.1} seeds)\n\
+             latency p50={:.2}ms p90={:.2}ms p99={:.2}ms mean={:.2}ms\n\
+             throughput={:.0} seeds/s\n\
+             stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms",
+            self.requests,
+            self.seeds,
+            self.batches,
+            self.seeds as f64 / self.batches.max(1) as f64,
+            p50 / 1e6,
+            p90 / 1e6,
+            p99 / 1e6,
+            self.latency.mean_ns() / 1e6,
+            self.throughput(elapsed),
+            self.sample_ns / 1e6,
+            self.feature_ns / 1e6,
+            self.compute_ns / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServingMetrics::new();
+        m.record_batch(3, 100);
+        m.record_batch(2, 50);
+        for i in 1..=10 {
+            m.record_latency(i * 1_000_000);
+        }
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.seeds, 150);
+        assert_eq!(m.batches, 2);
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("seeds=150"));
+        assert!(rep.contains("throughput=150"));
+        assert!((m.throughput(Duration::from_secs(2)) - 75.0).abs() < 1e-9);
+        assert_eq!(m.throughput(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = ServingMetrics::new();
+        a.record_batch(1, 10);
+        a.record_latency(5);
+        let mut b = ServingMetrics::new();
+        b.record_batch(2, 20);
+        b.record_latency(7);
+        b.sample_ns = 3.0;
+        a.merge(&b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.seeds, 30);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.sample_ns, 3.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Serving coordinator: request router → dynamic batcher → worker
+//! threads running the DCI engine → latency/throughput metrics.
+//!
+//! This is the L3 deployment surface: clients submit node-id inference
+//! requests; the batcher coalesces them into mini-batches (size- or
+//! timeout-triggered, vLLM-router style); each worker owns a full
+//! [`crate::engine::InferenceEngine`] (its own caches + PJRT
+//! executables) and serves batches off an mpsc queue. std threads —
+//! the offline registry has no tokio, and the workload is CPU-bound
+//! anyway.
+
+pub mod admission;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServingMetrics;
+pub use router::Router;
+pub use server::{Server, ServerConfig};
+
+use crate::graph::NodeId;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One client inference request.
+pub struct Request {
+    /// Nodes to classify.
+    pub nodes: Vec<NodeId>,
+    /// Submission time (latency measurement).
+    pub submitted: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The served answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Logits, `[n_nodes, classes]` row-major (None when compute=skip).
+    pub logits: Option<Vec<f32>>,
+    /// End-to-end latency (submit → reply).
+    pub latency_ns: u64,
+    /// Batch the request was served in (observability).
+    pub batch_id: u64,
+}

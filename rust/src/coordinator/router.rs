@@ -1,0 +1,137 @@
+//! Request router: spreads client requests across worker queues.
+//!
+//! Policies: round-robin (default) and least-loaded (by queued seed
+//! count). With one CPU core the fleet is usually one worker, but the
+//! topology (router → N workers, each with private caches + PJRT
+//! executables) is the deployment shape the paper's system would run
+//! behind a real inference frontend.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{bail, Result};
+
+use super::Request;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Per-worker handle: queue sender + load gauge.
+pub struct WorkerHandle {
+    pub tx: mpsc::Sender<Request>,
+    /// Seeds currently queued (decremented by the worker).
+    pub queued_seeds: Arc<AtomicUsize>,
+}
+
+/// The router.
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+    policy: RoutePolicy,
+    next: AtomicU64,
+}
+
+impl Router {
+    pub fn new(workers: Vec<WorkerHandle>, policy: RoutePolicy) -> Result<Router> {
+        if workers.is_empty() {
+            bail!("router needs at least one worker");
+        }
+        Ok(Router { workers, policy, next: AtomicU64::new(0) })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total seeds currently queued across workers (backpressure input).
+    pub fn queued_seeds(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.queued_seeds.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Pick a worker index for a request of `n_seeds`.
+    pub fn pick(&self, n_seeds: usize) -> usize {
+        let i = match self.policy {
+            RoutePolicy::RoundRobin => {
+                (self.next.fetch_add(1, Ordering::Relaxed) as usize) % self.workers.len()
+            }
+            RoutePolicy::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.queued_seeds.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.workers[i].queued_seeds.fetch_add(n_seeds, Ordering::Relaxed);
+        i
+    }
+
+    /// Route a request (send into the picked worker's queue).
+    pub fn route(&self, req: Request) -> Result<()> {
+        let i = self.pick(req.nodes.len());
+        self.workers[i]
+            .tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("worker {i} hung up"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn workers(n: usize) -> (Vec<WorkerHandle>, Vec<mpsc::Receiver<Request>>) {
+        let mut hs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            hs.push(WorkerHandle { tx, queued_seeds: Arc::new(AtomicUsize::new(0)) });
+            rxs.push(rx);
+        }
+        (hs, rxs)
+    }
+
+    fn req(n: usize) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        std::mem::forget(_rx);
+        Request { nodes: vec![0; n], submitted: Instant::now(), reply: tx }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (hs, _rxs) = workers(3);
+        let r = Router::new(hs, RoutePolicy::RoundRobin).unwrap();
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(1)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let (hs, _rxs) = workers(2);
+        let r = Router::new(hs, RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(r.pick(100), 0); // both idle -> first
+        assert_eq!(r.pick(1), 1);   // worker 0 now has 100 queued
+        assert_eq!(r.pick(1), 1);   // worker 1 has 1 < 100
+    }
+
+    #[test]
+    fn route_delivers() {
+        let (hs, rxs) = workers(1);
+        let r = Router::new(hs, RoutePolicy::RoundRobin).unwrap();
+        r.route(req(5)).unwrap();
+        let got = rxs[0].try_recv().unwrap();
+        assert_eq!(got.nodes.len(), 5);
+    }
+
+    #[test]
+    fn empty_router_rejected() {
+        assert!(Router::new(Vec::new(), RoutePolicy::RoundRobin).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! The serving loop: worker threads own an engine each; a leader-side
+//! router feeds their queues; responses flow back over per-request
+//! channels.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::engine::InferenceEngine;
+use crate::graph::Dataset;
+
+use super::admission::{AdmissionConfig, AdmissionController};
+use super::batcher::{Batcher, BatcherConfig, PendingBatch};
+use super::metrics::ServingMetrics;
+use super::router::{RoutePolicy, Router, WorkerHandle};
+use super::{Request, Response};
+
+/// Server deployment knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub n_workers: usize,
+    pub batcher: BatcherConfig,
+    pub policy: RoutePolicy,
+    pub admission: AdmissionConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_workers: 1,
+            batcher: BatcherConfig::default(),
+            policy: RoutePolicy::RoundRobin,
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+/// A running server: router + worker threads.
+pub struct Server {
+    router: Router,
+    admission: AdmissionController,
+    workers: Vec<JoinHandle<Result<()>>>,
+    metrics: Vec<Arc<Mutex<ServingMetrics>>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Start workers. Each worker runs its system's preprocessing on
+    /// its own engine before serving (caches are per-worker, as they
+    /// would be per-GPU).
+    pub fn start(ds: Arc<Dataset>, run_cfg: RunConfig, cfg: ServerConfig) -> Result<Server> {
+        let mut handles = Vec::new();
+        let mut joins = Vec::new();
+        let mut metrics = Vec::new();
+        for w in 0..cfg.n_workers.max(1) {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let queued = Arc::new(AtomicUsize::new(0));
+            let m = Arc::new(Mutex::new(ServingMetrics::new()));
+            let ds = Arc::clone(&ds);
+            let mut rc = run_cfg.clone();
+            rc.seed = run_cfg.seed.wrapping_add(w as u64);
+            let batcher_cfg = cfg.batcher.clone();
+            let queued2 = Arc::clone(&queued);
+            let m2 = Arc::clone(&m);
+            let join = std::thread::Builder::new()
+                .name(format!("dci-worker-{w}"))
+                .spawn(move || worker_loop(&ds, rc, batcher_cfg, rx, queued2, m2))?;
+            handles.push(WorkerHandle { tx, queued_seeds: queued });
+            joins.push(join);
+            metrics.push(m);
+        }
+        Ok(Server {
+            router: Router::new(handles, cfg.policy)?,
+            admission: AdmissionController::new(cfg.admission),
+            workers: joins,
+            metrics,
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    pub fn submit(&self, nodes: Vec<crate::graph::NodeId>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_as("anonymous", nodes)
+    }
+
+    /// Submit with a client identity (admission control applies).
+    pub fn submit_as(
+        &self,
+        client: &str,
+        nodes: Vec<crate::graph::NodeId>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        self.admission
+            .admit(client, nodes.len(), self.router.queued_seeds())?;
+        let (tx, rx) = mpsc::channel();
+        self.router.route(Request { nodes, submitted: Instant::now(), reply: tx })?;
+        Ok(rx)
+    }
+
+    /// Merged metrics snapshot + elapsed time.
+    pub fn metrics(&self) -> (ServingMetrics, Duration) {
+        let mut all = ServingMetrics::new();
+        for m in &self.metrics {
+            all.merge(&m.lock().unwrap());
+        }
+        (all, self.started.elapsed())
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(self) -> Result<(ServingMetrics, Duration)> {
+        let snapshot = self.metrics();
+        drop(self.router); // closes queues; workers drain + exit
+        for j in self.workers {
+            match j.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("worker panicked"),
+            }
+        }
+        Ok(snapshot)
+    }
+}
+
+fn worker_loop(
+    ds: &Dataset,
+    run_cfg: RunConfig,
+    batcher_cfg: BatcherConfig,
+    rx: mpsc::Receiver<Request>,
+    queued: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+) -> Result<()> {
+    let mut engine = InferenceEngine::prepare(ds, run_cfg)?;
+    let mut batcher = Batcher::new(batcher_cfg);
+    let mut batch_id = 0u64;
+
+    loop {
+        // wait for work, bounded by the batcher deadline
+        let timeout = batcher
+            .time_until_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        let msg = rx.recv_timeout(timeout);
+        let flushed: Option<PendingBatch> = match msg {
+            Ok(req) => {
+                queued.fetch_sub(req.nodes.len().min(queued.load(Ordering::Relaxed)),
+                                 Ordering::Relaxed);
+                batcher.push(req)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => batcher.poll_deadline(Instant::now()),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // drain and exit
+                if !batcher.is_empty() {
+                    let b = batcher.flush();
+                    serve_batch(&mut engine, b, &mut batch_id, &metrics)?;
+                }
+                return Ok(());
+            }
+        };
+        if let Some(b) = flushed {
+            serve_batch(&mut engine, b, &mut batch_id, &metrics)?;
+        }
+    }
+}
+
+fn serve_batch(
+    engine: &mut InferenceEngine<'_>,
+    batch: PendingBatch,
+    batch_id: &mut u64,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+) -> Result<()> {
+    *batch_id += 1;
+    let out = engine.infer_once(&batch.seeds)?;
+    let classes = engine.ds.spec.classes;
+    let mut m = metrics.lock().unwrap();
+    m.record_batch(batch.members.len(), batch.seeds.len());
+    m.sample_ns += out.sample.total_ns();
+    m.feature_ns += out.feature.total_ns();
+    m.compute_ns += out.compute.total_ns();
+    drop(m);
+
+    for (req, start, len) in batch.members {
+        let latency_ns = req.submitted.elapsed().as_nanos() as u64;
+        metrics.lock().unwrap().record_latency(latency_ns);
+        let logits = out.logits.as_ref().map(|l| {
+            l[start * classes..(start + len) * classes].to_vec()
+        });
+        // receiver may have gone away; that's the client's business
+        let _ = req.reply.send(Response { logits, latency_ns, batch_id: *batch_id });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputeKind, SystemKind};
+    use crate::graph::datasets;
+    use crate::sampler::Fanout;
+
+    fn serving_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.system = SystemKind::Dci;
+        cfg.batch_size = 32;
+        cfg.fanout = Fanout::parse("3,2").unwrap();
+        cfg.budget = Some(300_000);
+        cfg.compute = ComputeKind::Reference;
+        cfg.hidden = 16;
+        cfg
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let server = Server::start(
+            Arc::clone(&ds),
+            serving_cfg(),
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 16,
+                    max_wait: Duration::from_millis(2),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let nodes: Vec<u32> = ds.test_nodes[i * 4..(i + 1) * 4].to_vec();
+            rxs.push((nodes.len(), server.submit(nodes).unwrap()));
+        }
+        for (n, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let logits = resp.logits.expect("reference compute returns logits");
+            assert_eq!(logits.len(), n * ds.spec.classes);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            assert!(resp.latency_ns > 0);
+        }
+        let (m, _elapsed) = server.shutdown().unwrap();
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.seeds, 40);
+        assert!(m.batches >= 1);
+        assert!(m.compute_ns > 0.0);
+    }
+
+    #[test]
+    fn multiple_workers_share_load() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let server = Server::start(
+            Arc::clone(&ds),
+            serving_cfg(),
+            ServerConfig {
+                n_workers: 2,
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(server.submit(vec![ds.test_nodes[i]]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert_eq!(m.requests, 8);
+    }
+}

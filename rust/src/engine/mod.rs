@@ -1,0 +1,595 @@
+//! Inference engine: the three-stage pipeline (sampling → feature
+//! loading → computation) the paper decomposes in Fig. 1, over any of
+//! the five prepared systems.
+//!
+//! Every stage accumulates *measured wall time* plus *modeled transfer
+//! time* (see `crate::mem`); reports keep the two separate so benches
+//! can show both and EXPERIMENTS.md can discuss the substitution.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{self, PreparedSystem};
+use crate::cache::CacheStats;
+use crate::config::{RunConfig, SystemKind};
+use crate::graph::{datasets, Dataset, NodeId};
+use crate::mem::{DeviceMemory, TransferLedger, PAPER_RESERVE_BYTES};
+use crate::runtime::Compute;
+use crate::sampler::{presample::row_txns, seed_batches, NeighborSampler, UvaAdj};
+use crate::util::Rng;
+
+/// Wall + modeled time of one pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageTimes {
+    pub wall_ns: f64,
+    pub modeled_ns: f64,
+}
+
+impl StageTimes {
+    pub fn total_ns(&self) -> f64 {
+        self.wall_ns + self.modeled_ns
+    }
+
+    pub fn add(&mut self, wall_ns: f64, modeled_ns: f64) {
+        self.wall_ns += wall_ns;
+        self.modeled_ns += modeled_ns;
+    }
+}
+
+/// Result of one full inference run.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub system: SystemKind,
+    pub preprocess_ns: f64,
+    pub sample: StageTimes,
+    pub feature: StageTimes,
+    pub compute: StageTimes,
+    pub stats: CacheStats,
+    pub n_batches: usize,
+    pub n_seeds: usize,
+    /// Total input-node feature loads (Table I's Loaded-nodes).
+    pub loaded_nodes: u64,
+    /// Device bytes occupied by caches.
+    pub cache_bytes: u64,
+    /// Eq. (1) split actually applied (if the system allocates one).
+    pub alloc: Option<crate::cache::CacheAllocation>,
+    /// Simulated CUDA OOM (RAIN on papers100m-sim — Table V).
+    pub oom: Option<String>,
+    /// Σ|logits| over all executed batches (sanity; 0 when compute=skip).
+    pub logits_checksum: f64,
+}
+
+impl InferenceReport {
+    /// End-to-end inference time (the Fig. 7/8/Table V number —
+    /// preprocessing excluded, as in §V.B).
+    pub fn total_ns(&self) -> f64 {
+        self.sample.total_ns() + self.feature.total_ns() + self.compute.total_ns()
+    }
+
+    /// Mini-batch preparation time (sampling + loading — Fig. 1).
+    pub fn prep_ns(&self) -> f64 {
+        self.sample.total_ns() + self.feature.total_ns()
+    }
+
+    /// **Simulated** preparation time: modeled transfer only. This is
+    /// the RTX-4090-comparable number the benches report — the wall
+    /// component is the *simulator's own* CPU cost (the gather/sampling
+    /// work a real deployment runs on the GPU), whose run-to-run noise
+    /// would otherwise wash out the transfer deltas the paper measures.
+    /// See DESIGN.md §Substitutions and EXPERIMENTS.md §Calibration.
+    pub fn sim_prep_ns(&self) -> f64 {
+        self.sample.modeled_ns + self.feature.modeled_ns
+    }
+
+    /// Simulated end-to-end time: modeled preparation + real compute
+    /// (the compute stage runs the actual AOT model, identical across
+    /// systems).
+    pub fn sim_total_ns(&self) -> f64 {
+        self.sim_prep_ns() + self.compute.total_ns()
+    }
+
+    /// Fraction of total time spent preparing mini-batches (Fig. 1's
+    /// 56–92% observation).
+    pub fn prep_fraction(&self) -> f64 {
+        let t = self.total_ns();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.prep_ns() / t
+        }
+    }
+}
+
+/// Modeled FLOP count of one mini-batch forward pass (gather-aggregate
+/// + dense transforms, per Table III's 3-layer models). Used to charge
+/// a modeled GPU compute time when the compute stage is skipped so
+/// end-to-end simulated totals exist for every configuration.
+pub fn model_flops(
+    model: crate::config::ModelKind,
+    mb: &crate::sampler::MiniBatch,
+    feat_dim: usize,
+    hidden: usize,
+    classes: usize,
+) -> f64 {
+    let l = mb.layers.len();
+    let mut flops = 0.0;
+    for (i, blk) in mb.layers.iter().enumerate() {
+        let d_in = if i == 0 { feat_dim } else { hidden };
+        let d_out = if i == l - 1 { classes } else { hidden };
+        // gather + masked aggregate
+        flops += (blk.n_dst * blk.k * d_in * 2) as f64;
+        // dense transform(s)
+        let mats = if model == crate::config::ModelKind::GraphSage { 2 } else { 1 };
+        flops += (blk.n_dst * d_in * d_out * 2 * mats) as f64;
+    }
+    flops
+}
+
+/// The single-process inference pipeline.
+pub struct InferenceEngine<'d> {
+    pub ds: &'d Dataset,
+    pub cfg: RunConfig,
+    pub prepared: PreparedSystem,
+    pub device: DeviceMemory,
+    compute: Compute,
+    rng: Rng,
+}
+
+impl<'d> InferenceEngine<'d> {
+    /// Build the device, run the system's preprocessing, claim cache
+    /// memory, and construct the compute backend.
+    pub fn prepare(ds: &'d Dataset, cfg: RunConfig) -> Result<InferenceEngine<'d>> {
+        let mut device = match cfg.device_capacity {
+            Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
+            None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
+        };
+        let mut rng = Rng::new(cfg.seed);
+        let prepared = baselines::prepare(ds, &cfg, &device, &cfg.cost, &mut rng)?;
+        device
+            .alloc(prepared.cache_bytes())
+            .context("cache fill exceeds simulated device memory")?;
+        let compute = Compute::build(
+            cfg.compute,
+            cfg.model,
+            ds.features.dim(),
+            cfg.hidden,
+            ds.spec.classes,
+            &cfg.artifacts_dir,
+        )?;
+        Ok(InferenceEngine { ds, cfg, prepared, device, compute, rng })
+    }
+
+    /// Build an engine around an externally prepared system (ablation
+    /// studies that hand-craft cache splits).
+    pub fn with_prepared(
+        ds: &'d Dataset,
+        cfg: RunConfig,
+        prepared: PreparedSystem,
+    ) -> Result<InferenceEngine<'d>> {
+        let mut device = match cfg.device_capacity {
+            Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
+            None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
+        };
+        device
+            .alloc(prepared.cache_bytes())
+            .context("cache fill exceeds simulated device memory")?;
+        let compute = Compute::build(
+            cfg.compute,
+            cfg.model,
+            ds.features.dim(),
+            cfg.hidden,
+            ds.spec.classes,
+            &cfg.artifacts_dir,
+        )?;
+        let rng = Rng::new(cfg.seed.wrapping_add(1));
+        Ok(InferenceEngine { ds, cfg, prepared, device, compute, rng })
+    }
+
+    /// Run inference over the full test set (or `max_batches`).
+    pub fn run(&mut self) -> Result<InferenceReport> {
+        // own the seed batches so `run_batches` can borrow self mutably
+        let owned: Vec<Vec<NodeId>> = match &self.prepared.batch_order {
+            Some((ordered, _)) => ordered.clone(),
+            None => seed_batches(&self.ds.test_nodes, self.cfg.batch_size)
+                .into_iter()
+                .map(|b| b.to_vec())
+                .collect(),
+        };
+        let views: Vec<&[NodeId]> = owned.iter().map(|b| b.as_slice()).collect();
+        self.run_batches(&views)
+    }
+
+    fn run_batches(&mut self, batches: &[&[NodeId]]) -> Result<InferenceReport> {
+        let n = self
+            .cfg
+            .max_batches
+            .map(|m| m.min(batches.len()))
+            .unwrap_or(batches.len());
+        let clusters: Option<&[usize]> =
+            self.prepared.batch_order.as_ref().map(|(_, c)| c.as_slice());
+
+        let mut sampler =
+            NeighborSampler::with_nodes(self.cfg.fanout.clone(), self.ds.csc.n_nodes());
+        let dim = self.ds.features.dim();
+        let row_bytes = self.ds.features.row_bytes();
+        let txns = row_txns(row_bytes, &self.cfg.cost);
+
+        let mut report = InferenceReport {
+            system: self.prepared.kind,
+            preprocess_ns: self.prepared.preprocess_ns,
+            sample: StageTimes::default(),
+            feature: StageTimes::default(),
+            compute: StageTimes::default(),
+            stats: CacheStats::new(),
+            n_batches: 0,
+            n_seeds: 0,
+            loaded_nodes: 0,
+            cache_bytes: self.prepared.cache_bytes(),
+            alloc: self.prepared.alloc,
+            oom: None,
+            logits_checksum: 0.0,
+        };
+
+        // RAIN stages the entire node-feature tensor in device memory to
+        // enable cross-batch reuse (the paper's Table V observes exactly
+        // this: a 52.96 GB allocation attempt on Ogbn-papers100M ≈
+        // 111M × 128 × 4 B). If it does not fit, RAIN fails up front.
+        let mut rain_claim = 0u64;
+        if self.prepared.inter_batch_reuse {
+            let need = self.ds.features.bytes_total();
+            if let Err(e) = self.device.alloc_unreserved(need) {
+                report.oom = Some(e.to_string());
+                return Ok(report);
+            }
+            rain_claim = need;
+        }
+        // previous batch's inputs (the LSH ordering makes consecutive
+        // batches similar; reuse rate = overlap with the previous batch)
+        let mut prev_inputs: HashSet<NodeId> = HashSet::new();
+        let _ = clusters; // cluster ids grouped the order at prepare time
+
+        let mut x: Vec<f32> = Vec::new();
+
+        for bi in 0..n {
+            let seeds = batches[bi];
+
+            // ---- stage 1: sampling -------------------------------------
+            let mut s_ledger = TransferLedger::new();
+            let t0 = Instant::now();
+            let mb = match &self.prepared.adj_cache {
+                Some(c) => sampler.sample_batch(
+                    &c.source(&self.ds.csc),
+                    seeds,
+                    &mut self.rng,
+                    &mut s_ledger,
+                ),
+                None => sampler.sample_batch(
+                    &UvaAdj { csc: &self.ds.csc },
+                    seeds,
+                    &mut self.rng,
+                    &mut s_ledger,
+                ),
+            };
+            report
+                .sample
+                .add(t0.elapsed().as_nanos() as f64, s_ledger.modeled_ns(&self.cfg.cost));
+            report.stats.sample.merge(&s_ledger);
+
+            // ---- stage 2: feature loading ------------------------------
+            let inputs = mb.input_nodes();
+            report.loaded_nodes += inputs.len() as u64;
+            x.clear();
+            x.resize(inputs.len() * dim, 0.0);
+            let mut f_ledger = TransferLedger::new();
+            f_ledger.launch();
+            let t0 = Instant::now();
+            if self.prepared.inter_batch_reuse {
+                // RAIN: rows resident from the previous batch are free
+                for (i, &v) in inputs.iter().enumerate() {
+                    let out = &mut x[i * dim..(i + 1) * dim];
+                    self.ds.features.copy_row_into(v, out);
+                    if prev_inputs.contains(&v) {
+                        f_ledger.hit(row_bytes);
+                    } else {
+                        f_ledger.miss(row_bytes, txns);
+                    }
+                }
+            } else if let Some(cache) = &self.prepared.feat_cache {
+                for (i, &v) in inputs.iter().enumerate() {
+                    let out = &mut x[i * dim..(i + 1) * dim];
+                    if let Some(row) = cache.lookup(v) {
+                        out.copy_from_slice(row);
+                        f_ledger.hit(row_bytes);
+                    } else {
+                        self.ds.features.copy_row_into(v, out);
+                        f_ledger.miss(row_bytes, txns);
+                    }
+                }
+            } else {
+                for (i, &v) in inputs.iter().enumerate() {
+                    self.ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
+                    f_ledger.miss(row_bytes, txns);
+                }
+            }
+            report
+                .feature
+                .add(t0.elapsed().as_nanos() as f64, f_ledger.modeled_ns(&self.cfg.cost));
+            report.stats.feature.merge(&f_ledger);
+
+            if self.prepared.inter_batch_reuse {
+                prev_inputs = inputs.iter().copied().collect();
+            }
+
+            // ---- stage 3: computation ----------------------------------
+            let mut c_ledger = TransferLedger::new();
+            c_ledger.launch();
+            // block tensors (idx + mask) upload
+            let block_bytes: u64 = mb
+                .layers
+                .iter()
+                .map(|b| (b.idx.len() * 4 + b.mask.len() * 4) as u64)
+                .sum();
+            c_ledger.upload(block_bytes);
+            let t0 = Instant::now();
+            let logits = self
+                .compute
+                .run(self.cfg.model, &x, dim, &mb)
+                .with_context(|| format!("compute failed on batch {bi}"))?;
+            let mut modeled = c_ledger.modeled_ns(&self.cfg.cost);
+            if matches!(self.compute, Compute::Skip) {
+                // charge the modeled GPU execution time instead
+                modeled += self.cfg.cost.compute_ns(model_flops(
+                    self.cfg.model, &mb, dim, self.cfg.hidden, self.ds.spec.classes,
+                ));
+            }
+            report
+                .compute
+                .add(t0.elapsed().as_nanos() as f64, modeled);
+            if let Some(l) = logits {
+                report.logits_checksum += l.iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+
+            report.n_batches += 1;
+            report.n_seeds += seeds.len();
+        }
+
+        // release RAIN's staged feature tensor
+        self.device.free(rain_claim);
+        Ok(report)
+    }
+}
+
+/// Output of a single served batch (the coordinator's unit of work).
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    pub logits: Option<Vec<f32>>,
+    pub sample: StageTimes,
+    pub feature: StageTimes,
+    pub compute: StageTimes,
+    pub n_inputs: usize,
+}
+
+impl<'d> InferenceEngine<'d> {
+    /// Serve one batch of seed nodes (the coordinator's request path).
+    /// RAIN's cluster-stateful mode is not servable this way.
+    pub fn infer_once(&mut self, seeds: &[NodeId]) -> Result<BatchOutput> {
+        anyhow::ensure!(
+            !self.prepared.inter_batch_reuse,
+            "RAIN's batch-stateful mode cannot serve ad-hoc requests"
+        );
+        let mut sampler =
+            NeighborSampler::with_nodes(self.cfg.fanout.clone(), self.ds.csc.n_nodes());
+        let dim = self.ds.features.dim();
+        let row_bytes = self.ds.features.row_bytes();
+        let txns = row_txns(row_bytes, &self.cfg.cost);
+
+        // sample
+        let mut s_ledger = TransferLedger::new();
+        let t0 = Instant::now();
+        let mb = match &self.prepared.adj_cache {
+            Some(c) => sampler.sample_batch(&c.source(&self.ds.csc), seeds,
+                                            &mut self.rng, &mut s_ledger),
+            None => sampler.sample_batch(&UvaAdj { csc: &self.ds.csc }, seeds,
+                                         &mut self.rng, &mut s_ledger),
+        };
+        let sample = StageTimes {
+            wall_ns: t0.elapsed().as_nanos() as f64,
+            modeled_ns: s_ledger.modeled_ns(&self.cfg.cost),
+        };
+
+        // gather
+        let inputs = mb.input_nodes();
+        let mut x = vec![0.0f32; inputs.len() * dim];
+        let mut f_ledger = TransferLedger::new();
+        f_ledger.launch();
+        let t0 = Instant::now();
+        if let Some(cache) = &self.prepared.feat_cache {
+            for (i, &v) in inputs.iter().enumerate() {
+                let out = &mut x[i * dim..(i + 1) * dim];
+                if let Some(row) = cache.lookup(v) {
+                    out.copy_from_slice(row);
+                    f_ledger.hit(row_bytes);
+                } else {
+                    self.ds.features.copy_row_into(v, out);
+                    f_ledger.miss(row_bytes, txns);
+                }
+            }
+        } else {
+            for (i, &v) in inputs.iter().enumerate() {
+                self.ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
+                f_ledger.miss(row_bytes, txns);
+            }
+        }
+        let feature = StageTimes {
+            wall_ns: t0.elapsed().as_nanos() as f64,
+            modeled_ns: f_ledger.modeled_ns(&self.cfg.cost),
+        };
+
+        // compute
+        let mut c_ledger = TransferLedger::new();
+        c_ledger.launch();
+        let block_bytes: u64 = mb
+            .layers
+            .iter()
+            .map(|b| (b.idx.len() * 4 + b.mask.len() * 4) as u64)
+            .sum();
+        c_ledger.upload(block_bytes);
+        let t0 = Instant::now();
+        let logits = self.compute.run(self.cfg.model, &x, dim, &mb)?;
+        let mut modeled = c_ledger.modeled_ns(&self.cfg.cost);
+        if matches!(self.compute, Compute::Skip) {
+            modeled += self.cfg.cost.compute_ns(model_flops(
+                self.cfg.model, &mb, dim, self.cfg.hidden, self.ds.spec.classes,
+            ));
+        }
+        let compute = StageTimes {
+            wall_ns: t0.elapsed().as_nanos() as f64,
+            modeled_ns: modeled,
+        };
+
+        Ok(BatchOutput { logits, sample, feature, compute, n_inputs: inputs.len() })
+    }
+}
+
+/// Convenience: build the dataset named by `cfg`, prepare, and run.
+pub fn run_config(cfg: &RunConfig) -> Result<InferenceReport> {
+    let ds = datasets::spec(&cfg.dataset)?.build();
+    let mut engine = InferenceEngine::prepare(&ds, cfg.clone())?;
+    engine.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ComputeKind;
+    use crate::sampler::Fanout;
+
+    fn tiny_cfg(system: SystemKind) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.system = system;
+        cfg.batch_size = 64;
+        cfg.fanout = Fanout::parse("3,2,2").unwrap();
+        cfg.budget = Some(300_000);
+        cfg.max_batches = Some(6);
+        cfg.compute = ComputeKind::Skip;
+        cfg
+    }
+
+    fn run(system: SystemKind) -> InferenceReport {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut e = InferenceEngine::prepare(&ds, tiny_cfg(system)).unwrap();
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn dgl_all_misses() {
+        let r = run(SystemKind::Dgl);
+        assert_eq!(r.n_batches, 6);
+        assert_eq!(r.stats.feature.hits, 0);
+        assert_eq!(r.stats.sample.hits, 0);
+        assert!(r.stats.feature.misses > 0);
+        assert_eq!(r.preprocess_ns, 0.0);
+        assert!(r.prep_fraction() > 0.9); // compute skipped
+    }
+
+    #[test]
+    fn dci_hits_both_caches_and_beats_dgl() {
+        let dgl = run(SystemKind::Dgl);
+        let dci = run(SystemKind::Dci);
+        assert!(dci.stats.feature.hits > 0, "feature cache must hit");
+        assert!(dci.stats.sample.hits > 0, "adjacency cache must hit");
+        // compare modeled transfer time: deterministic, and the quantity
+        // the caches actually optimize (wall noise on the tiny dataset
+        // can exceed the win)
+        let dci_m = dci.sample.modeled_ns + dci.feature.modeled_ns;
+        let dgl_m = dgl.sample.modeled_ns + dgl.feature.modeled_ns;
+        assert!(dci_m < dgl_m, "DCI modeled {dci_m:.0} should beat DGL {dgl_m:.0}");
+        assert!(dci.alloc.is_some());
+    }
+
+    #[test]
+    fn sci_beats_dgl_but_not_dci() {
+        let dgl = run(SystemKind::Dgl);
+        let sci = run(SystemKind::Sci);
+        let dci = run(SystemKind::Dci);
+        assert!(sci.stats.feature.hits > 0);
+        assert_eq!(sci.stats.sample.hits, 0, "SCI has no adjacency cache");
+        let m = |r: &InferenceReport| r.sample.modeled_ns + r.feature.modeled_ns;
+        assert!(m(&sci) < m(&dgl), "SCI {:.0} beats DGL {:.0}", m(&sci), m(&dgl));
+        assert!(m(&dci) < m(&sci),
+                "dual cache {:.0} beats single cache {:.0}", m(&dci), m(&sci));
+    }
+
+    #[test]
+    fn rain_reuses_across_batches() {
+        let r = run(SystemKind::Rain);
+        assert!(r.stats.feature.hits > 0, "inter-batch reuse should hit");
+        assert!(r.oom.is_none());
+        assert_eq!(r.n_batches, 6);
+    }
+
+    #[test]
+    fn rain_ooms_on_small_device() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut cfg = tiny_cfg(SystemKind::Rain);
+        cfg.max_batches = None;
+        cfg.device_capacity = Some(40_000); // ~500 rows of 64B + overhead
+        let mut e = InferenceEngine::prepare(&ds, cfg).unwrap();
+        let r = e.run().unwrap();
+        assert!(r.oom.is_some(), "expected simulated CUDA OOM");
+        assert!(r.oom.unwrap().contains("CUDA out of memory"));
+    }
+
+    #[test]
+    fn ducati_close_to_dci_steady_state() {
+        let dci = run(SystemKind::Dci);
+        let ducati = run(SystemKind::Ducati);
+        assert!(ducati.stats.feature.hits > 0);
+        // preprocessing gap is the point (Fig. 10); on `tiny` DUCATI's
+        // 8x profiling request is capped by the 15 available batches,
+        // so the honest ratio floor here is ~1.5x (full-size benches
+        // show the paper's 5-10x)
+        assert!(ducati.preprocess_ns > 1.4 * dci.preprocess_ns,
+                "DUCATI {:.0} vs DCI {:.0}", ducati.preprocess_ns, dci.preprocess_ns);
+    }
+
+    #[test]
+    fn reference_compute_runs_and_checksums() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut cfg = tiny_cfg(SystemKind::Dci);
+        cfg.compute = ComputeKind::Reference;
+        cfg.hidden = 16;
+        let mut e = InferenceEngine::prepare(&ds, cfg).unwrap();
+        let r = e.run().unwrap();
+        assert!(r.logits_checksum > 0.0);
+        assert!(r.compute.wall_ns > 0.0);
+        assert_eq!(r.n_seeds, 6 * 64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // sampling and adjacency caching are bit-deterministic; the
+        // Eq. (1) split depends on *measured* stage times (as in the
+        // paper), so the feature cache contents may wobble slightly —
+        // DGL (no time-dependent decisions) must be fully deterministic.
+        let a = run(SystemKind::Dci);
+        let b = run(SystemKind::Dci);
+        assert_eq!(a.loaded_nodes, b.loaded_nodes);
+        assert_eq!(a.stats.sample.hits, b.stats.sample.hits);
+        let da = run(SystemKind::Dgl);
+        let db = run(SystemKind::Dgl);
+        assert_eq!(da.loaded_nodes, db.loaded_nodes);
+        assert_eq!(da.stats.feature.misses, db.stats.feature.misses);
+    }
+
+    #[test]
+    fn run_config_convenience() {
+        let mut cfg = tiny_cfg(SystemKind::Dci);
+        cfg.max_batches = Some(2);
+        let r = run_config(&cfg).unwrap();
+        assert_eq!(r.n_batches, 2);
+    }
+}

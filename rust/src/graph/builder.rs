@@ -1,0 +1,98 @@
+//! COO edge list -> CSC conversion (counting sort; no per-edge allocs).
+
+use anyhow::{bail, Result};
+
+use super::csc::Csc;
+use super::NodeId;
+
+/// Build CSC over **destination columns** from `(src, dst)` edges:
+/// column `dst` collects `src` entries, i.e. in-neighbors of `dst`.
+/// Duplicate edges are kept (multigraph semantics, like DGL).
+pub fn csc_from_edges(n_nodes: usize, edges: &[(NodeId, NodeId)]) -> Result<Csc> {
+    let n = n_nodes as NodeId;
+    for &(s, d) in edges {
+        if s >= n || d >= n {
+            bail!("edge ({s},{d}) out of range for n={n}");
+        }
+    }
+    // counting sort by dst
+    let mut col_ptr = vec![0u64; n_nodes + 1];
+    for &(_, d) in edges {
+        col_ptr[d as usize + 1] += 1;
+    }
+    for i in 0..n_nodes {
+        col_ptr[i + 1] += col_ptr[i];
+    }
+    let mut cursor = col_ptr.clone();
+    let mut row_index = vec![0 as NodeId; edges.len()];
+    for &(s, d) in edges {
+        let slot = cursor[d as usize];
+        row_index[slot as usize] = s;
+        cursor[d as usize] += 1;
+    }
+    let csc = Csc { col_ptr, row_index, values: None };
+    debug_assert!(csc.validate().is_ok());
+    Ok(csc)
+}
+
+/// Build an undirected CSC (each edge inserted in both directions).
+pub fn csc_from_edges_undirected(
+    n_nodes: usize,
+    edges: &[(NodeId, NodeId)],
+) -> Result<Csc> {
+    let mut both = Vec::with_capacity(edges.len() * 2);
+    for &(s, d) in edges {
+        both.push((s, d));
+        if s != d {
+            both.push((d, s));
+        }
+    }
+    csc_from_edges(n_nodes, &both)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_build_matches_manual() {
+        // edges src->dst; column d holds in-neighbors
+        let edges = [(1, 0), (3, 0), (4, 0), (2, 1), (0, 2), (2, 2)];
+        let g = csc_from_edges(5, &edges).unwrap();
+        assert_eq!(g.neighbors(0), &[1, 3, 4]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[0, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn undirected_doubles_edges_but_not_self_loops() {
+        let g = csc_from_edges_undirected(3, &[(0, 1), (2, 2)]).unwrap();
+        assert_eq!(g.n_edges(), 3); // 0->1, 1->0, 2->2
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[2]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(csc_from_edges(2, &[(0, 5)]).is_err());
+        assert!(csc_from_edges(2, &[(5, 0)]).is_err());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let g = csc_from_edges(4, &[]).unwrap();
+        assert_eq!(g.n_edges(), 0);
+        assert_eq!(g.n_nodes(), 4);
+        let g = csc_from_edges(0, &[]).unwrap();
+        assert_eq!(g.n_nodes(), 0);
+    }
+
+    #[test]
+    fn duplicate_edges_kept() {
+        let g = csc_from_edges(2, &[(0, 1), (0, 1), (0, 1)]).unwrap();
+        assert_eq!(g.neighbors(1), &[0, 0, 0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Compressed sparse column adjacency (paper Fig. 4).
+//!
+//! Column `v` stores the **in-neighbors** of `v` — the set a
+//! neighbor-sampling step draws from (§II.C: "the sampling process
+//! requires fast access to the in-neighbours of the target node").
+//!
+//! Layout matches the paper: `col_ptr` (offsets, len n+1), `row_index`
+//! (neighbor ids), and optionally `values` (edge weights; absent for
+//! the unweighted benchmark graphs, in which case byte accounting
+//! counts only the two index arrays — DUCATI/DCI cache sizing uses
+//! [`Csc::bytes_total`]).
+
+use anyhow::{bail, Result};
+
+use super::NodeId;
+
+/// CSC adjacency matrix.
+#[derive(Debug, Clone)]
+pub struct Csc {
+    /// `col_ptr[v]..col_ptr[v+1]` spans `row_index` for node `v`. len n+1.
+    pub col_ptr: Vec<u64>,
+    /// In-neighbor ids, grouped per column.
+    pub row_index: Vec<NodeId>,
+    /// Optional edge values (paper Fig. 4 carries all-ones; benchmark
+    /// graphs omit them).
+    pub values: Option<Vec<f32>>,
+}
+
+impl Csc {
+    /// Number of nodes (columns).
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+
+    /// Number of stored edges.
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.row_index.len()
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        let v = v as usize;
+        (self.col_ptr[v + 1] - self.col_ptr[v]) as usize
+    }
+
+    /// In-neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        let v = v as usize;
+        &self.row_index[self.col_ptr[v] as usize..self.col_ptr[v + 1] as usize]
+    }
+
+    /// Host byte offset of `v`'s neighbor list start (for UVA cost
+    /// accounting).
+    #[inline]
+    pub fn neighbor_offset(&self, v: NodeId) -> u64 {
+        self.col_ptr[v as usize]
+    }
+
+    /// Total bytes of the CSC arrays — what Algorithm 1 line 1 computes
+    /// (`computeCSCVolume`).
+    pub fn bytes_total(&self) -> u64 {
+        let ptr = (self.col_ptr.len() * std::mem::size_of::<u64>()) as u64;
+        let idx = (self.row_index.len() * std::mem::size_of::<NodeId>()) as u64;
+        let val = self
+            .values
+            .as_ref()
+            .map(|v| (v.len() * std::mem::size_of::<f32>()) as u64)
+            .unwrap_or(0);
+        ptr + idx + val
+    }
+
+    /// Average in-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_nodes() == 0 {
+            0.0
+        } else {
+            self.n_edges() as f64 / self.n_nodes() as f64
+        }
+    }
+
+    /// Maximum in-degree (scan).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_nodes() as NodeId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural validation: monotone col_ptr, in-range row indices,
+    /// value length agreement.
+    pub fn validate(&self) -> Result<()> {
+        if self.col_ptr.is_empty() {
+            bail!("col_ptr must have at least one entry");
+        }
+        if self.col_ptr[0] != 0 {
+            bail!("col_ptr[0] must be 0");
+        }
+        if *self.col_ptr.last().unwrap() != self.row_index.len() as u64 {
+            bail!(
+                "col_ptr tail {} != row_index len {}",
+                self.col_ptr.last().unwrap(),
+                self.row_index.len()
+            );
+        }
+        for w in self.col_ptr.windows(2) {
+            if w[1] < w[0] {
+                bail!("col_ptr not monotone");
+            }
+        }
+        let n = self.n_nodes() as NodeId;
+        if let Some(bad) = self.row_index.iter().find(|&&r| r >= n) {
+            bail!("row index {bad} out of range (n={n})");
+        }
+        if let Some(values) = &self.values {
+            if values.len() != self.row_index.len() {
+                bail!("values len {} != nnz {}", values.len(), self.row_index.len());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact matrix of paper Fig. 4 (6 nodes, 9 edges).
+    pub fn fig4() -> Csc {
+        Csc {
+            col_ptr: vec![0, 3, 4, 6, 7, 8, 9],
+            row_index: vec![1, 3, 4, 2, 0, 2, 2, 0, 3],
+            values: Some(vec![1.0; 9]),
+        }
+    }
+
+    #[test]
+    fn fig4_shape() {
+        let g = fig4();
+        g.validate().unwrap();
+        assert_eq!(g.n_nodes(), 6);
+        assert_eq!(g.n_edges(), 9);
+        assert_eq!(g.neighbors(0), &[1, 3, 4]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[0, 2]);
+        assert_eq!(g.degree(5), 1);
+        assert_eq!(g.max_degree(), 3);
+        assert!((g.avg_degree() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_total_counts_all_arrays() {
+        let g = fig4();
+        // 7*8 (col_ptr) + 9*4 (row_index) + 9*4 (values)
+        assert_eq!(g.bytes_total(), 56 + 36 + 36);
+        let mut g2 = g.clone();
+        g2.values = None;
+        assert_eq!(g2.bytes_total(), 56 + 36);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = fig4();
+        g.col_ptr[2] = 1; // non-monotone vs col_ptr[1]=3
+        assert!(g.validate().is_err());
+
+        let mut g = fig4();
+        g.row_index[0] = 99;
+        assert!(g.validate().is_err());
+
+        let mut g = fig4();
+        g.values = Some(vec![1.0; 3]);
+        assert!(g.validate().is_err());
+
+        let mut g = fig4();
+        g.col_ptr[0] = 1;
+        assert!(g.validate().is_err());
+
+        let mut g = fig4();
+        *g.col_ptr.last_mut().unwrap() = 4;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csc { col_ptr: vec![0], row_index: vec![], values: None };
+        g.validate().unwrap();
+        assert_eq!(g.n_nodes(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

@@ -1,0 +1,203 @@
+//! CSR / COO sparse formats + conversions (§II.C of the paper surveys
+//! all three; CSC is the sampling format, but ingest pipelines deliver
+//! COO and some tooling wants CSR — a production system carries the
+//! conversions).
+
+use anyhow::{bail, Result};
+
+use super::csc::Csc;
+use super::NodeId;
+
+/// Coordinate-format edge list (src, dst per edge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub n_nodes: usize,
+    pub src: Vec<NodeId>,
+    pub dst: Vec<NodeId>,
+}
+
+impl Coo {
+    pub fn new(n_nodes: usize, edges: &[(NodeId, NodeId)]) -> Result<Coo> {
+        let n = n_nodes as NodeId;
+        for &(s, d) in edges {
+            if s >= n || d >= n {
+                bail!("edge ({s},{d}) out of range for n={n}");
+            }
+        }
+        Ok(Coo {
+            n_nodes,
+            src: edges.iter().map(|e| e.0).collect(),
+            dst: edges.iter().map(|e| e.1).collect(),
+        })
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// Compressed sparse row: row `v` holds the **out**-neighbors of `v`
+/// (the transpose view of our CSC).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub row_ptr: Vec<u64>,
+    pub col_index: Vec<NodeId>,
+}
+
+impl Csr {
+    pub fn n_nodes(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.col_index.len()
+    }
+
+    /// Out-neighbors of `v`.
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        let v = v as usize;
+        &self.col_index[self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize]
+    }
+}
+
+/// COO → CSC (counting sort over dst).
+pub fn coo_to_csc(coo: &Coo) -> Csc {
+    let mut col_ptr = vec![0u64; coo.n_nodes + 1];
+    for &d in &coo.dst {
+        col_ptr[d as usize + 1] += 1;
+    }
+    for i in 0..coo.n_nodes {
+        col_ptr[i + 1] += col_ptr[i];
+    }
+    let mut cursor = col_ptr.clone();
+    let mut row_index = vec![0 as NodeId; coo.n_edges()];
+    for (&s, &d) in coo.src.iter().zip(&coo.dst) {
+        row_index[cursor[d as usize] as usize] = s;
+        cursor[d as usize] += 1;
+    }
+    Csc { col_ptr, row_index, values: None }
+}
+
+/// COO → CSR (counting sort over src).
+pub fn coo_to_csr(coo: &Coo) -> Csr {
+    let mut row_ptr = vec![0u64; coo.n_nodes + 1];
+    for &s in &coo.src {
+        row_ptr[s as usize + 1] += 1;
+    }
+    for i in 0..coo.n_nodes {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut cursor = row_ptr.clone();
+    let mut col_index = vec![0 as NodeId; coo.n_edges()];
+    for (&s, &d) in coo.src.iter().zip(&coo.dst) {
+        col_index[cursor[s as usize] as usize] = d;
+        cursor[s as usize] += 1;
+    }
+    Csr { row_ptr, col_index }
+}
+
+/// CSC → COO (column expansion; edges come out grouped by dst).
+pub fn csc_to_coo(csc: &Csc) -> Coo {
+    let mut src = Vec::with_capacity(csc.n_edges());
+    let mut dst = Vec::with_capacity(csc.n_edges());
+    for v in 0..csc.n_nodes() as NodeId {
+        for &u in csc.neighbors(v) {
+            src.push(u);
+            dst.push(v);
+        }
+    }
+    Coo { n_nodes: csc.n_nodes(), src, dst }
+}
+
+/// CSC (in-neighbors) → CSR (out-neighbors): the transpose round trip.
+pub fn csc_to_csr(csc: &Csc) -> Csr {
+    coo_to_csr(&csc_to_coo(csc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{generate, GenKind};
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn fig4_edges() -> Vec<(NodeId, NodeId)> {
+        // (src, dst) pairs matching paper Fig. 4's CSC
+        vec![
+            (1, 0), (3, 0), (4, 0), (2, 1), (0, 2), (2, 2), (2, 3), (0, 4),
+            (3, 5),
+        ]
+    }
+
+    #[test]
+    fn coo_to_csc_matches_fig4() {
+        let coo = Coo::new(6, &fig4_edges()).unwrap();
+        let csc = coo_to_csc(&coo);
+        assert_eq!(csc.col_ptr, vec![0, 3, 4, 6, 7, 8, 9]);
+        assert_eq!(csc.row_index, vec![1, 3, 4, 2, 0, 2, 2, 0, 3]);
+        csc.validate().unwrap();
+    }
+
+    #[test]
+    fn csr_is_transpose() {
+        let coo = Coo::new(6, &fig4_edges()).unwrap();
+        let csr = coo_to_csr(&coo);
+        // node 2's out-neighbors: edges (2,1), (2,2), (2,3)
+        assert_eq!(csr.neighbors(2), &[1, 2, 3]);
+        // node 5 has no out-edges
+        assert_eq!(csr.neighbors(5), &[] as &[NodeId]);
+        assert_eq!(csr.n_edges(), 9);
+        assert_eq!(csr.n_nodes(), 6);
+    }
+
+    #[test]
+    fn coo_rejects_out_of_range() {
+        assert!(Coo::new(2, &[(0, 7)]).is_err());
+    }
+
+    #[test]
+    fn roundtrip_csc_coo_csc() {
+        let mut rng = Rng::new(11);
+        let g = generate(GenKind::PowerLaw { m: 4 }, 500, &mut rng);
+        let coo = csc_to_coo(&g);
+        assert_eq!(coo.n_edges(), g.n_edges());
+        let g2 = coo_to_csc(&coo);
+        assert_eq!(g.col_ptr, g2.col_ptr);
+        assert_eq!(g.row_index, g2.row_index);
+    }
+
+    #[test]
+    fn degree_conservation_property() {
+        check("csc->csr preserves edge multiset", 40, |rng| {
+            let n = 2 + rng.gen_usize(100);
+            let e = 1 + rng.gen_usize(4 * n);
+            let edges: Vec<(NodeId, NodeId)> = (0..e)
+                .map(|_| (rng.next_u32() % n as u32, rng.next_u32() % n as u32))
+                .collect();
+            let coo = Coo::new(n, &edges).unwrap();
+            let csc = coo_to_csc(&coo);
+            let csr = csc_to_csr(&csc);
+            // every (s, d) edge must appear in both views
+            let mut a: Vec<(NodeId, NodeId)> = Vec::new();
+            for v in 0..n as NodeId {
+                for &u in csc.neighbors(v) {
+                    a.push((u, v));
+                }
+            }
+            let mut b: Vec<(NodeId, NodeId)> = Vec::new();
+            for v in 0..n as NodeId {
+                for &u in csr.neighbors(v) {
+                    b.push((v, u));
+                }
+            }
+            a.sort_unstable();
+            b.sort_unstable();
+            let mut want = edges.clone();
+            want.sort_unstable();
+            if a != want || b != want {
+                return Err("edge multiset changed across formats".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Dataset registry: synthetic stand-ins for the paper's Table II.
+//!
+//! Scales are reduced (1/5 – 1/100 nodes) so the full benchmark suite
+//! runs on one CPU core; average degree, feature dim, class count, and
+//! test fraction match Table II so redundancy ratios (Table I) and
+//! cache behaviour reproduce. See DESIGN.md §Substitutions.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+use super::csc::Csc;
+use super::features::FeatureStore;
+use super::generator::{generate, GenKind};
+use super::NodeId;
+
+/// Static description of a (synthetic) dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Paper dataset this stands in for.
+    pub stands_in_for: &'static str,
+    pub n_nodes: usize,
+    pub gen: GenKind,
+    pub feat_dim: usize,
+    pub classes: usize,
+    /// Fraction of nodes forming the inference (test) set — Table II.
+    pub test_frac: f64,
+    /// Node-count scale vs. the paper's dataset (1/10 = 0.1). Used to
+    /// scale simulated device capacity and cache budgets so the paper's
+    /// GB-denominated sweeps map onto the stand-ins (DESIGN.md).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+/// A materialized dataset: graph + features + test node ids.
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub csc: Csc,
+    pub features: FeatureStore,
+    pub test_nodes: Vec<NodeId>,
+}
+
+/// All registered specs (name -> spec). Table II analogues + `tiny`
+/// (unit/integration tests) + `uniform-control` (ablation: no skew).
+pub fn registry() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "tiny",
+            stands_in_for: "(tests)",
+            n_nodes: 2_000,
+            gen: GenKind::PowerLaw { m: 4 },
+            feat_dim: 16,
+            classes: 4,
+            test_frac: 0.5,
+            scale: 1.0,
+            seed: 100,
+        },
+        DatasetSpec {
+            name: "reddit-sim",
+            stands_in_for: "Reddit (233k nodes, deg 50, F=602)",
+            n_nodes: 46_593, // 1/5 scale
+            gen: GenKind::PowerLaw { m: 25 },
+            feat_dim: 602,
+            classes: 41,
+            test_frac: 0.24,
+            scale: 0.2,
+            seed: 101,
+        },
+        DatasetSpec {
+            name: "yelp-sim",
+            stands_in_for: "Yelp (716k nodes, deg 10, F=300)",
+            n_nodes: 71_648, // 1/10 scale
+            gen: GenKind::PowerLaw { m: 5 },
+            feat_dim: 300,
+            classes: 100,
+            test_frac: 0.15,
+            scale: 0.1,
+            seed: 102,
+        },
+        DatasetSpec {
+            name: "amazon-sim",
+            stands_in_for: "Amazon (1.6M nodes, deg 83, F=200)",
+            n_nodes: 159_896, // 1/10 scale
+            gen: GenKind::PowerLaw { m: 41 },
+            feat_dim: 200,
+            classes: 107,
+            test_frac: 0.10,
+            scale: 0.1,
+            seed: 103,
+        },
+        DatasetSpec {
+            name: "products-sim",
+            stands_in_for: "Ogbn-products (2.4M nodes, deg 25, F=100)",
+            n_nodes: 244_903, // 1/10 scale
+            gen: GenKind::PowerLaw { m: 12 },
+            feat_dim: 100,
+            classes: 47,
+            test_frac: 0.90,
+            scale: 0.1,
+            seed: 104,
+        },
+        DatasetSpec {
+            name: "papers100m-sim",
+            stands_in_for: "Ogbn-papers100M (111M nodes, deg 29, F=128)",
+            n_nodes: 1_110_600, // 1/100 scale
+            gen: GenKind::Citation { m: 14 },
+            feat_dim: 128,
+            classes: 172,
+            test_frac: 0.14,
+            scale: 0.01,
+            seed: 105,
+        },
+        DatasetSpec {
+            name: "uniform-control",
+            stands_in_for: "(ablation: no power-law skew)",
+            n_nodes: 50_000,
+            gen: GenKind::Uniform { deg: 20 },
+            feat_dim: 100,
+            classes: 10,
+            test_frac: 0.5,
+            scale: 1.0,
+            seed: 106,
+        },
+    ]
+}
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Result<DatasetSpec> {
+    registry()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+            anyhow::anyhow!("unknown dataset {name:?}; known: {names:?}")
+        })
+}
+
+impl DatasetSpec {
+    /// Materialize the dataset (graph + features + test split).
+    /// Deterministic for a given spec.
+    pub fn build(&self) -> Dataset {
+        let mut rng = Rng::new(self.seed);
+        let csc = generate(self.gen, self.n_nodes, &mut rng);
+        let features = FeatureStore::generate(self.n_nodes, self.feat_dim, &mut rng);
+        let mut ids: Vec<NodeId> = (0..self.n_nodes as NodeId).collect();
+        rng.shuffle(&mut ids);
+        let n_test = ((self.n_nodes as f64) * self.test_frac).round() as usize;
+        let test_nodes = ids[..n_test.min(ids.len())].to_vec();
+        Dataset { spec: self.clone(), csc, features, test_nodes }
+    }
+
+    /// Materialize at a reduced node scale (bench -q modes). Scale in
+    /// (0, 1]; test split fraction is preserved.
+    pub fn build_scaled(&self, scale: f64) -> Result<Dataset> {
+        if !(0.0..=1.0).contains(&scale) || scale == 0.0 {
+            bail!("scale must be in (0, 1], got {scale}");
+        }
+        let mut spec = self.clone();
+        spec.n_nodes = ((self.n_nodes as f64 * scale) as usize).max(64);
+        Ok(spec.build())
+    }
+}
+
+impl Dataset {
+    /// Host bytes of adjacency + features (the "~70GB" style accounting
+    /// of the paper's intro, scaled).
+    pub fn host_bytes(&self) -> u64 {
+        self.csc.bytes_total() + self.features.bytes_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_consistent() {
+        let specs = registry();
+        assert!(specs.len() >= 7);
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), specs.len(), "duplicate dataset names");
+        for s in &specs {
+            assert!(s.feat_dim > 0 && s.classes > 0);
+            assert!((0.0..=1.0).contains(&s.test_frac));
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(spec("tiny").is_ok());
+        assert!(spec("products-sim").is_ok());
+        assert!(spec("ogbn-products").is_err());
+    }
+
+    #[test]
+    fn tiny_builds_and_matches_spec() {
+        let ds = spec("tiny").unwrap().build();
+        ds.csc.validate().unwrap();
+        assert_eq!(ds.csc.n_nodes(), 2_000);
+        assert_eq!(ds.features.n_nodes(), 2_000);
+        assert_eq!(ds.features.dim(), 16);
+        assert_eq!(ds.test_nodes.len(), 1_000);
+        // test ids unique and in-range
+        let mut t = ds.test_nodes.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), ds.test_nodes.len());
+        assert!(t.iter().all(|&v| (v as usize) < 2_000));
+        assert!(ds.host_bytes() > 0);
+    }
+
+    #[test]
+    fn build_deterministic() {
+        let s = spec("tiny").unwrap();
+        let a = s.build();
+        let b = s.build();
+        assert_eq!(a.csc.row_index, b.csc.row_index);
+        assert_eq!(a.test_nodes, b.test_nodes);
+    }
+
+    #[test]
+    fn build_scaled() {
+        let s = spec("products-sim").unwrap();
+        let ds = s.build_scaled(0.01).unwrap();
+        assert!(ds.csc.n_nodes() < 3000);
+        assert!(s.build_scaled(0.0).is_err());
+        assert!(s.build_scaled(1.5).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Host-side node feature store — the "compact 2D tensor" of §II.C.
+//!
+//! This is the array UVA reads reach into on a feature-cache miss; the
+//! DCI feature cache copies hot rows out of it into (simulated) device
+//! memory at fill time.
+
+use crate::util::Rng;
+
+use super::NodeId;
+
+/// Dense `[n_nodes, dim]` f32 feature matrix.
+#[derive(Debug, Clone)]
+pub struct FeatureStore {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl FeatureStore {
+    /// Deterministic pseudo-random features (unit-ish scale). Uses a
+    /// per-element mix of a seeded stream so generation is O(n*dim) with
+    /// no branch-heavy RNG in the loop.
+    pub fn generate(n_nodes: usize, dim: usize, rng: &mut Rng) -> Self {
+        assert!(dim > 0, "feature dim must be positive");
+        let seed = rng.next_u64();
+        let mut data = Vec::with_capacity(n_nodes * dim);
+        let mut state = seed | 1;
+        for _ in 0..n_nodes * dim {
+            // xorshift64* — fast, good enough for feature payloads
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let bits = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            let unit = (bits >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+            data.push(unit * 2.0 - 1.0);
+        }
+        FeatureStore { dim, data }
+    }
+
+    /// Zero-filled store (tests).
+    pub fn zeros(n_nodes: usize, dim: usize) -> Self {
+        FeatureStore { dim, data: vec![0.0; n_nodes * dim] }
+    }
+
+    /// Wrap an existing row-major buffer (dataset deserialization).
+    pub fn from_raw(data: Vec<f32>, dim: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(dim > 0, "feature dim must be positive");
+        anyhow::ensure!(
+            data.len() % dim == 0,
+            "feature buffer len {} not divisible by dim {dim}",
+            data.len()
+        );
+        Ok(FeatureStore { dim, data })
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// Bytes of one row — the unit of feature-cache accounting.
+    #[inline]
+    pub fn row_bytes(&self) -> u64 {
+        (self.dim * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Total host bytes.
+    pub fn bytes_total(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Row view for node `v`.
+    #[inline]
+    pub fn row(&self, v: NodeId) -> &[f32] {
+        let i = v as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    /// Copy node `v`'s row into `out` (the UVA / cache-fill data path).
+    #[inline]
+    pub fn copy_row_into(&self, v: NodeId, out: &mut [f32]) {
+        out.copy_from_slice(self.row(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bytes() {
+        let fs = FeatureStore::generate(10, 7, &mut Rng::new(1));
+        assert_eq!(fs.n_nodes(), 10);
+        assert_eq!(fs.dim(), 7);
+        assert_eq!(fs.row_bytes(), 28);
+        assert_eq!(fs.bytes_total(), 280);
+        assert_eq!(fs.row(3).len(), 7);
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let a = FeatureStore::generate(50, 4, &mut Rng::new(2));
+        let b = FeatureStore::generate(50, 4, &mut Rng::new(2));
+        assert_eq!(a.data, b.data);
+        assert!(a.data.iter().all(|x| (-1.0..=1.0).contains(x)));
+        // values actually vary
+        let distinct: std::collections::HashSet<u32> =
+            a.data.iter().map(|x| x.to_bits()).collect();
+        assert!(distinct.len() > 100);
+    }
+
+    #[test]
+    fn copy_row_matches_view() {
+        let fs = FeatureStore::generate(5, 3, &mut Rng::new(3));
+        let mut buf = [0.0f32; 3];
+        fs.copy_row_into(4, &mut buf);
+        assert_eq!(&buf, fs.row(4));
+    }
+
+    #[test]
+    fn zeros() {
+        let fs = FeatureStore::zeros(4, 2);
+        assert!(fs.row(2).iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,210 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets (Table II) are real graphs; this repo substitutes
+//! deterministic synthetic stand-ins (DESIGN.md §Substitutions). What DCI
+//! exploits is (a) the power-law visit/degree skew and (b) cross-batch
+//! redundancy — both are produced by preferential attachment and R-MAT.
+
+use crate::util::Rng;
+
+use super::builder::{csc_from_edges, csc_from_edges_undirected};
+use super::csc::Csc;
+use super::NodeId;
+
+/// Generator family for a synthetic dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GenKind {
+    /// Barabási–Albert preferential attachment; `m` edges per new node;
+    /// undirected (avg degree ≈ 2m). Power-law degree distribution.
+    PowerLaw { m: u32 },
+    /// Directed preferential attachment (citation-style): each node
+    /// "cites" `m` earlier nodes; in-degrees are power-law.
+    Citation { m: u32 },
+    /// R-MAT recursive quadrants (Graph500-style skew), undirected.
+    RMat { edges_per_node: u32 },
+    /// Uniform-random regular-ish graph (control case, no skew).
+    Uniform { deg: u32 },
+}
+
+/// Generate a graph with `n` nodes.
+pub fn generate(kind: GenKind, n: usize, rng: &mut Rng) -> Csc {
+    match kind {
+        GenKind::PowerLaw { m } => preferential(n, m as usize, false, rng),
+        GenKind::Citation { m } => preferential(n, m as usize, true, rng),
+        GenKind::RMat { edges_per_node } => rmat(n, edges_per_node as usize, rng),
+        GenKind::Uniform { deg } => uniform(n, deg as usize, rng),
+    }
+}
+
+/// Preferential attachment via an endpoint pool: sampling a uniform
+/// element of the pool is sampling proportional-to-degree. O(E).
+fn preferential(n: usize, m: usize, directed: bool, rng: &mut Rng) -> Csc {
+    assert!(n >= 2, "need at least 2 nodes");
+    let m = m.max(1);
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::with_capacity(n * m);
+    // endpoint pool seeded with a small clique-ish core
+    let core = (m + 1).min(n);
+    let mut pool: Vec<NodeId> = Vec::with_capacity(2 * n * m);
+    for v in 0..core {
+        for u in 0..v {
+            edges.push((v as NodeId, u as NodeId));
+            pool.push(v as NodeId);
+            pool.push(u as NodeId);
+        }
+    }
+    if pool.is_empty() {
+        // degenerate core (m+1 <= 1); seed with node 0
+        pool.push(0);
+    }
+    for v in core..n {
+        for _ in 0..m {
+            let t = pool[rng.gen_usize(pool.len())];
+            let t = if t == v as NodeId {
+                // avoid self loop: redirect to a uniform node
+                rng.gen_range(v as u64) as NodeId
+            } else {
+                t
+            };
+            edges.push((v as NodeId, t));
+            pool.push(v as NodeId);
+            pool.push(t);
+        }
+    }
+    if directed {
+        // citation: v cites t, so t's in-neighbors include v
+        csc_from_edges(n, &edges).expect("generated edges in range")
+    } else {
+        csc_from_edges_undirected(n, &edges).expect("generated edges in range")
+    }
+}
+
+/// R-MAT with the classic (0.57, 0.19, 0.19, 0.05) quadrant weights.
+fn rmat(n: usize, epn: usize, rng: &mut Rng) -> Csc {
+    assert!(n >= 2);
+    let levels = (usize::BITS - (n - 1).leading_zeros()) as usize; // ceil(log2 n)
+    let n_edges = n * epn.max(1);
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut edges = Vec::with_capacity(n_edges);
+    while edges.len() < n_edges {
+        let (mut x, mut y) = (0usize, 0usize);
+        for lvl in (0..levels).rev() {
+            let r = rng.f64();
+            let (dx, dy) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            x |= dx << lvl;
+            y |= dy << lvl;
+        }
+        if x < n && y < n && x != y {
+            edges.push((x as NodeId, y as NodeId));
+        }
+    }
+    csc_from_edges_undirected(n, &edges).expect("generated edges in range")
+}
+
+/// Uniform random graph: each node draws `deg` uniform neighbors.
+fn uniform(n: usize, deg: usize, rng: &mut Rng) -> Csc {
+    assert!(n >= 2);
+    let mut edges = Vec::with_capacity(n * deg);
+    for v in 0..n as NodeId {
+        for _ in 0..deg {
+            let mut u = rng.gen_range(n as u64 - 1) as NodeId;
+            if u >= v {
+                u += 1; // skip self
+            }
+            edges.push((v, u));
+        }
+    }
+    csc_from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Gini coefficient of the in-degree distribution — used by tests to
+/// assert that power-law generators actually produce skew and the
+/// uniform control does not.
+pub fn degree_gini(g: &Csc) -> f64 {
+    let mut degs: Vec<f64> = (0..g.n_nodes() as NodeId)
+        .map(|v| g.degree(v) as f64)
+        .collect();
+    degs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = degs.len() as f64;
+    let sum: f64 = degs.iter().sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = degs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (i as f64 + 1.0) * d)
+        .sum();
+    (2.0 * weighted) / (n * sum) - (n + 1.0) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn powerlaw_shape() {
+        let mut rng = Rng::new(1);
+        let g = generate(GenKind::PowerLaw { m: 5 }, 2000, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(g.n_nodes(), 2000);
+        let avg = g.avg_degree();
+        assert!((8.0..12.0).contains(&avg), "avg degree {avg}");
+        // heavy tail: max degree far above mean
+        assert!(g.max_degree() as f64 > 5.0 * avg);
+        assert!(degree_gini(&g) > 0.3, "gini {}", degree_gini(&g));
+    }
+
+    #[test]
+    fn citation_is_directed_and_skewed() {
+        let mut rng = Rng::new(2);
+        let g = generate(GenKind::Citation { m: 4 }, 3000, &mut rng);
+        g.validate().unwrap();
+        // directed: edge count ≈ n*m (no doubling)
+        assert!(g.n_edges() < 3000 * 5);
+        assert!(degree_gini(&g) > 0.4);
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let mut rng = Rng::new(3);
+        let g = generate(GenKind::RMat { edges_per_node: 8 }, 1 << 11, &mut rng);
+        g.validate().unwrap();
+        assert!((12.0..20.0).contains(&g.avg_degree()), "{}", g.avg_degree());
+        assert!(degree_gini(&g) > 0.3);
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let mut rng = Rng::new(4);
+        let g = generate(GenKind::Uniform { deg: 10 }, 2000, &mut rng);
+        g.validate().unwrap();
+        assert!((g.avg_degree() - 10.0).abs() < 0.5);
+        assert!(degree_gini(&g) < 0.25, "gini {}", degree_gini(&g));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g1 = generate(GenKind::PowerLaw { m: 3 }, 500, &mut Rng::new(9));
+        let g2 = generate(GenKind::PowerLaw { m: 3 }, 500, &mut Rng::new(9));
+        assert_eq!(g1.row_index, g2.row_index);
+        let g3 = generate(GenKind::PowerLaw { m: 3 }, 500, &mut Rng::new(10));
+        assert_ne!(g1.row_index, g3.row_index);
+    }
+
+    #[test]
+    fn no_self_loops_powerlaw() {
+        let mut rng = Rng::new(5);
+        let g = generate(GenKind::PowerLaw { m: 3 }, 800, &mut rng);
+        for v in 0..g.n_nodes() as NodeId {
+            assert!(!g.neighbors(v).contains(&v), "self loop at {v}");
+        }
+    }
+}

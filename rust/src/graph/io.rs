@@ -1,0 +1,240 @@
+//! Binary dataset serialization: build once, reuse across bench
+//! processes (`dci generate` → `.dci` files). Little-endian, versioned,
+//! checksummed — the boring-but-necessary part of a deployable system.
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic "DCIGRAPH" | u32 version | u32 feat_dim | u64 n_nodes | u64 n_edges
+//! | u64 n_test | col_ptr[u64; n+1] | row_index[u32; e]
+//! | features[f32; n*dim] | test_nodes[u32; n_test] | u64 fnv1a-checksum
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csc::Csc;
+use super::datasets::{Dataset, DatasetSpec};
+use super::features::FeatureStore;
+use super::generator::GenKind;
+use super::NodeId;
+
+const MAGIC: &[u8; 8] = b"DCIGRAPH";
+const VERSION: u32 = 1;
+
+/// Streaming FNV-1a over everything written/read (cheap corruption check).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+fn w_bytes<W: Write>(w: &mut W, h: &mut Fnv, b: &[u8]) -> Result<()> {
+    h.update(b);
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn w_u32<W: Write>(w: &mut W, h: &mut Fnv, x: u32) -> Result<()> {
+    w_bytes(w, h, &x.to_le_bytes())
+}
+
+fn w_u64<W: Write>(w: &mut W, h: &mut Fnv, x: u64) -> Result<()> {
+    w_bytes(w, h, &x.to_le_bytes())
+}
+
+fn r_bytes<R: Read>(r: &mut R, h: &mut Fnv, buf: &mut [u8]) -> Result<()> {
+    r.read_exact(buf)?;
+    h.update(buf);
+    Ok(())
+}
+
+fn r_u32<R: Read>(r: &mut R, h: &mut Fnv) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r_bytes(r, h, &mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64<R: Read>(r: &mut R, h: &mut Fnv) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r_bytes(r, h, &mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Serialize a dataset (graph + features + test split) to `path`.
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    let mut h = Fnv::new();
+
+    w_bytes(&mut w, &mut h, MAGIC)?;
+    w_u32(&mut w, &mut h, VERSION)?;
+    w_u32(&mut w, &mut h, ds.features.dim() as u32)?;
+    w_u64(&mut w, &mut h, ds.csc.n_nodes() as u64)?;
+    w_u64(&mut w, &mut h, ds.csc.n_edges() as u64)?;
+    w_u64(&mut w, &mut h, ds.test_nodes.len() as u64)?;
+
+    for &x in &ds.csc.col_ptr {
+        w_u64(&mut w, &mut h, x)?;
+    }
+    // bulk-write index/feature payloads
+    let idx_bytes: Vec<u8> =
+        ds.csc.row_index.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w_bytes(&mut w, &mut h, &idx_bytes)?;
+    for v in 0..ds.features.n_nodes() as NodeId {
+        let row = ds.features.row(v);
+        let bytes: Vec<u8> = row.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w_bytes(&mut w, &mut h, &bytes)?;
+    }
+    let test_bytes: Vec<u8> =
+        ds.test_nodes.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w_bytes(&mut w, &mut h, &test_bytes)?;
+
+    let digest = h.0;
+    w.write_all(&digest.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset written by [`save`]. The spec metadata (name, scale)
+/// is supplied by the caller since the file stores only the payload.
+pub fn load(path: impl AsRef<Path>, spec: DatasetSpec) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut h = Fnv::new();
+
+    let mut magic = [0u8; 8];
+    r_bytes(&mut r, &mut h, &mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a DCI graph file (bad magic)");
+    }
+    let version = r_u32(&mut r, &mut h)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let dim = r_u32(&mut r, &mut h)? as usize;
+    let n_nodes = r_u64(&mut r, &mut h)? as usize;
+    let n_edges = r_u64(&mut r, &mut h)? as usize;
+    let n_test = r_u64(&mut r, &mut h)? as usize;
+
+    let mut col_ptr = Vec::with_capacity(n_nodes + 1);
+    for _ in 0..=n_nodes {
+        col_ptr.push(r_u64(&mut r, &mut h)?);
+    }
+    let mut idx_bytes = vec![0u8; n_edges * 4];
+    r_bytes(&mut r, &mut h, &mut idx_bytes)?;
+    let row_index: Vec<NodeId> = idx_bytes
+        .chunks_exact(4)
+        .map(|c| NodeId::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut feat_bytes = vec![0u8; n_nodes * dim * 4];
+    r_bytes(&mut r, &mut h, &mut feat_bytes)?;
+    let data: Vec<f32> = feat_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut test_bytes = vec![0u8; n_test * 4];
+    r_bytes(&mut r, &mut h, &mut test_bytes)?;
+    let test_nodes: Vec<NodeId> = test_bytes
+        .chunks_exact(4)
+        .map(|c| NodeId::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let want = h.0;
+    let mut tail = [0u8; 8];
+    r.read_exact(&mut tail)?;
+    let got = u64::from_le_bytes(tail);
+    if got != want {
+        bail!("checksum mismatch: file corrupt");
+    }
+
+    let csc = Csc { col_ptr, row_index, values: None };
+    csc.validate().map_err(|e| anyhow::anyhow!("invalid graph payload: {e}"))?;
+    let features = FeatureStore::from_raw(data, dim)?;
+    Ok(Dataset { spec, csc, features, test_nodes })
+}
+
+/// A spec for externally loaded files (metadata defaults).
+pub fn loaded_spec(name: &'static str, n_nodes: usize, feat_dim: usize) -> DatasetSpec {
+    DatasetSpec {
+        name,
+        stands_in_for: "(loaded from file)",
+        n_nodes,
+        gen: GenKind::Uniform { deg: 0 },
+        feat_dim,
+        classes: 2,
+        test_frac: 0.0,
+        scale: 1.0,
+        seed: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dci-io-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_tiny() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let path = tmp("roundtrip");
+        save(&ds, &path).unwrap();
+        let loaded = load(&path, ds.spec.clone()).unwrap();
+        assert_eq!(loaded.csc.col_ptr, ds.csc.col_ptr);
+        assert_eq!(loaded.csc.row_index, ds.csc.row_index);
+        assert_eq!(loaded.test_nodes, ds.test_nodes);
+        assert_eq!(loaded.features.dim(), ds.features.dim());
+        for v in [0u32, 7, 1999] {
+            assert_eq!(loaded.features.row(v), ds.features.row(v));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let path = tmp("corrupt");
+        save(&ds, &path).unwrap();
+        // flip one payload byte
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = match load(&path, ds.spec.clone()) {
+            Ok(_) => panic!("corrupted file loaded successfully"),
+            Err(e) => e.to_string(),
+        };
+        assert!(
+            err.contains("checksum") || err.contains("invalid"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTAGRAPHFILE___").unwrap();
+        let spec = loaded_spec("x", 0, 1);
+        assert!(load(&path, spec).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

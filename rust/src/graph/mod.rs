@@ -1,0 +1,18 @@
+//! Graph substrate: CSC adjacency storage (§II.C of the paper),
+//! builders, synthetic generators, the Table-II dataset stand-ins, and
+//! the host-side node feature store.
+
+pub mod builder;
+pub mod csc;
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod generator;
+pub mod io;
+
+pub use csc::Csc;
+pub use datasets::{Dataset, DatasetSpec};
+pub use features::FeatureStore;
+
+/// Node identifier. All graphs here fit u32 (papers100m-sim included).
+pub type NodeId = u32;

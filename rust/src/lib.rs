@@ -1,0 +1,36 @@
+//! # DCI — workload-aware dual-cache GNN inference acceleration
+//!
+//! Reproduction of *"DCI: A Coordinated Allocation and Filling
+//! Workload-Aware Dual-Cache Allocation GNN Inference Acceleration
+//! System"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the paper's contribution — CSC graph store,
+//!   fan-out neighbor sampler, pre-sampling profiler, the workload-aware
+//!   dual-cache allocator (Eq. 1) and lightweight fillers (Algorithm 1),
+//!   the DGL/SCI/RAIN/DUCATI baselines, a serving coordinator, and a
+//!   simulated GPU memory + UVA transfer cost model (see DESIGN.md
+//!   §Substitutions).
+//! - **L2/L1 (python/compile)**: GraphSAGE/GCN forward over padded
+//!   mini-batch blocks calling a Pallas gather+aggregate kernel, lowered
+//!   once to HLO text artifacts.
+//! - **Runtime** ([`runtime`]): loads the artifacts through the `xla`
+//!   crate's PJRT CPU client; Python is never on the request path.
+//!
+//! Start with [`engine::InferenceEngine`] (single-process pipeline) or
+//! [`coordinator::Server`] (request router + dynamic batcher).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod mem;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+
+pub use config::RunConfig;
+pub use engine::InferenceEngine;
+

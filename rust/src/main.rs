@@ -1,0 +1,284 @@
+//! `dci` — the leader binary.
+//!
+//! ```text
+//! dci infer   [key=value ...]   run one inference configuration, print the report
+//! dci serve   [key=value ...]   start the serving coordinator + synthetic clients
+//! dci presample [key=value ...] show the pre-sampling profile + Eq.(1) split
+//! dci datasets                  list registered datasets
+//! dci inspect [dataset=NAME]    dataset statistics
+//! ```
+//!
+//! Config keys are shared with the bench harness — see
+//! `rust/src/config.rs` (`dataset=`, `model=`, `fanout=`, `bs=`,
+//! `system=`, `budget=`, `compute=`, ...) plus per-command extras
+//! documented below.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use dci::config::RunConfig;
+use dci::coordinator::{BatcherConfig, Server, ServerConfig};
+use dci::engine::run_config;
+use dci::graph::datasets;
+use dci::mem::DeviceMemory;
+use dci::sampler::presample;
+use dci::util::{format_bytes, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "infer" => cmd_infer(rest),
+        "serve" => cmd_serve(rest),
+        "presample" => cmd_presample(rest),
+        "datasets" => cmd_datasets(),
+        "inspect" => cmd_inspect(rest),
+        "generate" => cmd_generate(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `dci help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dci — workload-aware dual-cache GNN inference\n\n\
+         commands:\n\
+         \x20 infer     [key=value ...]  run one configuration, print stage report\n\
+         \x20 serve     [key=value ...]  serving coordinator + synthetic clients\n\
+         \x20 presample [key=value ...]  pre-sampling profile + Eq.(1) split\n\
+         \x20 datasets                   list datasets\n\
+         \x20 inspect   [dataset=NAME]   dataset statistics\n\
+         \x20 generate  dataset=NAME out=FILE   materialize + serialize a dataset\n\n\
+         common keys: dataset= model= fanout= bs= system= budget= presample=\n\
+         \x20            compute= max-batches= device= seed= artifacts=\n\
+         serve keys:  workers= requests= req-size= batch-wait-ms="
+    );
+}
+
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    println!("running: {}", cfg.summary());
+    let report = run_config(&cfg)?;
+    println!("\n== report ({}) ==", report.system.as_str());
+    if let Some(oom) = &report.oom {
+        println!("!! aborted after {} batches: {oom}", report.n_batches);
+        return Ok(());
+    }
+    println!(
+        "batches={} seeds={} loaded-nodes={} (x{:.1} redundancy)",
+        report.n_batches,
+        report.n_seeds,
+        report.loaded_nodes,
+        report.loaded_nodes as f64 / report.n_seeds.max(1) as f64
+    );
+    if let Some(a) = report.alloc {
+        println!(
+            "cache split: adj={} feat={} (used {})",
+            format_bytes(a.c_adj),
+            format_bytes(a.c_feat),
+            format_bytes(report.cache_bytes)
+        );
+    }
+    let t = report.total_ns();
+    let pct = |x: f64| 100.0 * x / t.max(1.0);
+    println!(
+        "preprocess {:9.1}ms  (excluded from total, as in §V.B)",
+        report.preprocess_ns / 1e6
+    );
+    println!(
+        "sampling   {:9.1}ms  ({:4.1}%)  hit-ratio {:.3}",
+        report.sample.total_ns() / 1e6,
+        pct(report.sample.total_ns()),
+        report.stats.adj_hit_ratio()
+    );
+    println!(
+        "loading    {:9.1}ms  ({:4.1}%)  hit-ratio {:.3}",
+        report.feature.total_ns() / 1e6,
+        pct(report.feature.total_ns()),
+        report.stats.feat_hit_ratio()
+    );
+    println!(
+        "compute    {:9.1}ms  ({:4.1}%)",
+        report.compute.total_ns() / 1e6,
+        pct(report.compute.total_ns())
+    );
+    println!("total      {:9.1}ms  (prep fraction {:.1}%)",
+             t / 1e6, 100.0 * report.prep_fraction());
+    if report.logits_checksum > 0.0 {
+        println!("logits checksum {:.3e}", report.logits_checksum);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    // split serve-specific keys from engine config keys
+    let mut n_workers = 1usize;
+    let mut n_requests = 200usize;
+    let mut req_size = 16usize;
+    let mut batch_wait_ms = 5u64;
+    let mut cfg_args = Vec::new();
+    for a in args {
+        match a.split_once('=') {
+            Some(("workers", v)) => n_workers = v.parse()?,
+            Some(("requests", v)) => n_requests = v.parse()?,
+            Some(("req-size", v)) => req_size = v.parse()?,
+            Some(("batch-wait-ms", v)) => batch_wait_ms = v.parse()?,
+            _ => cfg_args.push(a.clone()),
+        }
+    }
+    let cfg = RunConfig::from_args(&cfg_args)?;
+    println!("serving: {} workers={} requests={} req-size={}",
+             cfg.summary(), n_workers, n_requests, req_size);
+
+    let ds = Arc::new(datasets::spec(&cfg.dataset)?.build());
+    let server = Server::start(
+        Arc::clone(&ds),
+        cfg.clone(),
+        ServerConfig {
+            n_workers,
+            batcher: BatcherConfig {
+                batch_size: cfg.batch_size,
+                max_wait: Duration::from_millis(batch_wait_ms),
+            },
+            policy: dci::coordinator::router::RoutePolicy::RoundRobin,
+            admission: dci::coordinator::AdmissionConfig::default(),
+        },
+    )?;
+
+    // synthetic client: random test-node requests
+    let mut rng = Rng::new(cfg.seed ^ 0xC11E17);
+    let mut rxs = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let nodes: Vec<u32> = (0..req_size)
+            .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
+            .collect();
+        rxs.push(server.submit(nodes)?);
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow::anyhow!("response timed out"))?;
+    }
+    let (metrics, elapsed) = server.shutdown()?;
+    println!("\n== serving metrics ==\n{}", metrics.report(elapsed));
+    Ok(())
+}
+
+fn cmd_presample(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let ds = datasets::spec(&cfg.dataset)?.build();
+    let mut rng = Rng::new(cfg.seed);
+    let stats = presample(
+        &ds.csc,
+        &ds.features,
+        &ds.test_nodes,
+        cfg.batch_size,
+        &cfg.fanout,
+        cfg.n_presample,
+        &cfg.cost,
+        &mut rng,
+    );
+    let device = match cfg.device_capacity {
+        Some(cap) => DeviceMemory::new(cap, cap / 24),
+        None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
+    };
+    let total = cfg.budget.unwrap_or_else(|| {
+        dci::baselines::auto_budget(&device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale)
+    });
+    let split = dci::cache::allocate(total, &stats);
+    println!("pre-sampled {} batches in {:.1}ms wall", stats.n_batches,
+             stats.wall_ns / 1e6);
+    println!(
+        "t_sample={:.1}ms t_feature={:.1}ms -> sampling fraction {:.3}",
+        stats.t_sample_ns / 1e6,
+        stats.t_feature_ns / 1e6,
+        stats.sample_fraction()
+    );
+    println!(
+        "peak batch inputs={} loaded-nodes={} avg-visits={:.2}",
+        stats.max_input_nodes, stats.loaded_nodes, stats.avg_node_visits()
+    );
+    println!(
+        "budget {} -> Eq.(1): C_adj={} C_feat={}",
+        format_bytes(total),
+        format_bytes(split.c_adj),
+        format_bytes(split.c_feat)
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let mut name = "products-sim".to_string();
+    let mut out = None;
+    for a in args {
+        match a.split_once('=') {
+            Some(("dataset", v)) => name = v.to_string(),
+            Some(("out", v)) => out = Some(v.to_string()),
+            _ => bail!("generate takes dataset= and out= (got {a:?})"),
+        }
+    }
+    let out = out.unwrap_or_else(|| format!("{name}.dci"));
+    let spec = datasets::spec(&name)?;
+    println!("building {name} ({} nodes)...", spec.n_nodes);
+    let ds = spec.build();
+    dci::graph::io::save(&ds, &out)?;
+    let meta = std::fs::metadata(&out)?;
+    println!("wrote {out} ({})", format_bytes(meta.len()));
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<18} {:>10} {:>9} {:>6} {:>8} {:>6}  stands in for",
+             "name", "nodes", "avg-deg", "feat", "classes", "scale");
+    for spec in datasets::registry() {
+        println!(
+            "{:<18} {:>10} {:>9} {:>6} {:>8} {:>6}  {}",
+            spec.name,
+            spec.n_nodes,
+            format!("{:?}", spec.gen).chars().take(9).collect::<String>(),
+            spec.feat_dim,
+            spec.classes,
+            spec.scale,
+            spec.stands_in_for
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let mut name = "products-sim".to_string();
+    for a in args {
+        if let Some(("dataset", v)) = a.split_once('=') {
+            name = v.to_string();
+        }
+    }
+    let spec = datasets::spec(&name)?;
+    println!("building {name}...");
+    let ds = spec.build();
+    println!("nodes={} edges={} avg-deg={:.1} max-deg={}",
+             ds.csc.n_nodes(), ds.csc.n_edges(), ds.csc.avg_degree(),
+             ds.csc.max_degree());
+    println!("features: dim={} total={}", ds.features.dim(),
+             format_bytes(ds.features.bytes_total()));
+    println!("adjacency: {}", format_bytes(ds.csc.bytes_total()));
+    println!("test nodes: {}", ds.test_nodes.len());
+    println!("degree gini: {:.3}", dci::graph::generator::degree_gini(&ds.csc));
+    println!("simulated device: {}",
+             format_bytes(DeviceMemory::rtx4090_scaled(spec.scale).capacity()));
+    Ok(())
+}

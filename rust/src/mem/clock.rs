@@ -1,0 +1,142 @@
+//! Transfer ledger: per-stage byte/transaction accounting that the cost
+//! model converts into modeled time.
+//!
+//! Cache implementations record *what moved where* (device bytes vs.
+//! PCIe bytes vs. UVA transactions); [`TransferLedger::modeled_ns`]
+//! turns that into virtual time. Keeping raw counts (not pre-multiplied
+//! time) lets benches re-evaluate one run under perturbed cost models
+//! for the sensitivity analysis.
+
+use super::transfer::CostModel;
+
+/// Byte/transaction counters for one pipeline stage (or one batch).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TransferLedger {
+    /// Bytes read from simulated device memory (cache hits).
+    pub device_bytes: u64,
+    /// Payload bytes fetched over UVA (cache misses).
+    pub uva_bytes: u64,
+    /// UVA transactions issued (misses; line-granular).
+    pub uva_txns: u64,
+    /// Bulk host→device bytes (batched uploads, cache fills).
+    pub h2d_bytes: u64,
+    /// Fixed launches (kernel invocations) in this stage.
+    pub launches: u64,
+    /// Cache-hit events (device-served reads).
+    pub hits: u64,
+    /// Cache-miss events (UVA-served reads).
+    pub misses: u64,
+}
+
+impl TransferLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a cache hit served from device memory.
+    #[inline]
+    pub fn hit(&mut self, bytes: u64) {
+        self.device_bytes += bytes;
+        self.hits += 1;
+    }
+
+    /// Record a cache miss served by `txns` random UVA transactions.
+    #[inline]
+    pub fn miss(&mut self, bytes: u64, txns: u64) {
+        self.uva_bytes += bytes;
+        self.uva_txns += txns;
+        self.misses += 1;
+    }
+
+    /// Record a bulk host→device upload.
+    #[inline]
+    pub fn upload(&mut self, bytes: u64) {
+        self.h2d_bytes += bytes;
+    }
+
+    /// Record a kernel/stage launch.
+    #[inline]
+    pub fn launch(&mut self) {
+        self.launches += 1;
+    }
+
+    /// Fold another ledger into this one.
+    pub fn merge(&mut self, other: &TransferLedger) {
+        self.device_bytes += other.device_bytes;
+        self.uva_bytes += other.uva_bytes;
+        self.uva_txns += other.uva_txns;
+        self.h2d_bytes += other.h2d_bytes;
+        self.launches += other.launches;
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    /// Modeled time under `m`, in ns.
+    pub fn modeled_ns(&self, m: &CostModel) -> f64 {
+        m.device_ns(self.device_bytes)
+            + m.uva_ns(self.uva_bytes, self.uva_txns)
+            + m.h2d_ns(self.h2d_bytes)
+            + self.launches as f64 * m.launch_ns
+    }
+
+    /// Total payload bytes that crossed PCIe (the quantity DCI
+    /// minimizes).
+    pub fn pcie_bytes(&self) -> u64 {
+        self.uva_bytes.max(self.uva_txns * 128) + self.h2d_bytes
+    }
+
+    /// Cache hit ratio over hit/miss events (Fig. 9's y-axis).
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_merges() {
+        let mut a = TransferLedger::new();
+        a.hit(100);
+        a.miss(400, 4);
+        a.upload(1000);
+        a.launch();
+        let mut b = TransferLedger::new();
+        b.hit(1);
+        b.merge(&a);
+        assert_eq!(b.device_bytes, 101);
+        assert_eq!(b.uva_bytes, 400);
+        assert_eq!(b.uva_txns, 4);
+        assert_eq!(b.h2d_bytes, 1000);
+        assert_eq!(b.launches, 1);
+        assert_eq!(b.hits, 2);
+        assert_eq!(b.misses, 1);
+        assert!((b.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(TransferLedger::new().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn modeled_time_orders_hit_below_miss() {
+        let m = CostModel::default();
+        let mut hits = TransferLedger::new();
+        hits.hit(1 << 20);
+        let mut misses = TransferLedger::new();
+        misses.miss(1 << 20, (1 << 20) / 128);
+        assert!(misses.modeled_ns(&m) > 50.0 * hits.modeled_ns(&m));
+    }
+
+    #[test]
+    fn pcie_bytes_line_granular() {
+        let mut l = TransferLedger::new();
+        l.miss(4, 1); // 4 payload bytes, one 128B line
+        assert_eq!(l.pcie_bytes(), 128);
+        l.upload(100);
+        assert_eq!(l.pcie_bytes(), 228);
+    }
+}

@@ -1,0 +1,148 @@
+//! Simulated device (GPU) memory arena: capacity accounting with the
+//! paper's 1 GB safety reserve (§IV.A: "reserving 1GB of memory is
+//! completely sufficient"), scaled by the dataset's scale factor.
+//!
+//! Allocation failures surface as [`OomError`] — this is how the
+//! Table V "RAIN: CUDA out of memory" row reproduces.
+
+use thiserror::Error;
+
+use crate::util::format_bytes;
+
+/// The paper's testbed capacity (RTX 4090).
+pub const RTX4090_BYTES: u64 = 24 * (1 << 30);
+
+/// The paper's pre-sampling safety reserve (PaGraph convention).
+pub const PAPER_RESERVE_BYTES: u64 = 1 << 30;
+
+/// Simulated GPU out-of-memory (mirrors `RuntimeError: CUDA out of
+/// memory` in the paper's RAIN experiment).
+#[derive(Debug, Error, Clone, PartialEq)]
+#[error(
+    "simulated CUDA out of memory: tried to allocate {} ({} requested, {} in use, {} capacity)",
+    format_bytes(*.requested),
+    format_bytes(*.requested),
+    format_bytes(*.in_use),
+    format_bytes(*.capacity)
+)]
+pub struct OomError {
+    pub requested: u64,
+    pub in_use: u64,
+    pub capacity: u64,
+}
+
+/// Capacity-accounting arena for simulated device memory.
+#[derive(Debug, Clone)]
+pub struct DeviceMemory {
+    capacity: u64,
+    reserve: u64,
+    used: u64,
+}
+
+impl DeviceMemory {
+    /// Arena with explicit capacity and safety reserve.
+    pub fn new(capacity: u64, reserve: u64) -> Self {
+        DeviceMemory { capacity, reserve: reserve.min(capacity), used: 0 }
+    }
+
+    /// The paper's testbed scaled to a dataset's scale factor: a 1/10
+    /// scale dataset sees a 2.4 GB device with a 100 MB reserve, so the
+    /// paper's GB-denominated sweeps translate directly.
+    pub fn rtx4090_scaled(scale: f64) -> Self {
+        let capacity = (RTX4090_BYTES as f64 * scale) as u64;
+        let reserve = (PAPER_RESERVE_BYTES as f64 * scale) as u64;
+        DeviceMemory::new(capacity, reserve)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Bytes available for caches: capacity − reserve − used. This is
+    /// the "C" of Eq. (1) once the workload's own peak usage has been
+    /// claimed via [`DeviceMemory::alloc`].
+    pub fn available_for_cache(&self) -> u64 {
+        self.capacity.saturating_sub(self.reserve).saturating_sub(self.used)
+    }
+
+    /// Claim `bytes` (workload tensors, caches). Fails with [`OomError`]
+    /// if it would exceed capacity (the reserve is *not* allocatable —
+    /// that is its purpose).
+    pub fn alloc(&mut self, bytes: u64) -> Result<(), OomError> {
+        if self.used + bytes > self.capacity.saturating_sub(self.reserve) {
+            return Err(OomError {
+                requested: bytes,
+                in_use: self.used,
+                capacity: self.capacity,
+            });
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    /// Hard allocation that may also consume the reserve (used to model
+    /// baselines that do not reserve headroom, e.g. RAIN).
+    pub fn alloc_unreserved(&mut self, bytes: u64) -> Result<(), OomError> {
+        if self.used + bytes > self.capacity {
+            return Err(OomError {
+                requested: bytes,
+                in_use: self.used,
+                capacity: self.capacity,
+            });
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    /// Release previously claimed bytes.
+    pub fn free(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_respects_reserve() {
+        let mut m = DeviceMemory::new(100, 10);
+        assert_eq!(m.available_for_cache(), 90);
+        m.alloc(80).unwrap();
+        assert_eq!(m.available_for_cache(), 10);
+        let err = m.alloc(20).unwrap_err();
+        assert_eq!(err.in_use, 80);
+        // unreserved path may take the headroom
+        m.alloc_unreserved(20).unwrap();
+        assert_eq!(m.used(), 100);
+        assert!(m.alloc_unreserved(1).is_err());
+    }
+
+    #[test]
+    fn free_returns_capacity() {
+        let mut m = DeviceMemory::new(100, 0);
+        m.alloc(60).unwrap();
+        m.free(50);
+        assert_eq!(m.used(), 10);
+        m.free(1000); // saturates, never underflows
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn scaled_testbed() {
+        let m = DeviceMemory::rtx4090_scaled(0.1);
+        assert_eq!(m.capacity(), (RTX4090_BYTES as f64 * 0.1) as u64);
+        assert!(m.available_for_cache() > 2 * (1 << 30));
+    }
+
+    #[test]
+    fn oom_message_mentions_cuda() {
+        let mut m = DeviceMemory::new(10, 0);
+        let err = m.alloc(100).unwrap_err();
+        assert!(err.to_string().contains("CUDA out of memory"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated GPU memory + host↔device transfer cost model.
+//!
+//! The paper's testbed is an RTX 4090 over PCIe with UVA; this repo's
+//! testbed is a CPU. DCI's wins come from *which bytes cross PCIe*, so
+//! we keep the data path real (actual copies) and account the transfer
+//! cost on a virtual clock (DESIGN.md §Substitutions): every reported
+//! stage time is `measured CPU wall + modeled transfer time`.
+
+pub mod clock;
+pub mod device;
+pub mod transfer;
+
+pub use clock::TransferLedger;
+pub use device::{DeviceMemory, OomError, PAPER_RESERVE_BYTES, RTX4090_BYTES};
+pub use transfer::CostModel;

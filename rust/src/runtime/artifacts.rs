@@ -1,0 +1,178 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! Rust runtime. One entry per compiled (model, shape) variant.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelKind;
+use crate::util::json::Json;
+
+/// One AOT artifact's metadata (mirrors the dict written by aot.py).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: ModelKind,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch_size: usize,
+    /// Neighbor slots per layer, input-most first.
+    pub ks: Vec<usize>,
+    /// Padded node-array sizes per layer, input-most first
+    /// (`dims.len() == ks.len() + 1`).
+    pub dims: Vec<usize>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let model = ModelKind::parse(j.req("model")?.as_str()?)?;
+        let meta = ArtifactMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            file: j.req("file")?.as_str()?.to_string(),
+            model,
+            feat_dim: j.req("feat_dim")?.as_usize()?,
+            hidden: j.req("hidden")?.as_usize()?,
+            classes: j.req("classes")?.as_usize()?,
+            batch_size: j.req("batch_size")?.as_usize()?,
+            ks: j.req("ks")?.as_usize_vec()?,
+            dims: j.req("dims")?.as_usize_vec()?,
+        };
+        if meta.dims.len() != meta.ks.len() + 1 {
+            anyhow::bail!("artifact {}: dims/ks length mismatch", meta.name);
+        }
+        Ok(meta)
+    }
+
+    /// Can this artifact hold a batch with the given per-layer node
+    /// counts (`sizes`, input-most first) and per-layer neighbor slots?
+    pub fn fits(&self, model: ModelKind, feat_dim: usize, classes: usize,
+                sizes: &[usize], ks: &[usize]) -> bool {
+        self.model == model
+            && self.feat_dim == feat_dim
+            && self.classes == classes
+            && sizes.len() == self.dims.len()
+            && ks.len() == self.ks.len()
+            && sizes.iter().zip(&self.dims).all(|(a, c)| a <= c)
+            && ks.iter().zip(&self.ks).all(|(a, c)| a <= c)
+    }
+
+    /// Padded element count of the input feature tensor (cost proxy for
+    /// choosing the smallest fitting artifact).
+    pub fn padded_cost(&self) -> usize {
+        self.dims[0] * self.feat_dim
+    }
+}
+
+/// Parsed manifest + its directory (for resolving artifact files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.req("version")?.as_u64()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Smallest artifact that fits the request, or None.
+    pub fn find(&self, model: ModelKind, feat_dim: usize, classes: usize,
+                sizes: &[usize], ks: &[usize]) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.fits(model, feat_dim, classes, sizes, ks))
+            .min_by_key(|a| a.padded_cost())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest(dir: &Path) {
+        let text = r#"{
+          "version": 1,
+          "artifacts": [
+            {"name": "a", "file": "a.hlo.txt", "model": "graphsage",
+             "feat_dim": 8, "hidden": 16, "classes": 4, "batch_size": 8,
+             "ks": [2, 2, 2], "dims": [216, 72, 24, 8], "seed": 7},
+            {"name": "b", "file": "b.hlo.txt", "model": "graphsage",
+             "feat_dim": 8, "hidden": 16, "classes": 4, "batch_size": 16,
+             "ks": [2, 2, 2], "dims": [432, 144, 48, 16], "seed": 7}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dci-manifest-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn load_and_find_smallest_fitting() {
+        let d = tmpdir("find");
+        sample_manifest(&d);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let hit = m
+            .find(ModelKind::GraphSage, 8, 4, &[100, 50, 20, 8], &[2, 2, 2])
+            .unwrap();
+        assert_eq!(hit.name, "a"); // smallest fitting
+        let hit = m
+            .find(ModelKind::GraphSage, 8, 4, &[300, 100, 30, 12], &[2, 2, 2])
+            .unwrap();
+        assert_eq!(hit.name, "b"); // only b fits
+        assert!(m
+            .find(ModelKind::GraphSage, 8, 4, &[9999, 100, 30, 12], &[2, 2, 2])
+            .is_none());
+        assert!(m
+            .find(ModelKind::Gcn, 8, 4, &[100, 50, 20, 8], &[2, 2, 2])
+            .is_none());
+        assert!(m.by_name("a").is_some());
+        assert!(m.by_name("zz").is_none());
+        assert!(m.hlo_path(m.by_name("a").unwrap()).ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Integration with the actual aot.py output when artifacts exist.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.by_name("smoke_sage").is_some());
+            let a = m.by_name("smoke_sage").unwrap();
+            assert_eq!(a.dims, vec![216, 72, 24, 8]);
+            assert_eq!(a.ks, vec![2, 2, 2]);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-dci").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Model runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them through the `xla` crate's
+//! PJRT CPU client. Python is never on this path — the artifacts are
+//! self-contained HLO text.
+//!
+//! - [`artifacts`]: `manifest.json` schema + artifact selection.
+//! - [`padding`]: maps dynamic sampled mini-batches onto the fixed
+//!   padded shapes the AOT executables expect.
+//! - [`pjrt`]: compile + execute via PJRT.
+//! - [`reference`]: a pure-Rust GraphSAGE/GCN forward used as a
+//!   numerics cross-check and artifact-free fallback in tests.
+
+pub mod artifacts;
+pub mod padding;
+pub mod pjrt;
+pub mod reference;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use padding::{pad_batch, PaddedBatch};
+pub use pjrt::PjrtRuntime;
+pub use reference::RefModel;
+
+use anyhow::Result;
+
+use crate::config::{ComputeKind, ModelKind};
+use crate::sampler::MiniBatch;
+
+/// The engine-facing compute backend.
+pub enum Compute {
+    /// No model execution (preparation-only studies).
+    Skip,
+    /// Pure-Rust reference forward.
+    Reference(RefModel),
+    /// AOT artifacts over PJRT.
+    Pjrt(PjrtRuntime),
+}
+
+impl Compute {
+    /// Build the backend for a dataset/model combination.
+    pub fn build(
+        kind: ComputeKind,
+        model: ModelKind,
+        feat_dim: usize,
+        hidden: usize,
+        classes: usize,
+        artifacts_dir: &str,
+    ) -> Result<Compute> {
+        Ok(match kind {
+            ComputeKind::Skip => Compute::Skip,
+            ComputeKind::Reference => {
+                Compute::Reference(RefModel::new(model, feat_dim, hidden, classes, 7))
+            }
+            ComputeKind::Pjrt => Compute::Pjrt(PjrtRuntime::load(artifacts_dir)?),
+        })
+    }
+
+    /// Run the model on a gathered mini-batch; returns logits
+    /// `[n_seeds, classes]` (row-major), or `None` for `Skip`.
+    pub fn run(
+        &mut self,
+        model: ModelKind,
+        x: &[f32],
+        feat_dim: usize,
+        mb: &MiniBatch,
+    ) -> Result<Option<Vec<f32>>> {
+        match self {
+            Compute::Skip => Ok(None),
+            Compute::Reference(m) => Ok(Some(m.forward(x, mb))),
+            Compute::Pjrt(rt) => rt.run(model, x, feat_dim, mb).map(Some),
+        }
+    }
+}

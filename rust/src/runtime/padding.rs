@@ -1,0 +1,168 @@
+//! Padding: maps a dynamically-shaped sampled mini-batch onto the fixed
+//! shapes of an AOT artifact.
+//!
+//! Semantics guaranteed by the model convention (padded feature rows
+//! are zero, padded idx slots have mask 0) mean padding never changes
+//! the logits of the real rows — `python/tests/test_model.py::
+//! test_padding_rows_do_not_leak` pins this on the JAX side and the
+//! golden test pins it end-to-end through PJRT.
+
+use anyhow::{bail, Result};
+
+use crate::sampler::MiniBatch;
+
+use super::artifacts::ArtifactMeta;
+
+/// A mini-batch padded to an artifact's fixed shapes, in the flat
+/// layouts the PJRT executable expects.
+#[derive(Debug, Clone)]
+pub struct PaddedBatch {
+    /// `[dims[0], feat_dim]` row-major.
+    pub x: Vec<f32>,
+    /// Per layer (input-most first): (`idx [n_l, K_l]`, `mask [n_l, K_l]`).
+    pub blocks: Vec<(Vec<i32>, Vec<f32>)>,
+    /// Real (unpadded) seed count — rows of the logits to keep.
+    pub n_seeds: usize,
+}
+
+/// Pad gathered features + blocks to `meta`'s shapes.
+///
+/// `x_gathered` is the feature-loading stage's output:
+/// `[mb.input_nodes().len(), feat_dim]` row-major.
+pub fn pad_batch(
+    mb: &MiniBatch,
+    x_gathered: &[f32],
+    feat_dim: usize,
+    meta: &ArtifactMeta,
+) -> Result<PaddedBatch> {
+    let sizes: Vec<usize> = mb.nodes.iter().map(|a| a.len()).collect();
+    let ks: Vec<usize> = mb.layers.iter().map(|b| b.k).collect();
+    if meta.feat_dim != feat_dim {
+        bail!("artifact feat_dim {} != {}", meta.feat_dim, feat_dim);
+    }
+    if !meta.fits(meta.model, feat_dim, meta.classes, &sizes, &ks) {
+        bail!(
+            "mini-batch sizes {sizes:?}/ks {ks:?} exceed artifact {} dims {:?}/ks {:?}",
+            meta.name,
+            meta.dims,
+            meta.ks
+        );
+    }
+    let n_in = mb.input_nodes().len();
+    if x_gathered.len() != n_in * feat_dim {
+        bail!(
+            "gathered features len {} != {} inputs × {} dims",
+            x_gathered.len(),
+            n_in,
+            feat_dim
+        );
+    }
+
+    // features: real rows then zero padding
+    let mut x = vec![0.0f32; meta.dims[0] * feat_dim];
+    x[..x_gathered.len()].copy_from_slice(x_gathered);
+
+    // blocks: copy k-wide rows into K-wide rows, zero elsewhere
+    let mut blocks = Vec::with_capacity(mb.layers.len());
+    for (l, blk) in mb.layers.iter().enumerate() {
+        let (n_pad, k_pad) = (meta.dims[l + 1], meta.ks[l]);
+        let mut idx = vec![0i32; n_pad * k_pad];
+        let mut mask = vec![0.0f32; n_pad * k_pad];
+        for d in 0..blk.n_dst {
+            let src = d * blk.k;
+            let dst = d * k_pad;
+            idx[dst..dst + blk.k].copy_from_slice(&blk.idx[src..src + blk.k]);
+            mask[dst..dst + blk.k].copy_from_slice(&blk.mask[src..src + blk.k]);
+        }
+        blocks.push((idx, mask));
+    }
+
+    Ok(PaddedBatch { x, blocks, n_seeds: mb.seeds().len() })
+}
+
+/// Strip logits back to the real seed rows.
+pub fn unpad_logits(logits: &[f32], classes: usize, n_seeds: usize) -> Vec<f32> {
+    logits[..n_seeds * classes].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::sampler::block::Block;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            model: ModelKind::GraphSage,
+            feat_dim: 3,
+            hidden: 8,
+            classes: 4,
+            batch_size: 4,
+            ks: vec![2, 2],
+            dims: vec![36, 12, 4],
+        }
+    }
+
+    fn tiny_mb() -> MiniBatch {
+        // 2 seeds <- 3 mids <- 5 inputs
+        let mut b1 = Block::new(3, 2); // mids from inputs
+        b1.set(0, 0, 3);
+        b1.set(1, 0, 4);
+        b1.set(2, 1, 0);
+        let mut b2 = Block::new(2, 1); // seeds from mids (k=1 < K=2)
+        b2.set(0, 0, 2);
+        b2.set(1, 0, 1);
+        MiniBatch {
+            nodes: vec![
+                vec![10, 11, 12, 13, 14],
+                vec![10, 11, 12],
+                vec![10, 11],
+            ],
+            layers: vec![b1, b2],
+        }
+    }
+
+    #[test]
+    fn pads_shapes_and_preserves_payload() {
+        let mb = tiny_mb();
+        mb.validate().unwrap();
+        let x: Vec<f32> = (0..5 * 3).map(|i| i as f32).collect();
+        let p = pad_batch(&mb, &x, 3, &meta()).unwrap();
+        assert_eq!(p.x.len(), 36 * 3);
+        assert_eq!(&p.x[..15], x.as_slice());
+        assert!(p.x[15..].iter().all(|&v| v == 0.0));
+        assert_eq!(p.blocks.len(), 2);
+        let (idx1, mask1) = &p.blocks[0];
+        assert_eq!(idx1.len(), 12 * 2);
+        // row 0 of layer 1: idx (3, 0), mask (1, 0)
+        assert_eq!(&idx1[..2], &[3, 0]);
+        assert_eq!(&mask1[..2], &[1.0, 0.0]);
+        // layer 2 rows are k=1 copied into K=2 slots
+        let (idx2, mask2) = &p.blocks[1];
+        assert_eq!(idx2[0], 2);
+        assert_eq!(mask2[0], 1.0);
+        assert_eq!(mask2[1], 0.0);
+        assert_eq!(p.n_seeds, 2);
+    }
+
+    #[test]
+    fn rejects_oversize_and_bad_gather() {
+        let mb = tiny_mb();
+        let x = vec![0.0; 5 * 3];
+        let mut small = meta();
+        small.dims = vec![4, 2, 1];
+        assert!(pad_batch(&mb, &x, 3, &small).is_err());
+        assert!(pad_batch(&mb, &x[..6], 3, &meta()).is_err());
+        assert!(pad_batch(&mb, &x, 7, &meta()).is_err());
+    }
+
+    #[test]
+    fn unpad_keeps_seed_rows() {
+        let logits: Vec<f32> = (0..4 * 4).map(|i| i as f32).collect();
+        let out = unpad_logits(&logits, 4, 2);
+        assert_eq!(out.len(), 8);
+        assert_eq!(out[7], 7.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Pure-Rust reference GNN forward (same block semantics as
+//! `python/compile/model.py`).
+//!
+//! Two uses: (1) an artifact-free compute backend for tests and small
+//! runs; (2) a semantic cross-check that the Rust block/padding
+//! conventions agree with the JAX model (shape behaviour, padding
+//! invariance). Weights are deterministic from a seed but *not* equal
+//! to the JAX weights — bit-level numerics vs. PJRT are pinned by the
+//! golden-file test instead (`rust/tests/runtime_pjrt.rs`).
+
+use crate::config::ModelKind;
+use crate::sampler::MiniBatch;
+use crate::util::Rng;
+
+/// One dense layer's weights.
+struct Layer {
+    w_self: Vec<f32>,  // [d_in, d_out], graphsage only
+    w_neigh: Vec<f32>, // [d_in, d_out]
+    b: Vec<f32>,       // [d_out]
+    d_in: usize,
+    d_out: usize,
+}
+
+/// Frozen reference model.
+pub struct RefModel {
+    kind: ModelKind,
+    layers: Vec<Layer>,
+    pub feat_dim: usize,
+    pub classes: usize,
+}
+
+impl RefModel {
+    pub fn new(kind: ModelKind, feat_dim: usize, hidden: usize, classes: usize,
+               seed: u64) -> RefModel {
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let n_layers = 3;
+        let mut dims = vec![feat_dim];
+        dims.extend(std::iter::repeat(hidden).take(n_layers - 1));
+        dims.push(classes);
+        let mut layers = Vec::new();
+        for l in 0..n_layers {
+            let (d_in, d_out) = (dims[l], dims[l + 1]);
+            let scale = (2.0 / (d_in + d_out) as f64).sqrt();
+            let mut mk = |n: usize| -> Vec<f32> {
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+            };
+            layers.push(Layer {
+                w_self: if kind == ModelKind::GraphSage { mk(d_in * d_out) } else { Vec::new() },
+                w_neigh: mk(d_in * d_out),
+                b: vec![0.0; d_out],
+                d_in,
+                d_out,
+            });
+        }
+        RefModel { kind, layers, feat_dim, classes }
+    }
+
+    /// Forward over gathered input features; returns logits
+    /// `[n_seeds, classes]` row-major.
+    pub fn forward(&self, x: &[f32], mb: &MiniBatch) -> Vec<f32> {
+        let n0 = mb.input_nodes().len();
+        assert_eq!(x.len(), n0 * self.feat_dim, "gathered features shape");
+        let mut h = x.to_vec();
+        let mut h_rows = n0;
+        for (l, (layer, blk)) in self.layers.iter().zip(&mb.layers).enumerate() {
+            let last = l == self.layers.len() - 1;
+            let n_dst = blk.n_dst;
+            let d_in = layer.d_in;
+            let d_out = layer.d_out;
+            debug_assert!(n_dst <= h_rows);
+            // aggregate neighbors
+            let mut agg = vec![0.0f32; n_dst * d_in];
+            for d in 0..n_dst {
+                let row = &mut agg[d * d_in..(d + 1) * d_in];
+                let mut cnt = 0.0f32;
+                for s in 0..blk.k {
+                    let at = d * blk.k + s;
+                    if blk.mask[at] != 0.0 {
+                        let src = blk.idx[at] as usize;
+                        let hrow = &h[src * d_in..(src + 1) * d_in];
+                        for (r, &v) in row.iter_mut().zip(hrow) {
+                            *r += v;
+                        }
+                        cnt += 1.0;
+                    }
+                }
+                if self.kind == ModelKind::Gcn {
+                    // average including self
+                    let selfrow: Vec<f32> =
+                        h[d * d_in..(d + 1) * d_in].to_vec();
+                    for (r, &v) in row.iter_mut().zip(&selfrow) {
+                        *r = (*r + v) / (cnt + 1.0);
+                    }
+                }
+            }
+            // transform
+            let mut out = vec![0.0f32; n_dst * d_out];
+            matmul_acc(&agg, &layer.w_neigh, &mut out, n_dst, d_in, d_out);
+            if self.kind == ModelKind::GraphSage {
+                matmul_acc(&h[..n_dst * d_in], &layer.w_self, &mut out, n_dst, d_in, d_out);
+            }
+            for d in 0..n_dst {
+                for j in 0..d_out {
+                    let v = out[d * d_out + j] + layer.b[j];
+                    out[d * d_out + j] = if last { v } else { v.max(0.0) };
+                }
+            }
+            h = out;
+            h_rows = n_dst;
+        }
+        debug_assert_eq!(h_rows, mb.seeds().len());
+        h
+    }
+}
+
+/// out += a @ w  (a: [n, k], w: [k, m]) — ikj loop order for locality.
+fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * m..(kk + 1) * m];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::mem::TransferLedger;
+    use crate::sampler::{Fanout, NeighborSampler, UvaAdj};
+
+    fn sampled_mb() -> (crate::graph::Dataset, MiniBatch) {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut s = NeighborSampler::new(Fanout::parse("3,2,2").unwrap());
+        let adj = UvaAdj { csc: &ds.csc };
+        let mut rng = Rng::new(1);
+        let mut ledger = TransferLedger::new();
+        let seeds: Vec<u32> = ds.test_nodes[..32].to_vec();
+        let mb = s.sample_batch(&adj, &seeds, &mut rng, &mut ledger);
+        (ds, mb)
+    }
+
+    fn gather(ds: &crate::graph::Dataset, mb: &MiniBatch) -> Vec<f32> {
+        let dim = ds.features.dim();
+        let mut x = vec![0.0; mb.input_nodes().len() * dim];
+        for (i, &v) in mb.input_nodes().iter().enumerate() {
+            ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
+        }
+        x
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let (ds, mb) = sampled_mb();
+        for kind in [ModelKind::GraphSage, ModelKind::Gcn] {
+            let m = RefModel::new(kind, ds.features.dim(), 16, 4, 7);
+            let x = gather(&ds, &mb);
+            let logits = m.forward(&x, &mb);
+            assert_eq!(logits.len(), 32 * 4);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            // logits vary across seeds
+            assert_ne!(&logits[..4], &logits[4..8]);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (ds, mb) = sampled_mb();
+        let m1 = RefModel::new(ModelKind::GraphSage, ds.features.dim(), 16, 4, 7);
+        let m2 = RefModel::new(ModelKind::GraphSage, ds.features.dim(), 16, 4, 7);
+        let x = gather(&ds, &mb);
+        assert_eq!(m1.forward(&x, &mb), m2.forward(&x, &mb));
+    }
+
+    #[test]
+    fn masked_slots_do_not_affect_output() {
+        // same invariance the JAX test pins: retargeting dead idx slots
+        // must not change logits
+        let (ds, mb) = sampled_mb();
+        let m = RefModel::new(ModelKind::GraphSage, ds.features.dim(), 16, 4, 7);
+        let x = gather(&ds, &mb);
+        let base = m.forward(&x, &mb);
+        let mut mb2 = mb.clone();
+        for blk in &mut mb2.layers {
+            for i in 0..blk.idx.len() {
+                if blk.mask[i] == 0.0 {
+                    blk.idx[i] = 0;
+                }
+            }
+        }
+        assert_eq!(m.forward(&x, &mb2), base);
+    }
+
+    #[test]
+    fn matmul_acc_correct() {
+        // [2x3] @ [3x2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut out = vec![0.0; 4];
+        matmul_acc(&a, &w, &mut out, 2, 3, 2);
+        assert_eq!(out, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+}

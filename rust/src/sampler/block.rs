@@ -1,0 +1,145 @@
+//! Mini-batch blocks: the bipartite per-layer structures fed to the
+//! model runtime (mirrors `python/compile/model.py`'s convention).
+
+use crate::graph::NodeId;
+
+/// One layer's sampled bipartite block.
+///
+/// `idx` is a row-major `[n_dst, k]` matrix of indices into the
+/// *previous* (source) layer's node array; `mask` marks valid slots.
+/// Destination nodes are, by construction, the first `n_dst` entries of
+/// the source array ("dst-first"), so the model's self/residual term
+/// needs no extra index input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub n_dst: usize,
+    pub k: usize,
+    pub idx: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Block {
+    pub fn new(n_dst: usize, k: usize) -> Self {
+        Block {
+            n_dst,
+            k,
+            idx: vec![0; n_dst * k],
+            mask: vec![0.0; n_dst * k],
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, dst: usize, slot: usize, src_local: u32) {
+        let at = dst * self.k + slot;
+        self.idx[at] = src_local as i32;
+        self.mask[at] = 1.0;
+    }
+
+    /// Valid (unmasked) entries.
+    pub fn n_valid(&self) -> usize {
+        self.mask.iter().filter(|&&m| m != 0.0).count()
+    }
+
+    /// Structural check: masked-in indices in range, consistent lengths.
+    pub fn validate(&self, n_src: usize) -> Result<(), String> {
+        if self.idx.len() != self.n_dst * self.k || self.mask.len() != self.idx.len() {
+            return Err(format!(
+                "block arrays len {} / {} != n_dst*k {}",
+                self.idx.len(),
+                self.mask.len(),
+                self.n_dst * self.k
+            ));
+        }
+        for (i, (&ix, &m)) in self.idx.iter().zip(&self.mask).enumerate() {
+            if m != 0.0 && (ix < 0 || ix as usize >= n_src) {
+                return Err(format!("valid idx {ix} out of range {n_src} at {i}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A sampled mini-batch: per-layer node arrays and blocks, ordered
+/// **input-most first** (`nodes[0]` is the widest array whose features
+/// must be loaded; `nodes.last()` are the seeds).
+#[derive(Debug, Clone)]
+pub struct MiniBatch {
+    pub nodes: Vec<Vec<NodeId>>,
+    pub layers: Vec<Block>,
+}
+
+impl MiniBatch {
+    /// The nodes whose features the feature-loading stage must produce.
+    pub fn input_nodes(&self) -> &[NodeId] {
+        &self.nodes[0]
+    }
+
+    /// The seed nodes this batch answers for.
+    pub fn seeds(&self) -> &[NodeId] {
+        self.nodes.last().unwrap()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Full structural validation (dst-first property included).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.len() != self.layers.len() + 1 {
+            return Err("node arrays must be layers+1".into());
+        }
+        for l in 0..self.layers.len() {
+            let src = &self.nodes[l];
+            let dst = &self.nodes[l + 1];
+            let blk = &self.layers[l];
+            if blk.n_dst != dst.len() {
+                return Err(format!("layer {l}: n_dst {} != {}", blk.n_dst, dst.len()));
+            }
+            blk.validate(src.len())?;
+            // dst-first: dst ids are a prefix of src ids
+            if src.len() < dst.len() || &src[..dst.len()] != dst.as_slice() {
+                return Err(format!("layer {l}: dst nodes are not a prefix of src"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_set_and_valid_count() {
+        let mut b = Block::new(2, 3);
+        b.set(0, 0, 5);
+        b.set(1, 2, 1);
+        assert_eq!(b.n_valid(), 2);
+        assert_eq!(b.idx[0], 5);
+        assert_eq!(b.mask[5], 1.0);
+        b.validate(6).unwrap();
+        assert!(b.validate(3).is_err()); // 5 out of range
+    }
+
+    #[test]
+    fn minibatch_validate_dst_first() {
+        let src = vec![7, 8, 9, 1];
+        let dst = vec![7, 8];
+        let mut blk = Block::new(2, 2);
+        blk.set(0, 0, 2);
+        let mb = MiniBatch { nodes: vec![src.clone(), dst.clone()], layers: vec![blk.clone()] };
+        mb.validate().unwrap();
+        assert_eq!(mb.input_nodes(), &[7, 8, 9, 1]);
+        assert_eq!(mb.seeds(), &[7, 8]);
+
+        // violate prefix property
+        let mb_bad = MiniBatch { nodes: vec![vec![9, 8, 7, 1], dst], layers: vec![blk] };
+        assert!(mb_bad.validate().is_err());
+    }
+
+    #[test]
+    fn minibatch_layer_count_mismatch() {
+        let mb = MiniBatch { nodes: vec![vec![1]], layers: vec![Block::new(1, 1)] };
+        assert!(mb.validate().is_err());
+    }
+}

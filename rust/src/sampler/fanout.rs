@@ -1,0 +1,117 @@
+//! Fan-out specifications ("15,10,5") — §V's parameter grids.
+//!
+//! Order convention matches DGL and the paper's "left-to-right"
+//! strings: `fanouts[0]` is the *input-most* layer's fan-out and
+//! `fanouts.last()` is the fan-out applied to the seed nodes'
+//! immediate neighbors.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// A per-layer fan-out specification.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Fanout(Vec<usize>);
+
+impl Fanout {
+    pub fn new(fanouts: Vec<usize>) -> Result<Self> {
+        if fanouts.is_empty() {
+            bail!("fan-out must have at least one layer");
+        }
+        if fanouts.iter().any(|&f| f == 0 || f > 1024) {
+            bail!("fan-outs must be in 1..=1024, got {fanouts:?}");
+        }
+        Ok(Fanout(fanouts))
+    }
+
+    /// Parse "15,10,5".
+    pub fn parse(s: &str) -> Result<Self> {
+        let v: Result<Vec<usize>, _> =
+            s.split(',').map(|t| t.trim().parse::<usize>()).collect();
+        match v {
+            Ok(v) => Fanout::new(v),
+            Err(e) => bail!("bad fan-out {s:?}: {e}"),
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Input-most first (model block order).
+    pub fn per_layer(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Fan-out for sampling hop `h`, where hop 0 expands the seeds.
+    /// (Sampling walks seed-side first, i.e. the reverse of `per_layer`.)
+    pub fn for_hop(&self, h: usize) -> usize {
+        self.0[self.0.len() - 1 - h]
+    }
+
+    /// Worst-case padded node-array sizes per layer, input-most first —
+    /// must agree with `python/compile/aot.py::worst_case_dims`.
+    pub fn worst_case_dims(&self, batch_size: usize) -> Vec<usize> {
+        let mut dims = vec![batch_size];
+        for &k in self.0.iter().rev() {
+            dims.push(dims.last().unwrap() * (k + 1));
+        }
+        dims.reverse();
+        dims
+    }
+
+    /// The paper's three standard grids.
+    pub fn paper_grids() -> Vec<Fanout> {
+        vec![
+            Fanout::new(vec![2, 2, 2]).unwrap(),
+            Fanout::new(vec![8, 4, 2]).unwrap(),
+            Fanout::new(vec![15, 10, 5]).unwrap(),
+        ]
+    }
+}
+
+impl fmt::Display for Fanout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let strs: Vec<String> = self.0.iter().map(|x| x.to_string()).collect();
+        write!(f, "{}", strs.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display() {
+        let f = Fanout::parse("15, 10,5").unwrap();
+        assert_eq!(f.per_layer(), &[15, 10, 5]);
+        assert_eq!(f.to_string(), "15,10,5");
+        assert_eq!(f.layers(), 3);
+    }
+
+    #[test]
+    fn hop_order_is_seed_side_first() {
+        let f = Fanout::parse("15,10,5").unwrap();
+        assert_eq!(f.for_hop(0), 5); // seeds sample 5
+        assert_eq!(f.for_hop(1), 10);
+        assert_eq!(f.for_hop(2), 15);
+    }
+
+    #[test]
+    fn worst_case_matches_aot() {
+        // python: worst_case_dims(8, [2,2,2]) == [216, 72, 24, 8]
+        let f = Fanout::parse("2,2,2").unwrap();
+        assert_eq!(f.worst_case_dims(8), vec![216, 72, 24, 8]);
+        // python: worst_case_dims(256, [8,4,2]) == [34560, 3840, 768, 256]
+        let f = Fanout::parse("8,4,2").unwrap();
+        assert_eq!(f.worst_case_dims(256), vec![34560, 3840, 768, 256]);
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(Fanout::parse("").is_err());
+        assert!(Fanout::parse("1,0,1").is_err());
+        assert!(Fanout::parse("a,b").is_err());
+        assert!(Fanout::parse("2000").is_err());
+    }
+}

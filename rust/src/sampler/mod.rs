@@ -1,0 +1,32 @@
+//! Neighbor sampling: fan-out parsing, mini-batch block construction,
+//! and the pre-sampling workload profiler (§IV.A).
+//!
+//! Adjacency reads go through the [`AdjSource`] trait so the same
+//! sampler runs over plain host CSC via UVA (DGL baseline), or through
+//! DCI's adjacency cache — each implementation records its transfer
+//! behaviour in a [`TransferLedger`].
+
+pub mod block;
+pub mod fanout;
+pub mod neighbor;
+pub mod presample;
+
+pub use block::{Block, MiniBatch};
+pub use fanout::Fanout;
+pub use neighbor::{seed_batches, NeighborSampler, UvaAdj};
+pub use presample::{presample, PresampleStats};
+
+use crate::graph::NodeId;
+use crate::mem::TransferLedger;
+
+/// Where the sampler reads adjacency from. `pos` is a position within
+/// `v`'s (possibly reordered — see `cache::adj_cache`) neighbor list.
+pub trait AdjSource {
+    /// In-degree of `v` (degree metadata is always device-resident:
+    /// `col_ptr` is small and both DCI and DUCATI keep it on-device).
+    fn degree(&self, v: NodeId) -> usize;
+
+    /// Read the neighbor at `pos ∈ [0, degree(v))`, accounting the
+    /// transfer in `ledger`.
+    fn neighbor_at(&self, v: NodeId, pos: usize, ledger: &mut TransferLedger) -> NodeId;
+}

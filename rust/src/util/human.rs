@@ -1,0 +1,77 @@
+//! Byte-size parsing/formatting for cache budgets ("0.4GB", "512MB").
+
+use anyhow::{bail, Result};
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// `1536 -> "1.5KiB"`, `0.4 GiB -> "409.6MiB"` style formatting.
+pub fn format_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2}GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1}MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1}KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Parse "1GB", "0.4GiB", "512mb", "1024", "16k" into bytes.
+/// Decimal and binary suffixes are both treated as binary (the paper's
+/// capacities are nominal GPU-memory sizes).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    if num.is_empty() {
+        bail!("no numeric part in byte size {s:?}");
+    }
+    let value: f64 = num.parse()?;
+    if value < 0.0 || !value.is_finite() {
+        bail!("invalid byte size {s:?}");
+    }
+    let mult = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        other => bail!("unknown byte suffix {other:?} in {s:?}"),
+    };
+    Ok((value * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("1GB").unwrap(), GIB);
+        assert_eq!(parse_bytes("0.5 GiB").unwrap(), GIB / 2);
+        assert_eq!(parse_bytes("512mb").unwrap(), 512 * MIB);
+        assert_eq!(parse_bytes("16k").unwrap(), 16 * KIB);
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("GB").is_err());
+        assert!(parse_bytes("1XB").is_err());
+        assert!(parse_bytes("-1GB").is_err());
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(format_bytes(12), "12B");
+        assert_eq!(format_bytes(2048), "2.0KiB");
+        assert_eq!(format_bytes(3 * MIB + MIB / 2), "3.5MiB");
+        assert_eq!(format_bytes(GIB), "1.00GiB");
+    }
+}

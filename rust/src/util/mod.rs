@@ -1,0 +1,14 @@
+//! Small self-contained utilities (the offline registry has no rand /
+//! serde / criterion / proptest, so these live in-repo).
+
+pub mod human;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use human::{format_bytes, parse_bytes};
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,86 @@
+//! In-repo property-testing harness (the offline registry carries no
+//! proptest crate). Runs a predicate over many seeded random cases and
+//! reports the failing seed so a failure reproduces deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use dci::util::proptest::check;
+//! check("sum is commutative", 256, |rng| {
+//!     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop`. Panics with the seed + message of
+/// the first failing case. `DCI_PROP_SEED` pins the base seed (useful to
+/// replay a CI failure locally).
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = std::env::var("DCI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDC1u64);
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} \
+                 (DCI_PROP_SEED={base}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi] — convenience for property generators.
+pub fn range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(hi >= lo);
+    lo + rng.gen_usize(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            if rng.next_u64() % 2 == 0 || true {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn range_is_inclusive() {
+        let mut rng = Rng::new(1);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            let x = range(&mut rng, 3, 5);
+            assert!((3..=5).contains(&x));
+            seen_lo |= x == 3;
+            seen_hi |= x == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

@@ -1,0 +1,122 @@
+//! Summary statistics for the bench harness and serving metrics.
+
+/// Mean of a sample (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile by linear interpolation (p in [0, 100]).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Streaming latency histogram (fixed log-spaced buckets, ns domain).
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    samples: Vec<f64>, // ns; serving volumes here are small enough to keep raw
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { samples: Vec::new() }
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.samples.push(ns as f64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    /// (p50, p90, p99) in ns.
+    pub fn quantiles_ns(&self) -> (f64, f64, f64) {
+        if self.samples.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile(&s, 50.0), percentile(&s, 90.0), percentile(&s, 99.0))
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn latency_hist_quantiles() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100u64 {
+            h.record_ns(i * 1000);
+        }
+        let (p50, p90, p99) = h.quantiles_ns();
+        assert!((p50 - 50_500.0).abs() < 1e-6, "p50={p50}");
+        assert!(p90 > p50 && p99 > p90);
+        assert_eq!(h.count(), 100);
+
+        let mut h2 = LatencyHist::new();
+        h2.record_ns(1);
+        h2.merge(&h);
+        assert_eq!(h2.count(), 101);
+    }
+}

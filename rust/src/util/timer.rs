@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers used by the stage decomposition (Fig. 1)
+//! and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating elapsed wall time.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    accum: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { accum: Duration::ZERO, started: None }
+    }
+
+    /// Start (or resume) timing. Idempotent while running.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop timing and fold the elapsed span into the accumulator.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accum += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated time (includes the in-flight span if running).
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.accum + t0.elapsed(),
+            None => self.accum,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.accum = Duration::ZERO;
+        self.started = None;
+    }
+
+    /// Time a closure, accumulating its wall time.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// `1.234s` / `56.7ms` / `890us` style rendering for reports.
+pub fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.0}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_spans() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        let t1 = sw.elapsed();
+        assert!(t1 >= Duration::from_millis(2));
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(sw.elapsed() >= t1 + Duration::from_millis(2));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| ());
+        sw.reset();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(format_duration(Duration::from_secs(2)), "2.000s");
+        assert_eq!(format_duration(Duration::from_millis(56)), "56.0ms");
+        assert_eq!(format_duration(Duration::from_micros(890)), "890us");
+        assert_eq!(format_duration(Duration::from_nanos(12)), "12ns");
+    }
+}

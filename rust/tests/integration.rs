@@ -1,0 +1,231 @@
+//! Cross-module integration: full runs of every system over a real
+//! (small) dataset, checking the paper's *qualitative* claims hold on
+//! the stand-in workloads — the full-size quantitative versions live in
+//! `rust/benches/`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dci::config::{ComputeKind, ModelKind, RunConfig, SystemKind};
+use dci::coordinator::{BatcherConfig, Server, ServerConfig};
+use dci::engine::{run_config, InferenceEngine, InferenceReport};
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.batch_size = 64;
+    cfg.fanout = Fanout::parse("3,2,2").unwrap();
+    cfg.budget = Some(400_000);
+    cfg.max_batches = Some(8);
+    cfg.compute = ComputeKind::Skip;
+    cfg
+}
+
+fn run(system: SystemKind) -> InferenceReport {
+    let mut cfg = base_cfg();
+    cfg.system = system;
+    run_config(&cfg).unwrap()
+}
+
+fn modeled_prep(r: &InferenceReport) -> f64 {
+    r.sample.modeled_ns + r.feature.modeled_ns
+}
+
+#[test]
+fn paper_ordering_dci_fastest_prep() {
+    // Fig. 7/8 shape: DCI < SCI < DGL on mini-batch preparation.
+    let dgl = run(SystemKind::Dgl);
+    let sci = run(SystemKind::Sci);
+    let dci = run(SystemKind::Dci);
+    assert!(modeled_prep(&dci) < modeled_prep(&sci));
+    assert!(modeled_prep(&sci) < modeled_prep(&dgl));
+    // identical workload across systems
+    assert_eq!(dgl.n_seeds, dci.n_seeds);
+}
+
+#[test]
+fn preprocessing_ordering_dci_cheapest() {
+    // Table IV / Fig. 10 shape: DCI preprocessing < DUCATI's.
+    let dci = run(SystemKind::Dci);
+    let ducati = run(SystemKind::Ducati);
+    let rain = run(SystemKind::Rain);
+    assert!(dci.preprocess_ns < ducati.preprocess_ns);
+    assert!(dci.preprocess_ns > 0.0);
+    assert!(rain.preprocess_ns > 0.0);
+}
+
+#[test]
+fn redundancy_ratio_exceeds_one() {
+    // Table I: multi-hop sampling loads far more nodes than seeds.
+    let r = run(SystemKind::Dgl);
+    let ratio = r.loaded_nodes as f64 / r.n_seeds as f64;
+    assert!(ratio > 2.0, "redundancy ratio {ratio}");
+}
+
+#[test]
+fn bigger_budget_never_hurts_hit_ratio() {
+    // Fig. 9 shape: hit ratios are monotone-ish in budget.
+    let mut prev = -1.0;
+    for budget in [50_000u64, 200_000, 800_000] {
+        let mut cfg = base_cfg();
+        cfg.system = SystemKind::Dci;
+        cfg.budget = Some(budget);
+        let r = run_config(&cfg).unwrap();
+        let ratio = r.stats.overall_hit_ratio();
+        assert!(
+            ratio >= prev - 0.02,
+            "hit ratio dropped: {prev} -> {ratio} at {budget}"
+        );
+        prev = ratio;
+    }
+    assert!(prev > 0.5, "largest budget should hit mostly ({prev})");
+}
+
+#[test]
+fn more_presample_batches_stabilize_hit_rate() {
+    // Fig. 11 shape: hit rate grows then saturates with pre-sampling.
+    let mut ratios = Vec::new();
+    for n in [1usize, 4, 8, 12] {
+        let mut cfg = base_cfg();
+        cfg.system = SystemKind::Dci;
+        cfg.n_presample = n;
+        cfg.budget = Some(120_000);
+        let r = run_config(&cfg).unwrap();
+        ratios.push(r.stats.overall_hit_ratio());
+    }
+    assert!(
+        ratios[1] >= ratios[0] - 0.05,
+        "4 presample batches shouldn't be much worse than 1: {ratios:?}"
+    );
+    // saturation: 8 -> 12 changes little
+    assert!(
+        (ratios[3] - ratios[2]).abs() < 0.1,
+        "hit rate should stabilize >= 8 batches: {ratios:?}"
+    );
+}
+
+#[test]
+fn uniform_graph_weakens_caching() {
+    // ablation: without power-law skew, a small cache hits less.
+    let mut cfg_pl = base_cfg();
+    cfg_pl.system = SystemKind::Dci;
+    cfg_pl.budget = Some(60_000);
+    let pl = run_config(&cfg_pl).unwrap();
+
+    let mut cfg_u = cfg_pl.clone();
+    cfg_u.dataset = "uniform-control".into();
+    cfg_u.max_batches = Some(8);
+    let u = run_config(&cfg_u).unwrap();
+    // products of same budget: the uniform graph has far more nodes, so
+    // compare per-node hit ratios qualitatively
+    assert!(
+        pl.stats.feat_hit_ratio() > u.stats.feat_hit_ratio(),
+        "skewed {:.3} should out-hit uniform {:.3}",
+        pl.stats.feat_hit_ratio(),
+        u.stats.feat_hit_ratio()
+    );
+}
+
+#[test]
+fn pjrt_end_to_end_when_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    // tiny dataset has feat_dim 16 / 4 classes: no serving artifact.
+    // Use a synthetic spec matched to the smoke artifact instead.
+    let mut spec = datasets::spec("tiny").unwrap();
+    spec.feat_dim = 8;
+    spec.classes = 4;
+    spec.n_nodes = 500;
+    let ds = spec.build();
+    let mut cfg = base_cfg();
+    cfg.batch_size = 8;
+    cfg.fanout = Fanout::parse("2,2,2").unwrap();
+    cfg.compute = ComputeKind::Pjrt;
+    cfg.hidden = 16;
+    cfg.max_batches = Some(3);
+    cfg.system = SystemKind::Dci;
+    let mut engine = InferenceEngine::prepare(&ds, cfg).unwrap();
+    let report = engine.run().unwrap();
+    assert_eq!(report.n_batches, 3);
+    assert!(report.logits_checksum > 0.0, "real logits flowed");
+    assert!(report.compute.wall_ns > 0.0);
+}
+
+#[test]
+fn serving_stack_with_pjrt() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let mut spec = datasets::spec("tiny").unwrap();
+    spec.feat_dim = 8;
+    spec.classes = 4;
+    spec.n_nodes = 500;
+    let ds = Arc::new(spec.build());
+    let mut cfg = base_cfg();
+    cfg.batch_size = 8;
+    cfg.fanout = Fanout::parse("2,2,2").unwrap();
+    cfg.compute = ComputeKind::Pjrt;
+    cfg.hidden = 16;
+    cfg.system = SystemKind::Dci;
+    let server = Server::start(
+        Arc::clone(&ds),
+        cfg,
+        ServerConfig {
+            n_workers: 1,
+            batcher: BatcherConfig { batch_size: 8, max_wait: Duration::from_millis(2) },
+            policy: dci::coordinator::router::RoutePolicy::RoundRobin,
+            admission: dci::coordinator::AdmissionConfig::default(),
+        },
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        rxs.push(server.submit(vec![ds.test_nodes[i]]).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let logits = resp.logits.expect("pjrt returns logits");
+        assert_eq!(logits.len(), 4);
+    }
+    let (m, elapsed) = server.shutdown().unwrap();
+    assert_eq!(m.requests, 6);
+    assert!(m.throughput(elapsed) > 0.0);
+}
+
+#[test]
+fn gcn_and_graphsage_both_run() {
+    for model in [ModelKind::GraphSage, ModelKind::Gcn] {
+        let mut cfg = base_cfg();
+        cfg.model = model;
+        cfg.compute = ComputeKind::Reference;
+        cfg.hidden = 16;
+        cfg.system = SystemKind::Dci;
+        cfg.max_batches = Some(2);
+        let r = run_config(&cfg).unwrap();
+        assert!(r.logits_checksum > 0.0, "{model:?}");
+    }
+}
+
+#[test]
+fn rain_scalability_failure_reproduces() {
+    // Table V: RAIN OOMs when its cluster-resident set exceeds device
+    // memory while DCI completes on the same device.
+    let mut cfg = base_cfg();
+    cfg.system = SystemKind::Rain;
+    cfg.max_batches = None;
+    cfg.device_capacity = Some(50_000);
+    let rain = run_config(&cfg).unwrap();
+    assert!(rain.oom.is_some(), "RAIN should OOM on the tiny device");
+
+    let mut cfg = base_cfg();
+    cfg.system = SystemKind::Dci;
+    cfg.max_batches = None;
+    cfg.device_capacity = Some(50_000);
+    cfg.budget = None; // workload-aware: fit what fits
+    let dci = run_config(&cfg).unwrap();
+    assert!(dci.oom.is_none(), "DCI must complete on the same device");
+}

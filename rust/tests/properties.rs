@@ -1,0 +1,280 @@
+//! System-level property tests (in-repo seeded-random harness — the
+//! offline registry has no proptest crate). These hammer the coordinator
+//! invariants the paper's correctness depends on: routing conservation,
+//! batching conservation, cache-state consistency under arbitrary
+//! budgets/workloads, and sampler structural invariants on random
+//! graphs.
+
+use dci::cache::{adj_cache::AdjCache, alloc::allocate_ratio, feat_cache::FeatCache};
+use dci::graph::builder::csc_from_edges;
+use dci::graph::{FeatureStore, NodeId};
+use dci::mem::TransferLedger;
+use dci::sampler::{Fanout, NeighborSampler, UvaAdj};
+use dci::util::proptest::{check, range};
+use dci::util::Rng;
+
+/// Random connected-ish digraph for property runs.
+fn random_csc(rng: &mut Rng) -> dci::graph::Csc {
+    let n = range(rng, 2, 400);
+    let e = range(rng, 1, 4 * n);
+    let edges: Vec<(NodeId, NodeId)> = (0..e)
+        .map(|_| (rng.next_u32() % n as u32, rng.next_u32() % n as u32))
+        .collect();
+    csc_from_edges(n, &edges).unwrap()
+}
+
+#[test]
+fn prop_sampler_structural_invariants() {
+    check("sampled mini-batches are structurally valid", 60, |rng| {
+        let csc = random_csc(rng);
+        let n = csc.n_nodes();
+        let layers = range(rng, 1, 3);
+        let fanouts: Vec<usize> = (0..layers).map(|_| range(rng, 1, 6)).collect();
+        let fanout = Fanout::new(fanouts).unwrap();
+        let bs = range(rng, 1, 32.min(n));
+        let seeds: Vec<NodeId> = (0..bs).map(|_| rng.next_u32() % n as u32).collect();
+        // seeds must be unique for dst-first dedup invariants
+        let mut seeds = seeds;
+        seeds.sort_unstable();
+        seeds.dedup();
+
+        let mut sampler = NeighborSampler::new(fanout);
+        let mut ledger = TransferLedger::new();
+        let mb = sampler.sample_batch(&UvaAdj { csc: &csc }, &seeds, rng, &mut ledger);
+        mb.validate().map_err(|e| format!("invalid batch: {e}"))?;
+
+        // every sampled neighbor is a true neighbor of its dst node
+        for (l, blk) in mb.layers.iter().enumerate() {
+            let src = &mb.nodes[l];
+            let dst = &mb.nodes[l + 1];
+            for d in 0..blk.n_dst {
+                for s in 0..blk.k {
+                    let at = d * blk.k + s;
+                    if blk.mask[at] != 0.0 {
+                        let u = src[blk.idx[at] as usize];
+                        if !csc.neighbors(dst[d]).contains(&u) {
+                            return Err(format!(
+                                "layer {l}: {u} is not a neighbor of {}",
+                                dst[d]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq1_allocation_conserves_and_bounds() {
+    check("Eq.(1) conserves any budget", 300, |rng| {
+        let total = rng.next_u64() % (1u64 << 45);
+        let f = rng.f64() * 2.0 - 0.5;
+        let a = allocate_ratio(total, f);
+        if a.c_adj + a.c_feat != total {
+            return Err(format!("lost bytes: {a:?} vs {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feat_cache_consistency() {
+    check("feature cache returns exact host rows", 40, |rng| {
+        let n = range(rng, 1, 300);
+        let dim = range(rng, 1, 32);
+        let fs = FeatureStore::generate(n, dim, rng);
+        let visits: Vec<u32> = (0..n).map(|_| rng.next_u32() % 16).collect();
+        let cap = rng.next_u64() % (2 * n as u64 * (fs.row_bytes() + 16) + 1);
+        let (cache, ledger) = FeatCache::fill(&fs, &visits, cap);
+        if cache.bytes_used() > cap {
+            return Err(format!("over budget {} > {cap}", cache.bytes_used()));
+        }
+        if ledger.h2d_bytes != cache.n_cached() as u64 * fs.row_bytes() {
+            return Err("upload accounting mismatch".into());
+        }
+        for v in 0..n as u32 {
+            if let Some(row) = cache.lookup(v) {
+                if row != fs.row(v) {
+                    return Err(format!("row {v} corrupted"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adj_cache_transparent() {
+    // the cache is a *transparent* accelerator: reading every position
+    // of every node yields the node's original neighbor multiset
+    check("adj cache transparency", 30, |rng| {
+        let csc = random_csc(rng);
+        let counts: Vec<u32> =
+            (0..csc.n_edges()).map(|_| rng.next_u32() % 10).collect();
+        let cap = rng.next_u64() % (2 * csc.bytes_total() + 1);
+        let (cache, _) = AdjCache::fill(&csc, &counts, cap);
+        let src = cache.source(&csc);
+        let mut ledger = TransferLedger::new();
+        for v in 0..csc.n_nodes() as u32 {
+            let deg = csc.degree(v);
+            let mut got: Vec<NodeId> = (0..deg)
+                .map(|p| {
+                    use dci::sampler::AdjSource;
+                    src.neighbor_at(v, p, &mut ledger)
+                })
+                .collect();
+            let mut want = csc.neighbors(v).to_vec();
+            got.sort_unstable();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("node {v} multiset changed"));
+            }
+        }
+        // accounting: every read was either hit or miss
+        let total_reads: u64 = (0..csc.n_nodes() as u32)
+            .map(|v| csc.degree(v) as u64)
+            .sum();
+        if ledger.hits + ledger.misses != total_reads {
+            return Err("hit+miss != reads".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    use dci::coordinator::{Batcher, BatcherConfig};
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    check("batcher neither drops nor duplicates seeds", 50, |rng| {
+        let bs = range(rng, 1, 64);
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: bs,
+            max_wait: Duration::from_secs(3600),
+        });
+        let n_reqs = range(rng, 1, 40);
+        let mut sent: Vec<NodeId> = Vec::new();
+        let mut flushed: Vec<NodeId> = Vec::new();
+        let mut keep = Vec::new();
+        for _ in 0..n_reqs {
+            let sz = range(rng, 1, 8);
+            let nodes: Vec<NodeId> = (0..sz).map(|_| rng.next_u32() % 1000).collect();
+            sent.extend_from_slice(&nodes);
+            let (tx, rx) = mpsc::channel();
+            keep.push(rx);
+            if let Some(batch) = b.push(dci::coordinator::Request {
+                nodes,
+                submitted: Instant::now(),
+                reply: tx,
+            }) {
+                // members' spans must tile the seed vector exactly
+                let mut covered = 0;
+                for (_, start, len) in &batch.members {
+                    if *start != covered {
+                        return Err("non-contiguous spans".into());
+                    }
+                    covered += len;
+                }
+                if covered != batch.seeds.len() {
+                    return Err("spans don't cover batch".into());
+                }
+                flushed.extend_from_slice(&batch.seeds);
+            }
+        }
+        if !b.is_empty() {
+            flushed.extend_from_slice(&b.flush().seeds);
+        }
+        if sent != flushed {
+            return Err(format!("seed stream changed: {} vs {}", sent.len(), flushed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_conserves_requests() {
+    use dci::coordinator::router::{RoutePolicy, Router, WorkerHandle};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{mpsc, Arc};
+    use std::time::Instant;
+
+    check("router delivers every request to exactly one worker", 40, |rng| {
+        let nw = range(rng, 1, 5);
+        let mut handles = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..nw {
+            let (tx, rx) = mpsc::channel();
+            handles.push(WorkerHandle {
+                tx,
+                queued_seeds: Arc::new(AtomicUsize::new(0)),
+            });
+            rxs.push(rx);
+        }
+        let policy = if rng.next_u64() % 2 == 0 {
+            RoutePolicy::RoundRobin
+        } else {
+            RoutePolicy::LeastLoaded
+        };
+        let router = Router::new(handles, policy).unwrap();
+        let n_reqs = range(rng, 1, 60);
+        for i in 0..n_reqs {
+            let (tx, rx) = mpsc::channel();
+            std::mem::forget(rx);
+            router
+                .route(dci::coordinator::Request {
+                    nodes: vec![i as u32],
+                    submitted: Instant::now(),
+                    reply: tx,
+                })
+                .map_err(|e| e.to_string())?;
+        }
+        drop(router);
+        let mut got: Vec<u32> = Vec::new();
+        for rx in rxs {
+            while let Ok(req) = rx.try_recv() {
+                got.extend_from_slice(&req.nodes);
+            }
+        }
+        got.sort_unstable();
+        let want: Vec<u32> = (0..n_reqs as u32).collect();
+        if got != want {
+            return Err(format!("delivered {} of {} requests", got.len(), n_reqs));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_hit_miss_accounting() {
+    use dci::config::{ComputeKind, RunConfig, SystemKind};
+    use dci::engine::run_config;
+
+    check("feature hits+misses == loaded nodes", 8, |rng| {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.system = match rng.next_u64() % 3 {
+            0 => SystemKind::Dgl,
+            1 => SystemKind::Sci,
+            _ => SystemKind::Dci,
+        };
+        cfg.batch_size = range(rng, 16, 128);
+        cfg.fanout = Fanout::parse("3,2").unwrap();
+        cfg.budget = Some(rng.next_u64() % 500_000);
+        cfg.max_batches = Some(3);
+        cfg.compute = ComputeKind::Skip;
+        cfg.seed = rng.next_u64();
+        let r = run_config(&cfg).map_err(|e| e.to_string())?;
+        let total = r.stats.feature.hits + r.stats.feature.misses;
+        if total != r.loaded_nodes {
+            return Err(format!(
+                "{:?}: hits {} + misses {} != loaded {}",
+                cfg.system, r.stats.feature.hits, r.stats.feature.misses,
+                r.loaded_nodes
+            ));
+        }
+        Ok(())
+    });
+}

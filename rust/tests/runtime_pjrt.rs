@@ -1,0 +1,154 @@
+//! PJRT integration: load the AOT HLO artifacts, execute them on the
+//! CPU PJRT client, and pin the numerics against the JAX golden files
+//! emitted by `aot.py`. These tests skip (pass with a note) when
+//! `artifacts/` has not been built — run `make artifacts` first.
+
+use dci::config::ModelKind;
+use dci::runtime::{Manifest, PjrtRuntime};
+use dci::sampler::block::{Block, MiniBatch};
+use dci::util::json::Json;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Build a MiniBatch straight from a golden file's (already padded)
+/// blocks; node-id arrays are synthetic (the runtime only needs sizes).
+fn golden_minibatch(doc: &Json, dims: &[usize], k: usize) -> MiniBatch {
+    let blocks_json = doc.req("blocks").unwrap().as_arr().unwrap();
+    let mut layers = Vec::new();
+    for (l, b) in blocks_json.iter().enumerate() {
+        let n_dst = dims[l + 1];
+        let mut blk = Block::new(n_dst, k);
+        blk.idx = b.req("idx").unwrap().as_i32_vec().unwrap();
+        blk.mask = b.req("mask").unwrap().as_f32_vec().unwrap();
+        assert_eq!(blk.idx.len(), n_dst * k);
+        layers.push(blk);
+    }
+    let nodes: Vec<Vec<u32>> = dims.iter().map(|&n| (0..n as u32).collect()).collect();
+    MiniBatch { nodes, layers }
+}
+
+fn check_golden(variant: &str, model: ModelKind) {
+    if !artifacts_ready() {
+        eprintln!("artifacts/ missing; run `make artifacts` (skipping)");
+        return;
+    }
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let meta = rt.manifest().by_name(variant).expect("variant in manifest").clone();
+    assert_eq!(meta.model, model);
+
+    let text =
+        std::fs::read_to_string(format!("artifacts/{variant}.golden.json")).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let x = doc.req("x").unwrap().as_f32_vec().unwrap();
+    let want = doc.req("logits").unwrap().as_f32_vec().unwrap();
+
+    let mb = golden_minibatch(&doc, &meta.dims, meta.ks[0]);
+    let got = rt.run_with(&meta, &x, meta.feat_dim, &mb).unwrap();
+    assert_eq!(got.len(), meta.batch_size * meta.classes);
+    assert_eq!(got.len(), want.len());
+    let mut max_err = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
+    }
+    assert!(
+        max_err < 1e-4,
+        "{variant}: PJRT vs JAX-eager rel err {max_err}"
+    );
+}
+
+#[test]
+fn golden_numerics_graphsage() {
+    check_golden("smoke_sage", ModelKind::GraphSage);
+}
+
+#[test]
+fn golden_numerics_gcn() {
+    check_golden("smoke_gcn", ModelKind::Gcn);
+}
+
+#[test]
+fn manifest_lists_serving_variants() {
+    if !artifacts_ready() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    assert!(m.artifacts.len() >= 4);
+    // the products-sim serving variant must exist with its declared caps
+    let a = m.by_name("sage_f100_c47_bs256_k842").unwrap();
+    assert_eq!(a.dims, vec![34560, 3840, 768, 256]);
+    assert_eq!(a.ks, vec![8, 4, 2]);
+    assert_eq!(a.classes, 47);
+}
+
+#[test]
+fn warmup_compiles_all_model_artifacts() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let n = rt.warmup(ModelKind::Gcn).unwrap();
+    assert!(n >= 1, "at least the smoke_gcn artifact");
+}
+
+#[test]
+fn padded_execution_with_smaller_real_batch() {
+    // a *smaller-than-padded* batch through the same artifact: exercises
+    // the padding path end-to-end and checks the padded rows don't leak.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let meta = rt.manifest().by_name("smoke_sage").unwrap().clone();
+
+    // real sizes: inputs 30 -> mids 12 -> mids 6 -> seeds 4 (k=2 each)
+    let sizes = [30usize, 12, 6, 4];
+    let mut rng = dci::util::Rng::new(9);
+    let mut layers = Vec::new();
+    for l in 0..3 {
+        let (n_src, n_dst) = (sizes[l], sizes[l + 1]);
+        let mut blk = Block::new(n_dst, 2);
+        for d in 0..n_dst {
+            for s in 0..2 {
+                if rng.f32() < 0.8 {
+                    blk.set(d, s, rng.next_u32() % n_src as u32);
+                }
+            }
+        }
+        layers.push(blk);
+    }
+    let nodes: Vec<Vec<u32>> = sizes.iter().map(|&n| (0..n as u32).collect()).collect();
+    let mb = MiniBatch { nodes, layers };
+    let x: Vec<f32> = (0..30 * meta.feat_dim).map(|_| rng.f32() - 0.5).collect();
+
+    let logits = rt.run_with(&meta, &x, meta.feat_dim, &mb).unwrap();
+    assert_eq!(logits.len(), 4 * meta.classes, "unpadded to real seeds");
+    assert!(logits.iter().all(|v| v.is_finite()));
+
+    // same inputs, second run: deterministic
+    let logits2 = rt.run_with(&meta, &x, meta.feat_dim, &mb).unwrap();
+    assert_eq!(logits, logits2);
+}
+
+#[test]
+fn select_picks_smallest_fitting() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = PjrtRuntime::load("artifacts").unwrap();
+    let sizes = [100usize, 40, 16, 8];
+    let nodes: Vec<Vec<u32>> = sizes.iter().map(|&n| (0..n as u32).collect()).collect();
+    let layers = (0..3).map(|l| Block::new(sizes[l + 1], 2)).collect();
+    let mb = MiniBatch { nodes, layers };
+    let meta = rt.select(ModelKind::GraphSage, 8, 4, &mb).unwrap();
+    assert_eq!(meta.name, "smoke_sage");
+    // nothing fits a 10^6-node batch
+    let huge: Vec<Vec<u32>> =
+        vec![vec![0; 1_000_000], vec![0; 10], vec![0; 5], vec![0; 2]];
+    let mb2 = MiniBatch {
+        nodes: huge,
+        layers: (0..3).map(|l| Block::new([10, 5, 2][l], 2)).collect(),
+    };
+    assert!(rt.select(ModelKind::GraphSage, 8, 4, &mb2).is_err());
+}
