@@ -1,0 +1,132 @@
+//! Pipeline overlap: serial (`pipeline_depth=1`) vs pipelined
+//! (`pipeline_depth=4`) engine on the same workload, with real compute
+//! (`compute=reference`) so all three stages do actual CPU work. For
+//! every system the bench asserts the pipelined run is *bit-identical*
+//! to the serial run (loaded nodes, cache hit/miss counters, logits
+//! checksum) and reports the wall-time speedup plus per-stage
+//! occupancy (stage busy time / run wall time; sampling can exceed
+//! 100% — several workers sample concurrently).
+//!
+//! The workload is products-sim's power-law graph with a narrow
+//! feature dim and hidden layer, sized so sampling, gather, and
+//! compute are comparable — the regime where Fig. 1's "preparation
+//! dominates" observation bites and overlap pays.
+//!
+//! `cargo bench --bench pipeline_overlap [-- --quick]`
+
+use dci::bench_support::{fmt_ms, fmt_speedup, jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::{InferenceEngine, InferenceReport};
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+use dci::util::json::s;
+
+fn assert_equivalent(system: SystemKind, serial: &InferenceReport, piped: &InferenceReport) {
+    assert_eq!(serial.n_batches, piped.n_batches, "{system:?}: batch count");
+    assert_eq!(serial.loaded_nodes, piped.loaded_nodes, "{system:?}: loaded nodes");
+    assert_eq!(serial.stats.sample.hits, piped.stats.sample.hits,
+               "{system:?}: sample hits");
+    assert_eq!(serial.stats.sample.misses, piped.stats.sample.misses,
+               "{system:?}: sample misses");
+    assert_eq!(serial.stats.feature.hits, piped.stats.feature.hits,
+               "{system:?}: feature hits");
+    assert_eq!(serial.stats.feature.misses, piped.stats.feature.misses,
+               "{system:?}: feature misses");
+    assert_eq!(serial.logits_checksum.to_bits(), piped.logits_checksum.to_bits(),
+               "{system:?}: logits checksum {} vs {}",
+               serial.logits_checksum, piped.logits_checksum);
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let mut report = BenchReport::new(
+        "Pipeline overlap: serial vs pipelined engine (wall time, reference compute)",
+        &["system", "serial", "pipelined", "speedup",
+          "occ(sample)", "occ(load)", "occ(compute)"],
+    );
+
+    // products-sim's graph with feature/hidden dims narrowed so the
+    // three stages are balanced (full-width features make the pure-Rust
+    // reference forward the only bottleneck, which hides the overlap
+    // this bench measures)
+    let mut spec = datasets::spec("products-sim")?;
+    spec.feat_dim = 16;
+    spec.classes = 8;
+    eprintln!("building products-sim (F=16)...");
+    let ds = spec.build();
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "products-sim".into();
+    cfg.fanout = Fanout::parse("12,8,4")?;
+    cfg.batch_size = if opts.quick { 256 } else { 512 };
+    cfg.hidden = 8;
+    cfg.compute = ComputeKind::Reference;
+    cfg.max_batches = opts.max_batches(16, 4);
+
+    let systems: &[SystemKind] = if opts.quick {
+        &[SystemKind::Dci, SystemKind::Dgl]
+    } else {
+        &[SystemKind::Dci, SystemKind::Sci, SystemKind::Dgl, SystemKind::Rain,
+          SystemKind::Ducati]
+    };
+
+    let mut speedups: Vec<f64> = Vec::new();
+    for &system in systems {
+        let mut scfg = cfg.clone();
+        scfg.system = system;
+        scfg.pipeline_depth = 1;
+        scfg.sample_threads = 1;
+        let serial = InferenceEngine::prepare(&ds, scfg.clone())?.run()?;
+
+        let mut pcfg = scfg.clone();
+        pcfg.pipeline_depth = 4;
+        pcfg.sample_threads = threads;
+        let piped = InferenceEngine::prepare(&ds, pcfg)?.run()?;
+
+        assert_equivalent(system, &serial, &piped);
+        let speedup = serial.run_wall_ns / piped.run_wall_ns.max(1.0);
+        speedups.push(speedup);
+        eprintln!(
+            "  [{}] serial {:.1}ms -> pipelined {:.1}ms ({:.2}x), counters identical",
+            system.as_str(),
+            serial.run_wall_ns / 1e6,
+            piped.run_wall_ns / 1e6,
+            speedup,
+        );
+        report.row(
+            &[
+                system.as_str().to_string(),
+                fmt_ms(serial.run_wall_ns),
+                fmt_ms(piped.run_wall_ns),
+                fmt_speedup(serial.run_wall_ns, piped.run_wall_ns),
+                format!("{:.0}%", 100.0 * piped.occupancy(&piped.sample)),
+                format!("{:.0}%", 100.0 * piped.occupancy(&piped.feature)),
+                format!("{:.0}%", 100.0 * piped.occupancy(&piped.compute)),
+            ],
+            vec![
+                ("system", s(system.as_str())),
+                ("serial_wall_ns", jnum(serial.run_wall_ns)),
+                ("pipelined_wall_ns", jnum(piped.run_wall_ns)),
+                ("speedup", jnum(speedup)),
+                ("sample_threads", jnum(threads as f64)),
+                ("occ_sample", jnum(piped.occupancy(&piped.sample))),
+                ("occ_load", jnum(piped.occupancy(&piped.feature))),
+                ("occ_compute", jnum(piped.occupancy(&piped.compute))),
+            ],
+        );
+    }
+    report.finish(&opts)?;
+    let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "pipelined speedup at depth=4, {threads} sampling threads: \
+         {min:.2}x – {max:.2}x (results bit-identical to serial)"
+    );
+    println!("SALIENT/BGL-style overlap: preparation hides behind compute; \
+              the win grows with the preparation share (Fig. 1: 56–92%)");
+    Ok(())
+}

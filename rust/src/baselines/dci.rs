@@ -20,7 +20,7 @@ use crate::cache::{adj_cache::AdjCache, alloc, feat_cache::FeatCache};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
-use crate::sampler::presample;
+use crate::sampler::presample_threads;
 use crate::util::Rng;
 
 use super::{auto_budget, PreparedSystem};
@@ -36,7 +36,7 @@ pub fn prepare(
     // t_feature (on the paper's testbed this phase runs on the GPU);
     // the CPU wall of simulating it is simulator overhead and excluded
     // (same discipline as the serving stages — DESIGN.md).
-    let stats = presample(
+    let stats = presample_threads(
         &ds.csc,
         &ds.features,
         &ds.test_nodes,
@@ -45,6 +45,7 @@ pub fn prepare(
         cfg.n_presample,
         cost,
         rng,
+        cfg.sample_threads,
     );
 
     // 2. budget + Eq. (1) split

@@ -29,7 +29,7 @@ use crate::cache::{adj_cache::AdjCache, feat_cache::FeatCache, CacheAllocation};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CostModel, DeviceMemory};
-use crate::sampler::presample;
+use crate::sampler::presample_threads;
 use crate::util::Rng;
 
 use super::{auto_budget, PreparedSystem};
@@ -68,7 +68,7 @@ pub fn prepare(
 ) -> Result<PreparedSystem> {
     // 1. epoch-grade profiling (simulated cost = modeled stage times,
     // as for DCI — but 8x more of them)
-    let stats = presample(
+    let stats = presample_threads(
         &ds.csc,
         &ds.features,
         &ds.test_nodes,
@@ -77,6 +77,7 @@ pub fn prepare(
         cfg.n_presample * DUCATI_PROFILE_FACTOR,
         cost,
         rng,
+        cfg.sample_threads,
     );
 
     // explicit budgets are clamped to what the device can actually hold

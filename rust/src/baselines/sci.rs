@@ -12,7 +12,7 @@ use crate::cache::feat_cache::FeatCache;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
-use crate::sampler::presample;
+use crate::sampler::presample_threads;
 use crate::util::Rng;
 
 use super::{auto_budget, PreparedSystem};
@@ -24,7 +24,7 @@ pub fn prepare(
     cost: &CostModel,
     rng: &mut Rng,
 ) -> Result<PreparedSystem> {
-    let stats = presample(
+    let stats = presample_threads(
         &ds.csc,
         &ds.features,
         &ds.test_nodes,
@@ -33,6 +33,7 @@ pub fn prepare(
         cfg.n_presample,
         cost,
         rng,
+        cfg.sample_threads,
     );
     // explicit budgets are clamped to what the device can actually hold
     let total = cfg

@@ -113,6 +113,15 @@ pub struct RunConfig {
     pub budget: Option<u64>,
     /// Pre-sampling batches (Fig. 11; the paper settles on 8).
     pub n_presample: usize,
+    /// Capacity of each inter-stage queue in the pipeline executor: 1
+    /// runs the serial three-stage loop; >1 overlaps sampling, feature
+    /// gather, and compute across batches (SALIENT-style), with total
+    /// in-flight batches bounded by ~`2 × depth + sample_threads + 2`.
+    /// Results are bit-identical at any depth.
+    pub pipeline_depth: usize,
+    /// Sampling worker threads (the pipeline's sampling pool and the
+    /// pre-sampling profiler). Results are bit-identical at any value.
+    pub sample_threads: usize,
     pub compute: ComputeKind,
     /// Cap on inference batches (None = full test set).
     pub max_batches: Option<usize>,
@@ -136,6 +145,8 @@ impl Default for RunConfig {
             hidden: 128,
             budget: None,
             n_presample: 8,
+            pipeline_depth: 1,
+            sample_threads: 1,
             compute: ComputeKind::Skip,
             max_batches: None,
             device_capacity: None,
@@ -179,6 +190,18 @@ impl RunConfig {
                     }
                 }
                 "presample" => self.n_presample = value.parse().context("presample")?,
+                "pipeline" | "pipeline-depth" => {
+                    self.pipeline_depth = value.parse().context("pipeline-depth")?;
+                    if self.pipeline_depth == 0 {
+                        bail!("pipeline-depth must be positive (1 = serial)");
+                    }
+                }
+                "sample-threads" => {
+                    self.sample_threads = value.parse().context("sample-threads")?;
+                    if self.sample_threads == 0 {
+                        bail!("sample-threads must be positive");
+                    }
+                }
                 "compute" => self.compute = ComputeKind::parse(value)?,
                 "max-batches" => self.max_batches = Some(value.parse()?),
                 "device" => self.device_capacity = Some(parse_bytes(value)?),
@@ -192,7 +215,7 @@ impl RunConfig {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} {} fanout={} bs={} system={} presample={}",
             self.dataset,
             self.model.as_str(),
@@ -200,7 +223,14 @@ impl RunConfig {
             self.batch_size,
             self.system.as_str(),
             self.n_presample
-        )
+        );
+        if self.pipeline_depth > 1 || self.sample_threads > 1 {
+            s.push_str(&format!(
+                " pipeline={} threads={}",
+                self.pipeline_depth, self.sample_threads
+            ));
+        }
+        s
     }
 }
 
@@ -224,6 +254,8 @@ mod tests {
             "presample=16",
             "compute=reference",
             "seed=7",
+            "pipeline=4",
+            "sample-threads=3",
         ]))
         .unwrap();
         assert_eq!(cfg.dataset, "reddit-sim");
@@ -235,6 +267,19 @@ mod tests {
         assert_eq!(cfg.n_presample, 16);
         assert_eq!(cfg.compute, ComputeKind::Reference);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.pipeline_depth, 4);
+        assert_eq!(cfg.sample_threads, 3);
+    }
+
+    #[test]
+    fn pipeline_defaults_are_serial() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.pipeline_depth, 1);
+        assert_eq!(cfg.sample_threads, 1);
+        // pipeline-depth alias parses too
+        let cfg = RunConfig::from_args(&args(&["pipeline-depth=2"])).unwrap();
+        assert_eq!(cfg.pipeline_depth, 2);
+        assert!(cfg.summary().contains("pipeline=2"));
     }
 
     #[test]
@@ -251,6 +296,8 @@ mod tests {
         assert!(RunConfig::from_args(&args(&["model=gat"])).is_err());
         assert!(RunConfig::from_args(&args(&["system=pyg"])).is_err());
         assert!(RunConfig::from_args(&args(&["compute=gpu"])).is_err());
+        assert!(RunConfig::from_args(&args(&["pipeline=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["sample-threads=0"])).is_err());
     }
 
     #[test]

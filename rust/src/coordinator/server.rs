@@ -63,6 +63,12 @@ impl Server {
             let ds = Arc::clone(&ds);
             let mut rc = run_cfg.clone();
             rc.seed = run_cfg.seed.wrapping_add(w as u64);
+            // Sampling threads (pipeline workers + presample profiling)
+            // are per-engine; divide the configured budget across the
+            // workers so `n_workers` engines don't oversubscribe the
+            // host with `n_workers × sample_threads` samplers. Results
+            // are thread-count-invariant, so this only shifts wall time.
+            rc.sample_threads = (run_cfg.sample_threads / cfg.n_workers.max(1)).max(1);
             let batcher_cfg = cfg.batcher.clone();
             let queued2 = Arc::clone(&queued);
             let m2 = Arc::clone(&m);

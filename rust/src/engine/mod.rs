@@ -2,9 +2,18 @@
 //! loading → computation) the paper decomposes in Fig. 1, over any of
 //! the five prepared systems.
 //!
+//! The stage bodies live in [`stages`] and are shared by three
+//! schedulers: the serial batch loop (`pipeline_depth = 1`), the
+//! overlapped pipeline executor in [`pipeline`] (`pipeline_depth > 1`,
+//! bit-identical results — see the pipeline equivalence tests), and the
+//! coordinator's per-request path ([`InferenceEngine::infer_once`]).
+//!
 //! Every stage accumulates *measured wall time* plus *modeled transfer
 //! time* (see `crate::mem`); reports keep the two separate so benches
 //! can show both and EXPERIMENTS.md can discuss the substitution.
+
+pub mod pipeline;
+pub mod stages;
 
 use std::collections::HashSet;
 use std::time::Instant;
@@ -15,9 +24,9 @@ use crate::baselines::{self, PreparedSystem};
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{datasets, Dataset, NodeId};
-use crate::mem::{DeviceMemory, TransferLedger, PAPER_RESERVE_BYTES};
+use crate::mem::{DeviceMemory, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
-use crate::sampler::{presample::row_txns, seed_batches, NeighborSampler, UvaAdj};
+use crate::sampler::{seed_batches, SamplerPool};
 use crate::util::Rng;
 
 /// Wall + modeled time of one pipeline stage.
@@ -59,6 +68,10 @@ pub struct InferenceReport {
     pub oom: Option<String>,
     /// Σ|logits| over all executed batches (sanity; 0 when compute=skip).
     pub logits_checksum: f64,
+    /// Wall time of the whole batch loop (serial or pipelined). Under
+    /// the pipeline this is what shrinks while the per-stage `wall_ns`
+    /// sums (stage *busy* time) stay put — their ratio is occupancy.
+    pub run_wall_ns: f64,
 }
 
 impl InferenceReport {
@@ -100,6 +113,18 @@ impl InferenceReport {
             self.prep_ns() / t
         }
     }
+
+    /// Stage busy time as a fraction of the run's wall time. Under the
+    /// pipelined executor the sampling stage can exceed 1.0 (several
+    /// workers sampling concurrently); the serial loop's stages sum to
+    /// ~1.0 by construction.
+    pub fn occupancy(&self, stage: &StageTimes) -> f64 {
+        if self.run_wall_ns == 0.0 {
+            0.0
+        } else {
+            stage.wall_ns / self.run_wall_ns
+        }
+    }
 }
 
 /// Modeled FLOP count of one mini-batch forward pass (gather-aggregate
@@ -134,7 +159,14 @@ pub struct InferenceEngine<'d> {
     pub prepared: PreparedSystem,
     pub device: DeviceMemory,
     compute: Compute,
-    rng: Rng,
+    /// Shared sampler scratch: serial runs, pipeline workers, and
+    /// served requests all check samplers out of here instead of
+    /// allocating two O(n_nodes) arrays per use.
+    pool: SamplerPool,
+    /// Requests served via `infer_once` (indexes their RNG streams).
+    served: u64,
+    /// Reused gather buffer for the serving path.
+    x_buf: Vec<f32>,
 }
 
 impl<'d> InferenceEngine<'d> {
@@ -158,7 +190,8 @@ impl<'d> InferenceEngine<'d> {
             ds.spec.classes,
             &cfg.artifacts_dir,
         )?;
-        Ok(InferenceEngine { ds, cfg, prepared, device, compute, rng })
+        let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
+        Ok(InferenceEngine { ds, cfg, prepared, device, compute, pool, served: 0, x_buf: Vec::new() })
     }
 
     /// Build an engine around an externally prepared system (ablation
@@ -183,8 +216,8 @@ impl<'d> InferenceEngine<'d> {
             ds.spec.classes,
             &cfg.artifacts_dir,
         )?;
-        let rng = Rng::new(cfg.seed.wrapping_add(1));
-        Ok(InferenceEngine { ds, cfg, prepared, device, compute, rng })
+        let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
+        Ok(InferenceEngine { ds, cfg, prepared, device, compute, pool, served: 0, x_buf: Vec::new() })
     }
 
     /// Run inference over the full test set (or `max_batches`).
@@ -207,14 +240,8 @@ impl<'d> InferenceEngine<'d> {
             .max_batches
             .map(|m| m.min(batches.len()))
             .unwrap_or(batches.len());
-        let clusters: Option<&[usize]> =
-            self.prepared.batch_order.as_ref().map(|(_, c)| c.as_slice());
-
-        let mut sampler =
-            NeighborSampler::with_nodes(self.cfg.fanout.clone(), self.ds.csc.n_nodes());
-        let dim = self.ds.features.dim();
-        let row_bytes = self.ds.features.row_bytes();
-        let txns = row_txns(row_bytes, &self.cfg.cost);
+        // batch_order's cluster ids were consumed at prepare time (they
+        // grouped the RAIN batch order); only the order matters here
 
         let mut report = InferenceReport {
             system: self.prepared.kind,
@@ -230,6 +257,7 @@ impl<'d> InferenceEngine<'d> {
             alloc: self.prepared.alloc,
             oom: None,
             logits_checksum: 0.0,
+            run_wall_ns: 0.0,
         };
 
         // RAIN stages the entire node-feature tensor in device memory to
@@ -245,121 +273,82 @@ impl<'d> InferenceEngine<'d> {
             }
             rain_claim = need;
         }
+
+        let run0 = Instant::now();
+        let result = if self.cfg.pipeline_depth > 1 && n > 1 {
+            pipeline::run_pipelined(self, batches, n, &mut report)
+        } else {
+            self.run_serial(batches, n, &mut report)
+        };
+        report.run_wall_ns = run0.elapsed().as_nanos() as f64;
+
+        // release RAIN's staged feature tensor
+        self.device.free(rain_claim);
+        result?;
+        Ok(report)
+    }
+
+    /// The serial scheduler: one batch fully through all three stages
+    /// before the next starts (the Fig. 1 baseline the pipeline hides).
+    fn run_serial(
+        &mut self,
+        batches: &[&[NodeId]],
+        n: usize,
+        report: &mut InferenceReport,
+    ) -> Result<()> {
+        let mut sampler = self.pool.checkout();
         // previous batch's inputs (the LSH ordering makes consecutive
         // batches similar; reuse rate = overlap with the previous batch)
         let mut prev_inputs: HashSet<NodeId> = HashSet::new();
-        let _ = clusters; // cluster ids grouped the order at prepare time
-
         let mut x: Vec<f32> = Vec::new();
+        let dim = self.ds.features.dim();
 
-        for bi in 0..n {
-            let seeds = batches[bi];
-
+        for (bi, seeds) in batches.iter().take(n).enumerate() {
             // ---- stage 1: sampling -------------------------------------
-            let mut s_ledger = TransferLedger::new();
-            let t0 = Instant::now();
-            let mb = match &self.prepared.adj_cache {
-                Some(c) => sampler.sample_batch(
-                    &c.source(&self.ds.csc),
-                    seeds,
-                    &mut self.rng,
-                    &mut s_ledger,
-                ),
-                None => sampler.sample_batch(
-                    &UvaAdj { csc: &self.ds.csc },
-                    seeds,
-                    &mut self.rng,
-                    &mut s_ledger,
-                ),
-            };
-            report
-                .sample
-                .add(t0.elapsed().as_nanos() as f64, s_ledger.modeled_ns(&self.cfg.cost));
-            report.stats.sample.merge(&s_ledger);
+            let sb = stages::sample_stage(
+                self.ds, &self.prepared, &mut sampler, seeds, bi, self.cfg.seed,
+            );
+            report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&self.cfg.cost));
+            report.stats.sample.merge(&sb.ledger);
 
             // ---- stage 2: feature loading ------------------------------
-            let inputs = mb.input_nodes();
-            report.loaded_nodes += inputs.len() as u64;
-            x.clear();
-            x.resize(inputs.len() * dim, 0.0);
-            let mut f_ledger = TransferLedger::new();
-            f_ledger.launch();
-            let t0 = Instant::now();
-            if self.prepared.inter_batch_reuse {
-                // RAIN: rows resident from the previous batch are free
-                for (i, &v) in inputs.iter().enumerate() {
-                    let out = &mut x[i * dim..(i + 1) * dim];
-                    self.ds.features.copy_row_into(v, out);
-                    if prev_inputs.contains(&v) {
-                        f_ledger.hit(row_bytes);
-                    } else {
-                        f_ledger.miss(row_bytes, txns);
-                    }
-                }
-            } else if let Some(cache) = &self.prepared.feat_cache {
-                for (i, &v) in inputs.iter().enumerate() {
-                    let out = &mut x[i * dim..(i + 1) * dim];
-                    if let Some(row) = cache.lookup(v) {
-                        out.copy_from_slice(row);
-                        f_ledger.hit(row_bytes);
-                    } else {
-                        self.ds.features.copy_row_into(v, out);
-                        f_ledger.miss(row_bytes, txns);
-                    }
-                }
-            } else {
-                for (i, &v) in inputs.iter().enumerate() {
-                    self.ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
-                    f_ledger.miss(row_bytes, txns);
-                }
-            }
-            report
-                .feature
-                .add(t0.elapsed().as_nanos() as f64, f_ledger.modeled_ns(&self.cfg.cost));
+            let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
+                self.ds, &self.prepared, &self.cfg.cost, &sb.mb, &mut prev_inputs, &mut x,
+            );
+            report.loaded_nodes += n_inputs as u64;
+            report.feature.add(f_wall, f_ledger.modeled_ns(&self.cfg.cost));
             report.stats.feature.merge(&f_ledger);
 
-            if self.prepared.inter_batch_reuse {
-                prev_inputs = inputs.iter().copied().collect();
-            }
-
             // ---- stage 3: computation ----------------------------------
-            let mut c_ledger = TransferLedger::new();
-            c_ledger.launch();
-            // block tensors (idx + mask) upload
-            let block_bytes: u64 = mb
-                .layers
-                .iter()
-                .map(|b| (b.idx.len() * 4 + b.mask.len() * 4) as u64)
-                .sum();
-            c_ledger.upload(block_bytes);
-            let t0 = Instant::now();
-            let logits = self
-                .compute
-                .run(self.cfg.model, &x, dim, &mb)
-                .with_context(|| format!("compute failed on batch {bi}"))?;
-            let mut modeled = c_ledger.modeled_ns(&self.cfg.cost);
-            if matches!(self.compute, Compute::Skip) {
-                // charge the modeled GPU execution time instead
-                modeled += self.cfg.cost.compute_ns(model_flops(
-                    self.cfg.model, &mb, dim, self.cfg.hidden, self.ds.spec.classes,
-                ));
-            }
-            report
-                .compute
-                .add(t0.elapsed().as_nanos() as f64, modeled);
-            if let Some(l) = logits {
+            let cb = match stages::compute_stage(
+                &mut self.compute, &self.cfg, self.ds.spec.classes, dim, &sb.mb, &x,
+            ) {
+                Ok(cb) => cb,
+                Err(e) => {
+                    // keep the scratch pooled even on the error path
+                    self.pool.checkin(sampler);
+                    return Err(e.context(format!("compute failed on batch {bi}")));
+                }
+            };
+            report.compute.add(cb.wall_ns, cb.modeled_ns);
+            if let Some(l) = cb.logits {
                 report.logits_checksum += l.iter().map(|v| v.abs() as f64).sum::<f64>();
             }
 
             report.n_batches += 1;
             report.n_seeds += seeds.len();
         }
-
-        // release RAIN's staged feature tensor
-        self.device.free(rain_claim);
-        Ok(report)
+        self.pool.checkin(sampler);
+        Ok(())
     }
 }
+
+/// Serving requests draw from a different stream family than `run()`
+/// batches and the presample profiler (which share `(seed, index)` by
+/// design): without the tag, request `i` would replay profile batch
+/// `i`'s exact neighbor draws, oracle-biasing measured serving hit
+/// rates upward.
+const SERVE_STREAM_XOR: u64 = 0x5eed_ca11_ab1e_0001;
 
 /// Output of a single served batch (the coordinator's unit of work).
 #[derive(Debug, Clone)]
@@ -374,82 +363,51 @@ pub struct BatchOutput {
 impl<'d> InferenceEngine<'d> {
     /// Serve one batch of seed nodes (the coordinator's request path).
     /// RAIN's cluster-stateful mode is not servable this way.
+    ///
+    /// Hot-path allocation: the sampler (two O(n_nodes) scratch arrays)
+    /// comes from the engine's pool and the gather buffer is reused, so
+    /// steady-state serving allocates only the mini-batch itself.
     pub fn infer_once(&mut self, seeds: &[NodeId]) -> Result<BatchOutput> {
         anyhow::ensure!(
             !self.prepared.inter_batch_reuse,
             "RAIN's batch-stateful mode cannot serve ad-hoc requests"
         );
-        let mut sampler =
-            NeighborSampler::with_nodes(self.cfg.fanout.clone(), self.ds.csc.n_nodes());
-        let dim = self.ds.features.dim();
-        let row_bytes = self.ds.features.row_bytes();
-        let txns = row_txns(row_bytes, &self.cfg.cost);
+        let request = self.served as usize;
+        self.served += 1;
 
         // sample
-        let mut s_ledger = TransferLedger::new();
-        let t0 = Instant::now();
-        let mb = match &self.prepared.adj_cache {
-            Some(c) => sampler.sample_batch(&c.source(&self.ds.csc), seeds,
-                                            &mut self.rng, &mut s_ledger),
-            None => sampler.sample_batch(&UvaAdj { csc: &self.ds.csc }, seeds,
-                                         &mut self.rng, &mut s_ledger),
-        };
+        let mut sampler = self.pool.checkout();
+        let sb = stages::sample_stage(
+            self.ds, &self.prepared, &mut sampler, seeds, request,
+            self.cfg.seed ^ SERVE_STREAM_XOR,
+        );
+        self.pool.checkin(sampler);
         let sample = StageTimes {
-            wall_ns: t0.elapsed().as_nanos() as f64,
-            modeled_ns: s_ledger.modeled_ns(&self.cfg.cost),
+            wall_ns: sb.wall_ns,
+            modeled_ns: sb.ledger.modeled_ns(&self.cfg.cost),
         };
 
         // gather
-        let inputs = mb.input_nodes();
-        let mut x = vec![0.0f32; inputs.len() * dim];
-        let mut f_ledger = TransferLedger::new();
-        f_ledger.launch();
-        let t0 = Instant::now();
-        if let Some(cache) = &self.prepared.feat_cache {
-            for (i, &v) in inputs.iter().enumerate() {
-                let out = &mut x[i * dim..(i + 1) * dim];
-                if let Some(row) = cache.lookup(v) {
-                    out.copy_from_slice(row);
-                    f_ledger.hit(row_bytes);
-                } else {
-                    self.ds.features.copy_row_into(v, out);
-                    f_ledger.miss(row_bytes, txns);
-                }
-            }
-        } else {
-            for (i, &v) in inputs.iter().enumerate() {
-                self.ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
-                f_ledger.miss(row_bytes, txns);
-            }
-        }
+        let mut no_prev: HashSet<NodeId> = HashSet::new();
+        let mut x = std::mem::take(&mut self.x_buf);
+        let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
+            self.ds, &self.prepared, &self.cfg.cost, &sb.mb, &mut no_prev, &mut x,
+        );
         let feature = StageTimes {
-            wall_ns: t0.elapsed().as_nanos() as f64,
+            wall_ns: f_wall,
             modeled_ns: f_ledger.modeled_ns(&self.cfg.cost),
         };
 
-        // compute
-        let mut c_ledger = TransferLedger::new();
-        c_ledger.launch();
-        let block_bytes: u64 = mb
-            .layers
-            .iter()
-            .map(|b| (b.idx.len() * 4 + b.mask.len() * 4) as u64)
-            .sum();
-        c_ledger.upload(block_bytes);
-        let t0 = Instant::now();
-        let logits = self.compute.run(self.cfg.model, &x, dim, &mb)?;
-        let mut modeled = c_ledger.modeled_ns(&self.cfg.cost);
-        if matches!(self.compute, Compute::Skip) {
-            modeled += self.cfg.cost.compute_ns(model_flops(
-                self.cfg.model, &mb, dim, self.cfg.hidden, self.ds.spec.classes,
-            ));
-        }
-        let compute = StageTimes {
-            wall_ns: t0.elapsed().as_nanos() as f64,
-            modeled_ns: modeled,
-        };
+        // compute (restore the gather buffer before propagating errors)
+        let cb = stages::compute_stage(
+            &mut self.compute, &self.cfg, self.ds.spec.classes, self.ds.features.dim(),
+            &sb.mb, &x,
+        );
+        self.x_buf = x;
+        let cb = cb?;
+        let compute = StageTimes { wall_ns: cb.wall_ns, modeled_ns: cb.modeled_ns };
 
-        Ok(BatchOutput { logits, sample, feature, compute, n_inputs: inputs.len() })
+        Ok(BatchOutput { logits: cb.logits, sample, feature, compute, n_inputs })
     }
 }
 
@@ -566,6 +524,7 @@ mod tests {
         let r = e.run().unwrap();
         assert!(r.logits_checksum > 0.0);
         assert!(r.compute.wall_ns > 0.0);
+        assert!(r.run_wall_ns > 0.0);
         assert_eq!(r.n_seeds, 6 * 64);
     }
 
@@ -583,6 +542,35 @@ mod tests {
         let db = run(SystemKind::Dgl);
         assert_eq!(da.loaded_nodes, db.loaded_nodes);
         assert_eq!(da.stats.feature.misses, db.stats.feature.misses);
+    }
+
+    #[test]
+    fn pipelined_run_matches_serial_smoke() {
+        // the full matrix lives in tests/pipeline_equivalence.rs; this
+        // is the fast in-crate guard
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut cfg = tiny_cfg(SystemKind::Dci);
+        let serial = InferenceEngine::prepare(&ds, cfg.clone()).unwrap().run().unwrap();
+        cfg.pipeline_depth = 3;
+        cfg.sample_threads = 2;
+        let piped = InferenceEngine::prepare(&ds, cfg).unwrap().run().unwrap();
+        assert_eq!(serial.loaded_nodes, piped.loaded_nodes);
+        assert_eq!(serial.stats.sample.hits, piped.stats.sample.hits);
+        assert_eq!(serial.stats.sample.misses, piped.stats.sample.misses);
+        assert_eq!(serial.stats.feature.hits, piped.stats.feature.hits);
+        assert_eq!(serial.stats.feature.misses, piped.stats.feature.misses);
+        assert_eq!(serial.n_batches, piped.n_batches);
+    }
+
+    #[test]
+    fn serving_path_reuses_pooled_sampler() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut e = InferenceEngine::prepare(&ds, tiny_cfg(SystemKind::Dci)).unwrap();
+        let seeds: Vec<NodeId> = ds.test_nodes[..16].to_vec();
+        let a = e.infer_once(&seeds).unwrap();
+        let b = e.infer_once(&seeds).unwrap();
+        assert!(a.n_inputs > 0);
+        assert!(b.sample.wall_ns > 0.0);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Staged pipeline executor: a sampling worker pool, an in-order
+//! feature-gather stage, and an in-order compute stage connected by
+//! bounded channels, so up to `cfg.pipeline_depth` mini-batches are in
+//! flight concurrently. Batch *i+1*'s sampling no longer waits for
+//! batch *i*'s compute — the SALIENT/BGL overlap that hides the 56–92%
+//! preparation share Fig. 1 measures (see EXPERIMENTS.md §Perf and the
+//! `pipeline_overlap` bench).
+//!
+//! Topology (std::thread only; each inter-stage channel is an
+//! `mpsc::sync_channel` with capacity `pipeline_depth`, so the total
+//! number of in-flight batches is bounded by roughly
+//! `2 × pipeline_depth + sample_threads + 2` — two queues plus one
+//! batch held per worker and per stage thread):
+//!
+//! ```text
+//!   sampling workers (cfg.sample_threads, pooled scratch)
+//!        │  SampledBatch, any order
+//!        ▼
+//!   gather thread (reorder buffer → strictly batch-index order;
+//!                  owns RAIN's previous-batch residency set)
+//!        │  Gathered, in order
+//!        ▼
+//!   caller thread: compute + report folding, in order
+//! ```
+//!
+//! Determinism: per-batch RNGs come from `stages::batch_rng`, the
+//! gather and compute stages run in batch-index order, and every ledger
+//! folds into the report in that same order — so counters, modeled
+//! times, and the logits checksum are bit-identical to the serial path
+//! at any `pipeline_depth` / `sample_threads` setting (the pipeline
+//! equivalence tests assert exactly this).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::graph::NodeId;
+use crate::mem::TransferLedger;
+
+use super::stages::{self, SampledBatch};
+use super::{InferenceEngine, InferenceReport};
+
+/// A batch that has cleared the gather stage.
+struct Gathered {
+    sb: SampledBatch,
+    x: Vec<f32>,
+    ledger: TransferLedger,
+    wall_ns: f64,
+    n_inputs: usize,
+}
+
+/// Run `batches[..n]` through the three-stage pipeline, folding results
+/// into `report` exactly as the serial loop would.
+pub(super) fn run_pipelined(
+    engine: &mut InferenceEngine<'_>,
+    batches: &[&[NodeId]],
+    n: usize,
+    report: &mut InferenceReport,
+) -> Result<()> {
+    let depth = engine.cfg.pipeline_depth;
+    let workers = engine.cfg.sample_threads.max(1).min(n);
+
+    // split the engine borrow: shared state for the stage threads,
+    // the mutable compute backend for this thread
+    let ds = engine.ds;
+    let prepared = &engine.prepared;
+    let cfg = &engine.cfg;
+    let pool = &engine.pool;
+    let compute = &mut engine.compute;
+    let feat_dim = ds.features.dim();
+    let classes = ds.spec.classes;
+
+    let next = AtomicUsize::new(0);
+    let (s_tx, s_rx) = mpsc::sync_channel::<SampledBatch>(depth);
+    let (g_tx, g_rx) = mpsc::sync_channel::<Gathered>(depth);
+
+    // Claim-ahead tickets: a worker may not *start* a batch until fewer
+    // than `depth + workers` batches are awaiting gather. This caps the
+    // gather stage's reorder buffer (one slow straggler batch could
+    // otherwise let fast workers race arbitrarily far ahead, stacking
+    // up O(n) sampled batches in memory). Gather returns one ticket per
+    // batch it finishes; dropping the sender doubles as shutdown.
+    let (ticket_tx, ticket_rx) = mpsc::channel::<()>();
+    for _ in 0..(depth + workers) {
+        let _ = ticket_tx.send(());
+    }
+    let tickets = Mutex::new(ticket_rx);
+
+    // Gather-buffer recycling: compute returns spent `x` buffers so the
+    // pipelined gather stage is allocation-flat like the serial loop's
+    // single reused buffer.
+    let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<f32>>();
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- stage 1: sampling worker pool -------------------------
+        for _ in 0..workers {
+            let s_tx = s_tx.clone();
+            let next = &next;
+            let tickets = &tickets;
+            scope.spawn(move || {
+                let mut sampler = pool.checkout();
+                loop {
+                    // Err = ticket sender dropped = gather unwound
+                    if tickets.lock().unwrap().recv().is_err() {
+                        break;
+                    }
+                    let bi = next.fetch_add(1, Ordering::Relaxed);
+                    if bi >= n {
+                        break;
+                    }
+                    let sb = stages::sample_stage(
+                        ds, prepared, &mut sampler, batches[bi], bi, cfg.seed,
+                    );
+                    if s_tx.send(sb).is_err() {
+                        break; // downstream unwound (compute error)
+                    }
+                }
+                pool.checkin(sampler);
+            });
+        }
+        drop(s_tx); // gather's recv loop ends when the workers finish
+
+        // ---- stage 2: in-order feature gather ----------------------
+        scope.spawn(move || {
+            // workers finish out of order; a small reorder buffer
+            // (bounded by depth + workers) restores batch order, which
+            // both preserves RAIN's previous-batch reuse semantics and
+            // keeps downstream folding deterministic
+            let mut reorder: HashMap<usize, SampledBatch> = HashMap::new();
+            let mut want = 0usize;
+            let mut prev_inputs: HashSet<NodeId> = HashSet::new();
+            for sb in s_rx {
+                reorder.insert(sb.index, sb);
+                while let Some(sb) = reorder.remove(&want) {
+                    // reuse a spent buffer when compute has returned one
+                    let mut x = recycle_rx.try_recv().unwrap_or_default();
+                    let (ledger, wall_ns, n_inputs) = stages::gather_stage(
+                        ds, prepared, &cfg.cost, &sb.mb, &mut prev_inputs, &mut x,
+                    );
+                    want += 1;
+                    // recycle this batch's claim-ahead ticket (receiver
+                    // may already be gone during orderly shutdown)
+                    let _ = ticket_tx.send(());
+                    if g_tx.send(Gathered { sb, x, ledger, wall_ns, n_inputs }).is_err() {
+                        return; // downstream unwound
+                    }
+                }
+            }
+            // dropping ticket_tx here wakes any worker still blocked
+            // on a ticket so it can observe shutdown
+        });
+
+        // ---- stage 3: compute + report folding, on this thread -----
+        for g in g_rx {
+            let sb = g.sb;
+            report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&cfg.cost));
+            report.stats.sample.merge(&sb.ledger);
+            report.loaded_nodes += g.n_inputs as u64;
+            report.feature.add(g.wall_ns, g.ledger.modeled_ns(&cfg.cost));
+            report.stats.feature.merge(&g.ledger);
+
+            let cb = stages::compute_stage(compute, cfg, classes, feat_dim, &sb.mb, &g.x)
+                .with_context(|| format!("compute failed on batch {}", sb.index))?;
+            // hand the buffer back to gather (gone during shutdown: fine)
+            let _ = recycle_tx.send(g.x);
+            report.compute.add(cb.wall_ns, cb.modeled_ns);
+            if let Some(l) = cb.logits {
+                report.logits_checksum += l.iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+            report.n_batches += 1;
+            report.n_seeds += batches[sb.index].len();
+        }
+        Ok(())
+        // on error the receivers drop here: gather's send fails → it
+        // returns → the workers' sends fail → they exit; scope joins all
+    })
+}

@@ -1,0 +1,162 @@
+//! The three stage bodies — sampling, feature gather, compute — shared
+//! by every execution mode of the engine: the serial batch loop, the
+//! staged pipeline executor ([`super::pipeline`]), and the
+//! coordinator's per-request path (`infer_once`). One implementation
+//! per stage is what guarantees the pipelined engine is *semantically*
+//! the serial engine, just scheduled differently.
+//!
+//! Determinism contract: a batch's sampling RNG is [`batch_rng`]` =
+//! Rng::for_stream(cfg.seed, batch_index)` — a pure function of the
+//! run seed and the batch's position, never of which thread runs it or
+//! when. Stage outputs therefore depend only on `(prepared, dataset,
+//! seeds, batch_index, seed)`, and any scheduler that folds per-batch
+//! ledgers in batch-index order reproduces the serial run bit for bit.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::PreparedSystem;
+use crate::config::RunConfig;
+use crate::graph::{Dataset, NodeId};
+use crate::mem::{CostModel, TransferLedger};
+use crate::runtime::Compute;
+use crate::sampler::{presample::row_txns, MiniBatch, NeighborSampler, UvaAdj};
+use crate::util::Rng;
+
+use super::model_flops;
+
+/// Per-batch sampling RNG (see the module docs for the contract).
+pub fn batch_rng(seed: u64, batch_index: u64) -> Rng {
+    Rng::for_stream(seed, batch_index)
+}
+
+/// Output of the sampling stage for one mini-batch.
+pub struct SampledBatch {
+    /// Position in the run's batch order (reordering key downstream).
+    pub index: usize,
+    pub mb: MiniBatch,
+    pub ledger: TransferLedger,
+    pub wall_ns: f64,
+}
+
+/// Stage 1: fan-out sampling over the system's adjacency source.
+pub fn sample_stage(
+    ds: &Dataset,
+    prepared: &PreparedSystem,
+    sampler: &mut NeighborSampler,
+    seeds: &[NodeId],
+    index: usize,
+    seed: u64,
+) -> SampledBatch {
+    let mut rng = batch_rng(seed, index as u64);
+    let mut ledger = TransferLedger::new();
+    let t0 = Instant::now();
+    let mb = match &prepared.adj_cache {
+        Some(c) => sampler.sample_batch(&c.source(&ds.csc), seeds, &mut rng, &mut ledger),
+        None => sampler.sample_batch(&UvaAdj { csc: &ds.csc }, seeds, &mut rng, &mut ledger),
+    };
+    SampledBatch { index, mb, ledger, wall_ns: t0.elapsed().as_nanos() as f64 }
+}
+
+/// Stage 2: gather input-node features into `x` (reused across calls).
+///
+/// `prev_inputs` carries RAIN's previous-batch residency between
+/// consecutive calls; it is read and then replaced only when the
+/// prepared system does inter-batch reuse, so callers that never serve
+/// RAIN can pass any (empty) set. Returns the stage's transfer ledger,
+/// wall ns, and the input-node count.
+pub fn gather_stage(
+    ds: &Dataset,
+    prepared: &PreparedSystem,
+    cost: &CostModel,
+    mb: &MiniBatch,
+    prev_inputs: &mut HashSet<NodeId>,
+    x: &mut Vec<f32>,
+) -> (TransferLedger, f64, usize) {
+    let dim = ds.features.dim();
+    let row_bytes = ds.features.row_bytes();
+    let txns = row_txns(row_bytes, cost);
+    let inputs = mb.input_nodes();
+    x.clear();
+    x.resize(inputs.len() * dim, 0.0);
+
+    let mut ledger = TransferLedger::new();
+    ledger.launch();
+    let t0 = Instant::now();
+    if prepared.inter_batch_reuse {
+        // RAIN: rows resident from the previous batch are free
+        for (i, &v) in inputs.iter().enumerate() {
+            let out = &mut x[i * dim..(i + 1) * dim];
+            ds.features.copy_row_into(v, out);
+            if prev_inputs.contains(&v) {
+                ledger.hit(row_bytes);
+            } else {
+                ledger.miss(row_bytes, txns);
+            }
+        }
+    } else if let Some(cache) = &prepared.feat_cache {
+        for (i, &v) in inputs.iter().enumerate() {
+            let out = &mut x[i * dim..(i + 1) * dim];
+            if let Some(row) = cache.lookup(v) {
+                out.copy_from_slice(row);
+                ledger.hit(row_bytes);
+            } else {
+                ds.features.copy_row_into(v, out);
+                ledger.miss(row_bytes, txns);
+            }
+        }
+    } else {
+        for (i, &v) in inputs.iter().enumerate() {
+            ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
+            ledger.miss(row_bytes, txns);
+        }
+    }
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+
+    if prepared.inter_batch_reuse {
+        prev_inputs.clear();
+        prev_inputs.extend(inputs.iter().copied());
+    }
+    (ledger, wall_ns, inputs.len())
+}
+
+/// Output of the compute stage for one mini-batch.
+pub struct ComputedBatch {
+    /// Logits (`None` when compute=skip).
+    pub logits: Option<Vec<f32>>,
+    /// Modeled transfer + (for compute=skip) modeled GPU execution ns.
+    pub modeled_ns: f64,
+    pub wall_ns: f64,
+}
+
+/// Stage 3: block-tensor upload accounting + model execution.
+pub fn compute_stage(
+    compute: &mut Compute,
+    cfg: &RunConfig,
+    classes: usize,
+    feat_dim: usize,
+    mb: &MiniBatch,
+    x: &[f32],
+) -> Result<ComputedBatch> {
+    let mut ledger = TransferLedger::new();
+    ledger.launch();
+    // block tensors (idx + mask) upload
+    let block_bytes: u64 = mb
+        .layers
+        .iter()
+        .map(|b| (b.idx.len() * 4 + b.mask.len() * 4) as u64)
+        .sum();
+    ledger.upload(block_bytes);
+    let t0 = Instant::now();
+    let logits = compute.run(cfg.model, x, feat_dim, mb)?;
+    let mut modeled_ns = ledger.modeled_ns(&cfg.cost);
+    if matches!(compute, Compute::Skip) {
+        // charge the modeled GPU execution time instead
+        modeled_ns += cfg
+            .cost
+            .compute_ns(model_flops(cfg.model, mb, feat_dim, cfg.hidden, classes));
+    }
+    Ok(ComputedBatch { logits, modeled_ns, wall_ns: t0.elapsed().as_nanos() as f64 })
+}

@@ -23,7 +23,7 @@ use dci::coordinator::{BatcherConfig, Server, ServerConfig};
 use dci::engine::run_config;
 use dci::graph::datasets;
 use dci::mem::DeviceMemory;
-use dci::sampler::presample;
+use dci::sampler::presample_threads;
 use dci::util::{format_bytes, Rng};
 
 fn main() {
@@ -67,6 +67,7 @@ fn print_usage() {
          \x20 generate  dataset=NAME out=FILE   materialize + serialize a dataset\n\n\
          common keys: dataset= model= fanout= bs= system= budget= presample=\n\
          \x20            compute= max-batches= device= seed= artifacts=\n\
+         \x20            pipeline= sample-threads=   (pipeline=1 is serial)\n\
          serve keys:  workers= requests= req-size= batch-wait-ms="
     );
 }
@@ -120,6 +121,18 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     );
     println!("total      {:9.1}ms  (prep fraction {:.1}%)",
              t / 1e6, 100.0 * report.prep_fraction());
+    if cfg.pipeline_depth > 1 {
+        println!(
+            "pipeline   depth={} threads={}  wall {:.1}ms  occupancy: \
+             sample {:.0}% load {:.0}% compute {:.0}%",
+            cfg.pipeline_depth,
+            cfg.sample_threads,
+            report.run_wall_ns / 1e6,
+            100.0 * report.occupancy(&report.sample),
+            100.0 * report.occupancy(&report.feature),
+            100.0 * report.occupancy(&report.compute),
+        );
+    }
     if report.logits_checksum > 0.0 {
         println!("logits checksum {:.3e}", report.logits_checksum);
     }
@@ -183,7 +196,7 @@ fn cmd_presample(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let ds = datasets::spec(&cfg.dataset)?.build();
     let mut rng = Rng::new(cfg.seed);
-    let stats = presample(
+    let stats = presample_threads(
         &ds.csc,
         &ds.features,
         &ds.test_nodes,
@@ -192,6 +205,7 @@ fn cmd_presample(args: &[String]) -> Result<()> {
         cfg.n_presample,
         &cfg.cost,
         &mut rng,
+        cfg.sample_threads,
     );
     let device = match cfg.device_capacity {
         Some(cap) => DeviceMemory::new(cap, cap / 24),

@@ -1,167 +1,255 @@
 //! PJRT execution of the AOT HLO artifacts (the `xla` crate; CPU
 //! client). Executables are compiled once per artifact and reused for
 //! every batch — the request path is: pick artifact → pad → execute.
+//!
+//! The `xla` crate is not in the offline registry, so the real client
+//! is gated behind the `xla` cargo feature. Default builds get the
+//! signature-compatible stub below, which fails at `load` time with an
+//! actionable message — tests skip when `artifacts/` is absent, and
+//! the engine's other backends (`compute=skip|reference`) cover every
+//! non-PJRT configuration.
 
-use std::collections::HashMap;
+#[cfg(feature = "xla")]
+mod real {
+    use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-use crate::config::ModelKind;
-use crate::sampler::MiniBatch;
+    use crate::config::ModelKind;
+    use crate::runtime::artifacts::{ArtifactMeta, Manifest};
+    use crate::runtime::padding::{pad_batch, unpad_logits};
+    use crate::sampler::MiniBatch;
 
-use super::artifacts::{ArtifactMeta, Manifest};
-use super::padding::{pad_batch, unpad_logits};
-
-/// PJRT CPU runtime over a manifest of artifacts.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    /// Compiled executables, keyed by artifact name (lazy).
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl PjrtRuntime {
-    /// Open the artifacts directory (compiles nothing yet).
-    pub fn load(dir: &str) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(PjrtRuntime { client, manifest, exes: HashMap::new() })
+    /// PJRT CPU runtime over a manifest of artifacts.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        /// Compiled executables, keyed by artifact name (lazy).
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (once) and return the executable for `meta`.
-    fn compile(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(&meta.name) {
-            let path = self.manifest.hlo_path(meta);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
-            )
-            .map_err(wrap)
-            .with_context(|| format!("loading HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(wrap)?;
-            self.exes.insert(meta.name.clone(), exe);
+    impl PjrtRuntime {
+        /// Open the artifacts directory (compiles nothing yet).
+        pub fn load(dir: &str) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            Ok(PjrtRuntime { client, manifest, exes: HashMap::new() })
         }
-        Ok(&self.exes[&meta.name])
-    }
 
-    /// Eagerly compile every artifact matching `model` (serving warmup).
-    pub fn warmup(&mut self, model: ModelKind) -> Result<usize> {
-        let metas: Vec<ArtifactMeta> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| a.model == model)
-            .cloned()
-            .collect();
-        for meta in &metas {
-            self.compile(meta)?;
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        Ok(metas.len())
+
+        /// Compile (once) and return the executable for `meta`.
+        fn compile(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.exes.contains_key(&meta.name) {
+                let path = self.manifest.hlo_path(meta);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+                )
+                .map_err(wrap)
+                .with_context(|| format!("loading HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp).map_err(wrap)?;
+                self.exes.insert(meta.name.clone(), exe);
+            }
+            Ok(&self.exes[&meta.name])
+        }
+
+        /// Eagerly compile every artifact matching `model` (serving warmup).
+        pub fn warmup(&mut self, model: ModelKind) -> Result<usize> {
+            let metas: Vec<ArtifactMeta> = self
+                .manifest
+                .artifacts
+                .iter()
+                .filter(|a| a.model == model)
+                .cloned()
+                .collect();
+            for meta in &metas {
+                self.compile(meta)?;
+            }
+            Ok(metas.len())
+        }
+
+        /// Pick the smallest fitting artifact for a sampled batch.
+        pub fn select(
+            &self,
+            model: ModelKind,
+            feat_dim: usize,
+            classes: usize,
+            mb: &MiniBatch,
+        ) -> Result<ArtifactMeta> {
+            let sizes: Vec<usize> = mb.nodes.iter().map(|a| a.len()).collect();
+            let ks: Vec<usize> = mb.layers.iter().map(|b| b.k).collect();
+            self.manifest
+                .find(model, feat_dim, classes, &sizes, &ks)
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact fits model={} feat_dim={feat_dim} classes={classes} \
+                         sizes={sizes:?} ks={ks:?}; add a variant to aot.py VARIANTS",
+                        model.as_str()
+                    )
+                })
+        }
+
+        /// Full request-path execution: select → pad → execute → unpad.
+        /// Returns logits `[n_seeds, classes]`.
+        pub fn run(
+            &mut self,
+            model: ModelKind,
+            x_gathered: &[f32],
+            feat_dim: usize,
+            mb: &MiniBatch,
+        ) -> Result<Vec<f32>> {
+            let meta =
+                self.select(model, feat_dim, mb_classes(self, model, feat_dim, mb)?, mb)?;
+            self.run_with(&meta, x_gathered, feat_dim, mb)
+        }
+
+        /// Execute against a specific artifact.
+        pub fn run_with(
+            &mut self,
+            meta: &ArtifactMeta,
+            x_gathered: &[f32],
+            feat_dim: usize,
+            mb: &MiniBatch,
+        ) -> Result<Vec<f32>> {
+            let padded = pad_batch(mb, x_gathered, feat_dim, meta)?;
+            let classes = meta.classes;
+            let n_seeds = padded.n_seeds;
+
+            // Build literals: x, then (idx, mask) per layer.
+            let mut literals: Vec<xla::Literal> =
+                Vec::with_capacity(1 + 2 * padded.blocks.len());
+            literals.push(
+                xla::Literal::vec1(&padded.x)
+                    .reshape(&[meta.dims[0] as i64, feat_dim as i64])
+                    .map_err(wrap)?,
+            );
+            for (l, (idx, mask)) in padded.blocks.iter().enumerate() {
+                let (n, k) = (meta.dims[l + 1] as i64, meta.ks[l] as i64);
+                literals.push(
+                    xla::Literal::vec1(idx.as_slice()).reshape(&[n, k]).map_err(wrap)?,
+                );
+                literals.push(
+                    xla::Literal::vec1(mask.as_slice()).reshape(&[n, k]).map_err(wrap)?,
+                );
+            }
+
+            let exe = self.compile(meta)?;
+            let result = exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+            let out = result.to_tuple1().map_err(wrap)?;
+            let logits: Vec<f32> = out.to_vec().map_err(wrap)?;
+            anyhow::ensure!(
+                logits.len() == meta.batch_size * classes,
+                "unexpected logits len {} (expected {}x{})",
+                logits.len(),
+                meta.batch_size,
+                classes
+            );
+            Ok(unpad_logits(&logits, classes, n_seeds))
+        }
     }
 
-    /// Pick the smallest fitting artifact for a sampled batch.
-    pub fn select(
-        &self,
+    /// classes are artifact-determined; look up by model/feat_dim + shape.
+    fn mb_classes(
+        rt: &PjrtRuntime,
         model: ModelKind,
         feat_dim: usize,
-        classes: usize,
         mb: &MiniBatch,
-    ) -> Result<ArtifactMeta> {
+    ) -> Result<usize> {
         let sizes: Vec<usize> = mb.nodes.iter().map(|a| a.len()).collect();
         let ks: Vec<usize> = mb.layers.iter().map(|b| b.k).collect();
-        self.manifest
-            .find(model, feat_dim, classes, &sizes, &ks)
-            .cloned()
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact fits model={} feat_dim={feat_dim} classes={classes} \
-                     sizes={sizes:?} ks={ks:?}; add a variant to aot.py VARIANTS",
-                    model.as_str()
-                )
+        rt.manifest
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.model == model
+                    && a.feat_dim == feat_dim
+                    && a.fits(model, feat_dim, a.classes, &sizes, &ks)
             })
+            .map(|a| a.classes)
+            .ok_or_else(|| anyhow!("no artifact candidates for model/feat_dim"))
     }
 
-    /// Full request-path execution: select → pad → execute → unpad.
-    /// Returns logits `[n_seeds, classes]`.
-    pub fn run(
-        &mut self,
-        model: ModelKind,
-        x_gathered: &[f32],
-        feat_dim: usize,
-        mb: &MiniBatch,
-    ) -> Result<Vec<f32>> {
-        let meta = self.select(model, feat_dim, mb_classes(self, model, feat_dim, mb)?, mb)?;
-        self.run_with(&meta, x_gathered, feat_dim, mb)
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow!("xla: {e}")
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use real::PjrtRuntime;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use anyhow::{bail, Result};
+
+    use crate::config::ModelKind;
+    use crate::runtime::artifacts::{ArtifactMeta, Manifest};
+    use crate::sampler::MiniBatch;
+
+    const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `xla` cargo \
+                               feature (use compute=reference; enabling the feature also \
+                               requires vendoring the external `xla` crate as a path \
+                               dependency — it is not in the offline registry)";
+
+    /// Signature-compatible stand-in for the PJRT runtime; every entry
+    /// point fails with [`UNAVAILABLE`], starting at `load`, so no
+    /// value of this type ever exists. The field and `manifest()`
+    /// accessor are kept solely so callers (engine, tests) typecheck
+    /// identically against both flavors.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    /// Execute against a specific artifact.
-    pub fn run_with(
-        &mut self,
-        meta: &ArtifactMeta,
-        x_gathered: &[f32],
-        feat_dim: usize,
-        mb: &MiniBatch,
-    ) -> Result<Vec<f32>> {
-        let padded = pad_batch(mb, x_gathered, feat_dim, meta)?;
-        let classes = meta.classes;
-        let n_seeds = padded.n_seeds;
-
-        // Build literals: x, then (idx, mask) per layer.
-        let mut literals: Vec<xla::Literal> = Vec::with_capacity(1 + 2 * padded.blocks.len());
-        literals.push(
-            xla::Literal::vec1(&padded.x)
-                .reshape(&[meta.dims[0] as i64, feat_dim as i64])
-                .map_err(wrap)?,
-        );
-        for (l, (idx, mask)) in padded.blocks.iter().enumerate() {
-            let (n, k) = (meta.dims[l + 1] as i64, meta.ks[l] as i64);
-            literals.push(xla::Literal::vec1(idx.as_slice()).reshape(&[n, k]).map_err(wrap)?);
-            literals.push(xla::Literal::vec1(mask.as_slice()).reshape(&[n, k]).map_err(wrap)?);
+    impl PjrtRuntime {
+        pub fn load(_dir: &str) -> Result<PjrtRuntime> {
+            bail!(UNAVAILABLE)
         }
 
-        let exe = self.compile(meta)?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1().map_err(wrap)?;
-        let logits: Vec<f32> = out.to_vec().map_err(wrap)?;
-        anyhow::ensure!(
-            logits.len() == meta.batch_size * classes,
-            "unexpected logits len {} (expected {}x{})",
-            logits.len(),
-            meta.batch_size,
-            classes
-        );
-        Ok(unpad_logits(&logits, classes, n_seeds))
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn warmup(&mut self, _model: ModelKind) -> Result<usize> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn select(
+            &self,
+            _model: ModelKind,
+            _feat_dim: usize,
+            _classes: usize,
+            _mb: &MiniBatch,
+        ) -> Result<ArtifactMeta> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn run(
+            &mut self,
+            _model: ModelKind,
+            _x_gathered: &[f32],
+            _feat_dim: usize,
+            _mb: &MiniBatch,
+        ) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn run_with(
+            &mut self,
+            _meta: &ArtifactMeta,
+            _x_gathered: &[f32],
+            _feat_dim: usize,
+            _mb: &MiniBatch,
+        ) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
     }
 }
 
-/// classes are artifact-determined; look up by model/feat_dim + shape.
-fn mb_classes(
-    rt: &PjrtRuntime,
-    model: ModelKind,
-    feat_dim: usize,
-    mb: &MiniBatch,
-) -> Result<usize> {
-    let sizes: Vec<usize> = mb.nodes.iter().map(|a| a.len()).collect();
-    let ks: Vec<usize> = mb.layers.iter().map(|b| b.k).collect();
-    rt.manifest
-        .artifacts
-        .iter()
-        .find(|a| {
-            a.model == model
-                && a.feat_dim == feat_dim
-                && a.fits(model, feat_dim, a.classes, &sizes, &ks)
-        })
-        .map(|a| a.classes)
-        .ok_or_else(|| anyhow!("no artifact candidates for model/feat_dim"))
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::PjrtRuntime;

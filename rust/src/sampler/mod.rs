@@ -13,8 +13,8 @@ pub mod presample;
 
 pub use block::{Block, MiniBatch};
 pub use fanout::Fanout;
-pub use neighbor::{seed_batches, NeighborSampler, UvaAdj};
-pub use presample::{presample, PresampleStats};
+pub use neighbor::{seed_batches, NeighborSampler, SamplerPool, UvaAdj};
+pub use presample::{presample, presample_threads, PresampleStats};
 
 use crate::graph::NodeId;
 use crate::mem::TransferLedger;

@@ -5,6 +5,8 @@
 //! ("dst-first"), dedups via a node→local-index map, and emits blocks
 //! in input-most-first order (the model convention).
 
+use std::sync::Mutex;
+
 use crate::graph::{Csc, NodeId};
 use crate::mem::TransferLedger;
 use crate::util::Rng;
@@ -196,6 +198,45 @@ impl NeighborSampler {
     }
 }
 
+/// Checkout/checkin pool of [`NeighborSampler`] scratch state.
+///
+/// A sampler's epoch-stamp arrays are two O(n_nodes) allocations, but
+/// sampling output is independent of their prior contents (the epoch
+/// counter invalidates stale entries), so samplers are safely reusable
+/// across batches, requests, and threads. The engine keeps one pool and
+/// hands a sampler to each pipeline worker / served request instead of
+/// zeroing two node-sized arrays per use — the coordinator hot path
+/// does no per-request allocation.
+pub struct SamplerPool {
+    fanout: Fanout,
+    n_nodes: usize,
+    free: Mutex<Vec<NeighborSampler>>,
+}
+
+impl SamplerPool {
+    pub fn new(fanout: Fanout, n_nodes: usize) -> Self {
+        SamplerPool { fanout, n_nodes, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Take a sampler; allocates a fresh one only when the pool is dry.
+    pub fn checkout(&self) -> NeighborSampler {
+        match self.free.lock().unwrap().pop() {
+            Some(s) => s,
+            None => NeighborSampler::with_nodes(self.fanout.clone(), self.n_nodes),
+        }
+    }
+
+    /// Return a sampler for reuse.
+    pub fn checkin(&self, sampler: NeighborSampler) {
+        self.free.lock().unwrap().push(sampler);
+    }
+
+    /// Samplers currently idle in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
 /// Convenience: chunk a seed list into consecutive batches of
 /// `batch_size` (the last batch may be short), mirroring DGL's
 /// test-set DataLoader (Fig. 3).
@@ -295,6 +336,29 @@ mod tests {
         });
         assert_eq!(n, ledger.uva_txns);
         assert!(n > 0);
+    }
+
+    #[test]
+    fn pool_reuses_scratch_without_changing_output() {
+        let ds = tiny();
+        let pool = SamplerPool::new(Fanout::parse("3,2").unwrap(), ds.csc.n_nodes());
+        let adj = UvaAdj { csc: &ds.csc };
+        let seeds: Vec<NodeId> = ds.test_nodes[..32].to_vec();
+
+        let mut s1 = pool.checkout();
+        let mut l1 = TransferLedger::new();
+        let a = s1.sample_batch(&adj, &seeds, &mut Rng::new(5), &mut l1);
+        pool.checkin(s1);
+        assert_eq!(pool.idle(), 1);
+
+        // the recycled sampler (dirty scratch) must sample identically
+        let mut s2 = pool.checkout();
+        assert_eq!(pool.idle(), 0);
+        let mut l2 = TransferLedger::new();
+        let b = s2.sample_batch(&adj, &seeds, &mut Rng::new(5), &mut l2);
+        pool.checkin(s2);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(l1, l2);
     }
 
     #[test]

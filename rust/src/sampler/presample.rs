@@ -10,7 +10,21 @@
 //!   the Eq. (1) capacity split,
 //! - the peak per-batch memory footprint (workload-awareness: how much
 //!   device memory inference itself needs before caching).
+//!
+//! Profiling parallelizes over batches ([`presample_threads`]): each
+//! worker owns a sampler, counts accumulate into one *shared* pair of
+//! `node_visits`/`elem_counts` arrays (plain `Cell` adds serially,
+//! relaxed atomics in parallel — u32 adds commute, and one copy keeps
+//! profiler memory flat in the thread count), and every batch's
+//! RNG is a pure function of the caller's root and the batch index —
+//! so the profile is **bit-identical at any thread count** (and, given
+//! the preparation root `Rng::new(cfg.seed)`, identical to the run's
+//! own sampling streams). This attacks the paper's
+//! headline preprocessing-time metric (Tables IV, Fig. 10) directly:
+//! pre-sampling dominates DCI's preprocessing wall time.
 
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Instant;
 
 use crate::graph::{Csc, FeatureStore, NodeId};
@@ -71,9 +85,67 @@ impl PresampleStats {
     }
 }
 
-/// Profile `n_batches` batches of the workload. Deterministic given
-/// `rng`. The profiled batches use the same seed stream the real run
-/// will use (the paper pre-samples the actual inference workload).
+/// Shared count-array increment, `&self` in both flavors so one
+/// `profile_batch` serves the serial path (plain `Cell` adds) and the
+/// parallel path (relaxed atomic adds — commutative, so the totals are
+/// thread-schedule-invariant) without paying lock-prefixed RMWs in the
+/// profiler's innermost loop when `threads == 1`.
+trait CountSink {
+    fn bump(&self, at: usize);
+}
+
+impl CountSink for [Cell<u32>] {
+    #[inline]
+    fn bump(&self, at: usize) {
+        self[at].set(self[at].get() + 1);
+    }
+}
+
+impl CountSink for [AtomicU32] {
+    #[inline]
+    fn bump(&self, at: usize) {
+        self[at].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Profile one batch into the count sinks. Returns
+/// `(t_sample_ns, t_feature_ns, n_inputs)` for the batch.
+#[allow(clippy::too_many_arguments)]
+fn profile_batch<S: CountSink + ?Sized>(
+    csc: &Csc,
+    seeds: &[NodeId],
+    row_bytes: u64,
+    cost: &CostModel,
+    sampler: &mut NeighborSampler,
+    rng: &mut Rng,
+    node_visits: &S,
+    elem_counts: &S,
+) -> (f64, f64, usize) {
+    // --- sampling stage (counted) ---
+    let adj = UvaAdj { csc };
+    let mut s_ledger = TransferLedger::new();
+    let mb = sampler.sample_batch_counting(&adj, seeds, rng, &mut s_ledger, &mut |v, pos| {
+        let at = csc.neighbor_offset(v) as usize + pos;
+        elem_counts.bump(at);
+    });
+
+    // --- feature-loading stage (UVA, no cache yet) ---
+    // profiling needs visit counts + modeled load cost; the actual row
+    // copies would be pure simulator overhead, so they are accounted
+    // (modeled) but not performed here
+    let inputs = mb.input_nodes();
+    let mut f_ledger = TransferLedger::new();
+    f_ledger.launch();
+    let txns = row_txns(row_bytes, cost);
+    for &v in inputs {
+        node_visits.bump(v as usize);
+        f_ledger.miss(row_bytes, txns);
+    }
+    (s_ledger.modeled_ns(cost), f_ledger.modeled_ns(cost), inputs.len())
+}
+
+/// Serial convenience wrapper around [`presample_threads`].
+#[allow(clippy::too_many_arguments)]
 pub fn presample(
     csc: &Csc,
     features: &FeatureStore,
@@ -84,50 +156,109 @@ pub fn presample(
     cost: &CostModel,
     rng: &mut Rng,
 ) -> PresampleStats {
+    presample_threads(csc, features, test_nodes, batch_size, fanout, n_batches, cost, rng, 1)
+}
+
+/// Profile `n_batches` batches of the workload over `threads` workers.
+///
+/// Deterministic given `rng` *and invariant in `threads`*: per-batch
+/// RNGs derive purely from `rng`'s first draw and the batch index,
+/// counts accumulate by commutative addition into one shared pair of
+/// arrays, and the scalar stage times fold in batch-index order. The profiled batches
+/// draw on the same seed-node chunks and per-batch sampling streams
+/// the real run derives (the paper pre-samples the actual inference
+/// workload); note the serving batch geometry may still differ — see
+/// the assignment comment below.
+#[allow(clippy::too_many_arguments)]
+pub fn presample_threads(
+    csc: &Csc,
+    features: &FeatureStore,
+    test_nodes: &[NodeId],
+    batch_size: usize,
+    fanout: &Fanout,
+    n_batches: usize,
+    cost: &CostModel,
+    rng: &mut Rng,
+    threads: usize,
+) -> PresampleStats {
     let wall_start = Instant::now();
-    let mut sampler = NeighborSampler::with_nodes(fanout.clone(), csc.n_nodes());
-    let adj = UvaAdj { csc };
+    let batches = seed_batches(test_nodes, batch_size);
+    let n_batches = n_batches.min(batches.len());
+    let row_bytes = features.row_bytes();
 
-    let mut node_visits = vec![0u32; csc.n_nodes()];
-    let mut elem_counts = vec![0u32; csc.n_edges()];
+    // Round-robin batch assignment. Batch `bi`'s RNG is derived from
+    // the root's first draw, exactly as the engine derives the run's
+    // batch RNGs from `cfg.seed` (`Rng::for_stream`): given the
+    // preparation root `Rng::new(cfg.seed)`, profile batch `bi` uses
+    // the very stream run batch `bi` will use — the paper's
+    // "pre-sample the actual inference workload". (The *batches* still
+    // differ whenever the geometry does: prepare caps the profile
+    // batch size at `PRESAMPLE_BS_CAP`, and RAIN permutes its run
+    // order.)
+    let threads = threads.max(1).min(n_batches.max(1));
+    let fork_base = rng.next_u64();
+    let mut assignments: Vec<Vec<(usize, Rng)>> = (0..threads).map(|_| Vec::new()).collect();
+    for bi in 0..n_batches {
+        assignments[bi % threads].push((bi, Rng::fork_stream(fork_base, bi as u64)));
+    }
 
+    // one shared copy of the count arrays, whatever the thread count;
+    // the serial path uses plain `Cell` adds, the parallel path atomics
+    let batch_views: &[&[NodeId]] = &batches;
+    let (node_visits, elem_counts, outs): (Vec<u32>, Vec<u32>, Vec<Vec<(usize, f64, f64, usize)>>) =
+        if threads == 1 {
+            let visits: Vec<Cell<u32>> = vec![Cell::new(0); csc.n_nodes()];
+            let counts: Vec<Cell<u32>> = vec![Cell::new(0); csc.n_edges()];
+            let outs = assignments
+                .into_iter()
+                .map(|work| {
+                    profile_chunk(
+                        csc, batch_views, fanout, row_bytes, cost, work,
+                        visits.as_slice(), counts.as_slice(),
+                    )
+                })
+                .collect();
+            (reclaim_counts(visits), reclaim_counts(counts), outs)
+        } else {
+            let visits: Vec<AtomicU32> = (0..csc.n_nodes()).map(|_| AtomicU32::new(0)).collect();
+            let counts: Vec<AtomicU32> = (0..csc.n_edges()).map(|_| AtomicU32::new(0)).collect();
+            let outs = std::thread::scope(|scope| {
+                let (visits, counts) = (visits.as_slice(), counts.as_slice());
+                let handles: Vec<_> = assignments
+                    .into_iter()
+                    .map(|work| {
+                        scope.spawn(move || {
+                            profile_chunk(
+                                csc, batch_views, fanout, row_bytes, cost, work, visits,
+                                counts,
+                            )
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("presample worker panicked"))
+                    .collect()
+            });
+            (reclaim_counts(visits), reclaim_counts(counts), outs)
+        };
+
+    // fold per-batch scalars in batch order
+    let mut per_batch = vec![(0.0f64, 0.0f64, 0usize); n_batches];
+    for out in outs {
+        for (bi, ts, tf, n) in out {
+            per_batch[bi] = (ts, tf, n);
+        }
+    }
     let mut t_sample_ns = 0.0;
     let mut t_feature_ns = 0.0;
     let mut max_input_nodes = 0usize;
     let mut loaded_nodes = 0u64;
-
-    let batches = seed_batches(test_nodes, batch_size);
-    let n_batches = n_batches.min(batches.len());
-    for seeds in batches.iter().take(n_batches) {
-        // --- sampling stage (counted) ---
-        let mut s_ledger = TransferLedger::new();
-        let mb = sampler.sample_batch_counting(
-            &adj,
-            seeds,
-            rng,
-            &mut s_ledger,
-            &mut |v, pos| {
-                let at = csc.neighbor_offset(v) as usize + pos;
-                elem_counts[at] += 1;
-            },
-        );
-        t_sample_ns += s_ledger.modeled_ns(cost);
-
-        // --- feature-loading stage (UVA, no cache yet) ---
-        // profiling needs visit counts + modeled load cost; the actual
-        // row copies would be pure simulator overhead, so they are
-        // accounted (modeled) but not performed here
-        let inputs = mb.input_nodes();
-        max_input_nodes = max_input_nodes.max(inputs.len());
-        loaded_nodes += inputs.len() as u64;
-        let mut f_ledger = TransferLedger::new();
-        f_ledger.launch();
-        let txns = row_txns(features.row_bytes(), cost);
-        for &v in inputs {
-            node_visits[v as usize] += 1;
-            f_ledger.miss(features.row_bytes(), txns);
-        }
-        t_feature_ns += f_ledger.modeled_ns(cost);
+    for &(ts, tf, n) in &per_batch {
+        t_sample_ns += ts;
+        t_feature_ns += tf;
+        max_input_nodes = max_input_nodes.max(n);
+        loaded_nodes += n as u64;
     }
 
     PresampleStats {
@@ -140,6 +271,51 @@ pub fn presample(
         loaded_nodes,
         wall_ns: wall_start.elapsed().as_nanos() as f64,
     }
+}
+
+/// Profile one worker's share of the batches (its own sampler scratch,
+/// shared count sinks).
+#[allow(clippy::too_many_arguments)]
+fn profile_chunk<S: CountSink + ?Sized>(
+    csc: &Csc,
+    batches: &[&[NodeId]],
+    fanout: &Fanout,
+    row_bytes: u64,
+    cost: &CostModel,
+    work: Vec<(usize, Rng)>,
+    node_visits: &S,
+    elem_counts: &S,
+) -> Vec<(usize, f64, f64, usize)> {
+    let mut sampler = NeighborSampler::with_nodes(fanout.clone(), csc.n_nodes());
+    let mut profiled = Vec::with_capacity(work.len());
+    for (bi, mut brng) in work {
+        let (ts, tf, n_inputs) = profile_batch(
+            csc, batches[bi], row_bytes, cost, &mut sampler, &mut brng, node_visits,
+            elem_counts,
+        );
+        profiled.push((bi, ts, tf, n_inputs));
+    }
+    profiled
+}
+
+/// Reclaim a count array's allocation as plain `u32`s without copying:
+/// the edge-count array is the profiler's dominant allocation, and a
+/// collect-based unwrap would transiently double peak memory during
+/// the very phase whose cost this profiler is built to minimize.
+/// Only instantiated with `Cell<u32>` and `AtomicU32`.
+fn reclaim_counts<T>(v: Vec<T>) -> Vec<u32> {
+    debug_assert_eq!(std::mem::size_of::<T>(), std::mem::size_of::<u32>());
+    debug_assert_eq!(std::mem::align_of::<T>(), std::mem::align_of::<u32>());
+    let mut v = std::mem::ManuallyDrop::new(v);
+    let (ptr, len, cap) = (v.as_mut_ptr(), v.len(), v.capacity());
+    // SAFETY: both instantiations are std-documented to have the same
+    // memory layout as `u32` (`Cell<T>` "has the same memory layout
+    // ... as T"; `AtomicU32` "has the same size, alignment, and bit
+    // validity as the underlying integer type"); all worker threads
+    // have been joined, the allocation is uniquely owned, and
+    // `ManuallyDrop` ensures it is freed exactly once — by the
+    // returned Vec.
+    unsafe { Vec::from_raw_parts(ptr.cast::<u32>(), len, cap) }
 }
 
 /// UVA transactions needed for one feature row.
@@ -201,6 +377,30 @@ mod tests {
         assert_eq!(a.node_visits, b.node_visits);
         assert_eq!(a.elem_counts, b.elem_counts);
         assert_eq!(a.loaded_nodes, b.loaded_nodes);
+    }
+
+    #[test]
+    fn parallel_profile_is_thread_count_invariant() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let fanout = Fanout::parse("3,2").unwrap();
+        let cost = CostModel::default();
+        let serial = presample_threads(
+            &ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 6, &cost,
+            &mut Rng::new(7), 1,
+        );
+        for threads in [2usize, 4, 9] {
+            let par = presample_threads(
+                &ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 6, &cost,
+                &mut Rng::new(7), threads,
+            );
+            assert_eq!(serial.node_visits, par.node_visits, "threads={threads}");
+            assert_eq!(serial.elem_counts, par.elem_counts, "threads={threads}");
+            assert_eq!(serial.loaded_nodes, par.loaded_nodes, "threads={threads}");
+            assert_eq!(serial.max_input_nodes, par.max_input_nodes, "threads={threads}");
+            // scalar folds happen in batch order: bit-identical, not just close
+            assert_eq!(serial.t_sample_ns.to_bits(), par.t_sample_ns.to_bits());
+            assert_eq!(serial.t_feature_ns.to_bits(), par.t_feature_ns.to_bits());
+        }
     }
 
     #[test]

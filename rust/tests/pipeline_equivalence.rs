@@ -1,0 +1,108 @@
+//! Pipeline ≡ serial: the staged pipeline executor must be an
+//! *observationally identical* reschedule of the serial engine. For
+//! every system the pipelined run must reproduce the serial run's
+//! loaded-node count, cache hit/miss counters, and logits checksum bit
+//! for bit — at any `pipeline_depth` and any `sample_threads` — because
+//! per-batch sampling RNGs are pure functions of `(seed, batch_index)`
+//! and all ledgers fold in batch-index order.
+
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::{run_config, InferenceReport};
+use dci::sampler::Fanout;
+
+fn cfg(system: SystemKind, depth: usize, threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.system = system;
+    cfg.batch_size = 64;
+    cfg.fanout = Fanout::parse("3,2,2").unwrap();
+    cfg.budget = Some(300_000);
+    cfg.max_batches = Some(8);
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    cfg.pipeline_depth = depth;
+    cfg.sample_threads = threads;
+    cfg
+}
+
+fn assert_identical(tag: &str, a: &InferenceReport, b: &InferenceReport) {
+    assert_eq!(a.n_batches, b.n_batches, "{tag}: n_batches");
+    assert_eq!(a.n_seeds, b.n_seeds, "{tag}: n_seeds");
+    assert_eq!(a.loaded_nodes, b.loaded_nodes, "{tag}: loaded_nodes");
+    assert_eq!(a.stats.sample.hits, b.stats.sample.hits, "{tag}: sample hits");
+    assert_eq!(a.stats.sample.misses, b.stats.sample.misses, "{tag}: sample misses");
+    assert_eq!(a.stats.sample.uva_txns, b.stats.sample.uva_txns, "{tag}: sample txns");
+    assert_eq!(a.stats.feature.hits, b.stats.feature.hits, "{tag}: feature hits");
+    assert_eq!(a.stats.feature.misses, b.stats.feature.misses, "{tag}: feature misses");
+    assert_eq!(
+        a.logits_checksum.to_bits(),
+        b.logits_checksum.to_bits(),
+        "{tag}: logits checksum {} vs {}",
+        a.logits_checksum,
+        b.logits_checksum
+    );
+    // modeled transfer time folds per batch in the same order on both
+    // schedulers, so even the f64 sums agree exactly
+    assert_eq!(
+        a.sample.modeled_ns.to_bits(),
+        b.sample.modeled_ns.to_bits(),
+        "{tag}: modeled sample ns"
+    );
+    assert_eq!(
+        a.feature.modeled_ns.to_bits(),
+        b.feature.modeled_ns.to_bits(),
+        "{tag}: modeled feature ns"
+    );
+}
+
+#[test]
+fn pipelined_matches_serial_for_every_system() {
+    for system in SystemKind::all() {
+        let serial = run_config(&cfg(system, 1, 1)).unwrap();
+        let piped = run_config(&cfg(system, 4, 3)).unwrap();
+        assert!(serial.logits_checksum > 0.0, "{system:?}: reference logits flowed");
+        assert_identical(&format!("{system:?} depth=4"), &serial, &piped);
+    }
+}
+
+#[test]
+fn sample_thread_count_never_changes_results() {
+    let base = run_config(&cfg(SystemKind::Dci, 4, 1)).unwrap();
+    for threads in [2usize, 4, 7] {
+        let r = run_config(&cfg(SystemKind::Dci, 4, threads)).unwrap();
+        assert_identical(&format!("dci threads={threads}"), &base, &r);
+    }
+}
+
+#[test]
+fn pipeline_depth_never_changes_results() {
+    let serial = run_config(&cfg(SystemKind::Dci, 1, 1)).unwrap();
+    for depth in [2usize, 3, 8, 32] {
+        let r = run_config(&cfg(SystemKind::Dci, depth, 2)).unwrap();
+        assert_identical(&format!("dci depth={depth}"), &serial, &r);
+    }
+}
+
+#[test]
+fn rain_previous_batch_reuse_survives_pipelining() {
+    // RAIN's gather consults the *previous* batch's inputs; the
+    // pipeline's in-order gather stage must preserve that chain exactly
+    let serial = run_config(&cfg(SystemKind::Rain, 1, 1)).unwrap();
+    let piped = run_config(&cfg(SystemKind::Rain, 4, 4)).unwrap();
+    assert!(serial.stats.feature.hits > 0, "inter-batch reuse should hit");
+    assert_identical("rain", &serial, &piped);
+}
+
+#[test]
+fn pipelined_wall_time_is_recorded() {
+    let r = run_config(&cfg(SystemKind::Dci, 4, 2)).unwrap();
+    assert!(r.run_wall_ns > 0.0);
+    // busy fractions are well-defined
+    for occ in [
+        r.occupancy(&r.sample),
+        r.occupancy(&r.feature),
+        r.occupancy(&r.compute),
+    ] {
+        assert!(occ.is_finite() && occ >= 0.0);
+    }
+}
