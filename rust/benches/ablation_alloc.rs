@@ -116,6 +116,7 @@ fn run_fixed_split(
 ) -> anyhow::Result<(f64, f64, f64)> {
     use dci::baselines::PreparedSystem;
     use dci::cache::{adj_cache::AdjCache, feat_cache::FeatCache, CacheAllocation};
+    use dci::cache::runtime::CacheSnapshot;
     use dci::mem::CostModel;
     use dci::sampler::presample;
     use dci::util::Rng;
@@ -137,17 +138,13 @@ fn run_fixed_split(
     let c_feat = total - c_adj;
     let (adj, _) = AdjCache::fill(&ds.csc, &stats.elem_counts, c_adj);
     let (feat, _) = FeatCache::fill(&ds.features, &stats.node_visits, c_feat);
-    let prepared = PreparedSystem {
-        kind: SystemKind::Dci,
-        adj_cache: Some(adj),
-        feat_cache: Some(feat),
-        alloc: Some(CacheAllocation { c_adj, c_feat }),
-        presample: Some(stats),
-        batch_order: None,
-        inter_batch_reuse: false,
-        preprocess_ns: 0.0,
-        preprocess_wall_ns: 0.0,
-    };
+    let snapshot = CacheSnapshot::new(
+        Some(adj),
+        Some(feat),
+        Some(CacheAllocation { c_adj, c_feat }),
+    );
+    let prepared =
+        PreparedSystem::from_snapshot(SystemKind::Dci, snapshot, Some(stats), total);
     let mut engine = dci::engine::InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
     let r = engine.run()?;
     Ok((

@@ -4,19 +4,17 @@
 //!    ([`crate::sampler::presample`]), collecting stage times, node
 //!    visit counts, and the CSC element `Counts` array.
 //! 2. Determine the total cache budget `C` (workload-aware: device
-//!    memory minus reserve minus the workload's own peak, §IV.A) and
-//!    split it per Eq. (1).
-//! 3. Fill the feature cache (average-visit threshold, §IV.B) and the
-//!    adjacency cache (Algorithm 1).
+//!    memory minus reserve minus the workload's own peak, §IV.A).
+//! 3. Run [`DciPlanner`] — Eq. (1) split, then the lightweight fills
+//!    (average-visit threshold §IV.B, Algorithm 1).
 //!
 //! The returned `preprocess_ns` covers all three steps — this is the
-//! number Tables IV / Fig. 10 compare.
-
-use std::time::Instant;
+//! number Tables IV / Fig. 10 compare. The same planner re-runs online
+//! when the refresh loop detects workload drift.
 
 use anyhow::Result;
 
-use crate::cache::{adj_cache::AdjCache, alloc, feat_cache::FeatCache};
+use crate::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
@@ -48,36 +46,26 @@ pub fn prepare(
         cfg.sample_threads,
     );
 
-    // 2. budget + Eq. (1) split
-    // explicit budgets are clamped to what the device can actually hold
+    // 2. budget — explicit budgets are clamped to what the device can
+    // actually hold
     let total = cfg
         .budget
         .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
         .min(device.available_for_cache());
-    let split = alloc::allocate(total, &stats);
 
-    // 3. lightweight fills — genuine host-side coordinator work, so
-    // their wall time counts toward preprocessing
-    let wall0 = Instant::now();
-    let (adj, adj_ledger) = AdjCache::fill(&ds.csc, &stats.elem_counts, split.c_adj);
-    let (feat, feat_ledger) =
-        FeatCache::fill(&ds.features, &stats.node_visits, split.c_feat);
-    let wall_ns = wall0.elapsed().as_nanos() as f64;
-    let modeled_ns = stats.t_sample_ns + stats.t_feature_ns
-        + adj_ledger.modeled_ns(cost)
-        + feat_ledger.modeled_ns(cost);
-
-    Ok(PreparedSystem {
-        kind: SystemKind::Dci,
-        adj_cache: Some(adj),
-        feat_cache: Some(feat),
-        alloc: Some(split),
-        presample: Some(stats),
-        batch_order: None,
-        inter_batch_reuse: false,
-        preprocess_ns: wall_ns + modeled_ns,
-        preprocess_wall_ns: wall_ns,
-    })
+    // 3. Eq. (1) split + lightweight fills, behind the planner trait
+    // (fill wall is genuine host-side coordinator work and counts
+    // toward preprocessing)
+    let plan = DciPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
+    Ok(PreparedSystem::from_plan(
+        SystemKind::Dci,
+        plan,
+        stats,
+        total,
+        profiling_ns,
+        cost,
+    ))
 }
 
 #[cfg(test)]
@@ -102,13 +90,14 @@ mod tests {
         let p = prepare(&ds, &cfg(300_000), &device, &CostModel::default(),
                         &mut Rng::new(1))
             .unwrap();
-        let split = p.alloc.unwrap();
+        let split = p.alloc().unwrap();
         assert_eq!(split.total(), 300_000);
         assert!(split.c_adj > 0 && split.c_feat > 0,
                 "both stages take time, so both caches get capacity: {split:?}");
         assert!(p.cache_bytes() <= 300_000 + ds.csc.bytes_total());
         assert!(p.preprocess_ns >= p.preprocess_wall_ns);
-        assert!(p.feat_cache.as_ref().unwrap().n_cached() > 0);
+        assert!(p.runtime.load().feat.as_ref().unwrap().n_cached() > 0);
+        assert_eq!(p.cache_budget, 300_000);
     }
 
     #[test]
@@ -131,6 +120,6 @@ mod tests {
             .unwrap();
         // tiny dataset on a 1 GiB device: everything fits, adj cache
         // takes the full-CSC fast path
-        assert!(p.adj_cache.as_ref().unwrap().is_full_csc());
+        assert!(p.runtime.load().adj.as_ref().unwrap().is_full_csc());
     }
 }

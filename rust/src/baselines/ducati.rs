@@ -9,25 +9,18 @@
 //! 1. Epoch-grade profiling — `DUCATI_PROFILE_FACTOR ×` more profiled
 //!    batches than DCI's 8 (DUCATI derives per-entry value estimates
 //!    from full traversals).
-//! 2. Value curves for 'nfeat' and 'adj' entries: every entry gets a
-//!    value/size density; both entry lists are fully sorted
-//!    (O(n log n) — the knapsack) and cumulative value curves built.
-//! 3. Slope fitting on the curves (least-squares per decile segment,
-//!    the "determining slopes through curve fitting" step) to pick the
-//!    split point.
-//! 4. Greedy knapsack fill: walk the two sorted lists merging by
-//!    density until the budget is spent.
+//! 2.–4. Value curves, slope fitting, and the greedy knapsack fill —
+//!    [`crate::cache::planner::DucatiPlanner`], behind the same
+//!    `CachePlanner` trait as DCI's lightweight fills.
 //!
 //! Steady-state behaviour ends up close to DCI (Fig. 9: <4% runtime
 //! difference); the preprocessing cost gap (Fig. 10) is the point.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
-use crate::cache::{adj_cache::AdjCache, feat_cache::FeatCache, CacheAllocation};
+use crate::cache::planner::{CachePlanner, DucatiPlanner, WorkloadProfile};
 use crate::config::{RunConfig, SystemKind};
-use crate::graph::{Dataset, NodeId};
+use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
 use crate::sampler::presample_threads;
 use crate::util::Rng;
@@ -36,28 +29,6 @@ use super::{auto_budget, PreparedSystem};
 
 /// How many times more profiling batches DUCATI consumes vs. DCI.
 pub const DUCATI_PROFILE_FACTOR: usize = 8;
-
-/// Least-squares slope of (0..n, ys) — the curve-fitting step.
-fn fit_slope(ys: &[f64]) -> f64 {
-    let n = ys.len() as f64;
-    if ys.len() < 2 {
-        return 0.0;
-    }
-    let mean_x = (n - 1.0) / 2.0;
-    let mean_y = ys.iter().sum::<f64>() / n;
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for (i, &y) in ys.iter().enumerate() {
-        let dx = i as f64 - mean_x;
-        num += dx * (y - mean_y);
-        den += dx * dx;
-    }
-    if den == 0.0 {
-        0.0
-    } else {
-        num / den
-    }
-}
 
 pub fn prepare(
     ds: &Dataset,
@@ -86,118 +57,19 @@ pub fn prepare(
         .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
         .min(device.available_for_cache());
 
-    // everything from here is host-side preprocessing work: sorts,
-    // curve fits, knapsack, fills — wall time counts
-    let wall0 = Instant::now();
-
-    // 2. value curves
-    let n = ds.csc.n_nodes();
-    let row_cost = (ds.features.row_bytes() + 16) as f64;
-    let mut nfeat: Vec<(f64, NodeId)> = (0..n)
-        .map(|v| (stats.node_visits[v] as f64 / row_cost, v as NodeId))
-        .collect();
-    let mut adj: Vec<(f64, NodeId)> = (0..n)
-        .map(|v| {
-            let span = ds.csc.col_ptr[v] as usize..ds.csc.col_ptr[v + 1] as usize;
-            let total: u64 = stats.elem_counts[span].iter().map(|&c| c as u64).sum();
-            let size = (ds.csc.degree(v as NodeId) * 4 + 12) as f64;
-            (total as f64 / size, v as NodeId)
-        })
-        .collect();
-    // full sorts — the O(n log n) knapsack cost the paper cites
-    nfeat.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-    adj.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-
-    // 3. cumulative curves + decile slope fits (the split heuristic)
-    let cum = |xs: &[(f64, NodeId)]| -> Vec<f64> {
-        let mut acc = 0.0;
-        xs.iter().map(|&(d, _)| {
-            acc += d;
-            acc
-        }).collect()
-    };
-    let nfeat_curve = cum(&nfeat);
-    let adj_curve = cum(&adj);
-    let decile_slopes = |curve: &[f64]| -> Vec<f64> {
-        let step = (curve.len() / 10).max(1);
-        curve.chunks(step).map(fit_slope).collect()
-    };
-    let _nf_slopes = decile_slopes(&nfeat_curve);
-    let _adj_slopes = decile_slopes(&adj_curve);
-
-    // 4. greedy merge by density until the budget is spent
-    let mut budget = total;
-    let (mut fi, mut ai) = (0usize, 0usize);
-    let mut feat_order: Vec<NodeId> = Vec::new();
-    let mut adj_order: Vec<u32> = Vec::new();
-    let mut c_feat = 0u64;
-    let mut c_adj = n as u64 * 12; // adj metadata charged up front
-    let adj_meta_ok = budget > c_adj;
-    if adj_meta_ok {
-        budget -= c_adj; // metadata must come out of the budget too
-    }
-    while budget > 0 && (fi < nfeat.len() || ai < adj.len()) {
-        let fd = nfeat.get(fi).map(|x| x.0).unwrap_or(f64::NEG_INFINITY);
-        let ad = if adj_meta_ok {
-            adj.get(ai).map(|x| x.0).unwrap_or(f64::NEG_INFINITY)
-        } else {
-            f64::NEG_INFINITY
-        };
-        if fd == f64::NEG_INFINITY && ad == f64::NEG_INFINITY {
-            break;
-        }
-        if fd >= ad {
-            let v = nfeat[fi].1;
-            let sz = ds.features.row_bytes() + 16;
-            if nfeat[fi].0 > 0.0 && budget >= sz {
-                feat_order.push(v);
-                c_feat += sz;
-                budget -= sz;
-            }
-            fi += 1;
-            if nfeat.get(fi - 1).map(|x| x.0 <= 0.0).unwrap_or(true) && fd <= 0.0 {
-                // exhausted useful nfeat entries
-                if ad <= 0.0 {
-                    break;
-                }
-            }
-        } else {
-            let v = adj[ai].1;
-            let sz = ds.csc.degree(v) as u64 * 4;
-            if adj[ai].0 > 0.0 && budget >= sz {
-                adj_order.push(v);
-                c_adj += sz;
-                budget -= sz;
-            }
-            ai += 1;
-        }
-    }
-
-    // fill caches with the knapsack-chosen orders
-    let (adj_cache, adj_ledger) = if ds.csc.bytes_total() <= c_adj {
-        AdjCache::fill(&ds.csc, &stats.elem_counts, c_adj)
-    } else {
-        AdjCache::fill_with_order(&ds.csc, &stats.elem_counts, &adj_order, c_adj)
-    };
-    let (feat_cache, feat_ledger) =
-        FeatCache::fill_with_order(&ds.features, &feat_order, c_feat);
-
-    let wall_ns = wall0.elapsed().as_nanos() as f64;
-    let modeled_ns = stats.t_sample_ns + stats.t_feature_ns
-        + adj_ledger.modeled_ns(cost)
-        + feat_ledger.modeled_ns(cost);
-
-    Ok(PreparedSystem {
-        kind: SystemKind::Ducati,
-        adj_cache: Some(adj_cache),
-        feat_cache: Some(feat_cache),
-        alloc: Some(CacheAllocation { c_adj, c_feat }),
-        presample: Some(stats),
-        batch_order: None,
-        inter_batch_reuse: false,
-        preprocess_ns: wall_ns + modeled_ns,
-        preprocess_wall_ns: wall_ns,
-    })
+    // 2.-4. sorts, curve fits, knapsack, fills — all host-side
+    // preprocessing work whose wall time counts (the planner measures
+    // it as plan_wall_ns)
+    let plan = DucatiPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
+    Ok(PreparedSystem::from_plan(
+        SystemKind::Ducati,
+        plan,
+        stats,
+        total,
+        profiling_ns,
+        cost,
+    ))
 }
 
 #[cfg(test)]
@@ -216,23 +88,15 @@ mod tests {
     }
 
     #[test]
-    fn fit_slope_exact_line() {
-        let ys: Vec<f64> = (0..10).map(|i| 3.0 * i as f64 + 1.0).collect();
-        assert!((fit_slope(&ys) - 3.0).abs() < 1e-9);
-        assert_eq!(fit_slope(&[1.0]), 0.0);
-        assert_eq!(fit_slope(&[2.0, 2.0, 2.0]), 0.0);
-    }
-
-    #[test]
     fn prepares_dual_caches_within_budget() {
         let ds = datasets::spec("tiny").unwrap().build();
         let device = DeviceMemory::new(1 << 30, 1 << 20);
         let p = prepare(&ds, &cfg(400_000), &device, &CostModel::default(),
                         &mut Rng::new(1))
             .unwrap();
-        let split = p.alloc.unwrap();
+        let split = p.alloc().unwrap();
         assert!(split.total() <= 400_000 + ds.csc.n_nodes() as u64 * 12);
-        assert!(p.feat_cache.as_ref().unwrap().n_cached() > 0);
+        assert!(p.runtime.load().feat.as_ref().unwrap().n_cached() > 0);
         assert!(p.preprocess_ns > 0.0);
     }
 

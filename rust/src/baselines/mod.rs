@@ -4,36 +4,56 @@
 //! paper attributes to it is actually performed — so the preprocessing
 //! comparisons (Table IV, Fig. 10) are measured, not asserted:
 //!
-//! - [`dci`]: pre-sample `n` batches → Eq. (1) split → lightweight fills.
-//! - [`sci`]: same pre-sampling, whole budget to the feature cache.
+//! - [`dci`]: pre-sample `n` batches → `DciPlanner` (Eq. (1) split +
+//!   lightweight fills).
+//! - [`sci`]: same pre-sampling, whole budget to the feature cache
+//!   (`SciPlanner`).
 //! - DGL: no preparation at all (prepared inline here).
 //! - [`rain`]: degree-ordered targets, MinHash/LSH batch clustering.
-//! - [`ducati`]: heavier profiling + value-curve fitting + knapsack fill.
+//! - [`ducati`]: heavier profiling + `DucatiPlanner` (value-curve
+//!   fitting + knapsack fill).
+//!
+//! The cache-owning strategies live behind the
+//! [`crate::cache::CachePlanner`] trait so the online refresh loop can
+//! re-run exactly the strategy the system was prepared with; what a
+//! `prepare` adds on top is *how much to profile* and the preprocessing
+//! accounting. The produced caches are installed as the first epoch of
+//! an [`crate::cache::DualCacheRuntime`], which every engine path reads
+//! through per-batch snapshots.
 
 pub mod dci;
 pub mod ducati;
 pub mod rain;
 pub mod sci;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
-use crate::cache::{AdjCache, CacheAllocation, FeatCache};
+use crate::cache::planner::CachePlan;
+use crate::cache::runtime::{CacheSnapshot, DualCacheRuntime};
+use crate::cache::CacheAllocation;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CostModel, DeviceMemory};
 use crate::sampler::PresampleStats;
 use crate::util::Rng;
 
+pub use crate::cache::planner::planner_for;
+
 /// What a system's preprocessing produced; the engine consumes this.
 pub struct PreparedSystem {
     pub kind: SystemKind,
-    /// Adjacency cache (DCI, DUCATI; `None` = all sampling over UVA).
-    pub adj_cache: Option<AdjCache>,
-    /// Feature cache (DCI, SCI, DUCATI).
-    pub feat_cache: Option<FeatCache>,
-    /// The Eq.-(1)-style split that was applied (reporting).
-    pub alloc: Option<CacheAllocation>,
-    /// Pre-sampling statistics (reporting; DCI/SCI/DUCATI).
+    /// Epoch-swappable dual-cache state. Execution paths never hold
+    /// `&AdjCache`/`&FeatCache` directly — they acquire a snapshot per
+    /// batch through a `SnapshotHandle`, so a background refresh can
+    /// hot-swap the caches without stalling them.
+    pub runtime: Arc<DualCacheRuntime>,
+    /// Total byte budget the initial plan ran with (re-plans stay
+    /// within it; 0 for cacheless systems).
+    pub cache_budget: u64,
+    /// Pre-sampling statistics (reporting + refresh baseline;
+    /// DCI/SCI/DUCATI).
     pub presample: Option<PresampleStats>,
     /// RAIN: reordered seed batches (cluster-grouped) and, parallel to
     /// it, each batch's cluster id.
@@ -47,14 +67,19 @@ pub struct PreparedSystem {
 }
 
 impl PreparedSystem {
-    /// A no-preparation system (the DGL baseline).
-    pub fn bare(kind: SystemKind) -> Self {
+    /// Wrap an initial snapshot (the common constructor; callers then
+    /// fill in ordering/accounting fields as needed).
+    pub fn from_snapshot(
+        kind: SystemKind,
+        snapshot: CacheSnapshot,
+        presample: Option<PresampleStats>,
+        cache_budget: u64,
+    ) -> Self {
         PreparedSystem {
             kind,
-            adj_cache: None,
-            feat_cache: None,
-            alloc: None,
-            presample: None,
+            runtime: Arc::new(DualCacheRuntime::new(snapshot)),
+            cache_budget,
+            presample,
             batch_order: None,
             inter_batch_reuse: false,
             preprocess_ns: 0.0,
@@ -62,10 +87,38 @@ impl PreparedSystem {
         }
     }
 
-    /// Device bytes the caches occupy.
+    /// A no-preparation system (the DGL baseline).
+    pub fn bare(kind: SystemKind) -> Self {
+        Self::from_snapshot(kind, CacheSnapshot::empty(), None, 0)
+    }
+
+    /// Wrap a planner's output, folding its fill accounting into the
+    /// preprocessing totals (`extra_modeled_ns` carries the profiling
+    /// stage times the plan itself does not know about).
+    pub fn from_plan(
+        kind: SystemKind,
+        plan: CachePlan,
+        presample: PresampleStats,
+        cache_budget: u64,
+        extra_modeled_ns: f64,
+        cost: &CostModel,
+    ) -> Self {
+        let wall_ns = plan.plan_wall_ns;
+        let modeled_ns = extra_modeled_ns + plan.fill_ledger.modeled_ns(cost);
+        let mut p = Self::from_snapshot(kind, plan.snapshot, Some(presample), cache_budget);
+        p.preprocess_ns = wall_ns + modeled_ns;
+        p.preprocess_wall_ns = wall_ns;
+        p
+    }
+
+    /// Device bytes the live snapshot's caches occupy.
     pub fn cache_bytes(&self) -> u64 {
-        self.adj_cache.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
-            + self.feat_cache.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
+        self.runtime.load().bytes_used()
+    }
+
+    /// The allocation split of the live snapshot (reporting).
+    pub fn alloc(&self) -> Option<CacheAllocation> {
+        self.runtime.load().alloc
     }
 }
 
@@ -131,7 +184,9 @@ mod tests {
         let p = PreparedSystem::bare(SystemKind::Dgl);
         assert_eq!(p.cache_bytes(), 0);
         assert_eq!(p.preprocess_ns, 0.0);
-        assert!(p.adj_cache.is_none() && p.feat_cache.is_none());
+        let snap = p.runtime.load();
+        assert!(snap.adj.is_none() && snap.feat.is_none());
+        assert_eq!(p.cache_budget, 0);
     }
 
     #[test]
@@ -171,14 +226,16 @@ mod tests {
             cfg.budget = Some(200_000);
             let p = prepare(&ds, &cfg, &device, &cost, &mut Rng::new(3)).unwrap();
             assert_eq!(p.kind, kind);
+            let snap = p.runtime.load();
             match kind {
                 SystemKind::Dgl => assert_eq!(p.cache_bytes(), 0),
                 SystemKind::Sci => {
-                    assert!(p.feat_cache.is_some() && p.adj_cache.is_none())
+                    assert!(snap.feat.is_some() && snap.adj.is_none())
                 }
                 SystemKind::Dci | SystemKind::Ducati => {
-                    assert!(p.feat_cache.is_some());
+                    assert!(snap.feat.is_some());
                     assert!(p.preprocess_ns > 0.0);
+                    assert_eq!(p.cache_budget, 200_000);
                 }
                 SystemKind::Rain => {
                     assert!(p.batch_order.is_some() && p.inter_batch_reuse)

@@ -164,17 +164,12 @@ pub fn prepare(
     let wall_ns = wall0.elapsed().as_nanos() as f64;
     let modeled_ns = ledger.modeled_ns(cost);
 
-    Ok(PreparedSystem {
-        kind: SystemKind::Rain,
-        adj_cache: None,
-        feat_cache: None,
-        alloc: None,
-        presample: None,
-        batch_order: Some((ordered_batches, ordered_clusters)),
-        inter_batch_reuse: true,
-        preprocess_ns: wall_ns + modeled_ns,
-        preprocess_wall_ns: wall_ns,
-    })
+    let mut p = PreparedSystem::bare(SystemKind::Rain);
+    p.batch_order = Some((ordered_batches, ordered_clusters));
+    p.inter_batch_reuse = true;
+    p.preprocess_ns = wall_ns + modeled_ns;
+    p.preprocess_wall_ns = wall_ns;
+    Ok(p)
 }
 
 #[cfg(test)]

@@ -1,14 +1,12 @@
 //! SCI — the state-of-the-art single-cache inference baseline (§V.A):
 //! identical architecture to DCI but the adjacency cache is disabled
-//! and the *entire* budget goes to node features. This is the system
-//! Fig. 8 compares against, and Fig. 2's "more feature cache stops
-//! helping" observation is its failure mode.
-
-use std::time::Instant;
+//! and the *entire* budget goes to node features ([`SciPlanner`]).
+//! This is the system Fig. 8 compares against, and Fig. 2's "more
+//! feature cache stops helping" observation is its failure mode.
 
 use anyhow::Result;
 
-use crate::cache::feat_cache::FeatCache;
+use crate::cache::planner::{CachePlanner, SciPlanner, WorkloadProfile};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
@@ -41,23 +39,16 @@ pub fn prepare(
         .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
         .min(device.available_for_cache());
     // single cache: everything to features (fill wall is real host work)
-    let wall0 = Instant::now();
-    let (feat, feat_ledger) = FeatCache::fill(&ds.features, &stats.node_visits, total);
-    let wall_ns = wall0.elapsed().as_nanos() as f64;
-    let modeled_ns =
-        stats.t_sample_ns + stats.t_feature_ns + feat_ledger.modeled_ns(cost);
-
-    Ok(PreparedSystem {
-        kind: SystemKind::Sci,
-        adj_cache: None,
-        feat_cache: Some(feat),
-        alloc: None,
-        presample: Some(stats),
-        batch_order: None,
-        inter_batch_reuse: false,
-        preprocess_ns: wall_ns + modeled_ns,
-        preprocess_wall_ns: wall_ns,
-    })
+    let plan = SciPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
+    Ok(PreparedSystem::from_plan(
+        SystemKind::Sci,
+        plan,
+        stats,
+        total,
+        profiling_ns,
+        cost,
+    ))
 }
 
 #[cfg(test)]
@@ -77,8 +68,9 @@ mod tests {
         cfg.budget = Some(100_000);
         let p = prepare(&ds, &cfg, &device, &CostModel::default(), &mut Rng::new(1))
             .unwrap();
-        assert!(p.adj_cache.is_none());
-        let fc = p.feat_cache.as_ref().unwrap();
+        let snap = p.runtime.load();
+        assert!(snap.adj.is_none());
+        let fc = snap.feat.as_ref().unwrap();
         assert!(fc.bytes_used() <= 100_000);
         // uses most of the budget (rows are 80B; fill to the brim)
         assert!(fc.bytes_used() > 100_000 - 2 * (ds.features.row_bytes() + 16));

@@ -36,6 +36,19 @@ impl BenchOpts {
     pub fn max_batches(&self, full: usize, quick: usize) -> Option<usize> {
         Some(if self.quick { quick } else { full })
     }
+
+    /// Like [`from_env`](Self::from_env), but the bench always writes
+    /// machine-readable output — to `default_path` unless `--json
+    /// <path>` overrides it. Benches that feed the cross-PR perf
+    /// trajectory (`BENCH_*.json`) use this so the numbers exist on
+    /// every run, not only when someone remembers the flag.
+    pub fn from_env_default_json(default_path: &str) -> BenchOpts {
+        let mut opts = Self::from_env();
+        if opts.json_path.is_none() {
+            opts.json_path = Some(default_path.to_string());
+        }
+        opts
+    }
 }
 
 /// One labelled run: execute the config, return its report, and log a
@@ -128,6 +141,13 @@ mod tests {
         assert_eq!(fmt_ms(2.5e6), "2.5ms");
         assert_eq!(fmt_speedup(10.0, 5.0), "2.00x");
         assert_eq!(fmt_speedup(10.0, 0.0), "-");
+    }
+
+    #[test]
+    fn default_json_path_applies() {
+        // (argv has no --json in the test harness)
+        let opts = BenchOpts::from_env_default_json("BENCH_x.json");
+        assert_eq!(opts.json_path.as_deref(), Some("BENCH_x.json"));
     }
 
     #[test]

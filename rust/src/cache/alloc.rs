@@ -30,6 +30,15 @@ pub fn allocate(total: u64, stats: &PresampleStats) -> CacheAllocation {
     allocate_ratio(total, stats.sample_fraction())
 }
 
+/// Split by a planner [`WorkloadProfile`] — the same Eq. (1), fed by
+/// either the offline pre-sample or the online refresh accumulator.
+pub fn allocate_profile(
+    total: u64,
+    profile: &super::planner::WorkloadProfile<'_>,
+) -> CacheAllocation {
+    allocate_ratio(total, profile.sample_fraction())
+}
+
 /// Split by an explicit sampling-time fraction (exposed for sweeps and
 /// property tests).
 pub fn allocate_ratio(total: u64, sample_fraction: f64) -> CacheAllocation {

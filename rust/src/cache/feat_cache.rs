@@ -50,7 +50,11 @@ impl FeatCache {
         let max_slots = (capacity_bytes / per_node) as usize;
 
         let total: u64 = node_visits.iter().map(|&c| c as u64).sum();
-        let avg = total as f64 / node_visits.len().max(1) as f64;
+        // exact integer threshold: `c > total / n` compared as
+        // `c * n > total` so no f64 rounding can flip a node at the
+        // boundary (c ≤ u32::MAX and n ≤ node count keep the product
+        // well inside u64)
+        let n = node_visits.len().max(1) as u64;
 
         let mut selected: Vec<NodeId> =
             Vec::with_capacity(max_slots.min(node_visits.len()));
@@ -59,7 +63,7 @@ impl FeatCache {
             if selected.len() >= max_slots {
                 break;
             }
-            if (c as f64) > avg {
+            if c as u64 * n > total {
                 selected.push(v as NodeId);
             }
         }
@@ -72,7 +76,7 @@ impl FeatCache {
                 if selected.len() >= max_slots {
                     break;
                 }
-                if (c as f64) <= avg && c > 0 {
+                if c as u64 * n <= total && c > 0 {
                     selected.push(v as NodeId);
                 }
             }
@@ -105,7 +109,9 @@ impl FeatCache {
     }
 
     /// Fill with an externally chosen node priority order (DUCATI's
-    /// knapsack path); caches rows in order until capacity is exhausted.
+    /// knapsack path); caches rows in order until capacity is
+    /// exhausted. A node id appearing more than once in `order` is
+    /// cached once — duplicates cannot burn capacity slots.
     pub fn fill_with_order(
         features: &FeatureStore,
         order: &[NodeId],
@@ -114,14 +120,25 @@ impl FeatCache {
         let row_bytes = features.row_bytes();
         let per_node = row_bytes + ENTRY_OVERHEAD_BYTES;
         let max_slots = (capacity_bytes / per_node) as usize;
-        let selected = &order[..max_slots.min(order.len())];
         let dim = features.dim();
-        let mut data = vec![0.0f32; selected.len() * dim];
         let mut slot_of = vec![ABSENT; features.n_nodes()];
+        let mut selected: Vec<NodeId> =
+            Vec::with_capacity(max_slots.min(order.len()));
+        for &v in order {
+            if selected.len() >= max_slots {
+                break;
+            }
+            let slot = &mut slot_of[v as usize];
+            if *slot != ABSENT {
+                continue;
+            }
+            *slot = selected.len() as u32;
+            selected.push(v);
+        }
+        let mut data = vec![0.0f32; selected.len() * dim];
         let mut ledger = TransferLedger::new();
         for (slot, &v) in selected.iter().enumerate() {
             features.copy_row_into(v, &mut data[slot * dim..(slot + 1) * dim]);
-            slot_of[v as usize] = slot as u32;
         }
         ledger.upload(selected.len() as u64 * row_bytes);
         (
@@ -243,6 +260,32 @@ mod tests {
         let (c, _) = FeatCache::fill_with_order(&fs, &order, cap);
         assert!(c.contains(7) && c.contains(3));
         assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn fill_with_order_skips_duplicates() {
+        let fs = store(10, 4);
+        // node 7 repeated: must occupy one slot, leaving room for 3 AND 1
+        let order = [7u32, 7, 7, 3, 1];
+        let cap = 3 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, ledger) = FeatCache::fill_with_order(&fs, &order, cap);
+        assert_eq!(c.n_cached(), 3);
+        assert!(c.contains(7) && c.contains(3) && c.contains(1));
+        assert_eq!(ledger.h2d_bytes, 3 * fs.row_bytes());
+        assert_eq!(c.lookup(7).unwrap(), fs.row(7));
+    }
+
+    #[test]
+    fn exact_integer_average_threshold() {
+        let fs = store(4, 4);
+        // all-equal visits: average equals every count, so pass 1
+        // selects nothing and pass 2 fills in id order — the integer
+        // compare (c * n > total) cannot be skewed by f64 rounding
+        let visits = [3u32, 3, 3, 3];
+        let cap = 2 * (fs.row_bytes() + super::ENTRY_OVERHEAD_BYTES);
+        let (c, _) = FeatCache::fill(&fs, &visits, cap);
+        assert_eq!(c.n_cached(), 2);
+        assert!(c.contains(0) && c.contains(1));
     }
 
     #[test]

@@ -1,6 +1,21 @@
 //! The paper's contribution: workload-aware dual-cache allocation
 //! (Eq. 1) and the lightweight cache-filling algorithms (§IV.B,
-//! Algorithm 1).
+//! Algorithm 1) — plus the runtime machinery that keeps them live in a
+//! serving deployment.
+//!
+//! Layering:
+//! - [`adj_cache`] / [`feat_cache`] — the immutable filled caches.
+//! - [`alloc`] — the Eq. (1) capacity split.
+//! - [`planner`] — `CachePlanner`: profile → allocation → fill, with
+//!   the DCI, SCI, and DUCATI-knapsack strategies behind one trait.
+//! - [`runtime`] — `DualCacheRuntime`: epoch-swappable immutable
+//!   snapshots; every execution path reads caches through a per-thread
+//!   `SnapshotHandle` acquired once per batch.
+//! - [`refresh`] — the online loop that tracks serving-time accesses,
+//!   detects workload drift, re-plans in the background, and hot-swaps
+//!   the snapshot.
+//! - [`stats`] — per-run transfer statistics, including online-refill
+//!   traffic.
 //!
 //! Both caches live in simulated device memory ([`crate::mem`]); hits
 //! are device reads, misses fall back to UVA host reads. Capacity
@@ -10,9 +25,15 @@
 pub mod adj_cache;
 pub mod alloc;
 pub mod feat_cache;
+pub mod planner;
+pub mod refresh;
+pub mod runtime;
 pub mod stats;
 
 pub use adj_cache::AdjCache;
 pub use alloc::{allocate, CacheAllocation};
 pub use feat_cache::FeatCache;
+pub use planner::{planner_for, CachePlan, CachePlanner, WorkloadProfile};
+pub use refresh::{AccessTracker, RefreshConfig, RefreshStats, Refresher};
+pub use runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};
 pub use stats::CacheStats;

@@ -1,0 +1,378 @@
+//! Cache planning behind one trait: profiling counts → capacity
+//! allocation → fill.
+//!
+//! A [`CachePlanner`] turns a [`WorkloadProfile`] (per-node feature
+//! visits, per-CSC-element accesses, and the two stage times of Eq. 1)
+//! plus a byte budget into a filled [`CacheSnapshot`]. The same planner
+//! runs in two places:
+//!
+//! - **offline** — `baselines::{dci,sci,ducati}::prepare` profile via
+//!   pre-sampling and plan once at startup;
+//! - **online** — [`crate::cache::refresh`] re-plans from decayed
+//!   serving-time access counts and hot-swaps the result into the
+//!   [`crate::cache::DualCacheRuntime`].
+//!
+//! DCI's two-scan fills are what make the online path affordable: a
+//! re-plan costs O(n) scans plus the fill upload, not DUCATI's full
+//! O(n log n) knapsack sort (Fig. 10) — though `DucatiPlanner` is
+//! available behind the same trait for comparison runs.
+
+use std::time::Instant;
+
+use crate::config::SystemKind;
+use crate::graph::{Dataset, NodeId};
+use crate::mem::TransferLedger;
+use crate::sampler::PresampleStats;
+
+use super::adj_cache::AdjCache;
+use super::alloc::{self, CacheAllocation};
+use super::feat_cache::FeatCache;
+use super::runtime::CacheSnapshot;
+
+/// What every planner consumes: the access profile of a workload
+/// window, borrowed from whoever measured it (pre-sampling stats or
+/// the online refresh accumulator).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadProfile<'a> {
+    /// Per-node visit counts in the feature-loading stage.
+    pub node_visits: &'a [u32],
+    /// Per-CSC-element access counts (parallel to `csc.row_index`).
+    pub elem_counts: &'a [u32],
+    /// Sampling-stage time over the window, ns (modeled).
+    pub t_sample_ns: f64,
+    /// Feature-stage time over the window, ns (modeled).
+    pub t_feature_ns: f64,
+}
+
+impl<'a> WorkloadProfile<'a> {
+    /// View a pre-sampling profile as a planner input.
+    pub fn from_presample(stats: &'a PresampleStats) -> WorkloadProfile<'a> {
+        WorkloadProfile {
+            node_visits: &stats.node_visits,
+            elem_counts: &stats.elem_counts,
+            t_sample_ns: stats.t_sample_ns,
+            t_feature_ns: stats.t_feature_ns,
+        }
+    }
+
+    /// Eq. (1) ratio input: fraction of prep time spent sampling.
+    pub fn sample_fraction(&self) -> f64 {
+        let total = self.t_sample_ns + self.t_feature_ns;
+        if total == 0.0 {
+            0.5
+        } else {
+            self.t_sample_ns / total
+        }
+    }
+}
+
+/// A planner's output: the snapshot to install plus the fill's own
+/// preprocessing traffic and host-side wall time.
+pub struct CachePlan {
+    /// Filled caches (epoch assigned at install time).
+    pub snapshot: CacheSnapshot,
+    /// H2D upload traffic of the fills.
+    pub fill_ledger: TransferLedger,
+    /// Host-side wall time of allocation + fill, ns.
+    pub plan_wall_ns: f64,
+}
+
+/// Allocation + fill strategy. Implementations must be cheap enough to
+/// run on the online refresh thread (or accept that refreshes with
+/// them are slow — `DucatiPlanner`).
+pub trait CachePlanner: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Split `budget` bytes and fill both caches from `profile`.
+    fn plan(&self, ds: &Dataset, profile: &WorkloadProfile<'_>, budget: u64) -> CachePlan;
+}
+
+/// The planner behind each cache-owning system. `None` for systems
+/// with no workload-driven cache plan (DGL caches nothing; RAIN's
+/// state is its batch order, which cannot be re-planned mid-serve).
+pub fn planner_for(kind: SystemKind) -> Option<Box<dyn CachePlanner>> {
+    match kind {
+        SystemKind::Dci => Some(Box::new(DciPlanner)),
+        SystemKind::Sci => Some(Box::new(SciPlanner)),
+        SystemKind::Ducati => Some(Box::new(DucatiPlanner)),
+        SystemKind::Dgl | SystemKind::Rain => None,
+    }
+}
+
+/// The paper's §IV pipeline: Eq. (1) split, then the two lightweight
+/// fills (average-visit threshold + Algorithm 1).
+pub struct DciPlanner;
+
+impl CachePlanner for DciPlanner {
+    fn name(&self) -> &'static str {
+        "dci"
+    }
+
+    fn plan(&self, ds: &Dataset, profile: &WorkloadProfile<'_>, budget: u64) -> CachePlan {
+        let split = alloc::allocate_profile(budget, profile);
+        let wall0 = Instant::now();
+        let (adj, adj_ledger) = AdjCache::fill(&ds.csc, profile.elem_counts, split.c_adj);
+        let (feat, feat_ledger) =
+            FeatCache::fill(&ds.features, profile.node_visits, split.c_feat);
+        let mut fill_ledger = adj_ledger;
+        fill_ledger.merge(&feat_ledger);
+        CachePlan {
+            snapshot: CacheSnapshot::new(Some(adj), Some(feat), Some(split)),
+            fill_ledger,
+            plan_wall_ns: wall0.elapsed().as_nanos() as f64,
+        }
+    }
+}
+
+/// Single-cache baseline: the whole budget goes to node features.
+pub struct SciPlanner;
+
+impl CachePlanner for SciPlanner {
+    fn name(&self) -> &'static str {
+        "sci"
+    }
+
+    fn plan(&self, ds: &Dataset, profile: &WorkloadProfile<'_>, budget: u64) -> CachePlan {
+        let wall0 = Instant::now();
+        let (feat, fill_ledger) =
+            FeatCache::fill(&ds.features, profile.node_visits, budget);
+        CachePlan {
+            snapshot: CacheSnapshot::new(None, Some(feat), None),
+            fill_ledger,
+            plan_wall_ns: wall0.elapsed().as_nanos() as f64,
+        }
+    }
+}
+
+/// DUCATI's dual-cache population strategy (Zhang et al., SIGMOD
+/// 2023), adapted to inference exactly as the paper's §V.C does:
+/// value/size densities per entry, full sorts of both entry lists (the
+/// O(n log n) knapsack), cumulative value curves with least-squares
+/// decile slope fits, and a greedy merge by density until the budget
+/// is spent.
+pub struct DucatiPlanner;
+
+/// Least-squares slope of (0..n, ys) — the curve-fitting step.
+pub(crate) fn fit_slope(ys: &[f64]) -> f64 {
+    let n = ys.len() as f64;
+    if ys.len() < 2 {
+        return 0.0;
+    }
+    let mean_x = (n - 1.0) / 2.0;
+    let mean_y = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (y - mean_y);
+        den += dx * dx;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+impl CachePlanner for DucatiPlanner {
+    fn name(&self) -> &'static str {
+        "ducati"
+    }
+
+    fn plan(&self, ds: &Dataset, profile: &WorkloadProfile<'_>, budget: u64) -> CachePlan {
+        let wall0 = Instant::now();
+
+        // value curves: every entry gets a value/size density
+        let n = ds.csc.n_nodes();
+        let row_cost = (ds.features.row_bytes() + 16) as f64;
+        let mut nfeat: Vec<(f64, NodeId)> = (0..n)
+            .map(|v| (profile.node_visits[v] as f64 / row_cost, v as NodeId))
+            .collect();
+        let mut adj: Vec<(f64, NodeId)> = (0..n)
+            .map(|v| {
+                let span = ds.csc.col_ptr[v] as usize..ds.csc.col_ptr[v + 1] as usize;
+                let total: u64 =
+                    profile.elem_counts[span].iter().map(|&c| c as u64).sum();
+                let size = (ds.csc.degree(v as NodeId) * 4 + 12) as f64;
+                (total as f64 / size, v as NodeId)
+            })
+            .collect();
+        // full sorts — the O(n log n) knapsack cost the paper cites
+        nfeat.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        adj.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+
+        // cumulative curves + decile slope fits (the split heuristic)
+        let cum = |xs: &[(f64, NodeId)]| -> Vec<f64> {
+            let mut acc = 0.0;
+            xs.iter()
+                .map(|&(d, _)| {
+                    acc += d;
+                    acc
+                })
+                .collect()
+        };
+        let nfeat_curve = cum(&nfeat);
+        let adj_curve = cum(&adj);
+        let decile_slopes = |curve: &[f64]| -> Vec<f64> {
+            let step = (curve.len() / 10).max(1);
+            curve.chunks(step).map(fit_slope).collect()
+        };
+        let _nf_slopes = decile_slopes(&nfeat_curve);
+        let _adj_slopes = decile_slopes(&adj_curve);
+
+        // greedy merge by density until the budget is spent
+        let mut remaining = budget;
+        let (mut fi, mut ai) = (0usize, 0usize);
+        let mut feat_order: Vec<NodeId> = Vec::new();
+        let mut adj_order: Vec<u32> = Vec::new();
+        let mut c_feat = 0u64;
+        let mut c_adj = n as u64 * 12; // adj metadata charged up front
+        let adj_meta_ok = remaining > c_adj;
+        if adj_meta_ok {
+            remaining -= c_adj; // metadata must come out of the budget too
+        }
+        while remaining > 0 && (fi < nfeat.len() || ai < adj.len()) {
+            let fd = nfeat.get(fi).map(|x| x.0).unwrap_or(f64::NEG_INFINITY);
+            let ad = if adj_meta_ok {
+                adj.get(ai).map(|x| x.0).unwrap_or(f64::NEG_INFINITY)
+            } else {
+                f64::NEG_INFINITY
+            };
+            if fd == f64::NEG_INFINITY && ad == f64::NEG_INFINITY {
+                break;
+            }
+            if fd >= ad {
+                let v = nfeat[fi].1;
+                let sz = ds.features.row_bytes() + 16;
+                if nfeat[fi].0 > 0.0 && remaining >= sz {
+                    feat_order.push(v);
+                    c_feat += sz;
+                    remaining -= sz;
+                }
+                fi += 1;
+                if nfeat.get(fi - 1).map(|x| x.0 <= 0.0).unwrap_or(true) && fd <= 0.0 {
+                    // exhausted useful nfeat entries
+                    if ad <= 0.0 {
+                        break;
+                    }
+                }
+            } else {
+                let v = adj[ai].1;
+                let sz = ds.csc.degree(v) as u64 * 4;
+                if adj[ai].0 > 0.0 && remaining >= sz {
+                    adj_order.push(v);
+                    c_adj += sz;
+                    remaining -= sz;
+                }
+                ai += 1;
+            }
+        }
+
+        // fill caches with the knapsack-chosen orders
+        let (adj_cache, adj_ledger) = if ds.csc.bytes_total() <= c_adj {
+            AdjCache::fill(&ds.csc, profile.elem_counts, c_adj)
+        } else {
+            AdjCache::fill_with_order(&ds.csc, profile.elem_counts, &adj_order, c_adj)
+        };
+        let (feat_cache, feat_ledger) =
+            FeatCache::fill_with_order(&ds.features, &feat_order, c_feat);
+        let mut fill_ledger = adj_ledger;
+        fill_ledger.merge(&feat_ledger);
+
+        CachePlan {
+            snapshot: CacheSnapshot::new(
+                Some(adj_cache),
+                Some(feat_cache),
+                Some(CacheAllocation { c_adj, c_feat }),
+            ),
+            fill_ledger,
+            plan_wall_ns: wall0.elapsed().as_nanos() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::mem::CostModel;
+    use crate::sampler::{presample, Fanout};
+    use crate::util::Rng;
+
+    fn profile_tiny() -> (Dataset, PresampleStats) {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let stats = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            64,
+            &Fanout::parse("3,2").unwrap(),
+            6,
+            &CostModel::default(),
+            &mut Rng::new(11),
+        );
+        (ds, stats)
+    }
+
+    #[test]
+    fn fit_slope_exact_line() {
+        let ys: Vec<f64> = (0..10).map(|i| 3.0 * i as f64 + 1.0).collect();
+        assert!((fit_slope(&ys) - 3.0).abs() < 1e-9);
+        assert_eq!(fit_slope(&[1.0]), 0.0);
+        assert_eq!(fit_slope(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn dci_plan_splits_and_fills_within_budget() {
+        let (ds, stats) = profile_tiny();
+        let profile = WorkloadProfile::from_presample(&stats);
+        let plan = DciPlanner.plan(&ds, &profile, 300_000);
+        let split = plan.snapshot.alloc.unwrap();
+        assert_eq!(split.total(), 300_000);
+        assert!(split.c_adj > 0 && split.c_feat > 0);
+        assert!(plan.snapshot.feat.as_ref().unwrap().n_cached() > 0);
+        assert!(plan.fill_ledger.h2d_bytes > 0);
+        assert!(plan.snapshot.bytes_used() <= 300_000 + ds.csc.bytes_total());
+    }
+
+    #[test]
+    fn sci_plan_is_feature_only() {
+        let (ds, stats) = profile_tiny();
+        let profile = WorkloadProfile::from_presample(&stats);
+        let plan = SciPlanner.plan(&ds, &profile, 100_000);
+        assert!(plan.snapshot.adj.is_none());
+        let fc = plan.snapshot.feat.as_ref().unwrap();
+        assert!(fc.bytes_used() <= 100_000);
+        assert!(fc.n_cached() > 0);
+    }
+
+    #[test]
+    fn ducati_plan_fills_dual_caches() {
+        let (ds, stats) = profile_tiny();
+        let profile = WorkloadProfile::from_presample(&stats);
+        let plan = DucatiPlanner.plan(&ds, &profile, 400_000);
+        let split = plan.snapshot.alloc.unwrap();
+        assert!(split.total() <= 400_000 + ds.csc.n_nodes() as u64 * 12);
+        assert!(plan.snapshot.feat.as_ref().unwrap().n_cached() > 0);
+    }
+
+    #[test]
+    fn planner_registry_matches_systems() {
+        assert_eq!(planner_for(SystemKind::Dci).unwrap().name(), "dci");
+        assert_eq!(planner_for(SystemKind::Sci).unwrap().name(), "sci");
+        assert_eq!(planner_for(SystemKind::Ducati).unwrap().name(), "ducati");
+        assert!(planner_for(SystemKind::Dgl).is_none());
+        assert!(planner_for(SystemKind::Rain).is_none());
+    }
+
+    #[test]
+    fn zero_time_profile_splits_evenly() {
+        let p = WorkloadProfile {
+            node_visits: &[],
+            elem_counts: &[],
+            t_sample_ns: 0.0,
+            t_feature_ns: 0.0,
+        };
+        assert_eq!(p.sample_fraction(), 0.5);
+    }
+}

@@ -1,0 +1,492 @@
+//! Online workload-drift re-planning.
+//!
+//! A serving deployment whose request mix drifts keeps paying misses on
+//! a stale plan (BGL's observation: feature-cache policy must track the
+//! live access distribution). DCI's two-scan fills make re-planning
+//! cheap enough to do *online*, so:
+//!
+//! - the serving hot path bumps an [`AccessTracker`] (relaxed atomic
+//!   adds: per input node in the gather stage, per touched element in
+//!   the sampling stage — same counters pre-sampling collects);
+//! - a background [`Refresher`] thread drains the tracker on a poll
+//!   interval into an exponentially decayed profile, measures drift as
+//!   the total-variation distance between the node-visit distribution
+//!   the live snapshot was planned from and the decayed observed one;
+//! - past the drift threshold it re-plans through the same
+//!   [`CachePlanner`] the offline path used and hot-swaps the result
+//!   into the [`DualCacheRuntime`] — readers pick the new epoch up on
+//!   their next per-batch acquire, never blocking (the runtime counts
+//!   any reader that does block; the bench asserts zero).
+//!
+//! Cost: the tracker is two count arrays (O(nodes) + O(edges)) per
+//! worker and one relaxed `fetch_add` per access; the drift check is
+//! O(nodes + edges) on the background thread per poll that saw new
+//! batches. Sharding these accumulators across devices is an open item
+//! (ROADMAP).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::graph::{Dataset, NodeId};
+
+use super::planner::{CachePlanner, WorkloadProfile};
+use super::runtime::DualCacheRuntime;
+
+/// Knobs of the online refresh loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefreshConfig {
+    /// Poll period of the background drift check.
+    pub check_interval: Duration,
+    /// Served batches that must accumulate before a drift check counts.
+    pub min_batches: u64,
+    /// Exponential decay applied to the accumulated profile on every
+    /// poll that drained new data (0 = only the newest window counts,
+    /// 1 = never forget).
+    pub decay: f64,
+    /// Total-variation distance (in [0, 1]) between the planned and
+    /// observed node-visit distributions that triggers a re-plan.
+    pub drift_threshold: f64,
+}
+
+impl Default for RefreshConfig {
+    fn default() -> Self {
+        RefreshConfig {
+            check_interval: Duration::from_millis(100),
+            min_batches: 8,
+            decay: 0.5,
+            drift_threshold: 0.15,
+        }
+    }
+}
+
+/// Serving-time access accumulator. One per engine; the hot path adds
+/// with relaxed atomics (u32 adds commute, so counts are exact
+/// whatever the thread interleaving), the refresher drains with
+/// `swap(0)`.
+pub struct AccessTracker {
+    node_visits: Vec<AtomicU32>,
+    elem_counts: Vec<AtomicU32>,
+    batches: AtomicU64,
+    /// Modeled stage ns accumulated as integer ns (Eq. 1 ratio input).
+    t_sample_ns: AtomicU64,
+    t_feature_ns: AtomicU64,
+}
+
+/// One drained window of tracker counts.
+pub struct DrainedCounts {
+    pub node_visits: Vec<u32>,
+    pub elem_counts: Vec<u32>,
+    pub batches: u64,
+    pub t_sample_ns: f64,
+    pub t_feature_ns: f64,
+}
+
+impl AccessTracker {
+    pub fn new(n_nodes: usize, n_edges: usize) -> Self {
+        AccessTracker {
+            node_visits: (0..n_nodes).map(|_| AtomicU32::new(0)).collect(),
+            elem_counts: (0..n_edges).map(|_| AtomicU32::new(0)).collect(),
+            batches: AtomicU64::new(0),
+            t_sample_ns: AtomicU64::new(0),
+            t_feature_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one feature-stage visit of `v` (gather stage).
+    #[inline]
+    pub fn record_node(&self, v: NodeId) {
+        self.node_visits[v as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one adjacency-element access at CSC offset `at`
+    /// (sampling stage).
+    #[inline]
+    pub fn record_elem(&self, at: usize) {
+        self.elem_counts[at].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a served batch's modeled stage times.
+    pub fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.t_sample_ns
+            .fetch_add(t_sample_ns.max(0.0) as u64, Ordering::Relaxed);
+        self.t_feature_ns
+            .fetch_add(t_feature_ns.max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Batches recorded since the last drain.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Take the counts, resetting them to zero.
+    pub fn drain(&self) -> DrainedCounts {
+        DrainedCounts {
+            node_visits: self
+                .node_visits
+                .iter()
+                .map(|c| c.swap(0, Ordering::Relaxed))
+                .collect(),
+            elem_counts: self
+                .elem_counts
+                .iter()
+                .map(|c| c.swap(0, Ordering::Relaxed))
+                .collect(),
+            batches: self.batches.swap(0, Ordering::Relaxed),
+            t_sample_ns: self.t_sample_ns.swap(0, Ordering::Relaxed) as f64,
+            t_feature_ns: self.t_feature_ns.swap(0, Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+/// What the refresh loop did over its lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct RefreshStats {
+    /// Drift checks that had enough data to evaluate.
+    pub checks: u64,
+    /// Re-plans installed.
+    pub replans: u64,
+    /// Last measured total-variation drift.
+    pub last_drift: f64,
+    /// Total background wall time spent planning + installing, ns.
+    pub replan_wall_ns: f64,
+    /// H2D bytes uploaded by online refills.
+    pub fill_h2d_bytes: u64,
+}
+
+/// Handle to the background refresh thread.
+pub struct Refresher {
+    stop: Arc<AtomicBool>,
+    join: JoinHandle<()>,
+    stats: Arc<Mutex<RefreshStats>>,
+}
+
+impl Refresher {
+    /// Spawn the refresh loop. `planned_visits` is the node-visit
+    /// profile the runtime's live snapshot was planned from (the
+    /// pre-sample profile at startup); `budget` is the byte budget
+    /// every re-plan must stay within (installs never grow the device
+    /// claim — see the snapshot lifetime rules).
+    pub fn spawn(
+        ds: Arc<Dataset>,
+        runtime: Arc<DualCacheRuntime>,
+        tracker: Arc<AccessTracker>,
+        planner: Box<dyn CachePlanner>,
+        budget: u64,
+        planned_visits: Vec<u32>,
+        cfg: RefreshConfig,
+    ) -> Refresher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(RefreshStats::default()));
+        let stop2 = Arc::clone(&stop);
+        let stats2 = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("dci-refresh".into())
+            .spawn(move || {
+                refresh_loop(&ds, &runtime, &tracker, planner.as_ref(), budget,
+                             planned_visits, &cfg, &stop2, &stats2)
+            })
+            .expect("spawn refresh thread");
+        Refresher { stop, join, stats }
+    }
+
+    /// Current stats (the loop keeps them up to date after every check).
+    pub fn stats(&self) -> RefreshStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Stop the loop and return its final stats.
+    pub fn stop(self) -> RefreshStats {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.join.join();
+        let stats = self.stats.lock().unwrap().clone();
+        stats
+    }
+}
+
+/// Total-variation distance between a normalized distribution and a
+/// raw (unnormalized) observation; 0 when the observation is empty.
+fn tv_distance(planned: &[f64], observed: &[f64]) -> f64 {
+    let total: f64 = observed.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut tv = 0.0;
+    for (p, o) in planned.iter().zip(observed) {
+        tv += (p - o / total).abs();
+    }
+    0.5 * tv
+}
+
+/// Normalize counts into a distribution (all-zero stays all-zero).
+fn normalize(xs: &[f64]) -> Vec<f64> {
+    let total: f64 = xs.iter().sum();
+    if total <= 0.0 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|&x| x / total).collect()
+}
+
+/// Quantize a decayed profile back to the u32 counts the fills consume,
+/// under a caller-chosen `scale`. The same scale must be applied to the
+/// node-visit and element-count arrays of one re-plan: planners like
+/// DUCATI compare value densities *across* the two arrays, so
+/// per-array scaling would skew the knapsack's feature-vs-adjacency
+/// choice. Uniform scaling itself is fill-invariant (thresholds and
+/// orderings compare relative magnitudes).
+fn quantize(xs: &[f64], scale: f64) -> Vec<u32> {
+    xs.iter().map(|&x| (x * scale).round().max(0.0) as u32).collect()
+}
+
+/// One common scale for a re-plan's two count arrays: lifts decayed
+/// (sub-1) profiles to 10-bit resolution at the hottest entry so
+/// rounding cannot zero a still-meaningful profile, and leaves large
+/// counts untouched.
+fn common_scale(a: &[f64], b: &[f64]) -> f64 {
+    let maxv = a
+        .iter()
+        .chain(b)
+        .cloned()
+        .fold(0.0f64, f64::max);
+    if maxv > 0.0 && maxv < 1024.0 {
+        1024.0 / maxv
+    } else {
+        1.0
+    }
+}
+
+/// Sleep up to `total`, waking early (within one 5 ms slice) when
+/// `stop` is raised — keeps `Refresher::stop` latency bounded even
+/// with multi-second poll intervals.
+fn sleep_interruptibly(total: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(5);
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep((deadline - now).min(slice));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn refresh_loop(
+    ds: &Dataset,
+    runtime: &DualCacheRuntime,
+    tracker: &AccessTracker,
+    planner: &dyn CachePlanner,
+    budget: u64,
+    planned_visits: Vec<u32>,
+    cfg: &RefreshConfig,
+    stop: &AtomicBool,
+    stats_out: &Mutex<RefreshStats>,
+) {
+    let n_nodes = ds.csc.n_nodes();
+    let planned_f: Vec<f64> = planned_visits.iter().map(|&c| c as f64).collect();
+    let mut planned = normalize(&planned_f);
+    if planned.len() != n_nodes {
+        planned = vec![0.0; n_nodes];
+    }
+
+    let mut acc_nv: Vec<f64> = vec![0.0; n_nodes];
+    let mut acc_ec: Vec<f64> = vec![0.0; ds.csc.n_edges()];
+    let mut acc_ts = 0.0f64;
+    let mut acc_tf = 0.0f64;
+    let mut batches_pending = 0u64;
+    let mut stats = RefreshStats::default();
+
+    while !stop.load(Ordering::Relaxed) {
+        sleep_interruptibly(cfg.check_interval, stop);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // idle server: skip the O(nodes + edges) drain entirely
+        if tracker.batches() == 0 && batches_pending == 0 {
+            continue;
+        }
+        let d = tracker.drain();
+        if d.batches > 0 {
+            for a in acc_nv.iter_mut() {
+                *a *= cfg.decay;
+            }
+            for a in acc_ec.iter_mut() {
+                *a *= cfg.decay;
+            }
+            acc_ts = acc_ts * cfg.decay + d.t_sample_ns;
+            acc_tf = acc_tf * cfg.decay + d.t_feature_ns;
+            for (a, &c) in acc_nv.iter_mut().zip(&d.node_visits) {
+                *a += c as f64;
+            }
+            for (a, &c) in acc_ec.iter_mut().zip(&d.elem_counts) {
+                *a += c as f64;
+            }
+            batches_pending += d.batches;
+        }
+        if batches_pending < cfg.min_batches.max(1) {
+            continue;
+        }
+
+        stats.checks += 1;
+        // the min-batches window is per *check*: reset it whatever the
+        // verdict, so a quiet server goes back to the idle skip above
+        // instead of re-checking unchanged data every poll (drift that
+        // builds slowly still accumulates in the decayed profile)
+        batches_pending = 0;
+        let drift = tv_distance(&planned, &acc_nv);
+        stats.last_drift = drift;
+        if drift <= cfg.drift_threshold {
+            *stats_out.lock().unwrap() = stats.clone();
+            continue;
+        }
+
+        // re-plan on this thread with the planner's (lightweight) fill
+        // and hot-swap; the serving path never waits on any of this
+        let t0 = Instant::now();
+        let scale = common_scale(&acc_nv, &acc_ec);
+        let nv = quantize(&acc_nv, scale);
+        let ec = quantize(&acc_ec, scale);
+        let profile = WorkloadProfile {
+            node_visits: &nv,
+            elem_counts: &ec,
+            t_sample_ns: acc_ts,
+            t_feature_ns: acc_tf,
+        };
+        let plan = planner.plan(ds, &profile, budget);
+        stats.fill_h2d_bytes += plan.fill_ledger.h2d_bytes;
+        runtime.install(plan.snapshot);
+        stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
+        stats.replans += 1;
+        planned = normalize(&acc_nv);
+        *stats_out.lock().unwrap() = stats.clone();
+    }
+    *stats_out.lock().unwrap() = stats;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::planner::DciPlanner;
+    use crate::cache::runtime::CacheSnapshot;
+    use crate::graph::datasets;
+
+    #[test]
+    fn tracker_counts_and_drains() {
+        let t = AccessTracker::new(4, 6);
+        t.record_node(1);
+        t.record_node(1);
+        t.record_node(3);
+        t.record_elem(5);
+        t.record_batch(100.0, 200.0);
+        assert_eq!(t.batches(), 1);
+        let d = t.drain();
+        assert_eq!(d.node_visits, vec![0, 2, 0, 1]);
+        assert_eq!(d.elem_counts[5], 1);
+        assert_eq!(d.batches, 1);
+        assert_eq!(d.t_sample_ns, 100.0);
+        assert_eq!(d.t_feature_ns, 200.0);
+        // drained: everything reset
+        let d2 = t.drain();
+        assert_eq!(d2.batches, 0);
+        assert!(d2.node_visits.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn tv_distance_bounds() {
+        let p = vec![0.5, 0.5, 0.0];
+        assert_eq!(tv_distance(&p, &[1.0, 1.0, 0.0]), 0.0);
+        // fully disjoint mass -> 1.0
+        let q = vec![0.0, 0.0, 7.0];
+        assert!((tv_distance(&p, &q) - 1.0).abs() < 1e-12);
+        // empty observation -> no drift signal
+        assert_eq!(tv_distance(&p, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn quantize_preserves_relative_magnitudes() {
+        let nv = [0.1, 0.2, 0.4];
+        let scale = common_scale(&nv, &[]);
+        let q = quantize(&nv, scale);
+        assert!(q[2] > q[1] && q[1] > q[0]);
+        assert_eq!(q[2], 1024);
+        assert_eq!(quantize(&[0.0, 0.0], common_scale(&[0.0, 0.0], &[])), vec![0, 0]);
+        // large counts pass through unscaled
+        let big = [2000.0, 4000.0];
+        assert_eq!(quantize(&big, common_scale(&big, &[])), vec![2000, 4000]);
+        // ONE scale across both arrays of a re-plan: the hotter array
+        // pins it, so cross-array density ratios survive quantization
+        let ec = [4000.0];
+        let s = common_scale(&nv, &ec);
+        assert_eq!(s, 1.0);
+        assert_eq!(quantize(&nv, s), vec![0, 0, 0]);
+        assert_eq!(quantize(&ec, s), vec![4000]);
+    }
+
+    #[test]
+    fn refresher_replans_on_forced_drift() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let runtime = Arc::new(DualCacheRuntime::new(CacheSnapshot::empty()));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        // a baseline profile concentrated on node 0; observe node 1
+        let mut planned = vec![0u32; ds.csc.n_nodes()];
+        planned[0] = 100;
+        let r = Refresher::spawn(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker),
+            Box::new(DciPlanner),
+            200_000,
+            planned,
+            RefreshConfig {
+                check_interval: Duration::from_millis(5),
+                min_batches: 1,
+                decay: 0.5,
+                drift_threshold: 0.3,
+            },
+        );
+        for _ in 0..50 {
+            tracker.record_node(1);
+        }
+        tracker.record_elem(0);
+        tracker.record_batch(50.0, 50.0);
+        // wait for the loop to pick it up
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = r.stop();
+        assert!(stats.replans >= 1, "drift should have forced a re-plan: {stats:?}");
+        assert!(stats.last_drift > 0.3);
+        assert!(runtime.swaps() >= 1);
+        // the refreshed snapshot caches the observed hot node
+        let snap = runtime.load();
+        assert!(snap.feat.as_ref().unwrap().contains(1));
+    }
+
+    #[test]
+    fn refresher_idle_without_traffic() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let runtime = Arc::new(DualCacheRuntime::new(CacheSnapshot::empty()));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        let r = Refresher::spawn(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker),
+            Box::new(DciPlanner),
+            100_000,
+            Vec::new(),
+            RefreshConfig {
+                check_interval: Duration::from_millis(2),
+                min_batches: 1,
+                decay: 0.5,
+                drift_threshold: 0.0,
+            },
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        let stats = r.stop();
+        assert_eq!(stats.replans, 0, "no traffic, no re-plan");
+        assert_eq!(runtime.swaps(), 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Epoch-swappable dual-cache runtime.
+//!
+//! The caches themselves ([`AdjCache`], [`FeatCache`]) are immutable
+//! once filled; what changes over the life of a serving deployment is
+//! *which* filled pair is live. [`DualCacheRuntime`] owns that choice
+//! as a sequence of epochs: each [`CacheSnapshot`] is an immutable
+//! `(adj, feat, alloc)` triple tagged with the epoch that installed it,
+//! and every execution path (serial loop, pipeline workers, served
+//! requests) reads cache state through a per-thread [`SnapshotHandle`]
+//! acquired once per batch.
+//!
+//! Hot-path cost: `SnapshotHandle::acquire` is one atomic epoch load
+//! per batch. The handle re-clones the shared `Arc` only when an
+//! [`DualCacheRuntime::install`] has happened since its last acquire —
+//! steady-state serving never touches the publish lock, and an
+//! install-concurrent acquire only *tries* the lock, falling back to
+//! its previous (still valid) epoch for one batch if an installer
+//! holds it. A reader blocks only if an installer camps on the lock
+//! across `MAX_DEFERRALS` consecutive batches — install critical
+//! sections are a pointer swap, so that means someone regressed
+//! `install` into doing real work under the lock. Those blocks are
+//! counted by `swap_stalls()` (asserted zero by the drifting-workload
+//! bench); `swap_deferrals()` counts the benign one-batch lags.
+//!
+//! Snapshot lifetime rules (see DESIGN.md §Cache runtime):
+//! 1. A snapshot is immutable after `install`; refreshers build a new
+//!    one and swap, they never patch the live one.
+//! 2. A batch uses exactly one snapshot end to end — `acquire` once
+//!    per batch, never per lookup — so a mid-batch install cannot mix
+//!    epochs within a batch.
+//! 3. Old snapshots die when the last in-flight batch holding their
+//!    `Arc` finishes; nothing blocks on their retirement.
+//! 4. Every snapshot's `bytes_used()` stays within the budget the
+//!    runtime was planned for; installs never grow the device claim.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::adj_cache::AdjCache;
+use super::alloc::CacheAllocation;
+use super::feat_cache::FeatCache;
+
+/// One immutable epoch of dual-cache state.
+pub struct CacheSnapshot {
+    /// Epoch tag; assigned by [`DualCacheRuntime::install`] (the
+    /// initial snapshot is epoch 1).
+    epoch: u64,
+    /// Adjacency cache (`None` = all sampling over UVA).
+    pub adj: Option<AdjCache>,
+    /// Feature cache (`None` = all gathers over UVA).
+    pub feat: Option<FeatCache>,
+    /// The allocation split this snapshot was filled under (reporting).
+    pub alloc: Option<CacheAllocation>,
+}
+
+impl CacheSnapshot {
+    pub fn new(
+        adj: Option<AdjCache>,
+        feat: Option<FeatCache>,
+        alloc: Option<CacheAllocation>,
+    ) -> Self {
+        CacheSnapshot { epoch: 0, adj, feat, alloc }
+    }
+
+    /// A cacheless snapshot (DGL/RAIN — every access goes to UVA).
+    pub fn empty() -> Self {
+        CacheSnapshot { epoch: 0, adj: None, feat: None, alloc: None }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Device bytes the snapshot's caches occupy (payload + metadata).
+    pub fn bytes_used(&self) -> u64 {
+        self.adj.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
+            + self.feat.as_ref().map(|c| c.bytes_used()).unwrap_or(0)
+    }
+}
+
+/// The swappable holder of the live [`CacheSnapshot`].
+pub struct DualCacheRuntime {
+    current: Mutex<Arc<CacheSnapshot>>,
+    /// Published epoch of `current` — the readers' fast-path check.
+    epoch: AtomicU64,
+    swaps: AtomicU64,
+    stalls: AtomicU64,
+    deferrals: AtomicU64,
+}
+
+impl DualCacheRuntime {
+    /// Wrap an initial snapshot (epoch 1).
+    pub fn new(snapshot: CacheSnapshot) -> Self {
+        let mut s = snapshot;
+        s.epoch = 1;
+        DualCacheRuntime {
+            current: Mutex::new(Arc::new(s)),
+            epoch: AtomicU64::new(1),
+            swaps: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            deferrals: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish a new snapshot; returns its epoch. Readers pick it up on
+    /// their next per-batch acquire without blocking; in-flight batches
+    /// finish on the snapshot they already hold.
+    pub fn install(&self, snapshot: CacheSnapshot) -> u64 {
+        let mut s = snapshot;
+        let mut guard = self.current.lock().unwrap();
+        let e = guard.epoch + 1;
+        s.epoch = e;
+        *guard = Arc::new(s);
+        // publish while still holding the lock: concurrent installs
+        // are serialized, so the published epoch can never lag the
+        // live snapshot. A reader that observes `e` in this window
+        // loses the `try_lock` race and defers one batch — benign
+        // (see `SnapshotHandle::acquire`).
+        self.epoch.store(e, Ordering::Release);
+        drop(guard);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        e
+    }
+
+    /// Current snapshot (takes the publish lock — reporting/startup
+    /// path; batch loops go through a [`SnapshotHandle`] instead).
+    pub fn load(&self) -> Arc<CacheSnapshot> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// Published epoch of the live snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Installs performed since construction.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Times a reader's acquire actually *blocked* on an install: a
+    /// handle falls back to a blocking lock (and counts here) only
+    /// after [`MAX_DEFERRALS`] consecutive `try_lock` losses — which
+    /// requires an installer to hold the publish lock across that many
+    /// of the reader's batch boundaries. Install critical sections are
+    /// a pointer swap, so this stays zero unless someone regresses
+    /// `install` into doing real work (e.g. planning) under the lock —
+    /// exactly what the benches' `swap_stalls == 0` assertions exist
+    /// to catch.
+    pub fn swap_stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Times a reader served one extra batch on its previous epoch
+    /// because an install held the publish lock at acquire time
+    /// (benign — the lag is one batch, observability only).
+    pub fn swap_deferrals(&self) -> u64 {
+        self.deferrals.load(Ordering::Relaxed)
+    }
+}
+
+/// Consecutive deferred acquires after which a handle gives up on
+/// `try_lock` and blocks (counting a swap stall): bounds how far a
+/// reader can lag behind a pathologically slow installer.
+const MAX_DEFERRALS: u32 = 8;
+
+/// A per-thread cursor over the runtime's epochs: holds the last
+/// acquired snapshot `Arc` and refreshes it only when the published
+/// epoch moves.
+pub struct SnapshotHandle {
+    rt: Arc<DualCacheRuntime>,
+    cached: Arc<CacheSnapshot>,
+    /// Consecutive `try_lock` losses (resets on any successful
+    /// refresh); at [`MAX_DEFERRALS`] the next refresh blocks.
+    deferred_streak: u32,
+}
+
+impl SnapshotHandle {
+    pub fn new(rt: &Arc<DualCacheRuntime>) -> SnapshotHandle {
+        SnapshotHandle { cached: rt.load(), rt: Arc::clone(rt), deferred_streak: 0 }
+    }
+
+    /// The snapshot to use for the next batch. Fast path is a single
+    /// atomic load; the lock is *tried* only when an install happened
+    /// since this handle's previous acquire — if an install holds it
+    /// right now, the batch runs on the handle's previous epoch
+    /// (always valid) and the next acquire retries. Only a streak of
+    /// [`MAX_DEFERRALS`] consecutive losses (an installer camping on
+    /// the lock across that many batches) makes the handle block, and
+    /// that is counted as a swap stall.
+    #[inline]
+    pub fn acquire(&mut self) -> &CacheSnapshot {
+        let e = self.rt.epoch.load(Ordering::Acquire);
+        if e != self.cached.epoch {
+            self.refresh_slow();
+        }
+        &self.cached
+    }
+
+    /// Like [`acquire`](Self::acquire) but hands out an owning `Arc`
+    /// (for batches whose lifetime outlives the handle borrow).
+    pub fn acquire_arc(&mut self) -> Arc<CacheSnapshot> {
+        self.acquire();
+        Arc::clone(&self.cached)
+    }
+
+    #[cold]
+    fn refresh_slow(&mut self) {
+        if self.deferred_streak >= MAX_DEFERRALS {
+            // pathological: an installer held the lock across
+            // MAX_DEFERRALS of our batch boundaries — wait it out
+            // rather than lag further, and record the stall
+            self.rt.stalls.fetch_add(1, Ordering::Relaxed);
+            self.cached = Arc::clone(&self.rt.current.lock().unwrap());
+            self.deferred_streak = 0;
+            return;
+        }
+        match self.rt.current.try_lock() {
+            Ok(guard) => {
+                self.cached = Arc::clone(&guard);
+                self.deferred_streak = 0;
+            }
+            Err(_) => {
+                // an install is mid-publish: keep the previous epoch
+                // for this one batch instead of waiting
+                self.rt.deferrals.fetch_add(1, Ordering::Relaxed);
+                self.deferred_streak += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn marker_snapshot(c_adj: u64) -> CacheSnapshot {
+        CacheSnapshot::new(None, None, Some(CacheAllocation { c_adj, c_feat: 0 }))
+    }
+
+    #[test]
+    fn install_bumps_epoch_and_readers_follow() {
+        let rt = Arc::new(DualCacheRuntime::new(CacheSnapshot::empty()));
+        let mut h = SnapshotHandle::new(&rt);
+        assert_eq!(h.acquire().epoch(), 1);
+        assert_eq!(rt.swaps(), 0);
+        let e = rt.install(marker_snapshot(7));
+        assert_eq!(e, 2);
+        let snap = h.acquire();
+        assert_eq!(snap.epoch(), 2);
+        assert_eq!(snap.alloc.unwrap().c_adj, 7);
+        assert_eq!(rt.swaps(), 1);
+        assert_eq!(rt.epoch(), 2);
+    }
+
+    #[test]
+    fn stale_snapshot_survives_while_held() {
+        let rt = Arc::new(DualCacheRuntime::new(marker_snapshot(1)));
+        let mut h = SnapshotHandle::new(&rt);
+        let old = h.acquire_arc();
+        rt.install(marker_snapshot(2));
+        // the old epoch's content is still intact for in-flight work
+        assert_eq!(old.alloc.unwrap().c_adj, 1);
+        assert_eq!(h.acquire().alloc.unwrap().c_adj, 2);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_bytes() {
+        let s = CacheSnapshot::empty();
+        assert_eq!(s.bytes_used(), 0);
+        assert!(s.adj.is_none() && s.feat.is_none() && s.alloc.is_none());
+    }
+
+    #[test]
+    fn concurrent_installs_and_readers_stay_consistent() {
+        let rt = Arc::new(DualCacheRuntime::new(marker_snapshot(0)));
+        let n_installs = 500u64;
+        std::thread::scope(|scope| {
+            let rt_w = Arc::clone(&rt);
+            scope.spawn(move || {
+                for i in 1..=n_installs {
+                    rt_w.install(marker_snapshot(i));
+                }
+            });
+            for _ in 0..3 {
+                let rt_r = Arc::clone(&rt);
+                scope.spawn(move || {
+                    let mut h = SnapshotHandle::new(&rt_r);
+                    let mut last_epoch = 0u64;
+                    for _ in 0..2000 {
+                        let s = h.acquire();
+                        // epochs only move forward for any one reader
+                        assert!(s.epoch() >= last_epoch);
+                        last_epoch = s.epoch();
+                        // snapshot content matches its epoch: marker i
+                        // was installed as epoch i + 1 (initial marker
+                        // 0 is epoch 1), so content and tag never tear
+                        let m = s.alloc.unwrap().c_adj;
+                        assert_eq!(m + 1, s.epoch(),
+                                   "marker {m} vs epoch {}", s.epoch());
+                    }
+                });
+            }
+        });
+        assert_eq!(rt.swaps(), n_installs);
+        assert_eq!(rt.epoch(), n_installs + 1);
+    }
+}

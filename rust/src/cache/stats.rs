@@ -1,4 +1,6 @@
-//! Combined dual-cache statistics (the hit-ratio series of Fig. 9).
+//! Combined dual-cache statistics (the hit-ratio series of Fig. 9),
+//! including the online-refresh refill traffic of the epoch-swappable
+//! runtime.
 
 use crate::mem::{CostModel, TransferLedger};
 
@@ -9,8 +11,12 @@ pub struct CacheStats {
     pub sample: TransferLedger,
     /// Feature-loading-stage traffic (feature cache).
     pub feature: TransferLedger,
-    /// Preprocessing traffic (pre-sampling + cache fills).
+    /// Preprocessing traffic (pre-sampling + initial cache fills).
     pub preprocess: TransferLedger,
+    /// Online-refresh refill traffic (background re-plan uploads —
+    /// charged separately from `preprocess` because it happens while
+    /// serving and amortizes against the hit-ratio recovery it buys).
+    pub refresh: TransferLedger,
 }
 
 impl CacheStats {
@@ -48,6 +54,7 @@ impl CacheStats {
         self.sample.merge(&other.sample);
         self.feature.merge(&other.feature);
         self.preprocess.merge(&other.preprocess);
+        self.refresh.merge(&other.refresh);
     }
 }
 
@@ -79,5 +86,15 @@ mod tests {
         assert_eq!(a.sample.hits, 1);
         assert_eq!(a.sample.misses, 1);
         assert_eq!(a.preprocess.h2d_bytes, 100);
+    }
+
+    #[test]
+    fn refresh_traffic_merges_separately() {
+        let mut a = CacheStats::new();
+        let mut b = CacheStats::new();
+        b.refresh.upload(640);
+        a.merge(&b);
+        assert_eq!(a.refresh.h2d_bytes, 640);
+        assert_eq!(a.preprocess.h2d_bytes, 0);
     }
 }

@@ -3,8 +3,11 @@
 //! parsed from `key=value` CLI arguments (no clap in the offline
 //! registry — and a flat keyspace keeps bench scripts simple).
 
+use std::time::Duration;
+
 use anyhow::{bail, Context, Result};
 
+use crate::cache::refresh::RefreshConfig;
 use crate::mem::CostModel;
 use crate::sampler::Fanout;
 use crate::util::parse_bytes;
@@ -123,6 +126,10 @@ pub struct RunConfig {
     /// pre-sampling profiler). Results are bit-identical at any value.
     pub sample_threads: usize,
     pub compute: ComputeKind,
+    /// Online cache-refresh knobs for the serving path (`None` =
+    /// caches stay frozen at their preprocessing-time plan). Only
+    /// systems with a `CachePlanner` refresh (DCI/SCI/DUCATI).
+    pub refresh: Option<RefreshConfig>,
     /// Cap on inference batches (None = full test set).
     pub max_batches: Option<usize>,
     /// Simulated device capacity; `None` = RTX 4090 scaled by the
@@ -148,6 +155,7 @@ impl Default for RunConfig {
             pipeline_depth: 1,
             sample_threads: 1,
             compute: ComputeKind::Skip,
+            refresh: None,
             max_batches: None,
             device_capacity: None,
             cost: CostModel::default(),
@@ -203,6 +211,36 @@ impl RunConfig {
                     }
                 }
                 "compute" => self.compute = ComputeKind::parse(value)?,
+                "refresh" => match value {
+                    "on" | "true" | "1" => {
+                        self.refresh.get_or_insert_with(RefreshConfig::default);
+                    }
+                    "off" | "false" | "0" => self.refresh = None,
+                    other => bail!("refresh={other:?} (on|off)"),
+                },
+                "refresh-check-ms" => {
+                    let ms: u64 = value.parse().context("refresh-check-ms")?;
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .check_interval = Duration::from_millis(ms);
+                }
+                "refresh-min-batches" => {
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .min_batches = value.parse().context("refresh-min-batches")?;
+                }
+                "refresh-decay" => {
+                    let d: f64 = value.parse().context("refresh-decay")?;
+                    if !(0.0..=1.0).contains(&d) {
+                        bail!("refresh-decay must be in [0, 1]");
+                    }
+                    self.refresh.get_or_insert_with(RefreshConfig::default).decay = d;
+                }
+                "drift-threshold" => {
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .drift_threshold = value.parse().context("drift-threshold")?;
+                }
                 "max-batches" => self.max_batches = Some(value.parse()?),
                 "device" => self.device_capacity = Some(parse_bytes(value)?),
                 "seed" => self.seed = value.parse().context("seed")?,
@@ -228,6 +266,13 @@ impl RunConfig {
             s.push_str(&format!(
                 " pipeline={} threads={}",
                 self.pipeline_depth, self.sample_threads
+            ));
+        }
+        if let Some(r) = &self.refresh {
+            s.push_str(&format!(
+                " refresh(check={}ms drift>{})",
+                r.check_interval.as_millis(),
+                r.drift_threshold
             ));
         }
         s
@@ -286,6 +331,33 @@ mod tests {
     fn budget_auto() {
         let cfg = RunConfig::from_args(&args(&["budget=auto"])).unwrap();
         assert_eq!(cfg.budget, None);
+    }
+
+    #[test]
+    fn refresh_knobs() {
+        // default: frozen caches
+        assert!(RunConfig::default().refresh.is_none());
+        let cfg = RunConfig::from_args(&args(&["refresh=on"])).unwrap();
+        assert_eq!(cfg.refresh, Some(RefreshConfig::default()));
+        // any refresh- key auto-enables
+        let cfg = RunConfig::from_args(&args(&[
+            "refresh-check-ms=25",
+            "drift-threshold=0.3",
+            "refresh-decay=0.8",
+            "refresh-min-batches=4",
+        ]))
+        .unwrap();
+        let r = cfg.refresh.unwrap();
+        assert_eq!(r.check_interval, Duration::from_millis(25));
+        assert_eq!(r.drift_threshold, 0.3);
+        assert_eq!(r.decay, 0.8);
+        assert_eq!(r.min_batches, 4);
+        assert!(cfg.summary().contains("refresh(check=25ms"));
+        // off resets
+        let cfg = RunConfig::from_args(&args(&["refresh=on", "refresh=off"])).unwrap();
+        assert!(cfg.refresh.is_none());
+        assert!(RunConfig::from_args(&args(&["refresh=maybe"])).is_err());
+        assert!(RunConfig::from_args(&args(&["refresh-decay=1.5"])).is_err());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Serving metrics: request latency distribution, batch sizes, seed
-//! throughput — the numbers the end-to-end example reports.
+//! throughput, live cache hit ratios, and the online-refresh /
+//! snapshot-swap counters — the numbers the end-to-end example and the
+//! cache-runtime bench report.
 
 use std::time::Duration;
 
+use crate::cache::CacheStats;
 use crate::util::stats::LatencyHist;
 
 /// Accumulated serving-side metrics (one per worker; merged at report
@@ -17,6 +20,19 @@ pub struct ServingMetrics {
     pub sample_ns: f64,
     pub feature_ns: f64,
     pub compute_ns: f64,
+    /// Serving-time transfer stats (per-batch ledgers folded in:
+    /// live hit ratios, plus online-refresh refill traffic).
+    pub cache: CacheStats,
+    /// Re-plans the refresh loop installed.
+    pub refreshes: u64,
+    /// Drift checks the refresh loop evaluated.
+    pub drift_checks: u64,
+    /// Background wall time spent re-planning, ns (never on the
+    /// serving path).
+    pub refresh_ns: f64,
+    /// Snapshot acquires that had to block on a concurrent install
+    /// (the runtime's swap-stall counter; 0 in a healthy deployment).
+    pub swap_stalls: u64,
 }
 
 impl ServingMetrics {
@@ -42,6 +58,11 @@ impl ServingMetrics {
         self.sample_ns += other.sample_ns;
         self.feature_ns += other.feature_ns;
         self.compute_ns += other.compute_ns;
+        self.cache.merge(&other.cache);
+        self.refreshes += other.refreshes;
+        self.drift_checks += other.drift_checks;
+        self.refresh_ns += other.refresh_ns;
+        self.swap_stalls += other.swap_stalls;
     }
 
     /// Seeds served per second of elapsed wall time.
@@ -60,7 +81,8 @@ impl ServingMetrics {
             "requests={} seeds={} batches={} (avg batch {:.1} seeds)\n\
              latency p50={:.2}ms p90={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              throughput={:.0} seeds/s\n\
-             stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms",
+             stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms\n\
+             cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}",
             self.requests,
             self.seeds,
             self.batches,
@@ -73,6 +95,12 @@ impl ServingMetrics {
             self.sample_ns / 1e6,
             self.feature_ns / 1e6,
             self.compute_ns / 1e6,
+            self.cache.adj_hit_ratio(),
+            self.cache.feat_hit_ratio(),
+            self.refreshes,
+            self.refresh_ns / 1e6,
+            self.drift_checks,
+            self.swap_stalls,
         )
     }
 }
@@ -95,6 +123,7 @@ mod tests {
         let rep = m.report(Duration::from_secs(1));
         assert!(rep.contains("seeds=150"));
         assert!(rep.contains("throughput=150"));
+        assert!(rep.contains("swap-stalls=0"));
         assert!((m.throughput(Duration::from_secs(2)) - 75.0).abs() < 1e-9);
         assert_eq!(m.throughput(Duration::ZERO), 0.0);
     }
@@ -108,10 +137,16 @@ mod tests {
         b.record_batch(2, 20);
         b.record_latency(7);
         b.sample_ns = 3.0;
+        b.refreshes = 2;
+        b.swap_stalls = 1;
+        b.cache.feature.hit(64);
         a.merge(&b);
         assert_eq!(a.requests, 3);
         assert_eq!(a.seeds, 30);
         assert_eq!(a.latency.count(), 2);
         assert_eq!(a.sample_ns, 3.0);
+        assert_eq!(a.refreshes, 2);
+        assert_eq!(a.swap_stalls, 1);
+        assert_eq!(a.cache.feature.hits, 1);
     }
 }

@@ -1,6 +1,15 @@
 //! The serving loop: worker threads own an engine each; a leader-side
 //! router feeds their queues; responses flow back over per-request
 //! channels.
+//!
+//! When `RunConfig::refresh` is set (and the system has a
+//! [`planner_for`] strategy), each worker also runs the online refresh
+//! loop: the engine's serving path feeds an
+//! [`AccessTracker`](crate::cache::AccessTracker), and a background
+//! [`Refresher`] thread re-plans the worker's caches on workload drift,
+//! hot-swapping the snapshot the worker reads per batch. The swap never
+//! stalls serving (see `cache::runtime`); refresh counters surface in
+//! [`ServingMetrics`] at shutdown.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -9,6 +18,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::baselines::planner_for;
+use crate::cache::refresh::{AccessTracker, Refresher};
 use crate::config::RunConfig;
 use crate::engine::InferenceEngine;
 use crate::graph::Dataset;
@@ -51,7 +62,9 @@ pub struct Server {
 impl Server {
     /// Start workers. Each worker runs its system's preprocessing on
     /// its own engine before serving (caches are per-worker, as they
-    /// would be per-GPU).
+    /// would be per-GPU), and — with refresh configured — its own
+    /// refresh thread (drift is per-worker, too: workers see the
+    /// request slices the router gives them).
     pub fn start(ds: Arc<Dataset>, run_cfg: RunConfig, cfg: ServerConfig) -> Result<Server> {
         let mut handles = Vec::new();
         let mut joins = Vec::new();
@@ -106,7 +119,9 @@ impl Server {
         Ok(rx)
     }
 
-    /// Merged metrics snapshot + elapsed time.
+    /// Merged metrics snapshot + elapsed time. Live view: the
+    /// refresh/swap counters are folded in when workers exit, so read
+    /// the `shutdown` result for final totals.
     pub fn metrics(&self) -> (ServingMetrics, Duration) {
         let mut all = ServingMetrics::new();
         for m in &self.metrics {
@@ -115,29 +130,92 @@ impl Server {
         (all, self.started.elapsed())
     }
 
-    /// Stop accepting work and join the workers.
+    /// Stop accepting work, join the workers, and return the final
+    /// metrics (including each worker's refresh + swap counters).
     pub fn shutdown(self) -> Result<(ServingMetrics, Duration)> {
-        let snapshot = self.metrics();
-        drop(self.router); // closes queues; workers drain + exit
-        for j in self.workers {
+        let Server { router, admission: _, workers, metrics, started } = self;
+        drop(router); // closes queues; workers drain + exit
+        for j in workers {
             match j.join() {
                 Ok(r) => r?,
                 Err(_) => anyhow::bail!("worker panicked"),
             }
         }
-        Ok(snapshot)
+        let mut all = ServingMetrics::new();
+        for m in &metrics {
+            all.merge(&m.lock().unwrap());
+        }
+        Ok((all, started.elapsed()))
     }
 }
 
 fn worker_loop(
-    ds: &Dataset,
+    ds: &Arc<Dataset>,
     run_cfg: RunConfig,
     batcher_cfg: BatcherConfig,
     rx: mpsc::Receiver<Request>,
     queued: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServingMetrics>>,
 ) -> Result<()> {
-    let mut engine = InferenceEngine::prepare(ds, run_cfg)?;
+    let refresh_cfg = run_cfg.refresh.clone();
+    let system = run_cfg.system;
+    let mut engine = InferenceEngine::prepare(ds.as_ref(), run_cfg)?;
+
+    // online refresh: tracker on the serving path, re-planner on a
+    // background thread, per worker (cacheless systems skip it)
+    let mut refresher: Option<Refresher> = None;
+    if let Some(rcfg) = refresh_cfg {
+        if let Some(planner) = planner_for(system) {
+            let tracker =
+                Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+            engine.set_tracker(Arc::clone(&tracker));
+            // drift baseline: the pre-sample profile the startup plan
+            // was built from
+            let baseline = engine
+                .prepared
+                .presample
+                .as_ref()
+                .map(|s| s.node_visits.clone())
+                .unwrap_or_default();
+            refresher = Some(Refresher::spawn(
+                Arc::clone(ds),
+                engine.runtime(),
+                tracker,
+                planner,
+                engine.prepared.cache_budget,
+                baseline,
+                rcfg,
+            ));
+        }
+    }
+
+    let result = serve_requests(&mut engine, batcher_cfg, rx, queued, &metrics);
+
+    // fold the refresh loop's lifetime stats into this worker's
+    // metrics before the server joins us (stop first, merge after:
+    // stop blocks up to one poll interval)
+    let refresh_stats = refresher.map(|r| r.stop());
+    let stalls = engine.runtime().swap_stalls();
+    let mut m = metrics.lock().unwrap();
+    if let Some(rs) = refresh_stats {
+        m.refreshes += rs.replans;
+        m.drift_checks += rs.checks;
+        m.refresh_ns += rs.replan_wall_ns;
+        m.cache.refresh.upload(rs.fill_h2d_bytes);
+    }
+    m.swap_stalls += stalls;
+    drop(m);
+
+    result
+}
+
+fn serve_requests(
+    engine: &mut InferenceEngine<'_>,
+    batcher_cfg: BatcherConfig,
+    rx: mpsc::Receiver<Request>,
+    queued: Arc<AtomicUsize>,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+) -> Result<()> {
     let mut batcher = Batcher::new(batcher_cfg);
     let mut batch_id = 0u64;
 
@@ -158,13 +236,13 @@ fn worker_loop(
                 // drain and exit
                 if !batcher.is_empty() {
                     let b = batcher.flush();
-                    serve_batch(&mut engine, b, &mut batch_id, &metrics)?;
+                    serve_batch(engine, b, &mut batch_id, metrics)?;
                 }
                 return Ok(());
             }
         };
         if let Some(b) = flushed {
-            serve_batch(&mut engine, b, &mut batch_id, &metrics)?;
+            serve_batch(engine, b, &mut batch_id, metrics)?;
         }
     }
 }
@@ -183,6 +261,7 @@ fn serve_batch(
     m.sample_ns += out.sample.total_ns();
     m.feature_ns += out.feature.total_ns();
     m.compute_ns += out.compute.total_ns();
+    m.cache.merge(&out.stats);
     drop(m);
 
     for (req, start, len) in batch.members {
@@ -200,6 +279,7 @@ fn serve_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::RefreshConfig;
     use crate::config::{ComputeKind, SystemKind};
     use crate::graph::datasets;
     use crate::sampler::Fanout;
@@ -251,6 +331,11 @@ mod tests {
         assert_eq!(m.seeds, 40);
         assert!(m.batches >= 1);
         assert!(m.compute_ns > 0.0);
+        // serving-time ledgers flowed into the metrics
+        assert!(m.cache.feature.hits + m.cache.feature.misses > 0);
+        // refresh was not configured
+        assert_eq!(m.refreshes, 0);
+        assert_eq!(m.swap_stalls, 0);
     }
 
     #[test]
@@ -279,5 +364,52 @@ mod tests {
         }
         let (m, _) = server.shutdown().unwrap();
         assert_eq!(m.requests, 8);
+    }
+
+    #[test]
+    fn refresh_loop_replans_while_serving() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let mut cfg = serving_cfg();
+        // force constant re-planning: negative threshold means every
+        // drift check (min 1 batch) triggers, however small the drift
+        cfg.refresh = Some(RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: -1.0,
+        });
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        // serve in paced rounds so the refresher gets poll windows
+        // with traffic in between
+        for round in 0..6 {
+            let mut rxs = Vec::new();
+            for i in 0..4 {
+                let at = (round * 4 + i) % (ds.test_nodes.len() - 4);
+                rxs.push(server.submit(ds.test_nodes[at..at + 4].to_vec()).unwrap());
+            }
+            for rx in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                assert!(resp.logits.is_some());
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert!(m.refreshes >= 1, "forced drift must re-plan: {m:?}");
+        assert!(m.drift_checks >= m.refreshes);
+        assert_eq!(m.swap_stalls, 0, "serving must never block on a swap");
+        assert!(m.cache.refresh.h2d_bytes > 0, "refills upload features");
     }
 }

@@ -16,11 +16,14 @@ pub mod pipeline;
 pub mod stages;
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::baselines::{self, PreparedSystem};
+use crate::cache::refresh::AccessTracker;
+use crate::cache::runtime::{DualCacheRuntime, SnapshotHandle};
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{datasets, Dataset, NodeId};
@@ -167,6 +170,12 @@ pub struct InferenceEngine<'d> {
     served: u64,
     /// Reused gather buffer for the serving path.
     x_buf: Vec<f32>,
+    /// This thread's cursor over the runtime's cache epochs (serial
+    /// loop + serving path; pipeline workers make their own).
+    snap: SnapshotHandle,
+    /// Serving-time access counts for the online refresh loop
+    /// (`None` = untracked: offline runs, refresh disabled).
+    tracker: Option<Arc<AccessTracker>>,
 }
 
 impl<'d> InferenceEngine<'d> {
@@ -191,7 +200,11 @@ impl<'d> InferenceEngine<'d> {
             &cfg.artifacts_dir,
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
-        Ok(InferenceEngine { ds, cfg, prepared, device, compute, pool, served: 0, x_buf: Vec::new() })
+        let snap = SnapshotHandle::new(&prepared.runtime);
+        Ok(InferenceEngine {
+            ds, cfg, prepared, device, compute, pool,
+            served: 0, x_buf: Vec::new(), snap, tracker: None,
+        })
     }
 
     /// Build an engine around an externally prepared system (ablation
@@ -217,7 +230,24 @@ impl<'d> InferenceEngine<'d> {
             &cfg.artifacts_dir,
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
-        Ok(InferenceEngine { ds, cfg, prepared, device, compute, pool, served: 0, x_buf: Vec::new() })
+        let snap = SnapshotHandle::new(&prepared.runtime);
+        Ok(InferenceEngine {
+            ds, cfg, prepared, device, compute, pool,
+            served: 0, x_buf: Vec::new(), snap, tracker: None,
+        })
+    }
+
+    /// The engine's swappable cache runtime — share it with a
+    /// [`crate::cache::Refresher`] to re-plan online.
+    pub fn runtime(&self) -> Arc<DualCacheRuntime> {
+        Arc::clone(&self.prepared.runtime)
+    }
+
+    /// Attach a serving-time access tracker: `infer_once` then records
+    /// the same per-node / per-element counts pre-sampling collects,
+    /// feeding the online refresh loop.
+    pub fn set_tracker(&mut self, tracker: Arc<AccessTracker>) {
+        self.tracker = Some(tracker);
     }
 
     /// Run inference over the full test set (or `max_batches`).
@@ -254,7 +284,7 @@ impl<'d> InferenceEngine<'d> {
             n_seeds: 0,
             loaded_nodes: 0,
             cache_bytes: self.prepared.cache_bytes(),
-            alloc: self.prepared.alloc,
+            alloc: self.prepared.alloc(),
             oom: None,
             logits_checksum: 0.0,
             run_wall_ns: 0.0,
@@ -304,16 +334,21 @@ impl<'d> InferenceEngine<'d> {
         let dim = self.ds.features.dim();
 
         for (bi, seeds) in batches.iter().take(n).enumerate() {
+            // one snapshot per batch: both stages of a batch see the
+            // same cache epoch even if a refresh lands mid-batch
+            let snap = self.snap.acquire();
+
             // ---- stage 1: sampling -------------------------------------
             let sb = stages::sample_stage(
-                self.ds, &self.prepared, &mut sampler, seeds, bi, self.cfg.seed,
+                self.ds, snap, &mut sampler, seeds, bi, self.cfg.seed, None,
             );
             report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&self.cfg.cost));
             report.stats.sample.merge(&sb.ledger);
 
             // ---- stage 2: feature loading ------------------------------
             let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
-                self.ds, &self.prepared, &self.cfg.cost, &sb.mb, &mut prev_inputs, &mut x,
+                self.ds, snap, self.prepared.inter_batch_reuse, &self.cfg.cost,
+                &sb.mb, &mut prev_inputs, &mut x, None,
             );
             report.loaded_nodes += n_inputs as u64;
             report.feature.add(f_wall, f_ledger.modeled_ns(&self.cfg.cost));
@@ -358,6 +393,11 @@ pub struct BatchOutput {
     pub feature: StageTimes,
     pub compute: StageTimes,
     pub n_inputs: usize,
+    /// The batch's transfer ledgers (live hit-ratio reporting and the
+    /// refresh loop's drift telemetry).
+    pub stats: CacheStats,
+    /// Cache epoch the batch was served under (observability).
+    pub cache_epoch: u64,
 }
 
 impl<'d> InferenceEngine<'d> {
@@ -375,11 +415,17 @@ impl<'d> InferenceEngine<'d> {
         let request = self.served as usize;
         self.served += 1;
 
+        // one snapshot for the whole request; a concurrent refresh
+        // install is picked up by the *next* request, never mid-batch
+        let tracker = self.tracker.clone();
+        let snap = self.snap.acquire();
+        let cache_epoch = snap.epoch();
+
         // sample
         let mut sampler = self.pool.checkout();
         let sb = stages::sample_stage(
-            self.ds, &self.prepared, &mut sampler, seeds, request,
-            self.cfg.seed ^ SERVE_STREAM_XOR,
+            self.ds, snap, &mut sampler, seeds, request,
+            self.cfg.seed ^ SERVE_STREAM_XOR, tracker.as_deref(),
         );
         self.pool.checkin(sampler);
         let sample = StageTimes {
@@ -391,12 +437,22 @@ impl<'d> InferenceEngine<'d> {
         let mut no_prev: HashSet<NodeId> = HashSet::new();
         let mut x = std::mem::take(&mut self.x_buf);
         let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
-            self.ds, &self.prepared, &self.cfg.cost, &sb.mb, &mut no_prev, &mut x,
+            self.ds, snap, self.prepared.inter_batch_reuse, &self.cfg.cost,
+            &sb.mb, &mut no_prev, &mut x, tracker.as_deref(),
         );
         let feature = StageTimes {
             wall_ns: f_wall,
             modeled_ns: f_ledger.modeled_ns(&self.cfg.cost),
         };
+
+        // the tracker's Eq.-(1) ratio input mirrors pre-sampling:
+        // modeled stage times, not simulator wall
+        if let Some(t) = &tracker {
+            t.record_batch(sample.modeled_ns, feature.modeled_ns);
+        }
+        let mut stats = CacheStats::new();
+        stats.sample.merge(&sb.ledger);
+        stats.feature.merge(&f_ledger);
 
         // compute (restore the gather buffer before propagating errors)
         let cb = stages::compute_stage(
@@ -407,7 +463,15 @@ impl<'d> InferenceEngine<'d> {
         let cb = cb?;
         let compute = StageTimes { wall_ns: cb.wall_ns, modeled_ns: cb.modeled_ns };
 
-        Ok(BatchOutput { logits: cb.logits, sample, feature, compute, n_inputs })
+        Ok(BatchOutput {
+            logits: cb.logits,
+            sample,
+            feature,
+            compute,
+            n_inputs,
+            stats,
+            cache_epoch,
+        })
     }
 }
 

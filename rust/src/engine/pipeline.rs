@@ -36,6 +36,7 @@ use std::sync::{mpsc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::cache::runtime::SnapshotHandle;
 use crate::graph::NodeId;
 use crate::mem::TransferLedger;
 
@@ -66,6 +67,7 @@ pub(super) fn run_pipelined(
     // the mutable compute backend for this thread
     let ds = engine.ds;
     let prepared = &engine.prepared;
+    let runtime = &prepared.runtime;
     let cfg = &engine.cfg;
     let pool = &engine.pool;
     let compute = &mut engine.compute;
@@ -101,6 +103,9 @@ pub(super) fn run_pipelined(
             let tickets = &tickets;
             scope.spawn(move || {
                 let mut sampler = pool.checkout();
+                // each worker cursors the cache epochs independently;
+                // acquire is per batch, so one batch never mixes epochs
+                let mut snap = SnapshotHandle::new(runtime);
                 loop {
                     // Err = ticket sender dropped = gather unwound
                     if tickets.lock().unwrap().recv().is_err() {
@@ -111,7 +116,8 @@ pub(super) fn run_pipelined(
                         break;
                     }
                     let sb = stages::sample_stage(
-                        ds, prepared, &mut sampler, batches[bi], bi, cfg.seed,
+                        ds, snap.acquire(), &mut sampler, batches[bi], bi, cfg.seed,
+                        None,
                     );
                     if s_tx.send(sb).is_err() {
                         break; // downstream unwound (compute error)
@@ -131,13 +137,15 @@ pub(super) fn run_pipelined(
             let mut reorder: HashMap<usize, SampledBatch> = HashMap::new();
             let mut want = 0usize;
             let mut prev_inputs: HashSet<NodeId> = HashSet::new();
+            let mut snap = SnapshotHandle::new(runtime);
             for sb in s_rx {
                 reorder.insert(sb.index, sb);
                 while let Some(sb) = reorder.remove(&want) {
                     // reuse a spent buffer when compute has returned one
                     let mut x = recycle_rx.try_recv().unwrap_or_default();
                     let (ledger, wall_ns, n_inputs) = stages::gather_stage(
-                        ds, prepared, &cfg.cost, &sb.mb, &mut prev_inputs, &mut x,
+                        ds, snap.acquire(), prepared.inter_batch_reuse, &cfg.cost,
+                        &sb.mb, &mut prev_inputs, &mut x, None,
                     );
                     want += 1;
                     // recycle this batch's claim-ahead ticket (receiver

@@ -5,19 +5,32 @@
 //! per stage is what guarantees the pipelined engine is *semantically*
 //! the serial engine, just scheduled differently.
 //!
+//! Cache state arrives as a [`CacheSnapshot`] — the immutable epoch a
+//! caller acquired from its `SnapshotHandle` for this batch — never as
+//! bare `&AdjCache`/`&FeatCache` references, so a background refresh
+//! can hot-swap caches between batches without the stages noticing.
+//! An optional [`AccessTracker`] (the serving path's online-refresh
+//! input) receives the same per-node / per-element counts pre-sampling
+//! collects; `None` keeps the offline paths zero-overhead.
+//!
 //! Determinism contract: a batch's sampling RNG is [`batch_rng`]` =
 //! Rng::for_stream(cfg.seed, batch_index)` — a pure function of the
 //! run seed and the batch's position, never of which thread runs it or
-//! when. Stage outputs therefore depend only on `(prepared, dataset,
-//! seeds, batch_index, seed)`, and any scheduler that folds per-batch
-//! ledgers in batch-index order reproduces the serial run bit for bit.
+//! when. Sampling position choices are independent of cache contents
+//! (a cache changes *where* a neighbor is read from, never *which*
+//! neighbor), so stage outputs depend only on `(snapshot-transparent
+//! dataset state, seeds, batch_index, seed)` — any scheduler that folds
+//! per-batch ledgers in batch-index order reproduces the serial run bit
+//! for bit, and results are identical before/during/after a snapshot
+//! swap.
 
 use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::baselines::PreparedSystem;
+use crate::cache::refresh::AccessTracker;
+use crate::cache::runtime::CacheSnapshot;
 use crate::config::RunConfig;
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CostModel, TransferLedger};
@@ -41,39 +54,74 @@ pub struct SampledBatch {
     pub wall_ns: f64,
 }
 
-/// Stage 1: fan-out sampling over the system's adjacency source.
+/// Stage 1: fan-out sampling over the snapshot's adjacency source.
 pub fn sample_stage(
     ds: &Dataset,
-    prepared: &PreparedSystem,
+    snap: &CacheSnapshot,
     sampler: &mut NeighborSampler,
     seeds: &[NodeId],
     index: usize,
     seed: u64,
+    tracker: Option<&AccessTracker>,
 ) -> SampledBatch {
     let mut rng = batch_rng(seed, index as u64);
     let mut ledger = TransferLedger::new();
+    // tracked runs buffer the touched CSC offsets locally and replay
+    // them into the shared tracker after the timed section, so the
+    // cross-thread atomic adds never inflate the stage's wall time
+    // (same discipline as the gather stage)
+    let mut touched: Vec<usize> = Vec::new();
     let t0 = Instant::now();
-    let mb = match &prepared.adj_cache {
-        Some(c) => sampler.sample_batch(&c.source(&ds.csc), seeds, &mut rng, &mut ledger),
-        None => sampler.sample_batch(&UvaAdj { csc: &ds.csc }, seeds, &mut rng, &mut ledger),
+    let mb = match tracker {
+        None => match &snap.adj {
+            Some(c) => {
+                sampler.sample_batch(&c.source(&ds.csc), seeds, &mut rng, &mut ledger)
+            }
+            None => {
+                sampler.sample_batch(&UvaAdj { csc: &ds.csc }, seeds, &mut rng, &mut ledger)
+            }
+        },
+        Some(_) => {
+            let csc = &ds.csc;
+            let mut on_access = |v: NodeId, pos: usize| {
+                touched.push(csc.neighbor_offset(v) as usize + pos);
+            };
+            match &snap.adj {
+                Some(c) => sampler.sample_batch_counting(
+                    &c.source(csc), seeds, &mut rng, &mut ledger, &mut on_access,
+                ),
+                None => sampler.sample_batch_counting(
+                    &UvaAdj { csc }, seeds, &mut rng, &mut ledger, &mut on_access,
+                ),
+            }
+        }
     };
-    SampledBatch { index, mb, ledger, wall_ns: t0.elapsed().as_nanos() as f64 }
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    if let Some(t) = tracker {
+        for &at in &touched {
+            t.record_elem(at);
+        }
+    }
+    SampledBatch { index, mb, ledger, wall_ns }
 }
 
 /// Stage 2: gather input-node features into `x` (reused across calls).
 ///
 /// `prev_inputs` carries RAIN's previous-batch residency between
-/// consecutive calls; it is read and then replaced only when the
-/// prepared system does inter-batch reuse, so callers that never serve
-/// RAIN can pass any (empty) set. Returns the stage's transfer ledger,
-/// wall ns, and the input-node count.
+/// consecutive calls; it is read and then replaced only when
+/// `inter_batch_reuse` is set, so callers that never serve RAIN can
+/// pass any (empty) set. Returns the stage's transfer ledger, wall ns,
+/// and the input-node count.
+#[allow(clippy::too_many_arguments)]
 pub fn gather_stage(
     ds: &Dataset,
-    prepared: &PreparedSystem,
+    snap: &CacheSnapshot,
+    inter_batch_reuse: bool,
     cost: &CostModel,
     mb: &MiniBatch,
     prev_inputs: &mut HashSet<NodeId>,
     x: &mut Vec<f32>,
+    tracker: Option<&AccessTracker>,
 ) -> (TransferLedger, f64, usize) {
     let dim = ds.features.dim();
     let row_bytes = ds.features.row_bytes();
@@ -85,7 +133,7 @@ pub fn gather_stage(
     let mut ledger = TransferLedger::new();
     ledger.launch();
     let t0 = Instant::now();
-    if prepared.inter_batch_reuse {
+    if inter_batch_reuse {
         // RAIN: rows resident from the previous batch are free
         for (i, &v) in inputs.iter().enumerate() {
             let out = &mut x[i * dim..(i + 1) * dim];
@@ -96,7 +144,7 @@ pub fn gather_stage(
                 ledger.miss(row_bytes, txns);
             }
         }
-    } else if let Some(cache) = &prepared.feat_cache {
+    } else if let Some(cache) = &snap.feat {
         for (i, &v) in inputs.iter().enumerate() {
             let out = &mut x[i * dim..(i + 1) * dim];
             if let Some(row) = cache.lookup(v) {
@@ -115,7 +163,15 @@ pub fn gather_stage(
     }
     let wall_ns = t0.elapsed().as_nanos() as f64;
 
-    if prepared.inter_batch_reuse {
+    // online-refresh input (off the timed section: the tracker is
+    // bookkeeping, not simulated transfer work)
+    if let Some(t) = tracker {
+        for &v in inputs {
+            t.record_node(v);
+        }
+    }
+
+    if inter_batch_reuse {
         prev_inputs.clear();
         prev_inputs.extend(inputs.iter().copied());
     }

@@ -68,12 +68,18 @@ fn print_usage() {
          common keys: dataset= model= fanout= bs= system= budget= presample=\n\
          \x20            compute= max-batches= device= seed= artifacts=\n\
          \x20            pipeline= sample-threads=   (pipeline=1 is serial)\n\
-         serve keys:  workers= requests= req-size= batch-wait-ms="
+         serve keys:  workers= requests= req-size= batch-wait-ms=\n\
+         \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
+         \x20            refresh-decay= drift-threshold=   (online re-planning)"
     );
 }
 
 fn cmd_infer(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    if cfg.refresh.is_some() {
+        println!("note: refresh= applies to `dci serve` only; a batch run's \
+                  workload cannot drift, so the knobs are ignored here");
+    }
     println!("running: {}", cfg.summary());
     let report = run_config(&cfg)?;
     println!("\n== report ({}) ==", report.system.as_str());
@@ -189,6 +195,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let (metrics, elapsed) = server.shutdown()?;
     println!("\n== serving metrics ==\n{}", metrics.report(elapsed));
+    if cfg.refresh.is_some() && metrics.refreshes == 0 {
+        println!("(refresh enabled; no drift crossed the threshold)");
+    }
     Ok(())
 }
 

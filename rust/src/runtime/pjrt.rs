@@ -3,13 +3,17 @@
 //! every batch — the request path is: pick artifact → pad → execute.
 //!
 //! The `xla` crate is not in the offline registry, so the real client
-//! is gated behind the `xla` cargo feature. Default builds get the
-//! signature-compatible stub below, which fails at `load` time with an
-//! actionable message — tests skip when `artifacts/` is absent, and
-//! the engine's other backends (`compute=skip|reference`) cover every
-//! non-PJRT configuration.
+//! is gated behind **two** cargo features: `xla` selects the PJRT gate
+//! plumbing (CI builds it — still on the stub, so the gate itself
+//! cannot rot), and `xla-vendored` additionally switches in the real
+//! client once the crate has been vendored as a path dependency.
+//! Default and `--features xla` builds get the signature-compatible
+//! stub below, which fails at `load` time with an actionable message —
+//! tests skip when `artifacts/` is absent, and the engine's other
+//! backends (`compute=skip|reference`) cover every non-PJRT
+//! configuration.
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", feature = "xla-vendored"))]
 mod real {
     use std::collections::HashMap;
 
@@ -181,10 +185,10 @@ mod real {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", feature = "xla-vendored"))]
 pub use real::PjrtRuntime;
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
 mod stub {
     use anyhow::{bail, Result};
 
@@ -192,10 +196,11 @@ mod stub {
     use crate::runtime::artifacts::{ArtifactMeta, Manifest};
     use crate::sampler::MiniBatch;
 
-    const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `xla` cargo \
-                               feature (use compute=reference; enabling the feature also \
-                               requires vendoring the external `xla` crate as a path \
-                               dependency — it is not in the offline registry)";
+    const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `xla` + \
+                               `xla-vendored` cargo features (use compute=reference; \
+                               the real client requires vendoring the external `xla` \
+                               crate as a path dependency — it is not in the offline \
+                               registry — then building with --features xla,xla-vendored)";
 
     /// Signature-compatible stand-in for the PJRT runtime; every entry
     /// point fails with [`UNAVAILABLE`], starting at `load`, so no
@@ -251,5 +256,5 @@ mod stub {
     }
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
 pub use stub::PjrtRuntime;

@@ -248,6 +248,53 @@ fn prop_router_conserves_requests() {
 }
 
 #[test]
+fn prop_overall_hit_ratio_monotone_in_capacity() {
+    use dci::config::{ComputeKind, RunConfig, SystemKind};
+    use dci::engine::run_config;
+
+    // For a fixed workload (fixed seed: same sampled positions, same
+    // input nodes — both independent of cache contents), every cache
+    // fill selects a prefix of a fixed priority order, so hits — and
+    // with a constant access total, the overall hit ratio — are
+    // non-decreasing in the budget.
+    check("overall hit ratio non-decreasing in capacity", 6, |rng| {
+        let seed = rng.next_u64();
+        let base = 20_000 + rng.next_u64() % 50_000;
+        let mut prev_ratio = -1.0f64;
+        let mut prev_total = None;
+        for mult in [1u64, 2, 4, 8] {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = SystemKind::Dci;
+            cfg.batch_size = 64;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.budget = Some(base * mult);
+            cfg.max_batches = Some(4);
+            cfg.compute = ComputeKind::Skip;
+            cfg.seed = seed;
+            let r = run_config(&cfg).map_err(|e| e.to_string())?;
+            let s = &r.stats;
+            let total = s.sample.hits + s.sample.misses + s.feature.hits + s.feature.misses;
+            if let Some(pt) = prev_total {
+                if total != pt {
+                    return Err(format!("access total changed with budget: {pt} -> {total}"));
+                }
+            }
+            prev_total = Some(total);
+            let ratio = s.overall_hit_ratio();
+            if ratio < prev_ratio - 1e-12 {
+                return Err(format!(
+                    "hit ratio dropped {prev_ratio} -> {ratio} at budget {}",
+                    base * mult
+                ));
+            }
+            prev_ratio = ratio;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_engine_hit_miss_accounting() {
     use dci::config::{ComputeKind, RunConfig, SystemKind};
     use dci::engine::run_config;

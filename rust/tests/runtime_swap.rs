@@ -1,0 +1,117 @@
+//! Swap safety of the epoch-swappable dual-cache runtime: serving
+//! results must be identical before/during/after a hot swap (caches
+//! are *transparent* accelerators — they change where bytes are read
+//! from, never which bytes), and the refresh machinery must never
+//! perturb request outputs.
+
+use dci::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
+use dci::cache::runtime::CacheSnapshot;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::{BatchOutput, InferenceEngine};
+use dci::graph::datasets;
+use dci::sampler::Fanout;
+
+fn serving_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = 32;
+    cfg.fanout = Fanout::parse("3,2").unwrap();
+    cfg.budget = Some(300_000);
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    cfg
+}
+
+#[test]
+fn serving_identical_before_during_after_hot_swap() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let reqs: Vec<Vec<u32>> = (0..8)
+        .map(|i| ds.test_nodes[i * 8..(i + 1) * 8].to_vec())
+        .collect();
+
+    // control: no swaps ever
+    let mut control_engine = InferenceEngine::prepare(&ds, serving_cfg()).unwrap();
+    let control: Vec<BatchOutput> = reqs
+        .iter()
+        .map(|r| control_engine.infer_once(r).unwrap())
+        .collect();
+
+    // swapped: an unchanged-plan hot swap mid-stream, then an
+    // adversarial cache-ripping swap
+    let mut engine = InferenceEngine::prepare(&ds, serving_cfg()).unwrap();
+    let runtime = engine.runtime();
+    let mut swapped: Vec<BatchOutput> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        if i == 3 {
+            // re-plan from the same profile + budget: identical cache
+            // contents under a fresh epoch
+            let stats = engine.prepared.presample.as_ref().unwrap();
+            let plan =
+                DciPlanner.plan(&ds, &WorkloadProfile::from_presample(stats), 300_000);
+            runtime.install(plan.snapshot);
+        }
+        if i == 5 {
+            // during: rip both caches out entirely mid-serve
+            runtime.install(CacheSnapshot::empty());
+        }
+        swapped.push(engine.infer_once(r).unwrap());
+    }
+
+    // logits are bit-identical across every swap
+    for (i, (c, s)) in control.iter().zip(&swapped).enumerate() {
+        assert_eq!(
+            c.logits.as_ref().unwrap(),
+            s.logits.as_ref().unwrap(),
+            "request {i}: caches are transparent, logits must not change"
+        );
+        assert_eq!(c.n_inputs, s.n_inputs, "request {i}: same sampled batch");
+    }
+
+    // the swaps actually happened and requests saw the new epochs
+    assert_eq!(runtime.swaps(), 2);
+    assert!(swapped[4].cache_epoch > swapped[0].cache_epoch);
+    assert!(swapped[7].cache_epoch > swapped[4].cache_epoch);
+
+    // unchanged-plan swap: hit/miss accounting is identical too
+    for i in 3..5 {
+        assert_eq!(
+            control[i].stats.feature.hits, swapped[i].stats.feature.hits,
+            "request {i}: unchanged plan must serve identical hit counts"
+        );
+        assert_eq!(control[i].stats.sample.hits, swapped[i].stats.sample.hits);
+    }
+    // cacheless epoch: everything misses, results still identical
+    for i in 5..8 {
+        assert_eq!(swapped[i].stats.feature.hits, 0, "request {i} on empty caches");
+        assert_eq!(swapped[i].stats.sample.hits, 0);
+    }
+    // no reader ever blocked on the installs
+    assert_eq!(runtime.swap_stalls(), 0);
+}
+
+#[test]
+fn batch_run_unchanged_by_preinstalled_equal_plan() {
+    // the offline `run()` path reads through the same snapshot
+    // machinery: re-installing an identical plan before a run changes
+    // nothing about its counters
+    let ds = datasets::spec("tiny").unwrap().build();
+    let mut cfg = serving_cfg();
+    cfg.compute = ComputeKind::Skip;
+    cfg.max_batches = Some(6);
+
+    let mut a = InferenceEngine::prepare(&ds, cfg.clone()).unwrap();
+    let ra = a.run().unwrap();
+
+    let mut b = InferenceEngine::prepare(&ds, cfg).unwrap();
+    let stats = b.prepared.presample.as_ref().unwrap();
+    let plan = DciPlanner.plan(&ds, &WorkloadProfile::from_presample(stats), 300_000);
+    b.runtime().install(plan.snapshot);
+    let rb = b.run().unwrap();
+
+    assert_eq!(ra.loaded_nodes, rb.loaded_nodes);
+    assert_eq!(ra.stats.sample.hits, rb.stats.sample.hits);
+    assert_eq!(ra.stats.sample.misses, rb.stats.sample.misses);
+    assert_eq!(ra.stats.feature.hits, rb.stats.feature.hits);
+    assert_eq!(ra.stats.feature.misses, rb.stats.feature.misses);
+}
