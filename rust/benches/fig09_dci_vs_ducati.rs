@@ -26,10 +26,16 @@ fn main() -> anyhow::Result<()> {
         &[("products-sim", &["8,4,2"], &["50MB", "150MB"])]
     } else {
         &[
-            ("products-sim", &["8,4,2", "15,10,5"],
-             &["0", "50MB", "100MB", "150MB", "200MB", "300MB"]),
-            ("papers100m-sim", &["15,10,5"],
-             &["0", "60MB", "120MB", "180MB", "230MB"]),
+            (
+                "products-sim",
+                &["8,4,2", "15,10,5"],
+                &["0", "50MB", "100MB", "150MB", "200MB", "300MB"],
+            ),
+            (
+                "papers100m-sim",
+                &["15,10,5"],
+                &["0", "60MB", "120MB", "180MB", "230MB"],
+            ),
         ]
     };
     let max_batches = opts.max_batches(12, 4);

@@ -24,25 +24,48 @@ use dci::util::json::s;
 fn assert_equivalent(system: SystemKind, serial: &InferenceReport, piped: &InferenceReport) {
     assert_eq!(serial.n_batches, piped.n_batches, "{system:?}: batch count");
     assert_eq!(serial.loaded_nodes, piped.loaded_nodes, "{system:?}: loaded nodes");
-    assert_eq!(serial.stats.sample.hits, piped.stats.sample.hits,
-               "{system:?}: sample hits");
-    assert_eq!(serial.stats.sample.misses, piped.stats.sample.misses,
-               "{system:?}: sample misses");
-    assert_eq!(serial.stats.feature.hits, piped.stats.feature.hits,
-               "{system:?}: feature hits");
-    assert_eq!(serial.stats.feature.misses, piped.stats.feature.misses,
-               "{system:?}: feature misses");
-    assert_eq!(serial.logits_checksum.to_bits(), piped.logits_checksum.to_bits(),
-               "{system:?}: logits checksum {} vs {}",
-               serial.logits_checksum, piped.logits_checksum);
+    assert_eq!(
+        serial.stats.sample.hits,
+        piped.stats.sample.hits,
+        "{system:?}: sample hits"
+    );
+    assert_eq!(
+        serial.stats.sample.misses,
+        piped.stats.sample.misses,
+        "{system:?}: sample misses"
+    );
+    assert_eq!(
+        serial.stats.feature.hits,
+        piped.stats.feature.hits,
+        "{system:?}: feature hits"
+    );
+    assert_eq!(
+        serial.stats.feature.misses,
+        piped.stats.feature.misses,
+        "{system:?}: feature misses"
+    );
+    assert_eq!(
+        serial.logits_checksum.to_bits(),
+        piped.logits_checksum.to_bits(),
+        "{system:?}: logits checksum {} vs {}",
+        serial.logits_checksum,
+        piped.logits_checksum
+    );
 }
 
 fn main() -> anyhow::Result<()> {
     let opts = BenchOpts::from_env();
     let mut report = BenchReport::new(
         "Pipeline overlap: serial vs pipelined engine (wall time, reference compute)",
-        &["system", "serial", "pipelined", "speedup",
-          "occ(sample)", "occ(load)", "occ(compute)"],
+        &[
+            "system",
+            "serial",
+            "pipelined",
+            "speedup",
+            "occ(sample)",
+            "occ(load)",
+            "occ(compute)",
+        ],
     );
 
     // products-sim's graph with feature/hidden dims narrowed so the
@@ -70,8 +93,13 @@ fn main() -> anyhow::Result<()> {
     let systems: &[SystemKind] = if opts.quick {
         &[SystemKind::Dci, SystemKind::Dgl]
     } else {
-        &[SystemKind::Dci, SystemKind::Sci, SystemKind::Dgl, SystemKind::Rain,
-          SystemKind::Ducati]
+        &[
+            SystemKind::Dci,
+            SystemKind::Sci,
+            SystemKind::Dgl,
+            SystemKind::Rain,
+            SystemKind::Ducati,
+        ]
     };
 
     let mut speedups: Vec<f64> = Vec::new();
@@ -126,7 +154,9 @@ fn main() -> anyhow::Result<()> {
         "pipelined speedup at depth=4, {threads} sampling threads: \
          {min:.2}x – {max:.2}x (results bit-identical to serial)"
     );
-    println!("SALIENT/BGL-style overlap: preparation hides behind compute; \
-              the win grows with the preparation share (Fig. 1: 56–92%)");
+    println!(
+        "SALIENT/BGL-style overlap: preparation hides behind compute; \
+         the win grows with the preparation share (Fig. 1: 56–92%)"
+    );
     Ok(())
 }

@@ -1,25 +1,29 @@
-//! Drifting-workload bench for the epoch-swappable dual-cache runtime.
+//! Sharded-runtime bench: per-shard refresh under the PR 2 drift
+//! stream.
 //!
-//! Scenario: the serving deployment is planned (pre-sampled + Eq. (1)
-//! + lightweight fills) against a phase-A request mix, then the live
-//! traffic shifts to a disjoint phase-B mix. The online refresh loop
-//! must (a) detect the drift from serving-time access counts, (b)
-//! re-plan on its background thread, (c) hot-swap the snapshot with
-//! **zero** reader stalls, and (d) recover ≥ 90% of the overall hit
-//! ratio a fresh offline re-plan on phase B would achieve.
+//! Scenario: one logical DCI snapshot is sharded across N simulated
+//! devices (budget split per shard in exact integer arithmetic, node→
+//! shard by stable hash), planned against a phase-A request mix. The
+//! live traffic then shifts to the disjoint phase-B mix. The per-shard
+//! refresh loop must (a) detect each shard's drift from its own
+//! within-shard access distribution, (b) re-plan drifted shards
+//! *individually* — every install rebuilds one shard within that
+//! shard's budget, uploading ≤ 1/N of what a full (all-shard) re-plan
+//! uploads — (c) hot-swap with **zero** reader stalls on every shard,
+//! and (d) recover ≥ 95% of the overall hit ratio a fresh offline
+//! full re-plan on phase B would achieve.
 //!
-//! Four measurements over the *identical* phase-B request sequence
-//! (same engine request indices → same sampling streams → exact
+//! Measurements over the *identical* phase-B request sequence (same
+//! engine request indices → same sampling streams → exact
 //! comparability):
-//!   stale      — caches still planned for phase A (no refresh)
-//!   refreshed  — caches after the online re-plan
-//!   oracle     — fresh offline re-plan from a phase-B pre-sample
-//!   phase-A    — the matched-workload reference point
+//!   stale      — shards still planned for phase A (no refresh)
+//!   refreshed  — shards after the online per-shard re-plans
+//!   oracle     — fresh offline full re-plan from a phase-B pre-sample
 //!
-//! Always writes `BENCH_cache_runtime.json` (override with `--json
-//! <path>`) so the perf trajectory is tracked across PRs.
+//! Always writes `BENCH_shard_runtime.json` (override with `--json
+//! <path>`) — CI fails if the `recovered_hit_ratio` key goes missing.
 //!
-//! `cargo bench --bench cache_runtime [-- --quick]`
+//! `cargo bench --bench shard_runtime [-- --quick]`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -28,8 +32,9 @@ use anyhow::{ensure, Result};
 
 use dci::baselines::PreparedSystem;
 use dci::bench_support::{jnum, BenchOpts, BenchReport};
-use dci::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
+use dci::cache::planner::{DciPlanner, WorkloadProfile};
 use dci::cache::refresh::{AccessTracker, RefreshConfig, Refresher};
+use dci::cache::shard::{plan_sharded, ShardRouter, ShardedPlan};
 use dci::cache::CacheStats;
 use dci::config::{ComputeKind, RunConfig, SystemKind};
 use dci::engine::InferenceEngine;
@@ -42,6 +47,8 @@ use dci::util::Rng;
 struct Params {
     dataset: &'static str,
     fanout: &'static str,
+    /// Shards the logical snapshot splits across.
+    n_shards: usize,
     /// Seeds per serving request.
     req_size: usize,
     /// Seeds per phase pool (disjoint A/B halves of the test set).
@@ -49,15 +56,17 @@ struct Params {
     /// Pre-sampling geometry (covers each pool exactly).
     presample_bs: usize,
     n_presample: usize,
+    /// Global budget (split per shard).
     budget: u64,
 }
 
 fn main() -> Result<()> {
-    let opts = BenchOpts::from_env_default_json("BENCH_cache_runtime.json");
+    let opts = BenchOpts::from_env_default_json("BENCH_shard_runtime.json");
     let p = if opts.quick {
         Params {
             dataset: "tiny",
             fanout: "3,2",
+            n_shards: 4,
             req_size: 32,
             pool: 480,
             presample_bs: 120,
@@ -68,6 +77,7 @@ fn main() -> Result<()> {
         Params {
             dataset: "products-sim",
             fanout: "8,4,2",
+            n_shards: 4,
             req_size: 64,
             pool: 2048,
             presample_bs: 256,
@@ -75,6 +85,7 @@ fn main() -> Result<()> {
             budget: 8 << 20,
         }
     };
+    let n = p.n_shards;
 
     eprintln!("building {}...", p.dataset);
     let ds = Arc::new(datasets::spec(p.dataset)?.build());
@@ -84,8 +95,10 @@ fn main() -> Result<()> {
     cfg.batch_size = p.req_size;
     cfg.fanout = Fanout::parse(p.fanout)?;
     cfg.budget = Some(p.budget);
+    cfg.shards = n;
     cfg.compute = ComputeKind::Skip;
     let cost = CostModel::default();
+    let row_slack = (ds.features.row_bytes() + 16) * n as u64;
 
     // disjoint request pools: phase A = head of the test set (what the
     // deployment was planned for), phase B = tail (the drifted mix)
@@ -95,7 +108,9 @@ fn main() -> Result<()> {
     let a_chunks: Vec<&[NodeId]> = a_pool.chunks(p.req_size).collect();
     let b_chunks: Vec<&[NodeId]> = b_pool.chunks(p.req_size).collect();
 
-    // offline plan against phase A (the deployment's startup state)
+    // offline sharded plan against phase A (the deployment's startup
+    // state: N devices, each holding its split of the budget)
+    let router = ShardRouter::new(n);
     let stats_a = presample(
         &ds.csc,
         &ds.features,
@@ -108,25 +123,33 @@ fn main() -> Result<()> {
     );
     let profile_a = WorkloadProfile::from_presample(&stats_a);
 
-    // --- live serving engine: phase-A plan + tracker + refresher ----
-    let plan_live = DciPlanner.plan(&ds, &profile_a, p.budget);
-    let prepared =
-        PreparedSystem::from_snapshot(SystemKind::Dci, plan_live.snapshot, None, p.budget);
+    // --- live serving engine: sharded phase-A plan + per-shard refresh
+    let live_plans = plan_sharded(&DciPlanner, &ds, &profile_a, p.budget, &router);
+    ensure!(live_plans.budgets.iter().sum::<u64>() == p.budget, "split lost bytes");
+    let prepared = PreparedSystem::from_plans(
+        SystemKind::Dci,
+        live_plans,
+        router.clone(),
+        None,
+        p.budget,
+        0.0,
+        &cost,
+    );
+    let shard_budgets = prepared.shard_budgets.clone();
     let runtime = Arc::clone(&prepared.runtime);
     let mut engine = InferenceEngine::with_prepared(&ds, cfg.clone(), prepared)?;
-    let tracker =
-        Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
     engine.set_tracker(Arc::clone(&tracker));
     let refresher = Refresher::spawn(
         Arc::clone(&ds),
         Arc::clone(&runtime),
         tracker,
         Box::new(DciPlanner),
-        vec![p.budget],
+        shard_budgets,
         stats_a.node_visits.clone(),
-        // threshold is deliberately low: a spurious early re-plan only
-        // re-centers the baseline on the observed mix (harmless), while
-        // a missed drift would leave the stale plan serving forever
+        // low threshold: spurious early re-plans only re-center a
+        // shard's baseline (harmless); a missed drift would leave that
+        // shard stale forever
         RefreshConfig {
             check_interval: Duration::from_millis(20),
             min_batches: 4,
@@ -142,13 +165,13 @@ fn main() -> Result<()> {
         phase_a_stats.merge(&engine.infer_once(chunk)?.stats);
     }
     eprintln!(
-        "  [phase-A live] feat-hit={:.3} adj-hit={:.3}",
+        "  [phase-A live] feat-hit={:.3} adj-hit={:.3} ({n} shards)",
         phase_a_stats.feat_hit_ratio(),
         phase_a_stats.adj_hit_ratio()
     );
 
-    // phase B: drive the drifted mix until the refresher swaps, then a
-    // few more waves so the decayed profile converges on B
+    // phase B: drive the drifted mix until per-shard refreshes land,
+    // then settle waves so the decayed profiles converge on B
     let swaps_at_b = runtime.swaps();
     let deadline = Instant::now() + Duration::from_secs(60);
     let mut b_waves = 0u64;
@@ -164,9 +187,6 @@ fn main() -> Result<()> {
         "refresh never triggered after {b_waves} phase-B waves (drift {:.3})",
         refresher.stats().last_drift
     );
-    // settle: each further wave decays residual phase-A mass by
-    // `decay`, and any drift above the (low) threshold keeps
-    // re-planning, so the live snapshot converges on pure phase B
     for _ in 0..8 {
         for chunk in &b_chunks {
             engine.infer_once(chunk)?;
@@ -175,25 +195,24 @@ fn main() -> Result<()> {
     }
     let rstats = refresher.stop();
     let stalls = runtime.swap_stalls();
+    let refresh_ms = rstats.replan_wall_ns / rstats.replans.max(1) as f64 / 1e6;
     eprintln!(
-        "  [refresh] replans={} drift={:.3} bg-latency={:.1}ms stalls={stalls}",
-        rstats.replans,
-        rstats.last_drift,
-        rstats.replan_wall_ns / rstats.replans.max(1) as f64 / 1e6
+        "  [refresh] replans={} per-shard={:?} drift={:.3} bg-latency={:.1}ms stalls={stalls}",
+        rstats.replans, rstats.shard_replans, rstats.last_drift, refresh_ms
     );
 
-    // --- measurement: identical phase-B sequence on three plans ------
-    // stale: the phase-A plan re-derived (deterministic fill → the
-    // exact pre-refresh cache state)
-    let stale_plan = DciPlanner.plan(&ds, &profile_a, p.budget);
-    let stale = measure(&ds, &cfg, stale_plan.snapshot, p.budget, &b_chunks)?;
-    // refreshed: the runtime's live (hot-swapped) snapshot
+    // --- measurement: identical phase-B sequence on three plan sets --
+    // stale: the phase-A sharded plan re-derived (deterministic fills →
+    // the exact pre-refresh cache state)
+    let stale_plans = plan_sharded(&DciPlanner, &ds, &profile_a, p.budget, &router);
+    let stale = measure(&ds, &cfg, stale_plans, &router, p.budget, &cost, &b_chunks)?;
+    // refreshed: the live runtime's hot-swapped shards
     let refreshed = {
         let prepared = PreparedSystem {
             kind: SystemKind::Dci,
             runtime: Arc::clone(&runtime),
             cache_budget: p.budget,
-            shard_budgets: vec![p.budget],
+            shard_budgets: dci::cache::split_budget(p.budget, n),
             presample: None,
             batch_order: None,
             inter_batch_reuse: false,
@@ -203,7 +222,9 @@ fn main() -> Result<()> {
         let mut e = InferenceEngine::with_prepared(&ds, cfg.clone(), prepared)?;
         run_chunks(&mut e, &b_chunks)?
     };
-    // oracle: fresh offline re-plan from a phase-B pre-sample
+    // oracle: a fresh offline FULL re-plan (all N shards) from a
+    // phase-B pre-sample — the comparison point for both the recovered
+    // hit ratio and the full-re-plan upload volume
     let stats_b = presample(
         &ds.csc,
         &ds.features,
@@ -214,26 +235,32 @@ fn main() -> Result<()> {
         &cost,
         &mut Rng::new(cfg.seed),
     );
-    let oracle_plan =
-        DciPlanner.plan(&ds, &WorkloadProfile::from_presample(&stats_b), p.budget);
-    let oracle = measure(&ds, &cfg, oracle_plan.snapshot, p.budget, &b_chunks)?;
+    let oracle_plans = plan_sharded(
+        &DciPlanner,
+        &ds,
+        &WorkloadProfile::from_presample(&stats_b),
+        p.budget,
+        &router,
+    );
+    let full_replan_bytes = oracle_plans.fill_h2d_bytes();
+    let oracle = measure(&ds, &cfg, oracle_plans, &router, p.budget, &cost, &b_chunks)?;
 
-    let recovery = if oracle.overall_hit_ratio() > 0.0 {
+    let recovered_hit_ratio = if oracle.overall_hit_ratio() > 0.0 {
         refreshed.overall_hit_ratio() / oracle.overall_hit_ratio()
     } else {
         1.0
     };
-    let refresh_ms = rstats.replan_wall_ns / rstats.replans.max(1) as f64 / 1e6;
+    let single_shard_bytes = rstats.max_install_h2d_bytes;
 
     let mut report = BenchReport::new(
-        "Cache runtime: online refresh under workload drift (phase A -> phase B)",
+        "Sharded runtime: per-shard refresh under workload drift (phase A -> phase B)",
         &["measurement", "feat-hit%", "adj-hit%", "overall%"],
     );
     for (label, st) in [
         ("phase-A (matched)", &phase_a_stats),
-        ("phase-B stale plan", &stale),
-        ("phase-B refreshed", &refreshed),
-        ("phase-B offline oracle", &oracle),
+        ("phase-B stale shards", &stale),
+        ("phase-B refreshed shards", &refreshed),
+        ("phase-B offline full re-plan", &oracle),
     ] {
         report.row(
             &[
@@ -252,52 +279,87 @@ fn main() -> Result<()> {
     }
     report.row(
         &[
-            format!("refresh: {} replans", rstats.replans),
+            format!("refresh: {} shard installs", rstats.replans),
             format!("{:.1}ms bg", refresh_ms),
-            format!("{} stalls", stalls),
-            format!("{:.1}% recovery", 100.0 * recovery),
+            format!("{stalls} stalls"),
+            format!("{:.1}% recovery", 100.0 * recovered_hit_ratio),
         ],
         vec![
             ("measurement", s("refresh")),
+            ("n_shards", jnum(n as f64)),
             ("replans", jnum(rstats.replans as f64)),
             ("drift_checks", jnum(rstats.checks as f64)),
             ("refresh_latency_ms", jnum(refresh_ms)),
             ("refresh_h2d_bytes", jnum(rstats.fill_h2d_bytes as f64)),
+            ("single_shard_install_bytes", jnum(single_shard_bytes as f64)),
+            ("full_replan_bytes", jnum(full_replan_bytes as f64)),
             ("swap_stalls", jnum(stalls as f64)),
-            ("recovery", jnum(recovery)),
+            ("recovered_hit_ratio", jnum(recovered_hit_ratio)),
         ],
     );
     report.finish(&opts)?;
 
     println!(
-        "stale {:.3} -> refreshed {:.3} vs oracle {:.3}: {:.1}% recovery, {stalls} swap stalls",
+        "stale {:.3} -> refreshed {:.3} vs full-replan oracle {:.3}: {:.1}% recovery; \
+         max single-shard install {} B vs full re-plan {} B ({} shards), {stalls} stalls",
         stale.overall_hit_ratio(),
         refreshed.overall_hit_ratio(),
         oracle.overall_hit_ratio(),
-        100.0 * recovery
+        100.0 * recovered_hit_ratio,
+        single_shard_bytes,
+        full_replan_bytes,
+        n
     );
+
     // the acceptance criteria this bench exists to hold
-    ensure!(stalls == 0, "serving must never block on a snapshot swap");
+    for shard in 0..n {
+        ensure!(
+            runtime.shard(shard).swap_stalls() == 0,
+            "shard {shard} blocked a reader on a snapshot swap"
+        );
+    }
+    ensure!(stalls == 0, "serving must never block on any shard's swap");
     ensure!(
-        recovery >= 0.9,
-        "online refresh recovered only {:.1}% of the offline re-plan hit ratio",
-        100.0 * recovery
+        rstats.replans >= 1 && rstats.shard_replans.iter().any(|&r| r > 0),
+        "the drift stream must trigger per-shard re-plans: {rstats:?}"
+    );
+    // every install rebuilt ONE shard within its own budget: its upload
+    // is bounded by 1/N of the full re-plan's (fill-granularity slack:
+    // one row per shard plus the remainder byte of the budget split)
+    ensure!(
+        single_shard_bytes <= full_replan_bytes / n as u64 + row_slack,
+        "single-shard refresh uploaded {single_shard_bytes} B, more than 1/{n} of a \
+         full re-plan's {full_replan_bytes} B"
+    );
+    ensure!(
+        recovered_hit_ratio >= 0.95,
+        "per-shard refresh recovered only {:.1}% of the full re-plan hit ratio",
+        100.0 * recovered_hit_ratio
     );
     Ok(())
 }
 
-/// Serve `chunks` on a fresh engine built around `snapshot`; request
-/// indices start at 0, so every `measure` sees identical sampling
-/// streams.
+/// Serve `chunks` on a fresh engine built around a sharded plan set;
+/// request indices start at 0, so every `measure` sees identical
+/// sampling streams.
 fn measure(
     ds: &Arc<Dataset>,
     cfg: &RunConfig,
-    snapshot: dci::cache::CacheSnapshot,
+    plans: ShardedPlan,
+    router: &ShardRouter,
     budget: u64,
+    cost: &CostModel,
     chunks: &[&[NodeId]],
 ) -> Result<CacheStats> {
-    let prepared =
-        PreparedSystem::from_snapshot(SystemKind::Dci, snapshot, None, budget);
+    let prepared = PreparedSystem::from_plans(
+        SystemKind::Dci,
+        plans,
+        router.clone(),
+        None,
+        budget,
+        0.0,
+        cost,
+    );
     let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
     run_chunks(&mut engine, chunks)
 }

@@ -14,14 +14,15 @@
 
 use anyhow::Result;
 
-use crate::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
+use crate::cache::planner::{DciPlanner, WorkloadProfile};
+use crate::cache::shard::{plan_sharded, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
 use crate::sampler::presample_threads;
 use crate::util::Rng;
 
-use super::{auto_budget, PreparedSystem};
+use super::{resolve_budget, PreparedSystem};
 
 pub fn prepare(
     ds: &Dataset,
@@ -46,22 +47,28 @@ pub fn prepare(
         cfg.sample_threads,
     );
 
-    // 2. budget — explicit budgets are clamped to what the device can
-    // actually hold
-    let total = cfg
-        .budget
-        .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
-        .min(device.available_for_cache());
+    // 2. budget — node-global, clamped so every shard's share fits its
+    // own device (`device` is the per-shard prototype)
+    let total = resolve_budget(cfg, device, &stats, ds.features.row_bytes(), ds.spec.scale);
 
-    // 3. Eq. (1) split + lightweight fills, behind the planner trait
-    // (fill wall is genuine host-side coordinator work and counts
-    // toward preprocessing)
-    let plan = DciPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    // 3. per-shard Eq. (1) split + lightweight fills, behind the
+    // planner trait (fill wall is genuine host-side coordinator work
+    // and counts toward preprocessing; one shard = the paper's
+    // single-device pipeline exactly)
+    let router = ShardRouter::new(cfg.shards.max(1));
+    let plans = plan_sharded(
+        &DciPlanner,
+        ds,
+        &WorkloadProfile::from_presample(&stats),
+        total,
+        &router,
+    );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
-    Ok(PreparedSystem::from_plan(
+    Ok(PreparedSystem::from_plans(
         SystemKind::Dci,
-        plan,
-        stats,
+        plans,
+        router,
+        Some(stats),
         total,
         profiling_ns,
         cost,
@@ -87,13 +94,14 @@ mod tests {
     fn prepares_both_caches_within_budget() {
         let ds = datasets::spec("tiny").unwrap().build();
         let device = DeviceMemory::new(1 << 30, 1 << 20);
-        let p = prepare(&ds, &cfg(300_000), &device, &CostModel::default(),
-                        &mut Rng::new(1))
+        let p = prepare(&ds, &cfg(300_000), &device, &CostModel::default(), &mut Rng::new(1))
             .unwrap();
         let split = p.alloc().unwrap();
         assert_eq!(split.total(), 300_000);
-        assert!(split.c_adj > 0 && split.c_feat > 0,
-                "both stages take time, so both caches get capacity: {split:?}");
+        assert!(
+            split.c_adj > 0 && split.c_feat > 0,
+            "both stages take time, so both caches get capacity: {split:?}"
+        );
         assert!(p.cache_bytes() <= 300_000 + ds.csc.bytes_total());
         assert!(p.preprocess_ns >= p.preprocess_wall_ns);
         assert!(p.runtime.load().feat.as_ref().unwrap().n_cached() > 0);
@@ -104,10 +112,33 @@ mod tests {
     fn zero_budget_still_prepares() {
         let ds = datasets::spec("tiny").unwrap().build();
         let device = DeviceMemory::new(1 << 30, 1 << 20);
-        let p = prepare(&ds, &cfg(0), &device, &CostModel::default(),
-                        &mut Rng::new(2))
-            .unwrap();
+        let p =
+            prepare(&ds, &cfg(0), &device, &CostModel::default(), &mut Rng::new(2)).unwrap();
         assert_eq!(p.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn sharded_prepare_splits_budget_across_devices() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let device = DeviceMemory::new(1 << 30, 1 << 20);
+        let mut c = cfg(400_000);
+        c.shards = 4;
+        let p = prepare(&ds, &c, &device, &CostModel::default(), &mut Rng::new(5)).unwrap();
+        assert_eq!(p.runtime.n_shards(), 4);
+        assert_eq!(p.shard_budgets.len(), 4);
+        assert_eq!(p.shard_budgets.iter().sum::<u64>(), 400_000);
+        assert_eq!(p.cache_budget, 400_000);
+        // each shard planned its own Eq. (1) split within its share
+        let mut seen_feat = 0;
+        for (s, snap) in p.runtime.snapshots().iter().enumerate() {
+            let split = snap.alloc.unwrap();
+            assert_eq!(split.total(), p.shard_budgets[s]);
+            if snap.feat.as_ref().unwrap().n_cached() > 0 {
+                seen_feat += 1;
+            }
+        }
+        assert!(seen_feat >= 2, "multiple shards should hold features");
+        assert_eq!(p.alloc().unwrap().total(), 400_000);
     }
 
     #[test]
@@ -116,8 +147,7 @@ mod tests {
         let device = DeviceMemory::new(1 << 30, 1 << 20);
         let mut c = cfg(0);
         c.budget = None;
-        let p = prepare(&ds, &c, &device, &CostModel::default(), &mut Rng::new(3))
-            .unwrap();
+        let p = prepare(&ds, &c, &device, &CostModel::default(), &mut Rng::new(3)).unwrap();
         // tiny dataset on a 1 GiB device: everything fits, adj cache
         // takes the full-CSC fast path
         assert!(p.runtime.load().adj.as_ref().unwrap().is_full_csc());

@@ -18,14 +18,15 @@
 
 use anyhow::Result;
 
-use crate::cache::planner::{CachePlanner, DucatiPlanner, WorkloadProfile};
+use crate::cache::planner::{DucatiPlanner, WorkloadProfile};
+use crate::cache::shard::{plan_sharded, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
 use crate::sampler::presample_threads;
 use crate::util::Rng;
 
-use super::{auto_budget, PreparedSystem};
+use super::{resolve_budget, PreparedSystem};
 
 /// How many times more profiling batches DUCATI consumes vs. DCI.
 pub const DUCATI_PROFILE_FACTOR: usize = 8;
@@ -51,21 +52,27 @@ pub fn prepare(
         cfg.sample_threads,
     );
 
-    // explicit budgets are clamped to what the device can actually hold
-    let total = cfg
-        .budget
-        .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
-        .min(device.available_for_cache());
+    // node-global budget, clamped per shard (see `resolve_budget`)
+    let total = resolve_budget(cfg, device, &stats, ds.features.row_bytes(), ds.spec.scale);
 
     // 2.-4. sorts, curve fits, knapsack, fills — all host-side
     // preprocessing work whose wall time counts (the planner measures
-    // it as plan_wall_ns)
-    let plan = DucatiPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    // it as plan_wall_ns); under sharding the knapsack runs once per
+    // shard over the shard-masked profile
+    let router = ShardRouter::new(cfg.shards.max(1));
+    let plans = plan_sharded(
+        &DucatiPlanner,
+        ds,
+        &WorkloadProfile::from_presample(&stats),
+        total,
+        &router,
+    );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
-    Ok(PreparedSystem::from_plan(
+    Ok(PreparedSystem::from_plans(
         SystemKind::Ducati,
-        plan,
-        stats,
+        plans,
+        router,
+        Some(stats),
         total,
         profiling_ns,
         cost,
@@ -91,8 +98,7 @@ mod tests {
     fn prepares_dual_caches_within_budget() {
         let ds = datasets::spec("tiny").unwrap().build();
         let device = DeviceMemory::new(1 << 30, 1 << 20);
-        let p = prepare(&ds, &cfg(400_000), &device, &CostModel::default(),
-                        &mut Rng::new(1))
+        let p = prepare(&ds, &cfg(400_000), &device, &CostModel::default(), &mut Rng::new(1))
             .unwrap();
         let split = p.alloc().unwrap();
         assert!(split.total() <= 400_000 + ds.csc.n_nodes() as u64 * 12);
@@ -105,11 +111,9 @@ mod tests {
         let ds = datasets::spec("tiny").unwrap().build();
         let device = DeviceMemory::new(1 << 30, 1 << 20);
         let cost = CostModel::default();
-        let d = super::super::dci::prepare(&ds, &cfg(200_000), &device, &cost,
-                                           &mut Rng::new(2))
+        let d = super::super::dci::prepare(&ds, &cfg(200_000), &device, &cost, &mut Rng::new(2))
             .unwrap();
-        let u = prepare(&ds, &cfg(200_000), &device, &cost, &mut Rng::new(2))
-            .unwrap();
+        let u = prepare(&ds, &cfg(200_000), &device, &cost, &mut Rng::new(2)).unwrap();
         // on `tiny` the 8x profiling request is capped by available
         // batches (15 vs DCI's 8) — full-size benches show the real gap
         assert!(

@@ -30,8 +30,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::planner::CachePlan;
-use crate::cache::runtime::{CacheSnapshot, DualCacheRuntime};
+use crate::cache::runtime::CacheSnapshot;
+use crate::cache::shard::{ShardRouter, ShardedPlan, ShardedRuntime};
 use crate::cache::CacheAllocation;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{Dataset, NodeId};
@@ -44,14 +44,20 @@ pub use crate::cache::planner::planner_for;
 /// What a system's preprocessing produced; the engine consumes this.
 pub struct PreparedSystem {
     pub kind: SystemKind,
-    /// Epoch-swappable dual-cache state. Execution paths never hold
-    /// `&AdjCache`/`&FeatCache` directly — they acquire a snapshot per
-    /// batch through a `SnapshotHandle`, so a background refresh can
-    /// hot-swap the caches without stalling them.
-    pub runtime: Arc<DualCacheRuntime>,
+    /// Epoch-swappable dual-cache state, sharded across the node's
+    /// simulated devices (one shard for single-device systems).
+    /// Execution paths never hold `&AdjCache`/`&FeatCache` directly —
+    /// they acquire per-shard snapshots per batch through a
+    /// `ShardedHandle`, so a background refresh can hot-swap any
+    /// shard's caches without stalling them.
+    pub runtime: Arc<ShardedRuntime>,
     /// Total byte budget the initial plan ran with (re-plans stay
     /// within it; 0 for cacheless systems).
     pub cache_budget: u64,
+    /// Exact-integer per-shard split of `cache_budget` (len =
+    /// `runtime.n_shards()`; Σ == `cache_budget`). Per-shard re-plans
+    /// stay within their own entry.
+    pub shard_budgets: Vec<u64>,
     /// Pre-sampling statistics (reporting + refresh baseline;
     /// DCI/SCI/DUCATI).
     pub presample: Option<PresampleStats>,
@@ -67,8 +73,8 @@ pub struct PreparedSystem {
 }
 
 impl PreparedSystem {
-    /// Wrap an initial snapshot (the common constructor; callers then
-    /// fill in ordering/accounting fields as needed).
+    /// Wrap an initial single-shard snapshot (the common constructor;
+    /// callers then fill in ordering/accounting fields as needed).
     pub fn from_snapshot(
         kind: SystemKind,
         snapshot: CacheSnapshot,
@@ -77,8 +83,9 @@ impl PreparedSystem {
     ) -> Self {
         PreparedSystem {
             kind,
-            runtime: Arc::new(DualCacheRuntime::new(snapshot)),
+            runtime: Arc::new(ShardedRuntime::single(snapshot)),
             cache_budget,
+            shard_budgets: vec![cache_budget],
             presample,
             batch_order: None,
             inter_batch_reuse: false,
@@ -92,33 +99,59 @@ impl PreparedSystem {
         Self::from_snapshot(kind, CacheSnapshot::empty(), None, 0)
     }
 
-    /// Wrap a planner's output, folding its fill accounting into the
-    /// preprocessing totals (`extra_modeled_ns` carries the profiling
-    /// stage times the plan itself does not know about).
-    pub fn from_plan(
+    /// Wrap a sharded plan's output, folding every shard's fill
+    /// accounting into the preprocessing totals (`extra_modeled_ns`
+    /// carries the profiling stage times the plans themselves do not
+    /// know about).
+    pub fn from_plans(
         kind: SystemKind,
-        plan: CachePlan,
-        presample: PresampleStats,
+        sharded: ShardedPlan,
+        router: ShardRouter,
+        presample: Option<PresampleStats>,
         cache_budget: u64,
         extra_modeled_ns: f64,
         cost: &CostModel,
     ) -> Self {
-        let wall_ns = plan.plan_wall_ns;
-        let modeled_ns = extra_modeled_ns + plan.fill_ledger.modeled_ns(cost);
-        let mut p = Self::from_snapshot(kind, plan.snapshot, Some(presample), cache_budget);
-        p.preprocess_ns = wall_ns + modeled_ns;
-        p.preprocess_wall_ns = wall_ns;
-        p
+        let ShardedPlan { plans, budgets } = sharded;
+        let mut wall_ns = 0.0;
+        let mut modeled_ns = extra_modeled_ns;
+        let mut snapshots = Vec::with_capacity(plans.len());
+        for plan in plans {
+            wall_ns += plan.plan_wall_ns;
+            modeled_ns += plan.fill_ledger.modeled_ns(cost);
+            snapshots.push(plan.snapshot);
+        }
+        PreparedSystem {
+            kind,
+            runtime: Arc::new(ShardedRuntime::new(router, snapshots)),
+            cache_budget,
+            shard_budgets: budgets,
+            presample,
+            batch_order: None,
+            inter_batch_reuse: false,
+            preprocess_ns: wall_ns + modeled_ns,
+            preprocess_wall_ns: wall_ns,
+        }
     }
 
-    /// Device bytes the live snapshot's caches occupy.
+    /// Device bytes the live snapshots' caches occupy, summed across
+    /// shards.
     pub fn cache_bytes(&self) -> u64 {
-        self.runtime.load().bytes_used()
+        self.runtime.snapshots().iter().map(|s| s.bytes_used()).sum()
     }
 
-    /// The allocation split of the live snapshot (reporting).
+    /// The allocation split of the live snapshots (reporting; summed
+    /// across the shards that carry one).
     pub fn alloc(&self) -> Option<CacheAllocation> {
-        self.runtime.load().alloc
+        let mut total: Option<CacheAllocation> = None;
+        for snap in self.runtime.snapshots() {
+            if let Some(a) = snap.alloc {
+                let t = total.get_or_insert(CacheAllocation { c_adj: 0, c_feat: 0 });
+                t.c_adj += a.c_adj;
+                t.c_feat += a.c_feat;
+            }
+        }
+        total
     }
 }
 
@@ -156,6 +189,30 @@ pub fn auto_budget(
     device.available_for_cache().saturating_sub(workload)
 }
 
+/// Resolve the node-global cache budget for a cache-owning system.
+/// Explicit budgets are global across the node's shards, clamped so
+/// that the even per-shard split can never exceed any single device's
+/// headroom (`total ≤ n × per-device` ⇒ every [`split_budget`] share ≤
+/// per-device, remainder byte included). Auto budgets scale the
+/// per-device workload-aware headroom (§IV.A) by the shard count.
+///
+/// [`split_budget`]: crate::cache::split_budget
+pub fn resolve_budget(
+    cfg: &RunConfig,
+    device: &DeviceMemory,
+    stats: &PresampleStats,
+    row_bytes: u64,
+    scale: f64,
+) -> u64 {
+    let n = cfg.shards.max(1) as u64;
+    let per_device = device.available_for_cache();
+    cfg.budget
+        .unwrap_or_else(|| {
+            auto_budget(device, stats, row_bytes, cfg.hidden, scale).saturating_mul(n)
+        })
+        .min(per_device.saturating_mul(n))
+}
+
 /// Dispatch: run `cfg.system`'s preprocessing.
 pub fn prepare(
     ds: &Dataset,
@@ -164,6 +221,15 @@ pub fn prepare(
     cost: &CostModel,
     rng: &mut Rng,
 ) -> Result<PreparedSystem> {
+    // systems without a cache plan have nothing to shard; silently
+    // running them on one device while the cache-owning systems get N
+    // would corrupt any cross-system comparison at shards>1
+    if cfg.shards > 1 && planner_for(cfg.system).is_none() {
+        anyhow::bail!(
+            "system={} has no shardable cache state; run it with shards=1",
+            cfg.system.as_str()
+        );
+    }
     match cfg.system {
         SystemKind::Dgl => Ok(PreparedSystem::bare(SystemKind::Dgl)),
         SystemKind::Dci => dci::prepare(ds, cfg, device, cost, rng),
@@ -210,6 +276,23 @@ mod tests {
         assert_eq!(auto_budget(&small, &stats, ds.features.row_bytes(), 128, 1.0), 0);
         // scaling the claim returns budget on small devices
         assert!(auto_budget(&small, &stats, ds.features.row_bytes(), 128, 0.0001) > 0);
+    }
+
+    #[test]
+    fn cacheless_systems_reject_sharding() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let device = DeviceMemory::new(1 << 30, 1 << 20);
+        let cost = CostModel::default();
+        for kind in [SystemKind::Dgl, SystemKind::Rain] {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = kind;
+            cfg.batch_size = 64;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.shards = 2;
+            let err = prepare(&ds, &cfg, &device, &cost, &mut Rng::new(3)).unwrap_err();
+            assert!(err.to_string().contains("shards=1"), "{kind:?}: {err}");
+        }
     }
 
     #[test]

@@ -248,7 +248,9 @@ mod tests {
     fn deterministic() {
         let (_, a) = run_prepare();
         let (_, b) = run_prepare();
-        assert_eq!(a.batch_order.as_ref().unwrap().0,
-                   b.batch_order.as_ref().unwrap().0);
+        assert_eq!(
+            a.batch_order.as_ref().unwrap().0,
+            b.batch_order.as_ref().unwrap().0
+        );
     }
 }

@@ -6,14 +6,15 @@
 
 use anyhow::Result;
 
-use crate::cache::planner::{CachePlanner, SciPlanner, WorkloadProfile};
+use crate::cache::planner::{SciPlanner, WorkloadProfile};
+use crate::cache::shard::{plan_sharded, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
 use crate::sampler::presample_threads;
 use crate::util::Rng;
 
-use super::{auto_budget, PreparedSystem};
+use super::{resolve_budget, PreparedSystem};
 
 pub fn prepare(
     ds: &Dataset,
@@ -33,18 +34,24 @@ pub fn prepare(
         rng,
         cfg.sample_threads,
     );
-    // explicit budgets are clamped to what the device can actually hold
-    let total = cfg
-        .budget
-        .unwrap_or_else(|| auto_budget(device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale))
-        .min(device.available_for_cache());
+    // node-global budget, clamped so every shard's share fits its own
+    // device (see `resolve_budget`)
+    let total = resolve_budget(cfg, device, &stats, ds.features.row_bytes(), ds.spec.scale);
     // single cache: everything to features (fill wall is real host work)
-    let plan = SciPlanner.plan(ds, &WorkloadProfile::from_presample(&stats), total);
+    let router = ShardRouter::new(cfg.shards.max(1));
+    let plans = plan_sharded(
+        &SciPlanner,
+        ds,
+        &WorkloadProfile::from_presample(&stats),
+        total,
+        &router,
+    );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;
-    Ok(PreparedSystem::from_plan(
+    Ok(PreparedSystem::from_plans(
         SystemKind::Sci,
-        plan,
-        stats,
+        plans,
+        router,
+        Some(stats),
         total,
         profiling_ns,
         cost,

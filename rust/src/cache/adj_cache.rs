@@ -414,8 +414,10 @@ mod tests {
                     src.neighbor_at(v, p, &mut l);
                 }
                 if l.hits < prev_hits {
-                    return Err(format!("hits dropped {} -> {} at cap {cap}",
-                                       prev_hits, l.hits));
+                    return Err(format!(
+                        "hits dropped {} -> {} at cap {cap}",
+                        prev_hits, l.hits
+                    ));
                 }
                 prev_hits = l.hits;
             }

@@ -11,9 +11,13 @@
 //! - [`runtime`] — `DualCacheRuntime`: epoch-swappable immutable
 //!   snapshots; every execution path reads caches through a per-thread
 //!   `SnapshotHandle` acquired once per batch.
+//! - [`shard`] — sharded multi-device snapshots: a stable node→shard
+//!   hash partition, per-shard budget split (exact integer), and a
+//!   `ShardedRuntime`/`ShardView` acquire path that routes lookups to
+//!   the shard owning each node. One shard is the PR 2 behavior.
 //! - [`refresh`] — the online loop that tracks serving-time accesses,
-//!   detects workload drift, re-plans in the background, and hot-swaps
-//!   the snapshot.
+//!   detects workload drift *per shard*, re-plans in the background,
+//!   and hot-swaps only the drifted shard.
 //! - [`stats`] — per-run transfer statistics, including online-refill
 //!   traffic.
 //!
@@ -28,12 +32,16 @@ pub mod feat_cache;
 pub mod planner;
 pub mod refresh;
 pub mod runtime;
+pub mod shard;
 pub mod stats;
 
 pub use adj_cache::AdjCache;
 pub use alloc::{allocate, CacheAllocation};
 pub use feat_cache::FeatCache;
-pub use planner::{planner_for, CachePlan, CachePlanner, WorkloadProfile};
+pub use planner::{planner_for, split_budget, CachePlan, CachePlanner, WorkloadProfile};
 pub use refresh::{AccessTracker, RefreshConfig, RefreshStats, Refresher};
 pub use runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};
+pub use shard::{
+    plan_sharded, ShardRouter, ShardView, ShardedHandle, ShardedPlan, ShardedRuntime,
+};
 pub use stats::CacheStats;

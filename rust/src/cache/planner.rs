@@ -87,6 +87,25 @@ pub trait CachePlanner: Send + Sync {
     fn plan(&self, ds: &Dataset, profile: &WorkloadProfile<'_>, budget: u64) -> CachePlan;
 }
 
+/// Split a global Eq. (1) budget across `n_shards` devices in exact
+/// integer arithmetic: every shard gets `budget / n` and the remainder
+/// `budget % n` goes one byte each to the first shards — the same
+/// no-float discipline as the feature fill's `c * n > total` average
+/// threshold, so no shard sum can ever exceed the global budget and no
+/// byte is lost to rounding.
+pub fn split_budget(budget: u64, n_shards: usize) -> Vec<u64> {
+    let n = n_shards.max(1) as u64;
+    let base = budget / n;
+    let rem = budget % n;
+    let shares: Vec<u64> = (0..n).map(|s| base + u64::from(s < rem)).collect();
+    debug_assert_eq!(
+        shares.iter().sum::<u64>(),
+        budget,
+        "shard split must conserve the budget exactly"
+    );
+    shares
+}
+
 /// The planner behind each cache-owning system. `None` for systems
 /// with no workload-driven cache plan (DGL caches nothing; RAIN's
 /// state is its batch order, which cannot be re-planned mid-serve).
@@ -363,6 +382,27 @@ mod tests {
         assert_eq!(planner_for(SystemKind::Ducati).unwrap().name(), "ducati");
         assert!(planner_for(SystemKind::Dgl).is_none());
         assert!(planner_for(SystemKind::Rain).is_none());
+    }
+
+    #[test]
+    fn split_budget_conserves_and_front_loads_remainder() {
+        assert_eq!(split_budget(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_budget(9, 3), vec![3, 3, 3]);
+        assert_eq!(split_budget(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(split_budget(0, 4), vec![0, 0, 0, 0]);
+        assert_eq!(split_budget(7, 1), vec![7]);
+        // degenerate shard count clamps to one shard, losing nothing
+        assert_eq!(split_budget(7, 0), vec![7]);
+        for (budget, n) in [(u64::MAX, 7usize), (1 << 40, 13), (12_345, 6)] {
+            let shares = split_budget(budget, n);
+            assert_eq!(shares.len(), n);
+            assert_eq!(shares.iter().sum::<u64>(), budget);
+            let (min, max) = (
+                *shares.iter().min().unwrap(),
+                *shares.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "split must be even to within one byte");
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Online workload-drift re-planning.
+//! Online workload-drift re-planning, per shard.
 //!
 //! A serving deployment whose request mix drifts keeps paying misses on
 //! a stale plan (BGL's observation: feature-cache policy must track the
@@ -9,20 +9,30 @@
 //!   adds: per input node in the gather stage, per touched element in
 //!   the sampling stage — same counters pre-sampling collects);
 //! - a background [`Refresher`] thread drains the tracker on a poll
-//!   interval into an exponentially decayed profile, measures drift as
-//!   the total-variation distance between the node-visit distribution
-//!   the live snapshot was planned from and the decayed observed one;
-//! - past the drift threshold it re-plans through the same
-//!   [`CachePlanner`] the offline path used and hot-swaps the result
-//!   into the [`DualCacheRuntime`] — readers pick the new epoch up on
-//!   their next per-batch acquire, never blocking (the runtime counts
-//!   any reader that does block; the bench asserts zero).
+//!   interval into an exponentially decayed profile and measures drift
+//!   **per shard**: the total-variation distance between the
+//!   within-shard node-visit distribution the shard's live snapshot was
+//!   planned from and the decayed observed one;
+//! - a shard past the drift threshold is re-planned through the same
+//!   [`CachePlanner`] the offline path used — from the profile *masked*
+//!   to the shard's own nodes, within the shard's own budget — and
+//!   hot-swapped into that shard of the
+//!   [`ShardedRuntime`](crate::cache::ShardedRuntime). The other shards
+//!   keep serving their current epoch untouched, so a localized drift
+//!   uploads ~1/N of what a full re-plan would (the `shard_runtime`
+//!   bench holds this). Readers pick new epochs up on their next
+//!   per-batch acquire, never blocking (the runtime counts any reader
+//!   that does block; the benches assert zero).
+//!
+//! With one shard this is exactly the PR 2 global refresh loop. With
+//! [`RefreshConfig::per_shard`] disabled, any shard's drift re-plans
+//! every shard (the "full re-plan" comparison mode).
 //!
 //! Cost: the tracker is two count arrays (O(nodes) + O(edges)) per
 //! worker and one relaxed `fetch_add` per access; the drift check is
 //! O(nodes + edges) on the background thread per poll that saw new
-//! batches. Sharding these accumulators across devices is an open item
-//! (ROADMAP).
+//! batches, independent of shard count. Sparse/windowed tracking is an
+//! open item (ROADMAP).
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -32,7 +42,7 @@ use std::time::{Duration, Instant};
 use crate::graph::{Dataset, NodeId};
 
 use super::planner::{CachePlanner, WorkloadProfile};
-use super::runtime::DualCacheRuntime;
+use super::shard::{mask_elem_counts, mask_node_counts, ShardedRuntime};
 
 /// Knobs of the online refresh loop.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,8 +56,13 @@ pub struct RefreshConfig {
     /// 1 = never forget).
     pub decay: f64,
     /// Total-variation distance (in [0, 1]) between the planned and
-    /// observed node-visit distributions that triggers a re-plan.
+    /// observed within-shard node-visit distributions that triggers a
+    /// re-plan of that shard.
     pub drift_threshold: f64,
+    /// Re-plan only the shards that drifted (`true`, the default).
+    /// `false` re-plans every shard as soon as any one drifts — the
+    /// full-re-plan comparison mode (`shard-refresh=off`).
+    pub per_shard: bool,
 }
 
 impl Default for RefreshConfig {
@@ -57,6 +72,7 @@ impl Default for RefreshConfig {
             min_batches: 8,
             decay: 0.5,
             drift_threshold: 0.15,
+            per_shard: true,
         }
     }
 }
@@ -146,14 +162,19 @@ impl AccessTracker {
 pub struct RefreshStats {
     /// Drift checks that had enough data to evaluate.
     pub checks: u64,
-    /// Re-plans installed.
+    /// Shard re-plans installed (every install counts one shard).
     pub replans: u64,
-    /// Last measured total-variation drift.
+    /// Installs per shard (len = shard count).
+    pub shard_replans: Vec<u64>,
+    /// Largest per-shard drift measured by the last check.
     pub last_drift: f64,
     /// Total background wall time spent planning + installing, ns.
     pub replan_wall_ns: f64,
-    /// H2D bytes uploaded by online refills.
+    /// H2D bytes uploaded by online refills, summed over installs.
     pub fill_h2d_bytes: u64,
+    /// Largest single-install upload — what one drifted-shard refresh
+    /// costs, vs `fill_h2d_bytes` for the cumulative story.
+    pub max_install_h2d_bytes: u64,
 }
 
 /// Handle to the background refresh thread.
@@ -164,20 +185,26 @@ pub struct Refresher {
 }
 
 impl Refresher {
-    /// Spawn the refresh loop. `planned_visits` is the node-visit
-    /// profile the runtime's live snapshot was planned from (the
-    /// pre-sample profile at startup); `budget` is the byte budget
-    /// every re-plan must stay within (installs never grow the device
-    /// claim — see the snapshot lifetime rules).
+    /// Spawn the refresh loop over a (possibly sharded) runtime.
+    /// `planned_visits` is the global node-visit profile the runtime's
+    /// live snapshots were planned from (the pre-sample profile at
+    /// startup); `shard_budgets` is the per-shard byte budget every
+    /// re-plan must stay within (len = shard count — installs never
+    /// grow any device's claim; see the snapshot lifetime rules).
     pub fn spawn(
         ds: Arc<Dataset>,
-        runtime: Arc<DualCacheRuntime>,
+        runtime: Arc<ShardedRuntime>,
         tracker: Arc<AccessTracker>,
         planner: Box<dyn CachePlanner>,
-        budget: u64,
+        shard_budgets: Vec<u64>,
         planned_visits: Vec<u32>,
         cfg: RefreshConfig,
     ) -> Refresher {
+        assert_eq!(
+            shard_budgets.len(),
+            runtime.n_shards(),
+            "one budget per shard"
+        );
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(Mutex::new(RefreshStats::default()));
         let stop2 = Arc::clone(&stop);
@@ -185,8 +212,17 @@ impl Refresher {
         let join = std::thread::Builder::new()
             .name("dci-refresh".into())
             .spawn(move || {
-                refresh_loop(&ds, &runtime, &tracker, planner.as_ref(), budget,
-                             planned_visits, &cfg, &stop2, &stats2)
+                refresh_loop(
+                    &ds,
+                    &runtime,
+                    &tracker,
+                    planner.as_ref(),
+                    &shard_budgets,
+                    planned_visits,
+                    &cfg,
+                    &stop2,
+                    &stats2,
+                )
             })
             .expect("spawn refresh thread");
         Refresher { stop, join, stats }
@@ -206,27 +242,37 @@ impl Refresher {
     }
 }
 
-/// Total-variation distance between a normalized distribution and a
-/// raw (unnormalized) observation; 0 when the observation is empty.
-fn tv_distance(planned: &[f64], observed: &[f64]) -> f64 {
-    let total: f64 = observed.iter().sum();
-    if total <= 0.0 {
-        return 0.0;
+/// Per-shard total-variation drift between the planned and observed
+/// node-visit masses. Each shard's masses are normalized *within the
+/// shard* — a shard with no observations reports zero drift (nothing
+/// asked of it, nothing to re-plan), and a shard with observations but
+/// no planned mass reports 0.5 (all of its traffic is new). With one
+/// shard this is exactly the PR 2 global total-variation distance.
+fn shard_drifts(
+    planned: &[f64],
+    observed: &[f64],
+    shard_ids: &[u32],
+    n_shards: usize,
+) -> Vec<f64> {
+    let mut psum = vec![0.0f64; n_shards];
+    let mut osum = vec![0.0f64; n_shards];
+    for (v, &s) in shard_ids.iter().enumerate() {
+        psum[s as usize] += planned[v];
+        osum[s as usize] += observed[v];
     }
-    let mut tv = 0.0;
-    for (p, o) in planned.iter().zip(observed) {
-        tv += (p - o / total).abs();
+    let mut tv = vec![0.0f64; n_shards];
+    for (v, &s) in shard_ids.iter().enumerate() {
+        let s = s as usize;
+        if osum[s] <= 0.0 {
+            continue;
+        }
+        let p = if psum[s] > 0.0 { planned[v] / psum[s] } else { 0.0 };
+        tv[s] += (p - observed[v] / osum[s]).abs();
     }
-    0.5 * tv
-}
-
-/// Normalize counts into a distribution (all-zero stays all-zero).
-fn normalize(xs: &[f64]) -> Vec<f64> {
-    let total: f64 = xs.iter().sum();
-    if total <= 0.0 {
-        return vec![0.0; xs.len()];
+    for (s, t) in tv.iter_mut().enumerate() {
+        *t = if osum[s] <= 0.0 { 0.0 } else { 0.5 * *t };
     }
-    xs.iter().map(|&x| x / total).collect()
+    tv
 }
 
 /// Quantize a decayed profile back to the u32 counts the fills consume,
@@ -245,11 +291,7 @@ fn quantize(xs: &[f64], scale: f64) -> Vec<u32> {
 /// rounding cannot zero a still-meaningful profile, and leaves large
 /// counts untouched.
 fn common_scale(a: &[f64], b: &[f64]) -> f64 {
-    let maxv = a
-        .iter()
-        .chain(b)
-        .cloned()
-        .fold(0.0f64, f64::max);
+    let maxv = a.iter().chain(b).cloned().fold(0.0f64, f64::max);
     if maxv > 0.0 && maxv < 1024.0 {
         1024.0 / maxv
     } else {
@@ -275,28 +317,37 @@ fn sleep_interruptibly(total: Duration, stop: &AtomicBool) {
 #[allow(clippy::too_many_arguments)]
 fn refresh_loop(
     ds: &Dataset,
-    runtime: &DualCacheRuntime,
+    runtime: &ShardedRuntime,
     tracker: &AccessTracker,
     planner: &dyn CachePlanner,
-    budget: u64,
+    shard_budgets: &[u64],
     planned_visits: Vec<u32>,
     cfg: &RefreshConfig,
     stop: &AtomicBool,
     stats_out: &Mutex<RefreshStats>,
 ) {
     let n_nodes = ds.csc.n_nodes();
-    let planned_f: Vec<f64> = planned_visits.iter().map(|&c| c as f64).collect();
-    let mut planned = normalize(&planned_f);
-    if planned.len() != n_nodes {
-        planned = vec![0.0; n_nodes];
-    }
+    let n_edges = ds.csc.n_edges();
+    let n_shards = runtime.n_shards();
+    let router = runtime.router();
+    // node → shard once up front: the hash is cheap but the drift check
+    // runs every poll over every node
+    let shard_ids: Vec<u32> =
+        (0..n_nodes).map(|v| router.shard_of(v as NodeId) as u32).collect();
+
+    // raw planned masses; drifts normalize within each shard per check
+    let mut planned: Vec<f64> = if planned_visits.len() == n_nodes {
+        planned_visits.iter().map(|&c| c as f64).collect()
+    } else {
+        vec![0.0; n_nodes]
+    };
 
     let mut acc_nv: Vec<f64> = vec![0.0; n_nodes];
-    let mut acc_ec: Vec<f64> = vec![0.0; ds.csc.n_edges()];
+    let mut acc_ec: Vec<f64> = vec![0.0; n_edges];
     let mut acc_ts = 0.0f64;
     let mut acc_tf = 0.0f64;
     let mut batches_pending = 0u64;
-    let mut stats = RefreshStats::default();
+    let mut stats = RefreshStats { shard_replans: vec![0; n_shards], ..Default::default() };
 
     while !stop.load(Ordering::Relaxed) {
         sleep_interruptibly(cfg.check_interval, stop);
@@ -335,31 +386,55 @@ fn refresh_loop(
         // instead of re-checking unchanged data every poll (drift that
         // builds slowly still accumulates in the decayed profile)
         batches_pending = 0;
-        let drift = tv_distance(&planned, &acc_nv);
-        stats.last_drift = drift;
-        if drift <= cfg.drift_threshold {
+        let drifts = shard_drifts(&planned, &acc_nv, &shard_ids, n_shards);
+        stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
+        let any_drifted = drifts.iter().any(|&d| d > cfg.drift_threshold);
+        let drifted: Vec<usize> = if cfg.per_shard || n_shards == 1 {
+            (0..n_shards).filter(|&s| drifts[s] > cfg.drift_threshold).collect()
+        } else if any_drifted {
+            (0..n_shards).collect()
+        } else {
+            Vec::new()
+        };
+        if drifted.is_empty() {
             *stats_out.lock().unwrap() = stats.clone();
             continue;
         }
 
-        // re-plan on this thread with the planner's (lightweight) fill
-        // and hot-swap; the serving path never waits on any of this
-        let t0 = Instant::now();
-        let scale = common_scale(&acc_nv, &acc_ec);
-        let nv = quantize(&acc_nv, scale);
-        let ec = quantize(&acc_ec, scale);
-        let profile = WorkloadProfile {
-            node_visits: &nv,
-            elem_counts: &ec,
-            t_sample_ns: acc_ts,
-            t_feature_ns: acc_tf,
-        };
-        let plan = planner.plan(ds, &profile, budget);
-        stats.fill_h2d_bytes += plan.fill_ledger.h2d_bytes;
-        runtime.install(plan.snapshot);
-        stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
-        stats.replans += 1;
-        planned = normalize(&acc_nv);
+        // re-plan each drifted shard on this thread from the profile
+        // masked to the shard's own nodes, within the shard's own
+        // budget, and hot-swap only that shard; the serving path — and
+        // every *other* shard — never waits on any of this
+        for s in drifted {
+            let t0 = Instant::now();
+            // same ownership rule as the offline sharded plan: one
+            // masking implementation, shared with cache/shard.rs
+            let nv_m = mask_node_counts(&acc_nv, router, s);
+            let ec_m = mask_elem_counts(&acc_ec, &ds.csc, router, s);
+            let scale = common_scale(&nv_m, &ec_m);
+            let nv = quantize(&nv_m, scale);
+            let ec = quantize(&ec_m, scale);
+            let profile = WorkloadProfile {
+                node_visits: &nv,
+                elem_counts: &ec,
+                t_sample_ns: acc_ts,
+                t_feature_ns: acc_tf,
+            };
+            let plan = planner.plan(ds, &profile, shard_budgets[s]);
+            let install_bytes = plan.fill_ledger.h2d_bytes;
+            stats.fill_h2d_bytes += install_bytes;
+            stats.max_install_h2d_bytes = stats.max_install_h2d_bytes.max(install_bytes);
+            runtime.install_shard(s, plan.snapshot);
+            stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
+            stats.replans += 1;
+            stats.shard_replans[s] += 1;
+            // re-center this shard's drift baseline on what it now serves
+            for v in 0..n_nodes {
+                if shard_ids[v] == s as u32 {
+                    planned[v] = acc_nv[v];
+                }
+            }
+        }
         *stats_out.lock().unwrap() = stats.clone();
     }
     *stats_out.lock().unwrap() = stats;
@@ -368,9 +443,23 @@ fn refresh_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::planner::DciPlanner;
+    use crate::cache::planner::{split_budget, DciPlanner};
     use crate::cache::runtime::CacheSnapshot;
+    use crate::cache::shard::{plan_sharded, ShardRouter, ShardedRuntime};
     use crate::graph::datasets;
+    use crate::mem::CostModel;
+    use crate::sampler::{presample, Fanout};
+    use crate::util::Rng;
+
+    fn fast_cfg(threshold: f64) -> RefreshConfig {
+        RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: threshold,
+            per_shard: true,
+        }
+    }
 
     #[test]
     fn tracker_counts_and_drains() {
@@ -394,14 +483,37 @@ mod tests {
     }
 
     #[test]
-    fn tv_distance_bounds() {
-        let p = vec![0.5, 0.5, 0.0];
-        assert_eq!(tv_distance(&p, &[1.0, 1.0, 0.0]), 0.0);
-        // fully disjoint mass -> 1.0
-        let q = vec![0.0, 0.0, 7.0];
-        assert!((tv_distance(&p, &q) - 1.0).abs() < 1e-12);
-        // empty observation -> no drift signal
-        assert_eq!(tv_distance(&p, &[0.0, 0.0, 0.0]), 0.0);
+    fn single_shard_drift_is_the_global_tv_distance() {
+        let ids = vec![0u32; 3];
+        let p = [1.0, 1.0, 0.0];
+        // matched distribution → 0
+        assert_eq!(shard_drifts(&p, &[2.0, 2.0, 0.0], &ids, 1), vec![0.0]);
+        // fully disjoint mass → 1
+        let d = shard_drifts(&p, &[0.0, 0.0, 7.0], &ids, 1);
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        // empty observation → no drift signal
+        assert_eq!(shard_drifts(&p, &[0.0, 0.0, 0.0], &ids, 1), vec![0.0]);
+        // no planned mass but live traffic → 0.5 (half the mass is new)
+        let d = shard_drifts(&[0.0, 0.0, 0.0], &[3.0, 1.0, 0.0], &ids, 1);
+        assert!((d[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_is_isolated_to_the_observed_shard() {
+        // nodes 0,1 on shard 0; nodes 2,3 on shard 1
+        let ids = vec![0u32, 0, 1, 1];
+        let planned = [10.0, 0.0, 5.0, 5.0];
+        // shard 0's traffic flipped to node 1; shard 1 saw nothing
+        let observed = [0.0, 8.0, 0.0, 0.0];
+        let d = shard_drifts(&planned, &observed, &ids, 2);
+        assert!((d[0] - 1.0).abs() < 1e-12, "shard 0 fully drifted: {d:?}");
+        assert_eq!(d[1], 0.0, "unobserved shard must not drift: {d:?}");
+        // shard 1's traffic matching its plan stays quiet while shard 0
+        // drifts — per-shard normalization keeps them independent
+        let observed = [0.0, 8.0, 4.0, 4.0];
+        let d = shard_drifts(&planned, &observed, &ids, 2);
+        assert!(d[0] > 0.9);
+        assert!(d[1] < 1e-12);
     }
 
     #[test]
@@ -427,7 +539,7 @@ mod tests {
     #[test]
     fn refresher_replans_on_forced_drift() {
         let ds = Arc::new(datasets::spec("tiny").unwrap().build());
-        let runtime = Arc::new(DualCacheRuntime::new(CacheSnapshot::empty()));
+        let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
         let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
         // a baseline profile concentrated on node 0; observe node 1
         let mut planned = vec![0u32; ds.csc.n_nodes()];
@@ -437,14 +549,9 @@ mod tests {
             Arc::clone(&runtime),
             Arc::clone(&tracker),
             Box::new(DciPlanner),
-            200_000,
+            vec![200_000],
             planned,
-            RefreshConfig {
-                check_interval: Duration::from_millis(5),
-                min_batches: 1,
-                decay: 0.5,
-                drift_threshold: 0.3,
-            },
+            fast_cfg(0.3),
         );
         for _ in 0..50 {
             tracker.record_node(1);
@@ -459,6 +566,7 @@ mod tests {
         let stats = r.stop();
         assert!(stats.replans >= 1, "drift should have forced a re-plan: {stats:?}");
         assert!(stats.last_drift > 0.3);
+        assert!(stats.max_install_h2d_bytes > 0);
         assert!(runtime.swaps() >= 1);
         // the refreshed snapshot caches the observed hot node
         let snap = runtime.load();
@@ -468,25 +576,97 @@ mod tests {
     #[test]
     fn refresher_idle_without_traffic() {
         let ds = Arc::new(datasets::spec("tiny").unwrap().build());
-        let runtime = Arc::new(DualCacheRuntime::new(CacheSnapshot::empty()));
+        let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
         let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
         let r = Refresher::spawn(
             Arc::clone(&ds),
             Arc::clone(&runtime),
             Arc::clone(&tracker),
             Box::new(DciPlanner),
-            100_000,
+            vec![100_000],
             Vec::new(),
-            RefreshConfig {
-                check_interval: Duration::from_millis(2),
-                min_batches: 1,
-                decay: 0.5,
-                drift_threshold: 0.0,
-            },
+            fast_cfg(0.0),
         );
         std::thread::sleep(Duration::from_millis(30));
         let stats = r.stop();
         assert_eq!(stats.replans, 0, "no traffic, no re-plan");
         assert_eq!(runtime.swaps(), 0);
+    }
+
+    /// The tentpole invariant: traffic that drifts inside one shard
+    /// re-plans *only* that shard; every other shard keeps serving its
+    /// original epoch.
+    #[test]
+    fn refresher_replans_only_the_drifted_shard() {
+        let n_shards = 4;
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let router = ShardRouter::new(n_shards);
+        let budget = 120_000u64;
+        let budgets = split_budget(budget, n_shards);
+
+        // startup plan: a presample profile sharded across 4 devices
+        let stats0 = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            64,
+            &Fanout::parse("3,2").unwrap(),
+            4,
+            &CostModel::default(),
+            &mut Rng::new(7),
+        );
+        let profile = WorkloadProfile::from_presample(&stats0);
+        let sharded = plan_sharded(&DciPlanner, &ds, &profile, budget, &router);
+        let runtime = Arc::new(ShardedRuntime::new(
+            ShardRouter::new(n_shards),
+            sharded.plans.into_iter().map(|p| p.snapshot).collect(),
+        ));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        let r = Refresher::spawn(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker),
+            Box::new(DciPlanner),
+            budgets,
+            stats0.node_visits.clone(),
+            fast_cfg(0.3),
+        );
+
+        // drive traffic confined to shard 2's nodes, disjoint from the
+        // planned profile's hot set as far as shard 2 is concerned
+        let shard2: Vec<NodeId> = (0..ds.csc.n_nodes() as u32)
+            .filter(|&v| router.shard_of(v) == 2 && stats0.node_visits[v as usize] == 0)
+            .take(40)
+            .collect();
+        assert!(shard2.len() >= 10, "tiny must have unvisited shard-2 nodes");
+        for _ in 0..20 {
+            for &v in &shard2 {
+                tracker.record_node(v);
+            }
+        }
+        tracker.record_batch(50.0, 50.0);
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = r.stop();
+        assert!(stats.replans >= 1, "shard 2's drift must re-plan: {stats:?}");
+        assert!(stats.shard_replans[2] >= 1, "{stats:?}");
+        for s in [0usize, 1, 3] {
+            assert_eq!(
+                stats.shard_replans[s],
+                0,
+                "shard {s} saw no drift and must keep its epoch: {stats:?}"
+            );
+            assert_eq!(runtime.shard(s).swaps(), 0);
+        }
+        assert!(runtime.shard(2).swaps() >= 1);
+        assert_eq!(runtime.swap_stalls(), 0);
+        // the refreshed shard caches its new hot nodes
+        let snap = runtime.shard(2).load();
+        let feat = snap.feat.as_ref().unwrap();
+        let cached_hot = shard2.iter().filter(|&&v| feat.contains(v)).count();
+        assert!(cached_hot > 0, "re-plan must cache shard 2's new working set");
     }
 }

@@ -204,6 +204,15 @@ impl SnapshotHandle {
         Arc::clone(&self.cached)
     }
 
+    /// The handle's current snapshot *without* checking for a newer
+    /// epoch. Used by [`crate::cache::shard::ShardView`], which
+    /// refreshes every shard handle up front in its own acquire and
+    /// then reads the batch through these cached epochs.
+    #[inline]
+    pub fn peek(&self) -> &CacheSnapshot {
+        &self.cached
+    }
+
     #[cold]
     fn refresh_slow(&mut self) {
         if self.deferred_streak >= MAX_DEFERRALS {
@@ -296,8 +305,7 @@ mod tests {
                         // was installed as epoch i + 1 (initial marker
                         // 0 is epoch 1), so content and tag never tear
                         let m = s.alloc.unwrap().c_adj;
-                        assert_eq!(m + 1, s.epoch(),
-                                   "marker {m} vs epoch {}", s.epoch());
+                        assert_eq!(m + 1, s.epoch(), "marker {m} vs epoch {}", s.epoch());
                     }
                 });
             }

@@ -1,0 +1,560 @@
+//! Sharded multi-device cache snapshots.
+//!
+//! PR 2's [`DualCacheRuntime`] mirrors one full snapshot per worker —
+//! on a multi-device node that wastes `(devices − 1)×` of the
+//! aggregate cache capacity, exactly the "low practical GPU memory
+//! utilization" failure mode the paper targets. This module shards one
+//! *logical* snapshot across N simulated devices instead:
+//!
+//! - [`ShardRouter`] — the stable node-id → shard hash partition.
+//!   Every node routes to exactly one shard (total partition; the
+//!   property tests hold this), and the assignment never changes for
+//!   the life of a deployment, so a node's cached state always lives
+//!   on a known device.
+//! - [`ShardedRuntime`] — one epoch-swappable [`DualCacheRuntime`] per
+//!   shard behind the router. Each shard installs independently: a
+//!   re-plan of shard *k* hot-swaps only shard *k*'s snapshot while
+//!   the other shards keep serving their current epoch — PR 2's
+//!   never-block invariant holds *per shard*.
+//! - [`ShardedHandle`] / [`ShardView`] — the per-batch acquire path.
+//!   A handle owns one [`SnapshotHandle`] per shard; `acquire`
+//!   refreshes them all (one atomic epoch load each) and hands out a
+//!   [`ShardView`] that routes feature lookups and adjacency reads by
+//!   shard. A batch sees one snapshot per shard end to end, so a
+//!   mid-batch install on any shard cannot mix epochs within that
+//!   shard's reads.
+//! - [`plan_sharded`] — splits the Eq. (1) budget per shard with
+//!   [`split_budget`] (exact integer arithmetic, remainder to the
+//!   first shards) and plans each shard from the workload profile
+//!   *masked* to the shard's own nodes, so shard capacity is spent on
+//!   nodes the shard will actually be asked for.
+//!
+//! Sharding is transparent the same way the caches themselves are: it
+//! changes *which device* a byte is read from, never which byte — so
+//! gather results and logits are bit-identical to the unsharded
+//! runtime at any shard count (held by the property tests).
+
+use std::sync::Arc;
+
+use crate::graph::{Csc, Dataset, NodeId};
+use crate::mem::TransferLedger;
+use crate::sampler::AdjSource;
+
+use super::planner::{split_budget, CachePlan, CachePlanner, WorkloadProfile};
+use super::runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};
+
+/// Stable node-id → shard assignment (splitmix64 finalizer, then mod).
+///
+/// The hash is a pure function of the node id, so the partition is
+/// total and stable: every node maps to exactly one shard, forever.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    /// A router over `n_shards ≥ 1` shards.
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "a snapshot has at least one shard");
+        ShardRouter { n_shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The shard that owns `v`'s cached state.
+    #[inline]
+    pub fn shard_of(&self, v: NodeId) -> usize {
+        if self.n_shards == 1 {
+            return 0;
+        }
+        // splitmix64 finalizer: cheap, stable, and avalanches low bits
+        // so consecutive node ids spread across shards
+        let mut x = (v as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        (x % self.n_shards as u64) as usize
+    }
+}
+
+/// One logical snapshot sharded across N devices: a [`DualCacheRuntime`]
+/// per shard plus the router that assigns nodes to shards.
+pub struct ShardedRuntime {
+    router: ShardRouter,
+    shards: Vec<Arc<DualCacheRuntime>>,
+}
+
+impl ShardedRuntime {
+    /// Wrap per-shard initial snapshots (`snapshots.len()` must match
+    /// the router's shard count).
+    pub fn new(router: ShardRouter, snapshots: Vec<CacheSnapshot>) -> Self {
+        assert_eq!(
+            router.n_shards(),
+            snapshots.len(),
+            "one initial snapshot per shard"
+        );
+        let shards = snapshots
+            .into_iter()
+            .map(|s| Arc::new(DualCacheRuntime::new(s)))
+            .collect();
+        ShardedRuntime { router, shards }
+    }
+
+    /// The unsharded (single-device) runtime — the PR 2 shape.
+    pub fn single(snapshot: CacheSnapshot) -> Self {
+        ShardedRuntime::new(ShardRouter::new(1), vec![snapshot])
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Shard `s`'s swappable runtime (refreshers install through this).
+    pub fn shard(&self, s: usize) -> &Arc<DualCacheRuntime> {
+        &self.shards[s]
+    }
+
+    /// All per-shard runtimes (handle construction).
+    pub fn shards(&self) -> &[Arc<DualCacheRuntime>] {
+        &self.shards
+    }
+
+    /// Publish a new snapshot on shard `s` only; the other shards keep
+    /// serving their current epoch.
+    pub fn install_shard(&self, s: usize, snapshot: CacheSnapshot) -> u64 {
+        self.shards[s].install(snapshot)
+    }
+
+    /// Single-shard install (the PR 2 API). Panics when sharded — a
+    /// sharded deployment must say which shard it is replacing.
+    pub fn install(&self, snapshot: CacheSnapshot) -> u64 {
+        assert_eq!(
+            self.shards.len(),
+            1,
+            "install() is the single-shard path; use install_shard(s, ..)"
+        );
+        self.shards[0].install(snapshot)
+    }
+
+    /// Shard 0's live snapshot — the reporting/startup path for
+    /// single-shard deployments (tests and offline tools). Sharded
+    /// callers iterate [`ShardedRuntime::snapshots`] instead.
+    pub fn load(&self) -> Arc<CacheSnapshot> {
+        self.shards[0].load()
+    }
+
+    /// Every shard's live snapshot (reporting, device accounting).
+    pub fn snapshots(&self) -> Vec<Arc<CacheSnapshot>> {
+        self.shards.iter().map(|s| s.load()).collect()
+    }
+
+    /// Installs performed across all shards.
+    pub fn swaps(&self) -> u64 {
+        self.shards.iter().map(|s| s.swaps()).sum()
+    }
+
+    /// Reader stalls across all shards (0 in a healthy deployment —
+    /// the per-shard never-block invariant).
+    pub fn swap_stalls(&self) -> u64 {
+        self.shards.iter().map(|s| s.swap_stalls()).sum()
+    }
+
+    /// Benign one-batch deferrals across all shards.
+    pub fn swap_deferrals(&self) -> u64 {
+        self.shards.iter().map(|s| s.swap_deferrals()).sum()
+    }
+}
+
+/// A per-thread cursor over every shard's epochs: one
+/// [`SnapshotHandle`] per shard, refreshed together once per batch.
+pub struct ShardedHandle {
+    rt: Arc<ShardedRuntime>,
+    handles: Vec<SnapshotHandle>,
+}
+
+impl ShardedHandle {
+    pub fn new(rt: &Arc<ShardedRuntime>) -> ShardedHandle {
+        let handles = rt.shards().iter().map(SnapshotHandle::new).collect();
+        ShardedHandle { rt: Arc::clone(rt), handles }
+    }
+
+    /// The snapshots to use for the next batch: refresh every shard's
+    /// handle (one atomic epoch load each on the fast path) and hand
+    /// out the routed view. Each shard's never-block acquire semantics
+    /// are unchanged — an install-concurrent shard serves one batch on
+    /// its previous epoch instead of waiting.
+    #[inline]
+    pub fn acquire(&mut self) -> ShardView<'_> {
+        for h in &mut self.handles {
+            h.acquire();
+        }
+        ShardView { router: self.rt.router(), handles: &self.handles }
+    }
+}
+
+/// The per-batch read view over all shards: routes feature lookups and
+/// adjacency reads to the shard that owns each node.
+#[derive(Clone, Copy)]
+pub struct ShardView<'a> {
+    router: &'a ShardRouter,
+    handles: &'a [SnapshotHandle],
+}
+
+impl<'a> ShardView<'a> {
+    /// A view over externally managed handles (stage-level tests).
+    pub fn over(router: &'a ShardRouter, handles: &'a [SnapshotHandle]) -> ShardView<'a> {
+        assert_eq!(router.n_shards(), handles.len());
+        ShardView { router, handles }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    #[inline]
+    pub fn shard_of(&self, v: NodeId) -> usize {
+        self.router.shard_of(v)
+    }
+
+    /// Shard `s`'s snapshot as acquired for this batch.
+    pub fn snapshot(&self, s: usize) -> &'a CacheSnapshot {
+        self.handles[s].peek()
+    }
+
+    /// Does any shard carry a feature cache? (`false` = the cacheless
+    /// DGL/RAIN gather path.)
+    pub fn has_feat_cache(&self) -> bool {
+        self.handles.iter().any(|h| h.peek().feat.is_some())
+    }
+
+    /// Routed feature lookup: `v`'s row from the shard that owns it.
+    #[inline]
+    pub fn feat_lookup(&self, v: NodeId) -> Option<&'a [f32]> {
+        let s = self.router.shard_of(v);
+        self.handles[s].peek().feat.as_ref()?.lookup(v)
+    }
+
+    /// Routed adjacency reads over `csc` (misses fall back to UVA).
+    pub fn adj_source<'b>(&'b self, csc: &'b Csc) -> RoutedAdj<'b> {
+        RoutedAdj { router: self.router, handles: self.handles, csc }
+    }
+
+    /// Highest epoch across the shards this batch reads
+    /// (observability: which installs the batch has seen).
+    pub fn max_epoch(&self) -> u64 {
+        self.handles.iter().map(|h| h.peek().epoch()).max().unwrap_or(0)
+    }
+
+    /// Device bytes across all shards' snapshots.
+    pub fn bytes_used(&self) -> u64 {
+        self.handles.iter().map(|h| h.peek().bytes_used()).sum()
+    }
+}
+
+/// Sampler-facing adjacency view that routes each node's reads to the
+/// shard that owns it; shards without an adjacency cache serve their
+/// nodes over UVA (per-element miss), exactly like the unsharded
+/// cacheless path.
+pub struct RoutedAdj<'a> {
+    router: &'a ShardRouter,
+    handles: &'a [SnapshotHandle],
+    csc: &'a Csc,
+}
+
+impl<'a> AdjSource for RoutedAdj<'a> {
+    #[inline]
+    fn degree(&self, v: NodeId) -> usize {
+        self.csc.degree(v)
+    }
+
+    #[inline]
+    fn neighbor_at(&self, v: NodeId, pos: usize, ledger: &mut TransferLedger) -> NodeId {
+        let s = self.router.shard_of(v);
+        match &self.handles[s].peek().adj {
+            Some(cache) => cache.source(self.csc).neighbor_at(v, pos, ledger),
+            None => {
+                ledger.miss(std::mem::size_of::<NodeId>() as u64, 1);
+                self.csc.neighbors(v)[pos]
+            }
+        }
+    }
+}
+
+/// A sharded plan: one [`CachePlan`] per shard plus the exact-integer
+/// budget split they were planned under.
+pub struct ShardedPlan {
+    pub plans: Vec<CachePlan>,
+    pub budgets: Vec<u64>,
+}
+
+impl ShardedPlan {
+    /// Total fill upload across the shards.
+    pub fn fill_h2d_bytes(&self) -> u64 {
+        self.plans.iter().map(|p| p.fill_ledger.h2d_bytes).sum()
+    }
+}
+
+/// `counts` with every node outside `shard` zeroed — the feature-side
+/// input of a per-shard plan. Generic over the count type because the
+/// offline path masks raw `u32` profiles while the refresh loop masks
+/// its decayed `f64` accumulators — one implementation of the
+/// ownership rule, not two that can drift.
+pub fn mask_node_counts<T: Copy + Default>(
+    counts: &[T],
+    router: &ShardRouter,
+    shard: usize,
+) -> Vec<T> {
+    counts
+        .iter()
+        .enumerate()
+        .map(|(v, &c)| {
+            if router.shard_of(v as NodeId) == shard {
+                c
+            } else {
+                T::default()
+            }
+        })
+        .collect()
+}
+
+/// `counts` (parallel to `csc.row_index`) with every element whose
+/// *column node* lives outside `shard` zeroed — the adjacency-side
+/// input of a per-shard plan (elements belong to the shard of the node
+/// whose neighbor list they sit in, because that is how sampling
+/// routes them). Generic for the same reason as [`mask_node_counts`].
+pub fn mask_elem_counts<T: Copy + Default>(
+    counts: &[T],
+    csc: &Csc,
+    router: &ShardRouter,
+    shard: usize,
+) -> Vec<T> {
+    let mut out = vec![T::default(); counts.len()];
+    for v in 0..csc.n_nodes() {
+        if router.shard_of(v as NodeId) == shard {
+            let span = csc.col_ptr[v] as usize..csc.col_ptr[v + 1] as usize;
+            out[span.clone()].copy_from_slice(&counts[span]);
+        }
+    }
+    out
+}
+
+/// Split the Eq. (1) budget per shard ([`split_budget`]) and run the
+/// planner once per shard over the shard-masked profile. With one
+/// shard this is exactly `planner.plan(..)` — no masking, bit-for-bit
+/// the PR 2 behavior.
+pub fn plan_sharded(
+    planner: &dyn CachePlanner,
+    ds: &Dataset,
+    profile: &WorkloadProfile<'_>,
+    total_budget: u64,
+    router: &ShardRouter,
+) -> ShardedPlan {
+    let n = router.n_shards();
+    let budgets = split_budget(total_budget, n);
+    if n == 1 {
+        return ShardedPlan { plans: vec![planner.plan(ds, profile, total_budget)], budgets };
+    }
+    let mut plans = Vec::with_capacity(n);
+    for (s, &b) in budgets.iter().enumerate() {
+        let nv = mask_node_counts(profile.node_visits, router, s);
+        let ec = mask_elem_counts(profile.elem_counts, &ds.csc, router, s);
+        let shard_profile = WorkloadProfile {
+            node_visits: &nv,
+            elem_counts: &ec,
+            t_sample_ns: profile.t_sample_ns,
+            t_feature_ns: profile.t_feature_ns,
+        };
+        plans.push(planner.plan(ds, &shard_profile, b));
+    }
+    ShardedPlan { plans, budgets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::alloc::CacheAllocation;
+    use crate::cache::feat_cache::FeatCache;
+    use crate::cache::planner::DciPlanner;
+    use crate::graph::{datasets, FeatureStore};
+    use crate::mem::CostModel;
+    use crate::sampler::{presample, Fanout};
+    use crate::util::Rng;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        for n in [1usize, 2, 3, 4, 7] {
+            let r = ShardRouter::new(n);
+            for v in 0..10_000u32 {
+                let s = r.shard_of(v);
+                assert!(s < n, "node {v} routed to shard {s} of {n}");
+                assert_eq!(s, r.shard_of(v), "assignment must be stable");
+            }
+        }
+    }
+
+    #[test]
+    fn routing_spreads_nodes() {
+        let n = 4;
+        let r = ShardRouter::new(n);
+        let mut per_shard = vec![0usize; n];
+        for v in 0..8_000u32 {
+            per_shard[r.shard_of(v)] += 1;
+        }
+        for (s, &c) in per_shard.iter().enumerate() {
+            assert!(c > 1_000, "shard {s} got only {c} of 8000 nodes");
+        }
+    }
+
+    #[test]
+    fn node_masks_partition_counts() {
+        let r = ShardRouter::new(3);
+        let counts: Vec<u32> = (0..500).map(|v| v as u32 + 1).collect();
+        let masks: Vec<Vec<u32>> =
+            (0..3).map(|s| mask_node_counts(&counts, &r, s)).collect();
+        for v in 0..counts.len() {
+            let nonzero = masks.iter().filter(|m| m[v] != 0).count();
+            assert_eq!(nonzero, 1, "node {v} must live in exactly one shard mask");
+            let s = r.shard_of(v as NodeId);
+            assert_eq!(masks[s][v], counts[v]);
+        }
+    }
+
+    #[test]
+    fn elem_masks_partition_by_column_node() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let r = ShardRouter::new(4);
+        let counts: Vec<u32> = (0..ds.csc.n_edges()).map(|e| e as u32 % 7 + 1).collect();
+        let masks: Vec<Vec<u32>> =
+            (0..4).map(|s| mask_elem_counts(&counts, &ds.csc, &r, s)).collect();
+        for v in 0..ds.csc.n_nodes() {
+            let s = r.shard_of(v as NodeId);
+            let span = ds.csc.col_ptr[v] as usize..ds.csc.col_ptr[v + 1] as usize;
+            for e in span {
+                for (m, mask) in masks.iter().enumerate() {
+                    let want = if m == s { counts[e] } else { 0 };
+                    assert_eq!(mask[e], want, "elem {e} of node {v} in mask {m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_plan_conserves_budget_and_masks_fills() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let stats = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            64,
+            &Fanout::parse("3,2").unwrap(),
+            6,
+            &CostModel::default(),
+            &mut Rng::new(11),
+        );
+        let profile = WorkloadProfile::from_presample(&stats);
+        let router = ShardRouter::new(4);
+        let total = 100_000u64;
+        let sharded = plan_sharded(&DciPlanner, &ds, &profile, total, &router);
+        assert_eq!(sharded.plans.len(), 4);
+        assert_eq!(sharded.budgets.iter().sum::<u64>(), total);
+        for (s, plan) in sharded.plans.iter().enumerate() {
+            let split = plan.snapshot.alloc.unwrap();
+            assert_eq!(split.total(), sharded.budgets[s], "shard {s} split");
+            // the masked profile steers first-priority capacity to the
+            // shard's own visited nodes (spill slots may then take
+            // zero-count nodes from anywhere — routing never reads them
+            // cross-shard, so they are dead weight, not corruption)
+            let feat = plan.snapshot.feat.as_ref().unwrap();
+            let in_shard_hot = (0..ds.csc.n_nodes() as u32)
+                .filter(|&v| {
+                    feat.contains(v)
+                        && router.shard_of(v) == s
+                        && stats.node_visits[v as usize] > 0
+                })
+                .count();
+            assert!(in_shard_hot > 0, "shard {s} cached none of its own hot nodes");
+        }
+    }
+
+    fn marker(c_adj: u64) -> CacheSnapshot {
+        CacheSnapshot::new(None, None, Some(CacheAllocation { c_adj, c_feat: 0 }))
+    }
+
+    #[test]
+    fn per_shard_installs_leave_other_shards_serving() {
+        let rt = Arc::new(ShardedRuntime::new(
+            ShardRouter::new(3),
+            vec![marker(0), marker(1), marker(2)],
+        ));
+        let mut h = ShardedHandle::new(&rt);
+        let before = h.acquire();
+        assert_eq!(before.snapshot(1).alloc.unwrap().c_adj, 1);
+        assert_eq!(before.max_epoch(), 1);
+
+        rt.install_shard(1, marker(7));
+        let after = h.acquire();
+        assert_eq!(after.snapshot(0).alloc.unwrap().c_adj, 0, "shard 0 untouched");
+        assert_eq!(after.snapshot(1).alloc.unwrap().c_adj, 7, "shard 1 swapped");
+        assert_eq!(after.snapshot(2).alloc.unwrap().c_adj, 2, "shard 2 untouched");
+        assert_eq!(after.snapshot(0).epoch(), 1);
+        assert_eq!(after.snapshot(1).epoch(), 2);
+        assert_eq!(after.max_epoch(), 2);
+        assert_eq!(rt.swaps(), 1);
+        assert_eq!(rt.swap_stalls(), 0);
+    }
+
+    #[test]
+    fn routed_feat_lookup_matches_owning_shard() {
+        let fs = FeatureStore::generate(64, 4, &mut Rng::new(3));
+        let router = ShardRouter::new(2);
+        // shard 0 caches its own nodes, shard 1 caches nothing
+        let visits: Vec<u32> =
+            (0..64).map(|v| u32::from(router.shard_of(v as NodeId) == 0)).collect();
+        let cap = 64 * (fs.row_bytes() + 16);
+        let (feat0, _) = FeatCache::fill(&fs, &mask_node_counts(&visits, &router, 0), cap);
+        let rt = Arc::new(ShardedRuntime::new(
+            ShardRouter::new(2),
+            vec![
+                CacheSnapshot::new(None, Some(feat0), None),
+                CacheSnapshot::empty(),
+            ],
+        ));
+        let mut h = ShardedHandle::new(&rt);
+        let view = h.acquire();
+        assert!(view.has_feat_cache());
+        for v in 0..64u32 {
+            match view.feat_lookup(v) {
+                Some(row) => {
+                    assert_eq!(view.shard_of(v), 0, "row for {v} served by wrong shard");
+                    assert_eq!(row, fs.row(v));
+                }
+                None => {
+                    // shard-1 nodes miss even if shard 0 spilled them in:
+                    // routing only ever consults the owning shard
+                    if view.shard_of(v) == 0 {
+                        // shard 0 had capacity for all of its nodes
+                        assert_eq!(visits[v as usize], 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_runtime_is_the_pr2_shape() {
+        let rt = Arc::new(ShardedRuntime::single(marker(5)));
+        assert_eq!(rt.n_shards(), 1);
+        assert_eq!(rt.load().alloc.unwrap().c_adj, 5);
+        let e = rt.install(marker(6));
+        assert_eq!(e, 2);
+        assert_eq!(rt.swaps(), 1);
+        let mut h = ShardedHandle::new(&rt);
+        assert_eq!(h.acquire().snapshot(0).alloc.unwrap().c_adj, 6);
+    }
+}

@@ -74,8 +74,13 @@ impl SystemKind {
     }
 
     pub fn all() -> [SystemKind; 5] {
-        [SystemKind::Dgl, SystemKind::Sci, SystemKind::Dci, SystemKind::Rain,
-         SystemKind::Ducati]
+        [
+            SystemKind::Dgl,
+            SystemKind::Sci,
+            SystemKind::Dci,
+            SystemKind::Rain,
+            SystemKind::Ducati,
+        ]
     }
 }
 
@@ -125,6 +130,12 @@ pub struct RunConfig {
     /// Sampling worker threads (the pipeline's sampling pool and the
     /// pre-sampling profiler). Results are bit-identical at any value.
     pub sample_threads: usize,
+    /// Simulated devices one logical cache snapshot is sharded across
+    /// (1 = the single-device runtime). The global budget splits per
+    /// shard in exact integer arithmetic; gathers and sampling route
+    /// by a stable node-id hash. Results are bit-identical at any
+    /// shard count.
+    pub shards: usize,
     pub compute: ComputeKind,
     /// Online cache-refresh knobs for the serving path (`None` =
     /// caches stay frozen at their preprocessing-time plan). Only
@@ -154,6 +165,7 @@ impl Default for RunConfig {
             n_presample: 8,
             pipeline_depth: 1,
             sample_threads: 1,
+            shards: 1,
             compute: ComputeKind::Skip,
             refresh: None,
             max_batches: None,
@@ -209,6 +221,25 @@ impl RunConfig {
                     if self.sample_threads == 0 {
                         bail!("sample-threads must be positive");
                     }
+                }
+                "shards" => {
+                    self.shards = value.parse().context("shards")?;
+                    if self.shards == 0 {
+                        bail!("shards must be positive (1 = single device)");
+                    }
+                    if self.shards > 64 {
+                        bail!("shards={} is beyond any modeled node (max 64)", self.shards);
+                    }
+                }
+                "shard-refresh" => {
+                    let per_shard = match value {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => bail!("shard-refresh={other:?} (on|off)"),
+                    };
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .per_shard = per_shard;
                 }
                 "compute" => self.compute = ComputeKind::parse(value)?,
                 "refresh" => match value {
@@ -268,11 +299,15 @@ impl RunConfig {
                 self.pipeline_depth, self.sample_threads
             ));
         }
+        if self.shards > 1 {
+            s.push_str(&format!(" shards={}", self.shards));
+        }
         if let Some(r) = &self.refresh {
             s.push_str(&format!(
-                " refresh(check={}ms drift>{})",
+                " refresh(check={}ms drift>{}{})",
                 r.check_interval.as_millis(),
-                r.drift_threshold
+                r.drift_threshold,
+                if r.per_shard { "" } else { " full" }
             ));
         }
         s
@@ -331,6 +366,32 @@ mod tests {
     fn budget_auto() {
         let cfg = RunConfig::from_args(&args(&["budget=auto"])).unwrap();
         assert_eq!(cfg.budget, None);
+    }
+
+    #[test]
+    fn shard_knobs() {
+        // default: single device, per-shard refresh once enabled
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 1);
+        let cfg = RunConfig::from_args(&args(&["shards=4"])).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert!(cfg.summary().contains("shards=4"));
+        assert!(cfg.refresh.is_none(), "shards alone must not arm refresh");
+        // shard-refresh is a refresh knob: it auto-enables the loop
+        let cfg =
+            RunConfig::from_args(&args(&["shards=2", "shard-refresh=off"])).unwrap();
+        let r = cfg.refresh.unwrap();
+        assert!(!r.per_shard);
+        assert!(cfg.summary().contains("full"));
+        let cfg = RunConfig::from_args(&args(&["refresh=on"])).unwrap();
+        assert!(cfg.refresh.unwrap().per_shard, "per-shard is the default");
+        let cfg =
+            RunConfig::from_args(&args(&["shard-refresh=off", "shard-refresh=on"]))
+                .unwrap();
+        assert!(cfg.refresh.unwrap().per_shard);
+        assert!(RunConfig::from_args(&args(&["shards=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["shards=65"])).is_err());
+        assert!(RunConfig::from_args(&args(&["shard-refresh=maybe"])).is_err());
     }
 
     #[test]

@@ -162,7 +162,9 @@ fn worker_loop(
     let mut engine = InferenceEngine::prepare(ds.as_ref(), run_cfg)?;
 
     // online refresh: tracker on the serving path, re-planner on a
-    // background thread, per worker (cacheless systems skip it)
+    // background thread, per worker (cacheless systems skip it). With
+    // a sharded runtime the refresher detects drift per shard and
+    // hot-swaps only the drifted shards, each within its own budget.
     let mut refresher: Option<Refresher> = None;
     if let Some(rcfg) = refresh_cfg {
         if let Some(planner) = planner_for(system) {
@@ -182,7 +184,7 @@ fn worker_loop(
                 engine.runtime(),
                 tracker,
                 planner,
-                engine.prepared.cache_budget,
+                engine.prepared.shard_budgets.clone(),
                 baseline,
                 rcfg,
             ));
@@ -227,8 +229,10 @@ fn serve_requests(
         let msg = rx.recv_timeout(timeout);
         let flushed: Option<PendingBatch> = match msg {
             Ok(req) => {
-                queued.fetch_sub(req.nodes.len().min(queued.load(Ordering::Relaxed)),
-                                 Ordering::Relaxed);
+                queued.fetch_sub(
+                    req.nodes.len().min(queued.load(Ordering::Relaxed)),
+                    Ordering::Relaxed,
+                );
                 batcher.push(req)
             }
             Err(mpsc::RecvTimeoutError::Timeout) => batcher.poll_deadline(Instant::now()),
@@ -377,6 +381,7 @@ mod tests {
             min_batches: 1,
             decay: 0.5,
             drift_threshold: -1.0,
+            per_shard: true,
         });
         let server = Server::start(
             Arc::clone(&ds),
@@ -411,5 +416,50 @@ mod tests {
         assert!(m.drift_checks >= m.refreshes);
         assert_eq!(m.swap_stalls, 0, "serving must never block on a swap");
         assert!(m.cache.refresh.h2d_bytes > 0, "refills upload features");
+    }
+
+    #[test]
+    fn sharded_worker_serves_and_refreshes_per_shard() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let mut cfg = serving_cfg();
+        cfg.shards = 2;
+        cfg.refresh = Some(RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: 0.05,
+            per_shard: true,
+        });
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        for round in 0..6 {
+            let mut rxs = Vec::new();
+            for i in 0..4 {
+                let at = (round * 4 + i) % (ds.test_nodes.len() - 4);
+                rxs.push(server.submit(ds.test_nodes[at..at + 4].to_vec()).unwrap());
+            }
+            for rx in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                let logits = resp.logits.expect("sharded gather returns logits");
+                assert!(logits.iter().all(|v| v.is_finite()));
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert_eq!(m.requests, 24);
+        assert_eq!(m.swap_stalls, 0, "no shard may ever block serving");
+        assert!(m.cache.feature.hits + m.cache.feature.misses > 0);
     }
 }

@@ -23,11 +23,11 @@ use anyhow::{Context, Result};
 
 use crate::baselines::{self, PreparedSystem};
 use crate::cache::refresh::AccessTracker;
-use crate::cache::runtime::{DualCacheRuntime, SnapshotHandle};
+use crate::cache::shard::{ShardedHandle, ShardedRuntime};
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{datasets, Dataset, NodeId};
-use crate::mem::{DeviceMemory, PAPER_RESERVE_BYTES};
+use crate::mem::{DeviceGroup, DeviceMemory, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
 use crate::sampler::{seed_batches, SamplerPool};
 use crate::util::Rng;
@@ -160,7 +160,9 @@ pub struct InferenceEngine<'d> {
     pub ds: &'d Dataset,
     pub cfg: RunConfig,
     pub prepared: PreparedSystem,
-    pub device: DeviceMemory,
+    /// One simulated device per cache shard; each shard's snapshot is
+    /// claimed against the device that holds it.
+    pub device: DeviceGroup,
     compute: Compute,
     /// Shared sampler scratch: serial runs, pipeline workers, and
     /// served requests all check samplers out of here instead of
@@ -170,27 +172,43 @@ pub struct InferenceEngine<'d> {
     served: u64,
     /// Reused gather buffer for the serving path.
     x_buf: Vec<f32>,
-    /// This thread's cursor over the runtime's cache epochs (serial
+    /// This thread's cursor over every shard's cache epochs (serial
     /// loop + serving path; pipeline workers make their own).
-    snap: SnapshotHandle,
+    snap: ShardedHandle,
     /// Serving-time access counts for the online refresh loop
     /// (`None` = untracked: offline runs, refresh disabled).
     tracker: Option<Arc<AccessTracker>>,
 }
 
+/// The per-device prototype arena `cfg` asks for (each shard of a
+/// multi-device node gets its own copy).
+fn proto_device(ds: &Dataset, cfg: &RunConfig) -> DeviceMemory {
+    match cfg.device_capacity {
+        Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
+        None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
+    }
+}
+
+/// Claim each shard's snapshot against its own device.
+fn claim_shards(device: &mut DeviceGroup, prepared: &PreparedSystem) -> Result<()> {
+    for (i, snap) in prepared.runtime.snapshots().iter().enumerate() {
+        device.alloc(i, snap.bytes_used()).with_context(|| {
+            format!("shard {i} cache fill exceeds its simulated device memory")
+        })?;
+    }
+    Ok(())
+}
+
 impl<'d> InferenceEngine<'d> {
-    /// Build the device, run the system's preprocessing, claim cache
-    /// memory, and construct the compute backend.
+    /// Build the devices (one per shard), run the system's
+    /// preprocessing, claim each shard's cache memory on its own
+    /// device, and construct the compute backend.
     pub fn prepare(ds: &'d Dataset, cfg: RunConfig) -> Result<InferenceEngine<'d>> {
-        let mut device = match cfg.device_capacity {
-            Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
-            None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
-        };
+        let proto = proto_device(ds, &cfg);
         let mut rng = Rng::new(cfg.seed);
-        let prepared = baselines::prepare(ds, &cfg, &device, &cfg.cost, &mut rng)?;
-        device
-            .alloc(prepared.cache_bytes())
-            .context("cache fill exceeds simulated device memory")?;
+        let prepared = baselines::prepare(ds, &cfg, &proto, &cfg.cost, &mut rng)?;
+        let mut device = DeviceGroup::replicate(&proto, prepared.runtime.n_shards());
+        claim_shards(&mut device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
             cfg.model,
@@ -200,10 +218,18 @@ impl<'d> InferenceEngine<'d> {
             &cfg.artifacts_dir,
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
-        let snap = SnapshotHandle::new(&prepared.runtime);
+        let snap = ShardedHandle::new(&prepared.runtime);
         Ok(InferenceEngine {
-            ds, cfg, prepared, device, compute, pool,
-            served: 0, x_buf: Vec::new(), snap, tracker: None,
+            ds,
+            cfg,
+            prepared,
+            device,
+            compute,
+            pool,
+            served: 0,
+            x_buf: Vec::new(),
+            snap,
+            tracker: None,
         })
     }
 
@@ -214,13 +240,9 @@ impl<'d> InferenceEngine<'d> {
         cfg: RunConfig,
         prepared: PreparedSystem,
     ) -> Result<InferenceEngine<'d>> {
-        let mut device = match cfg.device_capacity {
-            Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
-            None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
-        };
-        device
-            .alloc(prepared.cache_bytes())
-            .context("cache fill exceeds simulated device memory")?;
+        let proto = proto_device(ds, &cfg);
+        let mut device = DeviceGroup::replicate(&proto, prepared.runtime.n_shards());
+        claim_shards(&mut device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
             cfg.model,
@@ -230,16 +252,24 @@ impl<'d> InferenceEngine<'d> {
             &cfg.artifacts_dir,
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
-        let snap = SnapshotHandle::new(&prepared.runtime);
+        let snap = ShardedHandle::new(&prepared.runtime);
         Ok(InferenceEngine {
-            ds, cfg, prepared, device, compute, pool,
-            served: 0, x_buf: Vec::new(), snap, tracker: None,
+            ds,
+            cfg,
+            prepared,
+            device,
+            compute,
+            pool,
+            served: 0,
+            x_buf: Vec::new(),
+            snap,
+            tracker: None,
         })
     }
 
-    /// The engine's swappable cache runtime — share it with a
-    /// [`crate::cache::Refresher`] to re-plan online.
-    pub fn runtime(&self) -> Arc<DualCacheRuntime> {
+    /// The engine's swappable (possibly sharded) cache runtime — share
+    /// it with a [`crate::cache::Refresher`] to re-plan online.
+    pub fn runtime(&self) -> Arc<ShardedRuntime> {
         Arc::clone(&self.prepared.runtime)
     }
 
@@ -294,10 +324,11 @@ impl<'d> InferenceEngine<'d> {
         // enable cross-batch reuse (the paper's Table V observes exactly
         // this: a 52.96 GB allocation attempt on Ogbn-papers100M ≈
         // 111M × 128 × 4 B). If it does not fit, RAIN fails up front.
+        // (RAIN is never sharded, so the claim lands on device 0.)
         let mut rain_claim = 0u64;
         if self.prepared.inter_batch_reuse {
             let need = self.ds.features.bytes_total();
-            if let Err(e) = self.device.alloc_unreserved(need) {
+            if let Err(e) = self.device.alloc_unreserved(0, need) {
                 report.oom = Some(e.to_string());
                 return Ok(report);
             }
@@ -313,7 +344,7 @@ impl<'d> InferenceEngine<'d> {
         report.run_wall_ns = run0.elapsed().as_nanos() as f64;
 
         // release RAIN's staged feature tensor
-        self.device.free(rain_claim);
+        self.device.free(0, rain_claim);
         result?;
         Ok(report)
     }
@@ -334,21 +365,33 @@ impl<'d> InferenceEngine<'d> {
         let dim = self.ds.features.dim();
 
         for (bi, seeds) in batches.iter().take(n).enumerate() {
-            // one snapshot per batch: both stages of a batch see the
-            // same cache epoch even if a refresh lands mid-batch
+            // one snapshot per shard per batch: both stages of a batch
+            // see the same cache epochs even if a refresh lands mid-batch
             let snap = self.snap.acquire();
 
             // ---- stage 1: sampling -------------------------------------
             let sb = stages::sample_stage(
-                self.ds, snap, &mut sampler, seeds, bi, self.cfg.seed, None,
+                self.ds,
+                &snap,
+                &mut sampler,
+                seeds,
+                bi,
+                self.cfg.seed,
+                None,
             );
             report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&self.cfg.cost));
             report.stats.sample.merge(&sb.ledger);
 
             // ---- stage 2: feature loading ------------------------------
             let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
-                self.ds, snap, self.prepared.inter_batch_reuse, &self.cfg.cost,
-                &sb.mb, &mut prev_inputs, &mut x, None,
+                self.ds,
+                &snap,
+                self.prepared.inter_batch_reuse,
+                &self.cfg.cost,
+                &sb.mb,
+                &mut prev_inputs,
+                &mut x,
+                None,
             );
             report.loaded_nodes += n_inputs as u64;
             report.feature.add(f_wall, f_ledger.modeled_ns(&self.cfg.cost));
@@ -356,7 +399,12 @@ impl<'d> InferenceEngine<'d> {
 
             // ---- stage 3: computation ----------------------------------
             let cb = match stages::compute_stage(
-                &mut self.compute, &self.cfg, self.ds.spec.classes, dim, &sb.mb, &x,
+                &mut self.compute,
+                &self.cfg,
+                self.ds.spec.classes,
+                dim,
+                &sb.mb,
+                &x,
             ) {
                 Ok(cb) => cb,
                 Err(e) => {
@@ -396,7 +444,8 @@ pub struct BatchOutput {
     /// The batch's transfer ledgers (live hit-ratio reporting and the
     /// refresh loop's drift telemetry).
     pub stats: CacheStats,
-    /// Cache epoch the batch was served under (observability).
+    /// Highest cache epoch across the shards the batch was served
+    /// under (observability).
     pub cache_epoch: u64,
 }
 
@@ -415,17 +464,24 @@ impl<'d> InferenceEngine<'d> {
         let request = self.served as usize;
         self.served += 1;
 
-        // one snapshot for the whole request; a concurrent refresh
-        // install is picked up by the *next* request, never mid-batch
+        // one snapshot per shard for the whole request; a concurrent
+        // refresh install is picked up by the *next* request, never
+        // mid-batch
         let tracker = self.tracker.clone();
+        let mut x = std::mem::take(&mut self.x_buf);
+        let mut sampler = self.pool.checkout();
         let snap = self.snap.acquire();
-        let cache_epoch = snap.epoch();
+        let cache_epoch = snap.max_epoch();
 
         // sample
-        let mut sampler = self.pool.checkout();
         let sb = stages::sample_stage(
-            self.ds, snap, &mut sampler, seeds, request,
-            self.cfg.seed ^ SERVE_STREAM_XOR, tracker.as_deref(),
+            self.ds,
+            &snap,
+            &mut sampler,
+            seeds,
+            request,
+            self.cfg.seed ^ SERVE_STREAM_XOR,
+            tracker.as_deref(),
         );
         self.pool.checkin(sampler);
         let sample = StageTimes {
@@ -435,10 +491,15 @@ impl<'d> InferenceEngine<'d> {
 
         // gather
         let mut no_prev: HashSet<NodeId> = HashSet::new();
-        let mut x = std::mem::take(&mut self.x_buf);
         let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
-            self.ds, snap, self.prepared.inter_batch_reuse, &self.cfg.cost,
-            &sb.mb, &mut no_prev, &mut x, tracker.as_deref(),
+            self.ds,
+            &snap,
+            self.prepared.inter_batch_reuse,
+            &self.cfg.cost,
+            &sb.mb,
+            &mut no_prev,
+            &mut x,
+            tracker.as_deref(),
         );
         let feature = StageTimes {
             wall_ns: f_wall,
@@ -456,8 +517,12 @@ impl<'d> InferenceEngine<'d> {
 
         // compute (restore the gather buffer before propagating errors)
         let cb = stages::compute_stage(
-            &mut self.compute, &self.cfg, self.ds.spec.classes, self.ds.features.dim(),
-            &sb.mb, &x,
+            &mut self.compute,
+            &self.cfg,
+            self.ds.spec.classes,
+            self.ds.features.dim(),
+            &sb.mb,
+            &x,
         );
         self.x_buf = x;
         let cb = cb?;
@@ -541,8 +606,12 @@ mod tests {
         assert_eq!(sci.stats.sample.hits, 0, "SCI has no adjacency cache");
         let m = |r: &InferenceReport| r.sample.modeled_ns + r.feature.modeled_ns;
         assert!(m(&sci) < m(&dgl), "SCI {:.0} beats DGL {:.0}", m(&sci), m(&dgl));
-        assert!(m(&dci) < m(&sci),
-                "dual cache {:.0} beats single cache {:.0}", m(&dci), m(&sci));
+        assert!(
+            m(&dci) < m(&sci),
+            "dual cache {:.0} beats single cache {:.0}",
+            m(&dci),
+            m(&sci)
+        );
     }
 
     #[test]
@@ -574,8 +643,12 @@ mod tests {
         // 8x profiling request is capped by the 15 available batches,
         // so the honest ratio floor here is ~1.5x (full-size benches
         // show the paper's 5-10x)
-        assert!(ducati.preprocess_ns > 1.4 * dci.preprocess_ns,
-                "DUCATI {:.0} vs DCI {:.0}", ducati.preprocess_ns, dci.preprocess_ns);
+        assert!(
+            ducati.preprocess_ns > 1.4 * dci.preprocess_ns,
+            "DUCATI {:.0} vs DCI {:.0}",
+            ducati.preprocess_ns,
+            dci.preprocess_ns
+        );
     }
 
     #[test]
@@ -624,6 +697,40 @@ mod tests {
         assert_eq!(serial.stats.feature.hits, piped.stats.feature.hits);
         assert_eq!(serial.stats.feature.misses, piped.stats.feature.misses);
         assert_eq!(serial.n_batches, piped.n_batches);
+    }
+
+    #[test]
+    fn sharded_run_matches_unsharded_smoke() {
+        // the full property matrix lives in tests/properties.rs; this
+        // is the fast in-crate guard that shard routing is transparent
+        let ds = datasets::spec("tiny").unwrap().build();
+        let mut cfg = tiny_cfg(SystemKind::Dci);
+        cfg.compute = ComputeKind::Reference;
+        cfg.hidden = 16;
+        let solo = InferenceEngine::prepare(&ds, cfg.clone()).unwrap().run().unwrap();
+        cfg.shards = 4;
+        let mut engine = InferenceEngine::prepare(&ds, cfg).unwrap();
+        assert_eq!(engine.prepared.runtime.n_shards(), 4);
+        assert_eq!(engine.device.n_devices(), 4);
+        let sharded = engine.run().unwrap();
+        // bit-identical results: sharding changes which device serves a
+        // byte, never which byte
+        assert_eq!(solo.logits_checksum, sharded.logits_checksum);
+        assert_eq!(solo.loaded_nodes, sharded.loaded_nodes);
+        assert_eq!(solo.n_batches, sharded.n_batches);
+        // access totals match too (hit/miss split may differ: per-shard
+        // budgets carve the same global budget differently)
+        assert_eq!(
+            solo.stats.feature.hits + solo.stats.feature.misses,
+            sharded.stats.feature.hits + sharded.stats.feature.misses,
+        );
+        assert_eq!(
+            solo.stats.sample.hits + solo.stats.sample.misses,
+            sharded.stats.sample.hits + sharded.stats.sample.misses,
+        );
+        // the shard budgets sum back to the global budget
+        assert_eq!(engine.prepared.shard_budgets.iter().sum::<u64>(), 300_000);
+        assert_eq!(engine.prepared.alloc().unwrap().total(), 300_000);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use std::sync::{mpsc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::cache::runtime::SnapshotHandle;
+use crate::cache::shard::ShardedHandle;
 use crate::graph::NodeId;
 use crate::mem::TransferLedger;
 
@@ -103,9 +103,10 @@ pub(super) fn run_pipelined(
             let tickets = &tickets;
             scope.spawn(move || {
                 let mut sampler = pool.checkout();
-                // each worker cursors the cache epochs independently;
+                // each worker cursors every shard's epochs independently;
                 // acquire is per batch, so one batch never mixes epochs
-                let mut snap = SnapshotHandle::new(runtime);
+                // within a shard
+                let mut snap = ShardedHandle::new(runtime);
                 loop {
                     // Err = ticket sender dropped = gather unwound
                     if tickets.lock().unwrap().recv().is_err() {
@@ -115,8 +116,14 @@ pub(super) fn run_pipelined(
                     if bi >= n {
                         break;
                     }
+                    let view = snap.acquire();
                     let sb = stages::sample_stage(
-                        ds, snap.acquire(), &mut sampler, batches[bi], bi, cfg.seed,
+                        ds,
+                        &view,
+                        &mut sampler,
+                        batches[bi],
+                        bi,
+                        cfg.seed,
                         None,
                     );
                     if s_tx.send(sb).is_err() {
@@ -137,15 +144,22 @@ pub(super) fn run_pipelined(
             let mut reorder: HashMap<usize, SampledBatch> = HashMap::new();
             let mut want = 0usize;
             let mut prev_inputs: HashSet<NodeId> = HashSet::new();
-            let mut snap = SnapshotHandle::new(runtime);
+            let mut snap = ShardedHandle::new(runtime);
             for sb in s_rx {
                 reorder.insert(sb.index, sb);
                 while let Some(sb) = reorder.remove(&want) {
                     // reuse a spent buffer when compute has returned one
                     let mut x = recycle_rx.try_recv().unwrap_or_default();
+                    let view = snap.acquire();
                     let (ledger, wall_ns, n_inputs) = stages::gather_stage(
-                        ds, snap.acquire(), prepared.inter_batch_reuse, &cfg.cost,
-                        &sb.mb, &mut prev_inputs, &mut x, None,
+                        ds,
+                        &view,
+                        prepared.inter_batch_reuse,
+                        &cfg.cost,
+                        &sb.mb,
+                        &mut prev_inputs,
+                        &mut x,
+                        None,
                     );
                     want += 1;
                     // recycle this batch's claim-ahead ticket (receiver

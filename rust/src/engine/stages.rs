@@ -5,24 +5,28 @@
 //! per stage is what guarantees the pipelined engine is *semantically*
 //! the serial engine, just scheduled differently.
 //!
-//! Cache state arrives as a [`CacheSnapshot`] — the immutable epoch a
-//! caller acquired from its `SnapshotHandle` for this batch — never as
-//! bare `&AdjCache`/`&FeatCache` references, so a background refresh
-//! can hot-swap caches between batches without the stages noticing.
-//! An optional [`AccessTracker`] (the serving path's online-refresh
-//! input) receives the same per-node / per-element counts pre-sampling
-//! collects; `None` keeps the offline paths zero-overhead.
+//! Cache state arrives as a [`ShardView`] — the immutable per-shard
+//! epochs a caller acquired from its `ShardedHandle` for this batch —
+//! never as bare `&AdjCache`/`&FeatCache` references, so a background
+//! refresh can hot-swap any shard's caches between batches without the
+//! stages noticing. The view routes every feature lookup and adjacency
+//! read to the shard that owns the node; with one shard it degenerates
+//! to the PR 2 single-snapshot path bit for bit. An optional
+//! [`AccessTracker`] (the serving path's online-refresh input) receives
+//! the same per-node / per-element counts pre-sampling collects;
+//! `None` keeps the offline paths zero-overhead.
 //!
 //! Determinism contract: a batch's sampling RNG is [`batch_rng`]` =
 //! Rng::for_stream(cfg.seed, batch_index)` — a pure function of the
 //! run seed and the batch's position, never of which thread runs it or
 //! when. Sampling position choices are independent of cache contents
-//! (a cache changes *where* a neighbor is read from, never *which*
-//! neighbor), so stage outputs depend only on `(snapshot-transparent
-//! dataset state, seeds, batch_index, seed)` — any scheduler that folds
-//! per-batch ledgers in batch-index order reproduces the serial run bit
-//! for bit, and results are identical before/during/after a snapshot
-//! swap.
+//! (a cache changes *where* a neighbor is read from — which device,
+//! which shard — never *which* neighbor), so stage outputs depend only
+//! on `(snapshot-transparent dataset state, seeds, batch_index, seed)`
+//! — any scheduler that folds per-batch ledgers in batch-index order
+//! reproduces the serial run bit for bit, results are identical
+//! before/during/after a snapshot swap, and sharded gathers produce
+//! bit-identical logits at any shard count.
 
 use std::collections::HashSet;
 use std::time::Instant;
@@ -30,12 +34,12 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::refresh::AccessTracker;
-use crate::cache::runtime::CacheSnapshot;
+use crate::cache::shard::ShardView;
 use crate::config::RunConfig;
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CostModel, TransferLedger};
 use crate::runtime::Compute;
-use crate::sampler::{presample::row_txns, MiniBatch, NeighborSampler, UvaAdj};
+use crate::sampler::{presample::row_txns, MiniBatch, NeighborSampler};
 use crate::util::Rng;
 
 use super::model_flops;
@@ -54,10 +58,11 @@ pub struct SampledBatch {
     pub wall_ns: f64,
 }
 
-/// Stage 1: fan-out sampling over the snapshot's adjacency source.
+/// Stage 1: fan-out sampling over the view's routed adjacency source
+/// (per-shard device prefixes hit, everything else falls back to UVA).
 pub fn sample_stage(
     ds: &Dataset,
-    snap: &CacheSnapshot,
+    view: &ShardView<'_>,
     sampler: &mut NeighborSampler,
     seeds: &[NodeId],
     index: usize,
@@ -71,29 +76,16 @@ pub fn sample_stage(
     // cross-thread atomic adds never inflate the stage's wall time
     // (same discipline as the gather stage)
     let mut touched: Vec<usize> = Vec::new();
+    let src = view.adj_source(&ds.csc);
     let t0 = Instant::now();
     let mb = match tracker {
-        None => match &snap.adj {
-            Some(c) => {
-                sampler.sample_batch(&c.source(&ds.csc), seeds, &mut rng, &mut ledger)
-            }
-            None => {
-                sampler.sample_batch(&UvaAdj { csc: &ds.csc }, seeds, &mut rng, &mut ledger)
-            }
-        },
+        None => sampler.sample_batch(&src, seeds, &mut rng, &mut ledger),
         Some(_) => {
             let csc = &ds.csc;
             let mut on_access = |v: NodeId, pos: usize| {
                 touched.push(csc.neighbor_offset(v) as usize + pos);
             };
-            match &snap.adj {
-                Some(c) => sampler.sample_batch_counting(
-                    &c.source(csc), seeds, &mut rng, &mut ledger, &mut on_access,
-                ),
-                None => sampler.sample_batch_counting(
-                    &UvaAdj { csc }, seeds, &mut rng, &mut ledger, &mut on_access,
-                ),
-            }
+            sampler.sample_batch_counting(&src, seeds, &mut rng, &mut ledger, &mut on_access)
         }
     };
     let wall_ns = t0.elapsed().as_nanos() as f64;
@@ -105,7 +97,8 @@ pub fn sample_stage(
     SampledBatch { index, mb, ledger, wall_ns }
 }
 
-/// Stage 2: gather input-node features into `x` (reused across calls).
+/// Stage 2: gather input-node features into `x` (reused across calls),
+/// each row from the shard that owns its node.
 ///
 /// `prev_inputs` carries RAIN's previous-batch residency between
 /// consecutive calls; it is read and then replaced only when
@@ -115,7 +108,7 @@ pub fn sample_stage(
 #[allow(clippy::too_many_arguments)]
 pub fn gather_stage(
     ds: &Dataset,
-    snap: &CacheSnapshot,
+    view: &ShardView<'_>,
     inter_batch_reuse: bool,
     cost: &CostModel,
     mb: &MiniBatch,
@@ -144,10 +137,10 @@ pub fn gather_stage(
                 ledger.miss(row_bytes, txns);
             }
         }
-    } else if let Some(cache) = &snap.feat {
+    } else if view.has_feat_cache() {
         for (i, &v) in inputs.iter().enumerate() {
             let out = &mut x[i * dim..(i + 1) * dim];
-            if let Some(row) = cache.lookup(v) {
+            if let Some(row) = view.feat_lookup(v) {
                 out.copy_from_slice(row);
                 ledger.hit(row_bytes);
             } else {

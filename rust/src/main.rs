@@ -68,9 +68,11 @@ fn print_usage() {
          common keys: dataset= model= fanout= bs= system= budget= presample=\n\
          \x20            compute= max-batches= device= seed= artifacts=\n\
          \x20            pipeline= sample-threads=   (pipeline=1 is serial)\n\
+         \x20            shards=   (cache snapshot sharded over N devices; 1 = single)\n\
          serve keys:  workers= requests= req-size= batch-wait-ms=\n\
          \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
-         \x20            refresh-decay= drift-threshold=   (online re-planning)"
+         \x20            refresh-decay= drift-threshold=   (online re-planning)\n\
+         \x20            shard-refresh=on|off   (re-plan only drifted shards | all)"
     );
 }
 
@@ -125,8 +127,11 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         report.compute.total_ns() / 1e6,
         pct(report.compute.total_ns())
     );
-    println!("total      {:9.1}ms  (prep fraction {:.1}%)",
-             t / 1e6, 100.0 * report.prep_fraction());
+    println!(
+        "total      {:9.1}ms  (prep fraction {:.1}%)",
+        t / 1e6,
+        100.0 * report.prep_fraction()
+    );
     if cfg.pipeline_depth > 1 {
         println!(
             "pipeline   depth={} threads={}  wall {:.1}ms  occupancy: \
@@ -162,8 +167,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     let cfg = RunConfig::from_args(&cfg_args)?;
-    println!("serving: {} workers={} requests={} req-size={}",
-             cfg.summary(), n_workers, n_requests, req_size);
+    println!(
+        "serving: {} workers={} requests={} req-size={}",
+        cfg.summary(),
+        n_workers,
+        n_requests,
+        req_size
+    );
 
     let ds = Arc::new(datasets::spec(&cfg.dataset)?.build());
     let server = Server::start(
@@ -221,11 +231,20 @@ fn cmd_presample(args: &[String]) -> Result<()> {
         None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
     };
     let total = cfg.budget.unwrap_or_else(|| {
-        dci::baselines::auto_budget(&device, &stats, ds.features.row_bytes(), cfg.hidden, ds.spec.scale)
+        dci::baselines::auto_budget(
+            &device,
+            &stats,
+            ds.features.row_bytes(),
+            cfg.hidden,
+            ds.spec.scale,
+        )
     });
     let split = dci::cache::allocate(total, &stats);
-    println!("pre-sampled {} batches in {:.1}ms wall", stats.n_batches,
-             stats.wall_ns / 1e6);
+    println!(
+        "pre-sampled {} batches in {:.1}ms wall",
+        stats.n_batches,
+        stats.wall_ns / 1e6
+    );
     println!(
         "t_sample={:.1}ms t_feature={:.1}ms -> sampling fraction {:.3}",
         stats.t_sample_ns / 1e6,
@@ -266,8 +285,15 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 }
 
 fn cmd_datasets() -> Result<()> {
-    println!("{:<18} {:>10} {:>9} {:>6} {:>8} {:>6}  stands in for",
-             "name", "nodes", "avg-deg", "feat", "classes", "scale");
+    println!(
+        "{:<18} {:>10} {:>9} {:>6} {:>8} {:>6}  stands in for",
+        "name",
+        "nodes",
+        "avg-deg",
+        "feat",
+        "classes",
+        "scale"
+    );
     for spec in datasets::registry() {
         println!(
             "{:<18} {:>10} {:>9} {:>6} {:>8} {:>6}  {}",
@@ -293,15 +319,24 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     let spec = datasets::spec(&name)?;
     println!("building {name}...");
     let ds = spec.build();
-    println!("nodes={} edges={} avg-deg={:.1} max-deg={}",
-             ds.csc.n_nodes(), ds.csc.n_edges(), ds.csc.avg_degree(),
-             ds.csc.max_degree());
-    println!("features: dim={} total={}", ds.features.dim(),
-             format_bytes(ds.features.bytes_total()));
+    println!(
+        "nodes={} edges={} avg-deg={:.1} max-deg={}",
+        ds.csc.n_nodes(),
+        ds.csc.n_edges(),
+        ds.csc.avg_degree(),
+        ds.csc.max_degree()
+    );
+    println!(
+        "features: dim={} total={}",
+        ds.features.dim(),
+        format_bytes(ds.features.bytes_total())
+    );
     println!("adjacency: {}", format_bytes(ds.csc.bytes_total()));
     println!("test nodes: {}", ds.test_nodes.len());
     println!("degree gini: {:.3}", dci::graph::generator::degree_gini(&ds.csc));
-    println!("simulated device: {}",
-             format_bytes(DeviceMemory::rtx4090_scaled(spec.scale).capacity()));
+    println!(
+        "simulated device: {}",
+        format_bytes(DeviceMemory::rtx4090_scaled(spec.scale).capacity())
+    );
     Ok(())
 }

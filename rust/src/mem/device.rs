@@ -104,6 +104,55 @@ impl DeviceMemory {
     }
 }
 
+/// A node's set of simulated devices: one [`DeviceMemory`] arena per
+/// cache shard. Every shard's snapshot claims bytes against the device
+/// that actually holds it — a shard cannot borrow headroom from a
+/// sibling device, which is exactly the constraint that makes the
+/// per-shard budget split ([`crate::cache::split_budget`]) load-bearing
+/// rather than cosmetic.
+#[derive(Debug, Clone)]
+pub struct DeviceGroup {
+    devices: Vec<DeviceMemory>,
+}
+
+impl DeviceGroup {
+    /// `n` identical devices cloned from a freshly built prototype
+    /// (capacity and reserve copied, nothing allocated yet).
+    pub fn replicate(proto: &DeviceMemory, n: usize) -> Self {
+        assert_eq!(proto.used(), 0, "replicate from an unused prototype");
+        DeviceGroup { devices: vec![proto.clone(); n.max(1)] }
+    }
+
+    /// The single-device group (the PR 2 shape).
+    pub fn single(device: DeviceMemory) -> Self {
+        DeviceGroup { devices: vec![device] }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, i: usize) -> &DeviceMemory {
+        &self.devices[i]
+    }
+
+    /// Claim `bytes` on device `i` only; fails with that device's
+    /// [`OomError`] — sibling capacity is never consulted.
+    pub fn alloc(&mut self, i: usize, bytes: u64) -> Result<(), OomError> {
+        self.devices[i].alloc(bytes)
+    }
+
+    /// Reserve-consuming claim on device `i` (RAIN's staged tensor).
+    pub fn alloc_unreserved(&mut self, i: usize, bytes: u64) -> Result<(), OomError> {
+        self.devices[i].alloc_unreserved(bytes)
+    }
+
+    /// Release previously claimed bytes on device `i`.
+    pub fn free(&mut self, i: usize, bytes: u64) {
+        self.devices[i].free(bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +193,33 @@ mod tests {
         let mut m = DeviceMemory::new(10, 0);
         let err = m.alloc(100).unwrap_err();
         assert!(err.to_string().contains("CUDA out of memory"));
+    }
+
+    #[test]
+    fn group_accounts_each_device_separately() {
+        let proto = DeviceMemory::new(100, 10);
+        let mut g = DeviceGroup::replicate(&proto, 3);
+        assert_eq!(g.n_devices(), 3);
+        g.alloc(0, 90).unwrap();
+        // device 0 is full for cache purposes; devices 1-2 untouched
+        assert!(g.alloc(0, 1).is_err(), "no borrowing from siblings");
+        g.alloc(1, 50).unwrap();
+        assert_eq!(g.device(0).used(), 90);
+        assert_eq!(g.device(1).used(), 50);
+        assert_eq!(g.device(2).used(), 0);
+        g.free(1, 50);
+        assert_eq!(g.device(1).used(), 0);
+        // unreserved path still per-device
+        g.alloc_unreserved(0, 10).unwrap();
+        assert!(g.alloc_unreserved(0, 1).is_err());
+    }
+
+    #[test]
+    fn group_single_and_degenerate_replicate() {
+        let g = DeviceGroup::single(DeviceMemory::new(50, 5));
+        assert_eq!(g.n_devices(), 1);
+        assert_eq!(g.device(0).available_for_cache(), 45);
+        let g = DeviceGroup::replicate(&DeviceMemory::new(50, 5), 0);
+        assert_eq!(g.n_devices(), 1, "a group has at least one device");
     }
 }

@@ -11,5 +11,5 @@ pub mod device;
 pub mod transfer;
 
 pub use clock::TransferLedger;
-pub use device::{DeviceMemory, OomError, PAPER_RESERVE_BYTES, RTX4090_BYTES};
+pub use device::{DeviceGroup, DeviceMemory, OomError, PAPER_RESERVE_BYTES, RTX4090_BYTES};
 pub use transfer::CostModel;

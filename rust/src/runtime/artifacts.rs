@@ -47,8 +47,14 @@ impl ArtifactMeta {
 
     /// Can this artifact hold a batch with the given per-layer node
     /// counts (`sizes`, input-most first) and per-layer neighbor slots?
-    pub fn fits(&self, model: ModelKind, feat_dim: usize, classes: usize,
-                sizes: &[usize], ks: &[usize]) -> bool {
+    pub fn fits(
+        &self,
+        model: ModelKind,
+        feat_dim: usize,
+        classes: usize,
+        sizes: &[usize],
+        ks: &[usize],
+    ) -> bool {
         self.model == model
             && self.feat_dim == feat_dim
             && self.classes == classes
@@ -91,8 +97,14 @@ impl Manifest {
     }
 
     /// Smallest artifact that fits the request, or None.
-    pub fn find(&self, model: ModelKind, feat_dim: usize, classes: usize,
-                sizes: &[usize], ks: &[usize]) -> Option<&ArtifactMeta> {
+    pub fn find(
+        &self,
+        model: ModelKind,
+        feat_dim: usize,
+        classes: usize,
+        sizes: &[usize],
+        ks: &[usize],
+    ) -> Option<&ArtifactMeta> {
         self.artifacts
             .iter()
             .filter(|a| a.fits(model, feat_dim, classes, sizes, ks))

@@ -30,8 +30,13 @@ pub struct RefModel {
 }
 
 impl RefModel {
-    pub fn new(kind: ModelKind, feat_dim: usize, hidden: usize, classes: usize,
-               seed: u64) -> RefModel {
+    pub fn new(
+        kind: ModelKind,
+        feat_dim: usize,
+        hidden: usize,
+        classes: usize,
+        seed: u64,
+    ) -> RefModel {
         let mut rng = Rng::new(seed ^ 0x9e37);
         let n_layers = 3;
         let mut dims = vec![feat_dim];

@@ -205,7 +205,8 @@ pub fn presample_threads(
     // one shared copy of the count arrays, whatever the thread count;
     // the serial path uses plain `Cell` adds, the parallel path atomics
     let batch_views: &[&[NodeId]] = &batches;
-    let (node_visits, elem_counts, outs): (Vec<u32>, Vec<u32>, Vec<Vec<(usize, f64, f64, usize)>>) =
+    type Profiled = Vec<Vec<(usize, f64, f64, usize)>>;
+    let (node_visits, elem_counts, outs): (Vec<u32>, Vec<u32>, Profiled) =
         if threads == 1 {
             let visits: Vec<Cell<u32>> = vec![Cell::new(0); csc.n_nodes()];
             let counts: Vec<Cell<u32>> = vec![Cell::new(0); csc.n_edges()];
@@ -213,15 +214,23 @@ pub fn presample_threads(
                 .into_iter()
                 .map(|work| {
                     profile_chunk(
-                        csc, batch_views, fanout, row_bytes, cost, work,
-                        visits.as_slice(), counts.as_slice(),
+                        csc,
+                        batch_views,
+                        fanout,
+                        row_bytes,
+                        cost,
+                        work,
+                        visits.as_slice(),
+                        counts.as_slice(),
                     )
                 })
                 .collect();
             (reclaim_counts(visits), reclaim_counts(counts), outs)
         } else {
-            let visits: Vec<AtomicU32> = (0..csc.n_nodes()).map(|_| AtomicU32::new(0)).collect();
-            let counts: Vec<AtomicU32> = (0..csc.n_edges()).map(|_| AtomicU32::new(0)).collect();
+            let visits: Vec<AtomicU32> =
+                (0..csc.n_nodes()).map(|_| AtomicU32::new(0)).collect();
+            let counts: Vec<AtomicU32> =
+                (0..csc.n_edges()).map(|_| AtomicU32::new(0)).collect();
             let outs = std::thread::scope(|scope| {
                 let (visits, counts) = (visits.as_slice(), counts.as_slice());
                 let handles: Vec<_> = assignments
@@ -229,7 +238,13 @@ pub fn presample_threads(
                     .map(|work| {
                         scope.spawn(move || {
                             profile_chunk(
-                                csc, batch_views, fanout, row_bytes, cost, work, visits,
+                                csc,
+                                batch_views,
+                                fanout,
+                                row_bytes,
+                                cost,
+                                work,
+                                visits,
                                 counts,
                             )
                         })
@@ -290,7 +305,13 @@ fn profile_chunk<S: CountSink + ?Sized>(
     let mut profiled = Vec::with_capacity(work.len());
     for (bi, mut brng) in work {
         let (ts, tf, n_inputs) = profile_batch(
-            csc, batches[bi], row_bytes, cost, &mut sampler, &mut brng, node_visits,
+            csc,
+            batches[bi],
+            row_bytes,
+            cost,
+            &mut sampler,
+            &mut brng,
+            node_visits,
             elem_counts,
         );
         profiled.push((bi, ts, tf, n_inputs));
@@ -336,7 +357,14 @@ mod tests {
         let cost = CostModel::default();
         let mut rng = Rng::new(1);
         let st = presample(
-            &ds.csc, &ds.features, &ds.test_nodes, 64, &fanout, 4, &cost, &mut rng,
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            64,
+            &fanout,
+            4,
+            &cost,
+            &mut rng,
         );
         assert_eq!(st.n_batches, 4);
         assert!(st.t_sample_ns > 0.0 && st.t_feature_ns > 0.0);
@@ -359,7 +387,13 @@ mod tests {
         let cost = CostModel::default();
         let mut rng = Rng::new(2);
         let st = presample(
-            &ds.csc, &ds.features, &ds.test_nodes[..100], 64, &fanout, 99, &cost,
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes[..100],
+            64,
+            &fanout,
+            99,
+            &cost,
             &mut rng,
         );
         assert_eq!(st.n_batches, 2); // 100 seeds / 64 = 2 chunks
@@ -370,10 +404,26 @@ mod tests {
         let ds = datasets::spec("tiny").unwrap().build();
         let fanout = Fanout::parse("3,2").unwrap();
         let cost = CostModel::default();
-        let a = presample(&ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 3,
-                          &cost, &mut Rng::new(7));
-        let b = presample(&ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 3,
-                          &cost, &mut Rng::new(7));
+        let a = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            32,
+            &fanout,
+            3,
+            &cost,
+            &mut Rng::new(7),
+        );
+        let b = presample(
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            32,
+            &fanout,
+            3,
+            &cost,
+            &mut Rng::new(7),
+        );
         assert_eq!(a.node_visits, b.node_visits);
         assert_eq!(a.elem_counts, b.elem_counts);
         assert_eq!(a.loaded_nodes, b.loaded_nodes);
@@ -385,13 +435,27 @@ mod tests {
         let fanout = Fanout::parse("3,2").unwrap();
         let cost = CostModel::default();
         let serial = presample_threads(
-            &ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 6, &cost,
-            &mut Rng::new(7), 1,
+            &ds.csc,
+            &ds.features,
+            &ds.test_nodes,
+            32,
+            &fanout,
+            6,
+            &cost,
+            &mut Rng::new(7),
+            1,
         );
         for threads in [2usize, 4, 9] {
             let par = presample_threads(
-                &ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 6, &cost,
-                &mut Rng::new(7), threads,
+                &ds.csc,
+                &ds.features,
+                &ds.test_nodes,
+                32,
+                &fanout,
+                6,
+                &cost,
+                &mut Rng::new(7),
+                threads,
             );
             assert_eq!(serial.node_visits, par.node_visits, "threads={threads}");
             assert_eq!(serial.elem_counts, par.elem_counts, "threads={threads}");
@@ -411,11 +475,13 @@ mod tests {
         let fanout = Fanout::parse("2,2").unwrap();
         let cost = CostModel::default();
         let mut rng = Rng::new(3);
-        let st = presample(&ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 8,
-                           &cost, &mut rng);
+        let st =
+            presample(&ds.csc, &ds.features, &ds.test_nodes, 32, &fanout, 8, &cost, &mut rng);
         let max = *st.node_visits.iter().max().unwrap() as f64;
-        assert!(max >= 3.0 * st.avg_node_visits(),
-                "power-law graph should have hot nodes (max={max}, avg={})",
-                st.avg_node_visits());
+        assert!(
+            max >= 3.0 * st.avg_node_visits(),
+            "power-law graph should have hot nodes (max={max}, avg={})",
+            st.avg_node_visits()
+        );
     }
 }

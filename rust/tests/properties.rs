@@ -144,6 +144,126 @@ fn prop_adj_cache_transparent() {
 }
 
 #[test]
+fn prop_shard_routing_is_a_total_partition() {
+    use dci::cache::shard::{mask_node_counts, ShardRouter};
+
+    check("node→shard assignment is a stable total partition", 40, |rng| {
+        let n_shards = 1 + rng.gen_usize(8);
+        let router = ShardRouter::new(n_shards);
+        let n_nodes = 1 + rng.gen_usize(2_000);
+        // every node routes to exactly one in-range shard, stably
+        for _ in 0..200 {
+            let v = rng.next_u32() % n_nodes as u32;
+            let s = router.shard_of(v);
+            if s >= n_shards {
+                return Err(format!("node {v} routed out of range: {s}"));
+            }
+            if router.shard_of(v) != s {
+                return Err(format!("node {v} assignment unstable"));
+            }
+        }
+        // the per-shard masks tile the count vector: no node lost, no
+        // node counted twice
+        let counts: Vec<u32> = (0..n_nodes).map(|_| 1 + rng.next_u32() % 100).collect();
+        let mut covered = vec![0u32; n_nodes];
+        for s in 0..n_shards {
+            let mask = mask_node_counts(&counts, &router, s);
+            for (v, &c) in mask.iter().enumerate() {
+                if c != 0 {
+                    covered[v] += 1;
+                    if c != counts[v] {
+                        return Err(format!("node {v} count mangled by mask"));
+                    }
+                }
+            }
+        }
+        if covered.iter().any(|&c| c != 1) {
+            return Err("masks do not tile the node set exactly once".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_budget_split_conserves_capacity() {
+    use dci::cache::split_budget;
+
+    check("per-shard split loses no byte and overspends none", 300, |rng| {
+        let budget = rng.next_u64() % (1u64 << 45);
+        let n = 1 + rng.gen_usize(16);
+        let shares = split_budget(budget, n);
+        if shares.len() != n {
+            return Err("one share per shard".into());
+        }
+        let sum: u64 = shares.iter().sum();
+        if sum != budget {
+            return Err(format!("split lost bytes: {sum} != {budget}"));
+        }
+        let (min, max) = (
+            *shares.iter().min().unwrap(),
+            *shares.iter().max().unwrap(),
+        );
+        if max - min > 1 {
+            return Err(format!("uneven split: min {min} max {max}"));
+        }
+        // remainder goes to the FIRST shards (deterministic layout)
+        if shares.windows(2).any(|w| w[0] < w[1]) {
+            return Err("remainder must front-load".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_gather_bit_identical_to_unsharded() {
+    use dci::config::{ComputeKind, RunConfig, SystemKind};
+    use dci::engine::run_config;
+
+    // sharding changes which simulated device serves a byte, never
+    // which byte: logits (and all access totals) are bit-identical to
+    // the single-device runtime at any shard count
+    check("shards=1 and shards=4 produce identical logits", 3, |rng| {
+        let seed = rng.next_u64();
+        let budget = 50_000 + rng.next_u64() % 300_000;
+        let mut out = Vec::new();
+        for shards in [1usize, 4] {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = SystemKind::Dci;
+            cfg.batch_size = 64;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.budget = Some(budget);
+            cfg.max_batches = Some(4);
+            cfg.compute = ComputeKind::Reference;
+            cfg.hidden = 16;
+            cfg.seed = seed;
+            cfg.shards = shards;
+            out.push(run_config(&cfg).map_err(|e| e.to_string())?);
+        }
+        let (solo, sharded) = (&out[0], &out[1]);
+        if solo.logits_checksum != sharded.logits_checksum {
+            return Err(format!(
+                "logits diverged: {} vs {}",
+                solo.logits_checksum, sharded.logits_checksum
+            ));
+        }
+        if solo.loaded_nodes != sharded.loaded_nodes {
+            return Err("loaded-node totals diverged".into());
+        }
+        let feat_total =
+            |r: &dci::engine::InferenceReport| r.stats.feature.hits + r.stats.feature.misses;
+        let samp_total =
+            |r: &dci::engine::InferenceReport| r.stats.sample.hits + r.stats.sample.misses;
+        if feat_total(solo) != feat_total(sharded)
+            || samp_total(solo) != samp_total(sharded)
+        {
+            return Err("access totals diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_batcher_conserves_requests() {
     use dci::coordinator::{Batcher, BatcherConfig};
     use std::sync::mpsc;
@@ -318,8 +438,7 @@ fn prop_engine_hit_miss_accounting() {
         if total != r.loaded_nodes {
             return Err(format!(
                 "{:?}: hits {} + misses {} != loaded {}",
-                cfg.system, r.stats.feature.hits, r.stats.feature.misses,
-                r.loaded_nodes
+                cfg.system, r.stats.feature.hits, r.stats.feature.misses, r.loaded_nodes
             ));
         }
         Ok(())

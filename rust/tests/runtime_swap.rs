@@ -76,7 +76,8 @@ fn serving_identical_before_during_after_hot_swap() {
     // unchanged-plan swap: hit/miss accounting is identical too
     for i in 3..5 {
         assert_eq!(
-            control[i].stats.feature.hits, swapped[i].stats.feature.hits,
+            control[i].stats.feature.hits,
+            swapped[i].stats.feature.hits,
             "request {i}: unchanged plan must serve identical hit counts"
         );
         assert_eq!(control[i].stats.sample.hits, swapped[i].stats.sample.hits);
