@@ -29,7 +29,8 @@ use anyhow::{ensure, Result};
 use dci::baselines::PreparedSystem;
 use dci::bench_support::{jnum, BenchOpts, BenchReport};
 use dci::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
-use dci::cache::refresh::{AccessTracker, RefreshConfig, Refresher};
+use dci::cache::refresh::{RefreshConfig, Refresher};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
 use dci::cache::CacheStats;
 use dci::config::{ComputeKind, RunConfig, SystemKind};
 use dci::engine::InferenceEngine;
@@ -120,7 +121,7 @@ fn main() -> Result<()> {
     let refresher = Refresher::spawn(
         Arc::clone(&ds),
         Arc::clone(&runtime),
-        tracker,
+        tracker as Arc<dyn WorkloadTracker>,
         Box::new(DciPlanner),
         vec![p.budget],
         stats_a.node_visits.clone(),

@@ -33,7 +33,8 @@ use anyhow::{ensure, Result};
 use dci::baselines::PreparedSystem;
 use dci::bench_support::{jnum, BenchOpts, BenchReport};
 use dci::cache::planner::{DciPlanner, WorkloadProfile};
-use dci::cache::refresh::{AccessTracker, RefreshConfig, Refresher};
+use dci::cache::refresh::{RefreshConfig, Refresher};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
 use dci::cache::shard::{plan_sharded, ShardRouter, ShardedPlan};
 use dci::cache::CacheStats;
 use dci::config::{ComputeKind, RunConfig, SystemKind};
@@ -143,7 +144,7 @@ fn main() -> Result<()> {
     let refresher = Refresher::spawn(
         Arc::clone(&ds),
         Arc::clone(&runtime),
-        tracker,
+        tracker as Arc<dyn WorkloadTracker>,
         Box::new(DciPlanner),
         shard_budgets,
         stats_a.node_visits.clone(),

@@ -1,0 +1,425 @@
+//! Sketch-vs-dense workload-tracker bench: drain cost + re-plan
+//! fidelity on the PR 2 drift stream.
+//!
+//! Two claims the sketch tracker exists to hold (ISSUE 4 acceptance
+//! criteria):
+//!
+//! 1. **Drain cost** — on a *sparse* interval (≤ 1% of nodes/elements
+//!    touched since the last poll), `SketchTracker::drain` is ≥ 10×
+//!    cheaper than `AccessTracker::drain`, because it enumerates the
+//!    bounded touched set instead of scanning O(nodes + edges)
+//!    counters. Measured over a synthetic key space sized like a real
+//!    serving graph (the drain cost depends only on the key-space and
+//!    touch sizes, not on graph contents).
+//! 2. **Re-plan fidelity** — replaying the *identical* phase-A →
+//!    phase-B drift stream (same request chunks, same engine request
+//!    indices → same sampling streams) against a dense-tracked and a
+//!    sketch-tracked refresher, the sketch-driven re-plan recovers
+//!    ≥ 95% of the dense tracker's recovered hit ratio (both measured
+//!    against the same offline phase-B oracle), with zero swap stalls
+//!    on either run.
+//!
+//! Always writes `BENCH_sketch_tracker.json` (override with `--json
+//! <path>`) carrying the `drain_speedup` and
+//! `recovered_hit_ratio_vs_dense` keys CI checks for.
+//!
+//! `cargo bench --bench sketch_tracker [-- --quick]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use dci::baselines::PreparedSystem;
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::planner::{DciPlanner, WorkloadProfile};
+use dci::cache::refresh::{RefreshConfig, Refresher};
+use dci::cache::tracker::{AccessTracker, SketchTracker, WorkloadTracker};
+use dci::cache::CacheStats;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, Dataset, NodeId};
+use dci::mem::CostModel;
+use dci::sampler::{presample, Fanout};
+use dci::util::json::s;
+use dci::util::Rng;
+
+struct Params {
+    dataset: &'static str,
+    fanout: &'static str,
+    /// Seeds per serving request.
+    req_size: usize,
+    /// Seeds per phase pool (disjoint A/B halves of the test set).
+    pool: usize,
+    /// Pre-sampling geometry (covers each pool exactly).
+    presample_bs: usize,
+    n_presample: usize,
+    budget: u64,
+    /// Drain microbench key-space sizes (synthetic; independent of the
+    /// dataset — the drain cost is a pure function of these).
+    drain_nodes: usize,
+    drain_edges: usize,
+    /// Fraction of each key space touched per interval (the "sparse
+    /// interval" of the acceptance criterion; ≤ 0.01).
+    touched_frac: f64,
+    /// Record/drain repetitions the timing is summed over.
+    drain_reps: usize,
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_sketch_tracker.json");
+    let p = if opts.quick {
+        Params {
+            dataset: "tiny",
+            fanout: "3,2",
+            req_size: 32,
+            pool: 480,
+            presample_bs: 120,
+            n_presample: 4,
+            budget: 40_000,
+            drain_nodes: 400_000,
+            drain_edges: 2_000_000,
+            touched_frac: 0.002,
+            drain_reps: 10,
+        }
+    } else {
+        Params {
+            dataset: "products-sim",
+            fanout: "8,4,2",
+            req_size: 64,
+            pool: 2048,
+            presample_bs: 256,
+            n_presample: 8,
+            budget: 8 << 20,
+            drain_nodes: 2_000_000,
+            drain_edges: 10_000_000,
+            touched_frac: 0.002,
+            drain_reps: 10,
+        }
+    };
+
+    // --- claim 1: O(touched) drain on sparse intervals ---------------
+    let (dense_drain_ns, sketch_drain_ns, touched_keys) = drain_microbench(&p);
+    let drain_speedup = dense_drain_ns / sketch_drain_ns.max(1.0);
+    eprintln!(
+        "  [drain] dense {:.2}ms vs sketch {:.2}ms over {} reps ({} touched keys \
+         of {} nodes + {} elems): {drain_speedup:.1}x",
+        dense_drain_ns / 1e6,
+        sketch_drain_ns / 1e6,
+        p.drain_reps,
+        touched_keys,
+        p.drain_nodes,
+        p.drain_edges,
+    );
+
+    // --- claim 2: sketch re-plans recover what dense re-plans do -----
+    eprintln!("building {}...", p.dataset);
+    let ds = Arc::new(datasets::spec(p.dataset)?.build());
+    let mut cfg = RunConfig::default();
+    cfg.dataset = p.dataset.into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.req_size;
+    cfg.fanout = Fanout::parse(p.fanout)?;
+    cfg.budget = Some(p.budget);
+    cfg.compute = ComputeKind::Skip;
+    let cost = CostModel::default();
+
+    // disjoint request pools: phase A = head of the test set (what the
+    // deployment was planned for), phase B = tail (the drifted mix)
+    ensure!(ds.test_nodes.len() >= 2 * p.pool, "test set too small");
+    let a_pool: Vec<NodeId> = ds.test_nodes[..p.pool].to_vec();
+    let b_pool: Vec<NodeId> = ds.test_nodes[ds.test_nodes.len() - p.pool..].to_vec();
+    let a_chunks: Vec<&[NodeId]> = a_pool.chunks(p.req_size).collect();
+    let b_chunks: Vec<&[NodeId]> = b_pool.chunks(p.req_size).collect();
+
+    let stats_a = presample(
+        &ds.csc,
+        &ds.features,
+        &a_pool,
+        p.presample_bs,
+        &cfg.fanout,
+        p.n_presample,
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile_a = WorkloadProfile::from_presample(&stats_a);
+
+    // oracle: fresh offline re-plan from a phase-B pre-sample — the
+    // shared yardstick both tracked runs are scored against
+    let stats_b = presample(
+        &ds.csc,
+        &ds.features,
+        &b_pool,
+        p.presample_bs,
+        &cfg.fanout,
+        p.n_presample,
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let oracle_plan =
+        DciPlanner.plan(&ds, &WorkloadProfile::from_presample(&stats_b), p.budget);
+    let oracle = measure(&ds, &cfg, oracle_plan.snapshot, p.budget, &b_chunks)?;
+    let oracle_hit = oracle.overall_hit_ratio();
+
+    let dense_tracker: Arc<dyn WorkloadTracker> =
+        Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    let (dense_recovery, dense_stalls, dense_rstats) = drift_run(
+        &ds, &cfg, &stats_a, &profile_a, p.budget, &a_chunks, &b_chunks, oracle_hit,
+        Arc::clone(&dense_tracker),
+    )?;
+    let sketch_tracker: Arc<dyn WorkloadTracker> =
+        Arc::new(SketchTracker::with_defaults(ds.csc.n_nodes(), ds.csc.n_edges()));
+    let (sketch_recovery, sketch_stalls, sketch_rstats) = drift_run(
+        &ds, &cfg, &stats_a, &profile_a, p.budget, &a_chunks, &b_chunks, oracle_hit,
+        Arc::clone(&sketch_tracker),
+    )?;
+    let recovered_vs_dense = if dense_recovery > 0.0 {
+        sketch_recovery / dense_recovery
+    } else {
+        1.0
+    };
+    eprintln!(
+        "  [recovery] dense {:.1}% ({} replans) vs sketch {:.1}% ({} replans): \
+         ratio {:.3}",
+        100.0 * dense_recovery,
+        dense_rstats.replans,
+        100.0 * sketch_recovery,
+        sketch_rstats.replans,
+        recovered_vs_dense
+    );
+
+    let mut report = BenchReport::new(
+        "Workload tracker: sketch vs dense (drain cost + re-plan fidelity)",
+        &["measurement", "dense", "sketch", "ratio"],
+    );
+    report.row(
+        &[
+            "drain ns (sparse interval)".into(),
+            format!("{:.0}", dense_drain_ns),
+            format!("{:.0}", sketch_drain_ns),
+            format!("{drain_speedup:.1}x"),
+        ],
+        vec![
+            ("measurement", s("drain")),
+            ("dense_drain_ns", jnum(dense_drain_ns)),
+            ("sketch_drain_ns", jnum(sketch_drain_ns)),
+            ("drain_speedup", jnum(drain_speedup)),
+            ("touched_keys", jnum(touched_keys as f64)),
+            ("touched_frac", jnum(p.touched_frac)),
+            ("keyspace_nodes", jnum(p.drain_nodes as f64)),
+            ("keyspace_edges", jnum(p.drain_edges as f64)),
+        ],
+    );
+    report.row(
+        &[
+            "recovered hit ratio vs oracle".into(),
+            format!("{:.1}%", 100.0 * dense_recovery),
+            format!("{:.1}%", 100.0 * sketch_recovery),
+            format!("{recovered_vs_dense:.3}"),
+        ],
+        vec![
+            ("measurement", s("recovery")),
+            ("oracle_hit", jnum(oracle_hit)),
+            ("dense_recovery", jnum(dense_recovery)),
+            ("sketch_recovery", jnum(sketch_recovery)),
+            ("recovered_hit_ratio_vs_dense", jnum(recovered_vs_dense)),
+            ("dense_replans", jnum(dense_rstats.replans as f64)),
+            ("sketch_replans", jnum(sketch_rstats.replans as f64)),
+            ("sketch_drained_keys", jnum(sketch_rstats.drained_keys as f64)),
+            ("sketch_dropped_touches", jnum(sketch_rstats.dropped_touches as f64)),
+            ("swap_stalls", jnum((dense_stalls + sketch_stalls) as f64)),
+        ],
+    );
+    report.finish(&opts)?;
+
+    println!(
+        "drain {drain_speedup:.1}x cheaper; recovery dense {:.3} vs sketch {:.3} \
+         (ratio {recovered_vs_dense:.3}); {} stalls",
+        dense_recovery,
+        sketch_recovery,
+        dense_stalls + sketch_stalls
+    );
+
+    // the acceptance criteria this bench exists to hold
+    ensure!(
+        drain_speedup >= 10.0,
+        "sketch drain only {drain_speedup:.1}x cheaper on a sparse interval \
+         (need >= 10x)"
+    );
+    ensure!(
+        dense_stalls == 0 && sketch_stalls == 0,
+        "serving must never block on a snapshot swap (dense {dense_stalls}, \
+         sketch {sketch_stalls})"
+    );
+    ensure!(
+        recovered_vs_dense >= 0.95,
+        "sketch re-plan recovered only {:.1}% of the dense tracker's recovered \
+         hit ratio",
+        100.0 * recovered_vs_dense
+    );
+    Ok(())
+}
+
+/// Record an identical sparse touch stream into both trackers
+/// `drain_reps` times, timing only the drains. Touched keys are spread
+/// over the key space by a stable stride so the dense scan gets no
+/// cache-locality gift.
+fn drain_microbench(p: &Params) -> (f64, f64, usize) {
+    let dense = AccessTracker::new(p.drain_nodes, p.drain_edges);
+    let sketch = SketchTracker::with_defaults(p.drain_nodes, p.drain_edges);
+    let n_touch_nodes = ((p.drain_nodes as f64 * p.touched_frac) as usize).max(1);
+    let n_touch_elems = ((p.drain_edges as f64 * p.touched_frac) as usize).max(1);
+    let node_stride = (p.drain_nodes / n_touch_nodes).max(1);
+    let elem_stride = (p.drain_edges / n_touch_elems).max(1);
+
+    let mut dense_ns = 0.0;
+    let mut sketch_ns = 0.0;
+    for rep in 0..p.drain_reps {
+        // shift the touched set each rep so no warm-cell artifacts
+        let off = rep % node_stride;
+        for t in (0..p.drain_nodes).skip(off).step_by(node_stride) {
+            dense.record_node(t as NodeId);
+            sketch.record_node(t as NodeId);
+        }
+        let off = rep % elem_stride;
+        for t in (0..p.drain_edges).skip(off).step_by(elem_stride) {
+            dense.record_elem(t);
+            sketch.record_elem(t);
+        }
+        dense.record_batch(1.0, 1.0);
+        sketch.record_batch(1.0, 1.0);
+
+        let t0 = Instant::now();
+        let dw = dense.drain();
+        dense_ns += t0.elapsed().as_nanos() as f64;
+        let t0 = Instant::now();
+        let sw = sketch.drain();
+        sketch_ns += t0.elapsed().as_nanos() as f64;
+        assert_eq!(
+            dw.node_visits.len(),
+            sw.node_visits.len(),
+            "both trackers must enumerate the same touched nodes"
+        );
+        assert_eq!(sw.dropped_touches, 0, "sparse interval must fit the touch set");
+    }
+    (dense_ns, sketch_ns, n_touch_nodes + n_touch_elems)
+}
+
+/// One tracked drift run: plan on phase A, serve A then drift to B
+/// with the refresher armed, settle, and score the refreshed snapshot
+/// against `oracle_hit` on the identical phase-B sequence. Returns
+/// `(recovery, swap_stalls, refresh stats)`.
+#[allow(clippy::too_many_arguments)]
+fn drift_run(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    stats_a: &dci::sampler::PresampleStats,
+    profile_a: &WorkloadProfile<'_>,
+    budget: u64,
+    a_chunks: &[&[NodeId]],
+    b_chunks: &[&[NodeId]],
+    oracle_hit: f64,
+    tracker: Arc<dyn WorkloadTracker>,
+) -> Result<(f64, u64, dci::cache::RefreshStats)> {
+    let plan_live = DciPlanner.plan(ds, profile_a, budget);
+    let prepared =
+        PreparedSystem::from_snapshot(SystemKind::Dci, plan_live.snapshot, None, budget);
+    let runtime = Arc::clone(&prepared.runtime);
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    engine.set_tracker(Arc::clone(&tracker));
+    let refresher = Refresher::spawn(
+        Arc::clone(ds),
+        Arc::clone(&runtime),
+        tracker,
+        Box::new(DciPlanner),
+        vec![budget],
+        stats_a.node_visits.clone(),
+        // low threshold: a spurious early re-plan only re-centers the
+        // baseline (harmless); a missed drift would stay stale forever
+        RefreshConfig {
+            check_interval: Duration::from_millis(20),
+            min_batches: 4,
+            decay: 0.7,
+            drift_threshold: 0.02,
+            per_shard: true,
+        },
+    );
+
+    // phase A: warm the matched workload (tracked)
+    for chunk in a_chunks {
+        engine.infer_once(chunk)?;
+    }
+    // phase B: drive the drifted mix until the refresher swaps...
+    let swaps_at_b = runtime.swaps();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while runtime.swaps() == swaps_at_b && Instant::now() < deadline {
+        for chunk in b_chunks {
+            engine.infer_once(chunk)?;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    ensure!(
+        runtime.swaps() > swaps_at_b,
+        "refresh never triggered (drift {:.3})",
+        refresher.stats().last_drift
+    );
+    // ...then settle waves so the decayed profile converges on B
+    for _ in 0..8 {
+        for chunk in b_chunks {
+            engine.infer_once(chunk)?;
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let rstats = refresher.stop();
+    let stalls = runtime.swap_stalls();
+
+    // score the refreshed (hot-swapped) snapshot on the identical
+    // phase-B sequence from a fresh engine (request indices restart at
+    // 0 → same sampling streams as the oracle measurement)
+    let prepared = PreparedSystem {
+        kind: SystemKind::Dci,
+        runtime,
+        cache_budget: budget,
+        shard_budgets: vec![budget],
+        presample: None,
+        batch_order: None,
+        inter_batch_reuse: false,
+        preprocess_ns: 0.0,
+        preprocess_wall_ns: 0.0,
+    };
+    let mut e = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    let refreshed = run_chunks(&mut e, b_chunks)?;
+    let recovery = if oracle_hit > 0.0 {
+        refreshed.overall_hit_ratio() / oracle_hit
+    } else {
+        1.0
+    };
+    Ok((recovery, stalls, rstats))
+}
+
+/// Serve `chunks` on a fresh engine built around `snapshot`; request
+/// indices start at 0, so every measurement sees identical sampling
+/// streams.
+fn measure(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    snapshot: dci::cache::CacheSnapshot,
+    budget: u64,
+    chunks: &[&[NodeId]],
+) -> Result<CacheStats> {
+    let prepared =
+        PreparedSystem::from_snapshot(SystemKind::Dci, snapshot, None, budget);
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    run_chunks(&mut engine, chunks)
+}
+
+fn run_chunks(
+    engine: &mut InferenceEngine<'_>,
+    chunks: &[&[NodeId]],
+) -> Result<CacheStats> {
+    let mut stats = CacheStats::new();
+    for chunk in chunks {
+        stats.merge(&engine.infer_once(chunk)?.stats);
+    }
+    Ok(stats)
+}

@@ -181,10 +181,12 @@ impl AdjCache {
         }
     }
 
+    /// Whether the whole CSC fit in the budget (every read is a hit).
     pub fn is_full_csc(&self) -> bool {
         self.full
     }
 
+    /// Device bytes this cache occupies (elements + prefix metadata).
     pub fn bytes_used(&self) -> u64 {
         self.bytes_used
     }

@@ -14,11 +14,14 @@ use crate::sampler::PresampleStats;
 /// The Eq. (1) split.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CacheAllocation {
+    /// Adjacency-cache capacity, bytes.
     pub c_adj: u64,
+    /// Feature-cache capacity, bytes.
     pub c_feat: u64,
 }
 
 impl CacheAllocation {
+    /// The whole budget: `c_adj + c_feat`.
     pub fn total(&self) -> u64 {
         self.c_adj + self.c_feat
     }

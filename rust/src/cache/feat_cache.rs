@@ -158,6 +158,7 @@ impl FeatCache {
         }
     }
 
+    /// `v`'s cached feature row, if resident.
     #[inline]
     pub fn lookup(&self, v: NodeId) -> Option<&[f32]> {
         let slot = *self.slot_of.get(v as usize)?;
@@ -168,10 +169,12 @@ impl FeatCache {
         Some(&self.data[i..i + self.dim])
     }
 
+    /// Whether `v`'s row is resident.
     pub fn contains(&self, v: NodeId) -> bool {
         self.lookup(v).is_some()
     }
 
+    /// Number of resident rows.
     pub fn n_cached(&self) -> usize {
         self.n_cached
     }
@@ -181,6 +184,7 @@ impl FeatCache {
         self.n_cached as u64 * (self.row_bytes + ENTRY_OVERHEAD_BYTES)
     }
 
+    /// Feature dimension of the cached rows.
     pub fn dim(&self) -> usize {
         self.dim
     }

@@ -15,9 +15,13 @@
 //!   hash partition, per-shard budget split (exact integer), and a
 //!   `ShardedRuntime`/`ShardView` acquire path that routes lookups to
 //!   the shard owning each node. One shard is the PR 2 behavior.
-//! - [`refresh`] — the online loop that tracks serving-time accesses,
-//!   detects workload drift *per shard*, re-plans in the background,
-//!   and hot-swaps only the drifted shard.
+//! - [`tracker`] — serving-time access counting behind the
+//!   `WorkloadTracker` trait: exact dense counters (`tracker=dense`)
+//!   or a conservative-update count-min sketch with an O(touched)
+//!   drain (`tracker=sketch`). See DESIGN.md §Workload tracking.
+//! - [`refresh`] — the online loop that drains the tracker into a
+//!   sparse decayed profile, detects workload drift *per shard*,
+//!   re-plans in the background, and hot-swaps only the drifted shard.
 //! - [`stats`] — per-run transfer statistics, including online-refill
 //!   traffic.
 //!
@@ -25,6 +29,12 @@
 //! are device reads, misses fall back to UVA host reads. Capacity
 //! accounting includes metadata (hash table / prefix-length arrays),
 //! not just payload.
+
+// The cache subsystem is the crate's documented public surface (three
+// layers deep since the planner/runtime/refresh split); CI gates
+// `cargo doc` with `-D warnings`, so an undocumented public item here
+// fails the build.
+#![warn(missing_docs)]
 
 pub mod adj_cache;
 pub mod alloc;
@@ -34,14 +44,19 @@ pub mod refresh;
 pub mod runtime;
 pub mod shard;
 pub mod stats;
+pub mod tracker;
 
 pub use adj_cache::AdjCache;
 pub use alloc::{allocate, CacheAllocation};
 pub use feat_cache::FeatCache;
 pub use planner::{planner_for, split_budget, CachePlan, CachePlanner, WorkloadProfile};
-pub use refresh::{AccessTracker, RefreshConfig, RefreshStats, Refresher};
+pub use refresh::{RefreshConfig, RefreshStats, Refresher};
 pub use runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};
 pub use shard::{
     plan_sharded, ShardRouter, ShardView, ShardedHandle, ShardedPlan, ShardedRuntime,
 };
 pub use stats::CacheStats;
+pub use tracker::{
+    AccessTracker, DrainedWindow, SketchTracker, TrackerConfig, TrackerKind,
+    WorkloadTracker,
+};

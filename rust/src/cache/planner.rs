@@ -81,6 +81,7 @@ pub struct CachePlan {
 /// run on the online refresh thread (or accept that refreshes with
 /// them are slow — `DucatiPlanner`).
 pub trait CachePlanner: Send + Sync {
+    /// Strategy name (`"dci"` | `"sci"` | `"ducati"`), for logs.
     fn name(&self) -> &'static str;
 
     /// Split `budget` bytes and fill both caches from `profile`.

@@ -5,44 +5,56 @@
 //! live access distribution). DCI's two-scan fills make re-planning
 //! cheap enough to do *online*, so:
 //!
-//! - the serving hot path bumps an [`AccessTracker`] (relaxed atomic
-//!   adds: per input node in the gather stage, per touched element in
-//!   the sampling stage — same counters pre-sampling collects);
+//! - the serving hot path records into a
+//!   [`WorkloadTracker`](super::tracker::WorkloadTracker) — per input
+//!   node in the gather stage, per touched element in the sampling
+//!   stage, the same counts pre-sampling collects. `tracker=dense` is
+//!   the exact O(nodes + edges) counter pair; `tracker=sketch` is a
+//!   count-min sketch with a bounded touched set (see
+//!   [`super::tracker`]);
 //! - a background [`Refresher`] thread drains the tracker on a poll
-//!   interval into an exponentially decayed profile and measures drift
-//!   **per shard**: the total-variation distance between the
-//!   within-shard node-visit distribution the shard's live snapshot was
-//!   planned from and the decayed observed one;
+//!   interval into an exponentially decayed **sparse** profile — the
+//!   drain + decay cost is O(touched keys this window), not
+//!   O(nodes + edges): decay multiplies one scalar, new counts merge
+//!   by key, and (with a sketch tracker) the profile is pruned to the
+//!   tracker's heavy-hitter caps;
+//! - drift is measured **per shard**: the total-variation distance
+//!   between the within-shard node-visit distribution the shard's live
+//!   snapshot was planned from and the decayed observed one, computed
+//!   over the two sparse supports;
 //! - a shard past the drift threshold is re-planned through the same
-//!   [`CachePlanner`] the offline path used — from the profile *masked*
-//!   to the shard's own nodes, within the shard's own budget — and
-//!   hot-swapped into that shard of the
-//!   [`ShardedRuntime`](crate::cache::ShardedRuntime). The other shards
-//!   keep serving their current epoch untouched, so a localized drift
-//!   uploads ~1/N of what a full re-plan would (the `shard_runtime`
-//!   bench holds this). Readers pick new epochs up on their next
-//!   per-batch acquire, never blocking (the runtime counts any reader
-//!   that does block; the benches assert zero).
+//!   [`CachePlanner`] the offline path used — from the decayed profile
+//!   *masked* to the shard's own nodes (the heavy hitters the tracker
+//!   recovered), within the shard's own budget — and hot-swapped into
+//!   that shard of the [`ShardedRuntime`](crate::cache::ShardedRuntime).
+//!   The other shards keep serving their current epoch untouched, so a
+//!   localized drift uploads ~1/N of what a full re-plan would (the
+//!   `shard_runtime` bench holds this). Readers pick new epochs up on
+//!   their next per-batch acquire, never blocking (the runtime counts
+//!   any reader that does block; the benches assert zero).
 //!
 //! With one shard this is exactly the PR 2 global refresh loop. With
 //! [`RefreshConfig::per_shard`] disabled, any shard's drift re-plans
 //! every shard (the "full re-plan" comparison mode).
 //!
-//! Cost: the tracker is two count arrays (O(nodes) + O(edges)) per
-//! worker and one relaxed `fetch_add` per access; the drift check is
-//! O(nodes + edges) on the background thread per poll that saw new
-//! batches, independent of shard count. Sparse/windowed tracking is an
-//! open item (ROADMAP).
+//! Cost: per poll that saw traffic, O(touched) drain + merge (plus the
+//! tracker's own drain cost — O(nodes + edges) for `dense`,
+//! O(touched) for `sketch`; `benches/sketch_tracker.rs` measures the
+//! gap). Only an actual re-plan materializes dense count arrays for
+//! the planner, and the planner itself is O(n) — the expensive path
+//! runs exactly when a shard is about to be refilled anyway.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::graph::{Dataset, NodeId};
+use crate::graph::{Csc, Dataset, NodeId};
 
 use super::planner::{CachePlanner, WorkloadProfile};
-use super::shard::{mask_elem_counts, mask_node_counts, ShardedRuntime};
+use super::shard::{elem_owner, ShardRouter, ShardedRuntime};
+use super::tracker::WorkloadTracker;
 
 /// Knobs of the online refresh loop.
 #[derive(Debug, Clone, PartialEq)]
@@ -77,86 +89,6 @@ impl Default for RefreshConfig {
     }
 }
 
-/// Serving-time access accumulator. One per engine; the hot path adds
-/// with relaxed atomics (u32 adds commute, so counts are exact
-/// whatever the thread interleaving), the refresher drains with
-/// `swap(0)`.
-pub struct AccessTracker {
-    node_visits: Vec<AtomicU32>,
-    elem_counts: Vec<AtomicU32>,
-    batches: AtomicU64,
-    /// Modeled stage ns accumulated as integer ns (Eq. 1 ratio input).
-    t_sample_ns: AtomicU64,
-    t_feature_ns: AtomicU64,
-}
-
-/// One drained window of tracker counts.
-pub struct DrainedCounts {
-    pub node_visits: Vec<u32>,
-    pub elem_counts: Vec<u32>,
-    pub batches: u64,
-    pub t_sample_ns: f64,
-    pub t_feature_ns: f64,
-}
-
-impl AccessTracker {
-    pub fn new(n_nodes: usize, n_edges: usize) -> Self {
-        AccessTracker {
-            node_visits: (0..n_nodes).map(|_| AtomicU32::new(0)).collect(),
-            elem_counts: (0..n_edges).map(|_| AtomicU32::new(0)).collect(),
-            batches: AtomicU64::new(0),
-            t_sample_ns: AtomicU64::new(0),
-            t_feature_ns: AtomicU64::new(0),
-        }
-    }
-
-    /// Record one feature-stage visit of `v` (gather stage).
-    #[inline]
-    pub fn record_node(&self, v: NodeId) {
-        self.node_visits[v as usize].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Record one adjacency-element access at CSC offset `at`
-    /// (sampling stage).
-    #[inline]
-    pub fn record_elem(&self, at: usize) {
-        self.elem_counts[at].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Record a served batch's modeled stage times.
-    pub fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.t_sample_ns
-            .fetch_add(t_sample_ns.max(0.0) as u64, Ordering::Relaxed);
-        self.t_feature_ns
-            .fetch_add(t_feature_ns.max(0.0) as u64, Ordering::Relaxed);
-    }
-
-    /// Batches recorded since the last drain.
-    pub fn batches(&self) -> u64 {
-        self.batches.load(Ordering::Relaxed)
-    }
-
-    /// Take the counts, resetting them to zero.
-    pub fn drain(&self) -> DrainedCounts {
-        DrainedCounts {
-            node_visits: self
-                .node_visits
-                .iter()
-                .map(|c| c.swap(0, Ordering::Relaxed))
-                .collect(),
-            elem_counts: self
-                .elem_counts
-                .iter()
-                .map(|c| c.swap(0, Ordering::Relaxed))
-                .collect(),
-            batches: self.batches.swap(0, Ordering::Relaxed),
-            t_sample_ns: self.t_sample_ns.swap(0, Ordering::Relaxed) as f64,
-            t_feature_ns: self.t_feature_ns.swap(0, Ordering::Relaxed) as f64,
-        }
-    }
-}
-
 /// What the refresh loop did over its lifetime.
 #[derive(Debug, Clone, Default)]
 pub struct RefreshStats {
@@ -175,6 +107,15 @@ pub struct RefreshStats {
     /// Largest single-install upload — what one drifted-shard refresh
     /// costs, vs `fill_h2d_bytes` for the cumulative story.
     pub max_install_h2d_bytes: u64,
+    /// Background wall time spent draining the tracker and folding the
+    /// window into the decayed profile, ns — the cost the sketch
+    /// tracker shrinks from O(nodes + edges) to O(touched).
+    pub drain_ns: f64,
+    /// Sparse keys drained across all windows (nodes + elements).
+    pub drained_keys: u64,
+    /// Touches the tracker could not enumerate because its bounded
+    /// touched set saturated (sketch only; 0 for dense).
+    pub dropped_touches: u64,
 }
 
 /// Handle to the background refresh thread.
@@ -194,7 +135,7 @@ impl Refresher {
     pub fn spawn(
         ds: Arc<Dataset>,
         runtime: Arc<ShardedRuntime>,
-        tracker: Arc<AccessTracker>,
+        tracker: Arc<dyn WorkloadTracker>,
         planner: Box<dyn CachePlanner>,
         shard_budgets: Vec<u64>,
         planned_visits: Vec<u32>,
@@ -215,7 +156,7 @@ impl Refresher {
                 refresh_loop(
                     &ds,
                     &runtime,
-                    &tracker,
+                    tracker.as_ref(),
                     planner.as_ref(),
                     &shard_budgets,
                     planned_visits,
@@ -242,56 +183,145 @@ impl Refresher {
     }
 }
 
+/// A sparse exponentially decayed mass profile with O(touched) updates.
+///
+/// `acc = acc·decay + window` is implemented without touching
+/// untouched keys: entries store *unscaled* mass `u` with one global
+/// `scale` such that the actual mass is `u · scale`; a decay step
+/// multiplies `scale` alone, and merging a window's count adds
+/// `count / scale` to the key's entry. `scale` is rebased into the
+/// entries before it can underflow.
+///
+/// With `cap = Some(k)` the profile is pruned to its top-k entries by
+/// mass after every merge — the heavy-hitter recovery that keeps a
+/// sketch-fed profile (and the re-plans built from it) bounded. The
+/// pruned tail also bounds the drift-test error: dropped mass is at
+/// most the smallest retained masses' total, a vanishing fraction of a
+/// skewed workload (DESIGN.md §Workload tracking derives the bound).
+struct DecayedSparse {
+    mass: HashMap<u64, f64>,
+    scale: f64,
+    cap: Option<usize>,
+}
+
+/// Entries whose actual mass decays below this are dropped at prune
+/// time: a decayed count this small cannot move a drift test or a fill
+/// threshold, and dropping it keeps dense-tracker profiles from
+/// accumulating every key ever touched.
+const DUST: f64 = 1e-3;
+
+impl DecayedSparse {
+    fn new(cap: Option<usize>) -> Self {
+        DecayedSparse { mass: HashMap::new(), scale: 1.0, cap }
+    }
+
+    /// One decay step (start of a window that saw traffic).
+    fn decay(&mut self, decay: f64) {
+        self.scale *= decay;
+        if self.scale < 1e-12 {
+            let s = self.scale;
+            for u in self.mass.values_mut() {
+                *u *= s;
+            }
+            self.scale = 1.0;
+        }
+    }
+
+    /// Merge one drained count into the profile.
+    fn add(&mut self, key: u64, count: f64) {
+        *self.mass.entry(key).or_insert(0.0) += count / self.scale;
+    }
+
+    /// Drop dust and (when capped) everything below the top-`cap`
+    /// masses. O(active entries).
+    fn prune(&mut self) {
+        let dust = DUST / self.scale;
+        self.mass.retain(|_, u| *u >= dust);
+        if let Some(cap) = self.cap {
+            if self.mass.len() > cap {
+                let mut us: Vec<f64> = self.mass.values().copied().collect();
+                let cut = us.len() - cap;
+                let (_, &mut thresh, _) =
+                    us.select_nth_unstable_by(cut, |a, b| a.total_cmp(b));
+                self.mass.retain(|_, u| *u >= thresh);
+            }
+        }
+    }
+
+    /// Actual (scaled) masses, sparse.
+    fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        let s = self.scale;
+        self.mass.iter().map(move |(&k, &u)| (k, u * s))
+    }
+}
+
 /// Per-shard total-variation drift between the planned and observed
-/// node-visit masses. Each shard's masses are normalized *within the
-/// shard* — a shard with no observations reports zero drift (nothing
-/// asked of it, nothing to re-plan), and a shard with observations but
-/// no planned mass reports 0.5 (all of its traffic is new). With one
-/// shard this is exactly the PR 2 global total-variation distance.
-fn shard_drifts(
-    planned: &[f64],
-    observed: &[f64],
-    shard_ids: &[u32],
+/// node-visit masses, computed over the two **sparse** supports — cost
+/// O(|planned| + |observed|), independent of the graph size. Each
+/// shard's masses are normalized *within the shard*: a shard with no
+/// observations reports zero drift (nothing asked of it, nothing to
+/// re-plan), and a shard with observations but no planned mass reports
+/// 0.5 (all of its traffic is new). With one shard this is exactly the
+/// PR 2 global total-variation distance.
+fn shard_drifts_sparse(
+    planned: &HashMap<u64, f64>,
+    observed: &DecayedSparse,
+    router: &ShardRouter,
     n_shards: usize,
 ) -> Vec<f64> {
     let mut psum = vec![0.0f64; n_shards];
     let mut osum = vec![0.0f64; n_shards];
-    for (v, &s) in shard_ids.iter().enumerate() {
-        psum[s as usize] += planned[v];
-        osum[s as usize] += observed[v];
+    for (&v, &p) in planned {
+        psum[router.shard_of(v as NodeId)] += p;
+    }
+    for (v, o) in observed.iter() {
+        osum[router.shard_of(v as NodeId)] += o;
     }
     let mut tv = vec![0.0f64; n_shards];
-    for (v, &s) in shard_ids.iter().enumerate() {
-        let s = s as usize;
+    // Σ|p̂ − ô| over the union of supports: planned entries first, then
+    // observed-only entries (their planned mass is zero)
+    for (&v, &p) in planned {
+        let s = router.shard_of(v as NodeId);
         if osum[s] <= 0.0 {
             continue;
         }
-        let p = if psum[s] > 0.0 { planned[v] / psum[s] } else { 0.0 };
-        tv[s] += (p - observed[v] / osum[s]).abs();
+        let ph = if psum[s] > 0.0 { p / psum[s] } else { 0.0 };
+        let oh = observed.mass.get(&v).copied().unwrap_or(0.0) * observed.scale
+            / osum[s];
+        tv[s] += (ph - oh).abs();
     }
-    for (s, t) in tv.iter_mut().enumerate() {
-        *t = if osum[s] <= 0.0 { 0.0 } else { 0.5 * *t };
+    for (v, o) in observed.iter() {
+        if planned.contains_key(&v) {
+            continue;
+        }
+        let s = router.shard_of(v as NodeId);
+        if osum[s] > 0.0 {
+            tv[s] += o / osum[s];
+        }
+    }
+    for t in tv.iter_mut() {
+        *t *= 0.5;
     }
     tv
 }
 
-/// Quantize a decayed profile back to the u32 counts the fills consume,
+/// Quantize a decayed mass back to the u32 counts the fills consume,
 /// under a caller-chosen `scale`. The same scale must be applied to the
 /// node-visit and element-count arrays of one re-plan: planners like
 /// DUCATI compare value densities *across* the two arrays, so
 /// per-array scaling would skew the knapsack's feature-vs-adjacency
 /// choice. Uniform scaling itself is fill-invariant (thresholds and
 /// orderings compare relative magnitudes).
-fn quantize(xs: &[f64], scale: f64) -> Vec<u32> {
-    xs.iter().map(|&x| (x * scale).round().max(0.0) as u32).collect()
+fn quantize(x: f64, scale: f64) -> u32 {
+    (x * scale).round().max(0.0) as u32
 }
 
 /// One common scale for a re-plan's two count arrays: lifts decayed
 /// (sub-1) profiles to 10-bit resolution at the hottest entry so
 /// rounding cannot zero a still-meaningful profile, and leaves large
 /// counts untouched.
-fn common_scale(a: &[f64], b: &[f64]) -> f64 {
-    let maxv = a.iter().chain(b).cloned().fold(0.0f64, f64::max);
+fn common_scale(a: impl Iterator<Item = f64>, b: impl Iterator<Item = f64>) -> f64 {
+    let maxv = a.chain(b).fold(0.0f64, f64::max);
     if maxv > 0.0 && maxv < 1024.0 {
         1024.0 / maxv
     } else {
@@ -314,11 +344,45 @@ fn sleep_interruptibly(total: Duration, stop: &AtomicBool) {
     }
 }
 
+/// Materialize the dense masked `(node_visits, elem_counts)` arrays of
+/// one shard's re-plan from the sparse decayed profiles. O(n) for the
+/// zeroed allocations plus O(active) fills — only run when a shard is
+/// actually re-planned (the planner itself is O(n) anyway).
+fn masked_profile(
+    csc: &Csc,
+    acc_nv: &DecayedSparse,
+    acc_ec: &DecayedSparse,
+    router: &ShardRouter,
+    shard: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let nv_m: Vec<(u64, f64)> = acc_nv
+        .iter()
+        .filter(|&(v, _)| router.shard_of(v as NodeId) == shard)
+        .collect();
+    let ec_m: Vec<(u64, f64)> = acc_ec
+        .iter()
+        .filter(|&(e, _)| router.shard_of(elem_owner(csc, e)) == shard)
+        .collect();
+    let scale = common_scale(
+        nv_m.iter().map(|&(_, m)| m),
+        ec_m.iter().map(|&(_, m)| m),
+    );
+    let mut nv = vec![0u32; csc.n_nodes()];
+    for &(v, m) in &nv_m {
+        nv[v as usize] = quantize(m, scale);
+    }
+    let mut ec = vec![0u32; csc.n_edges()];
+    for &(e, m) in &ec_m {
+        ec[e as usize] = quantize(m, scale);
+    }
+    (nv, ec)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn refresh_loop(
     ds: &Dataset,
     runtime: &ShardedRuntime,
-    tracker: &AccessTracker,
+    tracker: &dyn WorkloadTracker,
     planner: &dyn CachePlanner,
     shard_budgets: &[u64],
     planned_visits: Vec<u32>,
@@ -326,24 +390,20 @@ fn refresh_loop(
     stop: &AtomicBool,
     stats_out: &Mutex<RefreshStats>,
 ) {
-    let n_nodes = ds.csc.n_nodes();
-    let n_edges = ds.csc.n_edges();
     let n_shards = runtime.n_shards();
-    let router = runtime.router();
-    // node → shard once up front: the hash is cheap but the drift check
-    // runs every poll over every node
-    let shard_ids: Vec<u32> =
-        (0..n_nodes).map(|v| router.shard_of(v as NodeId) as u32).collect();
+    let router = runtime.router().clone();
 
-    // raw planned masses; drifts normalize within each shard per check
-    let mut planned: Vec<f64> = if planned_visits.len() == n_nodes {
-        planned_visits.iter().map(|&c| c as f64).collect()
-    } else {
-        vec![0.0; n_nodes]
-    };
+    // sparse drift baseline: the nonzero planned masses
+    let mut planned: HashMap<u64, f64> = planned_visits
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > 0)
+        .map(|(v, &c)| (v as u64, c as f64))
+        .collect();
 
-    let mut acc_nv: Vec<f64> = vec![0.0; n_nodes];
-    let mut acc_ec: Vec<f64> = vec![0.0; n_edges];
+    let caps = tracker.heavy_hitter_caps();
+    let mut acc_nv = DecayedSparse::new(caps.map(|(n, _)| n));
+    let mut acc_ec = DecayedSparse::new(caps.map(|(_, e)| e));
     let mut acc_ts = 0.0f64;
     let mut acc_tf = 0.0f64;
     let mut batches_pending = 0u64;
@@ -354,28 +414,30 @@ fn refresh_loop(
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        // idle server: skip the O(nodes + edges) drain entirely
+        // idle server: skip the drain entirely
         if tracker.batches() == 0 && batches_pending == 0 {
             continue;
         }
-        let d = tracker.drain();
-        if d.batches > 0 {
-            for a in acc_nv.iter_mut() {
-                *a *= cfg.decay;
+        let drain0 = Instant::now();
+        let w = tracker.drain();
+        if w.batches > 0 {
+            acc_nv.decay(cfg.decay);
+            acc_ec.decay(cfg.decay);
+            acc_ts = acc_ts * cfg.decay + w.t_sample_ns;
+            acc_tf = acc_tf * cfg.decay + w.t_feature_ns;
+            for &(v, c) in &w.node_visits {
+                acc_nv.add(v as u64, c as f64);
             }
-            for a in acc_ec.iter_mut() {
-                *a *= cfg.decay;
+            for &(e, c) in &w.elem_counts {
+                acc_ec.add(e, c as f64);
             }
-            acc_ts = acc_ts * cfg.decay + d.t_sample_ns;
-            acc_tf = acc_tf * cfg.decay + d.t_feature_ns;
-            for (a, &c) in acc_nv.iter_mut().zip(&d.node_visits) {
-                *a += c as f64;
-            }
-            for (a, &c) in acc_ec.iter_mut().zip(&d.elem_counts) {
-                *a += c as f64;
-            }
-            batches_pending += d.batches;
+            acc_nv.prune();
+            acc_ec.prune();
+            stats.drained_keys += (w.node_visits.len() + w.elem_counts.len()) as u64;
+            stats.dropped_touches += w.dropped_touches;
+            batches_pending += w.batches;
         }
+        stats.drain_ns += drain0.elapsed().as_nanos() as f64;
         if batches_pending < cfg.min_batches.max(1) {
             continue;
         }
@@ -386,7 +448,7 @@ fn refresh_loop(
         // instead of re-checking unchanged data every poll (drift that
         // builds slowly still accumulates in the decayed profile)
         batches_pending = 0;
-        let drifts = shard_drifts(&planned, &acc_nv, &shard_ids, n_shards);
+        let drifts = shard_drifts_sparse(&planned, &acc_nv, &router, n_shards);
         stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
         let any_drifted = drifts.iter().any(|&d| d > cfg.drift_threshold);
         let drifted: Vec<usize> = if cfg.per_shard || n_shards == 1 {
@@ -401,19 +463,13 @@ fn refresh_loop(
             continue;
         }
 
-        // re-plan each drifted shard on this thread from the profile
-        // masked to the shard's own nodes, within the shard's own
-        // budget, and hot-swap only that shard; the serving path — and
-        // every *other* shard — never waits on any of this
+        // re-plan each drifted shard on this thread from the decayed
+        // profile masked to the shard's own nodes, within the shard's
+        // own budget, and hot-swap only that shard; the serving path —
+        // and every *other* shard — never waits on any of this
         for s in drifted {
             let t0 = Instant::now();
-            // same ownership rule as the offline sharded plan: one
-            // masking implementation, shared with cache/shard.rs
-            let nv_m = mask_node_counts(&acc_nv, router, s);
-            let ec_m = mask_elem_counts(&acc_ec, &ds.csc, router, s);
-            let scale = common_scale(&nv_m, &ec_m);
-            let nv = quantize(&nv_m, scale);
-            let ec = quantize(&ec_m, scale);
+            let (nv, ec) = masked_profile(&ds.csc, &acc_nv, &acc_ec, &router, s);
             let profile = WorkloadProfile {
                 node_visits: &nv,
                 elem_counts: &ec,
@@ -428,10 +484,13 @@ fn refresh_loop(
             stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
             stats.replans += 1;
             stats.shard_replans[s] += 1;
-            // re-center this shard's drift baseline on what it now serves
-            for v in 0..n_nodes {
-                if shard_ids[v] == s as u32 {
-                    planned[v] = acc_nv[v];
+            // re-center this shard's drift baseline on what it now
+            // serves (sparse: drop the shard's old entries, insert the
+            // observed masses)
+            planned.retain(|&v, _| router.shard_of(v as NodeId) != s);
+            for (v, m) in acc_nv.iter() {
+                if router.shard_of(v as NodeId) == s {
+                    planned.insert(v, m);
                 }
             }
         }
@@ -446,6 +505,7 @@ mod tests {
     use crate::cache::planner::{split_budget, DciPlanner};
     use crate::cache::runtime::CacheSnapshot;
     use crate::cache::shard::{plan_sharded, ShardRouter, ShardedRuntime};
+    use crate::cache::tracker::{AccessTracker, SketchTracker};
     use crate::graph::datasets;
     use crate::mem::CostModel;
     use crate::sampler::{presample, Fanout};
@@ -461,79 +521,156 @@ mod tests {
         }
     }
 
-    #[test]
-    fn tracker_counts_and_drains() {
-        let t = AccessTracker::new(4, 6);
-        t.record_node(1);
-        t.record_node(1);
-        t.record_node(3);
-        t.record_elem(5);
-        t.record_batch(100.0, 200.0);
-        assert_eq!(t.batches(), 1);
-        let d = t.drain();
-        assert_eq!(d.node_visits, vec![0, 2, 0, 1]);
-        assert_eq!(d.elem_counts[5], 1);
-        assert_eq!(d.batches, 1);
-        assert_eq!(d.t_sample_ns, 100.0);
-        assert_eq!(d.t_feature_ns, 200.0);
-        // drained: everything reset
-        let d2 = t.drain();
-        assert_eq!(d2.batches, 0);
-        assert!(d2.node_visits.iter().all(|&c| c == 0));
+    /// Helper: sparse observed profile from `(key, mass)` pairs.
+    fn observed(pairs: &[(u64, f64)]) -> DecayedSparse {
+        let mut o = DecayedSparse::new(None);
+        for &(k, m) in pairs {
+            o.add(k, m);
+        }
+        o
+    }
+
+    fn planned(pairs: &[(u64, f64)]) -> HashMap<u64, f64> {
+        pairs.iter().copied().collect()
     }
 
     #[test]
     fn single_shard_drift_is_the_global_tv_distance() {
-        let ids = vec![0u32; 3];
-        let p = [1.0, 1.0, 0.0];
+        let r = ShardRouter::new(1);
+        let p = planned(&[(0, 1.0), (1, 1.0)]);
         // matched distribution → 0
-        assert_eq!(shard_drifts(&p, &[2.0, 2.0, 0.0], &ids, 1), vec![0.0]);
+        let d = shard_drifts_sparse(&p, &observed(&[(0, 2.0), (1, 2.0)]), &r, 1);
+        assert!(d[0].abs() < 1e-12);
         // fully disjoint mass → 1
-        let d = shard_drifts(&p, &[0.0, 0.0, 7.0], &ids, 1);
+        let d = shard_drifts_sparse(&p, &observed(&[(2, 7.0)]), &r, 1);
         assert!((d[0] - 1.0).abs() < 1e-12);
         // empty observation → no drift signal
-        assert_eq!(shard_drifts(&p, &[0.0, 0.0, 0.0], &ids, 1), vec![0.0]);
+        let d = shard_drifts_sparse(&p, &observed(&[]), &r, 1);
+        assert_eq!(d, vec![0.0]);
         // no planned mass but live traffic → 0.5 (half the mass is new)
-        let d = shard_drifts(&[0.0, 0.0, 0.0], &[3.0, 1.0, 0.0], &ids, 1);
+        let d = shard_drifts_sparse(&planned(&[]), &observed(&[(0, 3.0), (1, 1.0)]), &r, 1);
         assert!((d[0] - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn drift_is_isolated_to_the_observed_shard() {
-        // nodes 0,1 on shard 0; nodes 2,3 on shard 1
-        let ids = vec![0u32, 0, 1, 1];
-        let planned = [10.0, 0.0, 5.0, 5.0];
-        // shard 0's traffic flipped to node 1; shard 1 saw nothing
-        let observed = [0.0, 8.0, 0.0, 0.0];
-        let d = shard_drifts(&planned, &observed, &ids, 2);
+        // find two nodes per shard under the real router
+        let r = ShardRouter::new(2);
+        let pick = |s: usize, n: usize| -> Vec<u64> {
+            (0u64..10_000).filter(|&v| r.shard_of(v as NodeId) == s).take(n).collect()
+        };
+        let s0 = pick(0, 2);
+        let s1 = pick(1, 2);
+        let p = planned(&[(s0[0], 10.0), (s1[0], 5.0), (s1[1], 5.0)]);
+        // shard 0's traffic flipped to its other node; shard 1 silent
+        let d = shard_drifts_sparse(&p, &observed(&[(s0[1], 8.0)]), &r, 2);
         assert!((d[0] - 1.0).abs() < 1e-12, "shard 0 fully drifted: {d:?}");
         assert_eq!(d[1], 0.0, "unobserved shard must not drift: {d:?}");
         // shard 1's traffic matching its plan stays quiet while shard 0
         // drifts — per-shard normalization keeps them independent
-        let observed = [0.0, 8.0, 4.0, 4.0];
-        let d = shard_drifts(&planned, &observed, &ids, 2);
+        let d = shard_drifts_sparse(
+            &p,
+            &observed(&[(s0[1], 8.0), (s1[0], 4.0), (s1[1], 4.0)]),
+            &r,
+            2,
+        );
         assert!(d[0] > 0.9);
         assert!(d[1] < 1e-12);
     }
 
     #[test]
+    fn decayed_sparse_matches_the_dense_recurrence() {
+        // acc = acc*0.5 + window, three windows on one key
+        let mut acc = DecayedSparse::new(None);
+        for w in [8.0, 4.0, 2.0] {
+            acc.decay(0.5);
+            acc.add(7, w);
+        }
+        // dense: ((8*0.5)+4)*0.5 + 2 = 6
+        let got: Vec<(u64, f64)> = acc.iter().collect();
+        assert_eq!(got.len(), 1);
+        assert!((got[0].1 - 6.0).abs() < 1e-9);
+        // rebase path: many decay steps must not lose precision
+        let mut acc = DecayedSparse::new(None);
+        acc.add(1, 1024.0);
+        for _ in 0..100 {
+            acc.decay(0.7);
+        }
+        acc.add(1, 3.0);
+        let m = acc.iter().next().unwrap().1;
+        assert!((m - (1024.0 * 0.7f64.powi(100) + 3.0)).abs() < 1e-6, "{m}");
+    }
+
+    #[test]
+    fn decayed_sparse_prunes_dust_and_keeps_heavy_hitters() {
+        let mut acc = DecayedSparse::new(Some(3));
+        acc.decay(0.5);
+        for k in 0..10u64 {
+            acc.add(k, (k + 1) as f64);
+        }
+        acc.prune();
+        let kept: Vec<u64> = acc.iter().map(|(k, _)| k).collect();
+        assert_eq!(kept.len(), 3, "top-k prune");
+        assert!(kept.contains(&9) && kept.contains(&8) && kept.contains(&7));
+        // dust: decay a lone small mass until it evaporates
+        let mut acc = DecayedSparse::new(None);
+        acc.add(5, 1.0);
+        for _ in 0..40 {
+            acc.decay(0.5);
+        }
+        acc.prune();
+        assert_eq!(acc.iter().count(), 0, "decayed dust must be dropped");
+    }
+
+    #[test]
+    fn masked_profile_respects_shard_ownership() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let router = ShardRouter::new(3);
+        let mut nv = DecayedSparse::new(None);
+        let mut ec = DecayedSparse::new(None);
+        for v in 0..ds.csc.n_nodes() as u64 {
+            nv.add(v, (v % 7 + 1) as f64);
+        }
+        for e in (0..ds.csc.n_edges() as u64).step_by(3) {
+            ec.add(e, 2.0);
+        }
+        for s in 0..3 {
+            let (nvd, ecd) = masked_profile(&ds.csc, &nv, &ec, &router, s);
+            for (v, &c) in nvd.iter().enumerate() {
+                if router.shard_of(v as NodeId) != s {
+                    assert_eq!(c, 0, "node {v} leaked into shard {s}");
+                }
+            }
+            for (e, &c) in ecd.iter().enumerate() {
+                if c > 0 {
+                    assert_eq!(
+                        router.shard_of(elem_owner(&ds.csc, e as u64)),
+                        s,
+                        "elem {e} leaked into shard {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn quantize_preserves_relative_magnitudes() {
         let nv = [0.1, 0.2, 0.4];
-        let scale = common_scale(&nv, &[]);
-        let q = quantize(&nv, scale);
+        let scale = common_scale(nv.iter().copied(), std::iter::empty());
+        let q: Vec<u32> = nv.iter().map(|&x| quantize(x, scale)).collect();
         assert!(q[2] > q[1] && q[1] > q[0]);
         assert_eq!(q[2], 1024);
-        assert_eq!(quantize(&[0.0, 0.0], common_scale(&[0.0, 0.0], &[])), vec![0, 0]);
         // large counts pass through unscaled
         let big = [2000.0, 4000.0];
-        assert_eq!(quantize(&big, common_scale(&big, &[])), vec![2000, 4000]);
+        let s = common_scale(big.iter().copied(), std::iter::empty());
+        assert_eq!(s, 1.0);
         // ONE scale across both arrays of a re-plan: the hotter array
         // pins it, so cross-array density ratios survive quantization
         let ec = [4000.0];
-        let s = common_scale(&nv, &ec);
+        let s = common_scale(nv.iter().copied(), ec.iter().copied());
         assert_eq!(s, 1.0);
-        assert_eq!(quantize(&nv, s), vec![0, 0, 0]);
-        assert_eq!(quantize(&ec, s), vec![4000]);
+        assert_eq!(quantize(nv[0], s), 0);
+        assert_eq!(quantize(ec[0], s), 4000);
     }
 
     #[test]
@@ -547,7 +684,7 @@ mod tests {
         let r = Refresher::spawn(
             Arc::clone(&ds),
             Arc::clone(&runtime),
-            Arc::clone(&tracker),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
             Box::new(DciPlanner),
             vec![200_000],
             planned,
@@ -567,10 +704,46 @@ mod tests {
         assert!(stats.replans >= 1, "drift should have forced a re-plan: {stats:?}");
         assert!(stats.last_drift > 0.3);
         assert!(stats.max_install_h2d_bytes > 0);
+        assert!(stats.drained_keys >= 2, "node 1 + elem 0 drained: {stats:?}");
+        assert!(stats.drain_ns > 0.0);
+        assert_eq!(stats.dropped_touches, 0);
         assert!(runtime.swaps() >= 1);
         // the refreshed snapshot caches the observed hot node
         let snap = runtime.load();
         assert!(snap.feat.as_ref().unwrap().contains(1));
+    }
+
+    /// The tentpole guarantee: the sketch path drives the same re-plan
+    /// decisions as the dense path on a sparse drift stream.
+    #[test]
+    fn sketch_refresher_replans_on_forced_drift() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
+        let tracker =
+            Arc::new(SketchTracker::with_defaults(ds.csc.n_nodes(), ds.csc.n_edges()));
+        let mut planned = vec![0u32; ds.csc.n_nodes()];
+        planned[0] = 100;
+        let r = Refresher::spawn(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            fast_cfg(0.3),
+        );
+        for _ in 0..50 {
+            tracker.record_node(1);
+        }
+        tracker.record_elem(0);
+        tracker.record_batch(50.0, 50.0);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = r.stop();
+        assert!(stats.replans >= 1, "sketch drift must re-plan: {stats:?}");
+        assert!(runtime.load().feat.as_ref().unwrap().contains(1));
     }
 
     #[test]
@@ -581,7 +754,7 @@ mod tests {
         let r = Refresher::spawn(
             Arc::clone(&ds),
             Arc::clone(&runtime),
-            Arc::clone(&tracker),
+            tracker,
             Box::new(DciPlanner),
             vec![100_000],
             Vec::new(),
@@ -590,12 +763,13 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         let stats = r.stop();
         assert_eq!(stats.replans, 0, "no traffic, no re-plan");
+        assert_eq!(stats.drained_keys, 0, "idle polls must not drain");
         assert_eq!(runtime.swaps(), 0);
     }
 
-    /// The tentpole invariant: traffic that drifts inside one shard
-    /// re-plans *only* that shard; every other shard keeps serving its
-    /// original epoch.
+    /// The PR 3 invariant, unchanged by the sparse rework: traffic that
+    /// drifts inside one shard re-plans *only* that shard; every other
+    /// shard keeps serving its original epoch.
     #[test]
     fn refresher_replans_only_the_drifted_shard() {
         let n_shards = 4;
@@ -625,7 +799,7 @@ mod tests {
         let r = Refresher::spawn(
             Arc::clone(&ds),
             Arc::clone(&runtime),
-            Arc::clone(&tracker),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
             Box::new(DciPlanner),
             budgets,
             stats0.node_visits.clone(),

@@ -54,6 +54,7 @@ pub struct CacheSnapshot {
 }
 
 impl CacheSnapshot {
+    /// A pre-install snapshot (epoch 0 until a runtime installs it).
     pub fn new(
         adj: Option<AdjCache>,
         feat: Option<FeatCache>,
@@ -67,6 +68,7 @@ impl CacheSnapshot {
         CacheSnapshot { epoch: 0, adj: None, feat: None, alloc: None }
     }
 
+    /// The epoch that installed this snapshot (0 = never installed).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -176,6 +178,7 @@ pub struct SnapshotHandle {
 }
 
 impl SnapshotHandle {
+    /// A handle starting on `rt`'s current snapshot.
     pub fn new(rt: &Arc<DualCacheRuntime>) -> SnapshotHandle {
         SnapshotHandle { cached: rt.load(), rt: Arc::clone(rt), deferred_streak: 0 }
     }

@@ -59,6 +59,7 @@ impl ShardRouter {
         ShardRouter { n_shards }
     }
 
+    /// Number of shards this router partitions over.
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
@@ -69,13 +70,10 @@ impl ShardRouter {
         if self.n_shards == 1 {
             return 0;
         }
-        // splitmix64 finalizer: cheap, stable, and avalanches low bits
-        // so consecutive node ids spread across shards
-        let mut x = (v as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
-        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-        x ^= x >> 31;
-        (x % self.n_shards as u64) as usize
+        // splitmix64: cheap, stable, and avalanches low bits so
+        // consecutive node ids spread across shards (the one shared
+        // implementation in util — the partition must never drift)
+        (crate::util::splitmix64(v as u64) % self.n_shards as u64) as usize
     }
 }
 
@@ -107,10 +105,12 @@ impl ShardedRuntime {
         ShardedRuntime::new(ShardRouter::new(1), vec![snapshot])
     }
 
+    /// Number of shards (= simulated devices) in this runtime.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// The node → shard partition this runtime routes by.
     pub fn router(&self) -> &ShardRouter {
         &self.router
     }
@@ -179,6 +179,8 @@ pub struct ShardedHandle {
 }
 
 impl ShardedHandle {
+    /// A handle over every shard of `rt`, starting on their current
+    /// snapshots.
     pub fn new(rt: &Arc<ShardedRuntime>) -> ShardedHandle {
         let handles = rt.shards().iter().map(SnapshotHandle::new).collect();
         ShardedHandle { rt: Arc::clone(rt), handles }
@@ -213,10 +215,12 @@ impl<'a> ShardView<'a> {
         ShardView { router, handles }
     }
 
+    /// Number of shards this view reads across.
     pub fn n_shards(&self) -> usize {
         self.handles.len()
     }
 
+    /// The shard that owns `v` (delegates to the router).
     #[inline]
     pub fn shard_of(&self, v: NodeId) -> usize {
         self.router.shard_of(v)
@@ -289,7 +293,9 @@ impl<'a> AdjSource for RoutedAdj<'a> {
 /// A sharded plan: one [`CachePlan`] per shard plus the exact-integer
 /// budget split they were planned under.
 pub struct ShardedPlan {
+    /// One plan per shard, in shard order.
     pub plans: Vec<CachePlan>,
+    /// The exact-integer budget each shard was planned under.
     pub budgets: Vec<u64>,
 }
 
@@ -321,6 +327,18 @@ pub fn mask_node_counts<T: Copy + Default>(
             }
         })
         .collect()
+}
+
+/// The node whose neighbor list CSC offset `at` sits in — the owner
+/// whose shard an element's cached state (and its access counts)
+/// belongs to. O(log n) binary search over `col_ptr`; the refresh
+/// loop's sparse profiles resolve ownership per touched element with
+/// this instead of scanning every span ([`mask_elem_counts`] is the
+/// dense-slice form of the same rule).
+#[inline]
+pub fn elem_owner(csc: &Csc, at: u64) -> NodeId {
+    debug_assert!((at as usize) < csc.n_edges());
+    (csc.col_ptr.partition_point(|&p| p <= at) - 1) as NodeId
 }
 
 /// `counts` (parallel to `csc.row_index`) with every element whose
@@ -422,6 +440,17 @@ mod tests {
             assert_eq!(nonzero, 1, "node {v} must live in exactly one shard mask");
             let s = r.shard_of(v as NodeId);
             assert_eq!(masks[s][v], counts[v]);
+        }
+    }
+
+    #[test]
+    fn elem_owner_matches_span_membership() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        for v in 0..ds.csc.n_nodes() {
+            let span = ds.csc.col_ptr[v]..ds.csc.col_ptr[v + 1];
+            for at in span {
+                assert_eq!(elem_owner(&ds.csc, at), v as NodeId, "offset {at}");
+            }
         }
     }
 

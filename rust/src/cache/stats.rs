@@ -20,6 +20,7 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Empty stats (all ledgers zero).
     pub fn new() -> Self {
         Self::default()
     }
@@ -50,6 +51,7 @@ impl CacheStats {
         self.sample.modeled_ns(m) + self.feature.modeled_ns(m)
     }
 
+    /// Fold `other`'s ledgers into this one, stage by stage.
     pub fn merge(&mut self, other: &CacheStats) {
         self.sample.merge(&other.sample);
         self.feature.merge(&other.feature);

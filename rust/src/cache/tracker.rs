@@ -1,0 +1,911 @@
+//! Serving-time workload tracking behind one trait: dense exact
+//! counters or a count-min sketch with an O(touched) drain.
+//!
+//! The online refresh loop (see [`super::refresh`]) needs per-node and
+//! per-CSC-element access counts from the serving hot path. Two
+//! implementations of [`WorkloadTracker`] provide them:
+//!
+//! - [`AccessTracker`] (`tracker=dense`) — two full count arrays,
+//!   O(nodes + edges) memory and drain cost. Exact: every recorded
+//!   touch is counted once, whatever the thread interleaving. This is
+//!   the accuracy reference the sketch is benchmarked against.
+//! - [`SketchTracker`] (`tracker=sketch`) — a conservative-update
+//!   count-min sketch per key space (nodes, CSC elements) plus a
+//!   bounded *touched-since-last-drain* set, so the background drain
+//!   enumerates only the keys the window actually touched: O(touched)
+//!   instead of O(nodes + edges), with constant memory (~17 MiB at the
+//!   defaults, touched sets included) independent of graph size. Estimates are conservative (≥ the true
+//!   count; the property tests hold this single-threaded) and within
+//!   ε·total with probability 1−δ — see [`cms_dims`] for the ε/δ →
+//!   width/depth derivation, and DESIGN.md §Workload tracking for why
+//!   that error bound is sufficient for drift detection and re-plans.
+//!
+//! Trackers are recorded from the serving thread and drained from the
+//! refresh thread. The dense tracker's per-counter atomics make its
+//! window boundaries exact; the sketch flips between two lanes on
+//! drain, so a handful of touches racing the flip may land on either
+//! side of the boundary — and a straggler that slips into the lane
+//! mid-drain is detected and discarded with that window (see
+//! `TouchedSet::drain`) rather than ever corrupting a later one. Both
+//! are approximations drift detection tolerates by construction.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use crate::graph::NodeId;
+use crate::util::splitmix64;
+
+/// One drained window of tracker counts, sparse: only the keys touched
+/// since the previous drain appear. The dense tracker emits its
+/// nonzero entries; the sketch emits its touched set's estimates.
+pub struct DrainedWindow {
+    /// `(node, visits)` pairs for the feature-loading stage.
+    pub node_visits: Vec<(NodeId, u32)>,
+    /// `(CSC offset, accesses)` pairs for the sampling stage.
+    pub elem_counts: Vec<(u64, u32)>,
+    /// Served batches in the window.
+    pub batches: u64,
+    /// Modeled sampling-stage ns accumulated over the window.
+    pub t_sample_ns: f64,
+    /// Modeled feature-stage ns accumulated over the window.
+    pub t_feature_ns: f64,
+    /// Touches whose key could not be logged because the bounded
+    /// touched set saturated (sketch only). A saturated window is
+    /// closed with a full sketch clear, so the unenumerated keys'
+    /// counts are **discarded with it** — a one-window undercount the
+    /// decayed drift profile absorbs. Persistent nonzero values mean
+    /// the drain interval is too long for the traffic.
+    pub dropped_touches: u64,
+}
+
+/// Serving-time access accumulator: the hot path records, the
+/// background [`Refresher`](super::Refresher) drains.
+///
+/// Implementations must be cheap enough for one call per gathered node
+/// / sampled element on the serving path, and safe to drain
+/// concurrently with recording.
+pub trait WorkloadTracker: Send + Sync {
+    /// Implementation name (`"dense"` | `"sketch"`), for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Record one feature-stage visit of `v` (gather stage).
+    fn record_node(&self, v: NodeId);
+
+    /// Record one adjacency-element access at CSC offset `at`
+    /// (sampling stage).
+    fn record_elem(&self, at: usize);
+
+    /// Record a served batch's modeled stage times (Eq. 1 ratio input).
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64);
+
+    /// Batches recorded since the last drain.
+    fn batches(&self) -> u64;
+
+    /// Take the window's counts, resetting the tracker.
+    fn drain(&self) -> DrainedWindow;
+
+    /// `(node, elem)` heavy-hitter caps the refresh accumulator should
+    /// prune to, or `None` for exact (unbounded) accumulation. A
+    /// sketch bounds its own drain, so it also bounds the decayed
+    /// profile built from it — keeping the whole refresh path
+    /// O(touched + caps) in memory and time.
+    fn heavy_hitter_caps(&self) -> Option<(usize, usize)>;
+}
+
+/// Batch counter + modeled stage-time accumulators shared by both
+/// tracker implementations (integer ns so relaxed adds commute).
+#[derive(Default)]
+struct StageClock {
+    batches: AtomicU64,
+    t_sample_ns: AtomicU64,
+    t_feature_ns: AtomicU64,
+}
+
+impl StageClock {
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.t_sample_ns
+            .fetch_add(t_sample_ns.max(0.0) as u64, Ordering::Relaxed);
+        self.t_feature_ns
+            .fetch_add(t_feature_ns.max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Drain into `(batches, t_sample_ns, t_feature_ns)`.
+    fn drain(&self) -> (u64, f64, f64) {
+        (
+            self.batches.swap(0, Ordering::Relaxed),
+            self.t_sample_ns.swap(0, Ordering::Relaxed) as f64,
+            self.t_feature_ns.swap(0, Ordering::Relaxed) as f64,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense tracker (the PR 2 shape, now one of two implementations)
+// ---------------------------------------------------------------------------
+
+/// Exact dense tracker: one `AtomicU32` per node and per CSC element.
+/// O(nodes + edges) memory and drain cost — the accuracy reference
+/// `tracker=sketch` is measured against (`benches/sketch_tracker.rs`).
+///
+/// The hot path adds with relaxed atomics (u32 adds commute, so counts
+/// are exact whatever the thread interleaving); the refresher drains
+/// with `swap(0)`, so a touch racing the drain lands in exactly one
+/// window.
+pub struct AccessTracker {
+    node_visits: Vec<AtomicU32>,
+    elem_counts: Vec<AtomicU32>,
+    clock: StageClock,
+}
+
+impl AccessTracker {
+    /// A tracker sized for `n_nodes` nodes and `n_edges` CSC elements.
+    pub fn new(n_nodes: usize, n_edges: usize) -> Self {
+        AccessTracker {
+            node_visits: (0..n_nodes).map(|_| AtomicU32::new(0)).collect(),
+            elem_counts: (0..n_edges).map(|_| AtomicU32::new(0)).collect(),
+            clock: StageClock::default(),
+        }
+    }
+}
+
+impl WorkloadTracker for AccessTracker {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    #[inline]
+    fn record_node(&self, v: NodeId) {
+        self.node_visits[v as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn record_elem(&self, at: usize) {
+        self.elem_counts[at].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
+        self.clock.record_batch(t_sample_ns, t_feature_ns);
+    }
+
+    fn batches(&self) -> u64 {
+        self.clock.batches()
+    }
+
+    /// O(nodes + edges): scans both arrays, emitting nonzero entries.
+    fn drain(&self) -> DrainedWindow {
+        let node_visits = self
+            .node_visits
+            .iter()
+            .enumerate()
+            .filter_map(|(v, c)| {
+                let c = c.swap(0, Ordering::Relaxed);
+                (c > 0).then_some((v as NodeId, c))
+            })
+            .collect();
+        let elem_counts = self
+            .elem_counts
+            .iter()
+            .enumerate()
+            .filter_map(|(e, c)| {
+                let c = c.swap(0, Ordering::Relaxed);
+                (c > 0).then_some((e as u64, c))
+            })
+            .collect();
+        let (batches, t_sample_ns, t_feature_ns) = self.clock.drain();
+        DrainedWindow {
+            node_visits,
+            elem_counts,
+            batches,
+            t_sample_ns,
+            t_feature_ns,
+            dropped_touches: 0,
+        }
+    }
+
+    fn heavy_hitter_caps(&self) -> Option<(usize, usize)> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Count-min sketch
+// ---------------------------------------------------------------------------
+
+/// Default point-query error target: estimates within `ε·total` of the
+/// true count. `1e-4` makes the absolute error ≤ 1% of any key holding
+/// ≥ 1% of the window's mass — the "≤ 1% relative error on hot nodes"
+/// target (hot nodes are the only ones a cache plan acts on).
+pub const DEFAULT_EPSILON: f64 = 1e-4;
+
+/// Default failure probability of the ε bound per query.
+pub const DEFAULT_DELTA: f64 = 1e-2;
+
+/// Hard ceiling on sketch depth (rows). δ = e^-16 ≈ 1e-7 is far past
+/// any useful failure probability, and the bound lets the hot-path
+/// update keep its row indices on the stack.
+pub const MAX_SKETCH_DEPTH: usize = 16;
+
+/// The standard count-min dimensioning: `width = ⌈e/ε⌉` rows wide (one
+/// row's expected overcount is `total/width ≤ ε·total/e`, so Markov
+/// gives `P[overcount > ε·total] ≤ 1/e` per row) and `depth =
+/// ⌈ln(1/δ)⌉` independent rows (the estimate is the row minimum, so
+/// all rows must fail at once: `(1/e)^depth ≤ δ`), capped at
+/// [`MAX_SKETCH_DEPTH`].
+pub fn cms_dims(epsilon: f64, delta: f64) -> (usize, usize) {
+    let width = (std::f64::consts::E / epsilon).ceil().max(1.0) as usize;
+    let depth = (1.0 / delta).ln().ceil().max(1.0) as usize;
+    (width, depth.min(MAX_SKETCH_DEPTH))
+}
+
+/// A conservative-update count-min sketch over `u64` keys.
+///
+/// `add` reads the key's current estimate (minimum over its `depth`
+/// cells) and raises only the cells below `estimate + 1` — the
+/// conservative-update variant, which never undercounts a
+/// single-writer stream and overcounts strictly less than the textbook
+/// `fetch_add` update. Cells are atomics so a concurrent reader
+/// (the draining refresher) sees consistent `u32`s.
+pub struct CountMinSketch {
+    width: usize,
+    depth: usize,
+    /// `depth` rows of `width` cells, row-major.
+    cells: Vec<AtomicU32>,
+}
+
+impl CountMinSketch {
+    /// A sketch with explicit dimensions (see [`cms_dims`]; `depth` is
+    /// clamped to `1..=`[`MAX_SKETCH_DEPTH`]).
+    pub fn new(width: usize, depth: usize) -> Self {
+        let width = width.max(1);
+        let depth = depth.clamp(1, MAX_SKETCH_DEPTH);
+        CountMinSketch {
+            width,
+            depth,
+            cells: (0..width * depth).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    /// A sketch dimensioned from error bounds (see [`cms_dims`]).
+    pub fn from_error_bounds(epsilon: f64, delta: f64) -> Self {
+        let (w, d) = cms_dims(epsilon, delta);
+        Self::new(w, d)
+    }
+
+    /// Cells per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Independent rows.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Flat cell index of `key` in `row`: per-row seed folded into the
+    /// key before the shared splitmix64 mix (same avalanche
+    /// `ShardRouter` relies on).
+    #[inline]
+    fn index(&self, row: usize, key: u64) -> usize {
+        let h = splitmix64(key ^ (((row as u64) << 56) | 0x5bd1_e995));
+        row * self.width + (h % self.width as u64) as usize
+    }
+
+    #[inline]
+    fn cell(&self, row: usize, key: u64) -> &AtomicU32 {
+        &self.cells[self.index(row, key)]
+    }
+
+    /// Conservative-update increment of `key` by one. Hashes each row
+    /// once: the indices found while taking the minimum are reused for
+    /// the raise — this runs once per gathered node / sampled element
+    /// on the serving hot path.
+    #[inline]
+    pub fn add(&self, key: u64) {
+        let mut idx = [0usize; MAX_SKETCH_DEPTH];
+        let mut est = u32::MAX;
+        for row in 0..self.depth {
+            let i = self.index(row, key);
+            idx[row] = i;
+            est = est.min(self.cells[i].load(Ordering::Relaxed));
+        }
+        let target = est.saturating_add(1);
+        for &i in &idx[..self.depth] {
+            self.cells[i].fetch_max(target, Ordering::Relaxed);
+        }
+    }
+
+    /// Point estimate: minimum over the key's cells (never below the
+    /// true count of a single-writer stream).
+    #[inline]
+    pub fn estimate(&self, key: u64) -> u32 {
+        (0..self.depth)
+            .map(|row| self.cell(row, key).load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Zero only `key`'s cells — O(depth). Draining a window clears
+    /// exactly the cells its touched keys hash into (collided keys
+    /// share cells; zeroing twice is harmless), so no O(width·depth)
+    /// sweep is needed on the common path.
+    pub fn clear_key(&self, key: u64) {
+        for row in 0..self.depth {
+            self.cell(row, key).store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Zero every cell — the fallback when the touched set saturated
+    /// and the per-key clear cannot reach every written cell.
+    pub fn clear_all(&self) {
+        for c in &self.cells {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded touched-set
+// ---------------------------------------------------------------------------
+
+/// Linear probes before an insert gives up and counts a drop.
+const MAX_PROBES: usize = 64;
+
+/// Log slot that holds no key this window (keys must be < `u64::MAX`;
+/// node ids and CSC offsets always are).
+const EMPTY_LOG: u64 = u64::MAX;
+
+/// A bounded lock-free "keys touched since last drain" set: an
+/// open-addressed table for dedup plus an append log for O(touched)
+/// enumeration. Capacity is fixed at construction; an insert that
+/// cannot find a slot (or a full log) increments `dropped` instead of
+/// blocking — see [`DrainedWindow::dropped_touches`] for what a
+/// saturated window costs.
+struct TouchedSet {
+    /// Open-addressed dedup table; a slot holds `key + 1` (0 = empty).
+    table: Vec<AtomicU64>,
+    /// Insertion-ordered log of unique keys; unwritten/retired slots
+    /// hold [`EMPTY_LOG`].
+    log: Vec<AtomicU64>,
+    /// Log slots handed out to inserts (may briefly run ahead of
+    /// `committed` while an insert's slot store is in flight).
+    reserved: AtomicUsize,
+    /// Log slots whose key store has completed (`Release`; the drain's
+    /// `Acquire` load makes those stores visible).
+    committed: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl TouchedSet {
+    /// A set logging up to `cap` unique keys per window (rounded up to
+    /// a power of two; the dedup table is twice that for load ≤ 0.5).
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(8).next_power_of_two();
+        TouchedSet {
+            table: (0..cap * 2).map(|_| AtomicU64::new(0)).collect(),
+            log: (0..cap).map(|_| AtomicU64::new(EMPTY_LOG)).collect(),
+            reserved: AtomicUsize::new(0),
+            committed: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Record `key` as touched (idempotent per window).
+    fn insert(&self, key: u64) {
+        let tag = key + 1;
+        let mask = self.table.len() - 1;
+        let mut at = (splitmix64(key) as usize) & mask;
+        for _ in 0..MAX_PROBES {
+            let cur = self.table[at].load(Ordering::Relaxed);
+            if cur == tag {
+                return; // already logged this window
+            }
+            if cur == 0 {
+                match self.table[at].compare_exchange(
+                    0,
+                    tag,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let i = self.reserved.fetch_add(1, Ordering::Relaxed);
+                        if i < self.log.len() {
+                            self.log[i].store(key, Ordering::Relaxed);
+                            self.committed.fetch_add(1, Ordering::Release);
+                        } else {
+                            // log full: undo nothing (the table entry
+                            // keeps dedup working), count the miss.
+                            // `reserved` keeps growing until the drain
+                            // resets it — pinning it back here could
+                            // race a drain's reset and poison a later
+                            // window's reservations.
+                            self.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return;
+                    }
+                    Err(now) if now == tag => return,
+                    Err(_) => {} // someone else took the slot; keep probing
+                }
+            }
+            at = (at + 1) & mask;
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enumerate the window's keys, clear the set, and return
+    /// `(keys, dropped)`.
+    ///
+    /// Concurrency: a recorder racing this drain (it read the lane
+    /// pointer just before the tracker flipped lanes) cannot ghost a
+    /// key — a key is "ghosted" if its dedup-table tag survives a
+    /// drain that never enumerated it, muting every later touch:
+    /// - an insert still between its table CAS and its slot
+    ///   reservation simply reserves in the *next* window (the drain
+    ///   resets the counters, not the straggler's tag), so the key is
+    ///   enumerated — and its table entry cleared — one window late;
+    /// - an insert whose slot store is still in flight is caught by
+    ///   `reserved != committed` (or by its slot still reading
+    ///   [`EMPTY_LOG`] under the `Acquire`/`Release` pairing) and
+    ///   forces the saturation path, whose full table sweep erases the
+    ///   straggler's tag so the key re-logs on its next touch.
+    fn drain(&self) -> (Vec<u64>, u64) {
+        let c = self.committed.load(Ordering::Acquire);
+        let r = self.reserved.load(Ordering::Relaxed);
+        let n = c.min(self.log.len());
+        let mut skipped = 0u64;
+        let keys: Vec<u64> = (0..n)
+            .filter_map(|i| {
+                let k = self.log[i].swap(EMPTY_LOG, Ordering::Relaxed);
+                if k == EMPTY_LOG {
+                    skipped += 1;
+                    None
+                } else {
+                    Some(k)
+                }
+            })
+            .collect();
+        let mut dropped = self.dropped.swap(0, Ordering::Relaxed) + skipped;
+        // clean only if no insert was in flight across our snapshot
+        let clean = r == c
+            && self
+                .reserved
+                .compare_exchange(r, 0, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok();
+        if !clean {
+            self.reserved.store(0, Ordering::Relaxed);
+            dropped += 1;
+        }
+        self.committed.store(0, Ordering::Relaxed);
+        if dropped > 0 {
+            // some touched keys never made the log (or a straggler's
+            // entry is unaccounted); only a full sweep clears their
+            // table entries
+            for slot in &self.table {
+                slot.store(0, Ordering::Relaxed);
+            }
+        } else {
+            let mask = self.table.len() - 1;
+            for &key in &keys {
+                let tag = key + 1;
+                let mut at = (splitmix64(key) as usize) & mask;
+                for _ in 0..MAX_PROBES {
+                    if self.table[at]
+                        .compare_exchange(tag, 0, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        break;
+                    }
+                    at = (at + 1) & mask;
+                }
+            }
+        }
+        (keys, dropped)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sketch tracker
+// ---------------------------------------------------------------------------
+
+/// One key space's sketch + touched set.
+struct SketchLane {
+    sketch: CountMinSketch,
+    touched: TouchedSet,
+}
+
+impl SketchLane {
+    fn new(width: usize, depth: usize, touch_cap: usize) -> Self {
+        SketchLane {
+            sketch: CountMinSketch::new(width, depth),
+            touched: TouchedSet::new(touch_cap),
+        }
+    }
+
+    #[inline]
+    fn record(&self, key: u64) {
+        self.sketch.add(key);
+        self.touched.insert(key);
+    }
+
+    /// Enumerate `(key, estimate)` for the window's touched keys and
+    /// reset the lane: O(touched · depth), never O(key space). A
+    /// saturated window (dropped > 0) falls back to the full-sweep
+    /// clear, discarding the unenumerated keys' counts with it —
+    /// leaving them in place would inflate later windows' estimates
+    /// forever, since no future enumeration would ever clear them.
+    fn drain(&self) -> (Vec<(u64, u32)>, u64) {
+        let (keys, dropped) = self.touched.drain();
+        let out = keys
+            .iter()
+            .map(|&k| (k, self.sketch.estimate(k)))
+            .collect();
+        if dropped > 0 {
+            self.sketch.clear_all();
+        } else {
+            for &k in &keys {
+                self.sketch.clear_key(k);
+            }
+        }
+        (out, dropped)
+    }
+}
+
+/// Per-window log capacity for node touches (unique nodes per drain
+/// interval; table + log = 3 × cap × 8 B ≈ 1.5 MiB per lane at the
+/// default).
+const NODE_TOUCH_CAP: usize = 1 << 16;
+
+/// Per-window log capacity for CSC-element touches (sampling touches
+/// several elements per node, so this is 2 bits larger — ≈ 6 MiB of
+/// table + log per lane at the default).
+const ELEM_TOUCH_CAP: usize = 1 << 18;
+
+/// Sketch-based [`WorkloadTracker`]: constant memory, O(touched) drain.
+///
+/// Two [`CountMinSketch`]es (node visits, CSC-element accesses) paired
+/// with bounded touched sets, double-buffered into two lanes: the hot
+/// path records into the active lane, `drain` flips the active lane
+/// and enumerates the previous one — so recording never waits on a
+/// drain, and a drain never scans a structure sized by the graph.
+/// Touches racing the flip land on either side of the window boundary
+/// (the dense tracker is exact there; see the module docs).
+pub struct SketchTracker {
+    lanes: [[SketchLane; 2]; 2],
+    /// Active lane index (0/1) for both key spaces.
+    active: AtomicUsize,
+    clock: StageClock,
+}
+
+/// Which key space a lane pair tracks.
+const NODES: usize = 0;
+const ELEMS: usize = 1;
+
+impl SketchTracker {
+    /// A tracker with explicit sketch dimensions. `n_nodes` / `n_edges`
+    /// only clamp the touched-set capacities (a key space smaller than
+    /// the cap needs no larger log); no O(nodes) or O(edges) array is
+    /// ever allocated.
+    pub fn new(n_nodes: usize, n_edges: usize, width: usize, depth: usize) -> Self {
+        let node_cap = NODE_TOUCH_CAP.min(n_nodes.next_power_of_two().max(8));
+        let elem_cap = ELEM_TOUCH_CAP.min(n_edges.next_power_of_two().max(8));
+        let lane = |cap: usize| {
+            [
+                SketchLane::new(width, depth, cap),
+                SketchLane::new(width, depth, cap),
+            ]
+        };
+        SketchTracker {
+            lanes: [lane(node_cap), lane(elem_cap)],
+            active: AtomicUsize::new(0),
+            clock: StageClock::default(),
+        }
+    }
+
+    /// A tracker at the default ε/δ ([`DEFAULT_EPSILON`],
+    /// [`DEFAULT_DELTA`]).
+    pub fn with_defaults(n_nodes: usize, n_edges: usize) -> Self {
+        let (w, d) = cms_dims(DEFAULT_EPSILON, DEFAULT_DELTA);
+        Self::new(n_nodes, n_edges, w, d)
+    }
+
+    /// Touched-set log capacities `(node, elem)` — also the heavy-
+    /// hitter caps handed to the refresh accumulator.
+    pub fn touch_caps(&self) -> (usize, usize) {
+        (
+            self.lanes[NODES][0].touched.capacity(),
+            self.lanes[ELEMS][0].touched.capacity(),
+        )
+    }
+
+    #[inline]
+    fn lane(&self, space: usize) -> &SketchLane {
+        &self.lanes[space][self.active.load(Ordering::Relaxed)]
+    }
+}
+
+impl WorkloadTracker for SketchTracker {
+    fn name(&self) -> &'static str {
+        "sketch"
+    }
+
+    #[inline]
+    fn record_node(&self, v: NodeId) {
+        self.lane(NODES).record(v as u64);
+    }
+
+    #[inline]
+    fn record_elem(&self, at: usize) {
+        self.lane(ELEMS).record(at as u64);
+    }
+
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
+        self.clock.record_batch(t_sample_ns, t_feature_ns);
+    }
+
+    fn batches(&self) -> u64 {
+        self.clock.batches()
+    }
+
+    /// Flip the active lane, then enumerate + reset the previous one:
+    /// O(touched · depth) work, independent of nodes + edges.
+    fn drain(&self) -> DrainedWindow {
+        let prev = self.active.fetch_xor(1, Ordering::Relaxed);
+        let (nodes, nd) = self.lanes[NODES][prev].drain();
+        let (elems, ed) = self.lanes[ELEMS][prev].drain();
+        let (batches, t_sample_ns, t_feature_ns) = self.clock.drain();
+        DrainedWindow {
+            node_visits: nodes.into_iter().map(|(k, c)| (k as NodeId, c)).collect(),
+            elem_counts: elems,
+            batches,
+            t_sample_ns,
+            t_feature_ns,
+            dropped_touches: nd + ed,
+        }
+    }
+
+    fn heavy_hitter_caps(&self) -> Option<(usize, usize)> {
+        Some(self.touch_caps())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection knob
+// ---------------------------------------------------------------------------
+
+/// Which [`WorkloadTracker`] implementation the serving path records
+/// into (`tracker=` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrackerKind {
+    /// Exact O(nodes + edges) counters ([`AccessTracker`]).
+    #[default]
+    Dense,
+    /// Count-min sketch + bounded touched set ([`SketchTracker`]).
+    Sketch,
+}
+
+impl TrackerKind {
+    /// Parse `dense` | `sketch`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(TrackerKind::Dense),
+            "sketch" | "cms" => Ok(TrackerKind::Sketch),
+            other => anyhow::bail!("unknown tracker {other:?} (dense|sketch)"),
+        }
+    }
+
+    /// Canonical knob value.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrackerKind::Dense => "dense",
+            TrackerKind::Sketch => "sketch",
+        }
+    }
+}
+
+/// Workload-tracker construction knobs (`tracker=`, `sketch-width=`,
+/// `sketch-depth=`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TrackerConfig {
+    /// Implementation to build.
+    pub kind: TrackerKind,
+    /// Sketch row width override (`None` = derive from
+    /// [`DEFAULT_EPSILON`]).
+    pub width: Option<usize>,
+    /// Sketch depth override (`None` = derive from [`DEFAULT_DELTA`]).
+    pub depth: Option<usize>,
+}
+
+impl TrackerConfig {
+    /// Build the configured tracker for a graph with `n_nodes` nodes
+    /// and `n_edges` CSC elements.
+    pub fn build(
+        &self,
+        n_nodes: usize,
+        n_edges: usize,
+    ) -> std::sync::Arc<dyn WorkloadTracker> {
+        match self.kind {
+            TrackerKind::Dense => {
+                std::sync::Arc::new(AccessTracker::new(n_nodes, n_edges))
+            }
+            TrackerKind::Sketch => {
+                let (dw, dd) = cms_dims(DEFAULT_EPSILON, DEFAULT_DELTA);
+                std::sync::Arc::new(SketchTracker::new(
+                    n_nodes,
+                    n_edges,
+                    self.width.unwrap_or(dw),
+                    self.depth.unwrap_or(dd),
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn dense_tracker_counts_and_drains() {
+        let t = AccessTracker::new(4, 6);
+        t.record_node(1);
+        t.record_node(1);
+        t.record_node(3);
+        t.record_elem(5);
+        t.record_batch(100.0, 200.0);
+        assert_eq!(t.batches(), 1);
+        let d = t.drain();
+        assert_eq!(d.node_visits, vec![(1, 2), (3, 1)]);
+        assert_eq!(d.elem_counts, vec![(5, 1)]);
+        assert_eq!(d.batches, 1);
+        assert_eq!(d.t_sample_ns, 100.0);
+        assert_eq!(d.t_feature_ns, 200.0);
+        assert_eq!(d.dropped_touches, 0);
+        // drained: everything reset
+        let d2 = t.drain();
+        assert_eq!(d2.batches, 0);
+        assert!(d2.node_visits.is_empty() && d2.elem_counts.is_empty());
+        assert!(t.heavy_hitter_caps().is_none());
+    }
+
+    #[test]
+    fn cms_dims_match_the_textbook_formulas() {
+        let (w, d) = cms_dims(DEFAULT_EPSILON, DEFAULT_DELTA);
+        assert_eq!(w, (std::f64::consts::E / DEFAULT_EPSILON).ceil() as usize);
+        assert_eq!(d, 5); // ln(100) = 4.6 → 5
+        let (w, d) = cms_dims(0.01, 0.001);
+        assert_eq!(w, 272);
+        assert_eq!(d, 7);
+    }
+
+    #[test]
+    fn sketch_is_exact_without_collisions() {
+        // width far above the key count: every estimate is exact
+        let s = CountMinSketch::new(4096, 4);
+        for k in 0..100u64 {
+            for _ in 0..=k {
+                s.add(k);
+            }
+        }
+        for k in 0..100u64 {
+            assert_eq!(s.estimate(k), k as u32 + 1, "key {k}");
+        }
+        s.clear_key(7);
+        assert_eq!(s.estimate(7), 0);
+        s.clear_all();
+        assert_eq!(s.estimate(50), 0);
+    }
+
+    #[test]
+    fn sketch_never_undercounts_under_collisions() {
+        // tiny sketch: collisions guaranteed; conservative updates must
+        // still never undercount
+        let s = CountMinSketch::new(16, 2);
+        let mut truth: HashMap<u64, u32> = HashMap::new();
+        let mut x = 9u64;
+        for _ in 0..5_000 {
+            // skewed deterministic stream
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let key = (x >> 33) % 64;
+            let key = key * key / 8; // heavier head
+            s.add(key);
+            *truth.entry(key).or_insert(0) += 1;
+        }
+        for (&k, &c) in &truth {
+            assert!(s.estimate(k) >= c, "key {k}: est {} < true {c}", s.estimate(k));
+        }
+    }
+
+    #[test]
+    fn touched_set_dedups_and_drains() {
+        let t = TouchedSet::new(64);
+        for _ in 0..3 {
+            t.insert(10);
+            t.insert(20);
+        }
+        t.insert(30);
+        let (keys, dropped) = t.drain();
+        assert_eq!(keys, vec![10, 20, 30]);
+        assert_eq!(dropped, 0);
+        // cleared: keys can be re-logged next window
+        t.insert(20);
+        let (keys, _) = t.drain();
+        assert_eq!(keys, vec![20]);
+    }
+
+    #[test]
+    fn touched_set_bounds_and_reports_drops() {
+        let t = TouchedSet::new(8); // rounds to 8
+        for k in 0..100u64 {
+            t.insert(k);
+        }
+        let (keys, dropped) = t.drain();
+        assert!(keys.len() <= 8);
+        assert!(dropped > 0);
+        // saturation recovered: the next window logs cleanly again
+        t.insert(1);
+        let (keys, dropped) = t.drain();
+        assert_eq!(keys, vec![1]);
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn sketch_tracker_drains_in_o_touched_and_matches_dense() {
+        let n_nodes = 1000;
+        let n_edges = 5000;
+        let dense = AccessTracker::new(n_nodes, n_edges);
+        let sketch = SketchTracker::with_defaults(n_nodes, n_edges);
+        // a sparse window: 20 nodes, 40 elements
+        for v in (0..n_nodes as u32).step_by(50) {
+            for _ in 0..3 {
+                dense.record_node(v);
+                sketch.record_node(v);
+            }
+        }
+        for e in (0..n_edges).step_by(125) {
+            dense.record_elem(e);
+            sketch.record_elem(e);
+        }
+        dense.record_batch(10.0, 20.0);
+        sketch.record_batch(10.0, 20.0);
+
+        let dw = dense.drain();
+        let sw = sketch.drain();
+        assert_eq!(sw.batches, dw.batches);
+        assert_eq!(sw.dropped_touches, 0);
+        let to_map = |w: &[(NodeId, u32)]| -> HashMap<NodeId, u32> {
+            w.iter().copied().collect()
+        };
+        // default ε on 60 distinct keys: no collisions, exact equality
+        assert_eq!(to_map(&sw.node_visits), to_map(&dw.node_visits));
+        let ed: HashMap<u64, u32> = dw.elem_counts.iter().copied().collect();
+        let es: HashMap<u64, u32> = sw.elem_counts.iter().copied().collect();
+        assert_eq!(es, ed);
+        // second drain is empty (lane flipped back and cleared)
+        assert!(sketch.drain().node_visits.is_empty());
+        assert!(sketch.heavy_hitter_caps().is_some());
+    }
+
+    #[test]
+    fn tracker_config_builds_both_kinds() {
+        let dense = TrackerConfig::default().build(10, 10);
+        assert_eq!(dense.name(), "dense");
+        let cfg = TrackerConfig {
+            kind: TrackerKind::Sketch,
+            width: Some(128),
+            depth: Some(3),
+        };
+        let sketch = cfg.build(10, 10);
+        assert_eq!(sketch.name(), "sketch");
+        assert!(TrackerKind::parse("bloom").is_err());
+        assert_eq!(TrackerKind::parse("CMS").unwrap(), TrackerKind::Sketch);
+        assert_eq!(TrackerKind::Sketch.as_str(), "sketch");
+    }
+}

@@ -8,6 +8,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cache::refresh::RefreshConfig;
+use crate::cache::tracker::{TrackerConfig, TrackerKind};
 use crate::mem::CostModel;
 use crate::sampler::Fanout;
 use crate::util::parse_bytes;
@@ -141,6 +142,13 @@ pub struct RunConfig {
     /// caches stay frozen at their preprocessing-time plan). Only
     /// systems with a `CachePlanner` refresh (DCI/SCI/DUCATI).
     pub refresh: Option<RefreshConfig>,
+    /// Which workload tracker the serving path records into when
+    /// refresh is armed: exact dense counters (the default) or the
+    /// count-min sketch with O(touched) drain (`tracker=sketch`,
+    /// `sketch-width=`, `sketch-depth=`). Tracking never changes which
+    /// bytes the engine reads — results are bit-identical across
+    /// tracker choices (held by `tests/properties.rs`).
+    pub tracker: TrackerConfig,
     /// Cap on inference batches (None = full test set).
     pub max_batches: Option<usize>,
     /// Simulated device capacity; `None` = RTX 4090 scaled by the
@@ -168,6 +176,7 @@ impl Default for RunConfig {
             shards: 1,
             compute: ComputeKind::Skip,
             refresh: None,
+            tracker: TrackerConfig::default(),
             max_batches: None,
             device_capacity: None,
             cost: CostModel::default(),
@@ -177,19 +186,60 @@ impl Default for RunConfig {
     }
 }
 
+/// Every `key=value` knob [`RunConfig::apply_args`] accepts — kept
+/// next to the `match` below so an unknown-key error can teach instead
+/// of stonewall (`refesh=on` must fail loudly *and* show `refresh`).
+pub const VALID_KEYS: &[&str] = &[
+    "dataset",
+    "model",
+    "fanout",
+    "batch-size",
+    "bs",
+    "system",
+    "hidden",
+    "budget",
+    "presample",
+    "pipeline",
+    "pipeline-depth",
+    "sample-threads",
+    "shards",
+    "shard-refresh",
+    "compute",
+    "refresh",
+    "refresh-check-ms",
+    "refresh-min-batches",
+    "refresh-decay",
+    "drift-threshold",
+    "tracker",
+    "sketch-width",
+    "sketch-depth",
+    "max-batches",
+    "device",
+    "seed",
+    "artifacts",
+];
+
 impl RunConfig {
-    /// Parse `key=value` arguments over the defaults. Unknown keys error.
+    /// Parse `key=value` arguments over the defaults. Unknown keys
+    /// error, listing [`VALID_KEYS`].
     pub fn from_args(args: &[String]) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         cfg.apply_args(args)?;
         Ok(cfg)
     }
 
+    /// Apply `key=value` overrides in order. Unknown keys error,
+    /// listing [`VALID_KEYS`], so a typo (`refesh=on`) cannot silently
+    /// run with the knob it meant to set left at its default.
     pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
         for arg in args {
             let (key, value) = arg
                 .split_once('=')
                 .with_context(|| format!("expected key=value, got {arg:?}"))?;
+            // every arm below MUST also appear in VALID_KEYS (the
+            // unknown-key error teaches from that list; the
+            // `unknown_key_error_lists_the_valid_knobs` test holds the
+            // list→arm direction, this comment is the arm→list one)
             match key {
                 "dataset" => self.dataset = value.to_string(),
                 "model" => self.model = ModelKind::parse(value)?,
@@ -272,11 +322,34 @@ impl RunConfig {
                         .get_or_insert_with(RefreshConfig::default)
                         .drift_threshold = value.parse().context("drift-threshold")?;
                 }
+                "tracker" => self.tracker.kind = TrackerKind::parse(value)?,
+                "sketch-width" => {
+                    let w: usize = value.parse().context("sketch-width")?;
+                    if w == 0 {
+                        bail!("sketch-width must be positive");
+                    }
+                    // a sketch-* key is a sketch request: picking
+                    // dimensions for a tracker that is not built would
+                    // silently measure nothing
+                    self.tracker.kind = TrackerKind::Sketch;
+                    self.tracker.width = Some(w);
+                }
+                "sketch-depth" => {
+                    let d: usize = value.parse().context("sketch-depth")?;
+                    if !(1..=16).contains(&d) {
+                        bail!("sketch-depth must be in 1..=16 (rows of the sketch)");
+                    }
+                    self.tracker.kind = TrackerKind::Sketch;
+                    self.tracker.depth = Some(d);
+                }
                 "max-batches" => self.max_batches = Some(value.parse()?),
                 "device" => self.device_capacity = Some(parse_bytes(value)?),
                 "seed" => self.seed = value.parse().context("seed")?,
                 "artifacts" => self.artifacts_dir = value.to_string(),
-                other => bail!("unknown config key {other:?}"),
+                other => bail!(
+                    "unknown config key {other:?}; valid keys: {}",
+                    VALID_KEYS.join(", ")
+                ),
             }
         }
         Ok(())
@@ -309,6 +382,9 @@ impl RunConfig {
                 r.drift_threshold,
                 if r.per_shard { "" } else { " full" }
             ));
+        }
+        if self.tracker.kind != TrackerKind::Dense {
+            s.push_str(&format!(" tracker={}", self.tracker.kind.as_str()));
         }
         s
     }
@@ -431,6 +507,64 @@ mod tests {
         assert!(RunConfig::from_args(&args(&["compute=gpu"])).is_err());
         assert!(RunConfig::from_args(&args(&["pipeline=0"])).is_err());
         assert!(RunConfig::from_args(&args(&["sample-threads=0"])).is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_the_valid_knobs() {
+        // the motivating typo: refesh=on must fail loudly AND teach
+        let err = RunConfig::from_args(&args(&["refesh=on"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown config key \"refesh\""), "{msg}");
+        assert!(msg.contains("valid keys:"), "{msg}");
+        for key in ["refresh", "tracker", "sketch-width", "drift-threshold"] {
+            assert!(msg.contains(key), "error must list {key:?}: {msg}");
+        }
+        // every advertised key actually parses (with a plausible value)
+        for key in VALID_KEYS {
+            let value = match *key {
+                "dataset" => "tiny",
+                "model" => "gcn",
+                "fanout" => "3,2",
+                "system" => "dci",
+                "budget" => "1MB",
+                "shard-refresh" | "refresh" => "on",
+                "compute" => "skip",
+                "refresh-decay" => "0.5",
+                "drift-threshold" => "0.2",
+                "tracker" => "sketch",
+                "device" => "1GB",
+                "artifacts" => "artifacts",
+                _ => "4",
+            };
+            let arg = format!("{key}={value}");
+            RunConfig::from_args(&[arg.clone()])
+                .unwrap_or_else(|e| panic!("advertised knob {arg} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn tracker_knobs() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.tracker.kind, TrackerKind::Dense);
+        let cfg = RunConfig::from_args(&args(&["tracker=sketch"])).unwrap();
+        assert_eq!(cfg.tracker.kind, TrackerKind::Sketch);
+        assert!(cfg.summary().contains("tracker=sketch"));
+        // sketch-* keys are a sketch request in themselves
+        let cfg =
+            RunConfig::from_args(&args(&["sketch-width=512", "sketch-depth=3"])).unwrap();
+        assert_eq!(cfg.tracker.kind, TrackerKind::Sketch);
+        assert_eq!(cfg.tracker.width, Some(512));
+        assert_eq!(cfg.tracker.depth, Some(3));
+        // explicit dense after a sketch-* key wins (last writer, as
+        // everywhere in the flat keyspace)
+        let cfg =
+            RunConfig::from_args(&args(&["sketch-width=512", "tracker=dense"])).unwrap();
+        assert_eq!(cfg.tracker.kind, TrackerKind::Dense);
+        assert!(!cfg.summary().contains("tracker="));
+        assert!(RunConfig::from_args(&args(&["tracker=bloom"])).is_err());
+        assert!(RunConfig::from_args(&args(&["sketch-width=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["sketch-depth=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["sketch-depth=17"])).is_err());
     }
 
     #[test]

@@ -15,10 +15,23 @@ use thiserror::Error;
 /// Why a request was not admitted.
 #[derive(Debug, Error, Clone, PartialEq)]
 pub enum AdmissionError {
+    /// The global queued-seed ceiling would be exceeded (backpressure;
+    /// retry with jittered backoff).
     #[error("overloaded: {queued} seeds queued (limit {limit}); retry with backoff")]
-    Overloaded { queued: usize, limit: usize },
+    Overloaded {
+        /// Seeds queued across all workers at rejection time.
+        queued: usize,
+        /// The configured ceiling.
+        limit: usize,
+    },
+    /// The client's token bucket ran dry (per-client rate limit).
     #[error("rate limited: client {client:?} exceeded {rate_per_s:.0} seeds/s")]
-    RateLimited { client: String, rate_per_s: f64 },
+    RateLimited {
+        /// The rate-limited client identity.
+        client: String,
+        /// The configured sustained rate.
+        rate_per_s: f64,
+    },
 }
 
 /// Admission policy knobs.
@@ -50,6 +63,7 @@ pub struct AdmissionController {
 }
 
 impl AdmissionController {
+    /// A controller enforcing `cfg` (no per-client state yet).
     pub fn new(cfg: AdmissionConfig) -> Self {
         AdmissionController { cfg, buckets: Mutex::new(HashMap::new()) }
     }

@@ -26,6 +26,7 @@ impl Default for BatcherConfig {
 /// A flushed batch: concatenated seeds + the requests (with their seed
 /// spans) it serves.
 pub struct PendingBatch {
+    /// All member requests' seeds, concatenated in arrival order.
     pub seeds: Vec<NodeId>,
     /// (request, start, len) spans into `seeds`.
     pub members: Vec<(Request, usize, usize)>,
@@ -40,14 +41,17 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher with `cfg`'s flush triggers.
     pub fn new(cfg: BatcherConfig) -> Self {
         Batcher { cfg, seeds: Vec::new(), members: Vec::new(), oldest: None }
     }
 
+    /// Seeds currently pending (not yet flushed).
     pub fn pending_seeds(&self) -> usize {
         self.seeds.len()
     }
 
+    /// Whether no request is pending.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }

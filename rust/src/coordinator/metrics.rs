@@ -12,13 +12,19 @@ use crate::util::stats::LatencyHist;
 /// time).
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
+    /// Client requests served.
     pub requests: u64,
+    /// Seed nodes served across all requests.
     pub seeds: u64,
+    /// Engine batches executed.
     pub batches: u64,
+    /// Request latency distribution (submit → reply).
     pub latency: LatencyHist,
-    /// Engine stage totals (ns, wall + modeled).
+    /// Sampling-stage total (ns, wall + modeled).
     pub sample_ns: f64,
+    /// Feature-stage total (ns, wall + modeled).
     pub feature_ns: f64,
+    /// Compute-stage total (ns, wall + modeled).
     pub compute_ns: f64,
     /// Serving-time transfer stats (per-batch ledgers folded in:
     /// live hit ratios, plus online-refresh refill traffic).
@@ -33,23 +39,39 @@ pub struct ServingMetrics {
     /// Snapshot acquires that had to block on a concurrent install
     /// (the runtime's swap-stall counter; 0 in a healthy deployment).
     pub swap_stalls: u64,
+    /// Background wall time the refresh loop spent draining the
+    /// workload tracker and folding windows into the decayed profile,
+    /// ns — the cost `tracker=sketch` shrinks from O(nodes + edges) to
+    /// O(touched) per poll.
+    pub tracker_drain_ns: f64,
+    /// Sparse keys (nodes + CSC elements) drained across all windows.
+    pub tracker_drained_keys: u64,
+    /// Touches the tracker's bounded touched set could not enumerate
+    /// (sketch only; persistent nonzero values mean the drain interval
+    /// is too long for the traffic — shorten `refresh-check-ms`).
+    pub tracker_dropped_touches: u64,
 }
 
 impl ServingMetrics {
+    /// Zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one served batch of `n_requests` requests / `n_seeds`
+    /// seeds.
     pub fn record_batch(&mut self, n_requests: usize, n_seeds: usize) {
         self.batches += 1;
         self.requests += n_requests as u64;
         self.seeds += n_seeds as u64;
     }
 
+    /// Record one request's end-to-end latency.
     pub fn record_latency(&mut self, ns: u64) {
         self.latency.record_ns(ns);
     }
 
+    /// Fold another worker's metrics into this one.
     pub fn merge(&mut self, other: &ServingMetrics) {
         self.requests += other.requests;
         self.seeds += other.seeds;
@@ -63,6 +85,9 @@ impl ServingMetrics {
         self.drift_checks += other.drift_checks;
         self.refresh_ns += other.refresh_ns;
         self.swap_stalls += other.swap_stalls;
+        self.tracker_drain_ns += other.tracker_drain_ns;
+        self.tracker_drained_keys += other.tracker_drained_keys;
+        self.tracker_dropped_touches += other.tracker_dropped_touches;
     }
 
     /// Seeds served per second of elapsed wall time.
@@ -82,7 +107,8 @@ impl ServingMetrics {
              latency p50={:.2}ms p90={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              throughput={:.0} seeds/s\n\
              stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms\n\
-             cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}",
+             cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}\n\
+             tracker: drain={:.2}ms drained-keys={} dropped-touches={}",
             self.requests,
             self.seeds,
             self.batches,
@@ -101,6 +127,9 @@ impl ServingMetrics {
             self.refresh_ns / 1e6,
             self.drift_checks,
             self.swap_stalls,
+            self.tracker_drain_ns / 1e6,
+            self.tracker_drained_keys,
+            self.tracker_dropped_touches,
         )
     }
 }

@@ -9,6 +9,10 @@
 //! the offline registry has no tokio, and the workload is CPU-bound
 //! anyway.
 
+// Deployment surface: fully documented, gated by the CI `cargo doc`
+// step (`RUSTDOCFLAGS="-D warnings"`).
+#![warn(missing_docs)]
+
 pub mod admission;
 pub mod batcher;
 pub mod metrics;

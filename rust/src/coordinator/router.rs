@@ -16,12 +16,15 @@ use super::Request;
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Cycle through workers in order.
     RoundRobin,
+    /// Send to the worker with the fewest queued seeds.
     LeastLoaded,
 }
 
 /// Per-worker handle: queue sender + load gauge.
 pub struct WorkerHandle {
+    /// The worker's request queue.
     pub tx: mpsc::Sender<Request>,
     /// Seeds currently queued (decremented by the worker).
     pub queued_seeds: Arc<AtomicUsize>,
@@ -35,6 +38,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over at least one worker.
     pub fn new(workers: Vec<WorkerHandle>, policy: RoutePolicy) -> Result<Router> {
         if workers.is_empty() {
             bail!("router needs at least one worker");
@@ -42,6 +46,7 @@ impl Router {
         Ok(Router { workers, policy, next: AtomicU64::new(0) })
     }
 
+    /// Number of workers behind this router.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }

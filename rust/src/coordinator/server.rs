@@ -4,12 +4,15 @@
 //!
 //! When `RunConfig::refresh` is set (and the system has a
 //! [`planner_for`] strategy), each worker also runs the online refresh
-//! loop: the engine's serving path feeds an
-//! [`AccessTracker`](crate::cache::AccessTracker), and a background
+//! loop: the engine's serving path feeds a
+//! [`WorkloadTracker`](crate::cache::WorkloadTracker) (dense counters
+//! or the count-min sketch, per `RunConfig::tracker`), and a background
 //! [`Refresher`] thread re-plans the worker's caches on workload drift,
 //! hot-swapping the snapshot the worker reads per batch. The swap never
-//! stalls serving (see `cache::runtime`); refresh counters surface in
-//! [`ServingMetrics`] at shutdown.
+//! stalls serving (see `cache::runtime`); refresh counters — including
+//! the tracker's drain cost and drained/dropped key totals — surface
+//! in [`ServingMetrics`] at shutdown (the serving-observability story
+//! DESIGN.md §Workload tracking documents).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -19,7 +22,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::baselines::planner_for;
-use crate::cache::refresh::{AccessTracker, Refresher};
+use crate::cache::refresh::Refresher;
 use crate::config::RunConfig;
 use crate::engine::InferenceEngine;
 use crate::graph::Dataset;
@@ -33,9 +36,13 @@ use super::{Request, Response};
 /// Server deployment knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Worker threads (each owns a full engine + caches).
     pub n_workers: usize,
+    /// Dynamic-batching policy.
     pub batcher: BatcherConfig,
+    /// How requests are spread across workers.
     pub policy: RoutePolicy,
+    /// Frontend admission/backpressure policy.
     pub admission: AdmissionConfig,
 }
 
@@ -158,18 +165,19 @@ fn worker_loop(
     metrics: Arc<Mutex<ServingMetrics>>,
 ) -> Result<()> {
     let refresh_cfg = run_cfg.refresh.clone();
+    let tracker_cfg = run_cfg.tracker.clone();
     let system = run_cfg.system;
     let mut engine = InferenceEngine::prepare(ds.as_ref(), run_cfg)?;
 
-    // online refresh: tracker on the serving path, re-planner on a
-    // background thread, per worker (cacheless systems skip it). With
-    // a sharded runtime the refresher detects drift per shard and
-    // hot-swaps only the drifted shards, each within its own budget.
+    // online refresh: tracker on the serving path (dense or sketch,
+    // per `RunConfig::tracker`), re-planner on a background thread,
+    // per worker (cacheless systems skip it). With a sharded runtime
+    // the refresher detects drift per shard and hot-swaps only the
+    // drifted shards, each within its own budget.
     let mut refresher: Option<Refresher> = None;
     if let Some(rcfg) = refresh_cfg {
         if let Some(planner) = planner_for(system) {
-            let tracker =
-                Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+            let tracker = tracker_cfg.build(ds.csc.n_nodes(), ds.csc.n_edges());
             engine.set_tracker(Arc::clone(&tracker));
             // drift baseline: the pre-sample profile the startup plan
             // was built from
@@ -203,6 +211,9 @@ fn worker_loop(
         m.refreshes += rs.replans;
         m.drift_checks += rs.checks;
         m.refresh_ns += rs.replan_wall_ns;
+        m.tracker_drain_ns += rs.drain_ns;
+        m.tracker_drained_keys += rs.drained_keys;
+        m.tracker_dropped_touches += rs.dropped_touches;
         m.cache.refresh.upload(rs.fill_h2d_bytes);
     }
     m.swap_stalls += stalls;
@@ -416,6 +427,52 @@ mod tests {
         assert!(m.drift_checks >= m.refreshes);
         assert_eq!(m.swap_stalls, 0, "serving must never block on a swap");
         assert!(m.cache.refresh.h2d_bytes > 0, "refills upload features");
+    }
+
+    #[test]
+    fn sketch_tracked_worker_replans_while_serving() {
+        use crate::cache::TrackerKind;
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let mut cfg = serving_cfg();
+        cfg.tracker.kind = TrackerKind::Sketch;
+        cfg.refresh = Some(RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: -1.0,
+            per_shard: true,
+        });
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        for round in 0..6 {
+            let mut rxs = Vec::new();
+            for i in 0..4 {
+                let at = (round * 4 + i) % (ds.test_nodes.len() - 4);
+                rxs.push(server.submit(ds.test_nodes[at..at + 4].to_vec()).unwrap());
+            }
+            for rx in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                assert!(resp.logits.is_some());
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert!(m.refreshes >= 1, "sketch-tracked drift must re-plan: {m:?}");
+        assert_eq!(m.swap_stalls, 0, "serving must never block on a swap");
+        assert!(m.tracker_drained_keys > 0, "sketch windows must drain keys: {m:?}");
+        assert!(m.tracker_drain_ns > 0.0);
     }
 
     #[test]

@@ -22,8 +22,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::baselines::{self, PreparedSystem};
-use crate::cache::refresh::AccessTracker;
 use crate::cache::shard::{ShardedHandle, ShardedRuntime};
+use crate::cache::tracker::WorkloadTracker;
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{datasets, Dataset, NodeId};
@@ -177,7 +177,7 @@ pub struct InferenceEngine<'d> {
     snap: ShardedHandle,
     /// Serving-time access counts for the online refresh loop
     /// (`None` = untracked: offline runs, refresh disabled).
-    tracker: Option<Arc<AccessTracker>>,
+    tracker: Option<Arc<dyn WorkloadTracker>>,
 }
 
 /// The per-device prototype arena `cfg` asks for (each shard of a
@@ -273,10 +273,11 @@ impl<'d> InferenceEngine<'d> {
         Arc::clone(&self.prepared.runtime)
     }
 
-    /// Attach a serving-time access tracker: `infer_once` then records
-    /// the same per-node / per-element counts pre-sampling collects,
-    /// feeding the online refresh loop.
-    pub fn set_tracker(&mut self, tracker: Arc<AccessTracker>) {
+    /// Attach a serving-time access tracker (dense or sketch — see
+    /// `cache::tracker`): `infer_once` then records the same per-node
+    /// / per-element counts pre-sampling collects, feeding the online
+    /// refresh loop.
+    pub fn set_tracker(&mut self, tracker: Arc<dyn WorkloadTracker>) {
         self.tracker = Some(tracker);
     }
 

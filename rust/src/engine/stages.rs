@@ -12,9 +12,10 @@
 //! stages noticing. The view routes every feature lookup and adjacency
 //! read to the shard that owns the node; with one shard it degenerates
 //! to the PR 2 single-snapshot path bit for bit. An optional
-//! [`AccessTracker`] (the serving path's online-refresh input) receives
-//! the same per-node / per-element counts pre-sampling collects;
-//! `None` keeps the offline paths zero-overhead.
+//! [`WorkloadTracker`] (the serving path's online-refresh input —
+//! dense counters or the count-min sketch, see `cache::tracker`)
+//! receives the same per-node / per-element counts pre-sampling
+//! collects; `None` keeps the offline paths zero-overhead.
 //!
 //! Determinism contract: a batch's sampling RNG is [`batch_rng`]` =
 //! Rng::for_stream(cfg.seed, batch_index)` — a pure function of the
@@ -33,8 +34,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cache::refresh::AccessTracker;
 use crate::cache::shard::ShardView;
+use crate::cache::tracker::WorkloadTracker;
 use crate::config::RunConfig;
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CostModel, TransferLedger};
@@ -67,7 +68,7 @@ pub fn sample_stage(
     seeds: &[NodeId],
     index: usize,
     seed: u64,
-    tracker: Option<&AccessTracker>,
+    tracker: Option<&dyn WorkloadTracker>,
 ) -> SampledBatch {
     let mut rng = batch_rng(seed, index as u64);
     let mut ledger = TransferLedger::new();
@@ -114,7 +115,7 @@ pub fn gather_stage(
     mb: &MiniBatch,
     prev_inputs: &mut HashSet<NodeId>,
     x: &mut Vec<f32>,
-    tracker: Option<&AccessTracker>,
+    tracker: Option<&dyn WorkloadTracker>,
 ) -> (TransferLedger, f64, usize) {
     let dim = ds.features.dim();
     let row_bytes = ds.features.row_bytes();

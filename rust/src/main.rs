@@ -72,7 +72,10 @@ fn print_usage() {
          serve keys:  workers= requests= req-size= batch-wait-ms=\n\
          \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
          \x20            refresh-decay= drift-threshold=   (online re-planning)\n\
-         \x20            shard-refresh=on|off   (re-plan only drifted shards | all)"
+         \x20            shard-refresh=on|off   (re-plan only drifted shards | all)\n\
+         \x20            tracker=dense|sketch sketch-width= sketch-depth=\n\
+         \x20            (workload tracker: exact counters | count-min sketch\n\
+         \x20             with O(touched) drain; sketch-* keys imply tracker=sketch)"
     );
 }
 

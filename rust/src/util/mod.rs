@@ -10,5 +10,5 @@ pub mod table;
 pub mod timer;
 
 pub use human::{format_bytes, parse_bytes};
-pub use rng::Rng;
+pub use rng::{splitmix64, Rng};
 pub use timer::Stopwatch;

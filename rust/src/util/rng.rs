@@ -5,6 +5,20 @@
 //! are reproducible from a single seed — a requirement for regenerating
 //! the paper's tables deterministically.
 
+/// The SplitMix64 step: add the golden-ratio increment, then the
+/// finalizer (two xor-shift-multiplies + a final xor-shift). One
+/// implementation for every fixed-key hash in the crate — RNG seeding
+/// here, the `ShardRouter` node→shard partition, and the workload
+/// tracker's sketch/touched-set hashing all call this, so they cannot
+/// drift apart.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 /// 64-bit deterministic PRNG (PCG64-mcg style: 128-bit LCG state,
 /// xorshift-rotate output). Not cryptographic.
 #[derive(Debug, Clone)]
@@ -17,17 +31,11 @@ const INC: u128 = 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f;
 
 impl Rng {
     /// Seed via SplitMix64 so nearby seeds give unrelated streams.
+    /// (Two [`splitmix64`] draws of the incrementing state — bit-
+    /// identical to the classic stateful formulation.)
     pub fn new(seed: u64) -> Self {
-        let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-            z ^ (z >> 31)
-        };
-        let hi = next() as u128;
-        let lo = next() as u128;
+        let hi = splitmix64(seed) as u128;
+        let lo = splitmix64(seed.wrapping_add(0x9e37_79b9_7f4a_7c15)) as u128;
         let mut rng = Rng { state: (hi << 64) | lo | 1 };
         rng.next_u64(); // burn-in
         rng

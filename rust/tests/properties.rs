@@ -444,3 +444,131 @@ fn prop_engine_hit_miss_accounting() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_count_min_conservative_and_bounded() {
+    use dci::cache::tracker::{cms_dims, CountMinSketch};
+    use std::collections::HashMap;
+
+    // The count-min guarantee, tested on adversarial skewed streams:
+    // (a) conservative — a point estimate is NEVER below the true
+    //     count (deterministic for single-threaded recording);
+    // (b) bounded — est − true ≤ ε·total holds per key with
+    //     probability ≥ 1 − δ, so across all keys at most a small
+    //     fraction may exceed it (we allow 2δ for slack), and the
+    //     heavy hitters a cache plan actually acts on stay within
+    //     2·ε·total even under engineered collisions.
+    check("count-min estimates are conservative and ε-bounded", 12, |rng| {
+        // small width forces collisions; depth at the default δ
+        let width = range(rng, 48, 256);
+        let (_, depth) = cms_dims(1e-4, 0.01);
+        let sketch = CountMinSketch::new(width, depth);
+        let epsilon = std::f64::consts::E / width as f64;
+
+        // adversarial skew: zipf-ish head over a key space much larger
+        // than the width, plus a uniform tail
+        let n_keys = range(rng, 500, 3000) as u64;
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        let total = range(rng, 10_000, 40_000) as u64;
+        for _ in 0..total {
+            let key = if rng.next_u64() % 100 < 80 {
+                rng.next_u64() % 16 // 80% of mass on 16 hot keys
+            } else {
+                rng.next_u64() % n_keys
+            };
+            sketch.add(key);
+            *truth.entry(key).or_insert(0) += 1;
+        }
+
+        let bound = epsilon * total as f64;
+        let mut violations = 0usize;
+        for (&k, &c) in &truth {
+            let est = sketch.estimate(k) as u64;
+            if est < c {
+                return Err(format!("key {k}: estimate {est} < true {c}"));
+            }
+            if (est - c) as f64 > bound {
+                violations += 1;
+            }
+            // heavy hitters (≥ 1% of mass): the entries a plan acts on
+            if c as f64 >= 0.01 * total as f64 && (est - c) as f64 > 2.0 * bound {
+                return Err(format!(
+                    "hot key {k}: error {} above 2·ε·total {:.0}",
+                    est - c,
+                    2.0 * bound
+                ));
+            }
+        }
+        let allowed = (2.0 * 0.01 * truth.len() as f64).ceil() as usize + 1;
+        if violations > allowed {
+            return Err(format!(
+                "{violations}/{} keys exceeded ε·total={bound:.0} (δ allows ~{allowed})",
+                truth.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracker_choice_never_changes_logits() {
+    use dci::cache::tracker::{AccessTracker, SketchTracker, WorkloadTracker};
+    use dci::config::{ComputeKind, RunConfig, SystemKind};
+    use dci::engine::InferenceEngine;
+    use dci::graph::datasets;
+    use std::sync::Arc;
+
+    // Tracking is observation, not policy: attaching no tracker, the
+    // dense tracker, or the sketch tracker to the serving path must
+    // leave every logit bit-identical — trackers never change which
+    // bytes the engine reads.
+    check("tracker=dense|sketch|none serve bit-identical logits", 3, |rng| {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let seed = rng.next_u64();
+        let budget = 50_000 + rng.next_u64() % 250_000;
+        let chunks: Vec<Vec<NodeId>> =
+            ds.test_nodes.chunks(24).take(6).map(|c| c.to_vec()).collect();
+
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for which in 0..3 {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = SystemKind::Dci;
+            cfg.batch_size = 24;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.budget = Some(budget);
+            cfg.compute = ComputeKind::Reference;
+            cfg.hidden = 16;
+            cfg.seed = seed;
+            let mut engine =
+                InferenceEngine::prepare(&ds, cfg).map_err(|e| e.to_string())?;
+            let tracker: Option<Arc<dyn WorkloadTracker>> = match which {
+                0 => None,
+                1 => Some(Arc::new(AccessTracker::new(
+                    ds.csc.n_nodes(),
+                    ds.csc.n_edges(),
+                ))),
+                _ => Some(Arc::new(SketchTracker::with_defaults(
+                    ds.csc.n_nodes(),
+                    ds.csc.n_edges(),
+                ))),
+            };
+            if let Some(t) = tracker {
+                engine.set_tracker(t);
+            }
+            let mut logits = Vec::new();
+            for chunk in &chunks {
+                let out = engine.infer_once(chunk).map_err(|e| e.to_string())?;
+                logits.extend(out.logits.expect("reference compute returns logits"));
+            }
+            outs.push(logits);
+        }
+        for (i, other) in outs.iter().enumerate().skip(1) {
+            if other != &outs[0] {
+                let name = if i == 1 { "dense" } else { "sketch" };
+                return Err(format!("tracker={name} changed the served logits"));
+            }
+        }
+        Ok(())
+    });
+}
