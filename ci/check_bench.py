@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Value-checking gate over the BENCH_*.json artifacts.
+
+Replaces the old grep-for-key-presence CI steps: every bench named in
+the thresholds file must (a) exist, (b) carry every gated metric, and
+(c) hold each metric inside its [min, max] bound. Prints a one-line
+trend table per bench either way, so the CI log doubles as the
+cross-PR perf trajectory.
+
+Usage:
+    python3 ci/check_bench.py [--thresholds ci/bench_thresholds.json]
+                              [FILE ...]
+
+With no FILE arguments, every bench listed in the thresholds file is
+checked (paths resolved relative to the current directory — CI runs
+from rust/, where the benches write). Stdlib only; exits non-zero on
+any missing file, missing key, unparsable value, or out-of-bound
+value.
+
+Thresholds format (per file, per metric):
+    { "BENCH_foo.json": { "metric": { "min": 0.95, "max": 1.0 } } }
+Either bound may be omitted. Metrics are looked up across every row of
+the bench's `rows` array (last occurrence wins), plus top-level keys.
+"""
+
+import argparse
+import json
+import sys
+
+
+def flatten(doc):
+    """Metric name -> value over top-level keys and all rows (last wins)."""
+    out = {}
+    for key, value in doc.items():
+        if key != "rows":
+            out[key] = value
+    for row in doc.get("rows", []):
+        if isinstance(row, dict):
+            out.update(row)
+    return out
+
+
+def check_file(path, bounds):
+    """Returns (trend_cells, failures) for one bench JSON."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return [], [f"{path}: missing (bench did not write its JSON)"]
+    except json.JSONDecodeError as e:
+        return [], [f"{path}: unparsable JSON ({e})"]
+    metrics = flatten(doc)
+    cells, failures = [], []
+    for name in sorted(bounds):
+        bound = bounds[name]
+        if name not in metrics:
+            cells.append(f"{name}=MISSING")
+            failures.append(f"{path}: missing key {name!r}")
+            continue
+        try:
+            value = float(metrics[name])
+        except (TypeError, ValueError):
+            cells.append(f"{name}=NON-NUMERIC")
+            failures.append(f"{path}: {name} is not numeric ({metrics[name]!r})")
+            continue
+        lo, hi = bound.get("min"), bound.get("max")
+        ok = (lo is None or value >= lo) and (hi is None or value <= hi)
+        want = " ".join(
+            w for w in (
+                f">={lo:g}" if lo is not None else "",
+                f"<={hi:g}" if hi is not None else "",
+            ) if w
+        )
+        cells.append(f"{name}={value:g} [{want} {'ok' if ok else 'FAIL'}]")
+        if not ok:
+            failures.append(f"{path}: {name}={value:g} out of bounds ({want})")
+    return cells, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--thresholds", default="ci/bench_thresholds.json")
+    ap.add_argument("files", nargs="*", help="bench JSONs (default: all gated)")
+    args = ap.parse_args()
+    with open(args.thresholds) as f:
+        thresholds = json.load(f)
+
+    files = args.files or sorted(thresholds)
+    all_failures = []
+    width = max(len(p) for p in files)
+    for path in files:
+        # threshold lookup by basename so CI can pass rust/BENCH_x.json
+        base = path.rsplit("/", 1)[-1]
+        bounds = thresholds.get(base)
+        if bounds is None:
+            print(f"{path:<{width}}  (no thresholds registered)")
+            all_failures.append(f"{path}: no thresholds registered for {base!r}")
+            continue
+        cells, failures = check_file(path, bounds)
+        line = "  ".join(cells) if cells else "UNREADABLE"
+        print(f"{path:<{width}}  {line}")
+        all_failures.extend(failures)
+
+    if all_failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for failure in all_failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    print(f"\nbench gate ok: {len(files)} file(s) within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

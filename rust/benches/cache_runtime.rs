@@ -133,7 +133,7 @@ fn main() -> Result<()> {
             min_batches: 4,
             decay: 0.7,
             drift_threshold: 0.02,
-            per_shard: true,
+            ..RefreshConfig::default()
         },
     );
 

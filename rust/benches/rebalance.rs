@@ -1,0 +1,503 @@
+//! Elastic-budget bench: cross-shard rebalancing under a hot set that
+//! migrates onto one shard.
+//!
+//! Scenario: one logical DCI snapshot is sharded across N simulated
+//! devices with the budget split evenly (the PR 3 startup state),
+//! planned against a uniform phase-A request mix. The live traffic
+//! then shifts to phase B: a small *hot set* of seeds owned by one
+//! shard, served repeatedly every wave (plus a trickle of uniform
+//! background traffic), so both the shard-level load mass and the
+//! per-node frequencies concentrate on the hot shard. The even split
+//! now starves that shard — its budget share is fixed at 1/N while it
+//! serves ~half the traffic — which is exactly the gap cross-shard
+//! rebalancing closes: the refresh loop detects the budget-vs-load
+//! skew, re-splits the global budget proportionally to the observed
+//! (decayed) shard mass with exact integer arithmetic, and re-plans
+//! only the shards whose budgets changed, accounting every install
+//! against its own device in claim-before-release order.
+//!
+//! Measurements over the *identical* phase-B request sequence:
+//!   rebalanced — the live runtime after the online re-splits
+//!   control    — the best a no-rebalance system could ever do: a
+//!                fresh offline re-plan of every shard from a phase-B
+//!                pre-sample, still under the even split
+//!   oracle     — the same offline re-plan under the load-weighted
+//!                split (what rebalancing steers toward)
+//!
+//! Asserted invariants (the acceptance criteria):
+//!   - the rebalanced runtime recovers ≥ 95% of the oracle's overall
+//!     hit ratio, and the no-rebalance control stays measurably below;
+//!   - zero swap stalls on every shard;
+//!   - Σ shard budgets == the global budget after every re-split;
+//!   - device-accounting conservation: after the loop quiesces, every
+//!     device holds exactly its live snapshot's bytes (claim-before-
+//!     release reclaimed everything it released), and the transient
+//!     peak stayed within two epochs of the largest share.
+//!
+//! Always writes `BENCH_rebalance.json` (override with `--json
+//! <path>`) — `ci/check_bench.py` gates the headline values.
+//!
+//! `cargo bench --bench rebalance [-- --quick]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use dci::baselines::PreparedSystem;
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::planner::{split_budget_weighted, DciPlanner, WorkloadProfile};
+use dci::cache::refresh::{RefreshConfig, RefreshJob};
+use dci::cache::shard::{plan_sharded, plan_sharded_with_budgets, ShardRouter, ShardedPlan};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
+use dci::cache::CacheStats;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, Dataset, NodeId};
+use dci::mem::CostModel;
+use dci::sampler::{presample, Fanout};
+use dci::util::json::s;
+use dci::util::Rng;
+
+struct Params {
+    dataset: &'static str,
+    /// Single-hop fan-out: seeds carry 1/(1+f) of the visit mass, so a
+    /// shard-confined hot set actually skews the shard-mass signal
+    /// (multi-hop neighbor visits are hash-spread and dilute it).
+    fanout: &'static str,
+    n_shards: usize,
+    /// The shard the phase-B hot set lives on.
+    hot_shard: usize,
+    /// Seeds per serving request.
+    req_size: usize,
+    /// Phase-A uniform pool (seeds, chunked into requests).
+    a_pool: usize,
+    /// Hot-set size (seeds owned by `hot_shard`).
+    hot_seeds: usize,
+    /// Hot requests per wave — `hot_reqs × req_size / hot_seeds` is
+    /// the per-wave frequency of each hot seed (the frequency skew
+    /// that makes capacity-follows-load pay off).
+    hot_reqs: usize,
+    /// Uniform background requests per wave.
+    bg_reqs: usize,
+    /// Pre-sampling geometry for the offline plans.
+    presample_bs: usize,
+    n_presample_a: usize,
+    /// Global budget (split per shard; sized so the hot working set
+    /// does NOT fit in an even share but mostly fits in a weighted
+    /// one — the regime where rebalancing matters).
+    budget: u64,
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_rebalance.json");
+    let p = if opts.quick {
+        Params {
+            dataset: "tiny",
+            fanout: "2",
+            n_shards: 4,
+            hot_shard: 2,
+            req_size: 24,
+            a_pool: 320,
+            hot_seeds: 48,
+            hot_reqs: 10,
+            bg_reqs: 2,
+            presample_bs: 80,
+            n_presample_a: 4,
+            budget: 16_000,
+        }
+    } else {
+        Params {
+            dataset: "products-sim",
+            fanout: "4",
+            n_shards: 4,
+            hot_shard: 2,
+            req_size: 64,
+            a_pool: 2048,
+            hot_seeds: 128,
+            hot_reqs: 16,
+            bg_reqs: 2,
+            presample_bs: 256,
+            n_presample_a: 8,
+            // deliberately tight: the hot shard's phase-B working set
+            // (~128 seeds at 8 visits/wave + their owned neighbors)
+            // must NOT fit in an even share (~300 feature rows) but
+            // mostly fit in a weighted one — the regime where moving
+            // capacity pays
+            budget: 1 << 20,
+        }
+    };
+    let n = p.n_shards;
+
+    eprintln!("building {}...", p.dataset);
+    let ds = Arc::new(datasets::spec(p.dataset)?.build());
+    let mut cfg = RunConfig::default();
+    cfg.dataset = p.dataset.into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.req_size;
+    cfg.fanout = Fanout::parse(p.fanout)?;
+    cfg.budget = Some(p.budget);
+    cfg.shards = n;
+    cfg.compute = ComputeKind::Skip;
+    let cost = CostModel::default();
+    let router = ShardRouter::new(n);
+
+    // phase A: a uniform pool from the head of the test set
+    ensure!(ds.test_nodes.len() >= 2 * p.a_pool, "test set too small");
+    let a_pool: Vec<NodeId> = ds.test_nodes[..p.a_pool].to_vec();
+    let a_chunks: Vec<Vec<NodeId>> =
+        a_pool.chunks(p.req_size).map(|c| c.to_vec()).collect();
+
+    // phase B: the hot set — seeds owned by `hot_shard`, drawn from the
+    // tail of the test set — plus a uniform background trickle
+    let tail = &ds.test_nodes[p.a_pool..];
+    let hot: Vec<NodeId> = tail
+        .iter()
+        .copied()
+        .filter(|&v| router.shard_of(v) == p.hot_shard)
+        .take(p.hot_seeds)
+        .collect();
+    ensure!(
+        hot.len() == p.hot_seeds,
+        "tail holds only {} shard-{} seeds (need {})",
+        hot.len(),
+        p.hot_shard,
+        p.hot_seeds
+    );
+    let bg: Vec<NodeId> = tail
+        .iter()
+        .copied()
+        .filter(|v| !hot.contains(v))
+        .take(p.bg_reqs * p.req_size)
+        .collect();
+    // one wave: hot requests cycle through the hot set (each hot seed
+    // appears hot_reqs·req_size/hot_seeds times), then the background
+    let mut b_chunks: Vec<Vec<NodeId>> = Vec::new();
+    for r in 0..p.hot_reqs {
+        let chunk: Vec<NodeId> = (0..p.req_size)
+            .map(|i| hot[(r * p.req_size + i) % hot.len()])
+            .collect();
+        b_chunks.push(chunk);
+    }
+    for c in bg.chunks(p.req_size) {
+        b_chunks.push(c.to_vec());
+    }
+    let b_seed_stream: Vec<NodeId> = b_chunks.iter().flatten().copied().collect();
+
+    // offline sharded plan against phase A: the startup state — even
+    // split, every shard planned from its masked profile
+    let stats_a = presample(
+        &ds.csc,
+        &ds.features,
+        &a_pool,
+        p.presample_bs,
+        &cfg.fanout,
+        p.n_presample_a,
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile_a = WorkloadProfile::from_presample(&stats_a);
+    let live_plans = plan_sharded(&DciPlanner, &ds, &profile_a, p.budget, &router);
+    ensure!(live_plans.budgets.iter().sum::<u64>() == p.budget, "split lost bytes");
+    let prepared = PreparedSystem::from_plans(
+        SystemKind::Dci,
+        live_plans,
+        router.clone(),
+        None,
+        p.budget,
+        0.0,
+        &cost,
+    );
+    let shard_budgets = prepared.shard_budgets.clone();
+    let runtime = Arc::clone(&prepared.runtime);
+    let mut engine = InferenceEngine::with_prepared(&ds, cfg.clone(), prepared)?;
+    let device = engine.device_group();
+    // startup epoch conservation: each device holds exactly its shard's
+    // snapshot bytes
+    for s in 0..n {
+        ensure!(
+            device.used(s) == runtime.shard(s).load().bytes_used(),
+            "startup ledger imbalance on device {s}"
+        );
+    }
+    let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    engine.set_tracker(Arc::clone(&tracker));
+    // thresholds are deliberately low (the shard/cache bench
+    // philosophy): a spurious early re-split only moves a few bytes
+    // and re-centers, while a missed skew would starve the hot shard
+    // forever
+    let refresher = RefreshJob::new(
+        Arc::clone(&ds),
+        Arc::clone(&runtime),
+        Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+        Box::new(DciPlanner),
+        shard_budgets,
+        stats_a.node_visits.clone(),
+        RefreshConfig {
+            check_interval: Duration::from_millis(20),
+            min_batches: 4,
+            decay: 0.7,
+            drift_threshold: 0.02,
+            rebalance: true,
+            rebalance_threshold: 0.02,
+            rebalance_floor: 0.1,
+            ..RefreshConfig::default()
+        },
+    )
+    .device(Arc::clone(&device))
+    .spawn();
+
+    // phase A: serve the matched workload (warm, tracked)
+    let mut phase_a_stats = CacheStats::new();
+    for chunk in &a_chunks {
+        phase_a_stats.merge(&engine.infer_once(chunk)?.stats);
+    }
+    eprintln!(
+        "  [phase-A live] feat-hit={:.3} adj-hit={:.3} ({n} shards, even split)",
+        phase_a_stats.feat_hit_ratio(),
+        phase_a_stats.adj_hit_ratio()
+    );
+
+    // phase B: drive the migrated hot set until a re-split lands, then
+    // settle waves so the decayed profile (and the budgets) converge
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut b_waves = 0u64;
+    while refresher.stats().shard_rebalances == 0 && Instant::now() < deadline {
+        for chunk in &b_chunks {
+            engine.infer_once(chunk)?;
+        }
+        b_waves += 1;
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    ensure!(
+        refresher.stats().shard_rebalances >= 1,
+        "rebalance never triggered after {b_waves} phase-B waves (skew {:.3})",
+        refresher.stats().last_skew
+    );
+    for _ in 0..12 {
+        for chunk in &b_chunks {
+            engine.infer_once(chunk)?;
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let rstats = refresher.stop();
+    let stalls = runtime.swap_stalls();
+    eprintln!(
+        "  [rebalance] events={} installs={} budgets={:?} moved={}B skew={:.3} stalls={stalls}",
+        rstats.shard_rebalances,
+        rstats.rebalance_installs,
+        rstats.shard_budgets,
+        rstats.budget_moved_bytes,
+        rstats.last_skew
+    );
+
+    // budget conservation after every re-split: the shard sum IS the
+    // global budget (no auto policy here, so the global never moves)
+    ensure!(
+        rstats.shard_budgets.iter().sum::<u64>() == p.budget,
+        "re-splits must conserve the global budget: {:?}",
+        rstats.shard_budgets
+    );
+    ensure!(rstats.install_ooms == 0, "no install may be dropped: {rstats:?}");
+    // device-accounting conservation at quiescence: every byte the
+    // claim-before-release installs claimed beyond the live snapshots
+    // was reclaimed
+    let mut ledger_error = 0u64;
+    for s in 0..n {
+        let used = device.used(s);
+        let live = runtime.shard(s).load().bytes_used();
+        ledger_error += used.abs_diff(live);
+    }
+    ensure!(ledger_error == 0, "device ledgers out of balance by {ledger_error} B");
+    // the transient double-residency peak is bounded by two epochs on
+    // one device (old + new, each ≤ the global budget) — an accounting
+    // leak would accumulate past this across the run's many installs
+    ensure!(
+        rstats.max_transient_bytes <= 2 * p.budget,
+        "transient peak {} exceeds two epochs' worth of budget",
+        rstats.max_transient_bytes
+    );
+
+    // --- measurement: identical phase-B sequence on three plan sets --
+    let b_chunk_views: Vec<&[NodeId]> = b_chunks.iter().map(|c| c.as_slice()).collect();
+    // a phase-B pre-sample over the actual request stream (repetitions
+    // included, so the profile carries the hot set's frequency skew)
+    let stats_b = presample(
+        &ds.csc,
+        &ds.features,
+        &b_seed_stream,
+        p.req_size,
+        &cfg.fanout,
+        b_chunks.len(),
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile_b = WorkloadProfile::from_presample(&stats_b);
+    // control: the best no-rebalance outcome — every shard freshly
+    // re-planned for phase B, but still under the even split
+    let control_plans = plan_sharded(&DciPlanner, &ds, &profile_b, p.budget, &router);
+    let control = measure(&ds, &cfg, control_plans, &router, p.budget, &cost, &b_chunk_views)?;
+    // oracle: the same offline re-plan under the load-weighted split
+    let mut shard_mass = vec![0.0f64; n];
+    for (v, &c) in stats_b.node_visits.iter().enumerate() {
+        if c > 0 {
+            shard_mass[router.shard_of(v as NodeId)] += c as f64;
+        }
+    }
+    let oracle_budgets = split_budget_weighted(p.budget, &shard_mass, 0.1);
+    ensure!(oracle_budgets.iter().sum::<u64>() == p.budget, "oracle split lost bytes");
+    let oracle_plans =
+        plan_sharded_with_budgets(&DciPlanner, &ds, &profile_b, oracle_budgets, &router);
+    let oracle = measure(&ds, &cfg, oracle_plans, &router, p.budget, &cost, &b_chunk_views)?;
+    // rebalanced: the live runtime's hot-swapped, re-split shards
+    let rebalanced = {
+        let prepared = PreparedSystem {
+            kind: SystemKind::Dci,
+            runtime: Arc::clone(&runtime),
+            cache_budget: p.budget,
+            shard_budgets: rstats.shard_budgets.clone(),
+            presample: None,
+            batch_order: None,
+            inter_batch_reuse: false,
+            preprocess_ns: 0.0,
+            preprocess_wall_ns: 0.0,
+        };
+        let mut e = InferenceEngine::with_prepared(&ds, cfg.clone(), prepared)?;
+        run_chunks(&mut e, &b_chunk_views)?
+    };
+
+    let recovered_hit_ratio = if oracle.overall_hit_ratio() > 0.0 {
+        rebalanced.overall_hit_ratio() / oracle.overall_hit_ratio()
+    } else {
+        1.0
+    };
+    let no_rebalance_hit_ratio = if oracle.overall_hit_ratio() > 0.0 {
+        control.overall_hit_ratio() / oracle.overall_hit_ratio()
+    } else {
+        1.0
+    };
+    let rebalance_margin = recovered_hit_ratio - no_rebalance_hit_ratio;
+
+    let mut report = BenchReport::new(
+        "Elastic budgets: cross-shard rebalancing under a migrating hot set",
+        &["measurement", "feat-hit%", "adj-hit%", "overall%"],
+    );
+    for (label, st) in [
+        ("phase-A (matched, even split)", &phase_a_stats),
+        ("phase-B even-split control", &control),
+        ("phase-B rebalanced (live)", &rebalanced),
+        ("phase-B weighted-split oracle", &oracle),
+    ] {
+        report.row(
+            &[
+                label.to_string(),
+                format!("{:.1}", 100.0 * st.feat_hit_ratio()),
+                format!("{:.1}", 100.0 * st.adj_hit_ratio()),
+                format!("{:.1}", 100.0 * st.overall_hit_ratio()),
+            ],
+            vec![
+                ("measurement", s(label)),
+                ("feat_hit", jnum(st.feat_hit_ratio())),
+                ("adj_hit", jnum(st.adj_hit_ratio())),
+                ("overall_hit", jnum(st.overall_hit_ratio())),
+            ],
+        );
+    }
+    report.row(
+        &[
+            format!("rebalance: {} re-splits", rstats.shard_rebalances),
+            format!("{}B moved", rstats.budget_moved_bytes),
+            format!("{stalls} stalls"),
+            format!("{:.1}% recovery", 100.0 * recovered_hit_ratio),
+        ],
+        vec![
+            ("measurement", s("rebalance")),
+            ("n_shards", jnum(n as f64)),
+            ("shard_rebalances", jnum(rstats.shard_rebalances as f64)),
+            ("rebalance_installs", jnum(rstats.rebalance_installs as f64)),
+            ("replans", jnum(rstats.replans as f64)),
+            ("budget_moved_bytes", jnum(rstats.budget_moved_bytes as f64)),
+            ("auto_budget_delta", jnum(rstats.auto_budget_delta as f64)),
+            ("max_transient_bytes", jnum(rstats.max_transient_bytes as f64)),
+            ("device_accounting_error_bytes", jnum(ledger_error as f64)),
+            ("swap_stalls", jnum(stalls as f64)),
+            ("recovered_hit_ratio", jnum(recovered_hit_ratio)),
+            ("no_rebalance_hit_ratio", jnum(no_rebalance_hit_ratio)),
+            ("rebalance_margin", jnum(rebalance_margin)),
+        ],
+    );
+    report.finish(&opts)?;
+
+    println!(
+        "control {:.3} vs rebalanced {:.3} vs weighted oracle {:.3}: {:.1}% recovery, \
+         margin {:.3}; {} re-splits moved {} B across {n} shards, {stalls} stalls",
+        control.overall_hit_ratio(),
+        rebalanced.overall_hit_ratio(),
+        oracle.overall_hit_ratio(),
+        100.0 * recovered_hit_ratio,
+        rebalance_margin,
+        rstats.shard_rebalances,
+        rstats.budget_moved_bytes
+    );
+
+    // the acceptance criteria this bench exists to hold
+    for shard in 0..n {
+        ensure!(
+            runtime.shard(shard).swap_stalls() == 0,
+            "shard {shard} blocked a reader on a snapshot swap"
+        );
+    }
+    ensure!(stalls == 0, "serving must never block on any shard's swap");
+    ensure!(
+        rstats.shard_budgets[p.hot_shard] > p.budget / n as u64,
+        "the hot shard must end with more than its even share: {:?}",
+        rstats.shard_budgets
+    );
+    ensure!(
+        recovered_hit_ratio >= 0.95,
+        "rebalancing recovered only {:.1}% of the weighted oracle's hit ratio",
+        100.0 * recovered_hit_ratio
+    );
+    ensure!(
+        rebalance_margin >= 0.02,
+        "the even-split control must stay measurably below the rebalanced runtime \
+         (margin {rebalance_margin:.3})"
+    );
+    Ok(())
+}
+
+/// Serve `chunks` on a fresh engine built around a sharded plan set;
+/// request indices start at 0, so every `measure` sees identical
+/// sampling streams.
+fn measure(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    plans: ShardedPlan,
+    router: &ShardRouter,
+    budget: u64,
+    cost: &CostModel,
+    chunks: &[&[NodeId]],
+) -> Result<CacheStats> {
+    let prepared = PreparedSystem::from_plans(
+        SystemKind::Dci,
+        plans,
+        router.clone(),
+        None,
+        budget,
+        0.0,
+        cost,
+    );
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    run_chunks(&mut engine, chunks)
+}
+
+fn run_chunks(
+    engine: &mut InferenceEngine<'_>,
+    chunks: &[&[NodeId]],
+) -> Result<CacheStats> {
+    let mut stats = CacheStats::new();
+    for chunk in chunks {
+        stats.merge(&engine.infer_once(chunk)?.stats);
+    }
+    Ok(stats)
+}

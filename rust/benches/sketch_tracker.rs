@@ -286,8 +286,8 @@ fn drain_microbench(p: &Params) -> (f64, f64, usize) {
             dense.record_elem(t);
             sketch.record_elem(t);
         }
-        dense.record_batch(1.0, 1.0);
-        sketch.record_batch(1.0, 1.0);
+        dense.record_batch(1.0, 1.0, 1);
+        sketch.record_batch(1.0, 1.0, 1);
 
         let t0 = Instant::now();
         let dw = dense.drain();
@@ -341,7 +341,7 @@ fn drift_run(
             min_batches: 4,
             decay: 0.7,
             drift_threshold: 0.02,
-            per_shard: true,
+            ..RefreshConfig::default()
         },
     );
 

@@ -169,6 +169,12 @@ pub const PRESAMPLE_BS_CAP: usize = 256;
 /// after the reserve and the workload's own peak claim (§IV.A). The
 /// peak claim is estimated from pre-sampling: input features + block
 /// tensors + activations for the largest observed batch.
+///
+/// The claim model itself ([`crate::mem::workload_claim_bytes`] over
+/// [`crate::mem::per_node_claim_bytes`]) is shared with the refresh
+/// loop's per-epoch re-evaluation
+/// ([`crate::cache::refresh::AutoBudgetPolicy`]) so the startup budget
+/// and its online re-evaluations can never disagree on the formula.
 pub fn auto_budget(
     device: &DeviceMemory,
     stats: &PresampleStats,
@@ -176,17 +182,12 @@ pub fn auto_budget(
     hidden: usize,
     scale: f64,
 ) -> u64 {
-    let peak_inputs = stats.max_input_nodes as u64;
-    // features + first-layer activations (hidden) + block index/mask,
-    // with 2x slack for the allocator's transient copies
-    let per_node = row_bytes + (hidden * 4) as u64 + 64;
-    let workload = 2.0 * (peak_inputs * per_node) as f64;
-    // The batch footprint does not shrink with the dataset stand-in,
-    // but the simulated device does (rtx4090_scaled); scale the claim
-    // by the same factor so the claim/device *ratio* matches the
-    // paper's testbed (≈5% of a 24 GB card). See DESIGN.md.
-    let workload = (workload * scale.min(1.0)) as u64;
-    device.available_for_cache().saturating_sub(workload)
+    let claim = crate::mem::workload_claim_bytes(
+        stats.max_input_nodes as u64,
+        crate::mem::per_node_claim_bytes(row_bytes, hidden),
+        scale,
+    );
+    device.available_for_cache().saturating_sub(claim)
 }
 
 /// Resolve the node-global cache budget for a cache-owning system.

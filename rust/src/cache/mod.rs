@@ -22,6 +22,12 @@
 //! - [`refresh`] — the online loop that drains the tracker into a
 //!   sparse decayed profile, detects workload drift *per shard*,
 //!   re-plans in the background, and hot-swaps only the drifted shard.
+//!   With `rebalance=on` the loop is also **elastic**: shard-level
+//!   load skew re-splits the global budget across shards
+//!   ([`split_budget_weighted`]), an `auto-budget-refresh=on` policy
+//!   re-evaluates the workload-aware global budget per epoch, and
+//!   every install is accounted against its device arena in
+//!   claim-before-release order. See DESIGN.md §Elastic budgets.
 //! - [`stats`] — per-run transfer statistics, including online-refill
 //!   traffic.
 //!
@@ -49,11 +55,15 @@ pub mod tracker;
 pub use adj_cache::AdjCache;
 pub use alloc::{allocate, CacheAllocation};
 pub use feat_cache::FeatCache;
-pub use planner::{planner_for, split_budget, CachePlan, CachePlanner, WorkloadProfile};
-pub use refresh::{RefreshConfig, RefreshStats, Refresher};
+pub use planner::{
+    cap_shares, planner_for, split_budget, split_budget_weighted, CachePlan,
+    CachePlanner, WorkloadProfile,
+};
+pub use refresh::{AutoBudgetPolicy, RefreshConfig, RefreshJob, RefreshStats, Refresher};
 pub use runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};
 pub use shard::{
-    plan_sharded, ShardRouter, ShardView, ShardedHandle, ShardedPlan, ShardedRuntime,
+    plan_sharded, plan_sharded_with_budgets, ShardRouter, ShardView, ShardedHandle,
+    ShardedPlan, ShardedRuntime,
 };
 pub use stats::CacheStats;
 pub use tracker::{

@@ -94,6 +94,14 @@ pub trait CachePlanner: Send + Sync {
 /// no-float discipline as the feature fill's `c * n > total` average
 /// threshold, so no shard sum can ever exceed the global budget and no
 /// byte is lost to rounding.
+///
+/// **Zero-shard contract** (shared with [`split_budget_weighted`]):
+/// `n_shards == 0` is treated as one shard — the result is `[budget]`,
+/// never an empty vector. A splitter that returned `[]` would silently
+/// lose the whole budget; clamping to one logical shard keeps the
+/// conservation invariant (`Σ shares == budget`) total, and every
+/// degenerate caller (single-device runtimes, tests probing the edge)
+/// gets the obviously-right answer.
 pub fn split_budget(budget: u64, n_shards: usize) -> Vec<u64> {
     let n = n_shards.max(1) as u64;
     let base = budget / n;
@@ -105,6 +113,129 @@ pub fn split_budget(budget: u64, n_shards: usize) -> Vec<u64> {
         "shard split must conserve the budget exactly"
     );
     shares
+}
+
+/// Resolution of the integer weight quantization in
+/// [`split_budget_weighted`]: loads are mapped to `0..=2^20` buckets
+/// relative to the hottest shard, so the quantization error is below
+/// one part in a million of the dominant load.
+const WEIGHT_BUCKETS: u64 = 1 << 20;
+
+/// Split a global budget across shards **proportionally to their
+/// observed load mass**, in exact integer arithmetic (largest-remainder
+/// apportionment over `u128` products — `Σ shares == budget` always,
+/// no float ever touches a byte count).
+///
+/// - `floor` ∈ [0, 1] is the guaranteed minimum share per shard,
+///   expressed as a fraction of the even base share: every shard keeps
+///   at least `⌊(budget / n) as f64 · floor⌋` bytes however cold it
+///   goes, so a rebalance can never strand a shard with zero capacity
+///   for the traffic that *does* route to it.
+/// - Under a uniform load vector the result is byte-identical to
+///   [`split_budget`] (even split, remainder front-loaded) — weighting
+///   is a generalization, not a second code path that can drift.
+/// - An **all-zero (or empty-support) load vector falls back to the
+///   even split**: no observations is no evidence for skew.
+/// - **Zero-shard contract** (shared with [`split_budget`]): an empty
+///   load vector is treated as one shard and returns `[budget]`.
+///
+/// Negative or non-finite load entries are treated as zero.
+pub fn split_budget_weighted(budget: u64, shard_loads: &[f64], floor: f64) -> Vec<u64> {
+    let n = shard_loads.len();
+    if n <= 1 {
+        // the zero-shard contract: the budget is never silently lost
+        return vec![budget];
+    }
+    let floor = floor.clamp(0.0, 1.0);
+    // clamp against the even base share: the f64 round-trip can round
+    // a u64-scale quotient *up*, and `floor_share · n > budget` must
+    // be impossible by construction
+    let even_base = budget / n as u64;
+    let floor_share = (((even_base as f64) * floor) as u64).min(even_base);
+    let mut shares = vec![floor_share; n];
+    let remaining = budget - floor_share * n as u64;
+
+    // quantize loads to integer weights relative to the hottest shard
+    let max_load = shard_loads
+        .iter()
+        .filter(|l| l.is_finite())
+        .fold(0.0f64, |a, &b| a.max(b));
+    let weights: Vec<u128> = shard_loads
+        .iter()
+        .map(|&l| {
+            if max_load > 0.0 && l.is_finite() && l > 0.0 {
+                ((l / max_load) * WEIGHT_BUCKETS as f64).round() as u128
+            } else {
+                0
+            }
+        })
+        .collect();
+    let total: u128 = weights.iter().sum();
+    if total == 0 {
+        // no load evidence: the even split of what the floors left
+        for (s, e) in shares.iter_mut().zip(split_budget(remaining, n)) {
+            *s += e;
+        }
+        return shares;
+    }
+
+    // largest-remainder (Hamilton) apportionment of `remaining`:
+    // integer quotients first, then one byte each to the largest
+    // remainders (ties to the lower shard index, matching the even
+    // split's front-loaded remainder)
+    let mut assigned = 0u64;
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(n);
+    for (s, &w) in weights.iter().enumerate() {
+        let prod = remaining as u128 * w;
+        let q = (prod / total) as u64;
+        shares[s] += q;
+        assigned += q;
+        rems.push((prod % total, s));
+    }
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, s) in rems.iter().take((remaining - assigned) as usize) {
+        shares[s] += 1;
+    }
+    debug_assert_eq!(
+        shares.iter().sum::<u64>(),
+        budget,
+        "weighted split must conserve the budget exactly"
+    );
+    shares
+}
+
+/// Clamp every share to `cap` (a per-device headroom), redistributing
+/// the clipped excess evenly among the still-open shards — exact
+/// integer arithmetic, conservation preserved whenever
+/// `Σ shares ≤ n · cap` (the [`crate::baselines::resolve_budget`]
+/// clamp guarantees exactly that for budget splits). Terminates in at
+/// most `n` rounds: each non-final round closes at least one share at
+/// the cap.
+pub fn cap_shares(shares: &mut [u64], cap: u64) {
+    loop {
+        let mut excess = 0u64;
+        for s in shares.iter_mut() {
+            if *s > cap {
+                excess += *s - cap;
+                *s = cap;
+            }
+        }
+        if excess == 0 {
+            return;
+        }
+        let open: Vec<usize> = (0..shares.len()).filter(|&i| shares[i] < cap).collect();
+        if open.is_empty() {
+            // total exceeds n·cap: everything is pinned at the cap and
+            // the overflow is genuinely unplaceable — callers clamp the
+            // global budget first, so this is the documented lossy edge
+            return;
+        }
+        let n = open.len() as u64;
+        let (base, rem) = (excess / n, excess % n);
+        for (i, &s) in open.iter().enumerate() {
+            shares[s] += base + u64::from((i as u64) < rem);
+        }
+    }
 }
 
 /// The planner behind each cache-owning system. `None` for systems
@@ -392,8 +523,11 @@ mod tests {
         assert_eq!(split_budget(2, 4), vec![1, 1, 0, 0]);
         assert_eq!(split_budget(0, 4), vec![0, 0, 0, 0]);
         assert_eq!(split_budget(7, 1), vec![7]);
-        // degenerate shard count clamps to one shard, losing nothing
+        // the documented zero-shard contract: zero shards is treated
+        // as one logical shard — the budget is never silently lost
+        // (shared with split_budget_weighted; see its test)
         assert_eq!(split_budget(7, 0), vec![7]);
+        assert_eq!(split_budget(0, 0), vec![0]);
         for (budget, n) in [(u64::MAX, 7usize), (1 << 40, 13), (12_345, 6)] {
             let shares = split_budget(budget, n);
             assert_eq!(shares.len(), n);
@@ -404,6 +538,91 @@ mod tests {
             );
             assert!(max - min <= 1, "split must be even to within one byte");
         }
+    }
+
+    #[test]
+    fn weighted_split_zero_shard_contract_and_fallbacks() {
+        // the shared zero-shard contract: empty load vector = one shard
+        assert_eq!(split_budget_weighted(7, &[], 0.1), vec![7]);
+        assert_eq!(split_budget_weighted(0, &[], 0.0), vec![0]);
+        // one shard takes everything regardless of its load
+        assert_eq!(split_budget_weighted(9, &[0.0], 0.5), vec![9]);
+        // all-zero load vector falls back to the even split exactly
+        assert_eq!(
+            split_budget_weighted(10, &[0.0, 0.0, 0.0], 0.0),
+            split_budget(10, 3)
+        );
+        assert_eq!(
+            split_budget_weighted(11, &[0.0; 4], 0.5),
+            split_budget(11, 4)
+        );
+        // non-finite / negative loads are treated as zero
+        assert_eq!(
+            split_budget_weighted(12, &[f64::NAN, -3.0, f64::INFINITY, 0.0], 0.0),
+            split_budget(12, 4)
+        );
+    }
+
+    #[test]
+    fn weighted_split_is_proportional_and_exact() {
+        // 3:1 load at zero floor: shares follow the ratio exactly
+        assert_eq!(split_budget_weighted(400, &[3.0, 1.0], 0.0), vec![300, 100]);
+        // uniform load reduces to the even split, remainder included
+        for (budget, n) in [(10u64, 3usize), (7, 4), (1 << 40, 13)] {
+            let loads = vec![2.5; n];
+            assert_eq!(
+                split_budget_weighted(budget, &loads, 0.0),
+                split_budget(budget, n),
+                "uniform load must reduce to the even split"
+            );
+        }
+        // conservation holds at extreme skew and extreme budgets
+        for budget in [0u64, 1, 999, u64::MAX] {
+            let shares = split_budget_weighted(budget, &[1e12, 1e-9, 0.0, 5.0], 0.25);
+            assert_eq!(shares.iter().sum::<u64>(), budget, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn weighted_split_respects_the_floor() {
+        let budget = 100_000u64;
+        let n = 4;
+        let floor = 0.1;
+        let floor_share = ((budget / n as u64) as f64 * floor) as u64;
+        // all the load on one shard: the others keep their floor
+        let shares = split_budget_weighted(budget, &[0.0, 0.0, 9.0, 0.0], floor);
+        assert_eq!(shares.iter().sum::<u64>(), budget);
+        for (s, &share) in shares.iter().enumerate() {
+            assert!(share >= floor_share, "shard {s} fell below the floor");
+        }
+        assert_eq!(shares[2], budget - 3 * floor_share, "hot shard takes the rest");
+        // floor=1 pins the even split whatever the skew
+        assert_eq!(
+            split_budget_weighted(budget, &[9.0, 0.0, 0.0, 0.0], 1.0),
+            split_budget(budget, n)
+        );
+    }
+
+    #[test]
+    fn cap_shares_clamps_and_conserves() {
+        let mut shares = vec![90u64, 10, 0, 0];
+        cap_shares(&mut shares, 40);
+        assert_eq!(shares.iter().sum::<u64>(), 100);
+        assert!(shares.iter().all(|&s| s <= 40), "{shares:?}");
+        assert_eq!(shares[0], 40);
+        // second-round cascade: redistribution itself may hit the cap
+        let mut shares = vec![100u64, 39, 0, 0];
+        cap_shares(&mut shares, 40);
+        assert_eq!(shares.iter().sum::<u64>(), 139);
+        assert!(shares.iter().all(|&s| s <= 40), "{shares:?}");
+        // no clipping needed: untouched
+        let mut shares = vec![5u64, 6];
+        cap_shares(&mut shares, 10);
+        assert_eq!(shares, vec![5, 6]);
+        // documented lossy edge: total > n·cap pins everything at cap
+        let mut shares = vec![50u64, 50];
+        cap_shares(&mut shares, 10);
+        assert_eq!(shares, vec![10, 10]);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Online workload-drift re-planning, per shard.
+//! Online workload-drift re-planning, per shard — with elastic
+//! cross-shard budget rebalancing and epoch-aware device accounting.
 //!
 //! A serving deployment whose request mix drifts keeps paying misses on
 //! a stale plan (BGL's observation: feature-cache policy must track the
@@ -33,16 +34,53 @@
 //!   their next per-batch acquire, never blocking (the runtime counts
 //!   any reader that does block; the benches assert zero).
 //!
-//! With one shard this is exactly the PR 2 global refresh loop. With
-//! [`RefreshConfig::per_shard`] disabled, any shard's drift re-plans
-//! every shard (the "full re-plan" comparison mode).
+//! **Elastic budgets** (`rebalance=on`; DESIGN.md §Elastic budgets)
+//! make the *capacity assignment itself* workload-aware, along two
+//! axes the drift loop alone cannot move:
+//!
+//! - **Cross-shard rebalancing.** Separately from within-shard drift,
+//!   the loop measures shard-level *skew*: the total-variation
+//!   distance between the runtime's current per-shard budget shares
+//!   (the even split, at startup) and the observed per-shard load-mass
+//!   distribution. Past [`RefreshConfig::rebalance_threshold`] the
+//!   global budget is re-split proportionally to the observed load
+//!   ([`split_budget_weighted`]: exact integer arithmetic, a
+//!   [`RefreshConfig::rebalance_floor`] minimum share per shard) and
+//!   **only the shards whose budgets changed** are re-planned and
+//!   hot-swapped — installs stay per-shard, the never-block invariant
+//!   holds, and `Σ shard budgets == global budget` on every epoch.
+//! - **Epoch-aware auto budget** (`auto-budget-refresh=on`). With an
+//!   [`AutoBudgetPolicy`] wired, the loop re-evaluates the §IV.A
+//!   workload-aware budget from the *decayed peak claim* the tracker
+//!   observed (largest batch input count, decayed at the profile's own
+//!   rate so a lightened workload returns memory to the caches), so
+//!   the global budget tracks the workload instead of freezing at its
+//!   pre-sampling estimate.
+//!
+//! Every install is accounted against the shard's own
+//! [`DeviceGroup`](crate::mem::DeviceGroup) arena (when one is
+//! attached) in **two-phase claim-before-release order**: the incoming
+//! snapshot's bytes are claimed while the outgoing epoch is still
+//! resident — the transient double-residency may dip into the paper's
+//! 1 GB reserve, which is what the reserve is for — and the outgoing
+//! bytes are released after the swap. The peak transient is therefore
+//! bounded by `old epoch + new epoch` per device, recorded in
+//! [`RefreshStats::max_transient_bytes`], and the ledger returns to
+//! exactly the live snapshots' bytes at quiescence (the `rebalance`
+//! bench asserts this conservation).
+//!
+//! With one shard this is exactly the PR 2 global refresh loop (and
+//! `rebalance=on` still lets the *auto budget* track the workload).
+//! With [`RefreshConfig::per_shard`] disabled, any shard's drift
+//! re-plans every shard (the "full re-plan" comparison mode).
 //!
 //! Cost: per poll that saw traffic, O(touched) drain + merge (plus the
 //! tracker's own drain cost — O(nodes + edges) for `dense`,
 //! O(touched) for `sketch`; `benches/sketch_tracker.rs` measures the
-//! gap). Only an actual re-plan materializes dense count arrays for
-//! the planner, and the planner itself is O(n) — the expensive path
-//! runs exactly when a shard is about to be refilled anyway.
+//! gap). The skew test adds O(active profile entries) per check. Only
+//! an actual re-plan materializes dense count arrays for the planner,
+//! and the planner itself is O(n) — the expensive path runs exactly
+//! when a shard is about to be refilled anyway.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -51,8 +89,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::graph::{Csc, Dataset, NodeId};
+use crate::mem::DeviceGroup;
 
-use super::planner::{CachePlanner, WorkloadProfile};
+use super::planner::{
+    cap_shares, split_budget, split_budget_weighted, CachePlanner, WorkloadProfile,
+};
 use super::shard::{elem_owner, ShardRouter, ShardedRuntime};
 use super::tracker::WorkloadTracker;
 
@@ -75,6 +116,33 @@ pub struct RefreshConfig {
     /// `false` re-plans every shard as soon as any one drifts — the
     /// full-re-plan comparison mode (`shard-refresh=off`).
     pub per_shard: bool,
+    /// Elastic budgets (`rebalance=on`): re-split the global budget
+    /// across shards when the shard-level load mass skews away from
+    /// the current budget shares, re-planning only the shards whose
+    /// budgets changed. Off by default — budgets then stay frozen at
+    /// their startup split, the PR 3 behavior.
+    pub rebalance: bool,
+    /// Total-variation distance (in [0, 1]) between the current budget
+    /// shares and the observed shard-mass distribution that triggers a
+    /// re-split (`rebalance-threshold=`). Also the hysteresis band for
+    /// auto-budget changes: a re-evaluated global budget is applied
+    /// only when it moves by more than this fraction of the current
+    /// one.
+    pub rebalance_threshold: f64,
+    /// Minimum share per shard under a weighted re-split, as a
+    /// fraction of the even base share (`rebalance-floor=`; see
+    /// [`split_budget_weighted`]). Keeps a cold shard from being
+    /// stranded with zero capacity for the traffic that still routes
+    /// to it.
+    pub rebalance_floor: f64,
+    /// Re-evaluate the workload-aware global budget per epoch from the
+    /// observed (decayed) peak claim (`auto-budget-refresh=on`). Takes
+    /// effect only when an [`AutoBudgetPolicy`] is wired (the server
+    /// does so for `budget=auto` runs). Independent of `rebalance`: a
+    /// changed global re-splits by load with `rebalance=on`, and keeps
+    /// the even split with it off — re-tracking the budget and
+    /// redistributing it are separate decisions.
+    pub auto_budget_refresh: bool,
 }
 
 impl Default for RefreshConfig {
@@ -85,7 +153,44 @@ impl Default for RefreshConfig {
             decay: 0.5,
             drift_threshold: 0.15,
             per_shard: true,
+            rebalance: false,
+            rebalance_threshold: 0.25,
+            rebalance_floor: 0.1,
+            auto_budget_refresh: false,
         }
+    }
+}
+
+/// The §IV.A workload-aware budget, re-evaluable per epoch: global
+/// budget = `(per-device headroom − decayed peak claim) × shards`,
+/// with the claim computed by the same
+/// [`workload_claim_bytes`](crate::mem::workload_claim_bytes) model
+/// the startup [`auto_budget`](crate::baselines::auto_budget) uses.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoBudgetPolicy {
+    /// Per-device cache headroom basis (capacity − reserve — the
+    /// budget basis *before* any claim, matching what the startup
+    /// auto budget subtracted the pre-sampled claim from).
+    pub headroom_per_device: u64,
+    /// Device bytes the workload pins per input node
+    /// ([`crate::mem::per_node_claim_bytes`]).
+    pub per_node_bytes: u64,
+    /// Dataset scale factor (claims scale with the simulated device;
+    /// see [`crate::mem::workload_claim_bytes`]).
+    pub scale: f64,
+}
+
+impl AutoBudgetPolicy {
+    /// The global budget implied by an observed peak batch claim.
+    pub fn global_budget(&self, peak_inputs: u64, n_shards: usize) -> u64 {
+        let claim = crate::mem::workload_claim_bytes(
+            peak_inputs,
+            self.per_node_bytes,
+            self.scale,
+        );
+        self.headroom_per_device
+            .saturating_sub(claim)
+            .saturating_mul(n_shards.max(1) as u64)
     }
 }
 
@@ -94,12 +199,41 @@ impl Default for RefreshConfig {
 pub struct RefreshStats {
     /// Drift checks that had enough data to evaluate.
     pub checks: u64,
-    /// Shard re-plans installed (every install counts one shard).
+    /// Shard re-plans installed (every install counts one shard —
+    /// drift-driven and rebalance-driven installs both land here).
     pub replans: u64,
     /// Installs per shard (len = shard count).
     pub shard_replans: Vec<u64>,
     /// Largest per-shard drift measured by the last check.
     pub last_drift: f64,
+    /// Budget-vs-load skew (total-variation) measured by the last
+    /// rebalance check (0 until the first check with `rebalance=on`).
+    pub last_skew: f64,
+    /// Budget re-split events applied (each may re-plan several
+    /// shards).
+    pub shard_rebalances: u64,
+    /// Shard installs performed because the shard's *budget* changed
+    /// (the rebalance-driven subset of `replans`).
+    pub rebalance_installs: u64,
+    /// Σ bytes gained by growing shards across all re-splits — the
+    /// capacity that actually moved between devices.
+    pub budget_moved_bytes: u64,
+    /// Current global budget minus the startup global budget (nonzero
+    /// only with auto-budget refresh, or when an install was skipped
+    /// on OOM).
+    pub auto_budget_delta: i64,
+    /// Current per-shard budgets (Σ == current global budget; updated
+    /// on every check).
+    pub shard_budgets: Vec<u64>,
+    /// Peak device bytes observed right after a claim-before-release
+    /// install claim — the transient double-residency, bounded by
+    /// `old epoch + new epoch` on one device.
+    pub max_transient_bytes: u64,
+    /// Installs skipped because even the reserve could not absorb the
+    /// incoming snapshot (the snapshot is discarded, the old epoch
+    /// keeps serving; persistent nonzero values mean the budget is
+    /// mis-sized for the device).
+    pub install_ooms: u64,
     /// Total background wall time spent planning + installing, ns.
     pub replan_wall_ns: f64,
     /// H2D bytes uploaded by online refills, summed over installs.
@@ -118,6 +252,103 @@ pub struct RefreshStats {
     pub dropped_touches: u64,
 }
 
+/// Everything a [`Refresher`] needs: the mandatory serving-loop wiring
+/// plus the optional elastic-budget attachments (device accounting,
+/// auto-budget policy). Build with [`RefreshJob::new`], attach
+/// extras with [`RefreshJob::device`] / [`RefreshJob::auto_budget`],
+/// then [`RefreshJob::spawn`].
+pub struct RefreshJob {
+    /// The dataset re-plans fill from.
+    pub ds: Arc<Dataset>,
+    /// The (possibly sharded) runtime installs hot-swap into.
+    pub runtime: Arc<ShardedRuntime>,
+    /// The serving-path tracker the loop drains.
+    pub tracker: Arc<dyn WorkloadTracker>,
+    /// The strategy every re-plan runs (the one the startup plan used).
+    pub planner: Box<dyn CachePlanner>,
+    /// Per-shard byte budgets the loop starts from (len = shard count;
+    /// with `rebalance=on` these move, always summing to the global).
+    pub shard_budgets: Vec<u64>,
+    /// The global node-visit profile the live snapshots were planned
+    /// from (the pre-sample profile at startup) — the drift baseline.
+    pub planned_visits: Vec<u32>,
+    /// Per-shard device arenas for claim-before-release install
+    /// accounting (`None` = unaccounted installs, the bench/test
+    /// shortcut).
+    pub device: Option<Arc<DeviceGroup>>,
+    /// Per-epoch auto-budget re-evaluation policy (`None` = the global
+    /// budget only moves if installs are skipped on OOM).
+    pub auto_budget: Option<AutoBudgetPolicy>,
+    /// Loop knobs.
+    pub cfg: RefreshConfig,
+}
+
+impl RefreshJob {
+    /// A job with the mandatory wiring and no elastic attachments.
+    pub fn new(
+        ds: Arc<Dataset>,
+        runtime: Arc<ShardedRuntime>,
+        tracker: Arc<dyn WorkloadTracker>,
+        planner: Box<dyn CachePlanner>,
+        shard_budgets: Vec<u64>,
+        planned_visits: Vec<u32>,
+        cfg: RefreshConfig,
+    ) -> RefreshJob {
+        RefreshJob {
+            ds,
+            runtime,
+            tracker,
+            planner,
+            shard_budgets,
+            planned_visits,
+            device: None,
+            auto_budget: None,
+            cfg,
+        }
+    }
+
+    /// Attach the device group installs are accounted against.
+    pub fn device(mut self, device: Arc<DeviceGroup>) -> RefreshJob {
+        self.device = Some(device);
+        self
+    }
+
+    /// Attach the per-epoch auto-budget policy.
+    pub fn auto_budget(mut self, policy: AutoBudgetPolicy) -> RefreshJob {
+        self.auto_budget = Some(policy);
+        self
+    }
+
+    /// Spawn the background refresh thread over this job.
+    pub fn spawn(self) -> Refresher {
+        assert_eq!(
+            self.shard_budgets.len(),
+            self.runtime.n_shards(),
+            "one budget per shard"
+        );
+        if let Some(dev) = &self.device {
+            assert_eq!(
+                dev.n_devices(),
+                self.runtime.n_shards(),
+                "one device arena per shard"
+            );
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(RefreshStats {
+            shard_replans: vec![0; self.runtime.n_shards()],
+            shard_budgets: self.shard_budgets.clone(),
+            ..Default::default()
+        }));
+        let stop2 = Arc::clone(&stop);
+        let stats2 = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("dci-refresh".into())
+            .spawn(move || RefreshLoop::new(&self).run(&stop2, &stats2))
+            .expect("spawn refresh thread");
+        Refresher { stop, join, stats }
+    }
+}
+
 /// Handle to the background refresh thread.
 pub struct Refresher {
     stop: Arc<AtomicBool>,
@@ -126,12 +357,12 @@ pub struct Refresher {
 }
 
 impl Refresher {
-    /// Spawn the refresh loop over a (possibly sharded) runtime.
-    /// `planned_visits` is the global node-visit profile the runtime's
-    /// live snapshots were planned from (the pre-sample profile at
-    /// startup); `shard_budgets` is the per-shard byte budget every
-    /// re-plan must stay within (len = shard count — installs never
-    /// grow any device's claim; see the snapshot lifetime rules).
+    /// Spawn the refresh loop over a (possibly sharded) runtime — the
+    /// plain-wiring shorthand for [`RefreshJob::spawn`] (no device
+    /// accounting, no auto-budget policy). `planned_visits` is the
+    /// global node-visit profile the runtime's live snapshots were
+    /// planned from; `shard_budgets` is the per-shard byte budget
+    /// every re-plan starts within (len = shard count).
     pub fn spawn(
         ds: Arc<Dataset>,
         runtime: Arc<ShardedRuntime>,
@@ -141,32 +372,8 @@ impl Refresher {
         planned_visits: Vec<u32>,
         cfg: RefreshConfig,
     ) -> Refresher {
-        assert_eq!(
-            shard_budgets.len(),
-            runtime.n_shards(),
-            "one budget per shard"
-        );
-        let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Mutex::new(RefreshStats::default()));
-        let stop2 = Arc::clone(&stop);
-        let stats2 = Arc::clone(&stats);
-        let join = std::thread::Builder::new()
-            .name("dci-refresh".into())
-            .spawn(move || {
-                refresh_loop(
-                    &ds,
-                    &runtime,
-                    tracker.as_ref(),
-                    planner.as_ref(),
-                    &shard_budgets,
-                    planned_visits,
-                    &cfg,
-                    &stop2,
-                    &stats2,
-                )
-            })
-            .expect("spawn refresh thread");
-        Refresher { stop, join, stats }
+        RefreshJob::new(ds, runtime, tracker, planner, shard_budgets, planned_visits, cfg)
+            .spawn()
     }
 
     /// Current stats (the loop keeps them up to date after every check).
@@ -305,6 +512,29 @@ fn shard_drifts_sparse(
     tv
 }
 
+/// Shard-level budget-vs-load skew: the total-variation distance
+/// between the current per-shard budget shares (normalized) and the
+/// observed per-shard load-mass distribution (normalized). At startup
+/// the budget shares are the even split, so this is exactly "TV
+/// between the even split and the observed shard masses"; after a
+/// re-split the comparison self-centers on the new shares, so the
+/// signal measures *residual* skew and converges instead of firing
+/// forever. Returns 0 when either side has no mass (no evidence, no
+/// skew). Distinct from [`shard_drifts_sparse`]: drift is
+/// *within-shard* distribution shape; skew is *between-shard* mass.
+fn shard_skew(budgets: &[u64], mass: &[f64]) -> f64 {
+    let b_total: u64 = budgets.iter().sum();
+    let m_total: f64 = mass.iter().sum();
+    if b_total == 0 || m_total <= 0.0 {
+        return 0.0;
+    }
+    0.5 * budgets
+        .iter()
+        .zip(mass)
+        .map(|(&b, &m)| (b as f64 / b_total as f64 - m / m_total).abs())
+        .sum::<f64>()
+}
+
 /// Quantize a decayed mass back to the u32 counts the fills consume,
 /// under a caller-chosen `scale`. The same scale must be applied to the
 /// node-visit and element-count arrays of one re-plan: planners like
@@ -378,125 +608,306 @@ fn masked_profile(
     (nv, ec)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn refresh_loop(
-    ds: &Dataset,
-    runtime: &ShardedRuntime,
-    tracker: &dyn WorkloadTracker,
-    planner: &dyn CachePlanner,
-    shard_budgets: &[u64],
-    planned_visits: Vec<u32>,
-    cfg: &RefreshConfig,
-    stop: &AtomicBool,
-    stats_out: &Mutex<RefreshStats>,
-) {
-    let n_shards = runtime.n_shards();
-    let router = runtime.router().clone();
+/// The refresh thread's owned state: the decayed profiles, the drift
+/// baseline, and — elastic budgets — the live per-shard budget vector
+/// and decayed peak claim.
+struct RefreshLoop<'j> {
+    job: &'j RefreshJob,
+    router: ShardRouter,
+    n_shards: usize,
+    /// Current per-shard budgets (moves under `rebalance=on`).
+    budgets: Vec<u64>,
+    /// Σ `budgets` — the current global budget.
+    global: u64,
+    /// The startup global budget (`auto_budget_delta` baseline).
+    startup_global: u64,
+    /// Sparse drift baseline: the nonzero planned masses.
+    planned: HashMap<u64, f64>,
+    acc_nv: DecayedSparse,
+    acc_ec: DecayedSparse,
+    acc_ts: f64,
+    acc_tf: f64,
+    /// Decayed peak batch input count (auto-budget claim input):
+    /// raised immediately by a bigger batch, decayed at the profile's
+    /// rate so a lightened workload returns memory to the caches.
+    peak_inputs: f64,
+    batches_pending: u64,
+    stats: RefreshStats,
+}
 
-    // sparse drift baseline: the nonzero planned masses
-    let mut planned: HashMap<u64, f64> = planned_visits
-        .iter()
-        .enumerate()
-        .filter(|&(_, &c)| c > 0)
-        .map(|(v, &c)| (v as u64, c as f64))
-        .collect();
-
-    let caps = tracker.heavy_hitter_caps();
-    let mut acc_nv = DecayedSparse::new(caps.map(|(n, _)| n));
-    let mut acc_ec = DecayedSparse::new(caps.map(|(_, e)| e));
-    let mut acc_ts = 0.0f64;
-    let mut acc_tf = 0.0f64;
-    let mut batches_pending = 0u64;
-    let mut stats = RefreshStats { shard_replans: vec![0; n_shards], ..Default::default() };
-
-    while !stop.load(Ordering::Relaxed) {
-        sleep_interruptibly(cfg.check_interval, stop);
-        if stop.load(Ordering::Relaxed) {
-            break;
+impl<'j> RefreshLoop<'j> {
+    fn new(job: &'j RefreshJob) -> RefreshLoop<'j> {
+        let n_shards = job.runtime.n_shards();
+        let planned: HashMap<u64, f64> = job
+            .planned_visits
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(v, &c)| (v as u64, c as f64))
+            .collect();
+        let caps = job.tracker.heavy_hitter_caps();
+        let global: u64 = job.shard_budgets.iter().sum();
+        RefreshLoop {
+            job,
+            router: job.runtime.router().clone(),
+            n_shards,
+            budgets: job.shard_budgets.clone(),
+            global,
+            startup_global: global,
+            planned,
+            acc_nv: DecayedSparse::new(caps.map(|(n, _)| n)),
+            acc_ec: DecayedSparse::new(caps.map(|(_, e)| e)),
+            acc_ts: 0.0,
+            acc_tf: 0.0,
+            peak_inputs: 0.0,
+            batches_pending: 0,
+            stats: RefreshStats {
+                shard_replans: vec![0; n_shards],
+                shard_budgets: job.shard_budgets.clone(),
+                ..Default::default()
+            },
         }
-        // idle server: skip the drain entirely
-        if tracker.batches() == 0 && batches_pending == 0 {
-            continue;
+    }
+
+    fn run(&mut self, stop: &AtomicBool, stats_out: &Mutex<RefreshStats>) {
+        let cfg = &self.job.cfg;
+        while !stop.load(Ordering::Relaxed) {
+            sleep_interruptibly(cfg.check_interval, stop);
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            // idle server: skip the drain entirely
+            if self.job.tracker.batches() == 0 && self.batches_pending == 0 {
+                continue;
+            }
+            self.drain_window();
+            if self.batches_pending < cfg.min_batches.max(1) {
+                continue;
+            }
+            self.stats.checks += 1;
+            // the min-batches window is per *check*: reset it whatever
+            // the verdict, so a quiet server goes back to the idle skip
+            // above instead of re-checking unchanged data every poll
+            // (drift that builds slowly still accumulates in the
+            // decayed profile)
+            self.batches_pending = 0;
+            // budgets first, contents second: a shard the re-split just
+            // re-planned (at its NEW budget) also had its drift baseline
+            // re-centered, so the drift pass right after skips it — the
+            // typical hot-set migration (drift and skew firing on the
+            // same check) costs one install per shard, not two
+            if cfg.rebalance || cfg.auto_budget_refresh {
+                self.rebalance_pass();
+            }
+            self.drift_pass();
+            self.stats.shard_budgets = self.budgets.clone();
+            *stats_out.lock().unwrap() = self.stats.clone();
         }
+        self.stats.shard_budgets = self.budgets.clone();
+        *stats_out.lock().unwrap() = self.stats.clone();
+    }
+
+    /// Drain the tracker and fold the window into the decayed state.
+    fn drain_window(&mut self) {
+        let cfg = &self.job.cfg;
         let drain0 = Instant::now();
-        let w = tracker.drain();
+        let w = self.job.tracker.drain();
         if w.batches > 0 {
-            acc_nv.decay(cfg.decay);
-            acc_ec.decay(cfg.decay);
-            acc_ts = acc_ts * cfg.decay + w.t_sample_ns;
-            acc_tf = acc_tf * cfg.decay + w.t_feature_ns;
+            self.acc_nv.decay(cfg.decay);
+            self.acc_ec.decay(cfg.decay);
+            self.acc_ts = self.acc_ts * cfg.decay + w.t_sample_ns;
+            self.acc_tf = self.acc_tf * cfg.decay + w.t_feature_ns;
+            self.peak_inputs =
+                (self.peak_inputs * cfg.decay).max(w.peak_input_nodes as f64);
             for &(v, c) in &w.node_visits {
-                acc_nv.add(v as u64, c as f64);
+                self.acc_nv.add(v as u64, c as f64);
             }
             for &(e, c) in &w.elem_counts {
-                acc_ec.add(e, c as f64);
+                self.acc_ec.add(e, c as f64);
             }
-            acc_nv.prune();
-            acc_ec.prune();
-            stats.drained_keys += (w.node_visits.len() + w.elem_counts.len()) as u64;
-            stats.dropped_touches += w.dropped_touches;
-            batches_pending += w.batches;
+            self.acc_nv.prune();
+            self.acc_ec.prune();
+            self.stats.drained_keys +=
+                (w.node_visits.len() + w.elem_counts.len()) as u64;
+            self.stats.dropped_touches += w.dropped_touches;
+            self.batches_pending += w.batches;
         }
-        stats.drain_ns += drain0.elapsed().as_nanos() as f64;
-        if batches_pending < cfg.min_batches.max(1) {
-            continue;
-        }
+        self.stats.drain_ns += drain0.elapsed().as_nanos() as f64;
+    }
 
-        stats.checks += 1;
-        // the min-batches window is per *check*: reset it whatever the
-        // verdict, so a quiet server goes back to the idle skip above
-        // instead of re-checking unchanged data every poll (drift that
-        // builds slowly still accumulates in the decayed profile)
-        batches_pending = 0;
-        let drifts = shard_drifts_sparse(&planned, &acc_nv, &router, n_shards);
-        stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
+    /// The PR 3 within-shard drift detection + per-shard re-plans.
+    fn drift_pass(&mut self) {
+        let cfg = &self.job.cfg;
+        let drifts =
+            shard_drifts_sparse(&self.planned, &self.acc_nv, &self.router, self.n_shards);
+        self.stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
         let any_drifted = drifts.iter().any(|&d| d > cfg.drift_threshold);
-        let drifted: Vec<usize> = if cfg.per_shard || n_shards == 1 {
-            (0..n_shards).filter(|&s| drifts[s] > cfg.drift_threshold).collect()
+        let drifted: Vec<usize> = if cfg.per_shard || self.n_shards == 1 {
+            (0..self.n_shards)
+                .filter(|&s| drifts[s] > cfg.drift_threshold)
+                .collect()
         } else if any_drifted {
-            (0..n_shards).collect()
+            (0..self.n_shards).collect()
         } else {
             Vec::new()
         };
-        if drifted.is_empty() {
-            *stats_out.lock().unwrap() = stats.clone();
-            continue;
-        }
-
         // re-plan each drifted shard on this thread from the decayed
         // profile masked to the shard's own nodes, within the shard's
-        // own budget, and hot-swap only that shard; the serving path —
-        // and every *other* shard — never waits on any of this
+        // own (current) budget, and hot-swap only that shard; the
+        // serving path — and every *other* shard — never waits on this
         for s in drifted {
-            let t0 = Instant::now();
-            let (nv, ec) = masked_profile(&ds.csc, &acc_nv, &acc_ec, &router, s);
-            let profile = WorkloadProfile {
-                node_visits: &nv,
-                elem_counts: &ec,
-                t_sample_ns: acc_ts,
-                t_feature_ns: acc_tf,
-            };
-            let plan = planner.plan(ds, &profile, shard_budgets[s]);
-            let install_bytes = plan.fill_ledger.h2d_bytes;
-            stats.fill_h2d_bytes += install_bytes;
-            stats.max_install_h2d_bytes = stats.max_install_h2d_bytes.max(install_bytes);
-            runtime.install_shard(s, plan.snapshot);
-            stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
-            stats.replans += 1;
-            stats.shard_replans[s] += 1;
-            // re-center this shard's drift baseline on what it now
-            // serves (sparse: drop the shard's old entries, insert the
-            // observed masses)
-            planned.retain(|&v, _| router.shard_of(v as NodeId) != s);
-            for (v, m) in acc_nv.iter() {
-                if router.shard_of(v as NodeId) == s {
-                    planned.insert(v, m);
+            self.replan_shard(s, self.budgets[s]);
+        }
+    }
+
+    /// Elastic budgets: measure budget-vs-load skew, re-evaluate the
+    /// auto budget, and on either trigger re-split + re-plan only the
+    /// shards whose budgets changed.
+    fn rebalance_pass(&mut self) {
+        let cfg = &self.job.cfg;
+        // observed per-shard load mass (decayed, sparse)
+        let mut mass = vec![0.0f64; self.n_shards];
+        for (v, m) in self.acc_nv.iter() {
+            mass[self.router.shard_of(v as NodeId)] += m;
+        }
+        self.stats.last_skew = shard_skew(&self.budgets, &mass);
+
+        // epoch-aware auto budget: re-evaluate §IV.A's "C" from the
+        // decayed peak claim, with a hysteresis band so jitter in the
+        // peak does not thrash re-plans
+        let mut target_global = self.global;
+        if cfg.auto_budget_refresh {
+            if let Some(policy) = &self.job.auto_budget {
+                let g =
+                    policy.global_budget(self.peak_inputs.round() as u64, self.n_shards);
+                let band = cfg.rebalance_threshold * self.global.max(1) as f64;
+                if g.abs_diff(self.global) as f64 > band {
+                    target_global = g;
                 }
             }
         }
-        *stats_out.lock().unwrap() = stats.clone();
+        let skew_triggered =
+            cfg.rebalance && self.stats.last_skew > cfg.rebalance_threshold;
+        if !skew_triggered && target_global == self.global {
+            return;
+        }
+
+        // with rebalancing on, shares follow the observed load; with
+        // only auto-budget refresh armed, the new global keeps the even
+        // split — re-tracking the budget and redistributing it are
+        // independent knobs
+        let mut new_budgets = if cfg.rebalance {
+            split_budget_weighted(target_global, &mass, cfg.rebalance_floor)
+        } else {
+            split_budget(target_global, self.n_shards)
+        };
+        // no shard's share may exceed its device's headroom — the
+        // constraint that made the even split safe by construction
+        // (resolve_budget clamps total ≤ n × headroom) must survive
+        // the weighted split too
+        if let Some(dev) = &self.job.device {
+            cap_shares(&mut new_budgets, dev.min_headroom());
+        } else if let Some(policy) = &self.job.auto_budget {
+            cap_shares(&mut new_budgets, policy.headroom_per_device);
+        }
+        let changed: Vec<usize> = (0..self.n_shards)
+            .filter(|&s| new_budgets[s] != self.budgets[s])
+            .collect();
+        if changed.is_empty() {
+            return;
+        }
+        self.stats.shard_rebalances += 1;
+        self.stats.budget_moved_bytes += changed
+            .iter()
+            .map(|&s| new_budgets[s].saturating_sub(self.budgets[s]))
+            .sum::<u64>();
+        // shrink-first order: shards giving up budget install their
+        // smaller snapshots (releasing device bytes) before growing
+        // shards claim theirs — the group-level analogue of the
+        // per-device claim-before-release in `replan_shard`
+        let mut order = changed;
+        order.sort_by_key(|&s| new_budgets[s] as i128 - self.budgets[s] as i128);
+        for s in order {
+            if self.replan_shard(s, new_budgets[s]) {
+                self.stats.rebalance_installs += 1;
+                self.budgets[s] = new_budgets[s];
+            }
+        }
+        // if an install was skipped on OOM the shard keeps its old
+        // budget — re-derive the global from what actually holds
+        self.global = self.budgets.iter().sum();
+        self.stats.auto_budget_delta = self.global as i64 - self.startup_global as i64;
     }
-    *stats_out.lock().unwrap() = stats;
+
+    /// Re-plan shard `s` within `budget` from the masked decayed
+    /// profile and hot-swap it, with two-phase claim-before-release
+    /// device accounting when a device group is attached. Returns
+    /// whether the install happened (false = skipped on device OOM).
+    fn replan_shard(&mut self, s: usize, budget: u64) -> bool {
+        let t0 = Instant::now();
+        let (nv, ec) =
+            masked_profile(&self.job.ds.csc, &self.acc_nv, &self.acc_ec, &self.router, s);
+        let profile = WorkloadProfile {
+            node_visits: &nv,
+            elem_counts: &ec,
+            t_sample_ns: self.acc_ts,
+            t_feature_ns: self.acc_tf,
+        };
+        let plan = self.job.planner.plan(&self.job.ds, &profile, budget);
+        let install_bytes = plan.fill_ledger.h2d_bytes;
+        let new_bytes = plan.snapshot.bytes_used();
+        if let Some(dev) = &self.job.device {
+            // only this thread installs, so the live snapshot's bytes
+            // cannot change between this read and the swap below
+            let old_bytes = self.job.runtime.shard(s).load().bytes_used();
+            // phase 1 — claim the incoming epoch while the outgoing one
+            // is still resident (readers may serve one more batch from
+            // it). The transient may dip into the reserve; that is the
+            // reserve's job.
+            let mut released_first = false;
+            if dev.alloc_unreserved(s, new_bytes).is_err() {
+                // the overlap exceeds even the reserve: fall back to
+                // release-then-claim (the simulation keeps serving the
+                // old Arc regardless; a real deployment would stage
+                // through host memory here)
+                dev.free(s, old_bytes);
+                released_first = true;
+                if dev.alloc_unreserved(s, new_bytes).is_err() {
+                    // cannot fit even alone: restore the old claim and
+                    // keep serving the old epoch
+                    let _ = dev.alloc_unreserved(s, old_bytes);
+                    self.stats.install_ooms += 1;
+                    return false;
+                }
+            }
+            self.stats.max_transient_bytes =
+                self.stats.max_transient_bytes.max(dev.used(s));
+            self.job.runtime.install_shard(s, plan.snapshot);
+            // phase 2 — release the outgoing epoch's claim
+            if !released_first {
+                dev.free(s, old_bytes);
+            }
+        } else {
+            self.job.runtime.install_shard(s, plan.snapshot);
+        }
+        self.stats.fill_h2d_bytes += install_bytes;
+        self.stats.max_install_h2d_bytes =
+            self.stats.max_install_h2d_bytes.max(install_bytes);
+        self.stats.replan_wall_ns += t0.elapsed().as_nanos() as f64;
+        self.stats.replans += 1;
+        self.stats.shard_replans[s] += 1;
+        // re-center this shard's drift baseline on what it now serves
+        // (sparse: drop the shard's old entries, insert the observed
+        // masses)
+        let router = &self.router;
+        self.planned.retain(|&v, _| router.shard_of(v as NodeId) != s);
+        for (v, m) in self.acc_nv.iter() {
+            if router.shard_of(v as NodeId) == s {
+                self.planned.insert(v, m);
+            }
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -507,7 +918,7 @@ mod tests {
     use crate::cache::shard::{plan_sharded, ShardRouter, ShardedRuntime};
     use crate::cache::tracker::{AccessTracker, SketchTracker};
     use crate::graph::datasets;
-    use crate::mem::CostModel;
+    use crate::mem::{CostModel, DeviceMemory};
     use crate::sampler::{presample, Fanout};
     use crate::util::Rng;
 
@@ -517,7 +928,7 @@ mod tests {
             min_batches: 1,
             decay: 0.5,
             drift_threshold: threshold,
-            per_shard: true,
+            ..RefreshConfig::default()
         }
     }
 
@@ -576,6 +987,37 @@ mod tests {
         );
         assert!(d[0] > 0.9);
         assert!(d[1] < 1e-12);
+    }
+
+    #[test]
+    fn skew_measures_between_shard_mass_not_shape() {
+        // even budgets, even mass → no skew
+        assert_eq!(shard_skew(&[10, 10, 10, 10], &[3.0, 3.0, 3.0, 3.0]), 0.0);
+        // all the mass on one shard under even budgets → TV = 1 − 1/n
+        let s = shard_skew(&[10, 10, 10, 10], &[0.0, 0.0, 8.0, 0.0]);
+        assert!((s - 0.75).abs() < 1e-12, "{s}");
+        // budgets already matching the mass → no skew (self-centering)
+        let s = shard_skew(&[1, 1, 8, 1], &[1.0, 1.0, 8.0, 1.0]);
+        assert!(s.abs() < 1e-12, "{s}");
+        // no observations → no evidence → no skew
+        assert_eq!(shard_skew(&[10, 10], &[0.0, 0.0]), 0.0);
+        assert_eq!(shard_skew(&[0, 0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn auto_budget_policy_tracks_the_peak_claim() {
+        let policy = AutoBudgetPolicy {
+            headroom_per_device: 1_000_000,
+            per_node_bytes: 100,
+            scale: 1.0,
+        };
+        // claim = 2 × peak × per_node (full scale)
+        assert_eq!(policy.global_budget(0, 4), 4_000_000);
+        assert_eq!(policy.global_budget(1_000, 4), 4 * (1_000_000 - 200_000));
+        // claim beyond the headroom → zero budget, never underflow
+        assert_eq!(policy.global_budget(10_000_000, 4), 0);
+        // single shard is the global
+        assert_eq!(policy.global_budget(1_000, 1), 800_000);
     }
 
     #[test]
@@ -694,7 +1136,7 @@ mod tests {
             tracker.record_node(1);
         }
         tracker.record_elem(0);
-        tracker.record_batch(50.0, 50.0);
+        tracker.record_batch(50.0, 50.0, 50);
         // wait for the loop to pick it up
         let deadline = Instant::now() + Duration::from_secs(10);
         while runtime.swaps() == 0 && Instant::now() < deadline {
@@ -707,6 +1149,8 @@ mod tests {
         assert!(stats.drained_keys >= 2, "node 1 + elem 0 drained: {stats:?}");
         assert!(stats.drain_ns > 0.0);
         assert_eq!(stats.dropped_touches, 0);
+        assert_eq!(stats.shard_rebalances, 0, "rebalance defaults off");
+        assert_eq!(stats.shard_budgets, vec![200_000], "budgets frozen");
         assert!(runtime.swaps() >= 1);
         // the refreshed snapshot caches the observed hot node
         let snap = runtime.load();
@@ -736,7 +1180,7 @@ mod tests {
             tracker.record_node(1);
         }
         tracker.record_elem(0);
-        tracker.record_batch(50.0, 50.0);
+        tracker.record_batch(50.0, 50.0, 50);
         let deadline = Instant::now() + Duration::from_secs(10);
         while runtime.swaps() == 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(5));
@@ -818,7 +1262,7 @@ mod tests {
                 tracker.record_node(v);
             }
         }
-        tracker.record_batch(50.0, 50.0);
+        tracker.record_batch(50.0, 50.0, 40);
 
         let deadline = Instant::now() + Duration::from_secs(10);
         while runtime.swaps() == 0 && Instant::now() < deadline {
@@ -842,5 +1286,170 @@ mod tests {
         let feat = snap.feat.as_ref().unwrap();
         let cached_hot = shard2.iter().filter(|&&v| feat.contains(v)).count();
         assert!(cached_hot > 0, "re-plan must cache shard 2's new working set");
+    }
+
+    /// The elastic-budget integration contract: a hot set migrating
+    /// onto one shard triggers exactly one rebalance (the re-split
+    /// self-centers, so steady traffic fires no second one), the
+    /// budgets move to the hot shard while conserving the global sum,
+    /// and the device ledgers balance after claim-before-release
+    /// reclaim — every device holds exactly its live snapshot's bytes.
+    #[test]
+    fn migrating_hot_set_rebalances_once_and_ledgers_balance() {
+        let n_shards = 4;
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let router = ShardRouter::new(n_shards);
+        let global = 200_000u64;
+        let budgets = split_budget(global, n_shards);
+        let runtime = Arc::new(ShardedRuntime::new(
+            ShardRouter::new(n_shards),
+            (0..n_shards).map(|_| CacheSnapshot::empty()).collect(),
+        ));
+        // empty snapshots ↔ zeroed ledgers: consistent starting state
+        let device = Arc::new(DeviceGroup::replicate(
+            &DeviceMemory::new(10 << 20, 1 << 16),
+            n_shards,
+        ));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        // drift baseline on a shard-0 node so shard 2's traffic is new
+        let mut planned = vec![0u32; ds.csc.n_nodes()];
+        let node0 = (0..ds.csc.n_nodes() as u32)
+            .find(|&v| router.shard_of(v) == 0)
+            .unwrap();
+        planned[node0 as usize] = 100;
+        let cfg = RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: 0.3,
+            rebalance: true,
+            rebalance_threshold: 0.3,
+            rebalance_floor: 0.1,
+            ..RefreshConfig::default()
+        };
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            budgets,
+            planned,
+            cfg,
+        )
+        .device(Arc::clone(&device))
+        .spawn();
+
+        // the hot set: shard 2's nodes only, in steady waves
+        let shard2: Vec<NodeId> = (0..ds.csc.n_nodes() as u32)
+            .filter(|&v| router.shard_of(v) == 2)
+            .take(30)
+            .collect();
+        assert!(shard2.len() >= 10);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while r.stats().shard_rebalances == 0 && Instant::now() < deadline {
+            for _ in 0..10 {
+                for &v in &shard2 {
+                    tracker.record_node(v);
+                }
+            }
+            tracker.record_batch(50.0, 50.0, 30);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // steady-state waves after the re-split: the self-centered skew
+        // must stay under the threshold, so no second rebalance fires
+        for _ in 0..6 {
+            for _ in 0..10 {
+                for &v in &shard2 {
+                    tracker.record_node(v);
+                }
+            }
+            tracker.record_batch(50.0, 50.0, 30);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let stats = r.stop();
+        assert_eq!(
+            stats.shard_rebalances, 1,
+            "steady migrated traffic must re-split exactly once: {stats:?}"
+        );
+        assert!(stats.rebalance_installs >= 1, "{stats:?}");
+        assert!(stats.last_skew < 0.3, "skew must self-center: {stats:?}");
+        // deterministic split: floors of 0.1 × even share, rest to the
+        // hot shard
+        assert_eq!(stats.shard_budgets, vec![5_000, 5_000, 185_000, 5_000]);
+        assert_eq!(stats.shard_budgets.iter().sum::<u64>(), global);
+        assert_eq!(stats.budget_moved_bytes, 135_000, "50k → 185k on shard 2");
+        assert_eq!(stats.install_ooms, 0);
+        assert!(stats.max_transient_bytes > 0, "claims were accounted");
+        assert_eq!(stats.auto_budget_delta, 0, "no auto policy, no delta");
+        // ledgers balance after reclaim: each device holds exactly its
+        // live snapshot's bytes, nothing leaked, nothing double-counted
+        for s in 0..n_shards {
+            assert_eq!(
+                device.used(s),
+                runtime.shard(s).load().bytes_used(),
+                "device {s} ledger out of balance"
+            );
+        }
+        assert_eq!(runtime.swap_stalls(), 0);
+    }
+
+    /// Auto-budget refresh: a shrinking observed peak claim grows the
+    /// global budget (and vice versa), flowing through the same
+    /// re-split machinery with the shard sum conserved.
+    #[test]
+    fn auto_budget_refresh_tracks_the_observed_peak() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        let policy = AutoBudgetPolicy {
+            headroom_per_device: 500_000,
+            per_node_bytes: 1_000,
+            scale: 1.0,
+        };
+        // startup budget assumed a peak of 100 inputs → 300_000
+        let startup = policy.global_budget(100, 1);
+        assert_eq!(startup, 300_000);
+        let cfg = RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: 2.0, // drift never fires; isolate the budget path
+            per_shard: true,
+            // rebalance deliberately OFF: auto-budget refresh is an
+            // independent knob (a changed global keeps the even split)
+            rebalance: false,
+            rebalance_threshold: 0.1,
+            rebalance_floor: 0.1,
+            auto_budget_refresh: true,
+        };
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![startup],
+            Vec::new(),
+            cfg,
+        )
+        .auto_budget(policy)
+        .spawn();
+
+        // live traffic peaks at only 20 inputs → claim shrinks 2kB →
+        // budget grows to 460_000 (> 10% band → applied)
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while r.stats().auto_budget_delta == 0 && Instant::now() < deadline {
+            tracker.record_node(1);
+            tracker.record_batch(10.0, 10.0, 20);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let stats = r.stop();
+        assert_eq!(
+            stats.shard_budgets,
+            vec![policy.global_budget(20, 1)],
+            "budget must track the observed peak: {stats:?}"
+        );
+        assert_eq!(stats.auto_budget_delta, 460_000 - 300_000);
+        assert!(stats.shard_rebalances >= 1);
+        assert!(runtime.swaps() >= 1, "the budget change re-plans the shard");
     }
 }

@@ -373,10 +373,32 @@ pub fn plan_sharded(
     total_budget: u64,
     router: &ShardRouter,
 ) -> ShardedPlan {
+    plan_sharded_with_budgets(
+        planner,
+        ds,
+        profile,
+        split_budget(total_budget, router.n_shards()),
+        router,
+    )
+}
+
+/// [`plan_sharded`] under caller-chosen per-shard budgets — the
+/// elastic path: a weighted re-split
+/// ([`split_budget_weighted`](super::planner::split_budget_weighted))
+/// or any other exact partition of the global budget. `budgets.len()`
+/// must match the router's shard count; the single-shard case skips
+/// masking, bit-for-bit the unsharded plan.
+pub fn plan_sharded_with_budgets(
+    planner: &dyn CachePlanner,
+    ds: &Dataset,
+    profile: &WorkloadProfile<'_>,
+    budgets: Vec<u64>,
+    router: &ShardRouter,
+) -> ShardedPlan {
     let n = router.n_shards();
-    let budgets = split_budget(total_budget, n);
+    assert_eq!(budgets.len(), n, "one budget per shard");
     if n == 1 {
-        return ShardedPlan { plans: vec![planner.plan(ds, profile, total_budget)], budgets };
+        return ShardedPlan { plans: vec![planner.plan(ds, profile, budgets[0])], budgets };
     }
     let mut plans = Vec::with_capacity(n);
     for (s, &b) in budgets.iter().enumerate() {

@@ -48,6 +48,11 @@ pub struct DrainedWindow {
     pub t_sample_ns: f64,
     /// Modeled feature-stage ns accumulated over the window.
     pub t_feature_ns: f64,
+    /// Largest single-batch input-node count seen in the window — the
+    /// workload's peak device claim, which the refresh loop's
+    /// per-epoch auto-budget re-evaluation tracks (see
+    /// [`super::refresh::AutoBudgetPolicy`]).
+    pub peak_input_nodes: u32,
     /// Touches whose key could not be logged because the bounded
     /// touched set saturated (sketch only). A saturated window is
     /// closed with a full sketch clear, so the unenumerated keys'
@@ -74,8 +79,10 @@ pub trait WorkloadTracker: Send + Sync {
     /// (sampling stage).
     fn record_elem(&self, at: usize);
 
-    /// Record a served batch's modeled stage times (Eq. 1 ratio input).
-    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64);
+    /// Record a served batch's modeled stage times (Eq. 1 ratio input)
+    /// and its input-node count (the workload peak-claim input of the
+    /// per-epoch auto-budget re-evaluation).
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64, input_nodes: u32);
 
     /// Batches recorded since the last drain.
     fn batches(&self) -> u64;
@@ -98,27 +105,31 @@ struct StageClock {
     batches: AtomicU64,
     t_sample_ns: AtomicU64,
     t_feature_ns: AtomicU64,
+    /// `fetch_max` of per-batch input-node counts (peak-claim input).
+    peak_inputs: AtomicU32,
 }
 
 impl StageClock {
-    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64, input_nodes: u32) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.t_sample_ns
             .fetch_add(t_sample_ns.max(0.0) as u64, Ordering::Relaxed);
         self.t_feature_ns
             .fetch_add(t_feature_ns.max(0.0) as u64, Ordering::Relaxed);
+        self.peak_inputs.fetch_max(input_nodes, Ordering::Relaxed);
     }
 
     fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
 
-    /// Drain into `(batches, t_sample_ns, t_feature_ns)`.
-    fn drain(&self) -> (u64, f64, f64) {
+    /// Drain into `(batches, t_sample_ns, t_feature_ns, peak_inputs)`.
+    fn drain(&self) -> (u64, f64, f64, u32) {
         (
             self.batches.swap(0, Ordering::Relaxed),
             self.t_sample_ns.swap(0, Ordering::Relaxed) as f64,
             self.t_feature_ns.swap(0, Ordering::Relaxed) as f64,
+            self.peak_inputs.swap(0, Ordering::Relaxed),
         )
     }
 }
@@ -167,8 +178,8 @@ impl WorkloadTracker for AccessTracker {
         self.elem_counts[at].fetch_add(1, Ordering::Relaxed);
     }
 
-    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
-        self.clock.record_batch(t_sample_ns, t_feature_ns);
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64, input_nodes: u32) {
+        self.clock.record_batch(t_sample_ns, t_feature_ns, input_nodes);
     }
 
     fn batches(&self) -> u64 {
@@ -195,13 +206,14 @@ impl WorkloadTracker for AccessTracker {
                 (c > 0).then_some((e as u64, c))
             })
             .collect();
-        let (batches, t_sample_ns, t_feature_ns) = self.clock.drain();
+        let (batches, t_sample_ns, t_feature_ns, peak_input_nodes) = self.clock.drain();
         DrainedWindow {
             node_visits,
             elem_counts,
             batches,
             t_sample_ns,
             t_feature_ns,
+            peak_input_nodes,
             dropped_touches: 0,
         }
     }
@@ -645,8 +657,8 @@ impl WorkloadTracker for SketchTracker {
         self.lane(ELEMS).record(at as u64);
     }
 
-    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64) {
-        self.clock.record_batch(t_sample_ns, t_feature_ns);
+    fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64, input_nodes: u32) {
+        self.clock.record_batch(t_sample_ns, t_feature_ns, input_nodes);
     }
 
     fn batches(&self) -> u64 {
@@ -659,13 +671,14 @@ impl WorkloadTracker for SketchTracker {
         let prev = self.active.fetch_xor(1, Ordering::Relaxed);
         let (nodes, nd) = self.lanes[NODES][prev].drain();
         let (elems, ed) = self.lanes[ELEMS][prev].drain();
-        let (batches, t_sample_ns, t_feature_ns) = self.clock.drain();
+        let (batches, t_sample_ns, t_feature_ns, peak_input_nodes) = self.clock.drain();
         DrainedWindow {
             node_visits: nodes.into_iter().map(|(k, c)| (k as NodeId, c)).collect(),
             elem_counts: elems,
             batches,
             t_sample_ns,
             t_feature_ns,
+            peak_input_nodes,
             dropped_touches: nd + ed,
         }
     }
@@ -759,18 +772,21 @@ mod tests {
         t.record_node(1);
         t.record_node(3);
         t.record_elem(5);
-        t.record_batch(100.0, 200.0);
-        assert_eq!(t.batches(), 1);
+        t.record_batch(100.0, 200.0, 37);
+        t.record_batch(0.0, 0.0, 12);
+        assert_eq!(t.batches(), 2);
         let d = t.drain();
         assert_eq!(d.node_visits, vec![(1, 2), (3, 1)]);
         assert_eq!(d.elem_counts, vec![(5, 1)]);
-        assert_eq!(d.batches, 1);
+        assert_eq!(d.batches, 2);
         assert_eq!(d.t_sample_ns, 100.0);
         assert_eq!(d.t_feature_ns, 200.0);
+        assert_eq!(d.peak_input_nodes, 37, "peak is the max, not the last");
         assert_eq!(d.dropped_touches, 0);
         // drained: everything reset
         let d2 = t.drain();
         assert_eq!(d2.batches, 0);
+        assert_eq!(d2.peak_input_nodes, 0);
         assert!(d2.node_visits.is_empty() && d2.elem_counts.is_empty());
         assert!(t.heavy_hitter_caps().is_none());
     }
@@ -873,12 +889,13 @@ mod tests {
             dense.record_elem(e);
             sketch.record_elem(e);
         }
-        dense.record_batch(10.0, 20.0);
-        sketch.record_batch(10.0, 20.0);
+        dense.record_batch(10.0, 20.0, 60);
+        sketch.record_batch(10.0, 20.0, 60);
 
         let dw = dense.drain();
         let sw = sketch.drain();
         assert_eq!(sw.batches, dw.batches);
+        assert_eq!(sw.peak_input_nodes, dw.peak_input_nodes);
         assert_eq!(sw.dropped_touches, 0);
         let to_map = |w: &[(NodeId, u32)]| -> HashMap<NodeId, u32> {
             w.iter().copied().collect()

@@ -210,6 +210,10 @@ pub const VALID_KEYS: &[&str] = &[
     "refresh-min-batches",
     "refresh-decay",
     "drift-threshold",
+    "rebalance",
+    "rebalance-threshold",
+    "rebalance-floor",
+    "auto-budget-refresh",
     "tracker",
     "sketch-width",
     "sketch-depth",
@@ -322,6 +326,50 @@ impl RunConfig {
                         .get_or_insert_with(RefreshConfig::default)
                         .drift_threshold = value.parse().context("drift-threshold")?;
                 }
+                "rebalance" => {
+                    let on = match value {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => bail!("rebalance={other:?} (on|off)"),
+                    };
+                    self.refresh.get_or_insert_with(RefreshConfig::default).rebalance =
+                        on;
+                }
+                "rebalance-threshold" => {
+                    let t: f64 = value.parse().context("rebalance-threshold")?;
+                    if !(0.0..=1.0).contains(&t) {
+                        bail!("rebalance-threshold must be in [0, 1] (a TV distance)");
+                    }
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .rebalance_threshold = t;
+                }
+                "rebalance-floor" => {
+                    let f: f64 = value.parse().context("rebalance-floor")?;
+                    if !(0.0..=1.0).contains(&f) {
+                        bail!(
+                            "rebalance-floor must be in [0, 1] (fraction of the even \
+                             per-shard share)"
+                        );
+                    }
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .rebalance_floor = f;
+                }
+                "auto-budget-refresh" => {
+                    let on = match value {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => bail!("auto-budget-refresh={other:?} (on|off)"),
+                    };
+                    // independent of rebalance= (no silent sibling-flag
+                    // mutation, so the two knobs are order-insensitive):
+                    // without rebalance, a re-evaluated global keeps the
+                    // even per-shard split
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .auto_budget_refresh = on;
+                }
                 "tracker" => self.tracker.kind = TrackerKind::parse(value)?,
                 "sketch-width" => {
                     let w: usize = value.parse().context("sketch-width")?;
@@ -382,6 +430,15 @@ impl RunConfig {
                 r.drift_threshold,
                 if r.per_shard { "" } else { " full" }
             ));
+            if r.rebalance {
+                s.push_str(&format!(
+                    " rebalance(skew>{} floor={})",
+                    r.rebalance_threshold, r.rebalance_floor
+                ));
+            }
+            if r.auto_budget_refresh {
+                s.push_str(" auto-budget");
+            }
         }
         if self.tracker.kind != TrackerKind::Dense {
             s.push_str(&format!(" tracker={}", self.tracker.kind.as_str()));
@@ -498,6 +555,55 @@ mod tests {
     }
 
     #[test]
+    fn rebalance_knobs() {
+        // defaults: refresh alone leaves budgets frozen
+        let cfg = RunConfig::from_args(&args(&["refresh=on"])).unwrap();
+        let r = cfg.refresh.unwrap();
+        assert!(!r.rebalance);
+        assert!(!r.auto_budget_refresh);
+        // rebalance= auto-enables the refresh loop, like every refresh key
+        let cfg = RunConfig::from_args(&args(&["rebalance=on"])).unwrap();
+        let r = cfg.refresh.clone().unwrap();
+        assert!(r.rebalance);
+        assert_eq!(r.rebalance_threshold, 0.25);
+        assert_eq!(r.rebalance_floor, 0.1);
+        assert!(cfg.summary().contains("rebalance(skew>0.25 floor=0.1)"));
+        // threshold/floor knobs apply without flipping the switch
+        let cfg = RunConfig::from_args(&args(&[
+            "rebalance=on",
+            "rebalance-threshold=0.4",
+            "rebalance-floor=0.05",
+        ]))
+        .unwrap();
+        let r = cfg.refresh.unwrap();
+        assert_eq!(r.rebalance_threshold, 0.4);
+        assert_eq!(r.rebalance_floor, 0.05);
+        // auto-budget-refresh is independent of rebalance= — and the
+        // two knobs are order-insensitive (neither mutates the other)
+        let cfg = RunConfig::from_args(&args(&["auto-budget-refresh=on"])).unwrap();
+        let r = cfg.refresh.clone().unwrap();
+        assert!(r.auto_budget_refresh);
+        assert!(!r.rebalance, "auto budget must not imply redistribution");
+        assert!(cfg.summary().contains("auto-budget"));
+        for order in [
+            ["rebalance=off", "auto-budget-refresh=on"],
+            ["auto-budget-refresh=on", "rebalance=off"],
+        ] {
+            let cfg = RunConfig::from_args(&args(&order)).unwrap();
+            let r = cfg.refresh.unwrap();
+            assert!(!r.rebalance && r.auto_budget_refresh, "{order:?}");
+        }
+        // off resets the switch without killing the loop
+        let cfg =
+            RunConfig::from_args(&args(&["rebalance=on", "rebalance=off"])).unwrap();
+        assert!(!cfg.refresh.unwrap().rebalance);
+        assert!(RunConfig::from_args(&args(&["rebalance=maybe"])).is_err());
+        assert!(RunConfig::from_args(&args(&["rebalance-threshold=1.5"])).is_err());
+        assert!(RunConfig::from_args(&args(&["rebalance-floor=-0.1"])).is_err());
+        assert!(RunConfig::from_args(&args(&["auto-budget-refresh=2"])).is_err());
+    }
+
+    #[test]
     fn rejects_unknown_and_malformed() {
         assert!(RunConfig::from_args(&args(&["nope=1"])).is_err());
         assert!(RunConfig::from_args(&args(&["dataset"])).is_err());
@@ -527,10 +633,12 @@ mod tests {
                 "fanout" => "3,2",
                 "system" => "dci",
                 "budget" => "1MB",
-                "shard-refresh" | "refresh" => "on",
+                "shard-refresh" | "refresh" | "rebalance" | "auto-budget-refresh" => "on",
                 "compute" => "skip",
                 "refresh-decay" => "0.5",
                 "drift-threshold" => "0.2",
+                "rebalance-threshold" => "0.3",
+                "rebalance-floor" => "0.1",
                 "tracker" => "sketch",
                 "device" => "1GB",
                 "artifacts" => "artifacts",

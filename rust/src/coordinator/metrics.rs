@@ -50,6 +50,16 @@ pub struct ServingMetrics {
     /// (sketch only; persistent nonzero values mean the drain interval
     /// is too long for the traffic — shorten `refresh-check-ms`).
     pub tracker_dropped_touches: u64,
+    /// Cross-shard budget re-split events applied by the refresh loop
+    /// (`rebalance=on`; see DESIGN.md §Elastic budgets).
+    pub shard_rebalances: u64,
+    /// Σ bytes gained by growing shards across all re-splits — the
+    /// cache capacity that actually moved between devices.
+    pub budget_moved_bytes: u64,
+    /// Final global budget minus the startup global budget, summed
+    /// over workers (nonzero only with `auto-budget-refresh=on` on a
+    /// `budget=auto` run).
+    pub auto_budget_delta: i64,
 }
 
 impl ServingMetrics {
@@ -88,6 +98,9 @@ impl ServingMetrics {
         self.tracker_drain_ns += other.tracker_drain_ns;
         self.tracker_drained_keys += other.tracker_drained_keys;
         self.tracker_dropped_touches += other.tracker_dropped_touches;
+        self.shard_rebalances += other.shard_rebalances;
+        self.budget_moved_bytes += other.budget_moved_bytes;
+        self.auto_budget_delta += other.auto_budget_delta;
     }
 
     /// Seeds served per second of elapsed wall time.
@@ -108,7 +121,8 @@ impl ServingMetrics {
              throughput={:.0} seeds/s\n\
              stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms\n\
              cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}\n\
-             tracker: drain={:.2}ms drained-keys={} dropped-touches={}",
+             tracker: drain={:.2}ms drained-keys={} dropped-touches={}\n\
+             elastic: rebalances={} moved={} auto-budget-delta={}",
             self.requests,
             self.seeds,
             self.batches,
@@ -130,6 +144,9 @@ impl ServingMetrics {
             self.tracker_drain_ns / 1e6,
             self.tracker_drained_keys,
             self.tracker_dropped_touches,
+            self.shard_rebalances,
+            crate::util::format_bytes(self.budget_moved_bytes),
+            self.auto_budget_delta,
         )
     }
 }
@@ -168,6 +185,9 @@ mod tests {
         b.sample_ns = 3.0;
         b.refreshes = 2;
         b.swap_stalls = 1;
+        b.shard_rebalances = 3;
+        b.budget_moved_bytes = 4096;
+        b.auto_budget_delta = -512;
         b.cache.feature.hit(64);
         a.merge(&b);
         assert_eq!(a.requests, 3);
@@ -176,6 +196,12 @@ mod tests {
         assert_eq!(a.sample_ns, 3.0);
         assert_eq!(a.refreshes, 2);
         assert_eq!(a.swap_stalls, 1);
+        assert_eq!(a.shard_rebalances, 3);
+        assert_eq!(a.budget_moved_bytes, 4096);
+        assert_eq!(a.auto_budget_delta, -512);
         assert_eq!(a.cache.feature.hits, 1);
+        let rep = a.report(Duration::from_secs(1));
+        assert!(rep.contains("rebalances=3"), "{rep}");
+        assert!(rep.contains("auto-budget-delta=-512"), "{rep}");
     }
 }

@@ -22,10 +22,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::baselines::planner_for;
-use crate::cache::refresh::Refresher;
+use crate::cache::refresh::{AutoBudgetPolicy, RefreshJob, Refresher};
 use crate::config::RunConfig;
 use crate::engine::InferenceEngine;
 use crate::graph::Dataset;
+use crate::mem::per_node_claim_bytes;
 
 use super::admission::{AdmissionConfig, AdmissionController};
 use super::batcher::{Batcher, BatcherConfig, PendingBatch};
@@ -167,13 +168,20 @@ fn worker_loop(
     let refresh_cfg = run_cfg.refresh.clone();
     let tracker_cfg = run_cfg.tracker.clone();
     let system = run_cfg.system;
+    let budget_is_auto = run_cfg.budget.is_none();
+    let hidden = run_cfg.hidden;
     let mut engine = InferenceEngine::prepare(ds.as_ref(), run_cfg)?;
 
     // online refresh: tracker on the serving path (dense or sketch,
     // per `RunConfig::tracker`), re-planner on a background thread,
     // per worker (cacheless systems skip it). With a sharded runtime
     // the refresher detects drift per shard and hot-swaps only the
-    // drifted shards, each within its own budget.
+    // drifted shards, each within its own budget — and with
+    // `rebalance=on` the budgets themselves follow the shard-level
+    // load (plus, for `budget=auto` runs with `auto-budget-refresh=on`,
+    // the global budget re-tracks the workload's peak claim). Installs
+    // are accounted against the engine's own device arenas in
+    // claim-before-release order.
     let mut refresher: Option<Refresher> = None;
     if let Some(rcfg) = refresh_cfg {
         if let Some(planner) = planner_for(system) {
@@ -187,7 +195,8 @@ fn worker_loop(
                 .as_ref()
                 .map(|s| s.node_visits.clone())
                 .unwrap_or_default();
-            refresher = Some(Refresher::spawn(
+            let wire_auto = rcfg.auto_budget_refresh && budget_is_auto;
+            let mut job = RefreshJob::new(
                 Arc::clone(ds),
                 engine.runtime(),
                 tracker,
@@ -195,7 +204,16 @@ fn worker_loop(
                 engine.prepared.shard_budgets.clone(),
                 baseline,
                 rcfg,
-            ));
+            )
+            .device(engine.device_group());
+            if wire_auto {
+                job = job.auto_budget(AutoBudgetPolicy {
+                    headroom_per_device: engine.device.headroom(0),
+                    per_node_bytes: per_node_claim_bytes(ds.features.row_bytes(), hidden),
+                    scale: ds.spec.scale,
+                });
+            }
+            refresher = Some(job.spawn());
         }
     }
 
@@ -214,6 +232,9 @@ fn worker_loop(
         m.tracker_drain_ns += rs.drain_ns;
         m.tracker_drained_keys += rs.drained_keys;
         m.tracker_dropped_touches += rs.dropped_touches;
+        m.shard_rebalances += rs.shard_rebalances;
+        m.budget_moved_bytes += rs.budget_moved_bytes;
+        m.auto_budget_delta += rs.auto_budget_delta;
         m.cache.refresh.upload(rs.fill_h2d_bytes);
     }
     m.swap_stalls += stalls;
@@ -392,7 +413,7 @@ mod tests {
             min_batches: 1,
             decay: 0.5,
             drift_threshold: -1.0,
-            per_shard: true,
+            ..RefreshConfig::default()
         });
         let server = Server::start(
             Arc::clone(&ds),
@@ -440,7 +461,7 @@ mod tests {
             min_batches: 1,
             decay: 0.5,
             drift_threshold: -1.0,
-            per_shard: true,
+            ..RefreshConfig::default()
         });
         let server = Server::start(
             Arc::clone(&ds),
@@ -485,7 +506,7 @@ mod tests {
             min_batches: 1,
             decay: 0.5,
             drift_threshold: 0.05,
-            per_shard: true,
+            ..RefreshConfig::default()
         });
         let server = Server::start(
             Arc::clone(&ds),
@@ -518,5 +539,77 @@ mod tests {
         assert_eq!(m.requests, 24);
         assert_eq!(m.swap_stalls, 0, "no shard may ever block serving");
         assert!(m.cache.feature.hits + m.cache.feature.misses > 0);
+    }
+
+    #[test]
+    fn rebalancing_worker_moves_budget_toward_the_hot_shard() {
+        use crate::cache::ShardRouter;
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        // same hash as the engine's router: pick seeds owned by shard 0
+        let router = ShardRouter::new(2);
+        let shard0: Vec<u32> = ds
+            .test_nodes
+            .iter()
+            .copied()
+            .filter(|&v| router.shard_of(v) == 0)
+            .take(32)
+            .collect();
+        assert!(shard0.len() >= 16, "tiny must have shard-0 test seeds");
+
+        let mut cfg = serving_cfg();
+        cfg.shards = 2;
+        // single-hop fanout: seeds are 1/3 of the visit mass, so
+        // confining seeds to shard 0 skews the shard mass to ~2/3 —
+        // well past the threshold (multi-hop neighbor visits are
+        // hash-spread and would dilute the signal)
+        cfg.fanout = Fanout::parse("2").unwrap();
+        cfg.refresh = Some(RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: 0.05,
+            rebalance: true,
+            rebalance_threshold: 0.05,
+            rebalance_floor: 0.1,
+            ..RefreshConfig::default()
+        });
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        // every request targets shard 0's seeds: the load mass skews
+        // far past the threshold, so the worker's refresher re-splits
+        for round in 0..8 {
+            let mut rxs = Vec::new();
+            for i in 0..4 {
+                let at = (round + i) % (shard0.len() - 4);
+                rxs.push(server.submit(shard0[at..at + 4].to_vec()).unwrap());
+            }
+            for rx in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                assert!(resp.logits.is_some());
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert!(
+            m.shard_rebalances >= 1,
+            "skewed traffic must trigger a budget re-split: {m:?}"
+        );
+        assert!(m.budget_moved_bytes > 0, "a re-split moves capacity: {m:?}");
+        assert_eq!(m.auto_budget_delta, 0, "explicit budget: auto stays off");
+        assert_eq!(m.swap_stalls, 0, "rebalancing must never block serving");
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("rebalances=") && rep.contains("moved="), "{rep}");
     }
 }

@@ -161,8 +161,11 @@ pub struct InferenceEngine<'d> {
     pub cfg: RunConfig,
     pub prepared: PreparedSystem,
     /// One simulated device per cache shard; each shard's snapshot is
-    /// claimed against the device that holds it.
-    pub device: DeviceGroup,
+    /// claimed against the device that holds it. Shared (`Arc`) with
+    /// the background refresh loop, which accounts every hot-swap
+    /// install against the owning device in claim-before-release
+    /// order — see `cache::refresh`.
+    pub device: Arc<DeviceGroup>,
     compute: Compute,
     /// Shared sampler scratch: serial runs, pipeline workers, and
     /// served requests all check samplers out of here instead of
@@ -190,7 +193,7 @@ fn proto_device(ds: &Dataset, cfg: &RunConfig) -> DeviceMemory {
 }
 
 /// Claim each shard's snapshot against its own device.
-fn claim_shards(device: &mut DeviceGroup, prepared: &PreparedSystem) -> Result<()> {
+fn claim_shards(device: &DeviceGroup, prepared: &PreparedSystem) -> Result<()> {
     for (i, snap) in prepared.runtime.snapshots().iter().enumerate() {
         device.alloc(i, snap.bytes_used()).with_context(|| {
             format!("shard {i} cache fill exceeds its simulated device memory")
@@ -207,8 +210,8 @@ impl<'d> InferenceEngine<'d> {
         let proto = proto_device(ds, &cfg);
         let mut rng = Rng::new(cfg.seed);
         let prepared = baselines::prepare(ds, &cfg, &proto, &cfg.cost, &mut rng)?;
-        let mut device = DeviceGroup::replicate(&proto, prepared.runtime.n_shards());
-        claim_shards(&mut device, &prepared)?;
+        let device = Arc::new(DeviceGroup::replicate(&proto, prepared.runtime.n_shards()));
+        claim_shards(&device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
             cfg.model,
@@ -241,8 +244,8 @@ impl<'d> InferenceEngine<'d> {
         prepared: PreparedSystem,
     ) -> Result<InferenceEngine<'d>> {
         let proto = proto_device(ds, &cfg);
-        let mut device = DeviceGroup::replicate(&proto, prepared.runtime.n_shards());
-        claim_shards(&mut device, &prepared)?;
+        let device = Arc::new(DeviceGroup::replicate(&proto, prepared.runtime.n_shards()));
+        claim_shards(&device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
             cfg.model,
@@ -271,6 +274,14 @@ impl<'d> InferenceEngine<'d> {
     /// it with a [`crate::cache::Refresher`] to re-plan online.
     pub fn runtime(&self) -> Arc<ShardedRuntime> {
         Arc::clone(&self.prepared.runtime)
+    }
+
+    /// The engine's per-shard device arenas — share them with a
+    /// [`crate::cache::RefreshJob`] so hot-swap installs are accounted
+    /// (claim-before-release) against the devices that actually hold
+    /// the snapshots.
+    pub fn device_group(&self) -> Arc<DeviceGroup> {
+        Arc::clone(&self.device)
     }
 
     /// Attach a serving-time access tracker (dense or sketch — see
@@ -508,9 +519,10 @@ impl<'d> InferenceEngine<'d> {
         };
 
         // the tracker's Eq.-(1) ratio input mirrors pre-sampling:
-        // modeled stage times, not simulator wall
+        // modeled stage times, not simulator wall; the input-node
+        // count feeds the refresh loop's peak-claim tracking
         if let Some(t) = &tracker {
-            t.record_batch(sample.modeled_ns, feature.modeled_ns);
+            t.record_batch(sample.modeled_ns, feature.modeled_ns, n_inputs as u32);
         }
         let mut stats = CacheStats::new();
         stats.sample.merge(&sb.ledger);

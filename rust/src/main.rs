@@ -73,6 +73,11 @@ fn print_usage() {
          \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
          \x20            refresh-decay= drift-threshold=   (online re-planning)\n\
          \x20            shard-refresh=on|off   (re-plan only drifted shards | all)\n\
+         \x20            rebalance=on|off rebalance-threshold= rebalance-floor=\n\
+         \x20            (elastic budgets: re-split the global budget across\n\
+         \x20             shards when the shard-level load mass skews)\n\
+         \x20            auto-budget-refresh=on|off   (budget=auto runs re-track\n\
+         \x20             the workload's peak claim per epoch)\n\
          \x20            tracker=dense|sketch sketch-width= sketch-depth=\n\
          \x20            (workload tracker: exact counters | count-min sketch\n\
          \x20             with O(touched) drain; sketch-* keys imply tracker=sketch)"

@@ -4,6 +4,17 @@
 //!
 //! Allocation failures surface as [`OomError`] — this is how the
 //! Table V "RAIN: CUDA out of memory" row reproduces.
+//!
+//! [`DeviceGroup`] is the multi-device (sharded) arena set. Since the
+//! elastic-budget work it is **epoch-aware**: claims and releases go
+//! through interior mutability (`&self`), so the background refresh
+//! loop can account a hot-swap install — claim the incoming snapshot's
+//! bytes *before* releasing the outgoing one (both are resident during
+//! a swap) — while the engine keeps serving through the same group. A
+//! per-device high-water mark ([`DeviceMemory::peak_used`]) records the
+//! transient double-residency so benches can assert it stays bounded.
+
+use std::sync::Mutex;
 
 use thiserror::Error;
 
@@ -14,6 +25,30 @@ pub const RTX4090_BYTES: u64 = 24 * (1 << 30);
 
 /// The paper's pre-sampling safety reserve (PaGraph convention).
 pub const PAPER_RESERVE_BYTES: u64 = 1 << 30;
+
+/// Per-input-node device bytes of the workload's own peak claim:
+/// features + first-layer activations + block index/mask overhead.
+/// One formula shared by the startup [`auto_budget`] and the refresh
+/// loop's per-epoch re-evaluation ([`AutoBudgetPolicy`]) so the two
+/// can never drift apart.
+///
+/// [`auto_budget`]: crate::baselines::auto_budget
+/// [`AutoBudgetPolicy`]: crate::cache::refresh::AutoBudgetPolicy
+pub fn per_node_claim_bytes(row_bytes: u64, hidden: usize) -> u64 {
+    row_bytes + (hidden * 4) as u64 + 64
+}
+
+/// §IV.A workload peak-claim model: bytes the workload itself pins on
+/// the device for its largest observed batch, with 2x slack for the
+/// allocator's transient copies. The batch footprint does not shrink
+/// with the dataset stand-in, but the simulated device does
+/// ([`DeviceMemory::rtx4090_scaled`]); scaling the claim by the same
+/// factor keeps the claim/device *ratio* at the paper's testbed value
+/// (≈5% of a 24 GB card). See DESIGN.md §Substitutions.
+pub fn workload_claim_bytes(peak_inputs: u64, per_node_bytes: u64, scale: f64) -> u64 {
+    let workload = 2.0 * (peak_inputs * per_node_bytes) as f64;
+    (workload * scale.min(1.0)) as u64
+}
 
 /// Simulated GPU out-of-memory (mirrors `RuntimeError: CUDA out of
 /// memory` in the paper's RAIN experiment).
@@ -37,12 +72,13 @@ pub struct DeviceMemory {
     capacity: u64,
     reserve: u64,
     used: u64,
+    peak_used: u64,
 }
 
 impl DeviceMemory {
     /// Arena with explicit capacity and safety reserve.
     pub fn new(capacity: u64, reserve: u64) -> Self {
-        DeviceMemory { capacity, reserve: reserve.min(capacity), used: 0 }
+        DeviceMemory { capacity, reserve: reserve.min(capacity), used: 0, peak_used: 0 }
     }
 
     /// The paper's testbed scaled to a dataset's scale factor: a 1/10
@@ -62,18 +98,32 @@ impl DeviceMemory {
         self.used
     }
 
+    /// High-water mark of `used` over the arena's lifetime — what the
+    /// claim-before-release swap accounting transiently peaks at.
+    pub fn peak_used(&self) -> u64 {
+        self.peak_used
+    }
+
+    /// Static cache headroom: capacity − reserve, independent of the
+    /// current claims. This is the budget basis the workload-aware
+    /// auto budget subtracts the peak claim from — at startup (nothing
+    /// claimed) it equals [`DeviceMemory::available_for_cache`].
+    pub fn headroom(&self) -> u64 {
+        self.capacity.saturating_sub(self.reserve)
+    }
+
     /// Bytes available for caches: capacity − reserve − used. This is
     /// the "C" of Eq. (1) once the workload's own peak usage has been
     /// claimed via [`DeviceMemory::alloc`].
     pub fn available_for_cache(&self) -> u64 {
-        self.capacity.saturating_sub(self.reserve).saturating_sub(self.used)
+        self.headroom().saturating_sub(self.used)
     }
 
     /// Claim `bytes` (workload tensors, caches). Fails with [`OomError`]
     /// if it would exceed capacity (the reserve is *not* allocatable —
     /// that is its purpose).
     pub fn alloc(&mut self, bytes: u64) -> Result<(), OomError> {
-        if self.used + bytes > self.capacity.saturating_sub(self.reserve) {
+        if self.used + bytes > self.headroom() {
             return Err(OomError {
                 requested: bytes,
                 in_use: self.used,
@@ -81,11 +131,15 @@ impl DeviceMemory {
             });
         }
         self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
         Ok(())
     }
 
-    /// Hard allocation that may also consume the reserve (used to model
-    /// baselines that do not reserve headroom, e.g. RAIN).
+    /// Hard allocation that may also consume the reserve (baselines
+    /// that reserve no headroom, e.g. RAIN — and the refresh loop's
+    /// transient double-residency during a snapshot swap, which is
+    /// exactly the kind of short-lived allocation the reserve exists
+    /// to absorb).
     pub fn alloc_unreserved(&mut self, bytes: u64) -> Result<(), OomError> {
         if self.used + bytes > self.capacity {
             return Err(OomError {
@@ -95,6 +149,7 @@ impl DeviceMemory {
             });
         }
         self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
         Ok(())
     }
 
@@ -110,9 +165,19 @@ impl DeviceMemory {
 /// sibling device, which is exactly the constraint that makes the
 /// per-shard budget split ([`crate::cache::split_budget`]) load-bearing
 /// rather than cosmetic.
-#[derive(Debug, Clone)]
+///
+/// The group is shared between the serving engine and the background
+/// refresh loop (both hold an `Arc`), so every accessor takes `&self`
+/// and each device sits behind its own lock. An epoch swap accounts as
+/// **claim-before-release**: the incoming snapshot's bytes are claimed
+/// while the outgoing snapshot is still resident (readers may serve
+/// one more batch from it), then the outgoing bytes are released — so
+/// a shard shrinking its budget frees device bytes a later (larger)
+/// epoch of the same device can claim, and the transient peak is
+/// visible via [`DeviceGroup::peak_used`].
+#[derive(Debug)]
 pub struct DeviceGroup {
-    devices: Vec<DeviceMemory>,
+    devices: Vec<Mutex<DeviceMemory>>,
 }
 
 impl DeviceGroup {
@@ -120,36 +185,68 @@ impl DeviceGroup {
     /// (capacity and reserve copied, nothing allocated yet).
     pub fn replicate(proto: &DeviceMemory, n: usize) -> Self {
         assert_eq!(proto.used(), 0, "replicate from an unused prototype");
-        DeviceGroup { devices: vec![proto.clone(); n.max(1)] }
+        DeviceGroup {
+            devices: (0..n.max(1)).map(|_| Mutex::new(proto.clone())).collect(),
+        }
     }
 
     /// The single-device group (the PR 2 shape).
     pub fn single(device: DeviceMemory) -> Self {
-        DeviceGroup { devices: vec![device] }
+        DeviceGroup { devices: vec![Mutex::new(device)] }
     }
 
     pub fn n_devices(&self) -> usize {
         self.devices.len()
     }
 
-    pub fn device(&self, i: usize) -> &DeviceMemory {
-        &self.devices[i]
+    /// A point-in-time copy of device `i`'s arena (reporting, tests).
+    pub fn device(&self, i: usize) -> DeviceMemory {
+        self.devices[i].lock().unwrap().clone()
+    }
+
+    /// Bytes currently claimed on device `i`.
+    pub fn used(&self, i: usize) -> u64 {
+        self.devices[i].lock().unwrap().used()
+    }
+
+    /// High-water mark of device `i`'s claims (includes the transient
+    /// double-residency of claim-before-release snapshot swaps).
+    pub fn peak_used(&self, i: usize) -> u64 {
+        self.devices[i].lock().unwrap().peak_used()
+    }
+
+    /// Device `i`'s static cache headroom (capacity − reserve) — the
+    /// per-device cap no shard's budget share may exceed.
+    pub fn headroom(&self, i: usize) -> u64 {
+        self.devices[i].lock().unwrap().headroom()
+    }
+
+    /// The smallest per-device headroom across the group — with
+    /// identical replicated devices this is *the* per-shard budget cap.
+    pub fn min_headroom(&self) -> u64 {
+        (0..self.devices.len()).map(|i| self.headroom(i)).min().unwrap_or(0)
+    }
+
+    /// Bytes claimed across all devices (conservation checks).
+    pub fn total_used(&self) -> u64 {
+        (0..self.devices.len()).map(|i| self.used(i)).sum()
     }
 
     /// Claim `bytes` on device `i` only; fails with that device's
     /// [`OomError`] — sibling capacity is never consulted.
-    pub fn alloc(&mut self, i: usize, bytes: u64) -> Result<(), OomError> {
-        self.devices[i].alloc(bytes)
+    pub fn alloc(&self, i: usize, bytes: u64) -> Result<(), OomError> {
+        self.devices[i].lock().unwrap().alloc(bytes)
     }
 
-    /// Reserve-consuming claim on device `i` (RAIN's staged tensor).
-    pub fn alloc_unreserved(&mut self, i: usize, bytes: u64) -> Result<(), OomError> {
-        self.devices[i].alloc_unreserved(bytes)
+    /// Reserve-consuming claim on device `i` (RAIN's staged tensor,
+    /// and the refresh loop's transient swap double-residency).
+    pub fn alloc_unreserved(&self, i: usize, bytes: u64) -> Result<(), OomError> {
+        self.devices[i].lock().unwrap().alloc_unreserved(bytes)
     }
 
     /// Release previously claimed bytes on device `i`.
-    pub fn free(&mut self, i: usize, bytes: u64) {
-        self.devices[i].free(bytes)
+    pub fn free(&self, i: usize, bytes: u64) {
+        self.devices[i].lock().unwrap().free(bytes)
     }
 }
 
@@ -161,8 +258,10 @@ mod tests {
     fn alloc_respects_reserve() {
         let mut m = DeviceMemory::new(100, 10);
         assert_eq!(m.available_for_cache(), 90);
+        assert_eq!(m.headroom(), 90);
         m.alloc(80).unwrap();
         assert_eq!(m.available_for_cache(), 10);
+        assert_eq!(m.headroom(), 90, "headroom is static");
         let err = m.alloc(20).unwrap_err();
         assert_eq!(err.in_use, 80);
         // unreserved path may take the headroom
@@ -172,13 +271,17 @@ mod tests {
     }
 
     #[test]
-    fn free_returns_capacity() {
+    fn free_returns_capacity_and_peak_sticks() {
         let mut m = DeviceMemory::new(100, 0);
         m.alloc(60).unwrap();
         m.free(50);
         assert_eq!(m.used(), 10);
+        assert_eq!(m.peak_used(), 60, "peak records the high-water mark");
+        m.alloc(20).unwrap();
+        assert_eq!(m.peak_used(), 60, "peak only moves on a new high");
         m.free(1000); // saturates, never underflows
         assert_eq!(m.used(), 0);
+        assert_eq!(m.peak_used(), 60);
     }
 
     #[test]
@@ -196,9 +299,21 @@ mod tests {
     }
 
     #[test]
+    fn claim_model_is_shared_and_scaled() {
+        let per_node = per_node_claim_bytes(256, 128);
+        assert_eq!(per_node, 256 + 512 + 64);
+        // 2x slack at full scale
+        assert_eq!(workload_claim_bytes(10, per_node, 1.0), 2 * 10 * per_node);
+        // the scale factor shrinks the claim with the simulated device
+        assert_eq!(workload_claim_bytes(10, per_node, 0.5), 10 * per_node);
+        // scale never inflates it past the testbed ratio
+        assert_eq!(workload_claim_bytes(10, per_node, 3.0), 2 * 10 * per_node);
+    }
+
+    #[test]
     fn group_accounts_each_device_separately() {
         let proto = DeviceMemory::new(100, 10);
-        let mut g = DeviceGroup::replicate(&proto, 3);
+        let g = DeviceGroup::replicate(&proto, 3);
         assert_eq!(g.n_devices(), 3);
         g.alloc(0, 90).unwrap();
         // device 0 is full for cache purposes; devices 1-2 untouched
@@ -207,11 +322,31 @@ mod tests {
         assert_eq!(g.device(0).used(), 90);
         assert_eq!(g.device(1).used(), 50);
         assert_eq!(g.device(2).used(), 0);
+        assert_eq!(g.total_used(), 140);
         g.free(1, 50);
-        assert_eq!(g.device(1).used(), 0);
+        assert_eq!(g.used(1), 0);
+        assert_eq!(g.peak_used(1), 50, "peak survives the release");
         // unreserved path still per-device
         g.alloc_unreserved(0, 10).unwrap();
         assert!(g.alloc_unreserved(0, 1).is_err());
+        assert_eq!(g.min_headroom(), 90);
+    }
+
+    #[test]
+    fn group_release_and_reclaim_across_epochs() {
+        // the elastic-budget swap pattern: claim the incoming epoch's
+        // bytes before releasing the outgoing one, on the same device
+        let g = DeviceGroup::single(DeviceMemory::new(100, 20));
+        g.alloc(0, 50).unwrap(); // epoch 0 snapshot
+        // claim-before-release dips into the reserve transiently
+        g.alloc_unreserved(0, 40).unwrap(); // epoch 1 snapshot
+        assert_eq!(g.used(0), 90);
+        g.free(0, 50); // epoch 0 released once swapped out
+        assert_eq!(g.used(0), 40);
+        assert_eq!(g.peak_used(0), 90, "transient double-residency recorded");
+        // the released bytes are reclaimable by a larger epoch 2
+        g.alloc(0, 40).unwrap();
+        assert_eq!(g.used(0), 80);
     }
 
     #[test]

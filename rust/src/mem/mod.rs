@@ -11,5 +11,8 @@ pub mod device;
 pub mod transfer;
 
 pub use clock::TransferLedger;
-pub use device::{DeviceGroup, DeviceMemory, OomError, PAPER_RESERVE_BYTES, RTX4090_BYTES};
+pub use device::{
+    per_node_claim_bytes, workload_claim_bytes, DeviceGroup, DeviceMemory, OomError,
+    PAPER_RESERVE_BYTES, RTX4090_BYTES,
+};
 pub use transfer::CostModel;

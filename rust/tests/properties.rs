@@ -572,3 +572,169 @@ fn prop_tracker_choice_never_changes_logits() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_weighted_split_conserves_floors_and_reduces_to_even() {
+    use dci::cache::{split_budget, split_budget_weighted};
+
+    check("weighted split: exact conservation, floor, even reduction", 300, |rng| {
+        let budget = rng.next_u64() % (1u64 << 45);
+        let n = 1 + rng.gen_usize(16);
+        let floor = (rng.next_u64() % 101) as f64 / 100.0;
+        let loads: Vec<f64> =
+            (0..n).map(|_| (rng.next_u64() % 1_000) as f64 / 3.0).collect();
+        let shares = split_budget_weighted(budget, &loads, floor);
+        if shares.len() != n {
+            return Err("one share per shard".into());
+        }
+        // exact conservation: no byte lost, none invented
+        let sum: u64 = shares.iter().sum();
+        if sum != budget {
+            return Err(format!("weighted split lost bytes: {sum} != {budget}"));
+        }
+        // the floor holds for every shard, however cold its load
+        let floor_share = (((budget / n as u64) as f64) * floor) as u64;
+        if let Some((s, &sh)) =
+            shares.iter().enumerate().find(|&(_, &sh)| sh < floor_share.min(budget / n as u64))
+        {
+            return Err(format!("shard {s} got {sh} < floor {floor_share}"));
+        }
+        // uniform load reduces to the even split exactly (remainder
+        // placement included)
+        let uniform = vec![7.25; n];
+        if split_budget_weighted(budget, &uniform, floor) != split_budget(budget, n) {
+            return Err("uniform load must reduce to the even split".into());
+        }
+        // all-zero load falls back to the even split exactly
+        if split_budget_weighted(budget, &vec![0.0; n], floor) != split_budget(budget, n)
+        {
+            return Err("all-zero load must fall back to the even split".into());
+        }
+        // monotone in load: a STRICTLY hotter shard never gets less
+        // than the coldest one (ties carry no ordering obligation —
+        // equal weights resolve by index, like the even split's
+        // front-loaded remainder)
+        let hottest = loads
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        let coldest = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if loads[hottest] > loads[coldest] && shares[hottest] < shares[coldest] {
+            return Err(format!(
+                "hotter shard got less: {} < {} ({loads:?} -> {shares:?})",
+                shares[hottest], shares[coldest]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_never_changes_logits() {
+    use dci::cache::refresh::{RefreshConfig, RefreshJob};
+    use dci::cache::tracker::{AccessTracker, WorkloadTracker};
+    use dci::config::{ComputeKind, RunConfig, SystemKind};
+    use dci::engine::InferenceEngine;
+    use dci::graph::datasets;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // Elastic budgets move *bytes between devices*, never results: a
+    // serving run with aggressive rebalancing (forced re-splits and
+    // re-plans landing mid-stream) must produce logits bit-identical
+    // to a run with no refresher at all. Caches — and therefore budget
+    // moves — only change where a byte is read from.
+    check("rebalance=on and refresh-off serve bit-identical logits", 2, |rng| {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let seed = rng.next_u64();
+        let budget = 50_000 + rng.next_u64() % 100_000;
+        let chunks: Vec<Vec<NodeId>> =
+            ds.test_nodes.chunks(24).take(8).map(|c| c.to_vec()).collect();
+
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for rebalancing in [false, true] {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.system = SystemKind::Dci;
+            cfg.batch_size = 24;
+            cfg.fanout = Fanout::parse("3,2").unwrap();
+            cfg.budget = Some(budget);
+            cfg.shards = 4;
+            cfg.compute = ComputeKind::Reference;
+            cfg.hidden = 16;
+            cfg.seed = seed;
+            let mut engine =
+                InferenceEngine::prepare(&ds, cfg).map_err(|e| e.to_string())?;
+            let refresher = if rebalancing {
+                let tracker: Arc<dyn WorkloadTracker> = Arc::new(AccessTracker::new(
+                    ds.csc.n_nodes(),
+                    ds.csc.n_edges(),
+                ));
+                engine.set_tracker(Arc::clone(&tracker));
+                let baseline = engine
+                    .prepared
+                    .presample
+                    .as_ref()
+                    .map(|s| s.node_visits.clone())
+                    .unwrap_or_default();
+                Some(
+                    RefreshJob::new(
+                        Arc::clone(&ds),
+                        engine.runtime(),
+                        tracker,
+                        Box::new(dci::cache::planner::DciPlanner),
+                        engine.prepared.shard_budgets.clone(),
+                        baseline,
+                        RefreshConfig {
+                            check_interval: Duration::from_millis(2),
+                            min_batches: 1,
+                            decay: 0.5,
+                            // negative thresholds force a re-plan and a
+                            // re-split on every single check
+                            drift_threshold: -1.0,
+                            rebalance: true,
+                            rebalance_threshold: -1.0,
+                            rebalance_floor: 0.1,
+                            ..RefreshConfig::default()
+                        },
+                    )
+                    .device(engine.device_group())
+                    .spawn(),
+                )
+            } else {
+                None
+            };
+            let mut logits = Vec::new();
+            for chunk in &chunks {
+                let out = engine.infer_once(chunk).map_err(|e| e.to_string())?;
+                logits.extend(out.logits.expect("reference compute returns logits"));
+                // give installs a chance to land mid-stream
+                std::thread::sleep(Duration::from_millis(4));
+            }
+            if let Some(r) = refresher {
+                let stats = r.stop();
+                if stats.shard_rebalances == 0 {
+                    return Err(format!(
+                        "forced rebalancing never re-split (checks {})",
+                        stats.checks
+                    ));
+                }
+                if engine.runtime().swap_stalls() != 0 {
+                    return Err("a swap stalled the serving path".into());
+                }
+            }
+            outs.push(logits);
+        }
+        if outs[1] != outs[0] {
+            return Err("rebalancing changed the served logits".into());
+        }
+        Ok(())
+    });
+}
