@@ -1,0 +1,424 @@
+//! Chaos bench: fault-injected degraded-mode serving (the PR's gate).
+//!
+//! Replays the shard-runtime drift stream (phase A -> phase B, sharded
+//! snapshot, online per-shard refresh) while a deterministic fault
+//! schedule batters the refresh path from every angle at once:
+//!
+//!   oom@0x6    shard 0's install claims OOM through one full retry
+//!              budget (counted skip, old epoch keeps serving) and then
+//!              through two more transients (retried, succeeds)
+//!   err@1x4    shard 1's transfer fails terminally -> degraded mode:
+//!              host-fallback reads until the repair loop promotes the
+//!              shard back
+//!   hang@2~400 shard 2's install hangs past the watchdog deadline ->
+//!              the generation is abandoned and respawned from its
+//!              checkpoint
+//!   drain      one tracker drain panics -> watchdog restart
+//!
+//! Ground truth is the *identical* request sequence on a fault-free
+//! engine (same request indices -> same sampling streams). The caches
+//! are performance-transparent — every adj cache takes the full-CSC
+//! fast path (asserted; a partial fill may reorder one boundary list)
+//! and feature reads are byte-equal on hit and miss — so per-batch
+//! logits must be BIT-IDENTICAL between the faulted and the clean run.
+//!
+//! Gates (`ensure!` here, value-checked again by ci/check_bench.py):
+//! logits match exactly, zero reader stalls on every shard, the
+//! degraded shard repairs within a bounded number of served batches,
+//! the watchdog restarted both dead generations, and the schedule is
+//! fully consumed (every fault actually fired).
+//!
+//! Always writes `BENCH_chaos.json` (override with `--json <path>`).
+//! `cargo bench --bench chaos [-- --quick]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use dci::baselines::PreparedSystem;
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::planner::{DciPlanner, WorkloadProfile};
+use dci::cache::shard::{plan_sharded, ShardRouter, ShardedPlan, ShardedRuntime};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
+use dci::cache::{CacheStats, RefreshConfig, RefreshJob};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, NodeId};
+use dci::mem::CostModel;
+use dci::sampler::{presample, Fanout};
+use dci::util::json::s;
+use dci::util::Rng;
+
+/// The schedule under test (see module docs for the per-fault story).
+const FAULTS: &str = "oom@0x6,err@1x4,hang@2~400,drain";
+
+struct Params {
+    /// Seeds per phase pool (disjoint A/B halves of the test set).
+    pool: usize,
+    /// Seeds per serving request.
+    req_size: usize,
+    /// Pre-sampling geometry for the phase-A startup plan.
+    presample_bs: usize,
+    n_presample: usize,
+    /// Global budget — deliberately generous so every shard's adj cache
+    /// takes the full-CSC fast path (the bit-identity precondition).
+    budget: u64,
+    /// Post-recovery waves (quiet traffic after the faults drain).
+    settle_waves: usize,
+}
+
+/// Everything the faulted run records, so the clean run can replay the
+/// identical sequence and the report can compare the two.
+struct Recorder {
+    sequence: Vec<Vec<NodeId>>,
+    hashes: Vec<u64>,
+    stats: CacheStats,
+    /// Batches served while any shard was in degraded (host-fallback)
+    /// mode — the repair-window bound.
+    repair_batches: u64,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            sequence: Vec::new(),
+            hashes: Vec::new(),
+            stats: CacheStats::new(),
+            repair_batches: 0,
+        }
+    }
+}
+
+/// Serve one request on the faulted engine, recording the chunk, the
+/// logits hash, the cache stats, and whether the batch landed in a
+/// degraded window.
+fn serve_recorded(
+    engine: &mut InferenceEngine<'_>,
+    runtime: &ShardedRuntime,
+    chunk: &[NodeId],
+    rec: &mut Recorder,
+) -> Result<()> {
+    let out = engine.infer_once(chunk)?;
+    let logits = out.logits.as_ref().expect("reference compute returns logits");
+    ensure!(logits.iter().all(|v| v.is_finite()), "non-finite logits");
+    rec.hashes.push(hash_logits(logits));
+    rec.stats.merge(&out.stats);
+    rec.sequence.push(chunk.to_vec());
+    if runtime.degraded_count() > 0 {
+        rec.repair_batches += 1;
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_chaos.json");
+    // The chaos gate exercises fault machinery, not dataset scale, so
+    // both modes run `tiny` (2k nodes / 4 shards); the full mode only
+    // pre-samples and settles longer after recovery.
+    let p = if opts.quick {
+        Params {
+            pool: 480,
+            req_size: 32,
+            presample_bs: 120,
+            n_presample: 4,
+            budget: 600_000,
+            settle_waves: 3,
+        }
+    } else {
+        Params {
+            pool: 480,
+            req_size: 32,
+            presample_bs: 120,
+            n_presample: 8,
+            budget: 600_000,
+            settle_waves: 8,
+        }
+    };
+    let n_shards = 4usize;
+
+    eprintln!("building tiny...");
+    let ds = Arc::new(datasets::spec("tiny")?.build());
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.req_size;
+    cfg.fanout = Fanout::parse("3,2")?;
+    cfg.budget = Some(p.budget);
+    cfg.shards = n_shards;
+    // Reference compute: real logits, so bit-identity is checkable.
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    // The schedule enters through the same `fault=` knob a deployment
+    // would use; the engine parses it once and the refresh job shares
+    // the counted plan (one spec, one schedule across all sites).
+    cfg.fault = Some(FAULTS.into());
+    let cost = CostModel::default();
+
+    ensure!(ds.test_nodes.len() >= 2 * p.pool, "test set too small");
+    let a_pool: Vec<NodeId> = ds.test_nodes[..p.pool].to_vec();
+    let b_pool: Vec<NodeId> = ds.test_nodes[ds.test_nodes.len() - p.pool..].to_vec();
+    let b_chunks: Vec<&[NodeId]> = b_pool.chunks(p.req_size).collect();
+
+    // offline sharded plan against phase A (the deployment's startup
+    // state), engine + device arenas around it
+    let router = ShardRouter::new(n_shards);
+    let stats_a = presample(
+        &ds.csc,
+        &ds.features,
+        &a_pool,
+        p.presample_bs,
+        &cfg.fanout,
+        p.n_presample,
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile_a = WorkloadProfile::from_presample(&stats_a);
+    let startup = |plans: ShardedPlan| {
+        PreparedSystem::from_plans(
+            SystemKind::Dci,
+            plans,
+            router.clone(),
+            None,
+            p.budget,
+            0.0,
+            &cost,
+        )
+    };
+    let prepared = startup(plan_sharded(&DciPlanner, &ds, &profile_a, p.budget, &router));
+    let shard_budgets = prepared.shard_budgets.clone();
+    let runtime = Arc::clone(&prepared.runtime);
+    let mut engine = InferenceEngine::with_prepared(&ds, cfg.clone(), prepared)?;
+    let fault = engine.fault_plan().expect("cfg.fault is set");
+
+    // bit-identity precondition: every startup shard took the full-CSC
+    // fast path (re-checked after the faulted run for the re-plans)
+    assert_full_csc(&runtime, "startup plan")?;
+
+    let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    engine.set_tracker(Arc::clone(&tracker));
+    let refresher = RefreshJob::new(
+        Arc::clone(&ds),
+        Arc::clone(&runtime),
+        Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+        Box::new(DciPlanner),
+        shard_budgets,
+        stats_a.node_visits.clone(),
+        RefreshConfig {
+            check_interval: Duration::from_millis(20),
+            min_batches: 4,
+            decay: 0.7,
+            // re-plan every shard on every check: the schedule drains
+            // deterministically instead of waiting on drift timing
+            drift_threshold: -1.0,
+            install_retries: 3,
+            install_backoff: Duration::from_millis(2),
+            watchdog_timeout: Duration::from_millis(150),
+            ..RefreshConfig::default()
+        },
+    )
+    .device(engine.device_group())
+    .fault(Arc::clone(&fault))
+    .spawn();
+
+    // --- faulted run: phase A, then phase-B waves until the schedule
+    // drains, the degraded shard repairs, and the watchdog has restarted
+    // both dead generations (hang + drain panic)
+    let mut rec = Recorder::new();
+    for chunk in a_pool.chunks(p.req_size) {
+        serve_recorded(&mut engine, &runtime, chunk, &mut rec)?;
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut b_waves = 0u64;
+    let recovered = loop {
+        let st = refresher.stats();
+        if fault.remaining() == 0
+            && runtime.degraded_count() == 0
+            && st.shard_repairs >= 1
+            && st.watchdog_restarts >= 2
+        {
+            break true;
+        }
+        if Instant::now() >= deadline {
+            break false;
+        }
+        for chunk in &b_chunks {
+            serve_recorded(&mut engine, &runtime, chunk, &mut rec)?;
+        }
+        b_waves += 1;
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    ensure!(
+        recovered,
+        "faults not drained after {b_waves} phase-B waves: {} left, {:?}",
+        fault.remaining(),
+        refresher.stats()
+    );
+    for _ in 0..p.settle_waves {
+        for chunk in &b_chunks {
+            serve_recorded(&mut engine, &runtime, chunk, &mut rec)?;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let rstats = refresher.stop();
+    let stalls = runtime.swap_stalls();
+    assert_full_csc(&runtime, "online re-plans")?;
+    eprintln!(
+        "  [faulted] {} batches, {b_waves} waves; retries={} ooms={} degrades={} \
+         repairs={} ({} degraded batches) watchdog={} panics={}",
+        rec.sequence.len(),
+        rstats.install_retries,
+        rstats.install_ooms,
+        rstats.shard_degrades,
+        rstats.shard_repairs,
+        rec.repair_batches,
+        rstats.watchdog_restarts,
+        rstats.refresh_panics,
+    );
+
+    // --- clean run: identical sequence, fresh engine, identical
+    // startup plan (deterministic fills), no refresher, no faults
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.fault = None;
+    let prepared = startup(plan_sharded(&DciPlanner, &ds, &profile_a, p.budget, &router));
+    let mut clean_engine = InferenceEngine::with_prepared(&ds, clean_cfg, prepared)?;
+    let mut clean_hashes: Vec<u64> = Vec::with_capacity(rec.hashes.len());
+    let mut clean_stats = CacheStats::new();
+    for chunk in &rec.sequence {
+        let out = clean_engine.infer_once(chunk)?;
+        clean_hashes.push(hash_logits(out.logits.as_ref().expect("logits")));
+        clean_stats.merge(&out.stats);
+    }
+
+    let matched = rec.hashes == clean_hashes;
+    let degraded_hit_penalty =
+        (clean_stats.overall_hit_ratio() - rec.stats.overall_hit_ratio()).max(0.0);
+
+    let mut report = BenchReport::new(
+        "Chaos: degraded-mode serving under an injected fault schedule",
+        &["measurement", "batches", "overall-hit%", "notes"],
+    );
+    for (label, st, batches) in [
+        ("faulted serving", &rec.stats, rec.hashes.len()),
+        ("fault-free replay", &clean_stats, clean_hashes.len()),
+    ] {
+        report.row(
+            &[
+                label.to_string(),
+                format!("{batches}"),
+                format!("{:.1}", 100.0 * st.overall_hit_ratio()),
+                String::new(),
+            ],
+            vec![
+                ("measurement", s(label)),
+                ("batches", jnum(batches as f64)),
+                ("overall_hit", jnum(st.overall_hit_ratio())),
+            ],
+        );
+    }
+    let verdict = if matched { "logits match" } else { "LOGITS DIVERGED" };
+    report.row(
+        &[
+            format!("chaos: {FAULTS}"),
+            format!("{} degraded", rec.repair_batches),
+            verdict.to_string(),
+            format!(
+                "{stalls} stalls, {} restarts, {} repairs",
+                rstats.watchdog_restarts, rstats.shard_repairs
+            ),
+        ],
+        vec![
+            ("measurement", s("chaos")),
+            ("logits_match", jnum(if matched { 1.0 } else { 0.0 })),
+            ("swap_stalls", jnum(stalls as f64)),
+            ("install_retries", jnum(rstats.install_retries as f64)),
+            ("backoff_ms", jnum(rstats.backoff_ns / 1e6)),
+            ("install_ooms", jnum(rstats.install_ooms as f64)),
+            ("degraded_shards", jnum(rstats.shard_degrades as f64)),
+            ("repairs", jnum(rstats.shard_repairs as f64)),
+            ("repair_batches", jnum(rec.repair_batches as f64)),
+            ("repair_ms", jnum(rstats.repair_wall_ns / 1e6)),
+            ("watchdog_restarts", jnum(rstats.watchdog_restarts as f64)),
+            ("refresh_panics", jnum(rstats.refresh_panics as f64)),
+            ("degraded_hit_penalty", jnum(degraded_hit_penalty)),
+        ],
+    );
+    report.finish(&opts)?;
+
+    println!(
+        "{} batches under `{FAULTS}`: logits {}, {stalls} stalls, \
+         {} oom-skips / {} retries, degraded for {} batch(es) before repair, \
+         {} watchdog restart(s)",
+        rec.hashes.len(),
+        if matched { "bit-identical" } else { "DIVERGED" },
+        rstats.install_ooms,
+        rstats.install_retries,
+        rec.repair_batches,
+        rstats.watchdog_restarts,
+    );
+
+    // the acceptance criteria this bench exists to hold
+    ensure!(
+        matched,
+        "logits diverged from the fault-free run ({} vs {} batches)",
+        rec.hashes.len(),
+        clean_hashes.len()
+    );
+    for shard in 0..n_shards {
+        ensure!(
+            runtime.shard(shard).swap_stalls() == 0,
+            "shard {shard} blocked a reader during the fault schedule"
+        );
+    }
+    ensure!(fault.remaining() == 0, "unfired faults: {}", fault.remaining());
+    ensure!(rstats.install_ooms >= 1, "the oom burst must skip one install: {rstats:?}");
+    ensure!(rstats.install_retries >= 3, "claims must retry under backoff: {rstats:?}");
+    ensure!(rstats.backoff_ns > 0.0, "retries wait out a backoff pause: {rstats:?}");
+    ensure!(
+        rstats.shard_degrades >= 1 && rstats.shard_repairs >= rstats.shard_degrades,
+        "every degraded shard must be promoted back: {rstats:?}"
+    );
+    ensure!(runtime.degraded_count() == 0, "a shard is still degraded at exit");
+    ensure!(
+        rec.repair_batches <= 500,
+        "degraded window too long: {} batches served on host fallback",
+        rec.repair_batches
+    );
+    ensure!(
+        rstats.watchdog_restarts >= 2 && rstats.refresh_panics >= 1,
+        "the watchdog must respawn the hung AND the panicked generation: {rstats:?}"
+    );
+    ensure!(
+        degraded_hit_penalty <= 0.5,
+        "degraded serving lost too much hit ratio: {degraded_hit_penalty:.3}"
+    );
+    Ok(())
+}
+
+/// Every installed shard must be on the full-CSC fast path: a partial
+/// adj fill may reorder one boundary node's neighbor list, which would
+/// break the bit-identity comparison (an empty/absent adj cache is
+/// fine — misses read the host CSC in original order).
+fn assert_full_csc(runtime: &ShardedRuntime, when: &str) -> Result<()> {
+    for (shard, snap) in runtime.snapshots().iter().enumerate() {
+        ensure!(
+            snap.adj.as_ref().map_or(true, |a| a.is_full_csc()),
+            "shard {shard} ({when}): partial adj cache — raise the budget \
+             (partial fills may reorder a boundary list, breaking bit-identity)"
+        );
+    }
+    Ok(())
+}
+
+/// FNV-1a over the raw bit patterns: equal hashes across both runs is
+/// the bit-identity check (an f32 compare would paper over -0.0/NaN).
+fn hash_logits(logits: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in logits {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}

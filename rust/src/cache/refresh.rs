@@ -81,15 +81,39 @@
 //! an actual re-plan materializes dense count arrays for the planner,
 //! and the planner itself is O(n) — the expensive path runs exactly
 //! when a shard is about to be refilled anyway.
+//!
+//! **Fault tolerance** (DESIGN.md §Fault tolerance). Installs retry
+//! with bounded exponential backoff
+//! ([`RefreshConfig::install_retries`] /
+//! [`RefreshConfig::install_backoff`]): a claim that still OOMs after
+//! the retry budget is given up (`install_ooms`, the old epoch keeps
+//! serving — the PR 5 skip path), while a fill that still fails after
+//! the budget is *terminal* — the shard is marked degraded in the
+//! [`ShardedRuntime`], its device bytes are released, and every view
+//! falls back to host reads for that shard until the per-check repair
+//! pass re-plans it and promotes it back. The loop itself runs under a
+//! **watchdog** supervisor: the worker thread beats a heartbeat every
+//! iteration and checkpoints its durable state (budgets, drift
+//! baseline, stats) after every check; a panicked or hung worker is
+//! detected (`watchdog_timeout`), abandoned via a generation counter
+//! (a hung thread that later wakes sees the stale generation and exits
+//! without publishing), and respawned from the last checkpoint.
+//! Deterministic faults for all of this come from the `fault=` knob
+//! ([`FaultPlan`]); with no plan attached every site is a pointer
+//! null-check.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::graph::{Csc, Dataset, NodeId};
 use crate::mem::DeviceGroup;
+use crate::util::{lock_unpoisoned, FaultPlan};
+
+use super::runtime::CacheSnapshot;
 
 use super::planner::{
     cap_shares, split_budget, split_budget_weighted, CachePlanner, WorkloadProfile,
@@ -143,6 +167,21 @@ pub struct RefreshConfig {
     /// the even split with it off — re-tracking the budget and
     /// redistributing it are separate decisions.
     pub auto_budget_refresh: bool,
+    /// Retry budget per install phase (`install-retries=`): a failing
+    /// device claim or fill is re-attempted up to this many times with
+    /// exponential backoff before the install gives up (claim → skip
+    /// and count `install_ooms`; fill → degrade the shard).
+    pub install_retries: u32,
+    /// Base backoff pause before the first install retry
+    /// (`install-backoff-ms=`); doubles per further retry.
+    pub install_backoff: Duration,
+    /// How long the watchdog lets the refresh worker's heartbeat go
+    /// stale before declaring it hung, abandoning its generation, and
+    /// respawning from the last checkpoint (`watchdog-ms=`). Must
+    /// exceed the worst-case duration of one full check (drain + every
+    /// re-plan + retry backoffs), or a merely slow check is treated as
+    /// hung.
+    pub watchdog_timeout: Duration,
 }
 
 impl Default for RefreshConfig {
@@ -157,6 +196,9 @@ impl Default for RefreshConfig {
             rebalance_threshold: 0.25,
             rebalance_floor: 0.1,
             auto_budget_refresh: false,
+            install_retries: 3,
+            install_backoff: Duration::from_millis(5),
+            watchdog_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -250,6 +292,25 @@ pub struct RefreshStats {
     /// Touches the tracker could not enumerate because its bounded
     /// touched set saturated (sketch only; 0 for dense).
     pub dropped_touches: u64,
+    /// Install attempts re-tried after a transient claim/fill failure
+    /// (each retry paid one backoff pause).
+    pub install_retries: u64,
+    /// Wall time spent in retry backoff pauses, ns.
+    pub backoff_ns: f64,
+    /// Times a shard entered degraded mode (a fill failed terminally;
+    /// the shard served from host memory until repaired).
+    pub shard_degrades: u64,
+    /// Degraded shards promoted back to healthy by the repair pass.
+    pub shard_repairs: u64,
+    /// Wall time shards spent degraded before their repair install
+    /// landed, summed, ns — the repair latency the chaos bench bounds.
+    pub repair_wall_ns: f64,
+    /// Times the watchdog respawned the refresh worker (panicked or
+    /// hung generations both count).
+    pub watchdog_restarts: u64,
+    /// Refresh-worker panics the watchdog absorbed (subset of
+    /// `watchdog_restarts`; a silent swallowed panic is a bug).
+    pub refresh_panics: u64,
 }
 
 /// Everything a [`Refresher`] needs: the mandatory serving-loop wiring
@@ -279,6 +340,9 @@ pub struct RefreshJob {
     /// Per-epoch auto-budget re-evaluation policy (`None` = the global
     /// budget only moves if installs are skipped on OOM).
     pub auto_budget: Option<AutoBudgetPolicy>,
+    /// Deterministic fault schedule for chaos testing (`None` = no
+    /// faults; every injection site is one pointer null-check).
+    pub fault: Option<Arc<FaultPlan>>,
     /// Loop knobs.
     pub cfg: RefreshConfig,
 }
@@ -303,6 +367,7 @@ impl RefreshJob {
             planned_visits,
             device: None,
             auto_budget: None,
+            fault: None,
             cfg,
         }
     }
@@ -319,7 +384,19 @@ impl RefreshJob {
         self
     }
 
-    /// Spawn the background refresh thread over this job.
+    /// Attach a deterministic fault schedule (the `fault=` knob).
+    pub fn fault(mut self, plan: Arc<FaultPlan>) -> RefreshJob {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Spawn the supervised background refresh thread over this job.
+    ///
+    /// The returned [`Refresher`] owns the *watchdog* thread, which in
+    /// turn owns the worker generation actually running the loop: a
+    /// panicked or hung worker is detected, abandoned, and respawned
+    /// from the last checkpoint without the serving path noticing
+    /// (module docs, DESIGN.md §Fault tolerance).
     pub fn spawn(self) -> Refresher {
         assert_eq!(
             self.shard_budgets.len(),
@@ -339,12 +416,13 @@ impl RefreshJob {
             shard_budgets: self.shard_budgets.clone(),
             ..Default::default()
         }));
+        let job = Arc::new(self);
         let stop2 = Arc::clone(&stop);
         let stats2 = Arc::clone(&stats);
         let join = std::thread::Builder::new()
-            .name("dci-refresh".into())
-            .spawn(move || RefreshLoop::new(&self).run(&stop2, &stats2))
-            .expect("spawn refresh thread");
+            .name("dci-refresh-watchdog".into())
+            .spawn(move || supervise(&job, &stop2, &stats2))
+            .expect("spawn refresh watchdog: the OS refused a thread at startup");
         Refresher { stop, join, stats }
     }
 }
@@ -376,18 +454,185 @@ impl Refresher {
             .spawn()
     }
 
-    /// Current stats (the loop keeps them up to date after every check).
+    /// Current stats (the loop keeps them up to date after every check,
+    /// and the watchdog republishes them on every restart it records).
     pub fn stats(&self) -> RefreshStats {
-        self.stats.lock().unwrap().clone()
+        lock_unpoisoned(&self.stats).clone()
     }
 
-    /// Stop the loop and return its final stats.
+    /// Stop the loop and return its final stats. Worker death is never
+    /// silent: a panic the watchdog absorbed is already folded into
+    /// `refresh_panics`/`watchdog_restarts` by the time this join
+    /// returns, and a worker hung mid-install at shutdown is abandoned
+    /// (self-neutered via its generation) rather than blocking the
+    /// caller on it.
     pub fn stop(self) -> RefreshStats {
         self.stop.store(true, Ordering::Relaxed);
         let _ = self.join.join();
-        let stats = self.stats.lock().unwrap().clone();
-        stats
+        lock_unpoisoned(&self.stats).clone()
     }
+}
+
+/// Durable refresh-loop state, written by the worker after every
+/// completed check and consumed by the watchdog to respawn a fresh
+/// generation where the old one left off. The decayed traffic
+/// accumulators are deliberately *not* checkpointed: they rebuild from
+/// live windows within a few polls, while the budgets, drift baseline,
+/// and stats counters here would silently reset without this.
+#[derive(Clone)]
+struct Checkpoint {
+    budgets: Vec<u64>,
+    planned: HashMap<u64, f64>,
+    stats: RefreshStats,
+}
+
+/// Per-generation handles shared between one worker and the watchdog
+/// that spawned it.
+struct Supervision {
+    /// Bumped by the worker every loop iteration and at every re-plan;
+    /// the watchdog calls the worker hung when it stops moving for
+    /// [`RefreshConfig::watchdog_timeout`].
+    heartbeat: Arc<AtomicU64>,
+    /// The live generation counter. A worker whose `my_gen` falls
+    /// behind has been abandoned: it must exit without publishing, so
+    /// a hung thread that eventually wakes cannot clobber its
+    /// replacement's installs or drain its traffic.
+    generation: Arc<AtomicU64>,
+    my_gen: u64,
+    /// The shared checkpoint slot respawns resume from.
+    checkpoint: Arc<Mutex<Option<Checkpoint>>>,
+}
+
+impl Supervision {
+    fn beat(&self) {
+        self.heartbeat.fetch_add(1, Ordering::Release);
+    }
+
+    fn abandoned(&self) -> bool {
+        self.generation.load(Ordering::Acquire) != self.my_gen
+    }
+}
+
+/// Sparse drift baseline from the dense startup profile.
+fn planned_map(planned_visits: &[u32]) -> HashMap<u64, f64> {
+    planned_visits
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > 0)
+        .map(|(v, &c)| (v as u64, c as f64))
+        .collect()
+}
+
+/// The watchdog body: spawn a worker generation, watch its heartbeat,
+/// and respawn from the last checkpoint when it panics or hangs. The
+/// worker runs under `catch_unwind`, so an injected (or real) panic in
+/// the loop costs one generation, never the process or the counters.
+fn supervise(
+    job: &Arc<RefreshJob>,
+    stop: &Arc<AtomicBool>,
+    stats_out: &Arc<Mutex<RefreshStats>>,
+) {
+    let generation = Arc::new(AtomicU64::new(0));
+    let checkpoint: Arc<Mutex<Option<Checkpoint>>> = Arc::new(Mutex::new(None));
+    let poll = Duration::from_millis(5);
+    while !stop.load(Ordering::Relaxed) {
+        let my_gen = generation.fetch_add(1, Ordering::AcqRel) + 1;
+        let sup = Supervision {
+            heartbeat: Arc::new(AtomicU64::new(0)),
+            generation: Arc::clone(&generation),
+            my_gen,
+            checkpoint: Arc::clone(&checkpoint),
+        };
+        let heartbeat = Arc::clone(&sup.heartbeat);
+        let worker = {
+            let job = Arc::clone(job);
+            let stop = Arc::clone(stop);
+            let stats_out = Arc::clone(stats_out);
+            std::thread::Builder::new()
+                .name("dci-refresh".into())
+                // the worker returns whether it panicked
+                .spawn(move || {
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        RefreshLoop::new(&job, &sup).run(&stop, &stats_out);
+                    }))
+                    .is_err()
+                })
+                .expect("spawn refresh worker: the OS refused a thread")
+        };
+        // monitor this generation until it exits, hangs, or stop rises
+        let mut last_beat = heartbeat.load(Ordering::Acquire);
+        let mut last_change = Instant::now();
+        let hung = loop {
+            if worker.is_finished() || stop.load(Ordering::Relaxed) {
+                break false;
+            }
+            let beat = heartbeat.load(Ordering::Acquire);
+            if beat != last_beat {
+                last_beat = beat;
+                last_change = Instant::now();
+            } else if last_change.elapsed() > job.cfg.watchdog_timeout {
+                break true;
+            }
+            std::thread::sleep(poll);
+        };
+        if hung {
+            // stuck mid-install: bump the generation so the stuck
+            // worker self-neuters when (if) it wakes, leave it detached
+            // rather than joining a thread that may never return, and
+            // respawn from the checkpoint
+            generation.fetch_add(1, Ordering::AcqRel);
+            record_restart(job, &checkpoint, stats_out, false);
+            continue;
+        }
+        if stop.load(Ordering::Relaxed) {
+            // orderly shutdown — but never block it on a worker that is
+            // hung *right now*: abandon instead of joining
+            if !worker.is_finished() && last_change.elapsed() > job.cfg.watchdog_timeout
+            {
+                generation.fetch_add(1, Ordering::AcqRel);
+                return;
+            }
+            if worker.join().unwrap_or(true) {
+                record_restart(job, &checkpoint, stats_out, true);
+            }
+            return;
+        }
+        // the worker exited on its own without stop: the only path here
+        // for a live (non-abandoned) generation is an absorbed panic
+        if worker.join().unwrap_or(true) {
+            record_restart(job, &checkpoint, stats_out, true);
+            continue;
+        }
+        return;
+    }
+}
+
+/// Fold one watchdog restart (and, when `panicked`, the absorbed
+/// panic) into the checkpoint the next generation resumes from, and
+/// republish the stats so [`Refresher::stats`] never under-reports a
+/// dead worker between generations — the satellite fix for silently
+/// swallowed refresh-thread panics.
+fn record_restart(
+    job: &Arc<RefreshJob>,
+    checkpoint: &Mutex<Option<Checkpoint>>,
+    stats_out: &Mutex<RefreshStats>,
+    panicked: bool,
+) {
+    let mut slot = lock_unpoisoned(checkpoint);
+    let ck = slot.get_or_insert_with(|| Checkpoint {
+        budgets: job.shard_budgets.clone(),
+        planned: planned_map(&job.planned_visits),
+        stats: RefreshStats {
+            shard_replans: vec![0; job.runtime.n_shards()],
+            shard_budgets: job.shard_budgets.clone(),
+            ..Default::default()
+        },
+    });
+    ck.stats.watchdog_restarts += 1;
+    if panicked {
+        ck.stats.refresh_panics += 1;
+    }
+    *lock_unpoisoned(stats_out) = ck.stats.clone();
 }
 
 /// A sparse exponentially decayed mass profile with O(touched) updates.
@@ -613,6 +858,9 @@ fn masked_profile(
 /// and decayed peak claim.
 struct RefreshLoop<'j> {
     job: &'j RefreshJob,
+    /// This generation's watchdog handles (heartbeat, abandonment
+    /// check, checkpoint slot).
+    sup: &'j Supervision,
     router: ShardRouter,
     n_shards: usize,
     /// Current per-shard budgets (moves under `rebalance=on`).
@@ -632,48 +880,60 @@ struct RefreshLoop<'j> {
     /// rate so a lightened workload returns memory to the caches.
     peak_inputs: f64,
     batches_pending: u64,
+    /// When each currently degraded shard entered degraded mode
+    /// (repair-latency accounting; `None` = healthy).
+    degraded_since: Vec<Option<Instant>>,
     stats: RefreshStats,
 }
 
 impl<'j> RefreshLoop<'j> {
-    fn new(job: &'j RefreshJob) -> RefreshLoop<'j> {
+    fn new(job: &'j RefreshJob, sup: &'j Supervision) -> RefreshLoop<'j> {
         let n_shards = job.runtime.n_shards();
-        let planned: HashMap<u64, f64> = job
-            .planned_visits
-            .iter()
-            .enumerate()
-            .filter(|&(_, &c)| c > 0)
-            .map(|(v, &c)| (v as u64, c as f64))
-            .collect();
         let caps = job.tracker.heavy_hitter_caps();
         let global: u64 = job.shard_budgets.iter().sum();
-        RefreshLoop {
+        let mut l = RefreshLoop {
             job,
+            sup,
             router: job.runtime.router().clone(),
             n_shards,
             budgets: job.shard_budgets.clone(),
             global,
             startup_global: global,
-            planned,
+            planned: planned_map(&job.planned_visits),
             acc_nv: DecayedSparse::new(caps.map(|(n, _)| n)),
             acc_ec: DecayedSparse::new(caps.map(|(_, e)| e)),
             acc_ts: 0.0,
             acc_tf: 0.0,
             peak_inputs: 0.0,
             batches_pending: 0,
+            degraded_since: (0..n_shards)
+                .map(|s| job.runtime.is_degraded(s).then(Instant::now))
+                .collect(),
             stats: RefreshStats {
                 shard_replans: vec![0; n_shards],
                 shard_budgets: job.shard_budgets.clone(),
                 ..Default::default()
             },
+        };
+        // a respawned generation resumes from the previous one's
+        // durable state; the decayed traffic accumulators rebuild from
+        // live windows (startup_global stays the true startup value so
+        // auto_budget_delta keeps its baseline across restarts)
+        if let Some(ck) = lock_unpoisoned(&sup.checkpoint).clone() {
+            l.budgets = ck.budgets;
+            l.global = l.budgets.iter().sum();
+            l.planned = ck.planned;
+            l.stats = ck.stats;
         }
+        l
     }
 
     fn run(&mut self, stop: &AtomicBool, stats_out: &Mutex<RefreshStats>) {
         let cfg = &self.job.cfg;
         while !stop.load(Ordering::Relaxed) {
+            self.sup.beat();
             sleep_interruptibly(cfg.check_interval, stop);
-            if stop.load(Ordering::Relaxed) {
+            if stop.load(Ordering::Relaxed) || self.sup.abandoned() {
                 break;
             }
             // idle server: skip the drain entirely
@@ -699,16 +959,36 @@ impl<'j> RefreshLoop<'j> {
             if cfg.rebalance || cfg.auto_budget_refresh {
                 self.rebalance_pass();
             }
+            // repairs before drift: a degraded shard serves every read
+            // from host memory, so promoting it back outranks re-tuning
+            // healthy shards' contents
+            self.repair_pass();
             self.drift_pass();
+            if self.sup.abandoned() {
+                return;
+            }
             self.stats.shard_budgets = self.budgets.clone();
-            *stats_out.lock().unwrap() = self.stats.clone();
+            *lock_unpoisoned(stats_out) = self.stats.clone();
+            *lock_unpoisoned(&self.sup.checkpoint) = Some(Checkpoint {
+                budgets: self.budgets.clone(),
+                planned: self.planned.clone(),
+                stats: self.stats.clone(),
+            });
+        }
+        if self.sup.abandoned() {
+            return;
         }
         self.stats.shard_budgets = self.budgets.clone();
-        *stats_out.lock().unwrap() = self.stats.clone();
+        *lock_unpoisoned(stats_out) = self.stats.clone();
     }
 
     /// Drain the tracker and fold the window into the decayed state.
     fn drain_window(&mut self) {
+        if let Some(f) = &self.job.fault {
+            if f.drain_panic() {
+                panic!("injected fault: tracker drain panic");
+            }
+        }
         let cfg = &self.job.cfg;
         let drain0 = Instant::now();
         let w = self.job.tracker.drain();
@@ -742,7 +1022,7 @@ impl<'j> RefreshLoop<'j> {
             shard_drifts_sparse(&self.planned, &self.acc_nv, &self.router, self.n_shards);
         self.stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
         let any_drifted = drifts.iter().any(|&d| d > cfg.drift_threshold);
-        let drifted: Vec<usize> = if cfg.per_shard || self.n_shards == 1 {
+        let mut drifted: Vec<usize> = if cfg.per_shard || self.n_shards == 1 {
             (0..self.n_shards)
                 .filter(|&s| drifts[s] > cfg.drift_threshold)
                 .collect()
@@ -751,6 +1031,10 @@ impl<'j> RefreshLoop<'j> {
         } else {
             Vec::new()
         };
+        // degraded shards belong to the repair pass that already ran
+        // this check — re-firing their install from here would burn a
+        // second attempt (and its backoff) on the same shard
+        drifted.retain(|&s| !self.job.runtime.is_degraded(s));
         // re-plan each drifted shard on this thread from the decayed
         // profile masked to the shard's own nodes, within the shard's
         // own (current) budget, and hot-swap only that shard; the
@@ -839,12 +1123,52 @@ impl<'j> RefreshLoop<'j> {
         self.stats.auto_budget_delta = self.global as i64 - self.startup_global as i64;
     }
 
+    /// Degraded-mode repair: re-attempt a full install for every shard
+    /// currently serving from host memory, promoting each back on
+    /// success (inside [`RefreshLoop::replan_shard`]). Runs every
+    /// check, so repair latency is bounded by the check cadence plus
+    /// the install retries themselves — the bound `benches/chaos.rs`
+    /// gates.
+    fn repair_pass(&mut self) {
+        for s in 0..self.n_shards {
+            if self.job.runtime.is_degraded(s) {
+                self.replan_shard(s, self.budgets[s]);
+            }
+        }
+    }
+
+    /// One exponential-backoff pause before (1-based) retry `attempt`.
+    fn backoff(&mut self, attempt: u32) {
+        self.stats.install_retries += 1;
+        let pause = self.job.cfg.install_backoff * (1u32 << (attempt - 1).min(10));
+        let b0 = Instant::now();
+        std::thread::sleep(pause);
+        self.stats.backoff_ns += b0.elapsed().as_nanos() as f64;
+    }
+
+    /// Check one injection site against the attached fault plan
+    /// (always false — one pointer null-check — with no plan).
+    fn injected(&self, site: impl Fn(&FaultPlan) -> bool) -> bool {
+        self.job.fault.as_deref().is_some_and(site)
+    }
+
     /// Re-plan shard `s` within `budget` from the masked decayed
     /// profile and hot-swap it, with two-phase claim-before-release
-    /// device accounting when a device group is attached. Returns
-    /// whether the install happened (false = skipped on device OOM).
+    /// device accounting when a device group is attached. Claim and
+    /// fill failures (injected or real) retry under bounded exponential
+    /// backoff; a claim that still fails is skipped (`install_ooms`,
+    /// the old epoch keeps serving — the PR 5 path) while a fill that
+    /// still fails is terminal and degrades the shard to host reads
+    /// until the repair pass promotes it back. Returns whether the
+    /// install happened.
     fn replan_shard(&mut self, s: usize, budget: u64) -> bool {
+        if self.sup.abandoned() {
+            // a newer generation owns the runtime: stop touching it
+            return false;
+        }
+        self.sup.beat();
         let t0 = Instant::now();
+        let repairing = self.job.runtime.is_degraded(s);
         let (nv, ec) =
             masked_profile(&self.job.ds.csc, &self.acc_nv, &self.acc_ec, &self.router, s);
         let profile = WorkloadProfile {
@@ -856,39 +1180,117 @@ impl<'j> RefreshLoop<'j> {
         let plan = self.job.planner.plan(&self.job.ds, &profile, budget);
         let install_bytes = plan.fill_ledger.h2d_bytes;
         let new_bytes = plan.snapshot.bytes_used();
-        if let Some(dev) = &self.job.device {
-            // only this thread installs, so the live snapshot's bytes
-            // cannot change between this read and the swap below
-            let old_bytes = self.job.runtime.shard(s).load().bytes_used();
-            // phase 1 — claim the incoming epoch while the outgoing one
-            // is still resident (readers may serve one more batch from
-            // it). The transient may dip into the reserve; that is the
-            // reserve's job.
-            let mut released_first = false;
-            if dev.alloc_unreserved(s, new_bytes).is_err() {
-                // the overlap exceeds even the reserve: fall back to
-                // release-then-claim (the simulation keeps serving the
-                // old Arc regardless; a real deployment would stage
-                // through host memory here)
-                dev.free(s, old_bytes);
+
+        // injected hang: the stall sits before any claim, so a
+        // generation the watchdog abandons mid-hang holds no device
+        // bytes and exits without rollback when it wakes
+        if let Some(ms) = self.job.fault.as_deref().and_then(|f| f.install_hang_ms(s))
+        {
+            std::thread::sleep(Duration::from_millis(ms));
+            if self.sup.abandoned() {
+                return false;
+            }
+        }
+
+        // phase 1 — claim the incoming epoch while the outgoing one is
+        // still resident (readers may serve one more batch from it).
+        // The transient may dip into the reserve; that is the reserve's
+        // job. Only this thread installs, so the live snapshot's bytes
+        // cannot change between this read and the swap below.
+        let dev = self.job.device.as_ref();
+        let old_bytes = self.job.runtime.shard(s).load().bytes_used();
+        let mut released_first = false;
+        let mut claimed = false;
+        for attempt in 0..=self.job.cfg.install_retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            if self.injected(|f| f.install_oom(s)) {
+                continue;
+            }
+            let Some(d) = dev else {
+                claimed = true;
+                break;
+            };
+            if d.alloc_unreserved(s, new_bytes).is_ok() {
+                claimed = true;
+                break;
+            }
+            // the overlap exceeds even the reserve: fall back to
+            // release-then-claim (the simulation keeps serving the old
+            // Arc regardless; a real deployment would stage through
+            // host memory here)
+            if !released_first {
+                d.free(s, old_bytes);
                 released_first = true;
-                if dev.alloc_unreserved(s, new_bytes).is_err() {
-                    // cannot fit even alone: restore the old claim and
-                    // keep serving the old epoch
-                    let _ = dev.alloc_unreserved(s, old_bytes);
-                    self.stats.install_ooms += 1;
-                    return false;
+            }
+            if d.alloc_unreserved(s, new_bytes).is_ok() {
+                claimed = true;
+                break;
+            }
+        }
+        if !claimed {
+            // cannot fit even alone after the retry budget: restore the
+            // old claim and keep serving the old epoch
+            if released_first {
+                if let Some(d) = dev {
+                    let _ = d.alloc_unreserved(s, old_bytes);
                 }
             }
+            self.stats.install_ooms += 1;
+            return false;
+        }
+        if let Some(d) = dev {
             self.stats.max_transient_bytes =
-                self.stats.max_transient_bytes.max(dev.used(s));
-            self.job.runtime.install_shard(s, plan.snapshot);
-            // phase 2 — release the outgoing epoch's claim
-            if !released_first {
-                dev.free(s, old_bytes);
+                self.stats.max_transient_bytes.max(d.used(s));
+        }
+
+        // the host→device fill. The simulated transfer cannot fail on
+        // its own, but the fault plan can make it: unlike a claim OOM,
+        // a transfer that keeps failing leaves the device copy
+        // untrustworthy, so exhausting the budget here is terminal.
+        let mut transferred = false;
+        for attempt in 0..=self.job.cfg.install_retries {
+            if attempt > 0 {
+                self.backoff(attempt);
             }
-        } else {
-            self.job.runtime.install_shard(s, plan.snapshot);
+            if self.injected(|f| f.install_error(s)) {
+                continue;
+            }
+            transferred = true;
+            break;
+        }
+        if !transferred {
+            // terminal: release every device claim, publish an empty
+            // snapshot, and mark the shard degraded — views bypass the
+            // cache and read host memory (correct, just slower) until
+            // the repair pass lands
+            if let Some(d) = dev {
+                d.free(s, new_bytes);
+                if !released_first {
+                    d.free(s, old_bytes);
+                }
+            }
+            if self.job.runtime.mark_degraded(s) {
+                self.stats.shard_degrades += 1;
+                self.degraded_since[s] = Some(Instant::now());
+            }
+            self.job.runtime.install_shard(s, CacheSnapshot::empty());
+            return false;
+        }
+
+        self.job.runtime.install_shard(s, plan.snapshot);
+        // phase 2 — release the outgoing epoch's claim
+        if !released_first {
+            if let Some(d) = dev {
+                d.free(s, old_bytes);
+            }
+        }
+        if repairing && self.job.runtime.mark_repaired(s) {
+            self.stats.shard_repairs += 1;
+            if let Some(since) = self.degraded_since[s].take() {
+                self.stats.repair_wall_ns += since.elapsed().as_nanos() as f64;
+            }
         }
         self.stats.fill_h2d_bytes += install_bytes;
         self.stats.max_install_h2d_bytes =
@@ -1421,6 +1823,7 @@ mod tests {
             rebalance_threshold: 0.1,
             rebalance_floor: 0.1,
             auto_budget_refresh: true,
+            ..RefreshConfig::default()
         };
         let r = RefreshJob::new(
             Arc::clone(&ds),
@@ -1451,5 +1854,197 @@ mod tests {
         assert_eq!(stats.auto_budget_delta, 460_000 - 300_000);
         assert!(stats.shard_rebalances >= 1);
         assert!(runtime.swaps() >= 1, "the budget change re-plans the shard");
+    }
+
+    /// Forced-drift wiring shared by the fault tests: tiny dataset, a
+    /// single-shard empty runtime, a dense tracker, and a baseline
+    /// concentrated on node 0 so traffic on node 1 always drifts.
+    fn drift_fixture() -> (Arc<Dataset>, Arc<ShardedRuntime>, Arc<AccessTracker>, Vec<u32>)
+    {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
+        let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+        let mut planned = vec![0u32; ds.csc.n_nodes()];
+        planned[0] = 100;
+        (ds, runtime, tracker, planned)
+    }
+
+    fn drift_wave(tracker: &AccessTracker) {
+        for _ in 0..50 {
+            tracker.record_node(1);
+        }
+        tracker.record_batch(50.0, 50.0, 50);
+    }
+
+    #[test]
+    fn install_retry_backs_off_through_transient_claim_ooms() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let cfg = RefreshConfig {
+            install_backoff: Duration::from_millis(1),
+            ..fast_cfg(0.3)
+        };
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            cfg,
+        )
+        .fault(Arc::new(FaultPlan::parse("oom@0x2").unwrap()))
+        .spawn();
+        drift_wave(&tracker);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = r.stop();
+        assert!(stats.replans >= 1, "{stats:?}");
+        assert_eq!(stats.install_ooms, 0, "retries must absorb transient OOMs: {stats:?}");
+        assert_eq!(stats.install_retries, 2, "one backoff per injected OOM: {stats:?}");
+        assert!(stats.backoff_ns > 0.0);
+        assert_eq!(stats.shard_degrades, 0);
+        assert!(runtime.swaps() >= 1, "the third attempt must land");
+    }
+
+    #[test]
+    fn claim_oom_exhausting_retries_keeps_the_old_epoch() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let cfg = RefreshConfig {
+            install_backoff: Duration::from_millis(1),
+            ..fast_cfg(0.3)
+        };
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            cfg,
+        )
+        .fault(Arc::new(FaultPlan::parse("oom@0x100").unwrap()))
+        .spawn();
+        drift_wave(&tracker);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while r.stats().install_ooms == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = r.stop();
+        assert!(stats.install_ooms >= 1, "exhausted retries must count: {stats:?}");
+        assert!(stats.install_retries >= 3, "the full retry budget was spent: {stats:?}");
+        assert_eq!(stats.replans, 0, "no install may land: {stats:?}");
+        assert_eq!(runtime.swaps(), 0, "the old epoch must keep serving");
+        assert_eq!(stats.shard_degrades, 0, "a claim OOM skips, never degrades");
+    }
+
+    #[test]
+    fn transfer_error_degrades_the_shard_and_repair_promotes_it_back() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let device =
+            Arc::new(DeviceGroup::replicate(&DeviceMemory::new(10 << 20, 1 << 16), 1));
+        let cfg = RefreshConfig {
+            install_backoff: Duration::from_millis(1),
+            ..fast_cfg(0.3)
+        };
+        // install_retries = 3 → 4 attempts; err@0x4 makes exactly the
+        // first install terminal and lets the first repair succeed
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            cfg,
+        )
+        .device(Arc::clone(&device))
+        .fault(Arc::new(FaultPlan::parse("err@0x4").unwrap()))
+        .spawn();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while r.stats().shard_repairs == 0 && Instant::now() < deadline {
+            drift_wave(&tracker);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let stats = r.stop();
+        assert_eq!(stats.shard_degrades, 1, "{stats:?}");
+        assert_eq!(stats.shard_repairs, 1, "{stats:?}");
+        assert!(stats.repair_wall_ns > 0.0);
+        assert!(stats.install_retries >= 3, "the fill burned its retry budget: {stats:?}");
+        assert!(!runtime.is_degraded(0), "the shard must be promoted back");
+        assert!(
+            runtime.swaps() >= 2,
+            "degrade installs empty, repair installs real: {stats:?}"
+        );
+        // device ledger consistent through degrade + repair: it holds
+        // exactly the live snapshot's bytes, nothing leaked
+        assert_eq!(device.used(0), runtime.shard(0).load().bytes_used());
+        assert!(runtime.load().feat.as_ref().unwrap().contains(1));
+    }
+
+    #[test]
+    fn drain_panic_is_absorbed_and_the_watchdog_respawns() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            fast_cfg(0.3),
+        )
+        .fault(Arc::new(FaultPlan::parse("drain").unwrap()))
+        .spawn();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            drift_wave(&tracker);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let stats = r.stop();
+        assert_eq!(stats.refresh_panics, 1, "the panic must be surfaced: {stats:?}");
+        assert_eq!(stats.watchdog_restarts, 1, "{stats:?}");
+        assert!(
+            stats.replans >= 1,
+            "the respawned generation must keep re-planning: {stats:?}"
+        );
+        assert!(runtime.swaps() >= 1);
+    }
+
+    #[test]
+    fn hung_install_is_abandoned_and_a_fresh_generation_takes_over() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let cfg = RefreshConfig {
+            watchdog_timeout: Duration::from_millis(100),
+            ..fast_cfg(0.3)
+        };
+        let r = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            cfg,
+        )
+        .fault(Arc::new(FaultPlan::parse("hang@0~400").unwrap()))
+        .spawn();
+        // the first install stalls 400 ms; the 100 ms watchdog abandons
+        // it and the respawn (fault exhausted) installs for real
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while runtime.swaps() == 0 && Instant::now() < deadline {
+            drift_wave(&tracker);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // let the hung generation wake up and self-neuter before
+        // checking the counters
+        std::thread::sleep(Duration::from_millis(450));
+        let stats = r.stop();
+        assert_eq!(stats.watchdog_restarts, 1, "{stats:?}");
+        assert_eq!(stats.refresh_panics, 0, "a hang is not a panic: {stats:?}");
+        assert!(stats.replans >= 1, "{stats:?}");
+        assert!(runtime.swaps() >= 1);
+        assert!(!runtime.is_degraded(0));
     }
 }

@@ -32,9 +32,19 @@
 //!    `Arc` finishes; nothing blocks on their retirement.
 //! 4. Every snapshot's `bytes_used()` stays within the budget the
 //!    runtime was planned for; installs never grow the device claim.
+//!
+//! The publish lock only ever guards a whole-`Arc` pointer swap, so a
+//! reader or installer that panics mid-batch can never leave it
+//! half-updated — every lock here goes through
+//! [`lock_unpoisoned`](crate::util::lock_unpoisoned), and a panicked
+//! refresh generation costs nothing to readers (DESIGN.md §Fault
+//! tolerance; degraded-shard fallback lives one level up in
+//! [`crate::cache::shard::ShardedRuntime`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::util::lock_unpoisoned;
 
 use super::adj_cache::AdjCache;
 use super::alloc::CacheAllocation;
@@ -109,7 +119,7 @@ impl DualCacheRuntime {
     /// finish on the snapshot they already hold.
     pub fn install(&self, snapshot: CacheSnapshot) -> u64 {
         let mut s = snapshot;
-        let mut guard = self.current.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.current);
         let e = guard.epoch + 1;
         s.epoch = e;
         *guard = Arc::new(s);
@@ -127,7 +137,7 @@ impl DualCacheRuntime {
     /// Current snapshot (takes the publish lock — reporting/startup
     /// path; batch loops go through a [`SnapshotHandle`] instead).
     pub fn load(&self) -> Arc<CacheSnapshot> {
-        Arc::clone(&self.current.lock().unwrap())
+        Arc::clone(&lock_unpoisoned(&self.current))
     }
 
     /// Published epoch of the live snapshot.
@@ -223,7 +233,7 @@ impl SnapshotHandle {
             // MAX_DEFERRALS of our batch boundaries — wait it out
             // rather than lag further, and record the stall
             self.rt.stalls.fetch_add(1, Ordering::Relaxed);
-            self.cached = Arc::clone(&self.rt.current.lock().unwrap());
+            self.cached = Arc::clone(&lock_unpoisoned(&self.rt.current));
             self.deferred_streak = 0;
             return;
         }

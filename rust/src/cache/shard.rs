@@ -34,6 +34,7 @@
 //! gather results and logits are bit-identical to the unsharded
 //! runtime at any shard count (held by the property tests).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::graph::{Csc, Dataset, NodeId};
@@ -78,10 +79,19 @@ impl ShardRouter {
 }
 
 /// One logical snapshot sharded across N devices: a [`DualCacheRuntime`]
-/// per shard plus the router that assigns nodes to shards.
+/// per shard plus the router that assigns nodes to shards, and a
+/// degraded-shard bitmask for fault tolerance (DESIGN.md §Fault
+/// tolerance): a shard whose device install failed terminally is marked
+/// degraded, and every [`ShardView`] bypasses its caches — feature
+/// lookups miss to host memory, adjacency reads take the UVA path — so
+/// serving stays correct (same bytes, no cache) until the repair loop
+/// re-installs the shard and promotes it back.
 pub struct ShardedRuntime {
     router: ShardRouter,
     shards: Vec<Arc<DualCacheRuntime>>,
+    /// Bit `s` set = shard `s` is degraded (config caps `shards ≤ 64`,
+    /// so one word covers every deployment).
+    degraded: AtomicU64,
 }
 
 impl ShardedRuntime {
@@ -93,11 +103,15 @@ impl ShardedRuntime {
             snapshots.len(),
             "one initial snapshot per shard"
         );
+        assert!(
+            router.n_shards() <= 64,
+            "the degraded bitmask models at most 64 shards (config enforces this)"
+        );
         let shards = snapshots
             .into_iter()
             .map(|s| Arc::new(DualCacheRuntime::new(s)))
             .collect();
-        ShardedRuntime { router, shards }
+        ShardedRuntime { router, shards, degraded: AtomicU64::new(0) }
     }
 
     /// The unsharded (single-device) runtime — the PR 2 shape.
@@ -169,6 +183,40 @@ impl ShardedRuntime {
     pub fn swap_deferrals(&self) -> u64 {
         self.shards.iter().map(|s| s.swap_deferrals()).sum()
     }
+
+    /// Mark shard `s` degraded: every view acquired from now on
+    /// bypasses its caches and reads from host memory. Returns whether
+    /// the shard was healthy before (false = it was already degraded).
+    pub fn mark_degraded(&self, s: usize) -> bool {
+        assert!(s < self.shards.len(), "shard {s} out of range");
+        let prev = self.degraded.fetch_or(1 << s, Ordering::AcqRel);
+        prev & (1 << s) == 0
+    }
+
+    /// Promote shard `s` back to healthy after a successful repair
+    /// install. Returns whether the shard was degraded before.
+    pub fn mark_repaired(&self, s: usize) -> bool {
+        assert!(s < self.shards.len(), "shard {s} out of range");
+        let prev = self.degraded.fetch_and(!(1 << s), Ordering::AcqRel);
+        prev & (1 << s) != 0
+    }
+
+    /// Is shard `s` currently degraded?
+    pub fn is_degraded(&self, s: usize) -> bool {
+        self.degraded_mask() & (1 << s) != 0
+    }
+
+    /// The degraded-shard bitmask (bit `s` = shard `s` degraded).
+    /// Views snapshot this once per batch, so a batch sees one
+    /// consistent health state per shard end to end.
+    pub fn degraded_mask(&self) -> u64 {
+        self.degraded.load(Ordering::Acquire)
+    }
+
+    /// How many shards are currently degraded.
+    pub fn degraded_count(&self) -> u32 {
+        self.degraded_mask().count_ones()
+    }
 }
 
 /// A per-thread cursor over every shard's epochs: one
@@ -196,23 +244,38 @@ impl ShardedHandle {
         for h in &mut self.handles {
             h.acquire();
         }
-        ShardView { router: self.rt.router(), handles: &self.handles }
+        ShardView {
+            router: self.rt.router(),
+            handles: &self.handles,
+            degraded: self.rt.degraded_mask(),
+        }
     }
 }
 
 /// The per-batch read view over all shards: routes feature lookups and
-/// adjacency reads to the shard that owns each node.
+/// adjacency reads to the shard that owns each node. Shards whose
+/// degraded bit is set in the view's health mask are bypassed — their
+/// reads fall back to host memory exactly like a cacheless shard.
 #[derive(Clone, Copy)]
 pub struct ShardView<'a> {
     router: &'a ShardRouter,
     handles: &'a [SnapshotHandle],
+    /// Degraded-shard bitmask as of this batch's acquire.
+    degraded: u64,
 }
 
 impl<'a> ShardView<'a> {
-    /// A view over externally managed handles (stage-level tests).
+    /// A view over externally managed handles (stage-level tests); all
+    /// shards healthy.
     pub fn over(router: &'a ShardRouter, handles: &'a [SnapshotHandle]) -> ShardView<'a> {
         assert_eq!(router.n_shards(), handles.len());
-        ShardView { router, handles }
+        ShardView { router, handles, degraded: 0 }
+    }
+
+    /// Is shard `s` degraded in this batch's view?
+    #[inline]
+    pub fn is_degraded(&self, s: usize) -> bool {
+        self.degraded & (1 << s) != 0
     }
 
     /// Number of shards this view reads across.
@@ -231,22 +294,37 @@ impl<'a> ShardView<'a> {
         self.handles[s].peek()
     }
 
-    /// Does any shard carry a feature cache? (`false` = the cacheless
-    /// DGL/RAIN gather path.)
+    /// Does any healthy shard carry a feature cache? (`false` = the
+    /// cacheless DGL/RAIN gather path.)
     pub fn has_feat_cache(&self) -> bool {
-        self.handles.iter().any(|h| h.peek().feat.is_some())
+        self.handles
+            .iter()
+            .enumerate()
+            .any(|(s, h)| !self.is_degraded(s) && h.peek().feat.is_some())
     }
 
     /// Routed feature lookup: `v`'s row from the shard that owns it.
+    /// Degraded shards always miss (the gather stage then copies the
+    /// identical bytes from the host store — correctness preserved,
+    /// cache bypassed).
     #[inline]
     pub fn feat_lookup(&self, v: NodeId) -> Option<&'a [f32]> {
         let s = self.router.shard_of(v);
+        if self.is_degraded(s) {
+            return None;
+        }
         self.handles[s].peek().feat.as_ref()?.lookup(v)
     }
 
-    /// Routed adjacency reads over `csc` (misses fall back to UVA).
+    /// Routed adjacency reads over `csc` (misses and degraded shards
+    /// fall back to UVA).
     pub fn adj_source<'b>(&'b self, csc: &'b Csc) -> RoutedAdj<'b> {
-        RoutedAdj { router: self.router, handles: self.handles, csc }
+        RoutedAdj {
+            router: self.router,
+            handles: self.handles,
+            csc,
+            degraded: self.degraded,
+        }
     }
 
     /// Highest epoch across the shards this batch reads
@@ -269,6 +347,8 @@ pub struct RoutedAdj<'a> {
     router: &'a ShardRouter,
     handles: &'a [SnapshotHandle],
     csc: &'a Csc,
+    /// Degraded-shard bitmask as of the owning view's acquire.
+    degraded: u64,
 }
 
 impl<'a> AdjSource for RoutedAdj<'a> {
@@ -280,6 +360,11 @@ impl<'a> AdjSource for RoutedAdj<'a> {
     #[inline]
     fn neighbor_at(&self, v: NodeId, pos: usize, ledger: &mut TransferLedger) -> NodeId {
         let s = self.router.shard_of(v);
+        if self.degraded & (1 << s) != 0 {
+            // degraded shard: same neighbor, read over UVA
+            ledger.miss(std::mem::size_of::<NodeId>() as u64, 1);
+            return self.csc.neighbors(v)[pos];
+        }
         match &self.handles[s].peek().adj {
             Some(cache) => cache.source(self.csc).neighbor_at(v, pos, ledger),
             None => {
@@ -595,6 +680,77 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn degraded_shard_bypasses_feat_cache_until_repaired() {
+        let fs = FeatureStore::generate(64, 4, &mut Rng::new(3));
+        let router = ShardRouter::new(2);
+        let visits: Vec<u32> =
+            (0..64).map(|v| u32::from(router.shard_of(v as NodeId) == 0)).collect();
+        let cap = 64 * (fs.row_bytes() + 16);
+        let (feat0, _) = FeatCache::fill(&fs, &mask_node_counts(&visits, &router, 0), cap);
+        let rt = Arc::new(ShardedRuntime::new(
+            ShardRouter::new(2),
+            vec![
+                CacheSnapshot::new(None, Some(feat0), None),
+                CacheSnapshot::empty(),
+            ],
+        ));
+        let mut h = ShardedHandle::new(&rt);
+        let hot: NodeId = (0..64)
+            .find(|&v| router.shard_of(v) == 0)
+            .expect("shard 0 owns some node");
+        assert!(h.acquire().feat_lookup(hot).is_some(), "healthy shard serves from cache");
+
+        assert!(rt.mark_degraded(0), "first mark reports the transition");
+        assert!(!rt.mark_degraded(0), "re-marking is idempotent");
+        assert!(rt.is_degraded(0));
+        assert_eq!(rt.degraded_count(), 1);
+        let view = h.acquire();
+        assert!(view.is_degraded(0));
+        assert!(!view.has_feat_cache(), "the only cached shard is degraded");
+        for v in 0..64u32 {
+            assert!(view.feat_lookup(v).is_none(), "degraded reads must miss to host");
+        }
+
+        assert!(rt.mark_repaired(0), "repair reports the transition");
+        assert!(!rt.mark_repaired(0), "re-repairing is idempotent");
+        assert_eq!(rt.degraded_count(), 0);
+        let view = h.acquire();
+        assert!(view.has_feat_cache());
+        assert!(view.feat_lookup(hot).is_some(), "repaired shard serves from cache again");
+    }
+
+    #[test]
+    fn degraded_adj_reads_return_the_same_neighbors_over_uva() {
+        use crate::cache::adj_cache::AdjCache;
+        let ds = datasets::spec("tiny").unwrap().build();
+        let counts = vec![1u32; ds.csc.n_edges()];
+        let (adj, _) = AdjCache::fill(&ds.csc, &counts, ds.csc.bytes_total());
+        assert!(adj.is_full_csc());
+        let rt = Arc::new(ShardedRuntime::single(CacheSnapshot::new(
+            Some(adj),
+            None,
+            None,
+        )));
+        let mut h = ShardedHandle::new(&rt);
+
+        let view = h.acquire();
+        let src = view.adj_source(&ds.csc);
+        let mut healthy = TransferLedger::new();
+        let before: Vec<NodeId> =
+            (0..ds.csc.degree(0)).map(|p| src.neighbor_at(0, p, &mut healthy)).collect();
+        assert!(healthy.hits > 0 && healthy.misses == 0, "full-CSC cache hits");
+
+        rt.mark_degraded(0);
+        let view = h.acquire();
+        let src = view.adj_source(&ds.csc);
+        let mut degraded = TransferLedger::new();
+        let after: Vec<NodeId> =
+            (0..ds.csc.degree(0)).map(|p| src.neighbor_at(0, p, &mut degraded)).collect();
+        assert_eq!(before, after, "degraded reads return identical neighbors");
+        assert!(degraded.hits == 0 && degraded.misses > 0, "…over the UVA miss path");
     }
 
     #[test]

@@ -158,6 +158,11 @@ pub struct RunConfig {
     pub seed: u64,
     /// Artifacts directory for the PJRT backend.
     pub artifacts_dir: String,
+    /// Deterministic fault-injection spec (`fault=oom@0x2,drain`; see
+    /// [`crate::util::FaultPlan`] for the grammar). `None` = no faults,
+    /// and the injection sites cost one pointer null-check. Chaos
+    /// testing only — never set in production runs.
+    pub fault: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -182,6 +187,7 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
+            fault: None,
         }
     }
 }
@@ -214,6 +220,10 @@ pub const VALID_KEYS: &[&str] = &[
     "rebalance-threshold",
     "rebalance-floor",
     "auto-budget-refresh",
+    "install-retries",
+    "install-backoff-ms",
+    "watchdog-ms",
+    "fault",
     "tracker",
     "sketch-width",
     "sketch-depth",
@@ -370,6 +380,37 @@ impl RunConfig {
                         .get_or_insert_with(RefreshConfig::default)
                         .auto_budget_refresh = on;
                 }
+                "install-retries" => {
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .install_retries = value.parse().context("install-retries")?;
+                }
+                "install-backoff-ms" => {
+                    let ms: u64 = value.parse().context("install-backoff-ms")?;
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .install_backoff = Duration::from_millis(ms);
+                }
+                "watchdog-ms" => {
+                    let ms: u64 = value.parse().context("watchdog-ms")?;
+                    if ms == 0 {
+                        bail!("watchdog-ms must be positive (hang-detection timeout)");
+                    }
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .watchdog_timeout = Duration::from_millis(ms);
+                }
+                "fault" => {
+                    self.fault = match value {
+                        "off" | "none" => None,
+                        spec => {
+                            // validate at parse time so a typoed spec
+                            // fails the run instead of never firing
+                            crate::util::FaultPlan::parse(spec)?;
+                            Some(spec.to_string())
+                        }
+                    };
+                }
                 "tracker" => self.tracker.kind = TrackerKind::parse(value)?,
                 "sketch-width" => {
                     let w: usize = value.parse().context("sketch-width")?;
@@ -442,6 +483,9 @@ impl RunConfig {
         }
         if self.tracker.kind != TrackerKind::Dense {
             s.push_str(&format!(" tracker={}", self.tracker.kind.as_str()));
+        }
+        if let Some(f) = &self.fault {
+            s.push_str(&format!(" fault={f}"));
         }
         s
     }
@@ -642,6 +686,7 @@ mod tests {
                 "tracker" => "sketch",
                 "device" => "1GB",
                 "artifacts" => "artifacts",
+                "fault" => "oom@0",
                 _ => "4",
             };
             let arg = format!("{key}={value}");
@@ -673,6 +718,31 @@ mod tests {
         assert!(RunConfig::from_args(&args(&["sketch-width=0"])).is_err());
         assert!(RunConfig::from_args(&args(&["sketch-depth=0"])).is_err());
         assert!(RunConfig::from_args(&args(&["sketch-depth=17"])).is_err());
+    }
+
+    #[test]
+    fn fault_and_robustness_knobs() {
+        assert!(RunConfig::default().fault.is_none());
+        let cfg = RunConfig::from_args(&args(&["fault=oom@0x2,drain"])).unwrap();
+        assert_eq!(cfg.fault.as_deref(), Some("oom@0x2,drain"));
+        assert!(cfg.summary().contains("fault=oom@0x2,drain"));
+        // off/none disarm; a typoed spec fails at parse time
+        let cfg = RunConfig::from_args(&args(&["fault=oom@0", "fault=off"])).unwrap();
+        assert!(cfg.fault.is_none());
+        assert!(RunConfig::from_args(&args(&["fault=frobnicate@1"])).is_err());
+        // retry/watchdog knobs auto-arm the refresh loop like every
+        // other refresh- key
+        let cfg = RunConfig::from_args(&args(&[
+            "install-retries=5",
+            "install-backoff-ms=2",
+            "watchdog-ms=250",
+        ]))
+        .unwrap();
+        let r = cfg.refresh.unwrap();
+        assert_eq!(r.install_retries, 5);
+        assert_eq!(r.install_backoff, Duration::from_millis(2));
+        assert_eq!(r.watchdog_timeout, Duration::from_millis(250));
+        assert!(RunConfig::from_args(&args(&["watchdog-ms=0"])).is_err());
     }
 
     #[test]

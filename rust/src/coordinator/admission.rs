@@ -83,7 +83,9 @@ impl AdmissionController {
             });
         }
         if let Some((rate, burst)) = self.cfg.per_client_rate {
-            let mut buckets = self.buckets.lock().unwrap();
+            // recoverable on poison: a bucket is always internally
+            // consistent (tokens + stamp updated under one guard)
+            let mut buckets = crate::util::lock_unpoisoned(&self.buckets);
             let now = Instant::now();
             let b = buckets.entry(client.to_string()).or_insert(Bucket {
                 tokens: burst,

@@ -60,6 +60,31 @@ pub struct ServingMetrics {
     /// over workers (nonzero only with `auto-budget-refresh=on` on a
     /// `budget=auto` run).
     pub auto_budget_delta: i64,
+    /// Shard installs retried after a transient device-claim or
+    /// transfer failure (each retry waits out one backoff pause).
+    pub install_retries: u64,
+    /// Background wall time spent in install retry backoff, ns (never
+    /// on the serving path).
+    pub backoff_ns: f64,
+    /// Shards that entered degraded (host-memory fallback) mode after
+    /// an install failed terminally.
+    pub shard_degrades: u64,
+    /// Degraded shards the background repair loop promoted back to a
+    /// healthy device-resident cache.
+    pub shard_repairs: u64,
+    /// Σ wall time shards spent degraded before repair, ns.
+    pub repair_ns: f64,
+    /// Refresh-loop generations the watchdog respawned (after a panic
+    /// or a hang past `watchdog-ms`).
+    pub watchdog_restarts: u64,
+    /// Refresh-loop panics the watchdog absorbed.
+    pub refresh_panics: u64,
+    /// Serving batches retried after an isolated panic (the retry
+    /// replays the identical request; see DESIGN.md §Fault tolerance).
+    pub batch_retries: u64,
+    /// Serving batches that failed after the one retry (clients got an
+    /// error response; the worker kept serving).
+    pub batch_failures: u64,
 }
 
 impl ServingMetrics {
@@ -101,6 +126,15 @@ impl ServingMetrics {
         self.shard_rebalances += other.shard_rebalances;
         self.budget_moved_bytes += other.budget_moved_bytes;
         self.auto_budget_delta += other.auto_budget_delta;
+        self.install_retries += other.install_retries;
+        self.backoff_ns += other.backoff_ns;
+        self.shard_degrades += other.shard_degrades;
+        self.shard_repairs += other.shard_repairs;
+        self.repair_ns += other.repair_ns;
+        self.watchdog_restarts += other.watchdog_restarts;
+        self.refresh_panics += other.refresh_panics;
+        self.batch_retries += other.batch_retries;
+        self.batch_failures += other.batch_failures;
     }
 
     /// Seeds served per second of elapsed wall time.
@@ -122,7 +156,9 @@ impl ServingMetrics {
              stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms\n\
              cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}\n\
              tracker: drain={:.2}ms drained-keys={} dropped-touches={}\n\
-             elastic: rebalances={} moved={} auto-budget-delta={}",
+             elastic: rebalances={} moved={} auto-budget-delta={}\n\
+             fault: retries={} backoff={:.1}ms degrades={} repairs={} ({:.1}ms degraded) \
+             watchdog={} panics={} batch-retry={} batch-fail={}",
             self.requests,
             self.seeds,
             self.batches,
@@ -147,6 +183,15 @@ impl ServingMetrics {
             self.shard_rebalances,
             crate::util::format_bytes(self.budget_moved_bytes),
             self.auto_budget_delta,
+            self.install_retries,
+            self.backoff_ns / 1e6,
+            self.shard_degrades,
+            self.shard_repairs,
+            self.repair_ns / 1e6,
+            self.watchdog_restarts,
+            self.refresh_panics,
+            self.batch_retries,
+            self.batch_failures,
         )
     }
 }
@@ -188,6 +233,15 @@ mod tests {
         b.shard_rebalances = 3;
         b.budget_moved_bytes = 4096;
         b.auto_budget_delta = -512;
+        b.install_retries = 4;
+        b.backoff_ns = 9.0;
+        b.shard_degrades = 2;
+        b.shard_repairs = 1;
+        b.repair_ns = 11.0;
+        b.watchdog_restarts = 1;
+        b.refresh_panics = 1;
+        b.batch_retries = 5;
+        b.batch_failures = 1;
         b.cache.feature.hit(64);
         a.merge(&b);
         assert_eq!(a.requests, 3);
@@ -200,8 +254,18 @@ mod tests {
         assert_eq!(a.budget_moved_bytes, 4096);
         assert_eq!(a.auto_budget_delta, -512);
         assert_eq!(a.cache.feature.hits, 1);
+        assert_eq!(a.install_retries, 4);
+        assert_eq!(a.backoff_ns, 9.0);
+        assert_eq!(a.shard_degrades, 2);
+        assert_eq!(a.shard_repairs, 1);
+        assert_eq!(a.repair_ns, 11.0);
+        assert_eq!(a.watchdog_restarts, 1);
+        assert_eq!(a.refresh_panics, 1);
+        assert_eq!(a.batch_retries, 5);
+        assert_eq!(a.batch_failures, 1);
         let rep = a.report(Duration::from_secs(1));
         assert!(rep.contains("rebalances=3"), "{rep}");
         assert!(rep.contains("auto-budget-delta=-512"), "{rep}");
+        assert!(rep.contains("degrades=2") && rep.contains("batch-fail=1"), "{rep}");
     }
 }

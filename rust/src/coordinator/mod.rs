@@ -48,4 +48,8 @@ pub struct Response {
     pub latency_ns: u64,
     /// Batch the request was served in (observability).
     pub batch_id: u64,
+    /// `Some(reason)` when the batch failed after its one panic-retry:
+    /// `logits` is `None` and the request should be resubmitted. The
+    /// worker itself keeps serving (see DESIGN.md §Fault tolerance).
+    pub error: Option<String>,
 }

@@ -14,6 +14,7 @@
 //! in [`ServingMetrics`] at shutdown (the serving-observability story
 //! DESIGN.md §Workload tracking documents).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -27,6 +28,7 @@ use crate::config::RunConfig;
 use crate::engine::InferenceEngine;
 use crate::graph::Dataset;
 use crate::mem::per_node_claim_bytes;
+use crate::util::lock_unpoisoned;
 
 use super::admission::{AdmissionConfig, AdmissionController};
 use super::batcher::{Batcher, BatcherConfig, PendingBatch};
@@ -133,7 +135,7 @@ impl Server {
     pub fn metrics(&self) -> (ServingMetrics, Duration) {
         let mut all = ServingMetrics::new();
         for m in &self.metrics {
-            all.merge(&m.lock().unwrap());
+            all.merge(&lock_unpoisoned(m));
         }
         (all, self.started.elapsed())
     }
@@ -151,7 +153,7 @@ impl Server {
         }
         let mut all = ServingMetrics::new();
         for m in &metrics {
-            all.merge(&m.lock().unwrap());
+            all.merge(&lock_unpoisoned(m));
         }
         Ok((all, started.elapsed()))
     }
@@ -206,6 +208,11 @@ fn worker_loop(
                 rcfg,
             )
             .device(engine.device_group());
+            // the worker's fault schedule covers its refresh loop too:
+            // one spec, one shared trigger budget across all sites
+            if let Some(f) = engine.fault_plan() {
+                job = job.fault(f);
+            }
             if wire_auto {
                 job = job.auto_budget(AutoBudgetPolicy {
                     headroom_per_device: engine.device.headroom(0),
@@ -224,7 +231,7 @@ fn worker_loop(
     // stop blocks up to one poll interval)
     let refresh_stats = refresher.map(|r| r.stop());
     let stalls = engine.runtime().swap_stalls();
-    let mut m = metrics.lock().unwrap();
+    let mut m = lock_unpoisoned(&metrics);
     if let Some(rs) = refresh_stats {
         m.refreshes += rs.replans;
         m.drift_checks += rs.checks;
@@ -235,6 +242,13 @@ fn worker_loop(
         m.shard_rebalances += rs.shard_rebalances;
         m.budget_moved_bytes += rs.budget_moved_bytes;
         m.auto_budget_delta += rs.auto_budget_delta;
+        m.install_retries += rs.install_retries;
+        m.backoff_ns += rs.backoff_ns;
+        m.shard_degrades += rs.shard_degrades;
+        m.shard_repairs += rs.shard_repairs;
+        m.repair_ns += rs.repair_wall_ns;
+        m.watchdog_restarts += rs.watchdog_restarts;
+        m.refresh_panics += rs.refresh_panics;
         m.cache.refresh.upload(rs.fill_h2d_bytes);
     }
     m.swap_stalls += stalls;
@@ -290,9 +304,36 @@ fn serve_batch(
     metrics: &Arc<Mutex<ServingMetrics>>,
 ) -> Result<()> {
     *batch_id += 1;
-    let out = engine.infer_once(&batch.seeds)?;
+    // panic isolation: an inference panic (injected fault or real bug)
+    // is retried once — the engine's fault site fires before any batch
+    // state moves, so the retry replays the identical request stream —
+    // and a second panic becomes error responses, never a dead worker
+    let first = catch_unwind(AssertUnwindSafe(|| engine.infer_once(&batch.seeds)));
+    let caught = match first {
+        Ok(r) => Ok(r),
+        Err(_) => {
+            lock_unpoisoned(metrics).batch_retries += 1;
+            catch_unwind(AssertUnwindSafe(|| engine.infer_once(&batch.seeds)))
+        }
+    };
+    let out = match caught {
+        Ok(r) => r?,
+        Err(_) => {
+            lock_unpoisoned(metrics).batch_failures += 1;
+            for (req, _, _) in batch.members {
+                let latency_ns = req.submitted.elapsed().as_nanos() as u64;
+                let _ = req.reply.send(Response {
+                    logits: None,
+                    latency_ns,
+                    batch_id: *batch_id,
+                    error: Some(format!("batch {batch_id} panicked twice; resubmit")),
+                });
+            }
+            return Ok(());
+        }
+    };
     let classes = engine.ds.spec.classes;
-    let mut m = metrics.lock().unwrap();
+    let mut m = lock_unpoisoned(metrics);
     m.record_batch(batch.members.len(), batch.seeds.len());
     m.sample_ns += out.sample.total_ns();
     m.feature_ns += out.feature.total_ns();
@@ -302,12 +343,12 @@ fn serve_batch(
 
     for (req, start, len) in batch.members {
         let latency_ns = req.submitted.elapsed().as_nanos() as u64;
-        metrics.lock().unwrap().record_latency(latency_ns);
+        lock_unpoisoned(metrics).record_latency(latency_ns);
         let logits = out.logits.as_ref().map(|l| {
             l[start * classes..(start + len) * classes].to_vec()
         });
         // receiver may have gone away; that's the client's business
-        let _ = req.reply.send(Response { logits, latency_ns, batch_id: *batch_id });
+        let _ = req.reply.send(Response { logits, latency_ns, batch_id: *batch_id, error: None });
     }
     Ok(())
 }
@@ -611,5 +652,54 @@ mod tests {
         assert_eq!(m.swap_stalls, 0, "rebalancing must never block serving");
         let rep = m.report(Duration::from_secs(1));
         assert!(rep.contains("rebalances=") && rep.contains("moved="), "{rep}");
+    }
+
+    #[test]
+    fn worker_survives_injected_batch_panics() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let mut cfg = serving_cfg();
+        // engine batch 1 panics once (retry succeeds); batch 2 panics
+        // on both attempts (clients get an error response); the worker
+        // keeps serving throughout
+        cfg.fault = Some("batch@1,batch@2x2".into());
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        // one 4-seed request per batch, submitted serially so the
+        // engine's batch indices line up with the fault schedule
+        let mut responses = Vec::new();
+        for i in 0..4 {
+            let nodes = ds.test_nodes[i * 4..(i + 1) * 4].to_vec();
+            let rx = server.submit(nodes).unwrap();
+            responses.push(rx.recv_timeout(Duration::from_secs(30)).unwrap());
+        }
+        for (i, resp) in responses.iter().enumerate() {
+            if i == 2 {
+                assert!(resp.error.is_some(), "double panic must surface: {resp:?}");
+                assert!(resp.logits.is_none());
+            } else {
+                assert!(resp.error.is_none(), "batch {i} must serve: {resp:?}");
+                let logits = resp.logits.as_ref().expect("reference compute returns logits");
+                assert!(logits.iter().all(|v| v.is_finite()));
+            }
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert_eq!(m.batch_retries, 2, "one retry per panicked batch: {m:?}");
+        assert_eq!(m.batch_failures, 1, "only the x2 batch fails: {m:?}");
+        assert_eq!(m.requests, 3, "failed batches are not counted as served");
+        assert_eq!(m.batches, 3);
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("batch-retry=2") && rep.contains("batch-fail=1"), "{rep}");
     }
 }

@@ -30,7 +30,7 @@ use crate::graph::{datasets, Dataset, NodeId};
 use crate::mem::{DeviceGroup, DeviceMemory, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
 use crate::sampler::{seed_batches, SamplerPool};
-use crate::util::Rng;
+use crate::util::{FaultPlan, Rng};
 
 /// Wall + modeled time of one pipeline stage.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -71,6 +71,9 @@ pub struct InferenceReport {
     pub oom: Option<String>,
     /// Σ|logits| over all executed batches (sanity; 0 when compute=skip).
     pub logits_checksum: f64,
+    /// Batches re-run after an isolated worker panic (pipeline panic
+    /// isolation — each batch is retried once before erroring).
+    pub batch_retries: u64,
     /// Wall time of the whole batch loop (serial or pipelined). Under
     /// the pipeline this is what shrinks while the per-stage `wall_ns`
     /// sums (stage *busy* time) stay put — their ratio is occupancy.
@@ -181,6 +184,9 @@ pub struct InferenceEngine<'d> {
     /// Serving-time access counts for the online refresh loop
     /// (`None` = untracked: offline runs, refresh disabled).
     tracker: Option<Arc<dyn WorkloadTracker>>,
+    /// Deterministic fault schedule parsed from `cfg.fault` (`None` =
+    /// no faults; the injection sites cost one pointer null-check).
+    fault: Option<Arc<FaultPlan>>,
 }
 
 /// The per-device prototype arena `cfg` asks for (each shard of a
@@ -190,6 +196,15 @@ fn proto_device(ds: &Dataset, cfg: &RunConfig) -> DeviceMemory {
         Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
         None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
     }
+}
+
+/// Parse (and validate) the `fault=` knob into a shared plan.
+fn parse_fault(cfg: &RunConfig) -> Result<Option<Arc<FaultPlan>>> {
+    cfg.fault
+        .as_deref()
+        .map(|spec| FaultPlan::parse(spec).map(Arc::new))
+        .transpose()
+        .context("invalid fault= spec")
 }
 
 /// Claim each shard's snapshot against its own device.
@@ -207,6 +222,7 @@ impl<'d> InferenceEngine<'d> {
     /// preprocessing, claim each shard's cache memory on its own
     /// device, and construct the compute backend.
     pub fn prepare(ds: &'d Dataset, cfg: RunConfig) -> Result<InferenceEngine<'d>> {
+        let fault = parse_fault(&cfg)?;
         let proto = proto_device(ds, &cfg);
         let mut rng = Rng::new(cfg.seed);
         let prepared = baselines::prepare(ds, &cfg, &proto, &cfg.cost, &mut rng)?;
@@ -233,6 +249,7 @@ impl<'d> InferenceEngine<'d> {
             x_buf: Vec::new(),
             snap,
             tracker: None,
+            fault,
         })
     }
 
@@ -243,6 +260,7 @@ impl<'d> InferenceEngine<'d> {
         cfg: RunConfig,
         prepared: PreparedSystem,
     ) -> Result<InferenceEngine<'d>> {
+        let fault = parse_fault(&cfg)?;
         let proto = proto_device(ds, &cfg);
         let device = Arc::new(DeviceGroup::replicate(&proto, prepared.runtime.n_shards()));
         claim_shards(&device, &prepared)?;
@@ -267,6 +285,7 @@ impl<'d> InferenceEngine<'d> {
             x_buf: Vec::new(),
             snap,
             tracker: None,
+            fault,
         })
     }
 
@@ -290,6 +309,13 @@ impl<'d> InferenceEngine<'d> {
     /// refresh loop.
     pub fn set_tracker(&mut self, tracker: Arc<dyn WorkloadTracker>) {
         self.tracker = Some(tracker);
+    }
+
+    /// The fault schedule parsed from `cfg.fault`, shared so the server
+    /// can hand the same counted plan to the refresh loop — counts are
+    /// consumed across *all* sites, keeping one spec one schedule.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault.clone()
     }
 
     /// Run inference over the full test set (or `max_batches`).
@@ -329,6 +355,7 @@ impl<'d> InferenceEngine<'d> {
             alloc: self.prepared.alloc(),
             oom: None,
             logits_checksum: 0.0,
+            batch_retries: 0,
             run_wall_ns: 0.0,
         };
 
@@ -473,6 +500,14 @@ impl<'d> InferenceEngine<'d> {
             !self.prepared.inter_batch_reuse,
             "RAIN's batch-stateful mode cannot serve ad-hoc requests"
         );
+        // injected batch panic fires before any engine state moves
+        // (stream index, pool, gather buffer), so a caller that catches
+        // it and retries replays the identical request
+        if let Some(f) = &self.fault {
+            if f.batch_panic(self.served as usize) {
+                panic!("injected fault: batch {} panicked", self.served);
+            }
+        }
         let request = self.served as usize;
         self.served += 1;
 

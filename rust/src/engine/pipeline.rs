@@ -31,7 +31,8 @@
 //! equivalence tests assert exactly this).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 
 use anyhow::{Context, Result};
@@ -39,6 +40,7 @@ use anyhow::{Context, Result};
 use crate::cache::shard::ShardedHandle;
 use crate::graph::NodeId;
 use crate::mem::TransferLedger;
+use crate::util::lock_unpoisoned;
 
 use super::stages::{self, SampledBatch};
 use super::{InferenceEngine, InferenceReport};
@@ -74,9 +76,16 @@ pub(super) fn run_pipelined(
     let feat_dim = ds.features.dim();
     let classes = ds.spec.classes;
 
+    let fault = engine.fault.clone();
+
     let next = AtomicUsize::new(0);
-    let (s_tx, s_rx) = mpsc::sync_channel::<SampledBatch>(depth);
-    let (g_tx, g_rx) = mpsc::sync_channel::<Gathered>(depth);
+    // `None` marks a batch whose sampling panicked twice (panic
+    // isolation below); it flows downstream in order so compute can
+    // fail the run deterministically instead of deadlocking the
+    // reorder buffer on a hole
+    let (s_tx, s_rx) = mpsc::sync_channel::<(usize, Option<SampledBatch>)>(depth);
+    let (g_tx, g_rx) = mpsc::sync_channel::<(usize, Option<Gathered>)>(depth);
+    let retried = AtomicU64::new(0);
 
     // Claim-ahead tickets: a worker may not *start* a batch until fewer
     // than `depth + workers` batches are awaiting gather. This caps the
@@ -95,12 +104,14 @@ pub(super) fn run_pipelined(
     // single reused buffer.
     let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<f32>>();
 
-    std::thread::scope(|scope| -> Result<()> {
+    let result = std::thread::scope(|scope| -> Result<()> {
         // ---- stage 1: sampling worker pool -------------------------
         for _ in 0..workers {
             let s_tx = s_tx.clone();
             let next = &next;
             let tickets = &tickets;
+            let retried = &retried;
+            let fault = fault.clone();
             scope.spawn(move || {
                 let mut sampler = pool.checkout();
                 // each worker cursors every shard's epochs independently;
@@ -109,24 +120,44 @@ pub(super) fn run_pipelined(
                 let mut snap = ShardedHandle::new(runtime);
                 loop {
                     // Err = ticket sender dropped = gather unwound
-                    if tickets.lock().unwrap().recv().is_err() {
+                    if lock_unpoisoned(tickets).recv().is_err() {
                         break;
                     }
                     let bi = next.fetch_add(1, Ordering::Relaxed);
                     if bi >= n {
                         break;
                     }
-                    let view = snap.acquire();
-                    let sb = stages::sample_stage(
-                        ds,
-                        &view,
-                        &mut sampler,
-                        batches[bi],
-                        bi,
-                        cfg.seed,
-                        None,
-                    );
-                    if s_tx.send(sb).is_err() {
+                    // panic isolation: a batch that panics (injected
+                    // fault or real bug) is retried once with fresh
+                    // scratch, then reported downstream as failed —
+                    // the pool and the other workers keep running
+                    let mut sample = || {
+                        std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            if let Some(f) = &fault {
+                                if f.batch_panic(bi) {
+                                    panic!("injected fault: batch {bi} panicked");
+                                }
+                            }
+                            let view = snap.acquire();
+                            stages::sample_stage(
+                                ds,
+                                &view,
+                                &mut sampler,
+                                batches[bi],
+                                bi,
+                                cfg.seed,
+                                None,
+                            )
+                        }))
+                    };
+                    let sb = match sample() {
+                        Ok(sb) => Some(sb),
+                        Err(_) => {
+                            retried.fetch_add(1, Ordering::Relaxed);
+                            sample().ok()
+                        }
+                    };
+                    if s_tx.send((bi, sb)).is_err() {
                         break; // downstream unwound (compute error)
                     }
                 }
@@ -141,31 +172,35 @@ pub(super) fn run_pipelined(
             // (bounded by depth + workers) restores batch order, which
             // both preserves RAIN's previous-batch reuse semantics and
             // keeps downstream folding deterministic
-            let mut reorder: HashMap<usize, SampledBatch> = HashMap::new();
+            let mut reorder: HashMap<usize, Option<SampledBatch>> = HashMap::new();
             let mut want = 0usize;
             let mut prev_inputs: HashSet<NodeId> = HashSet::new();
             let mut snap = ShardedHandle::new(runtime);
-            for sb in s_rx {
-                reorder.insert(sb.index, sb);
-                while let Some(sb) = reorder.remove(&want) {
-                    // reuse a spent buffer when compute has returned one
-                    let mut x = recycle_rx.try_recv().unwrap_or_default();
-                    let view = snap.acquire();
-                    let (ledger, wall_ns, n_inputs) = stages::gather_stage(
-                        ds,
-                        &view,
-                        prepared.inter_batch_reuse,
-                        &cfg.cost,
-                        &sb.mb,
-                        &mut prev_inputs,
-                        &mut x,
-                        None,
-                    );
+            for (idx, sb) in s_rx {
+                reorder.insert(idx, sb);
+                while let Some(slot) = reorder.remove(&want) {
+                    let idx = want;
                     want += 1;
                     // recycle this batch's claim-ahead ticket (receiver
                     // may already be gone during orderly shutdown)
                     let _ = ticket_tx.send(());
-                    if g_tx.send(Gathered { sb, x, ledger, wall_ns, n_inputs }).is_err() {
+                    let item = slot.map(|sb| {
+                        // reuse a spent buffer when compute returned one
+                        let mut x = recycle_rx.try_recv().unwrap_or_default();
+                        let view = snap.acquire();
+                        let (ledger, wall_ns, n_inputs) = stages::gather_stage(
+                            ds,
+                            &view,
+                            prepared.inter_batch_reuse,
+                            &cfg.cost,
+                            &sb.mb,
+                            &mut prev_inputs,
+                            &mut x,
+                            None,
+                        );
+                        Gathered { sb, x, ledger, wall_ns, n_inputs }
+                    });
+                    if g_tx.send((idx, item)).is_err() {
                         return; // downstream unwound
                     }
                 }
@@ -175,7 +210,10 @@ pub(super) fn run_pipelined(
         });
 
         // ---- stage 3: compute + report folding, on this thread -----
-        for g in g_rx {
+        for (idx, g) in g_rx {
+            let Some(g) = g else {
+                anyhow::bail!("batch {idx} panicked twice in the sampling stage");
+            };
             let sb = g.sb;
             report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&cfg.cost));
             report.stats.sample.merge(&sb.ledger);
@@ -197,5 +235,8 @@ pub(super) fn run_pipelined(
         Ok(())
         // on error the receivers drop here: gather's send fails → it
         // returns → the workers' sends fail → they exit; scope joins all
-    })
+    });
+    // folded even when compute bailed: partial retry counts still show
+    report.batch_retries += retried.load(Ordering::Relaxed);
+    result
 }

@@ -18,7 +18,7 @@ use std::sync::Mutex;
 
 use thiserror::Error;
 
-use crate::util::format_bytes;
+use crate::util::{format_bytes, lock_unpoisoned};
 
 /// The paper's testbed capacity (RTX 4090).
 pub const RTX4090_BYTES: u64 = 24 * (1 << 30);
@@ -175,6 +175,12 @@ impl DeviceMemory {
 /// a shard shrinking its budget frees device bytes a later (larger)
 /// epoch of the same device can claim, and the transient peak is
 /// visible via [`DeviceGroup::peak_used`].
+///
+/// Ledger locks recover from poison
+/// ([`lock_unpoisoned`](crate::util::lock_unpoisoned)): each guards a
+/// bare counter arena no panicking holder can leave half-updated, and
+/// the accounting must stay readable after an injected refresh-worker
+/// panic (DESIGN.md §Fault tolerance).
 #[derive(Debug)]
 pub struct DeviceGroup {
     devices: Vec<Mutex<DeviceMemory>>,
@@ -201,24 +207,24 @@ impl DeviceGroup {
 
     /// A point-in-time copy of device `i`'s arena (reporting, tests).
     pub fn device(&self, i: usize) -> DeviceMemory {
-        self.devices[i].lock().unwrap().clone()
+        lock_unpoisoned(&self.devices[i]).clone()
     }
 
     /// Bytes currently claimed on device `i`.
     pub fn used(&self, i: usize) -> u64 {
-        self.devices[i].lock().unwrap().used()
+        lock_unpoisoned(&self.devices[i]).used()
     }
 
     /// High-water mark of device `i`'s claims (includes the transient
     /// double-residency of claim-before-release snapshot swaps).
     pub fn peak_used(&self, i: usize) -> u64 {
-        self.devices[i].lock().unwrap().peak_used()
+        lock_unpoisoned(&self.devices[i]).peak_used()
     }
 
     /// Device `i`'s static cache headroom (capacity − reserve) — the
     /// per-device cap no shard's budget share may exceed.
     pub fn headroom(&self, i: usize) -> u64 {
-        self.devices[i].lock().unwrap().headroom()
+        lock_unpoisoned(&self.devices[i]).headroom()
     }
 
     /// The smallest per-device headroom across the group — with
@@ -235,18 +241,18 @@ impl DeviceGroup {
     /// Claim `bytes` on device `i` only; fails with that device's
     /// [`OomError`] — sibling capacity is never consulted.
     pub fn alloc(&self, i: usize, bytes: u64) -> Result<(), OomError> {
-        self.devices[i].lock().unwrap().alloc(bytes)
+        lock_unpoisoned(&self.devices[i]).alloc(bytes)
     }
 
     /// Reserve-consuming claim on device `i` (RAIN's staged tensor,
     /// and the refresh loop's transient swap double-residency).
     pub fn alloc_unreserved(&self, i: usize, bytes: u64) -> Result<(), OomError> {
-        self.devices[i].lock().unwrap().alloc_unreserved(bytes)
+        lock_unpoisoned(&self.devices[i]).alloc_unreserved(bytes)
     }
 
     /// Release previously claimed bytes on device `i`.
     pub fn free(&self, i: usize, bytes: u64) {
-        self.devices[i].lock().unwrap().free(bytes)
+        lock_unpoisoned(&self.devices[i]).free(bytes)
     }
 }
 

@@ -219,8 +219,11 @@ impl SamplerPool {
     }
 
     /// Take a sampler; allocates a fresh one only when the pool is dry.
+    /// Recovers from a poisoned free list (the `Vec` is consistent
+    /// whenever the lock is free), so one panicked worker never takes
+    /// the pool down with it.
     pub fn checkout(&self) -> NeighborSampler {
-        match self.free.lock().unwrap().pop() {
+        match crate::util::lock_unpoisoned(&self.free).pop() {
             Some(s) => s,
             None => NeighborSampler::with_nodes(self.fanout.clone(), self.n_nodes),
         }
@@ -228,12 +231,12 @@ impl SamplerPool {
 
     /// Return a sampler for reuse.
     pub fn checkin(&self, sampler: NeighborSampler) {
-        self.free.lock().unwrap().push(sampler);
+        crate::util::lock_unpoisoned(&self.free).push(sampler);
     }
 
     /// Samplers currently idle in the pool.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        crate::util::lock_unpoisoned(&self.free).len()
     }
 }
 

@@ -1,0 +1,298 @@
+//! Deterministic fault injection for chaos testing (DESIGN.md §Fault
+//! tolerance).
+//!
+//! A [`FaultPlan`] is parsed from the `fault=` knob and injected at a
+//! handful of *named sites* in the refresh/serving stack. Sites that
+//! hold an `Option<Arc<FaultPlan>>` pay one pointer null-check when the
+//! knob is off — the plan is zero-cost when disabled and fully
+//! deterministic when enabled: every fault carries an explicit trigger
+//! count that is decremented atomically, so a given spec fires the same
+//! faults in the same order on every run regardless of thread timing.
+//!
+//! Spec grammar (comma-separated entries, each `kind[@target][xN][~MS]`):
+//!
+//! | entry          | site                | effect                                    |
+//! |----------------|---------------------|-------------------------------------------|
+//! | `oom@S[xN]`    | install claim       | shard `S`'s device claim reports OOM      |
+//! | `err@S[xN]`    | install transfer    | shard `S`'s cache fill fails (I/O error)  |
+//! | `hang@S~MS`    | install transfer    | shard `S`'s fill sleeps `MS` ms           |
+//! | `drain[xN]`    | tracker drain       | the refresh loop panics mid-drain         |
+//! | `batch@B[xN]`  | batch execution     | serving/pipeline batch `B` panics         |
+//!
+//! `xN` defaults to 1; a count of 0 never fires (useful for templating
+//! specs). Example: `fault=oom@0x6,err@1x4,hang@2~300,drain` — shard
+//! 0's next six claims OOM, shard 1's next four fills error, shard 2's
+//! next fill hangs 300 ms, and one tracker drain panics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use anyhow::{bail, Context, Result};
+
+/// Which named site a fault entry attaches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    /// Device-memory claim for a shard install reports OOM.
+    InstallOom,
+    /// Host→device fill for a shard install fails with a transfer error.
+    InstallErr,
+    /// Host→device fill for a shard install stalls (slow/hung install).
+    InstallHang,
+    /// The workload tracker's drain panics inside the refresh loop.
+    DrainPanic,
+    /// A serving/pipeline batch panics mid-execution.
+    BatchPanic,
+}
+
+/// One parsed fault entry with its remaining trigger budget.
+#[derive(Debug)]
+struct Fault {
+    kind: FaultKind,
+    /// Shard index (`oom`/`err`/`hang`), batch index (`batch`), or
+    /// `None` for untargeted kinds (`drain`).
+    target: Option<u64>,
+    /// Remaining triggers; decremented atomically so concurrent sites
+    /// consume the budget deterministically (never fires twice for one
+    /// decrement, never over-fires).
+    remaining: AtomicU64,
+    /// Sleep length for `hang` entries (ms).
+    delay_ms: u64,
+}
+
+/// A deterministic, count-limited fault schedule (see module docs for
+/// the `fault=` spec grammar).
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: String,
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse a `fault=` spec. Errors name the offending entry so CLI
+    /// typos fail fast instead of silently never firing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            faults.push(Self::parse_entry(entry)?);
+        }
+        if faults.is_empty() {
+            bail!("fault spec {spec:?} contains no entries");
+        }
+        Ok(FaultPlan { spec: spec.to_string(), faults })
+    }
+
+    fn parse_entry(entry: &str) -> Result<Fault> {
+        // split off `~MS` then `xN` then `@T`, leaving the bare kind
+        let (rest, delay_ms) = match entry.split_once('~') {
+            Some((head, ms)) => {
+                let ms: u64 = ms
+                    .parse()
+                    .with_context(|| format!("fault entry {entry:?}: bad ~ms delay"))?;
+                (head, ms)
+            }
+            None => (entry, 0),
+        };
+        let (rest, count) = match rest.rsplit_once('x') {
+            Some((head, n)) if n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+                let n: u64 = n
+                    .parse()
+                    .with_context(|| format!("fault entry {entry:?}: bad xN count"))?;
+                (head, n)
+            }
+            _ => (rest, 1),
+        };
+        let (kind_str, target) = match rest.split_once('@') {
+            Some((k, t)) => {
+                let t: u64 = t
+                    .parse()
+                    .with_context(|| format!("fault entry {entry:?}: bad @target index"))?;
+                (k, Some(t))
+            }
+            None => (rest, None),
+        };
+        let kind = match kind_str {
+            "oom" => FaultKind::InstallOom,
+            "err" => FaultKind::InstallErr,
+            "hang" => FaultKind::InstallHang,
+            "drain" => FaultKind::DrainPanic,
+            "batch" => FaultKind::BatchPanic,
+            other => bail!(
+                "fault entry {entry:?}: unknown kind {other:?} \
+                 (expected oom|err|hang|drain|batch)"
+            ),
+        };
+        match kind {
+            FaultKind::InstallOom | FaultKind::InstallErr | FaultKind::InstallHang
+            | FaultKind::BatchPanic => {
+                if target.is_none() {
+                    bail!("fault entry {entry:?}: {kind_str} needs an @index target");
+                }
+            }
+            FaultKind::DrainPanic => {
+                if target.is_some() {
+                    bail!("fault entry {entry:?}: drain takes no @target");
+                }
+            }
+        }
+        if kind == FaultKind::InstallHang && delay_ms == 0 {
+            bail!("fault entry {entry:?}: hang needs a ~ms delay");
+        }
+        Ok(Fault { kind, target, remaining: AtomicU64::new(count), delay_ms })
+    }
+
+    /// The spec this plan was parsed from (config summaries, logs).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Consume one trigger of the first matching live entry. Returns
+    /// the entry's delay (always 0 for non-`hang` kinds).
+    fn fire(&self, kind: FaultKind, target: Option<u64>) -> Option<u64> {
+        for f in &self.faults {
+            if f.kind != kind || f.target != target {
+                continue;
+            }
+            // claim exactly one trigger; CAS-loop so two racing sites
+            // can't both consume the last one
+            if f.remaining
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+                .is_ok()
+            {
+                return Some(f.delay_ms);
+            }
+        }
+        None
+    }
+
+    /// Site: device-memory claim while installing shard `shard`.
+    /// True → the caller must treat the claim as OOM.
+    pub fn install_oom(&self, shard: usize) -> bool {
+        self.fire(FaultKind::InstallOom, Some(shard as u64)).is_some()
+    }
+
+    /// Site: host→device fill while installing shard `shard`.
+    /// True → the caller must treat the fill as a transfer error.
+    pub fn install_error(&self, shard: usize) -> bool {
+        self.fire(FaultKind::InstallErr, Some(shard as u64)).is_some()
+    }
+
+    /// Site: host→device fill while installing shard `shard`.
+    /// `Some(ms)` → the caller must stall `ms` ms (hung install).
+    pub fn install_hang_ms(&self, shard: usize) -> Option<u64> {
+        self.fire(FaultKind::InstallHang, Some(shard as u64))
+    }
+
+    /// Site: tracker drain inside the refresh loop. True → the caller
+    /// must panic (the watchdog is expected to absorb it).
+    pub fn drain_panic(&self) -> bool {
+        self.fire(FaultKind::DrainPanic, None).is_some()
+    }
+
+    /// Site: serving/pipeline execution of batch `index`. True → the
+    /// caller must panic (batch isolation is expected to absorb it).
+    pub fn batch_panic(&self, index: usize) -> bool {
+        self.fire(FaultKind::BatchPanic, Some(index as u64)).is_some()
+    }
+
+    /// Triggers left across every entry (tests / bench sanity checks).
+    pub fn remaining(&self) -> u64 {
+        self.faults.iter().map(|f| f.remaining.load(Ordering::Acquire)).sum()
+    }
+}
+
+/// Lock a mutex, recovering from poison.
+///
+/// Every mutex this repo takes through here guards state that stays
+/// consistent across a panic (monotonic counters, whole-value snapshot
+/// swaps, channel handles) — a panicking peer can never leave it
+/// half-updated, so the poison flag carries no information and
+/// propagating it would turn one isolated batch panic into a cascade
+/// across every thread sharing the lock. See DESIGN.md §Fault
+/// tolerance.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("oom@0x6,err@1x4,hang@2~300,drain,batch@7x2").unwrap();
+        assert_eq!(p.faults.len(), 5);
+        assert_eq!(p.spec(), "oom@0x6,err@1x4,hang@2~300,drain,batch@7x2");
+        assert_eq!(p.remaining(), 6 + 4 + 1 + 1 + 2);
+        assert_eq!(p.faults[2].delay_ms, 300);
+        assert_eq!(p.faults[3].target, None);
+    }
+
+    #[test]
+    fn counts_decrement_and_exhaust() {
+        let p = FaultPlan::parse("oom@3x2").unwrap();
+        assert!(p.install_oom(3));
+        assert!(p.install_oom(3));
+        assert!(!p.install_oom(3), "x2 must fire exactly twice");
+        assert!(!p.install_oom(0), "other shards never fire");
+        assert_eq!(p.remaining(), 0);
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let p = FaultPlan::parse("oom@1,err@1,hang@1~50,drain,batch@1").unwrap();
+        assert!(!p.install_oom(0));
+        assert!(p.install_oom(1));
+        assert!(p.install_error(1));
+        assert_eq!(p.install_hang_ms(1), Some(50));
+        assert_eq!(p.install_hang_ms(1), None);
+        assert!(p.drain_panic());
+        assert!(!p.drain_panic());
+        assert!(p.batch_panic(1));
+        assert!(!p.batch_panic(2));
+    }
+
+    #[test]
+    fn zero_count_never_fires() {
+        let p = FaultPlan::parse("oom@0x0").unwrap();
+        assert!(!p.install_oom(0));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", " , ", "frobnicate@0", "oom", "drain@2", "hang@1", "oom@x2", "hang@1~ms"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn concurrent_firing_never_overcounts() {
+        let p = Arc::new(FaultPlan::parse("batch@0x100").unwrap());
+        let fired: usize = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let p = Arc::clone(&p);
+                    s.spawn(move || (0..100).filter(|_| p.batch_panic(0)).count())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(fired, 100, "exactly the budgeted count fires across threads");
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_from_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 42);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities (the offline registry has no rand /
 //! serde / criterion / proptest, so these live in-repo).
 
+pub mod fault;
 pub mod human;
 pub mod json;
 pub mod proptest;
@@ -9,6 +10,7 @@ pub mod stats;
 pub mod table;
 pub mod timer;
 
+pub use fault::{lock_unpoisoned, FaultPlan};
 pub use human::{format_bytes, parse_bytes};
 pub use rng::{splitmix64, Rng};
 pub use timer::Stopwatch;

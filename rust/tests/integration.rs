@@ -6,6 +6,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use dci::baselines::planner_for;
+use dci::cache::runtime::CacheSnapshot;
+use dci::cache::tracker::TrackerConfig;
+use dci::cache::{RefreshConfig, RefreshJob};
 use dci::config::{ComputeKind, ModelKind, RunConfig, SystemKind};
 use dci::coordinator::{BatcherConfig, Server, ServerConfig};
 use dci::engine::{run_config, InferenceEngine, InferenceReport};
@@ -208,6 +212,95 @@ fn gcn_and_graphsage_both_run() {
         let r = run_config(&cfg).unwrap();
         assert!(r.logits_checksum > 0.0, "{model:?}");
     }
+}
+
+#[test]
+fn refresh_claim_oom_skips_the_install_and_keeps_serving() {
+    // The elastic-budget OOM-skip path, end to end with a *real*
+    // DeviceGroup claim failure (no fault injection): ballast the
+    // device to capacity so a re-plan's claim fails in both orders
+    // (claim-before-release and release-then-claim), then assert the
+    // refresher counts the OOM, conserves every device byte, and the
+    // engine keeps serving the old epoch throughout.
+    let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+    let mut cfg = base_cfg();
+    cfg.system = SystemKind::Dci;
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    cfg.fanout = Fanout::parse("3,2").unwrap();
+    cfg.batch_size = 32;
+    cfg.budget = Some(300_000);
+    cfg.max_batches = None;
+    let mut engine = InferenceEngine::prepare(ds.as_ref(), cfg).unwrap();
+    let runtime = engine.runtime();
+    let device = engine.device_group();
+
+    // swap in an empty epoch (releasing its predecessor's claim), then
+    // fill the device completely: any nonzero plan can no longer fit,
+    // even after releasing the (zero-byte) outgoing snapshot
+    let old_bytes = runtime.shard(0).load().bytes_used();
+    runtime.install(CacheSnapshot::empty());
+    device.free(0, old_bytes);
+    let capacity = device.device(0).capacity();
+    device.alloc_unreserved(0, capacity - device.used(0)).unwrap();
+
+    let tracker = TrackerConfig::default().build(ds.csc.n_nodes(), ds.csc.n_edges());
+    engine.set_tracker(Arc::clone(&tracker));
+    let baseline = engine
+        .prepared
+        .presample
+        .as_ref()
+        .map(|s| s.node_visits.clone())
+        .unwrap_or_default();
+    let refresher = RefreshJob::new(
+        Arc::clone(&ds),
+        engine.runtime(),
+        tracker,
+        planner_for(SystemKind::Dci).unwrap(),
+        engine.prepared.shard_budgets.clone(),
+        baseline,
+        RefreshConfig {
+            check_interval: Duration::from_millis(5),
+            min_batches: 1,
+            decay: 0.5,
+            drift_threshold: -1.0, // every check re-plans
+            install_backoff: Duration::from_millis(1),
+            ..RefreshConfig::default()
+        },
+    )
+    .device(engine.device_group())
+    .spawn();
+
+    let mut served_epochs = Vec::new();
+    for round in 0..400 {
+        let at = (round * 4) % (ds.test_nodes.len() - 32);
+        let out = engine.infer_once(&ds.test_nodes[at..at + 32]).unwrap();
+        let logits = out.logits.as_ref().expect("reference compute returns logits");
+        assert!(logits.iter().all(|v| v.is_finite()));
+        served_epochs.push(out.cache_epoch);
+        if refresher.stats().install_ooms >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = refresher.stop();
+    assert!(stats.install_ooms >= 1, "the claim OOM must be counted: {stats:?}");
+    assert!(stats.install_retries >= 3, "the claim retried under backoff: {stats:?}");
+    assert!(stats.backoff_ns > 0.0, "retries wait out a backoff pause: {stats:?}");
+    assert_eq!(stats.replans, 0, "nothing may install over a full device: {stats:?}");
+    assert_eq!(stats.shard_degrades, 0, "a claim OOM skips, never degrades: {stats:?}");
+    assert_eq!(stats.watchdog_restarts, 0, "{stats:?}");
+
+    // serving never left the pre-ballast epoch, and still works now
+    assert!(
+        served_epochs.iter().all(|&e| e == served_epochs[0]),
+        "old epoch must keep serving: {served_epochs:?}"
+    );
+    assert_eq!(runtime.swaps(), 1, "only the manual empty install ever swapped");
+    let out = engine.infer_once(&ds.test_nodes[..32]).unwrap();
+    assert_eq!(out.cache_epoch, served_epochs[0]);
+    // budgets conserved: the restore path returned every released byte
+    assert_eq!(device.used(0), capacity, "failed claims must not leak device bytes");
 }
 
 #[test]
