@@ -15,6 +15,13 @@
 //!              checkpoint
 //!   drain      one tracker drain panics -> watchdog restart
 //!
+//! A second, self-contained scenario batters the zero-copy transfer
+//! engine: a staged run (`transfer-ring=2`) under `stage@1` — batch 1's
+//! coalesced H2D copy fails mid-flight and the gather degrades to
+//! per-row UVA reads. Same rows, same bytes, different pricing: logits
+//! must stay bit-identical to a fault-free staged run and the ledger
+//! must count the fallback.
+//!
 //! Ground truth is the *identical* request sequence on a fault-free
 //! engine (same request indices -> same sampling streams). The caches
 //! are performance-transparent — every adj cache takes the full-CSC
@@ -294,6 +301,40 @@ fn main() -> Result<()> {
     let degraded_hit_penalty =
         (clean_stats.overall_hit_ratio() - rec.stats.overall_hit_ratio()).max(0.0);
 
+    // --- staged-transfer chaos: the zero-copy ring under a mid-copy
+    // fault. Miss-heavy budget so every batch actually stages; batch 1's
+    // coalesced copy fails and must degrade to per-row UVA reads without
+    // perturbing the data path.
+    let staged_seq: Vec<&[NodeId]> = a_pool.chunks(p.req_size).take(4).collect();
+    let mut staged_cfg = cfg.clone();
+    staged_cfg.shards = 1;
+    staged_cfg.transfer_ring = 2;
+    staged_cfg.budget = Some(60_000);
+    staged_cfg.fault = Some("stage@1".into());
+    let mut staged_engine = InferenceEngine::prepare(&ds, staged_cfg.clone())?;
+    let mut clean_staged_cfg = staged_cfg.clone();
+    clean_staged_cfg.fault = None;
+    let mut clean_staged_engine = InferenceEngine::prepare(&ds, clean_staged_cfg)?;
+    let mut staged_fallbacks = 0u64;
+    let mut staged_bytes = 0u64;
+    let mut staged_match = true;
+    for chunk in &staged_seq {
+        let faulted = staged_engine.infer_once(chunk)?;
+        let clean = clean_staged_engine.infer_once(chunk)?;
+        staged_fallbacks += faulted.stats.feature.staged_fallbacks;
+        staged_bytes += clean.stats.feature.staged_bytes;
+        staged_match &= hash_logits(faulted.logits.as_ref().expect("logits"))
+            == hash_logits(clean.logits.as_ref().expect("logits"));
+    }
+    eprintln!(
+        "  [staged] {} batches under stage@1: {} fallback(s), clean run staged {} B, \
+         logits {}",
+        staged_seq.len(),
+        staged_fallbacks,
+        staged_bytes,
+        if staged_match { "match" } else { "DIVERGED" },
+    );
+
     let mut report = BenchReport::new(
         "Chaos: degraded-mode serving under an injected fault schedule",
         &["measurement", "batches", "overall-hit%", "notes"],
@@ -341,6 +382,8 @@ fn main() -> Result<()> {
             ("watchdog_restarts", jnum(rstats.watchdog_restarts as f64)),
             ("refresh_panics", jnum(rstats.refresh_panics as f64)),
             ("degraded_hit_penalty", jnum(degraded_hit_penalty)),
+            ("staged_fallbacks", jnum(staged_fallbacks as f64)),
+            ("staged_logits_match", jnum(if staged_match { 1.0 } else { 0.0 })),
         ],
     );
     report.finish(&opts)?;
@@ -392,6 +435,12 @@ fn main() -> Result<()> {
         degraded_hit_penalty <= 0.5,
         "degraded serving lost too much hit ratio: {degraded_hit_penalty:.3}"
     );
+    ensure!(staged_bytes > 0, "the staged scenario never staged (budget too generous?)");
+    ensure!(
+        staged_fallbacks >= 1,
+        "stage@1 must degrade one coalesced copy to per-row reads"
+    );
+    ensure!(staged_match, "staged fallback perturbed the logits");
     Ok(())
 }
 

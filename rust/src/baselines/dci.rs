@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::cache::planner::{DciPlanner, WorkloadProfile};
-use crate::cache::shard::{plan_sharded, ShardRouter};
+use crate::cache::shard::{plan_sharded_with_budgets, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
@@ -54,13 +54,14 @@ pub fn prepare(
     // 3. per-shard Eq. (1) split + lightweight fills, behind the
     // planner trait (fill wall is genuine host-side coordinator work
     // and counts toward preprocessing; one shard = the paper's
-    // single-device pipeline exactly)
+    // single-device pipeline exactly). Heterogeneous nodes split the
+    // budget by tier weight instead of evenly.
     let router = ShardRouter::new(cfg.shards.max(1));
-    let plans = plan_sharded(
+    let plans = plan_sharded_with_budgets(
         &DciPlanner,
         ds,
         &WorkloadProfile::from_presample(&stats),
-        total,
+        super::shard_budget_split(cfg, total, router.n_shards()),
         &router,
     );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;

@@ -19,7 +19,7 @@
 use anyhow::Result;
 
 use crate::cache::planner::{DucatiPlanner, WorkloadProfile};
-use crate::cache::shard::{plan_sharded, ShardRouter};
+use crate::cache::shard::{plan_sharded_with_budgets, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
@@ -60,11 +60,11 @@ pub fn prepare(
     // it as plan_wall_ns); under sharding the knapsack runs once per
     // shard over the shard-masked profile
     let router = ShardRouter::new(cfg.shards.max(1));
-    let plans = plan_sharded(
+    let plans = plan_sharded_with_budgets(
         &DucatiPlanner,
         ds,
         &WorkloadProfile::from_presample(&stats),
-        total,
+        super::shard_budget_split(cfg, total, router.n_shards()),
         &router,
     );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;

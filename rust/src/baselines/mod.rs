@@ -192,10 +192,14 @@ pub fn auto_budget(
 
 /// Resolve the node-global cache budget for a cache-owning system.
 /// Explicit budgets are global across the node's shards, clamped so
-/// that the even per-shard split can never exceed any single device's
-/// headroom (`total ≤ n × per-device` ⇒ every [`split_budget`] share ≤
-/// per-device, remainder byte included). Auto budgets scale the
-/// per-device workload-aware headroom (§IV.A) by the shard count.
+/// that the per-shard split can never exceed the devices' combined
+/// headroom: uniform nodes clamp to `n × per-device` (so every
+/// [`split_budget`] share fits, remainder byte included);
+/// heterogeneous nodes (`device-tiers=`) clamp to the *sum* of the
+/// tiers' headrooms, with [`shard_budget_split`]'s per-device caps
+/// keeping each share inside its own card. Auto budgets apply the
+/// workload-aware claim (§IV.A) per device — every card stages the
+/// same peak batch, so each pays the claim out of its own headroom.
 ///
 /// [`split_budget`]: crate::cache::split_budget
 pub fn resolve_budget(
@@ -205,6 +209,18 @@ pub fn resolve_budget(
     row_bytes: u64,
     scale: f64,
 ) -> u64 {
+    if let Some(tiers) = &cfg.device_tiers {
+        let claim = crate::mem::workload_claim_bytes(
+            stats.max_input_nodes as u64,
+            crate::mem::per_node_claim_bytes(row_bytes, cfg.hidden),
+            scale,
+        );
+        let cap: u64 = tiers.iter().map(|t| t.headroom()).sum();
+        return cfg
+            .budget
+            .unwrap_or_else(|| tiers.iter().map(|t| t.headroom().saturating_sub(claim)).sum())
+            .min(cap);
+    }
     let n = cfg.shards.max(1) as u64;
     let per_device = device.available_for_cache();
     cfg.budget
@@ -212,6 +228,43 @@ pub fn resolve_budget(
             auto_budget(device, stats, row_bytes, cfg.hidden, scale).saturating_mul(n)
         })
         .min(per_device.saturating_mul(n))
+}
+
+/// Per-shard split of the node-global budget. Uniform nodes split
+/// evenly ([`split_budget`]); heterogeneous nodes (`device-tiers=`,
+/// one tier per shard) split by tier weight — headroom × relative
+/// bandwidth, the same formula as
+/// [`DeviceGroup::tier_weights`](crate::mem::DeviceGroup::tier_weights)
+/// — so budget flows toward devices that are both big (can hold it)
+/// and fast (can re-fill it cheaply), then each share is capped by its
+/// own device's headroom
+/// ([`cap_shares_per_device`](crate::cache::cap_shares_per_device)).
+/// Conservation (`Σ shares == total`) holds because [`resolve_budget`]
+/// clamps the total to the summed headrooms. A tier list whose length
+/// does not match the shard count falls back to the even split (the
+/// engine rejects that configuration before serving anyway).
+///
+/// [`split_budget`]: crate::cache::split_budget
+pub fn shard_budget_split(cfg: &RunConfig, total: u64, n: usize) -> Vec<u64> {
+    use crate::cache::planner::{cap_shares_per_device, split_budget, split_budget_weighted};
+    match &cfg.device_tiers {
+        Some(tiers) if tiers.len() == n && n > 1 => {
+            let max_gbps = tiers.iter().map(|t| t.h2d_gbps).fold(f64::MIN, f64::max);
+            let weights: Vec<f64> = tiers
+                .iter()
+                .map(|t| {
+                    let share =
+                        if max_gbps > 0.0 { t.h2d_gbps / max_gbps } else { 1.0 };
+                    t.headroom() as f64 * share
+                })
+                .collect();
+            let mut shares = split_budget_weighted(total, &weights, 0.0);
+            let headrooms: Vec<u64> = tiers.iter().map(|t| t.headroom()).collect();
+            cap_shares_per_device(&mut shares, &headrooms);
+            shares
+        }
+        _ => split_budget(total, n),
+    }
 }
 
 /// Dispatch: run `cfg.system`'s preprocessing.

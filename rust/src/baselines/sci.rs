@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::cache::planner::{SciPlanner, WorkloadProfile};
-use crate::cache::shard::{plan_sharded, ShardRouter};
+use crate::cache::shard::{plan_sharded_with_budgets, ShardRouter};
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::Dataset;
 use crate::mem::{CostModel, DeviceMemory};
@@ -39,11 +39,11 @@ pub fn prepare(
     let total = resolve_budget(cfg, device, &stats, ds.features.row_bytes(), ds.spec.scale);
     // single cache: everything to features (fill wall is real host work)
     let router = ShardRouter::new(cfg.shards.max(1));
-    let plans = plan_sharded(
+    let plans = plan_sharded_with_budgets(
         &SciPlanner,
         ds,
         &WorkloadProfile::from_presample(&stats),
-        total,
+        super::shard_budget_split(cfg, total, router.n_shards()),
         &router,
     );
     let profiling_ns = stats.t_sample_ns + stats.t_feature_ns;

@@ -212,9 +212,22 @@ pub fn split_budget_weighted(budget: u64, shard_loads: &[f64], floor: f64) -> Ve
 /// most `n` rounds: each non-final round closes at least one share at
 /// the cap.
 pub fn cap_shares(shares: &mut [u64], cap: u64) {
+    let caps = vec![cap; shares.len()];
+    cap_shares_per_device(shares, &caps);
+}
+
+/// [`cap_shares`] generalized to heterogeneous devices: clamp share
+/// `i` to `caps[i]` (that device's headroom), redistributing clipped
+/// excess evenly among the still-open shards. Same conservation and
+/// termination properties — conservation holds whenever
+/// `Σ shares ≤ Σ caps`, and each non-final round closes at least one
+/// share at its cap. With a uniform cap vector this *is* `cap_shares`
+/// (which now delegates here), so the two can never drift.
+pub fn cap_shares_per_device(shares: &mut [u64], caps: &[u64]) {
+    assert_eq!(shares.len(), caps.len(), "one cap per share");
     loop {
         let mut excess = 0u64;
-        for s in shares.iter_mut() {
+        for (s, &cap) in shares.iter_mut().zip(caps) {
             if *s > cap {
                 excess += *s - cap;
                 *s = cap;
@@ -223,9 +236,9 @@ pub fn cap_shares(shares: &mut [u64], cap: u64) {
         if excess == 0 {
             return;
         }
-        let open: Vec<usize> = (0..shares.len()).filter(|&i| shares[i] < cap).collect();
+        let open: Vec<usize> = (0..shares.len()).filter(|&i| shares[i] < caps[i]).collect();
         if open.is_empty() {
-            // total exceeds n·cap: everything is pinned at the cap and
+            // total exceeds Σ caps: everything is pinned at its cap and
             // the overflow is genuinely unplaceable — callers clamp the
             // global budget first, so this is the documented lossy edge
             return;
@@ -623,6 +636,32 @@ mod tests {
         let mut shares = vec![50u64, 50];
         cap_shares(&mut shares, 10);
         assert_eq!(shares, vec![10, 10]);
+    }
+
+    #[test]
+    fn cap_shares_per_device_respects_each_cap() {
+        // heterogeneous caps: excess from the big share flows to the
+        // devices that still have room under *their own* cap
+        let mut shares = vec![90u64, 10, 0];
+        cap_shares_per_device(&mut shares, &[40, 100, 5]);
+        assert_eq!(shares.iter().sum::<u64>(), 100);
+        assert_eq!(shares[0], 40);
+        assert!(shares[2] <= 5);
+        // cascade: redistribution overflows the small device's cap and
+        // lands on the one open share
+        let mut shares = vec![100u64, 0, 0];
+        cap_shares_per_device(&mut shares, &[10, 10, 1000]);
+        assert_eq!(shares, vec![10, 10, 80]);
+        // lossy edge: Σ caps < Σ shares pins everything at its cap
+        let mut shares = vec![50u64, 50];
+        cap_shares_per_device(&mut shares, &[10, 20]);
+        assert_eq!(shares, vec![10, 20]);
+        // uniform caps are byte-identical to cap_shares
+        let mut a = vec![90u64, 10, 0, 0];
+        let mut b = a.clone();
+        cap_shares(&mut a, 40);
+        cap_shares_per_device(&mut b, &[40; 4]);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -110,13 +110,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::graph::{Csc, Dataset, NodeId};
-use crate::mem::DeviceGroup;
+use crate::mem::{DeviceGroup, StagingPool};
 use crate::util::{lock_unpoisoned, FaultPlan};
 
 use super::runtime::CacheSnapshot;
 
 use super::planner::{
-    cap_shares, split_budget, split_budget_weighted, CachePlanner, WorkloadProfile,
+    cap_shares, cap_shares_per_device, split_budget, split_budget_weighted, CachePlanner,
+    WorkloadProfile,
 };
 use super::shard::{elem_owner, ShardRouter, ShardedRuntime};
 use super::tracker::WorkloadTracker;
@@ -208,11 +209,15 @@ impl Default for RefreshConfig {
 /// with the claim computed by the same
 /// [`workload_claim_bytes`](crate::mem::workload_claim_bytes) model
 /// the startup [`auto_budget`](crate::baselines::auto_budget) uses.
-#[derive(Debug, Clone, Copy)]
+/// Heterogeneous nodes (`device-tiers=`) carry per-tier headrooms
+/// instead: each device pays the claim out of its own headroom, and
+/// the per-device caps on re-split shares come from the same vector.
+#[derive(Debug, Clone)]
 pub struct AutoBudgetPolicy {
     /// Per-device cache headroom basis (capacity − reserve — the
     /// budget basis *before* any claim, matching what the startup
-    /// auto budget subtracted the pre-sampled claim from).
+    /// auto budget subtracted the pre-sampled claim from). With
+    /// `tier_headrooms` set this is the uniform fallback only.
     pub headroom_per_device: u64,
     /// Device bytes the workload pins per input node
     /// ([`crate::mem::per_node_claim_bytes`]).
@@ -220,6 +225,9 @@ pub struct AutoBudgetPolicy {
     /// Dataset scale factor (claims scale with the simulated device;
     /// see [`crate::mem::workload_claim_bytes`]).
     pub scale: f64,
+    /// Per-device headroom basis for heterogeneous nodes (len = shard
+    /// count; `None` = uniform devices, use `headroom_per_device`).
+    pub tier_headrooms: Option<Vec<u64>>,
 }
 
 impl AutoBudgetPolicy {
@@ -230,9 +238,13 @@ impl AutoBudgetPolicy {
             self.per_node_bytes,
             self.scale,
         );
-        self.headroom_per_device
-            .saturating_sub(claim)
-            .saturating_mul(n_shards.max(1) as u64)
+        match &self.tier_headrooms {
+            Some(tiers) => tiers.iter().map(|h| h.saturating_sub(claim)).sum(),
+            None => self
+                .headroom_per_device
+                .saturating_sub(claim)
+                .saturating_mul(n_shards.max(1) as u64),
+        }
     }
 }
 
@@ -343,6 +355,11 @@ pub struct RefreshJob {
     /// Deterministic fault schedule for chaos testing (`None` = no
     /// faults; every injection site is one pointer null-check).
     pub fault: Option<Arc<FaultPlan>>,
+    /// The engine's pinned staging pool (`None` = unstaged installs):
+    /// each install's H2D fill leases one buffer for the transfer and
+    /// returns it after, so refresh fills and serving gathers share
+    /// the same pool and reuse counters.
+    pub staging: Option<Arc<StagingPool>>,
     /// Loop knobs.
     pub cfg: RefreshConfig,
 }
@@ -368,6 +385,7 @@ impl RefreshJob {
             device: None,
             auto_budget: None,
             fault: None,
+            staging: None,
             cfg,
         }
     }
@@ -387,6 +405,13 @@ impl RefreshJob {
     /// Attach a deterministic fault schedule (the `fault=` knob).
     pub fn fault(mut self, plan: Arc<FaultPlan>) -> RefreshJob {
         self.fault = Some(plan);
+        self
+    }
+
+    /// Attach the engine's staging pool so install fills stage through
+    /// the same leased buffers as serving gathers.
+    pub fn staging(mut self, pool: Arc<StagingPool>) -> RefreshJob {
+        self.staging = Some(pool);
         self
     }
 
@@ -1081,18 +1106,34 @@ impl<'j> RefreshLoop<'j> {
         // split — re-tracking the budget and redistributing it are
         // independent knobs
         let mut new_budgets = if cfg.rebalance {
+            // heterogeneous groups bias the load mass by each device's
+            // relative H2D bandwidth: budget parked behind a slow link
+            // costs more install time per byte to keep fresh
+            let mut mass = mass;
+            if let Some(dev) = &self.job.device {
+                if dev.is_tiered() {
+                    for (s, m) in mass.iter_mut().enumerate() {
+                        *m *= dev.bandwidth_share(s);
+                    }
+                }
+            }
             split_budget_weighted(target_global, &mass, cfg.rebalance_floor)
         } else {
             split_budget(target_global, self.n_shards)
         };
-        // no shard's share may exceed its device's headroom — the
+        // no shard's share may exceed its own device's headroom — the
         // constraint that made the even split safe by construction
-        // (resolve_budget clamps total ≤ n × headroom) must survive
-        // the weighted split too
+        // (resolve_budget clamps total ≤ Σ headrooms) must survive the
+        // weighted split too, per device on heterogeneous nodes
         if let Some(dev) = &self.job.device {
-            cap_shares(&mut new_budgets, dev.min_headroom());
+            cap_shares_per_device(&mut new_budgets, &dev.headrooms());
         } else if let Some(policy) = &self.job.auto_budget {
-            cap_shares(&mut new_budgets, policy.headroom_per_device);
+            match &policy.tier_headrooms {
+                Some(h) if h.len() == self.n_shards => {
+                    cap_shares_per_device(&mut new_budgets, h)
+                }
+                _ => cap_shares(&mut new_budgets, policy.headroom_per_device),
+            }
         }
         let changed: Vec<usize> = (0..self.n_shards)
             .filter(|&s| new_budgets[s] != self.budgets[s])
@@ -1249,6 +1290,10 @@ impl<'j> RefreshLoop<'j> {
         // its own, but the fault plan can make it: unlike a claim OOM,
         // a transfer that keeps failing leaves the device copy
         // untrustworthy, so exhausting the budget here is terminal.
+        // When the engine's staging pool is wired, the fill stages
+        // through one leased buffer (the same pinned pool — and reuse
+        // counters — as the serving gathers).
+        let stage_lease = self.job.staging.as_ref().map(|p| p.lease());
         let mut transferred = false;
         for attempt in 0..=self.job.cfg.install_retries {
             if attempt > 0 {
@@ -1259,6 +1304,9 @@ impl<'j> RefreshLoop<'j> {
             }
             transferred = true;
             break;
+        }
+        if let (Some(pool), Some(buf)) = (self.job.staging.as_ref(), stage_lease) {
+            pool.give_back(buf);
         }
         if !transferred {
             // terminal: release every device claim, publish an empty
@@ -1412,6 +1460,7 @@ mod tests {
             headroom_per_device: 1_000_000,
             per_node_bytes: 100,
             scale: 1.0,
+            tier_headrooms: None,
         };
         // claim = 2 × peak × per_node (full scale)
         assert_eq!(policy.global_budget(0, 4), 4_000_000);
@@ -1420,6 +1469,25 @@ mod tests {
         assert_eq!(policy.global_budget(10_000_000, 4), 0);
         // single shard is the global
         assert_eq!(policy.global_budget(1_000, 1), 800_000);
+    }
+
+    #[test]
+    fn tiered_auto_budget_pays_the_claim_per_device() {
+        let policy = AutoBudgetPolicy {
+            headroom_per_device: 1_000_000,
+            per_node_bytes: 100,
+            scale: 1.0,
+            tier_headrooms: Some(vec![1_000_000, 400_000, 400_000]),
+        };
+        // claim = 2 × 1_000 × 100 = 200_000, paid out of each tier
+        assert_eq!(
+            policy.global_budget(1_000, 3),
+            (1_000_000 - 200_000) + 2 * (400_000 - 200_000)
+        );
+        // a claim that swamps the small tiers only zeroes them
+        assert_eq!(policy.global_budget(2_500, 3), 1_000_000 - 500_000);
+        // n_shards is ignored when the tier vector is authoritative
+        assert_eq!(policy.global_budget(0, 99), 1_800_000);
     }
 
     #[test]
@@ -1807,6 +1875,7 @@ mod tests {
             headroom_per_device: 500_000,
             per_node_bytes: 1_000,
             scale: 1.0,
+            tier_headrooms: None,
         };
         // startup budget assumed a peak of 100 inputs → 300_000
         let startup = policy.global_budget(100, 1);

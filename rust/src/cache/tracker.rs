@@ -75,6 +75,18 @@ pub trait WorkloadTracker: Send + Sync {
     /// Record one feature-stage visit of `v` (gather stage).
     fn record_node(&self, v: NodeId);
 
+    /// Record a whole batch's feature-stage visits in one virtual call.
+    /// The gather hot path hands its entire input slice here instead of
+    /// paying one dynamic dispatch per node — the default forwards to
+    /// [`WorkloadTracker::record_node`] in a static inner loop, so
+    /// implementations inherit identical counts for free and may
+    /// override only if they can batch more cheaply.
+    fn record_nodes(&self, nodes: &[NodeId]) {
+        for &v in nodes {
+            self.record_node(v);
+        }
+    }
+
     /// Record one adjacency-element access at CSC offset `at`
     /// (sampling stage).
     fn record_elem(&self, at: usize);

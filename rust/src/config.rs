@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cache::refresh::RefreshConfig;
 use crate::cache::tracker::{TrackerConfig, TrackerKind};
-use crate::mem::CostModel;
+use crate::mem::{parse_device_tiers, CostModel, DeviceTier};
 use crate::sampler::Fanout;
 use crate::util::parse_bytes;
 
@@ -154,6 +154,23 @@ pub struct RunConfig {
     /// Simulated device capacity; `None` = RTX 4090 scaled by the
     /// dataset's scale factor.
     pub device_capacity: Option<u64>,
+    /// Heterogeneous per-shard device tiers (`device-tiers=CAP[:GBPS],…`,
+    /// one entry per shard). `None` = every shard replicates the
+    /// uniform `device=` prototype. Budget splits and elastic
+    /// rebalancing weight shares by each tier's headroom × relative
+    /// bandwidth.
+    pub device_tiers: Option<Vec<DeviceTier>>,
+    /// Pinned staging buffers in the transfer engine's pool (the
+    /// gather stage leases one per in-flight batch; overflow falls
+    /// back to counted fresh allocations).
+    pub staging_buffers: usize,
+    /// In-flight staged H2D copies on the modeled transfer ring. 0
+    /// disables the staged path entirely (per-row miss charges, the
+    /// pre-transfer-engine behavior); 1 stages with the serial
+    /// timeline (coalesced pricing, no overlap); ≥2 overlaps batch
+    /// *i*'s copy with batch *i−1*'s compute. Logits are bit-identical
+    /// at any setting.
+    pub transfer_ring: usize,
     pub cost: CostModel,
     pub seed: u64,
     /// Artifacts directory for the PJRT backend.
@@ -184,6 +201,9 @@ impl Default for RunConfig {
             tracker: TrackerConfig::default(),
             max_batches: None,
             device_capacity: None,
+            device_tiers: None,
+            staging_buffers: 4,
+            transfer_ring: 0,
             cost: CostModel::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
@@ -229,6 +249,9 @@ pub const VALID_KEYS: &[&str] = &[
     "sketch-depth",
     "max-batches",
     "device",
+    "device-tiers",
+    "staging-buffers",
+    "transfer-ring",
     "seed",
     "artifacts",
 ];
@@ -433,6 +456,21 @@ impl RunConfig {
                 }
                 "max-batches" => self.max_batches = Some(value.parse()?),
                 "device" => self.device_capacity = Some(parse_bytes(value)?),
+                "device-tiers" => {
+                    self.device_tiers = match value {
+                        "off" | "none" => None,
+                        spec => Some(parse_device_tiers(spec)?),
+                    };
+                }
+                "staging-buffers" => {
+                    self.staging_buffers = value.parse().context("staging-buffers")?;
+                    if self.staging_buffers == 0 {
+                        bail!("staging-buffers must be positive");
+                    }
+                }
+                "transfer-ring" => {
+                    self.transfer_ring = value.parse().context("transfer-ring")?;
+                }
                 "seed" => self.seed = value.parse().context("seed")?,
                 "artifacts" => self.artifacts_dir = value.to_string(),
                 other => bail!(
@@ -463,6 +501,15 @@ impl RunConfig {
         }
         if self.shards > 1 {
             s.push_str(&format!(" shards={}", self.shards));
+        }
+        if self.transfer_ring >= 1 {
+            s.push_str(&format!(
+                " transfer(ring={} staging={})",
+                self.transfer_ring, self.staging_buffers
+            ));
+        }
+        if let Some(tiers) = &self.device_tiers {
+            s.push_str(&format!(" tiers={}", tiers.len()));
         }
         if let Some(r) = &self.refresh {
             s.push_str(&format!(
@@ -685,6 +732,7 @@ mod tests {
                 "rebalance-floor" => "0.1",
                 "tracker" => "sketch",
                 "device" => "1GB",
+                "device-tiers" => "1GB:21,512MB:10",
                 "artifacts" => "artifacts",
                 "fault" => "oom@0",
                 _ => "4",
@@ -743,6 +791,36 @@ mod tests {
         assert_eq!(r.install_backoff, Duration::from_millis(2));
         assert_eq!(r.watchdog_timeout, Duration::from_millis(250));
         assert!(RunConfig::from_args(&args(&["watchdog-ms=0"])).is_err());
+    }
+
+    #[test]
+    fn transfer_engine_knobs() {
+        // defaults: staged path off, pool at 4, uniform devices
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.transfer_ring, 0);
+        assert_eq!(cfg.staging_buffers, 4);
+        assert!(cfg.device_tiers.is_none());
+        assert!(!cfg.summary().contains("transfer("));
+        let cfg = RunConfig::from_args(&args(&[
+            "transfer-ring=2",
+            "staging-buffers=8",
+            "device-tiers=1GB:21,512MB:10",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.transfer_ring, 2);
+        assert_eq!(cfg.staging_buffers, 8);
+        let tiers = cfg.device_tiers.as_ref().unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].capacity, 1 << 30);
+        assert_eq!(tiers[1].h2d_gbps, 10.0);
+        assert!(cfg.summary().contains("transfer(ring=2 staging=8)"));
+        assert!(cfg.summary().contains("tiers=2"));
+        // off/none disarm the tier list (last writer wins)
+        let cfg = RunConfig::from_args(&args(&["device-tiers=1GB", "device-tiers=off"]))
+            .unwrap();
+        assert!(cfg.device_tiers.is_none());
+        assert!(RunConfig::from_args(&args(&["staging-buffers=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["device-tiers=1GB:-3"])).is_err());
     }
 
     #[test]

@@ -26,6 +26,20 @@ pub struct ServingMetrics {
     pub feature_ns: f64,
     /// Compute-stage total (ns, wall + modeled).
     pub compute_ns: f64,
+    /// Modeled staged-H2D time shipped through the transfer ring, ns
+    /// (zero with `transfer-ring=0`; see DESIGN.md §Transfer engine).
+    pub transfer_staged_ns: f64,
+    /// Portion of `transfer_staged_ns` the ring hid under compute, ns.
+    pub transfer_hidden_ns: f64,
+    /// Staging-buffer leases handed out across workers (serving +
+    /// refresh refills).
+    pub staging_leases: u64,
+    /// Leases the pinned pools could not serve (overflow allocations —
+    /// persistent nonzero values mean `staging-buffers` is too small).
+    pub staging_fresh_allocs: u64,
+    /// High-water mark of concurrently leased staging buffers on any
+    /// one worker.
+    pub staging_peak_leased: u64,
     /// Serving-time transfer stats (per-batch ledgers folded in:
     /// live hit ratios, plus online-refresh refill traffic).
     pub cache: CacheStats,
@@ -115,6 +129,11 @@ impl ServingMetrics {
         self.sample_ns += other.sample_ns;
         self.feature_ns += other.feature_ns;
         self.compute_ns += other.compute_ns;
+        self.transfer_staged_ns += other.transfer_staged_ns;
+        self.transfer_hidden_ns += other.transfer_hidden_ns;
+        self.staging_leases += other.staging_leases;
+        self.staging_fresh_allocs += other.staging_fresh_allocs;
+        self.staging_peak_leased = self.staging_peak_leased.max(other.staging_peak_leased);
         self.cache.merge(&other.cache);
         self.refreshes += other.refreshes;
         self.drift_checks += other.drift_checks;
@@ -137,6 +156,16 @@ impl ServingMetrics {
         self.batch_failures += other.batch_failures;
     }
 
+    /// Fraction of staged-H2D time the transfer ring hid under compute
+    /// (0.0 when nothing staged; the overlap bench gates this).
+    pub fn transfer_occupancy(&self) -> f64 {
+        if self.transfer_staged_ns <= 0.0 {
+            0.0
+        } else {
+            self.transfer_hidden_ns / self.transfer_staged_ns
+        }
+    }
+
     /// Seeds served per second of elapsed wall time.
     pub fn throughput(&self, elapsed: Duration) -> f64 {
         if elapsed.is_zero() {
@@ -155,6 +184,8 @@ impl ServingMetrics {
              throughput={:.0} seeds/s\n\
              stage totals: sample={:.1}ms feature={:.1}ms compute={:.1}ms\n\
              cache: adj-hit={:.3} feat-hit={:.3} refreshes={} (bg {:.1}ms, {} checks) swap-stalls={}\n\
+             transfer: staged={:.2}ms hidden={:.2}ms occupancy={:.2} \
+             leases={} overflow={} peak-leased={} fallbacks={}\n\
              tracker: drain={:.2}ms drained-keys={} dropped-touches={}\n\
              elastic: rebalances={} moved={} auto-budget-delta={}\n\
              fault: retries={} backoff={:.1}ms degrades={} repairs={} ({:.1}ms degraded) \
@@ -177,6 +208,13 @@ impl ServingMetrics {
             self.refresh_ns / 1e6,
             self.drift_checks,
             self.swap_stalls,
+            self.transfer_staged_ns / 1e6,
+            self.transfer_hidden_ns / 1e6,
+            self.transfer_occupancy(),
+            self.staging_leases,
+            self.staging_fresh_allocs,
+            self.staging_peak_leased,
+            self.cache.feature.staged_fallbacks,
             self.tracker_drain_ns / 1e6,
             self.tracker_drained_keys,
             self.tracker_dropped_touches,
@@ -228,6 +266,11 @@ mod tests {
         b.record_batch(2, 20);
         b.record_latency(7);
         b.sample_ns = 3.0;
+        b.transfer_staged_ns = 40.0;
+        b.transfer_hidden_ns = 30.0;
+        b.staging_leases = 9;
+        b.staging_fresh_allocs = 2;
+        b.staging_peak_leased = 5;
         b.refreshes = 2;
         b.swap_stalls = 1;
         b.shard_rebalances = 3;
@@ -248,6 +291,12 @@ mod tests {
         assert_eq!(a.seeds, 30);
         assert_eq!(a.latency.count(), 2);
         assert_eq!(a.sample_ns, 3.0);
+        assert_eq!(a.transfer_staged_ns, 40.0);
+        assert_eq!(a.transfer_hidden_ns, 30.0);
+        assert!((a.transfer_occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(a.staging_leases, 9);
+        assert_eq!(a.staging_fresh_allocs, 2);
+        assert_eq!(a.staging_peak_leased, 5);
         assert_eq!(a.refreshes, 2);
         assert_eq!(a.swap_stalls, 1);
         assert_eq!(a.shard_rebalances, 3);
@@ -264,6 +313,7 @@ mod tests {
         assert_eq!(a.batch_retries, 5);
         assert_eq!(a.batch_failures, 1);
         let rep = a.report(Duration::from_secs(1));
+        assert!(rep.contains("occupancy=0.75") && rep.contains("peak-leased=5"), "{rep}");
         assert!(rep.contains("rebalances=3"), "{rep}");
         assert!(rep.contains("auto-budget-delta=-512"), "{rep}");
         assert!(rep.contains("degrades=2") && rep.contains("batch-fail=1"), "{rep}");

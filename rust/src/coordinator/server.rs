@@ -207,7 +207,10 @@ fn worker_loop(
                 baseline,
                 rcfg,
             )
-            .device(engine.device_group());
+            .device(engine.device_group())
+            // refill gathers stage through the engine's pinned pool, so
+            // refresh traffic and serving share one buffer economy
+            .staging(engine.staging_pool());
             // the worker's fault schedule covers its refresh loop too:
             // one spec, one shared trigger budget across all sites
             if let Some(f) = engine.fault_plan() {
@@ -218,6 +221,11 @@ fn worker_loop(
                     headroom_per_device: engine.device.headroom(0),
                     per_node_bytes: per_node_claim_bytes(ds.features.row_bytes(), hidden),
                     scale: ds.spec.scale,
+                    // heterogeneous tiers re-track the claim per device
+                    tier_headrooms: engine
+                        .device
+                        .is_tiered()
+                        .then(|| engine.device.headrooms()),
                 });
             }
             refresher = Some(job.spawn());
@@ -231,6 +239,7 @@ fn worker_loop(
     // stop blocks up to one poll interval)
     let refresh_stats = refresher.map(|r| r.stop());
     let stalls = engine.runtime().swap_stalls();
+    let staging = engine.staging_pool().stats();
     let mut m = lock_unpoisoned(&metrics);
     if let Some(rs) = refresh_stats {
         m.refreshes += rs.replans;
@@ -252,6 +261,9 @@ fn worker_loop(
         m.cache.refresh.upload(rs.fill_h2d_bytes);
     }
     m.swap_stalls += stalls;
+    m.staging_leases += staging.leases;
+    m.staging_fresh_allocs += staging.fresh_allocs;
+    m.staging_peak_leased = m.staging_peak_leased.max(staging.peak_leased);
     drop(m);
 
     result
@@ -338,6 +350,8 @@ fn serve_batch(
     m.sample_ns += out.sample.total_ns();
     m.feature_ns += out.feature.total_ns();
     m.compute_ns += out.compute.total_ns();
+    m.transfer_staged_ns += out.transfer_staged_ns;
+    m.transfer_hidden_ns += out.transfer_hidden_ns;
     m.cache.merge(&out.stats);
     drop(m);
 
@@ -652,6 +666,50 @@ mod tests {
         assert_eq!(m.swap_stalls, 0, "rebalancing must never block serving");
         let rep = m.report(Duration::from_secs(1));
         assert!(rep.contains("rebalances=") && rep.contains("moved="), "{rep}");
+    }
+
+    #[test]
+    fn staged_worker_overlaps_transfers_and_reuses_buffers() {
+        let ds = Arc::new(datasets::spec("tiny").unwrap().build());
+        let mut cfg = serving_cfg();
+        // miss-heavy budget so batches actually stage; ring of 2 lets
+        // batch N+1's copy overlap batch N's compute in the model
+        cfg.budget = Some(50_000);
+        cfg.transfer_ring = 2;
+        let server = Server::start(
+            Arc::clone(&ds),
+            cfg,
+            ServerConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                policy: RoutePolicy::RoundRobin,
+                admission: AdmissionConfig::default(),
+            },
+        )
+        .unwrap();
+        for i in 0..8 {
+            let nodes = ds.test_nodes[i * 4..(i + 1) * 4].to_vec();
+            let rx = server.submit(nodes).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let logits = resp.logits.expect("staged serving returns logits");
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        let (m, _) = server.shutdown().unwrap();
+        assert!(m.cache.feature.staged_bytes > 0, "misses must stage: {m:?}");
+        assert!(m.transfer_staged_ns > 0.0, "staged copies are priced: {m:?}");
+        assert!(m.transfer_hidden_ns >= 0.0);
+        assert!(m.transfer_occupancy() <= 1.0);
+        assert!(m.staging_leases >= 8, "one lease per batch: {m:?}");
+        assert_eq!(
+            m.staging_fresh_allocs, 0,
+            "serial serving never outruns the pinned pool: {m:?}"
+        );
+        assert_eq!(m.cache.feature.staged_fallbacks, 0);
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("staged=") && rep.contains("occupancy="), "{rep}");
     }
 
     #[test]

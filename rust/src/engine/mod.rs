@@ -14,6 +14,7 @@
 
 pub mod pipeline;
 pub mod stages;
+pub mod transfer;
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -27,10 +28,12 @@ use crate::cache::tracker::WorkloadTracker;
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::graph::{datasets, Dataset, NodeId};
-use crate::mem::{DeviceGroup, DeviceMemory, PAPER_RESERVE_BYTES};
+use crate::mem::{DeviceGroup, DeviceMemory, StagingPool, StagingStats, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
 use crate::sampler::{seed_batches, SamplerPool};
 use crate::util::{FaultPlan, Rng};
+
+use self::transfer::TransferSim;
 
 /// Wall + modeled time of one pipeline stage.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -78,6 +81,14 @@ pub struct InferenceReport {
     /// the pipeline this is what shrinks while the per-stage `wall_ns`
     /// sums (stage *busy* time) stay put — their ratio is occupancy.
     pub run_wall_ns: f64,
+    /// Modeled ns of coalesced staged H2D copies (0 when `transfer-ring`
+    /// is off — misses are then priced per-row inside `feature`).
+    pub transfer_staged_ns: f64,
+    /// Staged ns the transfer ring hid under earlier batches' compute
+    /// on the modeled timeline (`TransferSim`).
+    pub transfer_hidden_ns: f64,
+    /// Staging-pool lease/return counters (`None` when staging is off).
+    pub staging: Option<StagingStats>,
 }
 
 impl InferenceReport {
@@ -130,6 +141,25 @@ impl InferenceReport {
         } else {
             stage.wall_ns / self.run_wall_ns
         }
+    }
+
+    /// Fraction of the modeled staged H2D that the transfer ring hid
+    /// under compute (0 when nothing was staged; 0 at `transfer-ring=1`
+    /// by construction — one slot is the serial timeline).
+    pub fn transfer_occupancy(&self) -> f64 {
+        if self.transfer_staged_ns == 0.0 {
+            0.0
+        } else {
+            self.transfer_hidden_ns / self.transfer_staged_ns
+        }
+    }
+
+    /// Simulated end-to-end time with the ring's overlap credited:
+    /// [`InferenceReport::sim_total_ns`] minus the staged ns hidden
+    /// under compute. Equals `sim_total_ns()` when staging is off or
+    /// the ring is 1.
+    pub fn sim_total_overlapped_ns(&self) -> f64 {
+        self.sim_total_ns() - self.transfer_hidden_ns
     }
 }
 
@@ -187,6 +217,15 @@ pub struct InferenceEngine<'d> {
     /// Deterministic fault schedule parsed from `cfg.fault` (`None` =
     /// no faults; the injection sites cost one pointer null-check).
     fault: Option<Arc<FaultPlan>>,
+    /// Pinned staging-buffer pool for the staged transfer path, sized
+    /// from the presample peak claim (`cfg.staging_buffers` buffers of
+    /// `max_input_nodes × dim` floats). Shared (`Arc`) with the
+    /// pipeline's stage threads and the refresh loop's install fills.
+    staging: Arc<StagingPool>,
+    /// Persistent transfer-ring clock for the serving path (`None`
+    /// when `transfer-ring` is off); batch runs use a fresh clock per
+    /// run instead.
+    serve_sim: Option<TransferSim>,
 }
 
 /// The per-device prototype arena `cfg` asks for (each shard of a
@@ -196,6 +235,49 @@ fn proto_device(ds: &Dataset, cfg: &RunConfig) -> DeviceMemory {
         Some(cap) => DeviceMemory::new(cap, (cap / 24).min(PAPER_RESERVE_BYTES)),
         None => DeviceMemory::rtx4090_scaled(ds.spec.scale),
     }
+}
+
+/// The (possibly tiered) device group for a prepared system: explicit
+/// `device-tiers=` build a heterogeneous group (validated one tier per
+/// shard here, where the shard count is finally known); otherwise the
+/// uniform prototype is replicated.
+fn device_group_for(
+    proto: &DeviceMemory,
+    cfg: &RunConfig,
+    prepared: &PreparedSystem,
+) -> Result<DeviceGroup> {
+    let n = prepared.runtime.n_shards();
+    match &cfg.device_tiers {
+        Some(tiers) => {
+            anyhow::ensure!(
+                tiers.len() == n,
+                "device-tiers lists {} device(s) but the run has {} shard(s) \
+                 (one tier per shard)",
+                tiers.len(),
+                n
+            );
+            Ok(DeviceGroup::tiered(tiers))
+        }
+        None => Ok(DeviceGroup::replicate(proto, n)),
+    }
+}
+
+/// Staging pool sized from the auto-budget claim inputs: each of the
+/// `staging-buffers` buffers holds the largest presampled batch's
+/// features (`max_input_nodes × dim` floats); systems with no
+/// presample profile size on first use. The buffer count is floored at
+/// the pipelined executor's maximum concurrent leases (`pipeline_depth
+/// + transfer_ring + 2`: the gather→ring queue, the ring itself, and
+/// one buffer in hand at each end) so steady state never falls off the
+/// pinned pool into counted fresh allocations.
+fn staging_pool_for(ds: &Dataset, cfg: &RunConfig, prepared: &PreparedSystem) -> StagingPool {
+    let peak = prepared.presample.as_ref().map(|s| s.max_input_nodes).unwrap_or(0);
+    let n = if cfg.transfer_ring >= 1 {
+        cfg.staging_buffers.max(cfg.pipeline_depth + cfg.transfer_ring + 2)
+    } else {
+        cfg.staging_buffers
+    };
+    StagingPool::for_workload(n, peak, ds.features.dim())
 }
 
 /// Parse (and validate) the `fault=` knob into a shared plan.
@@ -226,7 +308,7 @@ impl<'d> InferenceEngine<'d> {
         let proto = proto_device(ds, &cfg);
         let mut rng = Rng::new(cfg.seed);
         let prepared = baselines::prepare(ds, &cfg, &proto, &cfg.cost, &mut rng)?;
-        let device = Arc::new(DeviceGroup::replicate(&proto, prepared.runtime.n_shards()));
+        let device = Arc::new(device_group_for(&proto, &cfg, &prepared)?);
         claim_shards(&device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
@@ -238,6 +320,8 @@ impl<'d> InferenceEngine<'d> {
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
         let snap = ShardedHandle::new(&prepared.runtime);
+        let staging = Arc::new(staging_pool_for(ds, &cfg, &prepared));
+        let serve_sim = (cfg.transfer_ring >= 1).then(|| TransferSim::new(cfg.transfer_ring));
         Ok(InferenceEngine {
             ds,
             cfg,
@@ -250,6 +334,8 @@ impl<'d> InferenceEngine<'d> {
             snap,
             tracker: None,
             fault,
+            staging,
+            serve_sim,
         })
     }
 
@@ -262,7 +348,7 @@ impl<'d> InferenceEngine<'d> {
     ) -> Result<InferenceEngine<'d>> {
         let fault = parse_fault(&cfg)?;
         let proto = proto_device(ds, &cfg);
-        let device = Arc::new(DeviceGroup::replicate(&proto, prepared.runtime.n_shards()));
+        let device = Arc::new(device_group_for(&proto, &cfg, &prepared)?);
         claim_shards(&device, &prepared)?;
         let compute = Compute::build(
             cfg.compute,
@@ -274,6 +360,8 @@ impl<'d> InferenceEngine<'d> {
         )?;
         let pool = SamplerPool::new(cfg.fanout.clone(), ds.csc.n_nodes());
         let snap = ShardedHandle::new(&prepared.runtime);
+        let staging = Arc::new(staging_pool_for(ds, &cfg, &prepared));
+        let serve_sim = (cfg.transfer_ring >= 1).then(|| TransferSim::new(cfg.transfer_ring));
         Ok(InferenceEngine {
             ds,
             cfg,
@@ -286,6 +374,8 @@ impl<'d> InferenceEngine<'d> {
             snap,
             tracker: None,
             fault,
+            staging,
+            serve_sim,
         })
     }
 
@@ -316,6 +406,20 @@ impl<'d> InferenceEngine<'d> {
     /// consumed across *all* sites, keeping one spec one schedule.
     pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
         self.fault.clone()
+    }
+
+    /// The engine's pinned staging pool — share it with a
+    /// [`crate::cache::RefreshJob`] so hot-swap install fills reuse the
+    /// same leased buffers (and show up in the same reuse counters) as
+    /// the serving gathers.
+    pub fn staging_pool(&self) -> Arc<StagingPool> {
+        Arc::clone(&self.staging)
+    }
+
+    /// Whether gathers run the staged transfer path (`transfer-ring ≥
+    /// 1`; RAIN's batch-stateful reuse never stages).
+    fn staged_enabled(&self) -> bool {
+        self.cfg.transfer_ring >= 1 && !self.prepared.inter_batch_reuse
     }
 
     /// Run inference over the full test set (or `max_batches`).
@@ -357,6 +461,9 @@ impl<'d> InferenceEngine<'d> {
             logits_checksum: 0.0,
             batch_retries: 0,
             run_wall_ns: 0.0,
+            transfer_staged_ns: 0.0,
+            transfer_hidden_ns: 0.0,
+            staging: None,
         };
 
         // RAIN stages the entire node-feature tensor in device memory to
@@ -381,6 +488,9 @@ impl<'d> InferenceEngine<'d> {
             self.run_serial(batches, n, &mut report)
         };
         report.run_wall_ns = run0.elapsed().as_nanos() as f64;
+        if self.staged_enabled() {
+            report.staging = Some(self.staging.stats());
+        }
 
         // release RAIN's staged feature tensor
         self.device.free(0, rain_claim);
@@ -402,6 +512,12 @@ impl<'d> InferenceEngine<'d> {
         let mut prev_inputs: HashSet<NodeId> = HashSet::new();
         let mut x: Vec<f32> = Vec::new();
         let dim = self.ds.features.dim();
+        let staged_on = self.staged_enabled();
+        let fault = self.fault.clone();
+        // the ring's modeled-timeline clock: fed per batch in index
+        // order, exactly as the pipelined fold feeds it — occupancy is
+        // a property of the workload + ring, not of the scheduler
+        let mut sim = staged_on.then(|| TransferSim::new(self.cfg.transfer_ring));
 
         for (bi, seeds) in batches.iter().take(n).enumerate() {
             // one snapshot per shard per batch: both stages of a batch
@@ -422,6 +538,12 @@ impl<'d> InferenceEngine<'d> {
             report.stats.sample.merge(&sb.ledger);
 
             // ---- stage 2: feature loading ------------------------------
+            // staged mode gathers into a leased staging buffer (the
+            // compute input, zero-copy), returned after compute
+            if staged_on {
+                debug_assert!(x.is_empty());
+                x = self.staging.lease();
+            }
             let (f_ledger, f_wall, n_inputs) = stages::gather_stage(
                 self.ds,
                 &snap,
@@ -431,6 +553,10 @@ impl<'d> InferenceEngine<'d> {
                 &mut prev_inputs,
                 &mut x,
                 None,
+                staged_on.then(|| stages::StagedGather {
+                    fault: fault.as_deref(),
+                    batch_index: bi,
+                }),
             );
             report.loaded_nodes += n_inputs as u64;
             report.feature.add(f_wall, f_ledger.modeled_ns(&self.cfg.cost));
@@ -449,9 +575,23 @@ impl<'d> InferenceEngine<'d> {
                 Err(e) => {
                     // keep the scratch pooled even on the error path
                     self.pool.checkin(sampler);
+                    if staged_on {
+                        self.staging.give_back(x);
+                    }
                     return Err(e.context(format!("compute failed on batch {bi}")));
                 }
             };
+            if staged_on {
+                // compute consumed the staged buffer; its ring slot is
+                // free — return the lease and advance the ring clock
+                self.staging.give_back(std::mem::take(&mut x));
+                if let Some(sim) = sim.as_mut() {
+                    let staged_ns = f_ledger.staged_ns(&self.cfg.cost);
+                    let hidden = sim.advance(staged_ns, cb.wall_ns + cb.modeled_ns);
+                    report.transfer_staged_ns += staged_ns;
+                    report.transfer_hidden_ns += hidden;
+                }
+            }
             report.compute.add(cb.wall_ns, cb.modeled_ns);
             if let Some(l) = cb.logits {
                 report.logits_checksum += l.iter().map(|v| v.abs() as f64).sum::<f64>();
@@ -486,6 +626,11 @@ pub struct BatchOutput {
     /// Highest cache epoch across the shards the batch was served
     /// under (observability).
     pub cache_epoch: u64,
+    /// Modeled ns of this request's coalesced staged copy (0 when the
+    /// staged path is off).
+    pub transfer_staged_ns: f64,
+    /// Staged ns hidden under compute on the serving ring's clock.
+    pub transfer_hidden_ns: f64,
 }
 
 impl<'d> InferenceEngine<'d> {
@@ -515,7 +660,14 @@ impl<'d> InferenceEngine<'d> {
         // refresh install is picked up by the *next* request, never
         // mid-batch
         let tracker = self.tracker.clone();
-        let mut x = std::mem::take(&mut self.x_buf);
+        let staged_on = self.staged_enabled();
+        // staged requests gather into a leased staging buffer (returned
+        // after compute); otherwise the engine's reusable scratch
+        let mut x = if staged_on {
+            self.staging.lease()
+        } else {
+            std::mem::take(&mut self.x_buf)
+        };
         let mut sampler = self.pool.checkout();
         let snap = self.snap.acquire();
         let cache_epoch = snap.max_epoch();
@@ -547,6 +699,10 @@ impl<'d> InferenceEngine<'d> {
             &mut no_prev,
             &mut x,
             tracker.as_deref(),
+            staged_on.then(|| stages::StagedGather {
+                fault: self.fault.as_deref(),
+                batch_index: request,
+            }),
         );
         let feature = StageTimes {
             wall_ns: f_wall,
@@ -563,7 +719,8 @@ impl<'d> InferenceEngine<'d> {
         stats.sample.merge(&sb.ledger);
         stats.feature.merge(&f_ledger);
 
-        // compute (restore the gather buffer before propagating errors)
+        // compute (restore/return the gather buffer before propagating
+        // errors)
         let cb = stages::compute_stage(
             &mut self.compute,
             &self.cfg,
@@ -572,9 +729,24 @@ impl<'d> InferenceEngine<'d> {
             &sb.mb,
             &x,
         );
-        self.x_buf = x;
+        if staged_on {
+            self.staging.give_back(x);
+        } else {
+            self.x_buf = x;
+        }
         let cb = cb?;
         let compute = StageTimes { wall_ns: cb.wall_ns, modeled_ns: cb.modeled_ns };
+
+        // advance the serving ring's persistent clock: requests arrive
+        // in served order, so occupancy matches the batch runners'
+        let (transfer_staged_ns, transfer_hidden_ns) = match &mut self.serve_sim {
+            Some(sim) if staged_on => {
+                let staged_ns = f_ledger.staged_ns(&self.cfg.cost);
+                let hidden = sim.advance(staged_ns, cb.wall_ns + cb.modeled_ns);
+                (staged_ns, hidden)
+            }
+            _ => (0.0, 0.0),
+        };
 
         Ok(BatchOutput {
             logits: cb.logits,
@@ -584,6 +756,8 @@ impl<'d> InferenceEngine<'d> {
             n_inputs,
             stats,
             cache_epoch,
+            transfer_staged_ns,
+            transfer_hidden_ns,
         })
     }
 }

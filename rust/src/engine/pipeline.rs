@@ -17,18 +17,30 @@
 //!        │  SampledBatch, any order
 //!        ▼
 //!   gather thread (reorder buffer → strictly batch-index order;
-//!                  owns RAIN's previous-batch residency set)
+//!                  owns RAIN's previous-batch residency set; staged
+//!                  mode leases its gather buffer from the pinned
+//!                  staging pool and records coalesced copy plans)
 //!        │  Gathered, in order
 //!        ▼
-//!   caller thread: compute + report folding, in order
+//!   [transfer ring — staged mode only: a sync_channel(transfer_ring)
+//!    forwarder holding up to K batches whose staged H2D copies are
+//!    modeled in flight while earlier batches compute]
+//!        │  Gathered, in order
+//!        ▼
+//!   caller thread: compute + report folding, in order; returns each
+//!   staging buffer to the pool when its batch's compute completes
+//!   (zero-copy: the staged buffer *is* the compute input)
 //! ```
 //!
 //! Determinism: per-batch RNGs come from `stages::batch_rng`, the
 //! gather and compute stages run in batch-index order, and every ledger
 //! folds into the report in that same order — so counters, modeled
 //! times, and the logits checksum are bit-identical to the serial path
-//! at any `pipeline_depth` / `sample_threads` setting (the pipeline
-//! equivalence tests assert exactly this).
+//! at any `pipeline_depth` / `sample_threads` / `transfer_ring` setting
+//! (the pipeline and transfer-engine equivalence tests assert exactly
+//! this). Staging changes how moved bytes are *priced* (one coalesced
+//! plan per batch) and when the modeled timeline says they moved (the
+//! [`TransferSim`] fold, batch-index order), never which bytes move.
 
 use std::collections::{HashMap, HashSet};
 use std::panic::AssertUnwindSafe;
@@ -43,6 +55,7 @@ use crate::mem::TransferLedger;
 use crate::util::lock_unpoisoned;
 
 use super::stages::{self, SampledBatch};
+use super::transfer::TransferSim;
 use super::{InferenceEngine, InferenceReport};
 
 /// A batch that has cleared the gather stage.
@@ -64,6 +77,12 @@ pub(super) fn run_pipelined(
 ) -> Result<()> {
     let depth = engine.cfg.pipeline_depth;
     let workers = engine.cfg.sample_threads.max(1).min(n);
+    let staged_on = engine.staged_enabled();
+    let ring = engine.cfg.transfer_ring;
+    // gather leases from the pool; this thread returns buffers after
+    // compute (both clones taken before the &mut compute split below)
+    let staging = engine.staging.clone();
+    let staging_gather = staging.clone();
 
     // split the engine borrow: shared state for the stage threads,
     // the mutable compute backend for this thread
@@ -185,8 +204,14 @@ pub(super) fn run_pipelined(
                     // may already be gone during orderly shutdown)
                     let _ = ticket_tx.send(());
                     let item = slot.map(|sb| {
-                        // reuse a spent buffer when compute returned one
-                        let mut x = recycle_rx.try_recv().unwrap_or_default();
+                        // staged mode gathers straight into a leased
+                        // staging buffer; otherwise reuse a spent
+                        // buffer when compute returned one
+                        let mut x = if staged_on {
+                            staging_gather.lease()
+                        } else {
+                            recycle_rx.try_recv().unwrap_or_default()
+                        };
                         let view = snap.acquire();
                         let (ledger, wall_ns, n_inputs) = stages::gather_stage(
                             ds,
@@ -197,6 +222,10 @@ pub(super) fn run_pipelined(
                             &mut prev_inputs,
                             &mut x,
                             None,
+                            staged_on.then(|| stages::StagedGather {
+                                fault: fault.as_deref(),
+                                batch_index: idx,
+                            }),
                         );
                         Gathered { sb, x, ledger, wall_ns, n_inputs }
                     });
@@ -209,8 +238,29 @@ pub(super) fn run_pipelined(
             // on a ticket so it can observe shutdown
         });
 
-        // ---- stage 3: compute + report folding, on this thread -----
-        for (idx, g) in g_rx {
+        // ---- stage 3: transfer ring (staged mode only) -------------
+        // a bounded forwarder: at most `transfer_ring` gathered batches
+        // sit here with their staged copies modeled in flight while
+        // earlier batches compute downstream
+        let in_rx = if staged_on {
+            let (t_tx, t_rx) = mpsc::sync_channel::<(usize, Option<Gathered>)>(ring.max(1));
+            scope.spawn(move || {
+                for item in g_rx {
+                    if t_tx.send(item).is_err() {
+                        return; // downstream unwound
+                    }
+                }
+            });
+            t_rx
+        } else {
+            g_rx
+        };
+
+        // ---- stage 4: compute + report folding, on this thread -----
+        // the ring clock is fed in batch-index order, same as the
+        // serial fold, so occupancy is scheduler-independent
+        let mut sim = staged_on.then(|| TransferSim::new(ring));
+        for (idx, g) in in_rx {
             let Some(g) = g else {
                 anyhow::bail!("batch {idx} panicked twice in the sampling stage");
             };
@@ -220,12 +270,24 @@ pub(super) fn run_pipelined(
             report.loaded_nodes += g.n_inputs as u64;
             report.feature.add(g.wall_ns, g.ledger.modeled_ns(&cfg.cost));
             report.stats.feature.merge(&g.ledger);
+            let staged_ns = g.ledger.staged_ns(&cfg.cost);
 
             let cb = stages::compute_stage(compute, cfg, classes, feat_dim, &sb.mb, &g.x)
                 .with_context(|| format!("compute failed on batch {}", sb.index))?;
-            // hand the buffer back to gather (gone during shutdown: fine)
-            let _ = recycle_tx.send(g.x);
+            // zero-copy: the buffer frees only now that its consumer's
+            // compute is done — back to the pool (staged) or to gather
+            // via the recycle channel (gone during shutdown: fine)
+            if staged_on {
+                staging.give_back(g.x);
+            } else {
+                let _ = recycle_tx.send(g.x);
+            }
             report.compute.add(cb.wall_ns, cb.modeled_ns);
+            if let Some(sim) = &mut sim {
+                let hidden = sim.advance(staged_ns, cb.wall_ns + cb.modeled_ns);
+                report.transfer_staged_ns += staged_ns;
+                report.transfer_hidden_ns += hidden;
+            }
             if let Some(l) = cb.logits {
                 report.logits_checksum += l.iter().map(|v| v.abs() as f64).sum::<f64>();
             }

@@ -38,10 +38,10 @@ use crate::cache::shard::ShardView;
 use crate::cache::tracker::WorkloadTracker;
 use crate::config::RunConfig;
 use crate::graph::{Dataset, NodeId};
-use crate::mem::{CostModel, TransferLedger};
+use crate::mem::{CopyPlan, CostModel, TransferLedger};
 use crate::runtime::Compute;
 use crate::sampler::{presample::row_txns, MiniBatch, NeighborSampler};
-use crate::util::Rng;
+use crate::util::{FaultPlan, Rng};
 
 use super::model_flops;
 
@@ -98,14 +98,38 @@ pub fn sample_stage(
     SampledBatch { index, mb, ledger, wall_ns }
 }
 
-/// Stage 2: gather input-node features into `x` (reused across calls),
-/// each row from the shard that owns its node.
+/// Staged-transfer mode for [`gather_stage`]: the batch's miss rows are
+/// written into a leased staging buffer and accounted as one coalesced
+/// copy plan instead of N per-row UVA charges (DESIGN.md §Transfer
+/// engine). Carries the fault plan so an injected `stage@B` fault can
+/// fail the staged copy and exercise the per-row fallback.
+#[derive(Clone, Copy)]
+pub struct StagedGather<'a> {
+    /// Fault schedule with the `stage@B` site (usually the engine's).
+    pub fault: Option<&'a FaultPlan>,
+    /// Batch index the `stage@B` target matches against.
+    pub batch_index: usize,
+}
+
+/// Stage 2: gather input-node features into `x` (reused across calls —
+/// a leased staging buffer on the staged path), each row from the shard
+/// that owns its node.
 ///
 /// `prev_inputs` carries RAIN's previous-batch residency between
 /// consecutive calls; it is read and then replaced only when
 /// `inter_batch_reuse` is set, so callers that never serve RAIN can
-/// pass any (empty) set. Returns the stage's transfer ledger, wall ns,
-/// and the input-node count.
+/// pass any (empty) set.
+///
+/// `staged: Some(_)` switches miss accounting to the coalesced copy
+/// plan (RAIN's reuse path never stages — its "misses" are the staged
+/// tensor itself). Staging changes only *how the moved bytes are
+/// priced*, never which rows are read or what lands in `x`, so logits
+/// are bit-identical with staging on or off; hit/miss event counts are
+/// identical too. A `stage@B` fault degrades that batch to the per-row
+/// charges (byte-identical `x`, `staged_fallbacks` incremented).
+///
+/// Returns the stage's transfer ledger, wall ns, and the input-node
+/// count.
 #[allow(clippy::too_many_arguments)]
 pub fn gather_stage(
     ds: &Dataset,
@@ -116,22 +140,29 @@ pub fn gather_stage(
     prev_inputs: &mut HashSet<NodeId>,
     x: &mut Vec<f32>,
     tracker: Option<&dyn WorkloadTracker>,
+    staged: Option<StagedGather<'_>>,
 ) -> (TransferLedger, f64, usize) {
     let dim = ds.features.dim();
     let row_bytes = ds.features.row_bytes();
     let txns = row_txns(row_bytes, cost);
     let inputs = mb.input_nodes();
+    let staged = if inter_batch_reuse { None } else { staged };
+    // reuse capacity without zero-filling: every row is appended
+    // exactly once below (debug-asserted), so the resize + overwrite
+    // of the old path was pure waste
     x.clear();
-    x.resize(inputs.len() * dim, 0.0);
+    x.reserve(inputs.len() * dim);
+    // staged mode defers miss charges: row ids collect here and become
+    // one coalesced plan after the loop
+    let mut miss_rows: Vec<u64> = Vec::new();
 
     let mut ledger = TransferLedger::new();
     ledger.launch();
     let t0 = Instant::now();
     if inter_batch_reuse {
         // RAIN: rows resident from the previous batch are free
-        for (i, &v) in inputs.iter().enumerate() {
-            let out = &mut x[i * dim..(i + 1) * dim];
-            ds.features.copy_row_into(v, out);
+        for &v in inputs {
+            x.extend_from_slice(ds.features.row(v));
             if prev_inputs.contains(&v) {
                 ledger.hit(row_bytes);
             } else {
@@ -139,30 +170,64 @@ pub fn gather_stage(
             }
         }
     } else if view.has_feat_cache() {
-        for (i, &v) in inputs.iter().enumerate() {
-            let out = &mut x[i * dim..(i + 1) * dim];
+        for &v in inputs {
             if let Some(row) = view.feat_lookup(v) {
-                out.copy_from_slice(row);
+                x.extend_from_slice(row);
                 ledger.hit(row_bytes);
             } else {
-                ds.features.copy_row_into(v, out);
-                ledger.miss(row_bytes, txns);
+                x.extend_from_slice(ds.features.row(v));
+                if staged.is_some() {
+                    miss_rows.push(v as u64);
+                } else {
+                    ledger.miss(row_bytes, txns);
+                }
             }
         }
     } else {
-        for (i, &v) in inputs.iter().enumerate() {
-            ds.features.copy_row_into(v, &mut x[i * dim..(i + 1) * dim]);
-            ledger.miss(row_bytes, txns);
+        for &v in inputs {
+            x.extend_from_slice(ds.features.row(v));
+            if staged.is_some() {
+                miss_rows.push(v as u64);
+            } else {
+                ledger.miss(row_bytes, txns);
+            }
+        }
+    }
+    // coalescing is part of the staged copy's real coordination work,
+    // so it stays inside the timed section
+    if let Some(sg) = staged {
+        if !miss_rows.is_empty() {
+            let fail = sg.fault.is_some_and(|f| f.staged_copy_error(sg.batch_index));
+            if fail {
+                // degraded mode: the staged copy errored after the rows
+                // were already gathered — re-issue them as the per-row
+                // UVA charges the non-staged path would have recorded
+                for _ in 0..miss_rows.len() {
+                    ledger.miss(row_bytes, txns);
+                }
+                ledger.staged_fallback();
+            } else {
+                let events = miss_rows.len() as u64;
+                let plan = CopyPlan::coalesce(&mut miss_rows, row_bytes);
+                debug_assert!(plan.is_partition());
+                // miss *events* (pre-dedup) keep hit-ratio parity with
+                // the per-row path; bytes move once per distinct row
+                ledger.staged(events, plan.total_bytes(), plan.n_copies());
+            }
         }
     }
     let wall_ns = t0.elapsed().as_nanos() as f64;
+    debug_assert_eq!(
+        x.len(),
+        inputs.len() * dim,
+        "gather must write every input row exactly once"
+    );
 
     // online-refresh input (off the timed section: the tracker is
-    // bookkeeping, not simulated transfer work)
+    // bookkeeping, not simulated transfer work; one virtual call for
+    // the whole slice, not one per node)
     if let Some(t) = tracker {
-        for &v in inputs {
-            t.record_node(v);
-        }
+        t.record_nodes(inputs);
     }
 
     if inter_batch_reuse {

@@ -1,0 +1,186 @@
+//! Transfer-ring virtual clock: how much of each batch's staged H2D
+//! copy hides under earlier batches' compute (DESIGN.md §Transfer
+//! engine).
+//!
+//! The staged path is zero-copy — the leased staging buffer *is* the
+//! compute input — so a ring slot is not free until the batch consuming
+//! it finishes compute. With `ring = 1` there is exactly one slot:
+//! batch *i*'s transfer cannot begin until batch *i−1*'s compute ends,
+//! which is the serial timeline (zero overlap, the baseline). With
+//! `ring ≥ 2`, batch *i*'s transfer runs while batch *i−1* computes and
+//! the overlapped nanoseconds are "hidden".
+//!
+//! The clock is fed per-batch **in batch-index order** by every
+//! scheduler (serial fold, pipelined fold, serving path), so the
+//! modeled occupancy is a property of the workload and the ring depth —
+//! not of which scheduler happened to run it. It never touches data:
+//! which bytes move is decided by the gather stage; this only decides
+//! *when* the modeled timeline says they moved.
+
+use std::collections::VecDeque;
+
+/// Virtual clock for a ring of `K` in-flight staged copies feeding a
+/// single compute queue. See the module docs for slot semantics.
+#[derive(Debug)]
+pub struct TransferSim {
+    ring: usize,
+    /// When the (single) modeled H2D engine frees up.
+    transfer_free: f64,
+    /// When the (single) modeled compute queue frees up.
+    compute_free: f64,
+    /// Compute-end times of batches whose staging buffer is still
+    /// held — `len() == ring` means the next transfer must wait for
+    /// the oldest holder's compute to finish.
+    slots: VecDeque<f64>,
+    /// Recent compute busy intervals `(begin, end)` that a later
+    /// transfer may still overlap; pruned as the clock advances.
+    busy: VecDeque<(f64, f64)>,
+    staged_ns: f64,
+    hidden_ns: f64,
+}
+
+impl TransferSim {
+    /// A clock with `ring` slots (clamped to at least 1).
+    pub fn new(ring: usize) -> TransferSim {
+        TransferSim {
+            ring: ring.max(1),
+            transfer_free: 0.0,
+            compute_free: 0.0,
+            slots: VecDeque::new(),
+            busy: VecDeque::new(),
+            staged_ns: 0.0,
+            hidden_ns: 0.0,
+        }
+    }
+
+    /// Advance the clock by one batch: a staged copy of `staged_ns`
+    /// followed by that batch's compute of `compute_ns`. Returns the
+    /// nanoseconds of the copy that overlapped earlier batches'
+    /// compute (the hidden share).
+    pub fn advance(&mut self, staged_ns: f64, compute_ns: f64) -> f64 {
+        // wait for a ring slot: the oldest in-flight buffer frees when
+        // its consumer's compute completes
+        let slot_free = if self.slots.len() >= self.ring {
+            self.slots.pop_front().unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        let tb = self.transfer_free.max(slot_free);
+        let te = tb + staged_ns;
+        // overlap with *earlier* batches' compute only — this batch's
+        // own compute starts after its transfer lands
+        self.busy.retain(|&(_, ce)| ce > tb);
+        let hidden: f64 = self
+            .busy
+            .iter()
+            .map(|&(cb, ce)| (te.min(ce) - tb.max(cb)).max(0.0))
+            .sum();
+        let cb = self.compute_free.max(te);
+        let ce = cb + compute_ns;
+        self.transfer_free = te;
+        self.compute_free = ce;
+        self.busy.push_back((cb, ce));
+        self.slots.push_back(ce);
+        self.staged_ns += staged_ns;
+        self.hidden_ns += hidden;
+        hidden
+    }
+
+    /// Total staged-copy ns fed to the clock.
+    pub fn staged_ns(&self) -> f64 {
+        self.staged_ns
+    }
+
+    /// Total staged ns that overlapped compute.
+    pub fn hidden_ns(&self) -> f64 {
+        self.hidden_ns
+    }
+
+    /// Fraction of staged H2D hidden under compute (0 when nothing
+    /// was staged).
+    pub fn occupancy(&self) -> f64 {
+        if self.staged_ns == 0.0 {
+            0.0
+        } else {
+            self.hidden_ns / self.staged_ns
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_of_one_is_the_serial_timeline() {
+        let mut sim = TransferSim::new(1);
+        for _ in 0..10 {
+            assert_eq!(sim.advance(100.0, 300.0), 0.0);
+        }
+        assert_eq!(sim.hidden_ns(), 0.0);
+        assert_eq!(sim.occupancy(), 0.0);
+        assert_eq!(sim.staged_ns(), 1000.0);
+    }
+
+    #[test]
+    fn ring_of_two_hides_transfer_under_compute() {
+        let mut sim = TransferSim::new(2);
+        // batch 0 has no earlier compute to hide under
+        assert_eq!(sim.advance(100.0, 300.0), 0.0);
+        // steady state: batch i's 100ns copy fits inside batch i−1's
+        // 300ns compute entirely
+        for _ in 1..10 {
+            let h = sim.advance(100.0, 300.0);
+            assert!((h - 100.0).abs() < 1e-9, "hidden {h}");
+        }
+        assert!(sim.occupancy() > 0.85, "occupancy {}", sim.occupancy());
+    }
+
+    #[test]
+    fn transfer_longer_than_compute_is_partially_hidden() {
+        let mut sim = TransferSim::new(2);
+        sim.advance(500.0, 200.0);
+        // the 500ns copy can hide at most the 200ns of compute running
+        let h = sim.advance(500.0, 200.0);
+        assert!((h - 200.0).abs() < 1e-9, "hidden {h}");
+        assert!(sim.occupancy() < 0.5);
+    }
+
+    #[test]
+    fn deeper_rings_never_hide_less() {
+        let pattern: Vec<(f64, f64)> = (0..20)
+            .map(|i| (100.0 + 7.0 * i as f64, 250.0 + 11.0 * (i % 3) as f64))
+            .collect();
+        let run = |ring: usize| {
+            let mut sim = TransferSim::new(ring);
+            for &(t, c) in &pattern {
+                sim.advance(t, c);
+            }
+            sim.hidden_ns()
+        };
+        let (h1, h2, h4) = (run(1), run(2), run(4));
+        assert_eq!(h1, 0.0);
+        assert!(h2 > 0.0);
+        assert!(h4 >= h2);
+    }
+
+    #[test]
+    fn hidden_never_exceeds_staged() {
+        let mut sim = TransferSim::new(4);
+        for i in 0..50 {
+            let staged = 50.0 * (1 + i % 5) as f64;
+            let compute = 120.0 * (1 + i % 3) as f64;
+            let h = sim.advance(staged, compute);
+            assert!(h >= 0.0 && h <= staged + 1e-9);
+        }
+        assert!(sim.hidden_ns() <= sim.staged_ns());
+        assert!(sim.occupancy() <= 1.0);
+    }
+
+    #[test]
+    fn zero_ring_clamps_to_one() {
+        let mut sim = TransferSim::new(0);
+        sim.advance(10.0, 10.0);
+        assert_eq!(sim.advance(10.0, 10.0), 0.0);
+    }
+}

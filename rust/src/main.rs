@@ -69,6 +69,12 @@ fn print_usage() {
          \x20            compute= max-batches= device= seed= artifacts=\n\
          \x20            pipeline= sample-threads=   (pipeline=1 is serial)\n\
          \x20            shards=   (cache snapshot sharded over N devices; 1 = single)\n\
+         \x20            transfer-ring=   (staged H2D copies in flight; 0 = per-row\n\
+         \x20             UVA misses, >=1 stages misses through the pinned pool)\n\
+         \x20            staging-buffers=   (pinned staging pool size; floored at\n\
+         \x20             pipeline depth + ring + 2 when the ring is on)\n\
+         \x20            device-tiers=CAP[:GBPS],...   (heterogeneous shard devices:\n\
+         \x20             per-shard capacity + H2D bandwidth; off = uniform)\n\
          serve keys:  workers= requests= req-size= batch-wait-ms=\n\
          \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
          \x20            refresh-decay= drift-threshold=   (online re-planning)\n\
@@ -151,6 +157,25 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             100.0 * report.occupancy(&report.feature),
             100.0 * report.occupancy(&report.compute),
         );
+    }
+    if cfg.transfer_ring >= 1 {
+        println!(
+            "transfer   ring={}  staged {:.1}ms hidden {:.1}ms (occupancy {:.2})",
+            cfg.transfer_ring,
+            report.transfer_staged_ns / 1e6,
+            report.transfer_hidden_ns / 1e6,
+            report.transfer_occupancy(),
+        );
+        if let Some(s) = &report.staging {
+            println!(
+                "staging    pool={} leases={} overflow={} peak-leased={} (reuse {:.2})",
+                s.pool_buffers,
+                s.leases,
+                s.fresh_allocs,
+                s.peak_leased,
+                s.reuse_ratio()
+            );
+        }
     }
     if report.logits_checksum > 0.0 {
         println!("logits checksum {:.3e}", report.logits_checksum);

@@ -26,6 +26,16 @@ pub struct TransferLedger {
     pub hits: u64,
     /// Cache-miss events (UVA-served reads).
     pub misses: u64,
+    /// Bytes moved by coalesced staged H2D copies (miss rows gathered
+    /// into a pinned staging buffer and shipped in bulk instead of
+    /// per-row UVA reads).
+    pub staged_bytes: u64,
+    /// Coalesced copies issued for the staged bytes (the copy plan's
+    /// range count; each pays [`CostModel::h2d_copy_ns`]).
+    pub staged_copies: u64,
+    /// Staged copies that failed and degraded to the per-row UVA
+    /// fallback (fault injection / chaos testing).
+    pub staged_fallbacks: u64,
 }
 
 impl TransferLedger {
@@ -54,6 +64,24 @@ impl TransferLedger {
         self.h2d_bytes += bytes;
     }
 
+    /// Record a batch's coalesced staged transfer: `rows` miss rows
+    /// moving `bytes` total in `copies` coalesced copies. Counts the
+    /// rows as misses (hit/miss ratios are staging-agnostic) but prices
+    /// them as one batched H2D instead of per-row UVA reads.
+    #[inline]
+    pub fn staged(&mut self, rows: u64, bytes: u64, copies: u64) {
+        self.misses += rows;
+        self.staged_bytes += bytes;
+        self.staged_copies += copies;
+    }
+
+    /// Record a staged copy that failed and was re-issued per-row (the
+    /// caller re-records those rows via [`TransferLedger::miss`]).
+    #[inline]
+    pub fn staged_fallback(&mut self) {
+        self.staged_fallbacks += 1;
+    }
+
     /// Record a kernel/stage launch.
     #[inline]
     pub fn launch(&mut self) {
@@ -69,6 +97,9 @@ impl TransferLedger {
         self.launches += other.launches;
         self.hits += other.hits;
         self.misses += other.misses;
+        self.staged_bytes += other.staged_bytes;
+        self.staged_copies += other.staged_copies;
+        self.staged_fallbacks += other.staged_fallbacks;
     }
 
     /// Modeled time under `m`, in ns.
@@ -76,13 +107,20 @@ impl TransferLedger {
         m.device_ns(self.device_bytes)
             + m.uva_ns(self.uva_bytes, self.uva_txns)
             + m.h2d_ns(self.h2d_bytes)
+            + m.h2d_batched_ns(self.staged_bytes, self.staged_copies)
             + self.launches as f64 * m.launch_ns
+    }
+
+    /// Modeled ns of just the staged H2D portion — the slice the
+    /// transfer ring can hide under compute.
+    pub fn staged_ns(&self, m: &CostModel) -> f64 {
+        m.h2d_batched_ns(self.staged_bytes, self.staged_copies)
     }
 
     /// Total payload bytes that crossed PCIe (the quantity DCI
     /// minimizes).
     pub fn pcie_bytes(&self) -> u64 {
-        self.uva_bytes.max(self.uva_txns * 128) + self.h2d_bytes
+        self.uva_bytes.max(self.uva_txns * 128) + self.h2d_bytes + self.staged_bytes
     }
 
     /// Cache hit ratio over hit/miss events (Fig. 9's y-axis).
@@ -129,6 +167,31 @@ mod tests {
         let mut misses = TransferLedger::new();
         misses.miss(1 << 20, (1 << 20) / 128);
         assert!(misses.modeled_ns(&m) > 50.0 * hits.modeled_ns(&m));
+    }
+
+    #[test]
+    fn staged_counts_misses_but_prices_bulk() {
+        let m = CostModel::default();
+        let row_bytes = 2408u64;
+        let txns = 19u64;
+        let mut per_row = TransferLedger::new();
+        let mut staged = TransferLedger::new();
+        for _ in 0..100 {
+            per_row.miss(row_bytes, txns);
+        }
+        staged.staged(100, 100 * row_bytes, 37);
+        // same miss count and PCIe payload, cheaper modeled time
+        assert_eq!(per_row.misses, staged.misses);
+        assert_eq!(staged.pcie_bytes(), 100 * row_bytes);
+        assert!(per_row.modeled_ns(&m) > 1.3 * staged.modeled_ns(&m));
+        assert_eq!(staged.staged_ns(&m), staged.modeled_ns(&m));
+        // merge carries the staged counters
+        let mut sum = TransferLedger::new();
+        sum.merge(&staged);
+        sum.staged_fallback();
+        assert_eq!(sum.staged_bytes, 100 * row_bytes);
+        assert_eq!(sum.staged_copies, 37);
+        assert_eq!(sum.staged_fallbacks, 1);
     }
 
     #[test]

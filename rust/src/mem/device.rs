@@ -16,9 +16,10 @@
 
 use std::sync::Mutex;
 
+use anyhow::{bail, Context, Result};
 use thiserror::Error;
 
-use crate::util::{format_bytes, lock_unpoisoned};
+use crate::util::{format_bytes, lock_unpoisoned, parse_bytes};
 
 /// The paper's testbed capacity (RTX 4090).
 pub const RTX4090_BYTES: u64 = 24 * (1 << 30);
@@ -48,6 +49,65 @@ pub fn per_node_claim_bytes(row_bytes: u64, hidden: usize) -> u64 {
 pub fn workload_claim_bytes(peak_inputs: u64, per_node_bytes: u64, scale: f64) -> u64 {
     let workload = 2.0 * (peak_inputs * per_node_bytes) as f64;
     (workload * scale.min(1.0)) as u64
+}
+
+/// One device of a heterogeneous (mixed-GPU) node: its memory capacity
+/// and its host→device link bandwidth. Parsed from the `device-tiers=`
+/// knob ([`parse_device_tiers`]) and threaded through budget planning
+/// so big/fast devices earn proportionally more cache budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceTier {
+    /// Device memory capacity, bytes.
+    pub capacity: u64,
+    /// Effective bulk H2D bandwidth of this device's link, GB/s.
+    pub h2d_gbps: f64,
+}
+
+impl DeviceTier {
+    /// Build this tier's memory arena. The reserve scales with
+    /// capacity (1/24th, the paper's 1 GB on a 24 GB card) but never
+    /// exceeds the paper's absolute reserve — mirroring how explicit
+    /// `device=` capacities are reserved.
+    pub fn device(&self) -> DeviceMemory {
+        DeviceMemory::new(self.capacity, (self.capacity / 24).min(PAPER_RESERVE_BYTES))
+    }
+
+    /// Static cache headroom of this tier (capacity − reserve).
+    pub fn headroom(&self) -> u64 {
+        self.device().headroom()
+    }
+}
+
+/// Parse a `device-tiers=` spec: comma-separated `CAP[:GBPS]` entries,
+/// one per shard — e.g. `24GB:26,8GB:21,8GB:21` for one big/fast card
+/// and two small ones. Capacity accepts the usual byte suffixes;
+/// bandwidth defaults to the cost model's bulk H2D rate (21 GB/s).
+pub fn parse_device_tiers(spec: &str) -> Result<Vec<DeviceTier>> {
+    let mut tiers = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (cap_str, gbps) = match entry.split_once(':') {
+            Some((c, g)) => {
+                let g: f64 = g
+                    .parse()
+                    .with_context(|| format!("device tier {entry:?}: bad :GBPS bandwidth"))?;
+                if !g.is_finite() || g <= 0.0 {
+                    bail!("device tier {entry:?}: bandwidth must be positive");
+                }
+                (c, g)
+            }
+            None => (entry, 21.0),
+        };
+        let capacity = parse_bytes(cap_str)
+            .with_context(|| format!("device tier {entry:?}: bad capacity"))?;
+        if capacity == 0 {
+            bail!("device tier {entry:?}: capacity must be nonzero");
+        }
+        tiers.push(DeviceTier { capacity, h2d_gbps: gbps });
+    }
+    if tiers.is_empty() {
+        bail!("device-tiers spec {spec:?} contains no entries");
+    }
+    Ok(tiers)
 }
 
 /// Simulated GPU out-of-memory (mirrors `RuntimeError: CUDA out of
@@ -184,6 +244,10 @@ impl DeviceMemory {
 #[derive(Debug)]
 pub struct DeviceGroup {
     devices: Vec<Mutex<DeviceMemory>>,
+    /// Per-device bulk H2D bandwidth (GB/s) for heterogeneous tiers;
+    /// `None` = uniform legacy group (every device at the cost model's
+    /// default rate).
+    bandwidths: Option<Vec<f64>>,
 }
 
 impl DeviceGroup {
@@ -193,12 +257,63 @@ impl DeviceGroup {
         assert_eq!(proto.used(), 0, "replicate from an unused prototype");
         DeviceGroup {
             devices: (0..n.max(1)).map(|_| Mutex::new(proto.clone())).collect(),
+            bandwidths: None,
         }
     }
 
     /// The single-device group (the PR 2 shape).
     pub fn single(device: DeviceMemory) -> Self {
-        DeviceGroup { devices: vec![Mutex::new(device)] }
+        DeviceGroup { devices: vec![Mutex::new(device)], bandwidths: None }
+    }
+
+    /// A heterogeneous group: one device per tier, each with its own
+    /// capacity, reserve, and link bandwidth.
+    pub fn tiered(tiers: &[DeviceTier]) -> Self {
+        assert!(!tiers.is_empty(), "tiered group needs at least one tier");
+        DeviceGroup {
+            devices: tiers.iter().map(|t| Mutex::new(t.device())).collect(),
+            bandwidths: Some(tiers.iter().map(|t| t.h2d_gbps).collect()),
+        }
+    }
+
+    /// Whether this group carries per-device bandwidth tiers.
+    pub fn is_tiered(&self) -> bool {
+        self.bandwidths.is_some()
+    }
+
+    /// Device `i`'s H2D bandwidth relative to the group's fastest link
+    /// (1.0 for every device in a uniform group). Used to bias budget
+    /// shares toward fast devices: a shard on a slow link re-fills its
+    /// cache slower, so parking more budget there costs more install
+    /// time per byte.
+    pub fn bandwidth_share(&self, i: usize) -> f64 {
+        match &self.bandwidths {
+            None => 1.0,
+            Some(b) => {
+                let max = b.iter().cloned().fold(f64::MIN, f64::max);
+                if max > 0.0 {
+                    b[i] / max
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Every device's static cache headroom, in device order — the
+    /// per-device caps a budget split must respect.
+    pub fn headrooms(&self) -> Vec<u64> {
+        (0..self.devices.len()).map(|i| self.headroom(i)).collect()
+    }
+
+    /// Per-device budget weights for a tiered split: headroom ×
+    /// bandwidth share, so budget flows toward devices that are both
+    /// big (can hold it) and fast (can re-fill it cheaply). Uniform
+    /// groups weight every device equally.
+    pub fn tier_weights(&self) -> Vec<u64> {
+        (0..self.devices.len())
+            .map(|i| (self.headroom(i) as f64 * self.bandwidth_share(i)) as u64)
+            .collect()
     }
 
     pub fn n_devices(&self) -> usize {
@@ -353,6 +468,42 @@ mod tests {
         // the released bytes are reclaimable by a larger epoch 2
         g.alloc(0, 40).unwrap();
         assert_eq!(g.used(0), 80);
+    }
+
+    #[test]
+    fn parses_tier_specs() {
+        let tiers = parse_device_tiers("24GB:26,8GB,8GB:21").unwrap();
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(tiers[0].capacity, 24 * (1 << 30));
+        assert_eq!(tiers[0].h2d_gbps, 26.0);
+        assert_eq!(tiers[1].h2d_gbps, 21.0, "bandwidth defaults to bulk H2D");
+        // reserve scales with capacity but caps at the paper's 1 GB
+        assert_eq!(tiers[0].device().capacity(), 24 * (1 << 30));
+        assert_eq!(tiers[0].headroom(), 23 * (1 << 30));
+        let small = parse_device_tiers("240MB").unwrap();
+        assert_eq!(small[0].headroom(), 240 * (1 << 20) - 10 * (1 << 20));
+        for bad in ["", " , ", "0:21", "8GB:-1", "8GB:nan", "8GB:0", "xyz"] {
+            assert!(parse_device_tiers(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn tiered_group_weights_by_size_and_speed() {
+        let tiers = parse_device_tiers("1GB:20,1GB:10,2GB:20").unwrap();
+        let g = DeviceGroup::tiered(&tiers);
+        assert!(g.is_tiered());
+        assert_eq!(g.n_devices(), 3);
+        assert_eq!(g.bandwidth_share(0), 1.0);
+        assert_eq!(g.bandwidth_share(1), 0.5);
+        let w = g.tier_weights();
+        assert_eq!(w[0], 2 * w[1], "half the bandwidth → half the weight");
+        assert!(w[2] > w[0], "bigger device at equal speed outweighs");
+        assert_eq!(g.headrooms(), vec![g.headroom(0), g.headroom(1), g.headroom(2)]);
+        // uniform groups report neutral tiers
+        let u = DeviceGroup::replicate(&DeviceMemory::new(100, 10), 2);
+        assert!(!u.is_tiered());
+        assert_eq!(u.bandwidth_share(1), 1.0);
+        assert_eq!(u.tier_weights(), vec![90, 90]);
     }
 
     #[test]

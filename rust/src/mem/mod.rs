@@ -8,11 +8,13 @@
 
 pub mod clock;
 pub mod device;
+pub mod staging;
 pub mod transfer;
 
 pub use clock::TransferLedger;
 pub use device::{
-    per_node_claim_bytes, workload_claim_bytes, DeviceGroup, DeviceMemory, OomError,
-    PAPER_RESERVE_BYTES, RTX4090_BYTES,
+    parse_device_tiers, per_node_claim_bytes, workload_claim_bytes, DeviceGroup, DeviceMemory,
+    DeviceTier, OomError, PAPER_RESERVE_BYTES, RTX4090_BYTES,
 };
+pub use staging::{CopyPlan, CopyRange, StagingPool, StagingStats};
 pub use transfer::CostModel;

@@ -1,0 +1,316 @@
+//! Pinned staging pool + coalesced copy plans — the zero-copy transfer
+//! engine's host side (DESIGN.md §Transfer engine).
+//!
+//! A real deployment gathers cache-miss feature rows into *pinned*
+//! (page-locked) host buffers so the H2D DMA engine can move them at
+//! bulk PCIe bandwidth instead of issuing one random UVA transaction
+//! per row. Pinned memory is expensive to allocate/register, so it is
+//! pooled: a fixed set of fixed-size buffers is leased to a batch,
+//! filled by the gather stage, handed to the transfer ring, and
+//! returned after the consuming compute finishes (zero-copy: the
+//! staged buffer *is* the compute input, so its lease spans compute).
+//!
+//! This repo's testbed is a CPU (DESIGN.md §Substitutions), so the
+//! buffers here are ordinary `Vec<f32>`s — the *data path* (rows really
+//! are written once into the leased buffer) and the *lease/return
+//! accounting* are real, while pinning itself is part of the modeled
+//! substrate. [`CopyPlan`] records the miss set as sorted,
+//! run-length-merged row ranges: the shape of the DMA descriptor list
+//! a staged copy issues, which [`CostModel::h2d_batched_ns`] prices as
+//! per-copy launch latency + bulk bandwidth.
+//!
+//! [`CostModel::h2d_batched_ns`]: super::transfer::CostModel::h2d_batched_ns
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::lock_unpoisoned;
+
+/// One contiguous run of feature-table rows in a [`CopyPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyRange {
+    /// First row id of the run.
+    pub start_row: u64,
+    /// Number of consecutive rows.
+    pub rows: u64,
+}
+
+/// A batch's miss set as a coalesced copy plan: sorted,
+/// run-length-merged row ranges that exactly partition the (deduped)
+/// miss rows. The plan is what the staged H2D copy is priced from —
+/// `n_copies` DMA descriptors moving `total_bytes` at bulk bandwidth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CopyPlan {
+    ranges: Vec<CopyRange>,
+    row_bytes: u64,
+    total_rows: u64,
+}
+
+impl CopyPlan {
+    /// Coalesce `rows` (miss-row ids, any order; duplicates merged)
+    /// into sorted run-length ranges. Sorting happens in place —
+    /// callers hand over their scratch.
+    pub fn coalesce(rows: &mut Vec<u64>, row_bytes: u64) -> CopyPlan {
+        rows.sort_unstable();
+        rows.dedup();
+        let mut ranges: Vec<CopyRange> = Vec::new();
+        for &r in rows.iter() {
+            match ranges.last_mut() {
+                Some(last) if last.start_row + last.rows == r => last.rows += 1,
+                _ => ranges.push(CopyRange { start_row: r, rows: 1 }),
+            }
+        }
+        let plan = CopyPlan { ranges, row_bytes, total_rows: rows.len() as u64 };
+        debug_assert!(plan.is_partition(), "coalesced ranges must partition the miss set");
+        plan
+    }
+
+    /// Number of coalesced copies (DMA descriptors) the plan issues.
+    pub fn n_copies(&self) -> u64 {
+        self.ranges.len() as u64
+    }
+
+    /// Distinct rows the plan moves.
+    pub fn total_rows(&self) -> u64 {
+        self.total_rows
+    }
+
+    /// Total payload bytes the plan moves.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_rows * self.row_bytes
+    }
+
+    /// The sorted, merged ranges.
+    pub fn ranges(&self) -> &[CopyRange] {
+        &self.ranges
+    }
+
+    /// Invariant check (also the property the plan tests gate): ranges
+    /// are sorted, non-overlapping, non-adjacent (maximally merged),
+    /// and their lengths sum to exactly the distinct-row count.
+    pub fn is_partition(&self) -> bool {
+        let mut covered = 0u64;
+        let mut prev_end: Option<u64> = None;
+        for r in &self.ranges {
+            if r.rows == 0 {
+                return false;
+            }
+            if let Some(end) = prev_end {
+                // `>` alone would allow an adjacent (unmerged) pair
+                if r.start_row <= end {
+                    return false;
+                }
+            }
+            prev_end = Some(r.start_row + r.rows - 1);
+            covered += r.rows;
+        }
+        covered == self.total_rows
+    }
+}
+
+/// Lease/return counters of a [`StagingPool`], point-in-time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StagingStats {
+    /// Buffers the pool was built with (the pinned set).
+    pub pool_buffers: u64,
+    /// Lifetime leases handed out.
+    pub leases: u64,
+    /// Leases returned so far (`leases - returns` = in flight).
+    pub returns: u64,
+    /// Leases served by a fresh (unpinned, overflow) allocation
+    /// because every pooled buffer was in flight.
+    pub fresh_allocs: u64,
+    /// High-water mark of concurrently leased buffers.
+    pub peak_leased: u64,
+}
+
+impl StagingStats {
+    /// Fraction of leases served from the pinned pool (1.0 = every
+    /// lease reused a pooled buffer; the transfer bench gates this).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.leases == 0 {
+            1.0
+        } else {
+            (self.leases - self.fresh_allocs) as f64 / self.leases as f64
+        }
+    }
+}
+
+/// Fixed-size pool of reusable staging buffers with explicit
+/// lease/return accounting.
+///
+/// Sizing follows the auto-budget claim formula (§IV.A / DESIGN.md
+/// §Elastic budgets): each buffer holds the features of the largest
+/// pre-sampled batch (`peak_inputs × dim` floats) — the same
+/// `peak_inputs` whose per-node claim the workload-aware budget
+/// subtracts from device headroom, so the pool's host bytes mirror the
+/// device bytes the claim already reserves. Leases never block: when
+/// every pooled buffer is in flight the pool hands out a fresh
+/// (overflow) allocation and counts it, so a mis-sized pool degrades
+/// to per-batch allocation visibly (`fresh_allocs`) instead of
+/// deadlocking the pipeline.
+#[derive(Debug)]
+pub struct StagingPool {
+    free: Mutex<Vec<Vec<f32>>>,
+    pool_buffers: u64,
+    leases: AtomicU64,
+    returns: AtomicU64,
+    fresh_allocs: AtomicU64,
+    in_flight: AtomicU64,
+    peak_leased: AtomicU64,
+}
+
+impl StagingPool {
+    /// A pool of `n_buffers` buffers, each pre-sized to `buf_floats`
+    /// f32 capacity (0 = size on first use; capacity then sticks with
+    /// the buffer across leases, so steady state is allocation-flat
+    /// either way).
+    pub fn new(n_buffers: usize, buf_floats: usize) -> StagingPool {
+        let n = n_buffers.max(1);
+        StagingPool {
+            free: Mutex::new((0..n).map(|_| Vec::with_capacity(buf_floats)).collect()),
+            pool_buffers: n as u64,
+            leases: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+            fresh_allocs: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            peak_leased: AtomicU64::new(0),
+        }
+    }
+
+    /// Pool sized from the auto-budget claim inputs: each buffer holds
+    /// `peak_inputs` rows of `dim` floats.
+    pub fn for_workload(n_buffers: usize, peak_inputs: usize, dim: usize) -> StagingPool {
+        StagingPool::new(n_buffers, peak_inputs.saturating_mul(dim))
+    }
+
+    /// Lease a buffer (cleared, capacity preserved). Never blocks: an
+    /// exhausted pool serves a counted fresh allocation.
+    pub fn lease(&self) -> Vec<f32> {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_leased.fetch_max(now, Ordering::Relaxed);
+        match lock_unpoisoned(&self.free).pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => {
+                self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a leased buffer. The pool keeps at most its built size
+    /// (`pool_buffers`); overflow buffers are dropped on return, so a
+    /// burst never permanently grows the pinned set.
+    pub fn give_back(&self, buf: Vec<f32>) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        let prev = self.in_flight.load(Ordering::Relaxed);
+        if prev > 0 {
+            self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+        let mut free = lock_unpoisoned(&self.free);
+        if (free.len() as u64) < self.pool_buffers {
+            free.push(buf);
+        }
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> StagingStats {
+        StagingStats {
+            pool_buffers: self.pool_buffers,
+            leases: self.leases.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            peak_leased: self.peak_leased.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_merges_runs_and_dedups() {
+        let mut rows = vec![7, 3, 4, 5, 9, 9, 12];
+        let plan = CopyPlan::coalesce(&mut rows, 100);
+        assert_eq!(
+            plan.ranges(),
+            &[
+                CopyRange { start_row: 3, rows: 3 },
+                CopyRange { start_row: 7, rows: 1 },
+                CopyRange { start_row: 9, rows: 1 },
+                CopyRange { start_row: 12, rows: 1 },
+            ]
+        );
+        assert_eq!(plan.n_copies(), 4);
+        assert_eq!(plan.total_rows(), 6);
+        assert_eq!(plan.total_bytes(), 600);
+        assert!(plan.is_partition());
+    }
+
+    #[test]
+    fn coalesce_is_order_independent() {
+        let mut a = vec![10, 2, 3, 1, 40];
+        let mut b = vec![40, 1, 2, 3, 10];
+        assert_eq!(CopyPlan::coalesce(&mut a, 64), CopyPlan::coalesce(&mut b, 64));
+    }
+
+    #[test]
+    fn empty_and_single_plans() {
+        let mut none: Vec<u64> = vec![];
+        let plan = CopyPlan::coalesce(&mut none, 64);
+        assert_eq!(plan.n_copies(), 0);
+        assert_eq!(plan.total_bytes(), 0);
+        assert!(plan.is_partition());
+        let mut one = vec![5];
+        let plan = CopyPlan::coalesce(&mut one, 64);
+        assert_eq!(plan.n_copies(), 1);
+        assert_eq!(plan.total_bytes(), 64);
+    }
+
+    #[test]
+    fn pool_reuses_buffers_and_counts_overflow() {
+        let pool = StagingPool::new(2, 8);
+        let a = pool.lease();
+        let b = pool.lease();
+        assert_eq!(a.capacity(), 8);
+        // pool exhausted: third lease is a counted fresh alloc
+        let c = pool.lease();
+        assert_eq!(c.capacity(), 0);
+        let s = pool.stats();
+        assert_eq!(s.leases, 3);
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.peak_leased, 3);
+        assert!((s.reuse_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        pool.give_back(a);
+        pool.give_back(b);
+        pool.give_back(c); // overflow return is dropped, pool stays at 2
+        assert_eq!(pool.stats().returns, 3);
+        let d = pool.lease();
+        assert_eq!(d.capacity(), 8, "returned pooled buffer is reused");
+        assert_eq!(pool.stats().fresh_allocs, 1);
+    }
+
+    #[test]
+    fn pool_capacity_sticks_across_leases() {
+        let pool = StagingPool::for_workload(1, 0, 16);
+        let mut b = pool.lease();
+        assert_eq!(b.capacity(), 0, "unsized pool grows on first use");
+        b.extend_from_slice(&[1.0; 64]);
+        pool.give_back(b);
+        let b = pool.lease();
+        assert!(b.capacity() >= 64, "grown capacity survives the return");
+        assert!(b.is_empty(), "lease clears contents");
+    }
+
+    #[test]
+    fn workload_sizing_matches_claim_inputs() {
+        let pool = StagingPool::for_workload(3, 100, 16);
+        assert_eq!(pool.lease().capacity(), 1600);
+        assert_eq!(pool.stats().pool_buffers, 3);
+    }
+}

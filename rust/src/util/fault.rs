@@ -18,6 +18,7 @@
 //! | `hang@S~MS`    | install transfer    | shard `S`'s fill sleeps `MS` ms           |
 //! | `drain[xN]`    | tracker drain       | the refresh loop panics mid-drain         |
 //! | `batch@B[xN]`  | batch execution     | serving/pipeline batch `B` panics         |
+//! | `stage@B[xN]`  | staged transfer     | batch `B`'s coalesced staged copy fails → per-row fallback |
 //!
 //! `xN` defaults to 1; a count of 0 never fires (useful for templating
 //! specs). Example: `fault=oom@0x6,err@1x4,hang@2~300,drain` — shard
@@ -42,6 +43,9 @@ enum FaultKind {
     DrainPanic,
     /// A serving/pipeline batch panics mid-execution.
     BatchPanic,
+    /// A batch's coalesced staged H2D copy fails; the gather degrades
+    /// to the per-row UVA fallback (same bytes, per-row pricing).
+    StageCopyErr,
 }
 
 /// One parsed fault entry with its remaining trigger budget.
@@ -116,14 +120,15 @@ impl FaultPlan {
             "hang" => FaultKind::InstallHang,
             "drain" => FaultKind::DrainPanic,
             "batch" => FaultKind::BatchPanic,
+            "stage" => FaultKind::StageCopyErr,
             other => bail!(
                 "fault entry {entry:?}: unknown kind {other:?} \
-                 (expected oom|err|hang|drain|batch)"
+                 (expected oom|err|hang|drain|batch|stage)"
             ),
         };
         match kind {
             FaultKind::InstallOom | FaultKind::InstallErr | FaultKind::InstallHang
-            | FaultKind::BatchPanic => {
+            | FaultKind::BatchPanic | FaultKind::StageCopyErr => {
                 if target.is_none() {
                     bail!("fault entry {entry:?}: {kind_str} needs an @index target");
                 }
@@ -194,6 +199,13 @@ impl FaultPlan {
         self.fire(FaultKind::BatchPanic, Some(index as u64)).is_some()
     }
 
+    /// Site: coalesced staged H2D copy for batch `index`. True → the
+    /// caller must degrade that batch to the per-row transfer fallback
+    /// (results must be byte-identical; only the pricing degrades).
+    pub fn staged_copy_error(&self, index: usize) -> bool {
+        self.fire(FaultKind::StageCopyErr, Some(index as u64)).is_some()
+    }
+
     /// Triggers left across every entry (tests / bench sanity checks).
     pub fn remaining(&self) -> u64 {
         self.faults.iter().map(|f| f.remaining.load(Ordering::Acquire)).sum()
@@ -220,12 +232,23 @@ mod tests {
 
     #[test]
     fn parses_the_full_grammar() {
-        let p = FaultPlan::parse("oom@0x6,err@1x4,hang@2~300,drain,batch@7x2").unwrap();
-        assert_eq!(p.faults.len(), 5);
-        assert_eq!(p.spec(), "oom@0x6,err@1x4,hang@2~300,drain,batch@7x2");
-        assert_eq!(p.remaining(), 6 + 4 + 1 + 1 + 2);
+        let p = FaultPlan::parse("oom@0x6,err@1x4,hang@2~300,drain,batch@7x2,stage@3x2").unwrap();
+        assert_eq!(p.faults.len(), 6);
+        assert_eq!(p.spec(), "oom@0x6,err@1x4,hang@2~300,drain,batch@7x2,stage@3x2");
+        assert_eq!(p.remaining(), 6 + 4 + 1 + 1 + 2 + 2);
         assert_eq!(p.faults[2].delay_ms, 300);
         assert_eq!(p.faults[3].target, None);
+        assert_eq!(p.faults[5].target, Some(3));
+    }
+
+    #[test]
+    fn staged_copy_site_targets_one_batch() {
+        let p = FaultPlan::parse("stage@2x2").unwrap();
+        assert!(!p.staged_copy_error(0), "other batches never fire");
+        assert!(p.staged_copy_error(2));
+        assert!(p.staged_copy_error(2));
+        assert!(!p.staged_copy_error(2), "x2 fires exactly twice");
+        assert!(!p.batch_panic(2), "stage never crosses into the panic site");
     }
 
     #[test]
@@ -260,7 +283,9 @@ mod tests {
 
     #[test]
     fn rejects_malformed_specs() {
-        for bad in ["", " , ", "frobnicate@0", "oom", "drain@2", "hang@1", "oom@x2", "hang@1~ms"] {
+        for bad in
+            ["", " , ", "frobnicate@0", "oom", "drain@2", "hang@1", "oom@x2", "hang@1~ms", "stage"]
+        {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
         }
     }
