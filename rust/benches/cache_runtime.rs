@@ -29,7 +29,7 @@ use anyhow::{ensure, Result};
 use dci::baselines::PreparedSystem;
 use dci::bench_support::{jnum, BenchOpts, BenchReport};
 use dci::cache::planner::{CachePlanner, DciPlanner, WorkloadProfile};
-use dci::cache::refresh::{RefreshConfig, Refresher};
+use dci::cache::refresh::{RefreshConfig, RefreshJob};
 use dci::cache::tracker::{AccessTracker, WorkloadTracker};
 use dci::cache::CacheStats;
 use dci::config::{ComputeKind, RunConfig, SystemKind};
@@ -118,7 +118,7 @@ fn main() -> Result<()> {
     let tracker =
         Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
     engine.set_tracker(Arc::clone(&tracker));
-    let refresher = Refresher::spawn(
+    let refresher = RefreshJob::new(
         Arc::clone(&ds),
         Arc::clone(&runtime),
         tracker as Arc<dyn WorkloadTracker>,
@@ -135,7 +135,8 @@ fn main() -> Result<()> {
             drift_threshold: 0.02,
             ..RefreshConfig::default()
         },
-    );
+    )
+    .spawn();
 
     // phase A: serve the matched workload once (warm, tracked)
     let mut phase_a_stats = CacheStats::new();

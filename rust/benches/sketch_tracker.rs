@@ -33,7 +33,7 @@ use anyhow::{ensure, Result};
 use dci::baselines::PreparedSystem;
 use dci::bench_support::{jnum, BenchOpts, BenchReport};
 use dci::cache::planner::{DciPlanner, WorkloadProfile};
-use dci::cache::refresh::{RefreshConfig, Refresher};
+use dci::cache::refresh::{RefreshConfig, RefreshJob};
 use dci::cache::tracker::{AccessTracker, SketchTracker, WorkloadTracker};
 use dci::cache::CacheStats;
 use dci::config::{ComputeKind, RunConfig, SystemKind};
@@ -327,7 +327,7 @@ fn drift_run(
     let runtime = Arc::clone(&prepared.runtime);
     let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
     engine.set_tracker(Arc::clone(&tracker));
-    let refresher = Refresher::spawn(
+    let refresher = RefreshJob::new(
         Arc::clone(ds),
         Arc::clone(&runtime),
         tracker,
@@ -343,7 +343,8 @@ fn drift_run(
             drift_threshold: 0.02,
             ..RefreshConfig::default()
         },
-    );
+    )
+    .spawn();
 
     // phase A: warm the matched workload (tracked)
     for chunk in a_chunks {

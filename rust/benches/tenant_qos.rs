@@ -1,0 +1,539 @@
+//! Multi-tenant QoS bench: noisy-neighbor isolation under the
+//! class-weighted refresh loop.
+//!
+//! Scenario: a deployment is planned for its priority tenant (a small,
+//! recurring interactive working set). A drive-by `scan` tenant then
+//! arrives at **10× the priority QPS**, touching a working set an
+//! order of magnitude larger and mostly unrepeated. Class-blind
+//! refresh follows raw mass, so the scan traffic evicts the priority
+//! tenant's working set; the class-weighted profile (`tenant.weights`,
+//! default priority 4 / standard 1 / scan 0.05) keeps the plan pinned
+//! to the traffic that pays for the cache.
+//!
+//! Four measurements (identical request sequences — fresh engines
+//! restart the sampling streams at index 0, so hit ratios are exactly
+//! comparable):
+//!   alone        — priority served on its matched plan, no neighbor
+//!   noisy (QoS)  — priority after the weighted refresh re-planned
+//!                  under the 10× scan barrage
+//!   noisy (blind)— the same barrage under equal weights (what a
+//!                  class-blind system converges to)
+//!   scan (QoS)   — the scan tenant's own hit ratio under QoS weights
+//!
+//! Asserted invariants (the acceptance criteria):
+//!   - the scan neighbor costs priority ≤ 3 points of hit ratio
+//!     (`priority_hit_delta` ≤ 0.03) and the weighted plan is never
+//!     worse for priority than the blind one (`qos_margin` ≥ 0);
+//!   - priority p99 inflation under the barrage stays bounded;
+//!   - logits are **bit-identical** to class-blind serving for the
+//!     same serial request sequence — classes change what is cached,
+//!     never what is computed;
+//!   - under queue pressure the admission frontend sheds `scan`
+//!     while `priority` is still admitted (`scan_sheds` ≥ 1,
+//!     `priority_sheds` = 0);
+//!   - zero swap stalls: QoS re-planning never blocks serving.
+//!
+//! Always writes `BENCH_tenant.json` (override with `--json <path>`) —
+//! `ci/check_bench.py` gates the headline values.
+//!
+//! `cargo bench --bench tenant_qos [-- --quick]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use dci::baselines::PreparedSystem;
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::planner::{CachePlanner, ClassWeights, DciPlanner, WorkloadProfile};
+use dci::cache::refresh::{RefreshConfig, RefreshJob};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
+use dci::cache::CacheStats;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::coordinator::{AdmissionConfig, AdmissionController, TenantClass};
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, Dataset, NodeId};
+use dci::mem::CostModel;
+use dci::sampler::{presample, Fanout};
+use dci::util::json::s;
+use dci::util::stats::LatencyHist;
+use dci::util::Rng;
+
+struct Params {
+    dataset: &'static str,
+    fanout: &'static str,
+    /// Seeds per serving request.
+    req_size: usize,
+    /// Priority tenant's recurring working set (seeds, chunked).
+    prio_pool: usize,
+    /// Scan tenant's (much larger, mostly unrepeated) seed pool.
+    scan_pool: usize,
+    /// Scan requests per priority request — the noisy neighbor's QPS
+    /// multiple (the ISSUE scenario pins this at 10×).
+    scan_mult: usize,
+    /// Pre-sampling geometry for the priority-matched startup plan.
+    presample_bs: usize,
+    n_presample: usize,
+    /// Cache budget: sized so the priority working set fits, while the
+    /// blind (mass-follows-traffic) plan dilutes it 10:1.
+    budget: u64,
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_tenant.json");
+    let p = if opts.quick {
+        Params {
+            dataset: "tiny",
+            fanout: "3,2",
+            req_size: 32,
+            prio_pool: 96,
+            scan_pool: 800,
+            scan_mult: 10,
+            presample_bs: 32,
+            n_presample: 3,
+            budget: 60_000,
+        }
+    } else {
+        Params {
+            dataset: "products-sim",
+            fanout: "8,4,2",
+            req_size: 64,
+            prio_pool: 256,
+            scan_pool: 2048,
+            scan_mult: 10,
+            presample_bs: 64,
+            n_presample: 4,
+            budget: 8 << 20,
+        }
+    };
+
+    eprintln!("building {}...", p.dataset);
+    let ds = Arc::new(datasets::spec(p.dataset)?.build());
+    let mut cfg = RunConfig::default();
+    cfg.dataset = p.dataset.into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.req_size;
+    cfg.fanout = Fanout::parse(p.fanout)?;
+    cfg.budget = Some(p.budget);
+    cfg.compute = ComputeKind::Skip;
+    let cost = CostModel::default();
+
+    // priority pool from the head of the test set, scan pool from the
+    // tail — disjoint tenants
+    ensure!(
+        ds.test_nodes.len() >= p.prio_pool + p.scan_pool,
+        "test set too small"
+    );
+    let prio_pool: Vec<NodeId> = ds.test_nodes[..p.prio_pool].to_vec();
+    let scan_pool: Vec<NodeId> =
+        ds.test_nodes[ds.test_nodes.len() - p.scan_pool..].to_vec();
+    let prio_chunks: Vec<Vec<NodeId>> =
+        prio_pool.chunks(p.req_size).map(|c| c.to_vec()).collect();
+
+    // startup plan: matched to the priority tenant (what the
+    // deployment was planned for before the neighbor showed up)
+    let stats_p = presample(
+        &ds.csc,
+        &ds.features,
+        &prio_pool,
+        p.presample_bs,
+        &cfg.fanout,
+        p.n_presample,
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile_p = WorkloadProfile::from_presample(&stats_p);
+
+    // alone: priority on its matched plan, nobody else on the box
+    // (deterministic fill → re-deriving the plan reproduces it exactly)
+    let alone_plan = DciPlanner.plan(&ds, &profile_p, p.budget);
+    let alone = measure(&ds, &cfg, alone_plan.snapshot, p.budget, &prio_chunks)?;
+    eprintln!(
+        "  [alone] priority feat-hit={:.3} overall={:.3}",
+        alone.feat_hit_ratio(),
+        alone.overall_hit_ratio()
+    );
+
+    // noisy neighbor through the live class-tagged refresh loop, twice:
+    // QoS weights vs equal weights (the class-blind control)
+    let qos = serve_noisy(&ds, &cfg, &p, &stats_p, ClassWeights::default())?;
+    let blind = serve_noisy(&ds, &cfg, &p, &stats_p, ClassWeights::EQUAL)?;
+
+    let priority_hit_alone = alone.overall_hit_ratio();
+    let priority_hit_noisy = qos.priority.overall_hit_ratio();
+    let priority_hit_blind = blind.priority.overall_hit_ratio();
+    let priority_hit_delta = priority_hit_alone - priority_hit_noisy;
+    let qos_margin = priority_hit_noisy - priority_hit_blind;
+    let (p50_alone, _, p99_alone) = qos.alone_lat.quantiles_ns();
+    let (p50_noisy, _, p99_noisy) = qos.noisy_lat.quantiles_ns();
+    let p99_inflation = if p99_alone > 0.0 { p99_noisy / p99_alone } else { 1.0 };
+
+    // bit-identity: the same serial request sequence, class-tagged vs
+    // class-blind, must produce identical logits to the last bit
+    let (logits_match, identity_batches) =
+        logits_identity(&ds, &cfg, &profile_p, p.budget, &prio_chunks, &scan_pool, &p)?;
+
+    // shed order under queue pressure: scan is turned away while
+    // priority (and standard) still fit
+    let admission = AdmissionController::new(AdmissionConfig {
+        max_queued_seeds: 1_000,
+        ..AdmissionConfig::default()
+    });
+    for _ in 0..4 {
+        // 600 queued: over scan's 0.5 share, under everyone else's
+        let _ = admission.admit("scan:crawler", p.req_size, 600);
+        admission
+            .admit("dashboard", p.req_size, 600)
+            .expect("standard must still be admitted where scan sheds");
+        admission
+            .admit("priority:svc", p.req_size, 600)
+            .expect("priority must still be admitted where scan sheds");
+    }
+    let sheds = admission.shed_counts();
+
+    let mut report = BenchReport::new(
+        "Multi-tenant QoS: priority isolation under a 10x scan neighbor",
+        &["measurement", "feat-hit%", "adj-hit%", "overall%"],
+    );
+    for (label, st) in [
+        ("priority alone (matched plan)", &alone),
+        ("priority + 10x scan, QoS weights", &qos.priority),
+        ("priority + 10x scan, class-blind", &blind.priority),
+        ("scan tenant under QoS weights", &qos.scan),
+    ] {
+        report.row(
+            &[
+                label.to_string(),
+                format!("{:.1}", 100.0 * st.feat_hit_ratio()),
+                format!("{:.1}", 100.0 * st.adj_hit_ratio()),
+                format!("{:.1}", 100.0 * st.overall_hit_ratio()),
+            ],
+            vec![
+                ("measurement", s(label)),
+                ("feat_hit", jnum(st.feat_hit_ratio())),
+                ("adj_hit", jnum(st.adj_hit_ratio())),
+                ("overall_hit", jnum(st.overall_hit_ratio())),
+            ],
+        );
+    }
+    report.row(
+        &[
+            "qos: priority".into(),
+            format!("delta {:.3}", priority_hit_delta),
+            format!("margin {:.3}", qos_margin),
+            format!("p99 x{:.2}", p99_inflation),
+        ],
+        vec![
+            ("measurement", s("qos")),
+            ("priority_hit_alone", jnum(priority_hit_alone)),
+            ("priority_hit_noisy", jnum(priority_hit_noisy)),
+            ("priority_hit_blind", jnum(priority_hit_blind)),
+            ("priority_hit_delta", jnum(priority_hit_delta)),
+            ("qos_margin", jnum(qos_margin)),
+            ("scan_hit_noisy", jnum(qos.scan.overall_hit_ratio())),
+            ("priority_p50_alone_ms", jnum(p50_alone / 1e6)),
+            ("priority_p99_alone_ms", jnum(p99_alone / 1e6)),
+            ("priority_p50_noisy_ms", jnum(p50_noisy / 1e6)),
+            ("priority_p99_noisy_ms", jnum(p99_noisy / 1e6)),
+            ("p99_inflation", jnum(p99_inflation)),
+            ("replans_qos", jnum(qos.replans as f64)),
+            ("replans_blind", jnum(blind.replans as f64)),
+            ("swap_stalls", jnum((qos.stalls + blind.stalls) as f64)),
+        ],
+    );
+    report.row(
+        &[
+            "identity + sheds".into(),
+            format!("logits x{identity_batches}"),
+            format!("match {logits_match}"),
+            format!("sheds {:?}", sheds),
+        ],
+        vec![
+            ("measurement", s("identity")),
+            ("logits_match", jnum(logits_match)),
+            ("identity_batches", jnum(identity_batches as f64)),
+            ("priority_sheds", jnum(sheds[TenantClass::Priority.index()] as f64)),
+            ("standard_sheds", jnum(sheds[TenantClass::Standard.index()] as f64)),
+            ("scan_sheds", jnum(sheds[TenantClass::Scan.index()] as f64)),
+        ],
+    );
+    report.finish(&opts)?;
+
+    println!(
+        "priority hit: alone {:.3} -> noisy(QoS) {:.3} (delta {:.3}) vs blind {:.3} \
+         (margin {:.3}); p99 x{:.2}; logits_match={logits_match}; sheds={sheds:?}",
+        priority_hit_alone,
+        priority_hit_noisy,
+        priority_hit_delta,
+        priority_hit_blind,
+        qos_margin,
+        p99_inflation
+    );
+
+    // the acceptance criteria this bench exists to hold
+    ensure!(
+        priority_hit_delta <= 0.03,
+        "the 10x scan neighbor cost priority {:.1} points of hit ratio (budget: 3)",
+        100.0 * priority_hit_delta
+    );
+    ensure!(
+        qos_margin >= -0.005,
+        "weighted refresh must never serve priority worse than class-blind \
+         (margin {qos_margin:.3})"
+    );
+    ensure!(
+        p99_inflation < 25.0,
+        "priority p99 inflated {p99_inflation:.1}x under the scan barrage"
+    );
+    ensure!(logits_match == 1.0, "class tags changed the computed logits");
+    ensure!(
+        sheds[TenantClass::Scan.index()] >= 1,
+        "the scan barrage must trip the class shed ledger"
+    );
+    ensure!(
+        sheds[TenantClass::Priority.index()] == 0,
+        "priority must never shed while scan still fits"
+    );
+    ensure!(
+        qos.stalls + blind.stalls == 0,
+        "QoS re-planning must never block serving on a snapshot swap"
+    );
+    Ok(())
+}
+
+/// Outcome of one live noisy-neighbor run.
+struct NoisyOutcome {
+    /// Priority hit ratio on the post-refresh live snapshot.
+    priority: CacheStats,
+    /// Scan hit ratio on the same snapshot (one wave's worth).
+    scan: CacheStats,
+    /// Per-request priority latencies before the neighbor arrived.
+    alone_lat: LatencyHist,
+    /// Per-request priority latencies during the barrage.
+    noisy_lat: LatencyHist,
+    replans: u64,
+    stalls: u64,
+}
+
+/// Serve the priority tenant, then the 10× scan barrage, through a live
+/// engine + class-tagged tracker + refresh loop configured with
+/// `weights`; measure the re-planned snapshot with fresh engines.
+fn serve_noisy(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    p: &Params,
+    stats_p: &dci::sampler::PresampleStats,
+    weights: ClassWeights,
+) -> Result<NoisyOutcome> {
+    let prio_pool: Vec<NodeId> = ds.test_nodes[..p.prio_pool].to_vec();
+    let scan_pool: Vec<NodeId> =
+        ds.test_nodes[ds.test_nodes.len() - p.scan_pool..].to_vec();
+    let prio_chunks: Vec<Vec<NodeId>> =
+        prio_pool.chunks(p.req_size).map(|c| c.to_vec()).collect();
+
+    let profile_p = WorkloadProfile::from_presample(stats_p);
+    let plan = DciPlanner.plan(ds, &profile_p, p.budget);
+    let prepared =
+        PreparedSystem::from_snapshot(SystemKind::Dci, plan.snapshot, None, p.budget);
+    let runtime = Arc::clone(&prepared.runtime);
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    engine.set_tracker(Arc::clone(&tracker));
+    let refresher = RefreshJob::new(
+        Arc::clone(ds),
+        Arc::clone(&runtime),
+        tracker as Arc<dyn WorkloadTracker>,
+        Box::new(DciPlanner),
+        vec![p.budget],
+        stats_p.node_visits.clone(),
+        RefreshConfig {
+            check_interval: Duration::from_millis(20),
+            min_batches: 4,
+            decay: 0.7,
+            drift_threshold: 0.02,
+            class_weights: weights,
+            ..RefreshConfig::default()
+        },
+    )
+    .spawn();
+
+    // phase 1: priority alone on its matched plan (warm + latency
+    // reference). The mix matches the plan, so no re-plan triggers.
+    let mut alone_lat = LatencyHist::new();
+    for _ in 0..3 {
+        for chunk in &prio_chunks {
+            let t = Instant::now();
+            engine.infer_once_as(chunk, TenantClass::Priority)?;
+            alone_lat.record_ns(t.elapsed().as_nanos() as u64);
+        }
+    }
+
+    // phase 2: the scan neighbor arrives at 10x QPS, walking fresh
+    // slices of its (much larger) pool each request. Drive waves until
+    // the refresher re-plans from the class-weighted profile.
+    let swaps0 = runtime.swaps();
+    let mut noisy_lat = LatencyHist::new();
+    let mut scan_off = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut waves = 0u64;
+    let mut wave = |engine: &mut InferenceEngine<'_>,
+                    noisy_lat: &mut LatencyHist,
+                    scan_off: &mut usize|
+     -> Result<()> {
+        for chunk in &prio_chunks {
+            for _ in 0..p.scan_mult {
+                let scan_chunk: Vec<NodeId> = (0..p.req_size)
+                    .map(|i| scan_pool[(*scan_off + i) % scan_pool.len()])
+                    .collect();
+                *scan_off += p.req_size;
+                engine.infer_once_as(&scan_chunk, TenantClass::Scan)?;
+            }
+            let t = Instant::now();
+            engine.infer_once_as(chunk, TenantClass::Priority)?;
+            noisy_lat.record_ns(t.elapsed().as_nanos() as u64);
+        }
+        Ok(())
+    };
+    while runtime.swaps() == swaps0 && Instant::now() < deadline {
+        wave(&mut engine, &mut noisy_lat, &mut scan_off)?;
+        waves += 1;
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    ensure!(
+        runtime.swaps() > swaps0,
+        "refresh never triggered after {waves} noisy waves (drift {:.3})",
+        refresher.stats().last_drift
+    );
+    // settle: let the decayed per-class profile converge on the mix
+    for _ in 0..6 {
+        wave(&mut engine, &mut noisy_lat, &mut scan_off)?;
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let rstats = refresher.stop();
+    let stalls = runtime.swap_stalls();
+
+    // measure the live (re-planned) snapshot with fresh engines — the
+    // sampling streams restart at index 0, exactly as in `measure`
+    let live = |chunks: &[Vec<NodeId>]| -> Result<CacheStats> {
+        let prepared = PreparedSystem {
+            kind: SystemKind::Dci,
+            runtime: Arc::clone(&runtime),
+            cache_budget: p.budget,
+            shard_budgets: vec![p.budget],
+            presample: None,
+            batch_order: None,
+            inter_batch_reuse: false,
+            preprocess_ns: 0.0,
+            preprocess_wall_ns: 0.0,
+        };
+        let mut e = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+        run_chunks(&mut e, chunks)
+    };
+    let priority = live(&prio_chunks)?;
+    let scan_wave: Vec<Vec<NodeId>> = (0..p.scan_mult * prio_chunks.len())
+        .map(|r| {
+            (0..p.req_size)
+                .map(|i| scan_pool[(r * p.req_size + i) % scan_pool.len()])
+                .collect()
+        })
+        .collect();
+    let scan = live(&scan_wave)?;
+    eprintln!(
+        "  [noisy w={:?}] replans={} priority-hit={:.3} scan-hit={:.3} stalls={stalls}",
+        weights.0,
+        rstats.replans,
+        priority.overall_hit_ratio(),
+        scan.overall_hit_ratio()
+    );
+    Ok(NoisyOutcome {
+        priority,
+        scan,
+        alone_lat,
+        noisy_lat,
+        replans: rstats.replans,
+        stalls,
+    })
+}
+
+/// Serve the same serial request sequence twice — class-tagged vs
+/// class-blind — on identically planned engines with real (reference)
+/// compute, and compare every logit bit-for-bit.
+fn logits_identity(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    profile_p: &WorkloadProfile,
+    budget: u64,
+    prio_chunks: &[Vec<NodeId>],
+    scan_pool: &[NodeId],
+    p: &Params,
+) -> Result<(f64, usize)> {
+    let mut id_cfg = cfg.clone();
+    id_cfg.compute = ComputeKind::Reference;
+    id_cfg.hidden = 16;
+    // a short mixed sequence: 2 priority requests, 4 scan requests
+    let mut seq: Vec<(TenantClass, Vec<NodeId>)> = Vec::new();
+    for (i, chunk) in prio_chunks.iter().take(2).enumerate() {
+        seq.push((TenantClass::Priority, chunk.clone()));
+        for r in 0..2 {
+            let chunk: Vec<NodeId> = (0..p.req_size)
+                .map(|j| scan_pool[((i * 2 + r) * p.req_size + j) % scan_pool.len()])
+                .collect();
+            seq.push((TenantClass::Scan, chunk));
+        }
+    }
+    let mut tagged = identity_engine(ds, &id_cfg, profile_p, budget)?;
+    let mut blind = identity_engine(ds, &id_cfg, profile_p, budget)?;
+    let mut matched = true;
+    for (class, chunk) in &seq {
+        let a = tagged.infer_once_as(chunk, *class)?;
+        let b = blind.infer_once(chunk)?; // everything Standard
+        let (Some(la), Some(lb)) = (a.logits, b.logits) else {
+            anyhow::bail!("reference compute produced no logits");
+        };
+        matched &= la.len() == lb.len()
+            && la
+                .iter()
+                .zip(lb.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+    }
+    Ok((if matched { 1.0 } else { 0.0 }, seq.len()))
+}
+
+/// A fresh engine on the (deterministically re-derived) priority plan
+/// with a tracker attached, so the class-tagged record path runs live
+/// during the identity check.
+fn identity_engine<'a>(
+    ds: &'a Arc<Dataset>,
+    id_cfg: &RunConfig,
+    profile_p: &WorkloadProfile,
+    budget: u64,
+) -> Result<InferenceEngine<'a>> {
+    let plan = DciPlanner.plan(ds, profile_p, budget);
+    let prepared = PreparedSystem::from_snapshot(SystemKind::Dci, plan.snapshot, None, budget);
+    let mut e = InferenceEngine::with_prepared(ds, id_cfg.clone(), prepared)?;
+    e.set_tracker(Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges())));
+    Ok(e)
+}
+
+/// Serve `chunks` on a fresh engine built around `snapshot`; request
+/// indices start at 0, so every measurement sees identical sampling
+/// streams.
+fn measure(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    snapshot: dci::cache::CacheSnapshot,
+    budget: u64,
+    chunks: &[Vec<NodeId>],
+) -> Result<CacheStats> {
+    let prepared = PreparedSystem::from_snapshot(SystemKind::Dci, snapshot, None, budget);
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    run_chunks(&mut engine, chunks)
+}
+
+fn run_chunks(engine: &mut InferenceEngine<'_>, chunks: &[Vec<NodeId>]) -> Result<CacheStats> {
+    let mut stats = CacheStats::new();
+    for chunk in chunks {
+        stats.merge(&engine.infer_once(chunk)?.stats);
+    }
+    Ok(stats)
+}

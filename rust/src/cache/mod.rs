@@ -57,7 +57,7 @@ pub use alloc::{allocate, CacheAllocation};
 pub use feat_cache::FeatCache;
 pub use planner::{
     cap_shares, cap_shares_per_device, planner_for, split_budget, split_budget_weighted,
-    CachePlan, CachePlanner, WorkloadProfile,
+    CachePlan, CachePlanner, ClassWeights, WorkloadProfile,
 };
 pub use refresh::{AutoBudgetPolicy, RefreshConfig, RefreshJob, RefreshStats, Refresher};
 pub use runtime::{CacheSnapshot, DualCacheRuntime, SnapshotHandle};

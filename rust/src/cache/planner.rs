@@ -19,7 +19,10 @@
 
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
 use crate::config::SystemKind;
+use crate::coordinator::admission::{TenantClass, N_CLASSES};
 use crate::graph::{Dataset, NodeId};
 use crate::mem::TransferLedger;
 use crate::sampler::PresampleStats;
@@ -63,6 +66,67 @@ impl<'a> WorkloadProfile<'a> {
         } else {
             self.t_sample_ns / total
         }
+    }
+}
+
+/// Per-admission-class profile weights the planner's input is composed
+/// under (`tenant.weights=priority,standard,scan`). The refresh loop
+/// keeps one decayed node-visit profile per
+/// [`TenantClass`](crate::coordinator::TenantClass) and feeds every
+/// planner the weighted sum `Σ_c weight[c] · mass_c[v]`, so the fills
+/// maximize a *class-weighted* hit ratio rather than the raw one: one
+/// priority touch outbids `w_priority / w_scan` scan touches for the
+/// same cache bytes. Only ratios matter — the fills compare relative
+/// magnitudes, so `[4, 1, 0.05]` and `[8, 2, 0.1]` plan identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassWeights(
+    /// Weights in [`TenantClass::ALL`](crate::coordinator::TenantClass::ALL)
+    /// order: priority, standard, scan.
+    pub [f64; N_CLASSES],
+);
+
+impl Default for ClassWeights {
+    /// Priority 4, standard 1, scan 0.05 — scan traffic is floored
+    /// near, deliberately not at, zero, so a scan-only deployment
+    /// still caches its working set instead of nothing.
+    fn default() -> Self {
+        ClassWeights([4.0, 1.0, 0.05])
+    }
+}
+
+impl ClassWeights {
+    /// All classes weighted equally: reduces every plan to the
+    /// class-blind one bit-for-bit (held by property tests in
+    /// [`crate::cache::refresh`]).
+    pub const EQUAL: ClassWeights = ClassWeights([1.0; N_CLASSES]);
+
+    /// Parse `"p,s,c"` — one non-negative finite weight per class, in
+    /// [`TenantClass::ALL`](crate::coordinator::TenantClass::ALL)
+    /// (priority, standard, scan) order.
+    pub fn parse(s: &str) -> Result<ClassWeights> {
+        let parts: Vec<&str> = s.split(',').collect();
+        if parts.len() != N_CLASSES {
+            bail!(
+                "tenant.weights needs exactly {N_CLASSES} comma-separated values \
+                 (priority,standard,scan), got {s:?}"
+            );
+        }
+        let mut w = [0.0f64; N_CLASSES];
+        for (slot, part) in w.iter_mut().zip(&parts) {
+            let v: f64 = part.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad weight {part:?} in tenant.weights={s:?}")
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("tenant.weights entries must be finite and non-negative, got {part:?}");
+            }
+            *slot = v;
+        }
+        Ok(ClassWeights(w))
+    }
+
+    /// This class's weight.
+    pub fn weight(&self, class: TenantClass) -> f64 {
+        self.0[class.index()]
     }
 }
 
@@ -662,6 +726,24 @@ mod tests {
         cap_shares(&mut a, 40);
         cap_shares_per_device(&mut b, &[40; 4]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn class_weights_parse_and_default() {
+        let w = ClassWeights::default();
+        assert_eq!(w.weight(TenantClass::Priority), 4.0);
+        assert_eq!(w.weight(TenantClass::Standard), 1.0);
+        assert_eq!(w.weight(TenantClass::Scan), 0.05);
+        assert_eq!(ClassWeights::parse("4,1,0.05").unwrap(), w);
+        assert_eq!(
+            ClassWeights::parse(" 2, 1 , 0 ").unwrap(),
+            ClassWeights([2.0, 1.0, 0.0])
+        );
+        assert_eq!(ClassWeights::EQUAL, ClassWeights([1.0, 1.0, 1.0]));
+        // wrong arity, junk, negatives, and non-finite all fail loudly
+        for bad in ["1,2", "1,2,3,4", "a,b,c", "1,-2,3", "1,inf,3", ""] {
+            assert!(ClassWeights::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

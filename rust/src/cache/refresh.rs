@@ -57,6 +57,17 @@
 //!   the global budget tracks the workload instead of freezing at its
 //!   pre-sampling estimate.
 //!
+//! **Multi-tenant QoS** (DESIGN.md §Multi-tenant QoS). Drained windows
+//! carry an optional per-admission-class split of the node-visit
+//! counts ([`DrainedWindow::class_node_visits`](super::tracker::DrainedWindow::class_node_visits)); the loop keeps one
+//! decayed profile per [`TenantClass`] and composes what every drift
+//! test, re-split, and re-plan consumes as the class-weighted sum
+//! `Σ_c class_weights[c] · mass_c[v]`
+//! ([`RefreshConfig::class_weights`]). Priority traffic therefore
+//! outbids scan traffic for cache bytes at the same raw visit rate,
+//! while an untagged (all-standard) stream — whose windows carry no
+//! split — reproduces the unweighted profile bit-for-bit.
+//!
 //! Every install is accounted against the shard's own
 //! [`DeviceGroup`](crate::mem::DeviceGroup) arena (when one is
 //! attached) in **two-phase claim-before-release order**: the incoming
@@ -109,6 +120,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::admission::{TenantClass, N_CLASSES};
 use crate::graph::{Csc, Dataset, NodeId};
 use crate::mem::{DeviceGroup, StagingPool};
 use crate::util::{lock_unpoisoned, FaultPlan};
@@ -117,7 +129,7 @@ use super::runtime::CacheSnapshot;
 
 use super::planner::{
     cap_shares, cap_shares_per_device, split_budget, split_budget_weighted, CachePlanner,
-    WorkloadProfile,
+    ClassWeights, WorkloadProfile,
 };
 use super::shard::{elem_owner, ShardRouter, ShardedRuntime};
 use super::tracker::WorkloadTracker;
@@ -183,6 +195,15 @@ pub struct RefreshConfig {
     /// re-plan + retry backoffs), or a merely slow check is treated as
     /// hung.
     pub watchdog_timeout: Duration,
+    /// Per-admission-class weights applied when composing the decayed
+    /// per-class node-visit profiles into the single profile every
+    /// re-plan, drift test, and re-split consumes
+    /// (`tenant.weights=p,s,c`; see [`ClassWeights`]). Exactly
+    /// irrelevant while no request carries a non-standard class: an
+    /// untagged stream accumulates entirely in the standard class,
+    /// whose default weight of 1 reproduces the unweighted profile
+    /// bit-for-bit.
+    pub class_weights: ClassWeights,
 }
 
 impl Default for RefreshConfig {
@@ -200,6 +221,7 @@ impl Default for RefreshConfig {
             install_retries: 3,
             install_backoff: Duration::from_millis(5),
             watchdog_timeout: Duration::from_secs(2),
+            class_weights: ClassWeights::default(),
         }
     }
 }
@@ -466,6 +488,13 @@ impl Refresher {
     /// global node-visit profile the runtime's live snapshots were
     /// planned from; `shard_budgets` is the per-shard byte budget
     /// every re-plan starts within (len = shard count).
+    ///
+    /// Deprecated: there is now exactly one construction path for
+    /// refresh loops, attachments or not — build the job with
+    /// [`RefreshJob::new`] and call [`RefreshJob::spawn`]. This shim
+    /// keeps pre-existing call sites compiling and behaves
+    /// identically.
+    #[deprecated(note = "build with RefreshJob::new(...) and call .spawn() instead")]
     pub fn spawn(
         ds: Arc<Dataset>,
         runtime: Arc<ShardedRuntime>,
@@ -878,6 +907,29 @@ fn masked_profile(
     (nv, ec)
 }
 
+/// Compose the per-class decayed profiles into the single
+/// class-weighted node profile every consumer reads:
+/// `weighted[v] = Σ_c weights[c] · mass_c[v]`.
+///
+/// The bit-identity contract for class-blind streams rides on f64
+/// exactness here: an untagged stream holds all its mass in the
+/// standard class, the absent classes contribute no terms at all (not
+/// even `+ 0.0`), and the standard term `1.0 · m` is exact — so under
+/// the default weights the composition *is* the unweighted profile,
+/// bit-for-bit.
+fn weighted_profile(
+    accs: &[DecayedSparse; N_CLASSES],
+    weights: &ClassWeights,
+) -> DecayedSparse {
+    let mut out = DecayedSparse::new(None);
+    for (acc, &w) in accs.iter().zip(weights.0.iter()) {
+        for (k, m) in acc.iter() {
+            *out.mass.entry(k).or_insert(0.0) += w * m;
+        }
+    }
+    out
+}
+
 /// The refresh thread's owned state: the decayed profiles, the drift
 /// baseline, and — elastic budgets — the live per-shard budget vector
 /// and decayed peak claim.
@@ -896,7 +948,15 @@ struct RefreshLoop<'j> {
     startup_global: u64,
     /// Sparse drift baseline: the nonzero planned masses.
     planned: HashMap<u64, f64>,
-    acc_nv: DecayedSparse,
+    /// Per-admission-class decayed node-visit profiles (index =
+    /// `TenantClass::index()`). Untagged windows fold entirely into
+    /// the standard class; the class-weighted composition every
+    /// consumer reads is built by [`RefreshLoop::weighted_nv`].
+    acc_nv: [DecayedSparse; N_CLASSES],
+    /// Decayed element-access profile — deliberately class-blind: a
+    /// per-class split would multiply the O(touched-edges) drain state
+    /// by `N_CLASSES` for a signal the adjacency fill barely uses (see
+    /// `WorkloadTracker::record_elem`).
     acc_ec: DecayedSparse,
     acc_ts: f64,
     acc_tf: f64,
@@ -925,7 +985,7 @@ impl<'j> RefreshLoop<'j> {
             global,
             startup_global: global,
             planned: planned_map(&job.planned_visits),
-            acc_nv: DecayedSparse::new(caps.map(|(n, _)| n)),
+            acc_nv: std::array::from_fn(|_| DecayedSparse::new(caps.map(|(n, _)| n))),
             acc_ec: DecayedSparse::new(caps.map(|(_, e)| e)),
             acc_ts: 0.0,
             acc_tf: 0.0,
@@ -1018,19 +1078,38 @@ impl<'j> RefreshLoop<'j> {
         let drain0 = Instant::now();
         let w = self.job.tracker.drain();
         if w.batches > 0 {
-            self.acc_nv.decay(cfg.decay);
+            for acc in self.acc_nv.iter_mut() {
+                acc.decay(cfg.decay);
+            }
             self.acc_ec.decay(cfg.decay);
             self.acc_ts = self.acc_ts * cfg.decay + w.t_sample_ns;
             self.acc_tf = self.acc_tf * cfg.decay + w.t_feature_ns;
             self.peak_inputs =
                 (self.peak_inputs * cfg.decay).max(w.peak_input_nodes as f64);
-            for &(v, c) in &w.node_visits {
-                self.acc_nv.add(v as u64, c as f64);
+            // a tagged window splits its node counts per class; an
+            // untagged one (the common all-standard case) folds the
+            // aggregate into the standard profile, so class-blind
+            // serving never pays for — or is perturbed by — the split
+            if w.class_node_visits.is_empty() {
+                let std_acc = &mut self.acc_nv[TenantClass::Standard.index()];
+                for &(v, c) in &w.node_visits {
+                    std_acc.add(v as u64, c as f64);
+                }
+            } else {
+                for &(v, per) in &w.class_node_visits {
+                    for (acc, &c) in self.acc_nv.iter_mut().zip(per.iter()) {
+                        if c > 0 {
+                            acc.add(v as u64, c as f64);
+                        }
+                    }
+                }
             }
             for &(e, c) in &w.elem_counts {
                 self.acc_ec.add(e, c as f64);
             }
-            self.acc_nv.prune();
+            for acc in self.acc_nv.iter_mut() {
+                acc.prune();
+            }
             self.acc_ec.prune();
             self.stats.drained_keys +=
                 (w.node_visits.len() + w.elem_counts.len()) as u64;
@@ -1040,11 +1119,21 @@ impl<'j> RefreshLoop<'j> {
         self.stats.drain_ns += drain0.elapsed().as_nanos() as f64;
     }
 
-    /// The PR 3 within-shard drift detection + per-shard re-plans.
+    /// The class-weighted node profile consumed by every drift test,
+    /// re-split, and re-plan (see [`weighted_profile`]).
+    fn weighted_nv(&self) -> DecayedSparse {
+        weighted_profile(&self.acc_nv, &self.job.cfg.class_weights)
+    }
+
+    /// The PR 3 within-shard drift detection + per-shard re-plans,
+    /// measured on the class-weighted profile — drift in a
+    /// high-weight tenant's traffic trips the threshold sooner than
+    /// the same raw drift in scan traffic.
     fn drift_pass(&mut self) {
         let cfg = &self.job.cfg;
+        let weighted = self.weighted_nv();
         let drifts =
-            shard_drifts_sparse(&self.planned, &self.acc_nv, &self.router, self.n_shards);
+            shard_drifts_sparse(&self.planned, &weighted, &self.router, self.n_shards);
         self.stats.last_drift = drifts.iter().cloned().fold(0.0, f64::max);
         let any_drifted = drifts.iter().any(|&d| d > cfg.drift_threshold);
         let mut drifted: Vec<usize> = if cfg.per_shard || self.n_shards == 1 {
@@ -1074,9 +1163,11 @@ impl<'j> RefreshLoop<'j> {
     /// shards whose budgets changed.
     fn rebalance_pass(&mut self) {
         let cfg = &self.job.cfg;
-        // observed per-shard load mass (decayed, sparse)
+        // observed per-shard load mass (decayed, sparse,
+        // class-weighted: budget follows the traffic the operator
+        // values, not the loudest scanner)
         let mut mass = vec![0.0f64; self.n_shards];
-        for (v, m) in self.acc_nv.iter() {
+        for (v, m) in self.weighted_nv().iter() {
             mass[self.router.shard_of(v as NodeId)] += m;
         }
         self.stats.last_skew = shard_skew(&self.budgets, &mass);
@@ -1210,8 +1301,9 @@ impl<'j> RefreshLoop<'j> {
         self.sup.beat();
         let t0 = Instant::now();
         let repairing = self.job.runtime.is_degraded(s);
+        let weighted_nv = self.weighted_nv();
         let (nv, ec) =
-            masked_profile(&self.job.ds.csc, &self.acc_nv, &self.acc_ec, &self.router, s);
+            masked_profile(&self.job.ds.csc, &weighted_nv, &self.acc_ec, &self.router, s);
         let profile = WorkloadProfile {
             node_visits: &nv,
             elem_counts: &ec,
@@ -1351,7 +1443,7 @@ impl<'j> RefreshLoop<'j> {
         // masses)
         let router = &self.router;
         self.planned.retain(|&v, _| router.shard_of(v as NodeId) != s);
-        for (v, m) in self.acc_nv.iter() {
+        for (v, m) in weighted_nv.iter() {
             if router.shard_of(v as NodeId) == s {
                 self.planned.insert(v, m);
             }
@@ -1593,7 +1685,7 @@ mod tests {
         // a baseline profile concentrated on node 0; observe node 1
         let mut planned = vec![0u32; ds.csc.n_nodes()];
         planned[0] = 100;
-        let r = Refresher::spawn(
+        let r = RefreshJob::new(
             Arc::clone(&ds),
             Arc::clone(&runtime),
             Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
@@ -1601,7 +1693,8 @@ mod tests {
             vec![200_000],
             planned,
             fast_cfg(0.3),
-        );
+        )
+        .spawn();
         for _ in 0..50 {
             tracker.record_node(1);
         }
@@ -1637,7 +1730,7 @@ mod tests {
             Arc::new(SketchTracker::with_defaults(ds.csc.n_nodes(), ds.csc.n_edges()));
         let mut planned = vec![0u32; ds.csc.n_nodes()];
         planned[0] = 100;
-        let r = Refresher::spawn(
+        let r = RefreshJob::new(
             Arc::clone(&ds),
             Arc::clone(&runtime),
             Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
@@ -1645,7 +1738,8 @@ mod tests {
             vec![200_000],
             planned,
             fast_cfg(0.3),
-        );
+        )
+        .spawn();
         for _ in 0..50 {
             tracker.record_node(1);
         }
@@ -1660,7 +1754,11 @@ mod tests {
         assert!(runtime.load().feat.as_ref().unwrap().contains(1));
     }
 
+    /// Doubles as the back-compat coverage for the deprecated
+    /// [`Refresher::spawn`] shim: old call sites must keep compiling
+    /// and behave identically to `RefreshJob::new(...).spawn()`.
     #[test]
+    #[allow(deprecated)]
     fn refresher_idle_without_traffic() {
         let ds = Arc::new(datasets::spec("tiny").unwrap().build());
         let runtime = Arc::new(ShardedRuntime::single(CacheSnapshot::empty()));
@@ -1710,7 +1808,7 @@ mod tests {
             sharded.plans.into_iter().map(|p| p.snapshot).collect(),
         ));
         let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
-        let r = Refresher::spawn(
+        let r = RefreshJob::new(
             Arc::clone(&ds),
             Arc::clone(&runtime),
             Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
@@ -1718,7 +1816,8 @@ mod tests {
             budgets,
             stats0.node_visits.clone(),
             fast_cfg(0.3),
-        );
+        )
+        .spawn();
 
         // drive traffic confined to shard 2's nodes, disjoint from the
         // planned profile's hot set as far as shard 2 is concerned
@@ -2115,5 +2214,170 @@ mod tests {
         assert!(stats.replans >= 1, "{stats:?}");
         assert!(runtime.swaps() >= 1);
         assert!(!runtime.is_degraded(0));
+    }
+
+    #[test]
+    fn class_weighted_profile_outbids_raw_counts() {
+        // priority node 1 visited 10×, scan node 2 visited 100×: the
+        // default weights (4 / 1 / 0.05) still put node 1 far ahead —
+        // the noisy scanner cannot outbid the priority tenant by QPS
+        let mut accs: [DecayedSparse; N_CLASSES] =
+            std::array::from_fn(|_| DecayedSparse::new(None));
+        accs[TenantClass::Priority.index()].add(1, 10.0);
+        accs[TenantClass::Scan.index()].add(2, 100.0);
+        let w = weighted_profile(&accs, &ClassWeights::default());
+        let m: HashMap<u64, f64> = w.iter().collect();
+        assert!((m[&1] - 40.0).abs() < 1e-12, "{m:?}");
+        assert!((m[&2] - 5.0).abs() < 1e-12, "{m:?}");
+        // both classes touching one node sum their weighted masses
+        accs[TenantClass::Standard.index()].add(1, 3.0);
+        let w = weighted_profile(&accs, &ClassWeights::default());
+        let m: HashMap<u64, f64> = w.iter().collect();
+        assert!((m[&1] - 43.0).abs() < 1e-12, "{m:?}");
+    }
+
+    #[test]
+    fn untagged_profile_is_bit_identical_under_any_weights() {
+        // fold the same untagged windows into (a) the per-class accs
+        // (all mass lands in the standard class, weight 1.0) and
+        // (b) a class-blind acc, then compose under aggressive
+        // priority/scan weights: every mass must match *exactly* — the
+        // bit-identity contract for class-blind request streams
+        let mut accs: [DecayedSparse; N_CLASSES] =
+            std::array::from_fn(|_| DecayedSparse::new(None));
+        let mut blind = DecayedSparse::new(None);
+        let windows: [&[(u64, u32)]; 3] =
+            [&[(3, 7), (9, 1)], &[(4, 123)], &[(3, 2), (4, 1)]];
+        for w in windows {
+            for acc in accs.iter_mut() {
+                acc.decay(0.5);
+            }
+            blind.decay(0.5);
+            for &(v, c) in w {
+                accs[TenantClass::Standard.index()].add(v, c as f64);
+                blind.add(v, c as f64);
+            }
+        }
+        let weighted = weighted_profile(&accs, &ClassWeights([9.0, 1.0, 0.001]));
+        let got: HashMap<u64, f64> = weighted.iter().collect();
+        let want: HashMap<u64, f64> = blind.iter().collect();
+        assert_eq!(got.len(), want.len());
+        for (k, v) in &want {
+            assert_eq!(got[k].to_bits(), v.to_bits(), "node {k} drifted in bits");
+        }
+    }
+
+    /// The satellite property: with all-equal class weights the
+    /// class-split pipeline reduces to the class-blind plan
+    /// bit-identically, over randomized single-window class splits.
+    /// (Counts are integers and the decay is dyadic, so the f64 sums
+    /// on both sides are exact.)
+    #[test]
+    fn equal_weights_reduce_to_the_class_blind_plan() {
+        let ds = datasets::spec("tiny").unwrap().build();
+        let router = ShardRouter::new(1);
+        let mut rng = Rng::new(42);
+        for trial in 0..8 {
+            let mut accs: [DecayedSparse; N_CLASSES] =
+                std::array::from_fn(|_| DecayedSparse::new(None));
+            let mut blind = DecayedSparse::new(None);
+            for acc in accs.iter_mut() {
+                acc.decay(0.5);
+            }
+            blind.decay(0.5);
+            // one drained window: random nodes, random per-class counts
+            for _ in 0..12 {
+                let v = rng.gen_usize(ds.csc.n_nodes()) as u64;
+                let per: [u32; N_CLASSES] =
+                    std::array::from_fn(|_| rng.gen_range(8) as u32);
+                for (acc, &c) in accs.iter_mut().zip(per.iter()) {
+                    if c > 0 {
+                        acc.add(v, c as f64);
+                    }
+                }
+                let total: u32 = per.iter().sum();
+                if total > 0 {
+                    blind.add(v, total as f64);
+                }
+            }
+            let weighted = weighted_profile(&accs, &ClassWeights::EQUAL);
+            let ec = DecayedSparse::new(None);
+            let (nv_w, ec_w) = masked_profile(&ds.csc, &weighted, &ec, &router, 0);
+            let (nv_b, ec_b) = masked_profile(&ds.csc, &blind, &ec, &router, 0);
+            assert_eq!(nv_w, nv_b, "trial {trial}: quantized profiles diverged");
+            assert_eq!(ec_w, ec_b);
+            // and the plans built from them match structurally: same
+            // split, same fill traffic, same cached node set
+            let profile_w = WorkloadProfile {
+                node_visits: &nv_w,
+                elem_counts: &ec_w,
+                t_sample_ns: 10.0,
+                t_feature_ns: 10.0,
+            };
+            let profile_b = WorkloadProfile {
+                node_visits: &nv_b,
+                elem_counts: &ec_b,
+                t_sample_ns: 10.0,
+                t_feature_ns: 10.0,
+            };
+            let plan_w = DciPlanner.plan(&ds, &profile_w, 100_000);
+            let plan_b = DciPlanner.plan(&ds, &profile_b, 100_000);
+            assert_eq!(plan_w.snapshot.alloc, plan_b.snapshot.alloc);
+            assert_eq!(plan_w.fill_ledger.h2d_bytes, plan_b.fill_ledger.h2d_bytes);
+            assert_eq!(plan_w.snapshot.bytes_used(), plan_b.snapshot.bytes_used());
+            let (fw, fb) = (
+                plan_w.snapshot.feat.as_ref().unwrap(),
+                plan_b.snapshot.feat.as_ref().unwrap(),
+            );
+            for v in 0..ds.csc.n_nodes() as NodeId {
+                assert_eq!(fw.contains(v), fb.contains(v), "trial {trial}, node {v}");
+            }
+        }
+    }
+
+    /// End-to-end through the loop's own drain: class-tagged tracker
+    /// records split into per-class profiles, and the weighted
+    /// composition ranks a lightly-touched priority node above a
+    /// hammered scan node.
+    #[test]
+    fn tagged_windows_fold_into_per_class_profiles() {
+        let (ds, runtime, tracker, planned) = drift_fixture();
+        let job = RefreshJob::new(
+            Arc::clone(&ds),
+            Arc::clone(&runtime),
+            Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+            Box::new(DciPlanner),
+            vec![200_000],
+            planned,
+            RefreshConfig::default(),
+        );
+        let sup = Supervision {
+            heartbeat: Arc::new(AtomicU64::new(0)),
+            generation: Arc::new(AtomicU64::new(0)),
+            my_gen: 0,
+            checkpoint: Arc::new(Mutex::new(None)),
+        };
+        let mut l = RefreshLoop::new(&job, &sup);
+        for _ in 0..10 {
+            tracker.record_node_as(TenantClass::Priority, 1);
+        }
+        for _ in 0..100 {
+            tracker.record_node_as(TenantClass::Scan, 2);
+        }
+        tracker.record_batch(50.0, 50.0, 110);
+        l.drain_window();
+        // per-class accs carry the split (dyadic decay → exact masses)
+        let prio: HashMap<u64, f64> =
+            l.acc_nv[TenantClass::Priority.index()].iter().collect();
+        let scan: HashMap<u64, f64> =
+            l.acc_nv[TenantClass::Scan.index()].iter().collect();
+        assert_eq!(prio.get(&1).copied(), Some(10.0));
+        assert!(!prio.contains_key(&2));
+        assert_eq!(scan.get(&2).copied(), Some(100.0));
+        // the weighted composition inverts the raw-count order
+        let m: HashMap<u64, f64> = l.weighted_nv().iter().collect();
+        assert!((m[&1] - 40.0).abs() < 1e-12, "{m:?}");
+        assert!((m[&2] - 5.0).abs() < 1e-12, "{m:?}");
+        assert!(m[&1] > m[&2], "priority must outbid the scanner");
     }
 }

@@ -13,8 +13,9 @@
 //!   count-min sketch per key space (nodes, CSC elements) plus a
 //!   bounded *touched-since-last-drain* set, so the background drain
 //!   enumerates only the keys the window actually touched: O(touched)
-//!   instead of O(nodes + edges), with constant memory (~17 MiB at the
-//!   defaults, touched sets included) independent of graph size. Estimates are conservative (≥ the true
+//!   instead of O(nodes + edges), with constant memory (~19 MiB at the
+//!   defaults, touched sets and per-class node sketches included)
+//!   independent of graph size. Estimates are conservative (≥ the true
 //!   count; the property tests hold this single-threaded) and within
 //!   ε·total with probability 1−δ — see [`cms_dims`] for the ε/δ →
 //!   width/depth derivation, and DESIGN.md §Workload tracking for why
@@ -29,8 +30,9 @@
 //! `TouchedSet::drain`) rather than ever corrupting a later one. Both
 //! are approximations drift detection tolerates by construction.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
+use crate::coordinator::admission::{TenantClass, N_CLASSES};
 use crate::graph::NodeId;
 use crate::util::splitmix64;
 
@@ -38,8 +40,15 @@ use crate::util::splitmix64;
 /// since the previous drain appear. The dense tracker emits its
 /// nonzero entries; the sketch emits its touched set's estimates.
 pub struct DrainedWindow {
-    /// `(node, visits)` pairs for the feature-loading stage.
+    /// `(node, visits)` pairs for the feature-loading stage, summed
+    /// over all admission classes.
     pub node_visits: Vec<(NodeId, u32)>,
+    /// Per-class node-visit split (`[u32; N_CLASSES]` indexed by
+    /// [`TenantClass::index`]), same node order as `node_visits`.
+    /// **Empty when the window saw only `standard` touches** — the
+    /// common untagged case pays nothing and the refresh loop folds
+    /// the aggregate into the standard profile exactly.
+    pub class_node_visits: Vec<(NodeId, [u32; N_CLASSES])>,
     /// `(CSC offset, accesses)` pairs for the sampling stage.
     pub elem_counts: Vec<(u64, u32)>,
     /// Served batches in the window.
@@ -72,23 +81,39 @@ pub trait WorkloadTracker: Send + Sync {
     /// Implementation name (`"dense"` | `"sketch"`), for logs/benches.
     fn name(&self) -> &'static str;
 
-    /// Record one feature-stage visit of `v` (gather stage).
-    fn record_node(&self, v: NodeId);
+    /// Record one feature-stage visit of `v` (gather stage), untagged —
+    /// equivalent to `record_node_as(TenantClass::Standard, v)`.
+    fn record_node(&self, v: NodeId) {
+        self.record_node_as(TenantClass::Standard, v);
+    }
+
+    /// Record one feature-stage visit of `v` under an admission class.
+    /// The class changes which per-class profile the refresh loop
+    /// credits, never the aggregate count.
+    fn record_node_as(&self, class: TenantClass, v: NodeId);
 
     /// Record a whole batch's feature-stage visits in one virtual call.
     /// The gather hot path hands its entire input slice here instead of
     /// paying one dynamic dispatch per node — the default forwards to
-    /// [`WorkloadTracker::record_node`] in a static inner loop, so
+    /// [`WorkloadTracker::record_node_as`] in a static inner loop, so
     /// implementations inherit identical counts for free and may
     /// override only if they can batch more cheaply.
     fn record_nodes(&self, nodes: &[NodeId]) {
+        self.record_nodes_as(TenantClass::Standard, nodes);
+    }
+
+    /// Class-tagged [`WorkloadTracker::record_nodes`].
+    fn record_nodes_as(&self, class: TenantClass, nodes: &[NodeId]) {
         for &v in nodes {
-            self.record_node(v);
+            self.record_node_as(class, v);
         }
     }
 
     /// Record one adjacency-element access at CSC offset `at`
-    /// (sampling stage).
+    /// (sampling stage). Deliberately class-blind: a per-class elem
+    /// split would multiply the O(n_edges) counter memory by
+    /// `N_CLASSES` for a signal the planner's adjacency fill barely
+    /// uses — class weighting acts on node visits only.
     fn record_elem(&self, at: usize);
 
     /// Record a served batch's modeled stage times (Eq. 1 ratio input)
@@ -159,8 +184,14 @@ impl StageClock {
 /// with `swap(0)`, so a touch racing the drain lands in exactly one
 /// window.
 pub struct AccessTracker {
+    /// `N_CLASSES` interleaved counters per node
+    /// (`v * N_CLASSES + class.index()`), so a class-tagged record is
+    /// still one relaxed add.
     node_visits: Vec<AtomicU32>,
     elem_counts: Vec<AtomicU32>,
+    /// Set by any non-`standard` touch; swapped at drain. An untagged
+    /// window skips materializing the per-class split entirely.
+    tagged: AtomicBool,
     clock: StageClock,
 }
 
@@ -168,8 +199,9 @@ impl AccessTracker {
     /// A tracker sized for `n_nodes` nodes and `n_edges` CSC elements.
     pub fn new(n_nodes: usize, n_edges: usize) -> Self {
         AccessTracker {
-            node_visits: (0..n_nodes).map(|_| AtomicU32::new(0)).collect(),
+            node_visits: (0..n_nodes * N_CLASSES).map(|_| AtomicU32::new(0)).collect(),
             elem_counts: (0..n_edges).map(|_| AtomicU32::new(0)).collect(),
+            tagged: AtomicBool::new(false),
             clock: StageClock::default(),
         }
     }
@@ -181,8 +213,12 @@ impl WorkloadTracker for AccessTracker {
     }
 
     #[inline]
-    fn record_node(&self, v: NodeId) {
-        self.node_visits[v as usize].fetch_add(1, Ordering::Relaxed);
+    fn record_node_as(&self, class: TenantClass, v: NodeId) {
+        self.node_visits[v as usize * N_CLASSES + class.index()]
+            .fetch_add(1, Ordering::Relaxed);
+        if class != TenantClass::Standard {
+            self.tagged.store(true, Ordering::Relaxed);
+        }
     }
 
     #[inline]
@@ -200,15 +236,24 @@ impl WorkloadTracker for AccessTracker {
 
     /// O(nodes + edges): scans both arrays, emitting nonzero entries.
     fn drain(&self) -> DrainedWindow {
-        let node_visits = self
-            .node_visits
-            .iter()
-            .enumerate()
-            .filter_map(|(v, c)| {
-                let c = c.swap(0, Ordering::Relaxed);
-                (c > 0).then_some((v as NodeId, c))
-            })
-            .collect();
+        let tagged = self.tagged.swap(false, Ordering::Relaxed);
+        let n_nodes = self.node_visits.len() / N_CLASSES;
+        let mut node_visits = Vec::new();
+        let mut class_node_visits = Vec::new();
+        for v in 0..n_nodes {
+            let mut per = [0u32; N_CLASSES];
+            let mut total = 0u32;
+            for (c, slot) in per.iter_mut().enumerate() {
+                *slot = self.node_visits[v * N_CLASSES + c].swap(0, Ordering::Relaxed);
+                total = total.saturating_add(*slot);
+            }
+            if total > 0 {
+                node_visits.push((v as NodeId, total));
+                if tagged {
+                    class_node_visits.push((v as NodeId, per));
+                }
+            }
+        }
         let elem_counts = self
             .elem_counts
             .iter()
@@ -221,6 +266,7 @@ impl WorkloadTracker for AccessTracker {
         let (batches, t_sample_ns, t_feature_ns, peak_input_nodes) = self.clock.drain();
         DrainedWindow {
             node_visits,
+            class_node_visits,
             elem_counts,
             batches,
             t_sample_ns,
@@ -538,43 +584,61 @@ impl TouchedSet {
 // Sketch tracker
 // ---------------------------------------------------------------------------
 
-/// One key space's sketch + touched set.
+/// One key space's sketches + shared touched set. The node lane holds
+/// one sketch per admission class (estimates split by class, one
+/// touched-set insert per record); the element lane holds a single
+/// class-blind sketch.
 struct SketchLane {
-    sketch: CountMinSketch,
+    sketches: Vec<CountMinSketch>,
     touched: TouchedSet,
 }
 
 impl SketchLane {
-    fn new(width: usize, depth: usize, touch_cap: usize) -> Self {
+    fn new(n_sketches: usize, width: usize, depth: usize, touch_cap: usize) -> Self {
         SketchLane {
-            sketch: CountMinSketch::new(width, depth),
+            sketches: (0..n_sketches.clamp(1, N_CLASSES))
+                .map(|_| CountMinSketch::new(width, depth))
+                .collect(),
             touched: TouchedSet::new(touch_cap),
         }
     }
 
+    /// Record `key` into sketch `which` (a class index, or 0 for the
+    /// single-sketch element lane).
     #[inline]
-    fn record(&self, key: u64) {
-        self.sketch.add(key);
+    fn record_in(&self, which: usize, key: u64) {
+        self.sketches[which].add(key);
         self.touched.insert(key);
     }
 
-    /// Enumerate `(key, estimate)` for the window's touched keys and
-    /// reset the lane: O(touched · depth), never O(key space). A
-    /// saturated window (dropped > 0) falls back to the full-sweep
-    /// clear, discarding the unenumerated keys' counts with it —
-    /// leaving them in place would inflate later windows' estimates
-    /// forever, since no future enumeration would ever clear them.
-    fn drain(&self) -> (Vec<(u64, u32)>, u64) {
+    /// Enumerate per-sketch estimates for the window's touched keys
+    /// and reset the lane: O(touched · sketches · depth), never O(key
+    /// space). Unused trailing class slots stay zero. A saturated
+    /// window (dropped > 0) falls back to the full-sweep clear,
+    /// discarding the unenumerated keys' counts with it — leaving them
+    /// in place would inflate later windows' estimates forever, since
+    /// no future enumeration would ever clear them.
+    fn drain(&self) -> (Vec<(u64, [u32; N_CLASSES])>, u64) {
         let (keys, dropped) = self.touched.drain();
         let out = keys
             .iter()
-            .map(|&k| (k, self.sketch.estimate(k)))
+            .map(|&k| {
+                let mut ests = [0u32; N_CLASSES];
+                for (e, s) in ests.iter_mut().zip(self.sketches.iter()) {
+                    *e = s.estimate(k);
+                }
+                (k, ests)
+            })
             .collect();
         if dropped > 0 {
-            self.sketch.clear_all();
+            for s in &self.sketches {
+                s.clear_all();
+            }
         } else {
             for &k in &keys {
-                self.sketch.clear_key(k);
+                for s in &self.sketches {
+                    s.clear_key(k);
+                }
             }
         }
         (out, dropped)
@@ -604,6 +668,9 @@ pub struct SketchTracker {
     lanes: [[SketchLane; 2]; 2],
     /// Active lane index (0/1) for both key spaces.
     active: AtomicUsize,
+    /// Any non-`standard` node touch since the last drain (see
+    /// [`AccessTracker::drain`]'s untagged fast path).
+    tagged: AtomicBool,
     clock: StageClock,
 }
 
@@ -619,15 +686,18 @@ impl SketchTracker {
     pub fn new(n_nodes: usize, n_edges: usize, width: usize, depth: usize) -> Self {
         let node_cap = NODE_TOUCH_CAP.min(n_nodes.next_power_of_two().max(8));
         let elem_cap = ELEM_TOUCH_CAP.min(n_edges.next_power_of_two().max(8));
-        let lane = |cap: usize| {
+        let lane = |n_sketches: usize, cap: usize| {
             [
-                SketchLane::new(width, depth, cap),
-                SketchLane::new(width, depth, cap),
+                SketchLane::new(n_sketches, width, depth, cap),
+                SketchLane::new(n_sketches, width, depth, cap),
             ]
         };
         SketchTracker {
-            lanes: [lane(node_cap), lane(elem_cap)],
+            // the node lane splits estimates per admission class; the
+            // element lane stays class-blind (one sketch)
+            lanes: [lane(N_CLASSES, node_cap), lane(1, elem_cap)],
             active: AtomicUsize::new(0),
+            tagged: AtomicBool::new(false),
             clock: StageClock::default(),
         }
     }
@@ -660,13 +730,16 @@ impl WorkloadTracker for SketchTracker {
     }
 
     #[inline]
-    fn record_node(&self, v: NodeId) {
-        self.lane(NODES).record(v as u64);
+    fn record_node_as(&self, class: TenantClass, v: NodeId) {
+        self.lane(NODES).record_in(class.index(), v as u64);
+        if class != TenantClass::Standard {
+            self.tagged.store(true, Ordering::Relaxed);
+        }
     }
 
     #[inline]
     fn record_elem(&self, at: usize) {
-        self.lane(ELEMS).record(at as u64);
+        self.lane(ELEMS).record_in(0, at as u64);
     }
 
     fn record_batch(&self, t_sample_ns: f64, t_feature_ns: f64, input_nodes: u32) {
@@ -681,12 +754,26 @@ impl WorkloadTracker for SketchTracker {
     /// O(touched · depth) work, independent of nodes + edges.
     fn drain(&self) -> DrainedWindow {
         let prev = self.active.fetch_xor(1, Ordering::Relaxed);
+        let tagged = self.tagged.swap(false, Ordering::Relaxed);
         let (nodes, nd) = self.lanes[NODES][prev].drain();
         let (elems, ed) = self.lanes[ELEMS][prev].drain();
         let (batches, t_sample_ns, t_feature_ns, peak_input_nodes) = self.clock.drain();
+        let node_visits = nodes
+            .iter()
+            .map(|&(k, per)| {
+                let total = per.iter().fold(0u32, |a, &c| a.saturating_add(c));
+                (k as NodeId, total)
+            })
+            .collect();
+        let class_node_visits = if tagged {
+            nodes.iter().map(|&(k, per)| (k as NodeId, per)).collect()
+        } else {
+            Vec::new()
+        };
         DrainedWindow {
-            node_visits: nodes.into_iter().map(|(k, c)| (k as NodeId, c)).collect(),
-            elem_counts: elems,
+            node_visits,
+            class_node_visits,
+            elem_counts: elems.into_iter().map(|(k, per)| (k, per[0])).collect(),
             batches,
             t_sample_ns,
             t_feature_ns,
@@ -789,6 +876,10 @@ mod tests {
         assert_eq!(t.batches(), 2);
         let d = t.drain();
         assert_eq!(d.node_visits, vec![(1, 2), (3, 1)]);
+        assert!(
+            d.class_node_visits.is_empty(),
+            "untagged windows must skip the per-class split"
+        );
         assert_eq!(d.elem_counts, vec![(5, 1)]);
         assert_eq!(d.batches, 2);
         assert_eq!(d.t_sample_ns, 100.0);
@@ -920,6 +1011,64 @@ mod tests {
         // second drain is empty (lane flipped back and cleared)
         assert!(sketch.drain().node_visits.is_empty());
         assert!(sketch.heavy_hitter_caps().is_some());
+    }
+
+    #[test]
+    fn dense_tracker_splits_counts_per_class() {
+        let t = AccessTracker::new(4, 2);
+        t.record_node_as(TenantClass::Priority, 1);
+        t.record_node_as(TenantClass::Priority, 1);
+        t.record_node_as(TenantClass::Scan, 1);
+        t.record_node(2); // untagged = standard
+        let d = t.drain();
+        // aggregate is the class sum, in node order
+        assert_eq!(d.node_visits, vec![(1, 3), (2, 1)]);
+        let p = TenantClass::Priority.index();
+        let s = TenantClass::Standard.index();
+        let c = TenantClass::Scan.index();
+        assert_eq!(d.class_node_visits.len(), 2);
+        let (n1, per1) = d.class_node_visits[0];
+        assert_eq!(n1, 1);
+        assert_eq!((per1[p], per1[s], per1[c]), (2, 0, 1));
+        let (n2, per2) = d.class_node_visits[1];
+        assert_eq!(n2, 2);
+        assert_eq!((per2[p], per2[s], per2[c]), (0, 1, 0));
+        // the tag resets with the window: a standard-only window after
+        // a tagged one is untagged again
+        t.record_node(2);
+        let d = t.drain();
+        assert_eq!(d.node_visits, vec![(2, 1)]);
+        assert!(d.class_node_visits.is_empty());
+    }
+
+    #[test]
+    fn sketch_tracker_class_split_matches_dense() {
+        let dense = AccessTracker::new(100, 10);
+        let sketch = SketchTracker::with_defaults(100, 10);
+        for t in [&dense as &dyn WorkloadTracker, &sketch as &dyn WorkloadTracker] {
+            t.record_nodes_as(TenantClass::Priority, &[5, 5, 7]);
+            t.record_nodes_as(TenantClass::Scan, &[5, 9]);
+            t.record_nodes(&[9]);
+        }
+        let dw = dense.drain();
+        let sw = sketch.drain();
+        let to_map = |w: &[(NodeId, [u32; N_CLASSES])]| -> HashMap<NodeId, [u32; N_CLASSES]> {
+            w.iter().copied().collect()
+        };
+        // few distinct keys at default ε: sketch estimates are exact
+        assert_eq!(to_map(&sw.class_node_visits), to_map(&dw.class_node_visits));
+        assert_eq!(
+            dw.node_visits.iter().copied().collect::<HashMap<_, _>>(),
+            sw.node_visits.iter().copied().collect::<HashMap<_, _>>()
+        );
+        // both saw a tagged window
+        assert!(!dw.class_node_visits.is_empty());
+        assert!(!sw.class_node_visits.is_empty());
+        // next (untagged) windows skip the split again
+        dense.record_node(1);
+        sketch.record_node(1);
+        assert!(dense.drain().class_node_visits.is_empty());
+        assert!(sketch.drain().class_node_visits.is_empty());
     }
 
     #[test]

@@ -1,14 +1,27 @@
 //! Run configuration: one struct describing a full inference run
 //! (dataset, model, fan-out, batch size, system, budgets, backend),
 //! parsed from `key=value` CLI arguments (no clap in the offline
-//! registry — and a flat keyspace keeps bench scripts simple).
+//! registry).
+//!
+//! The keyspace is namespaced: subsystem knobs live under dotted
+//! groups — `cache.*`, `refresh.*`, `transfer.*`, `fault.*`,
+//! `tenant.*` — so `dci bench cache.sketch-width=512` reads as "a
+//! cache knob" without consulting the docs. Every pre-namespace flat
+//! key (`sketch-width=512`) still parses as a **deprecated alias** of
+//! its dotted form ([`dealias`] maps one onto the other before the
+//! single `match`), so existing bench scripts keep working verbatim;
+//! new knobs are added dotted-only. The unknown-key error prints the
+//! keyspace grouped by namespace with each legacy alias in
+//! parentheses.
 
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::planner::ClassWeights;
 use crate::cache::refresh::RefreshConfig;
 use crate::cache::tracker::{TrackerConfig, TrackerKind};
+use crate::coordinator::admission::N_CLASSES;
 use crate::mem::{parse_device_tiers, CostModel, DeviceTier};
 use crate::sampler::Fanout;
 use crate::util::parse_bytes;
@@ -180,6 +193,13 @@ pub struct RunConfig {
     /// and the injection sites cost one pointer null-check. Chaos
     /// testing only — never set in production runs.
     pub fault: Option<String>,
+    /// Per-class admission queue fractions for serve mode, indexed by
+    /// [`TenantClass::index`](crate::coordinator::TenantClass::index):
+    /// class *c* is shed once the queue exceeds `fraction × max-queued`
+    /// (`tenant.shed-standard=`, `tenant.shed-scan=`; priority always
+    /// sees the full ceiling). Default `[1.0, 1.0, 0.5]` — scan sheds
+    /// first under overload.
+    pub class_queue_fraction: [f64; N_CLASSES],
 }
 
 impl Default for RunConfig {
@@ -208,14 +228,17 @@ impl Default for RunConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             fault: None,
+            class_queue_fraction: [1.0, 1.0, 0.5],
         }
     }
 }
 
-/// Every `key=value` knob [`RunConfig::apply_args`] accepts — kept
-/// next to the `match` below so an unknown-key error can teach instead
-/// of stonewall (`refesh=on` must fail loudly *and* show `refresh`).
+/// Every `key=value` knob [`RunConfig::apply_args`] accepts — the
+/// dotted canonical keys plus every deprecated flat alias — kept next
+/// to the `match` below so an unknown-key error can teach instead of
+/// stonewall (`refesh=on` must fail loudly *and* show `refresh`).
 pub const VALID_KEYS: &[&str] = &[
+    // run-level (no namespace)
     "dataset",
     "model",
     "fanout",
@@ -223,38 +246,184 @@ pub const VALID_KEYS: &[&str] = &[
     "bs",
     "system",
     "hidden",
-    "budget",
     "presample",
     "pipeline",
     "pipeline-depth",
     "sample-threads",
-    "shards",
-    "shard-refresh",
     "compute",
-    "refresh",
-    "refresh-check-ms",
-    "refresh-min-batches",
-    "refresh-decay",
-    "drift-threshold",
-    "rebalance",
-    "rebalance-threshold",
-    "rebalance-floor",
-    "auto-budget-refresh",
-    "install-retries",
-    "install-backoff-ms",
-    "watchdog-ms",
-    "fault",
-    "tracker",
-    "sketch-width",
-    "sketch-depth",
     "max-batches",
-    "device",
-    "device-tiers",
-    "staging-buffers",
-    "transfer-ring",
     "seed",
     "artifacts",
+    // cache.* canonical + flat aliases
+    "cache.budget",
+    "budget",
+    "cache.shards",
+    "shards",
+    "cache.rebalance",
+    "rebalance",
+    "cache.rebalance-threshold",
+    "rebalance-threshold",
+    "cache.rebalance-floor",
+    "rebalance-floor",
+    "cache.tracker",
+    "tracker",
+    "cache.sketch-width",
+    "sketch-width",
+    "cache.sketch-depth",
+    "sketch-depth",
+    // refresh.* canonical + flat aliases (`refresh=` is both the
+    // group's on/off switch and its own canonical spelling)
+    "refresh",
+    "refresh.check-ms",
+    "refresh-check-ms",
+    "refresh.min-batches",
+    "refresh-min-batches",
+    "refresh.decay",
+    "refresh-decay",
+    "refresh.drift-threshold",
+    "drift-threshold",
+    "refresh.per-shard",
+    "shard-refresh",
+    "refresh.auto-budget",
+    "auto-budget-refresh",
+    // transfer.* canonical + flat aliases
+    "transfer.ring",
+    "transfer-ring",
+    "transfer.staging-buffers",
+    "staging-buffers",
+    "transfer.device",
+    "device",
+    "transfer.device-tiers",
+    "device-tiers",
+    // fault.* canonical + flat aliases
+    "fault.spec",
+    "fault",
+    "fault.install-retries",
+    "install-retries",
+    "fault.install-backoff-ms",
+    "install-backoff-ms",
+    "fault.watchdog-ms",
+    "watchdog-ms",
+    // tenant.* — post-namespace knobs, dotted-only (no flat alias)
+    "tenant.weights",
+    "tenant.shed-standard",
+    "tenant.shed-scan",
 ];
+
+/// The keyspace grouped by namespace for the unknown-key error: each
+/// entry is the canonical dotted key with its deprecated flat alias in
+/// parentheses. Must stay in sync with [`VALID_KEYS`] and the `match`
+/// arms (the `unknown_key_error_lists_the_valid_knobs` test holds all
+/// three together).
+const KEY_GROUPS: &[(&str, &[&str])] = &[
+    (
+        "run",
+        &[
+            "dataset",
+            "model",
+            "fanout",
+            "batch-size (bs)",
+            "system",
+            "hidden",
+            "presample",
+            "pipeline (pipeline-depth)",
+            "sample-threads",
+            "compute",
+            "max-batches",
+            "seed",
+            "artifacts",
+        ],
+    ),
+    (
+        "cache",
+        &[
+            "cache.budget (budget)",
+            "cache.shards (shards)",
+            "cache.rebalance (rebalance)",
+            "cache.rebalance-threshold (rebalance-threshold)",
+            "cache.rebalance-floor (rebalance-floor)",
+            "cache.tracker (tracker)",
+            "cache.sketch-width (sketch-width)",
+            "cache.sketch-depth (sketch-depth)",
+        ],
+    ),
+    (
+        "refresh",
+        &[
+            "refresh",
+            "refresh.check-ms (refresh-check-ms)",
+            "refresh.min-batches (refresh-min-batches)",
+            "refresh.decay (refresh-decay)",
+            "refresh.drift-threshold (drift-threshold)",
+            "refresh.per-shard (shard-refresh)",
+            "refresh.auto-budget (auto-budget-refresh)",
+        ],
+    ),
+    (
+        "transfer",
+        &[
+            "transfer.ring (transfer-ring)",
+            "transfer.staging-buffers (staging-buffers)",
+            "transfer.device (device)",
+            "transfer.device-tiers (device-tiers)",
+        ],
+    ),
+    (
+        "fault",
+        &[
+            "fault.spec (fault)",
+            "fault.install-retries (install-retries)",
+            "fault.install-backoff-ms (install-backoff-ms)",
+            "fault.watchdog-ms (watchdog-ms)",
+        ],
+    ),
+    (
+        "tenant",
+        &["tenant.weights", "tenant.shed-standard", "tenant.shed-scan"],
+    ),
+];
+
+/// Render [`KEY_GROUPS`] as the multi-line listing the unknown-key
+/// error teaches with.
+fn grouped_key_listing() -> String {
+    KEY_GROUPS
+        .iter()
+        .map(|(group, keys)| format!("  {group}: {}", keys.join(", ")))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Map a canonical dotted key onto the legacy flat name its `match`
+/// arm was written for. Flat keys (and dotted keys with no alias, like
+/// `tenant.*`) pass through unchanged — one mapping, one `match`, so
+/// an alias pair can never drift apart in behavior.
+fn dealias(key: &str) -> &str {
+    match key {
+        "cache.budget" => "budget",
+        "cache.shards" => "shards",
+        "cache.rebalance" => "rebalance",
+        "cache.rebalance-threshold" => "rebalance-threshold",
+        "cache.rebalance-floor" => "rebalance-floor",
+        "cache.tracker" => "tracker",
+        "cache.sketch-width" => "sketch-width",
+        "cache.sketch-depth" => "sketch-depth",
+        "refresh.check-ms" => "refresh-check-ms",
+        "refresh.min-batches" => "refresh-min-batches",
+        "refresh.decay" => "refresh-decay",
+        "refresh.drift-threshold" => "drift-threshold",
+        "refresh.per-shard" => "shard-refresh",
+        "refresh.auto-budget" => "auto-budget-refresh",
+        "transfer.ring" => "transfer-ring",
+        "transfer.staging-buffers" => "staging-buffers",
+        "transfer.device" => "device",
+        "transfer.device-tiers" => "device-tiers",
+        "fault.spec" => "fault",
+        "fault.install-retries" => "install-retries",
+        "fault.install-backoff-ms" => "install-backoff-ms",
+        "fault.watchdog-ms" => "watchdog-ms",
+        other => other,
+    }
+}
 
 impl RunConfig {
     /// Parse `key=value` arguments over the defaults. Unknown keys
@@ -273,11 +442,13 @@ impl RunConfig {
             let (key, value) = arg
                 .split_once('=')
                 .with_context(|| format!("expected key=value, got {arg:?}"))?;
-            // every arm below MUST also appear in VALID_KEYS (the
-            // unknown-key error teaches from that list; the
+            // every arm below MUST also appear in VALID_KEYS and
+            // KEY_GROUPS (the unknown-key error teaches from those; the
             // `unknown_key_error_lists_the_valid_knobs` test holds the
-            // list→arm direction, this comment is the arm→list one)
-            match key {
+            // list→arm direction, this comment is the arm→list one).
+            // Dotted canonical keys fold onto their flat-alias arm
+            // first, so the two spellings cannot diverge in behavior.
+            match dealias(key) {
                 "dataset" => self.dataset = value.to_string(),
                 "model" => self.model = ModelKind::parse(value)?,
                 "fanout" => self.fanout = Fanout::parse(value)?,
@@ -473,9 +644,31 @@ impl RunConfig {
                 }
                 "seed" => self.seed = value.parse().context("seed")?,
                 "artifacts" => self.artifacts_dir = value.to_string(),
+                "tenant.weights" => {
+                    // a tenant knob is a refresh knob: the weights act
+                    // where the weighted profile is composed
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .class_weights =
+                        ClassWeights::parse(value).context("tenant.weights")?;
+                }
+                "tenant.shed-standard" => {
+                    let f: f64 = value.parse().context("tenant.shed-standard")?;
+                    if !(0.0..=1.0).contains(&f) {
+                        bail!("tenant.shed-standard must be in [0, 1] (queue fraction)");
+                    }
+                    self.class_queue_fraction[1] = f;
+                }
+                "tenant.shed-scan" => {
+                    let f: f64 = value.parse().context("tenant.shed-scan")?;
+                    if !(0.0..=1.0).contains(&f) {
+                        bail!("tenant.shed-scan must be in [0, 1] (queue fraction)");
+                    }
+                    self.class_queue_fraction[2] = f;
+                }
                 other => bail!(
-                    "unknown config key {other:?}; valid keys: {}",
-                    VALID_KEYS.join(", ")
+                    "unknown config key {other:?}; valid keys:\n{}",
+                    grouped_key_listing()
                 ),
             }
         }
@@ -716,31 +909,147 @@ mod tests {
         for key in ["refresh", "tracker", "sketch-width", "drift-threshold"] {
             assert!(msg.contains(key), "error must list {key:?}: {msg}");
         }
-        // every advertised key actually parses (with a plausible value)
+        // every advertised key — dotted canonical and flat alias alike
+        // — actually parses (with a plausible value)
         for key in VALID_KEYS {
             let value = match *key {
-                "dataset" => "tiny",
-                "model" => "gcn",
-                "fanout" => "3,2",
-                "system" => "dci",
-                "budget" => "1MB",
-                "shard-refresh" | "refresh" | "rebalance" | "auto-budget-refresh" => "on",
-                "compute" => "skip",
-                "refresh-decay" => "0.5",
-                "drift-threshold" => "0.2",
-                "rebalance-threshold" => "0.3",
-                "rebalance-floor" => "0.1",
-                "tracker" => "sketch",
-                "device" => "1GB",
-                "device-tiers" => "1GB:21,512MB:10",
-                "artifacts" => "artifacts",
-                "fault" => "oom@0",
-                _ => "4",
+                "tenant.weights" => "4,1,0.05",
+                "tenant.shed-standard" | "tenant.shed-scan" => "0.5",
+                k => match dealias(k) {
+                    "dataset" => "tiny",
+                    "model" => "gcn",
+                    "fanout" => "3,2",
+                    "system" => "dci",
+                    "budget" => "1MB",
+                    "shard-refresh" | "refresh" | "rebalance" | "auto-budget-refresh" => {
+                        "on"
+                    }
+                    "compute" => "skip",
+                    "refresh-decay" => "0.5",
+                    "drift-threshold" => "0.2",
+                    "rebalance-threshold" => "0.3",
+                    "rebalance-floor" => "0.1",
+                    "tracker" => "sketch",
+                    "device" => "1GB",
+                    "device-tiers" => "1GB:21,512MB:10",
+                    "artifacts" => "artifacts",
+                    "fault" => "oom@0",
+                    _ => "4",
+                },
             };
             let arg = format!("{key}={value}");
             RunConfig::from_args(&[arg.clone()])
                 .unwrap_or_else(|e| panic!("advertised knob {arg} rejected: {e}"));
         }
+    }
+
+    #[test]
+    fn key_groups_and_valid_keys_agree() {
+        use std::collections::BTreeSet;
+        // the grouped error listing and the flat accept-list advertise
+        // exactly the same keyspace
+        let mut grouped: BTreeSet<String> = BTreeSet::new();
+        for (_, keys) in KEY_GROUPS {
+            for k in *keys {
+                match k.split_once(" (") {
+                    Some((canon, alias)) => {
+                        grouped.insert(canon.to_string());
+                        grouped.insert(alias.trim_end_matches(')').to_string());
+                    }
+                    None => {
+                        grouped.insert(k.to_string());
+                    }
+                }
+            }
+        }
+        let valid: BTreeSet<String> = VALID_KEYS.iter().map(|k| k.to_string()).collect();
+        assert_eq!(grouped, valid, "KEY_GROUPS and VALID_KEYS drifted apart");
+        // every accepted key dealiases onto a key that is itself valid
+        for k in VALID_KEYS {
+            assert!(valid.contains(dealias(k)), "{k} dealiases out of the keyspace");
+        }
+    }
+
+    #[test]
+    fn dotted_keys_parse_identically_to_their_flat_aliases() {
+        // one run described twice: legacy flat spelling vs dotted
+        // canonical spelling. The configs must be indistinguishable.
+        let flat = RunConfig::from_args(&args(&[
+            "budget=2MB",
+            "shards=2",
+            "rebalance=on",
+            "rebalance-threshold=0.4",
+            "rebalance-floor=0.05",
+            "tracker=sketch",
+            "sketch-width=256",
+            "sketch-depth=3",
+            "refresh-check-ms=25",
+            "refresh-min-batches=4",
+            "refresh-decay=0.8",
+            "drift-threshold=0.3",
+            "shard-refresh=off",
+            "auto-budget-refresh=on",
+            "transfer-ring=2",
+            "staging-buffers=8",
+            "device=1GB",
+            "device-tiers=1GB:21,512MB:10",
+            "fault=oom@0",
+            "install-retries=5",
+            "install-backoff-ms=2",
+            "watchdog-ms=250",
+        ]))
+        .unwrap();
+        let dotted = RunConfig::from_args(&args(&[
+            "cache.budget=2MB",
+            "cache.shards=2",
+            "cache.rebalance=on",
+            "cache.rebalance-threshold=0.4",
+            "cache.rebalance-floor=0.05",
+            "cache.tracker=sketch",
+            "cache.sketch-width=256",
+            "cache.sketch-depth=3",
+            "refresh.check-ms=25",
+            "refresh.min-batches=4",
+            "refresh.decay=0.8",
+            "refresh.drift-threshold=0.3",
+            "refresh.per-shard=off",
+            "refresh.auto-budget=on",
+            "transfer.ring=2",
+            "transfer.staging-buffers=8",
+            "transfer.device=1GB",
+            "transfer.device-tiers=1GB:21,512MB:10",
+            "fault.spec=oom@0",
+            "fault.install-retries=5",
+            "fault.install-backoff-ms=2",
+            "fault.watchdog-ms=250",
+        ]))
+        .unwrap();
+        assert_eq!(format!("{flat:?}"), format!("{dotted:?}"));
+    }
+
+    #[test]
+    fn tenant_knobs() {
+        // defaults: equal treatment in the queue except scan at half
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.class_queue_fraction, [1.0, 1.0, 0.5]);
+        // weights act in the refresh loop, so the knob auto-arms it
+        let cfg = RunConfig::from_args(&args(&["tenant.weights=8,1,0.1"])).unwrap();
+        let r = cfg.refresh.unwrap();
+        assert_eq!(r.class_weights.0, [8.0, 1.0, 0.1]);
+        // shed fractions tune the admission frontend only
+        let cfg = RunConfig::from_args(&args(&[
+            "tenant.shed-scan=0.25",
+            "tenant.shed-standard=0.9",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.class_queue_fraction, [1.0, 0.9, 0.25]);
+        assert!(cfg.refresh.is_none(), "shed knobs must not arm refresh");
+        assert!(RunConfig::from_args(&args(&["tenant.weights=1,2"])).is_err());
+        assert!(RunConfig::from_args(&args(&["tenant.weights=1,-2,3"])).is_err());
+        assert!(RunConfig::from_args(&args(&["tenant.shed-scan=1.5"])).is_err());
+        // tenant knobs are post-namespace: no flat alias exists
+        assert!(RunConfig::from_args(&args(&["shed-scan=0.5"])).is_err());
+        assert!(RunConfig::from_args(&args(&["weights=4,1,0.05"])).is_err());
     }
 
     #[test]

@@ -5,12 +5,94 @@
 //! [`AdmissionController`] enforces (a) a queued-seed ceiling (hard
 //! backpressure — reject with `Overloaded` so clients can retry with
 //! jitter) and (b) an optional per-client token bucket (rate limit).
+//!
+//! Every request also carries a [`TenantClass`] (`priority` /
+//! `standard` / `scan`), derived from the client identity at admission
+//! time. The class travels with the request through the batcher, the
+//! engine's tracker records, the refresh loop's per-class profiles, and
+//! the per-tenant metric ledgers — see DESIGN.md §Multi-tenant QoS.
+//! Under overload the controller sheds classes in QoS order: `scan`
+//! hits its (lower) queue ceiling first, `standard` next, `priority`
+//! last — so a drive-by scan tenant is turned away before it can queue
+//! behind paying traffic.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use thiserror::Error;
+
+/// Number of admission classes ([`TenantClass`] variants). Class-keyed
+/// arrays throughout the stack (tracker strides, refresh profiles,
+/// planner weights, metric ledgers) are sized by this constant.
+pub const N_CLASSES: usize = 3;
+
+/// The admission class a request is served under. Classes change *what
+/// is cached* (tracker weighting, shed order) — never *what is
+/// computed*: logits are bit-identical to class-blind serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TenantClass {
+    /// Paying interactive traffic: highest cache weight, sheds last.
+    Priority,
+    /// Unlabelled traffic (the pre-tenancy behavior).
+    #[default]
+    Standard,
+    /// Bulk / drive-by scans: near-zero cache weight, sheds first.
+    Scan,
+}
+
+impl TenantClass {
+    /// All classes in QoS order (highest first).
+    pub const ALL: [TenantClass; N_CLASSES] =
+        [TenantClass::Priority, TenantClass::Standard, TenantClass::Scan];
+
+    /// Parse `priority` | `standard` | `scan`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "priority" | "p" => Ok(TenantClass::Priority),
+            "standard" | "s" => Ok(TenantClass::Standard),
+            "scan" | "c" => Ok(TenantClass::Scan),
+            other => anyhow::bail!("unknown tenant class {other:?} (priority|standard|scan)"),
+        }
+    }
+
+    /// Canonical name (`priority` | `standard` | `scan`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TenantClass::Priority => "priority",
+            TenantClass::Standard => "standard",
+            TenantClass::Scan => "scan",
+        }
+    }
+
+    /// Stable index into class-keyed arrays (`0..`[`N_CLASSES`]).
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            TenantClass::Priority => 0,
+            TenantClass::Standard => 1,
+            TenantClass::Scan => 2,
+        }
+    }
+
+    /// Derive the class from a client identity: a `priority:` /
+    /// `standard:` / `scan:` prefix names the class (`"scan:crawler"`
+    /// → [`TenantClass::Scan`]); anything else — including every
+    /// pre-tenancy client string — is [`TenantClass::Standard`].
+    pub fn of_client(client: &str) -> TenantClass {
+        match client.split_once(':') {
+            Some((prefix, _)) => Self::parse(prefix).unwrap_or(TenantClass::Standard),
+            None => TenantClass::Standard,
+        }
+    }
+}
+
+impl std::fmt::Display for TenantClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Why a request was not admitted.
 #[derive(Debug, Error, Clone, PartialEq)]
@@ -22,6 +104,20 @@ pub enum AdmissionError {
         /// Seeds queued across all workers at rejection time.
         queued: usize,
         /// The configured ceiling.
+        limit: usize,
+    },
+    /// The request's class hit its (reduced) share of the queue ceiling
+    /// while higher classes still fit — class-aware load shedding.
+    #[error(
+        "shed: class {class} over its queue share ({queued} queued, class limit {limit}); \
+         retry with backoff or upgrade the class"
+    )]
+    Shed {
+        /// The shed request's admission class.
+        class: TenantClass,
+        /// Seeds queued across all workers at rejection time.
+        queued: usize,
+        /// The class's effective queue ceiling.
         limit: usize,
     },
     /// The client's token bucket ran dry (per-client rate limit).
@@ -41,11 +137,21 @@ pub struct AdmissionConfig {
     pub max_queued_seeds: usize,
     /// Optional per-client sustained rate (seeds/second) + burst.
     pub per_client_rate: Option<(f64, f64)>,
+    /// Per-class fraction of `max_queued_seeds` the class may occupy
+    /// (indexed by [`TenantClass::index`]). A fraction below 1.0 sheds
+    /// that class before the global ceiling is reached; the defaults
+    /// (`[1.0, 1.0, 0.5]`) shed only `scan`, leaving pre-tenancy
+    /// admission behavior untouched for everyone else.
+    pub class_queue_fraction: [f64; N_CLASSES],
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { max_queued_seeds: 100_000, per_client_rate: None }
+        AdmissionConfig {
+            max_queued_seeds: 100_000,
+            per_client_rate: None,
+            class_queue_fraction: [1.0, 1.0, 0.5],
+        }
     }
 }
 
@@ -60,26 +166,56 @@ struct Bucket {
 pub struct AdmissionController {
     cfg: AdmissionConfig,
     buckets: Mutex<HashMap<String, Bucket>>,
+    /// Seeds rejected at a queue ceiling, per class (shed ledger).
+    sheds: [AtomicU64; N_CLASSES],
 }
 
 impl AdmissionController {
     /// A controller enforcing `cfg` (no per-client state yet).
     pub fn new(cfg: AdmissionConfig) -> Self {
-        AdmissionController { cfg, buckets: Mutex::new(HashMap::new()) }
+        AdmissionController {
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+            sheds: Default::default(),
+        }
     }
 
     /// Decide whether a request of `n_seeds` from `client` may enter,
-    /// given the current total queue depth.
+    /// given the current total queue depth. The class is derived from
+    /// the client identity ([`TenantClass::of_client`]).
     pub fn admit(
         &self,
         client: &str,
         n_seeds: usize,
         queued_seeds: usize,
+    ) -> Result<TenantClass, AdmissionError> {
+        let class = TenantClass::of_client(client);
+        self.admit_as(client, class, n_seeds, queued_seeds)?;
+        Ok(class)
+    }
+
+    /// [`AdmissionController::admit`] with an explicit class (the
+    /// server's tagged submission path).
+    pub fn admit_as(
+        &self,
+        client: &str,
+        class: TenantClass,
+        n_seeds: usize,
+        queued_seeds: usize,
     ) -> Result<(), AdmissionError> {
-        if queued_seeds + n_seeds > self.cfg.max_queued_seeds {
-            return Err(AdmissionError::Overloaded {
-                queued: queued_seeds,
-                limit: self.cfg.max_queued_seeds,
+        let frac = self.cfg.class_queue_fraction[class.index()].clamp(0.0, 1.0);
+        let class_limit = (self.cfg.max_queued_seeds as f64 * frac) as usize;
+        if queued_seeds + n_seeds > class_limit {
+            self.sheds[class.index()].fetch_add(1, Ordering::Relaxed);
+            // a reduced ceiling is a class shed; the full ceiling is
+            // plain overload (identical to pre-tenancy behavior)
+            return Err(if class_limit < self.cfg.max_queued_seeds {
+                AdmissionError::Shed { class, queued: queued_seeds, limit: class_limit }
+            } else {
+                AdmissionError::Overloaded {
+                    queued: queued_seeds,
+                    limit: self.cfg.max_queued_seeds,
+                }
             });
         }
         if let Some((rate, burst)) = self.cfg.per_client_rate {
@@ -104,6 +240,16 @@ impl AdmissionController {
         }
         Ok(())
     }
+
+    /// Requests rejected at a queue ceiling since startup, per class
+    /// (indexed by [`TenantClass::index`]).
+    pub fn shed_counts(&self) -> [u64; N_CLASSES] {
+        let mut out = [0u64; N_CLASSES];
+        for (o, c) in out.iter_mut().zip(self.sheds.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -114,7 +260,7 @@ mod tests {
     fn rejects_over_queue_ceiling() {
         let ac = AdmissionController::new(AdmissionConfig {
             max_queued_seeds: 100,
-            per_client_rate: None,
+            ..AdmissionConfig::default()
         });
         assert!(ac.admit("a", 50, 0).is_ok());
         assert!(ac.admit("a", 50, 50).is_ok());
@@ -128,6 +274,7 @@ mod tests {
         let ac = AdmissionController::new(AdmissionConfig {
             max_queued_seeds: usize::MAX,
             per_client_rate: Some((1000.0, 100.0)), // 1000/s, burst 100
+            ..AdmissionConfig::default()
         });
         // burst of 100 admitted
         assert!(ac.admit("c1", 100, 0).is_ok());
@@ -147,5 +294,74 @@ mod tests {
     fn zero_seed_requests_always_admitted() {
         let ac = AdmissionController::new(AdmissionConfig::default());
         assert!(ac.admit("x", 0, 0).is_ok());
+    }
+
+    #[test]
+    fn class_derives_from_client_prefix() {
+        assert_eq!(TenantClass::of_client("priority:acme"), TenantClass::Priority);
+        assert_eq!(TenantClass::of_client("scan:crawler"), TenantClass::Scan);
+        assert_eq!(TenantClass::of_client("standard:web"), TenantClass::Standard);
+        // no prefix, unknown prefix, and the pre-tenancy default are
+        // all standard
+        assert_eq!(TenantClass::of_client("anonymous"), TenantClass::Standard);
+        assert_eq!(TenantClass::of_client("svc:etl"), TenantClass::Standard);
+        assert_eq!(TenantClass::default(), TenantClass::Standard);
+        // parse/as_str round-trips; index is a permutation of 0..N
+        let mut seen = [false; N_CLASSES];
+        for c in TenantClass::ALL {
+            assert_eq!(TenantClass::parse(c.as_str()).unwrap(), c);
+            assert_eq!(format!("{c}"), c.as_str());
+            seen[c.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert!(TenantClass::parse("vip").is_err());
+    }
+
+    #[test]
+    fn scan_sheds_before_standard_and_priority() {
+        let ac = AdmissionController::new(AdmissionConfig {
+            max_queued_seeds: 100,
+            ..AdmissionConfig::default()
+        });
+        // at 60 queued seeds: scan (limit 50) sheds, others still admit
+        let err = ac.admit("scan:bot", 10, 60).unwrap_err();
+        assert!(
+            matches!(err, AdmissionError::Shed { class: TenantClass::Scan, limit: 50, .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("class scan"));
+        assert!(ac.admit("standard:web", 10, 60).is_ok());
+        assert!(ac.admit("priority:acme", 10, 60).is_ok());
+        // past the global ceiling everyone is rejected, priority with
+        // plain Overloaded (it never "sheds early")
+        let err = ac.admit("priority:acme", 10, 95).unwrap_err();
+        assert!(matches!(err, AdmissionError::Overloaded { .. }));
+        // the shed ledger attributed both rejections to their classes
+        let sheds = ac.shed_counts();
+        assert_eq!(sheds[TenantClass::Scan.index()], 1);
+        assert_eq!(sheds[TenantClass::Priority.index()], 1);
+        assert_eq!(sheds[TenantClass::Standard.index()], 0);
+    }
+
+    #[test]
+    fn shed_order_follows_queue_fractions() {
+        // a config that staggers all three ceilings sheds strictly in
+        // QoS order as the queue grows
+        let ac = AdmissionController::new(AdmissionConfig {
+            max_queued_seeds: 100,
+            per_client_rate: None,
+            class_queue_fraction: [1.0, 0.8, 0.3],
+        });
+        let admits = |queued: usize| -> Vec<&'static str> {
+            TenantClass::ALL
+                .iter()
+                .filter(|c| ac.admit_as("t", **c, 1, queued).is_ok())
+                .map(|c| c.as_str())
+                .collect()
+        };
+        assert_eq!(admits(10), vec!["priority", "standard", "scan"]);
+        assert_eq!(admits(50), vec!["priority", "standard"]);
+        assert_eq!(admits(90), vec!["priority"]);
+        assert!(admits(100).is_empty());
     }
 }

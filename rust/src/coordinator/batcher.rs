@@ -1,12 +1,20 @@
 //! Dynamic batcher: coalesces client requests into engine-sized
 //! mini-batches. Flush triggers: (a) pending seed count reaches
 //! `batch_size`, (b) the oldest pending request exceeds `max_wait`.
+//!
+//! Requests accumulate in one lane per [`TenantClass`], so a flushed
+//! batch never mixes classes: the batch's class tags its tracker
+//! records and metric ledgers unambiguously, and — because logits
+//! depend on batch composition — class-aware serving stays bit-
+//! identical to class-blind serving whenever the request stream itself
+//! is served in the same batch groupings (see DESIGN.md §Multi-tenant
+//! QoS).
 
 use std::time::{Duration, Instant};
 
 use crate::graph::NodeId;
 
-use super::Request;
+use super::{Request, TenantClass, N_CLASSES};
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -24,76 +32,112 @@ impl Default for BatcherConfig {
 }
 
 /// A flushed batch: concatenated seeds + the requests (with their seed
-/// spans) it serves.
+/// spans) it serves. All members share one admission class.
 pub struct PendingBatch {
     /// All member requests' seeds, concatenated in arrival order.
     pub seeds: Vec<NodeId>,
     /// (request, start, len) spans into `seeds`.
     pub members: Vec<(Request, usize, usize)>,
+    /// The class every member was admitted under (lanes never mix).
+    pub class: TenantClass,
 }
 
-/// Accumulates requests until a flush trigger fires.
-pub struct Batcher {
-    cfg: BatcherConfig,
+/// One class's accumulation lane.
+#[derive(Default)]
+struct Lane {
     seeds: Vec<NodeId>,
     members: Vec<(Request, usize, usize)>,
     oldest: Option<Instant>,
 }
 
+/// Accumulates requests until a flush trigger fires, one lane per
+/// [`TenantClass`].
+pub struct Batcher {
+    cfg: BatcherConfig,
+    lanes: [Lane; N_CLASSES],
+}
+
 impl Batcher {
     /// An empty batcher with `cfg`'s flush triggers.
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, seeds: Vec::new(), members: Vec::new(), oldest: None }
+        Batcher { cfg, lanes: Default::default() }
     }
 
-    /// Seeds currently pending (not yet flushed).
+    /// Seeds currently pending (not yet flushed), across all lanes.
     pub fn pending_seeds(&self) -> usize {
-        self.seeds.len()
+        self.lanes.iter().map(|l| l.seeds.len()).sum()
     }
 
-    /// Whether no request is pending.
+    /// Whether no request is pending in any lane.
     pub fn is_empty(&self) -> bool {
-        self.members.is_empty()
+        self.lanes.iter().all(|l| l.members.is_empty())
     }
 
-    /// Queue a request; returns a batch if the size trigger fired.
+    /// Queue a request into its class's lane; returns a batch if that
+    /// lane's size trigger fired.
     pub fn push(&mut self, req: Request) -> Option<PendingBatch> {
-        let start = self.seeds.len();
+        let class = req.class;
+        let lane = &mut self.lanes[class.index()];
+        let start = lane.seeds.len();
         let len = req.nodes.len();
-        self.seeds.extend_from_slice(&req.nodes);
-        if self.oldest.is_none() {
-            self.oldest = Some(req.submitted);
+        lane.seeds.extend_from_slice(&req.nodes);
+        if lane.oldest.is_none() {
+            lane.oldest = Some(req.submitted);
         }
-        self.members.push((req, start, len));
-        if self.seeds.len() >= self.cfg.batch_size {
-            Some(self.flush())
+        lane.members.push((req, start, len));
+        if lane.seeds.len() >= self.cfg.batch_size {
+            Some(Self::flush_lane(&mut self.lanes[class.index()], class))
         } else {
             None
         }
     }
 
-    /// Time left until the timeout trigger would fire (None if empty).
+    /// Time left until the earliest lane's timeout trigger would fire
+    /// (None if every lane is empty).
     pub fn time_until_deadline(&self, now: Instant) -> Option<Duration> {
-        self.oldest.map(|t| {
-            let age = now.duration_since(t);
-            self.cfg.max_wait.saturating_sub(age)
-        })
+        self.lanes
+            .iter()
+            .filter_map(|l| l.oldest)
+            .map(|t| self.cfg.max_wait.saturating_sub(now.duration_since(t)))
+            .min()
     }
 
-    /// Flush if the timeout trigger fired.
+    /// Flush the lane whose timeout trigger fired (oldest request
+    /// first, QoS order breaking ties). Call again for further expired
+    /// lanes.
     pub fn poll_deadline(&mut self, now: Instant) -> Option<PendingBatch> {
-        match self.time_until_deadline(now) {
-            Some(d) if d.is_zero() && !self.is_empty() => Some(self.flush()),
-            _ => None,
-        }
+        let due = TenantClass::ALL.into_iter().filter(|c| {
+            let lane = &self.lanes[c.index()];
+            match lane.oldest {
+                Some(t) => {
+                    !lane.members.is_empty()
+                        && self.cfg.max_wait.saturating_sub(now.duration_since(t)).is_zero()
+                }
+                None => false,
+            }
+        });
+        let class = due.min_by_key(|c| self.lanes[c.index()].oldest)?;
+        Some(Self::flush_lane(&mut self.lanes[class.index()], class))
     }
 
-    /// Unconditional flush of whatever is pending.
+    /// Unconditional flush of the first non-empty lane, in QoS order
+    /// (priority, standard, scan). Loop `while !is_empty()` to drain
+    /// every lane — a single call no longer empties the batcher now
+    /// that classes batch separately.
     pub fn flush(&mut self) -> PendingBatch {
-        self.oldest = None;
+        let class = TenantClass::ALL
+            .into_iter()
+            .find(|c| !self.lanes[c.index()].members.is_empty())
+            .unwrap_or(TenantClass::Standard);
+        Self::flush_lane(&mut self.lanes[class.index()], class)
+    }
+
+    fn flush_lane(lane: &mut Lane, class: TenantClass) -> PendingBatch {
+        lane.oldest = None;
         PendingBatch {
-            seeds: std::mem::take(&mut self.seeds),
-            members: std::mem::take(&mut self.members),
+            seeds: std::mem::take(&mut lane.seeds),
+            members: std::mem::take(&mut lane.members),
+            class,
         }
     }
 }
@@ -104,8 +148,15 @@ mod tests {
     use std::sync::mpsc;
 
     fn req(nodes: Vec<NodeId>) -> (Request, mpsc::Receiver<super::super::Response>) {
+        req_as(nodes, TenantClass::Standard)
+    }
+
+    fn req_as(
+        nodes: Vec<NodeId>,
+        class: TenantClass,
+    ) -> (Request, mpsc::Receiver<super::super::Response>) {
         let (tx, rx) = mpsc::channel();
-        (Request { nodes, submitted: Instant::now(), reply: tx }, rx)
+        (Request { nodes, class, submitted: Instant::now(), reply: tx }, rx)
     }
 
     #[test]
@@ -121,6 +172,7 @@ mod tests {
         assert_eq!(batch.members[0].1, 0);
         assert_eq!(batch.members[0].2, 2);
         assert_eq!(batch.members[1].1, 2);
+        assert_eq!(batch.class, TenantClass::Standard);
         assert!(b.is_empty());
     }
 
@@ -150,5 +202,40 @@ mod tests {
         b.push(r);
         let d = b.time_until_deadline(Instant::now()).unwrap();
         assert!(d <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn classes_batch_in_separate_lanes() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 4, max_wait: Duration::from_secs(1) });
+        let (r1, _k1) = req_as(vec![1, 2, 3], TenantClass::Priority);
+        let (r2, _k2) = req_as(vec![10, 11, 12], TenantClass::Scan);
+        assert!(b.push(r1).is_none());
+        assert!(b.push(r2).is_none(), "scan seeds must not trip priority's trigger");
+        assert_eq!(b.pending_seeds(), 6);
+        // one more priority seed fills only the priority lane
+        let (r3, _k3) = req_as(vec![4], TenantClass::Priority);
+        let batch = b.push(r3).expect("priority lane size trigger");
+        assert_eq!(batch.class, TenantClass::Priority);
+        assert_eq!(batch.seeds, vec![1, 2, 3, 4]);
+        // the scan lane still holds its request; drain via flush loop
+        assert!(!b.is_empty());
+        let rest = b.flush();
+        assert_eq!(rest.class, TenantClass::Scan);
+        assert_eq!(rest.seeds, vec![10, 11, 12]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_drains_lanes_in_qos_order() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let (r1, _k1) = req_as(vec![7], TenantClass::Scan);
+        let (r2, _k2) = req_as(vec![8], TenantClass::Priority);
+        b.push(r1);
+        b.push(r2);
+        let mut order = Vec::new();
+        while !b.is_empty() {
+            order.push(b.flush().class);
+        }
+        assert_eq!(order, vec![TenantClass::Priority, TenantClass::Scan]);
     }
 }

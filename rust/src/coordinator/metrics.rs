@@ -1,12 +1,71 @@
 //! Serving metrics: request latency distribution, batch sizes, seed
-//! throughput, live cache hit ratios, and the online-refresh /
-//! snapshot-swap counters — the numbers the end-to-end example and the
-//! cache-runtime bench report.
+//! throughput, live cache hit ratios, per-tenant SLO ledgers, and the
+//! online-refresh / snapshot-swap counters — the numbers the
+//! end-to-end example and the cache-runtime bench report.
+//!
+//! Two consumption surfaces, one source of truth: [`ServingMetrics`]
+//! accumulates raw counters; [`ServingMetrics::snapshot`] derives the
+//! typed [`MetricsSnapshot`] tree (ratios, quantiles, throughput) from
+//! them; and both the human [`ServingMetrics::report`] text and the
+//! canonical-JSON [`MetricsSnapshot::to_json`] encoding are thin views
+//! over that snapshot — a number can never disagree between the text
+//! and JSON forms because both read the same derived struct.
 
 use std::time::Duration;
 
 use crate::cache::CacheStats;
+use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::LatencyHist;
+
+use super::admission::{TenantClass, N_CLASSES};
+
+/// Per-class serving ledger: the SLO surface for one admission class
+/// (requests, seeds, end-to-end latency distribution, feature-cache
+/// hit events attributed to the class's batches, and frontend sheds).
+///
+/// One ledger per [`TenantClass`], indexed by [`TenantClass::index`]
+/// in [`ServingMetrics::tenants`]. Batches never mix classes (the
+/// batcher keeps per-class lanes), so a batch's transfer ledger
+/// attributes cleanly to exactly one class.
+#[derive(Debug, Clone, Default)]
+pub struct TenantLedger {
+    /// Client requests served under this class.
+    pub requests: u64,
+    /// Seed nodes served under this class.
+    pub seeds: u64,
+    /// Request latency distribution (submit → reply) for this class.
+    pub latency: LatencyHist,
+    /// Feature-cache hit events from this class's batches.
+    pub feat_hits: u64,
+    /// Feature-cache miss events from this class's batches.
+    pub feat_misses: u64,
+    /// Requests the admission frontend shed for this class (queue
+    /// ceiling; scan sheds first — see `AdmissionConfig`).
+    pub sheds: u64,
+}
+
+impl TenantLedger {
+    /// Feature-cache hit ratio over this class's traffic (0 when the
+    /// class served nothing).
+    pub fn feat_hit_ratio(&self) -> f64 {
+        let total = self.feat_hits + self.feat_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.feat_hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another worker's ledger for the same class into this one.
+    pub fn merge(&mut self, other: &TenantLedger) {
+        self.requests += other.requests;
+        self.seeds += other.seeds;
+        self.latency.merge(&other.latency);
+        self.feat_hits += other.feat_hits;
+        self.feat_misses += other.feat_misses;
+        self.sheds += other.sheds;
+    }
+}
 
 /// Accumulated serving-side metrics (one per worker; merged at report
 /// time).
@@ -20,6 +79,8 @@ pub struct ServingMetrics {
     pub batches: u64,
     /// Request latency distribution (submit → reply).
     pub latency: LatencyHist,
+    /// Per-class SLO ledgers, indexed by [`TenantClass::index`].
+    pub tenants: [TenantLedger; N_CLASSES],
     /// Sampling-stage total (ns, wall + modeled).
     pub sample_ns: f64,
     /// Feature-stage total (ns, wall + modeled).
@@ -62,16 +123,16 @@ pub struct ServingMetrics {
     pub tracker_drained_keys: u64,
     /// Touches the tracker's bounded touched set could not enumerate
     /// (sketch only; persistent nonzero values mean the drain interval
-    /// is too long for the traffic — shorten `refresh-check-ms`).
+    /// is too long for the traffic — shorten `refresh.check-ms`).
     pub tracker_dropped_touches: u64,
     /// Cross-shard budget re-split events applied by the refresh loop
-    /// (`rebalance=on`; see DESIGN.md §Elastic budgets).
+    /// (`cache.rebalance=on`; see DESIGN.md §Elastic budgets).
     pub shard_rebalances: u64,
     /// Σ bytes gained by growing shards across all re-splits — the
     /// cache capacity that actually moved between devices.
     pub budget_moved_bytes: u64,
     /// Final global budget minus the startup global budget, summed
-    /// over workers (nonzero only with `auto-budget-refresh=on` on a
+    /// over workers (nonzero only with `refresh.auto-budget=on` on a
     /// `budget=auto` run).
     pub auto_budget_delta: i64,
     /// Shard installs retried after a transient device-claim or
@@ -89,7 +150,7 @@ pub struct ServingMetrics {
     /// Σ wall time shards spent degraded before repair, ns.
     pub repair_ns: f64,
     /// Refresh-loop generations the watchdog respawned (after a panic
-    /// or a hang past `watchdog-ms`).
+    /// or a hang past `fault.watchdog-ms`).
     pub watchdog_restarts: u64,
     /// Refresh-loop panics the watchdog absorbed.
     pub refresh_panics: u64,
@@ -115,9 +176,42 @@ impl ServingMetrics {
         self.seeds += n_seeds as u64;
     }
 
+    /// Attribute one served batch — its requests, seeds, and feature
+    /// hit/miss events — to its admission class's SLO ledger.
+    pub fn record_tenant_batch(
+        &mut self,
+        class: TenantClass,
+        n_requests: usize,
+        n_seeds: usize,
+        feat_hits: u64,
+        feat_misses: u64,
+    ) {
+        let t = &mut self.tenants[class.index()];
+        t.requests += n_requests as u64;
+        t.seeds += n_seeds as u64;
+        t.feat_hits += feat_hits;
+        t.feat_misses += feat_misses;
+    }
+
     /// Record one request's end-to-end latency.
     pub fn record_latency(&mut self, ns: u64) {
         self.latency.record_ns(ns);
+    }
+
+    /// Record one request's end-to-end latency, both globally and in
+    /// its class's SLO ledger.
+    pub fn record_latency_as(&mut self, class: TenantClass, ns: u64) {
+        self.latency.record_ns(ns);
+        self.tenants[class.index()].latency.record_ns(ns);
+    }
+
+    /// Fold the admission frontend's per-class shed totals in (called
+    /// once per report/shutdown on a freshly merged snapshot — sheds
+    /// live in the controller, not in any worker's metrics).
+    pub fn record_sheds(&mut self, sheds: [u64; N_CLASSES]) {
+        for (t, n) in self.tenants.iter_mut().zip(sheds.iter()) {
+            t.sheds += n;
+        }
     }
 
     /// Fold another worker's metrics into this one.
@@ -126,6 +220,9 @@ impl ServingMetrics {
         self.seeds += other.seeds;
         self.batches += other.batches;
         self.latency.merge(&other.latency);
+        for (t, o) in self.tenants.iter_mut().zip(other.tenants.iter()) {
+            t.merge(o);
+        }
         self.sample_ns += other.sample_ns;
         self.feature_ns += other.feature_ns;
         self.compute_ns += other.compute_ns;
@@ -175,9 +272,97 @@ impl ServingMetrics {
         }
     }
 
-    /// Multi-line human report.
-    pub fn report(&self, elapsed: Duration) -> String {
+    /// Derive the typed snapshot tree: every ratio, quantile, and rate
+    /// the report and JSON surfaces expose, computed once.
+    pub fn snapshot(&self, elapsed: Duration) -> MetricsSnapshot {
         let (p50, p90, p99) = self.latency.quantiles_ns();
+        let tenants = std::array::from_fn(|i| {
+            let t = &self.tenants[i];
+            let (t50, _, t99) = t.latency.quantiles_ns();
+            TenantSnapshot {
+                class: TenantClass::ALL[i].as_str(),
+                requests: t.requests,
+                seeds: t.seeds,
+                p50_ms: t50 / 1e6,
+                p99_ms: t99 / 1e6,
+                feat_hit_ratio: t.feat_hit_ratio(),
+                sheds: t.sheds,
+            }
+        });
+        MetricsSnapshot {
+            traffic: TrafficSnapshot {
+                requests: self.requests,
+                seeds: self.seeds,
+                batches: self.batches,
+                avg_batch_seeds: self.seeds as f64 / self.batches.max(1) as f64,
+                p50_ms: p50 / 1e6,
+                p90_ms: p90 / 1e6,
+                p99_ms: p99 / 1e6,
+                mean_ms: self.latency.mean_ns() / 1e6,
+                throughput_seeds_per_s: self.throughput(elapsed),
+            },
+            stages: StageSnapshot {
+                sample_ms: self.sample_ns / 1e6,
+                feature_ms: self.feature_ns / 1e6,
+                compute_ms: self.compute_ns / 1e6,
+            },
+            cache: CacheHealthSnapshot {
+                adj_hit_ratio: self.cache.adj_hit_ratio(),
+                feat_hit_ratio: self.cache.feat_hit_ratio(),
+                refreshes: self.refreshes,
+                refresh_bg_ms: self.refresh_ns / 1e6,
+                drift_checks: self.drift_checks,
+                swap_stalls: self.swap_stalls,
+            },
+            transfer: TransferSnapshot {
+                staged_ms: self.transfer_staged_ns / 1e6,
+                hidden_ms: self.transfer_hidden_ns / 1e6,
+                occupancy: self.transfer_occupancy(),
+                leases: self.staging_leases,
+                overflow_allocs: self.staging_fresh_allocs,
+                peak_leased: self.staging_peak_leased,
+                fallbacks: self.cache.feature.staged_fallbacks,
+            },
+            tracker: TrackerSnapshot {
+                drain_ms: self.tracker_drain_ns / 1e6,
+                drained_keys: self.tracker_drained_keys,
+                dropped_touches: self.tracker_dropped_touches,
+            },
+            elastic: ElasticSnapshot {
+                rebalances: self.shard_rebalances,
+                moved_bytes: self.budget_moved_bytes,
+                auto_budget_delta: self.auto_budget_delta,
+            },
+            fault: FaultSnapshot {
+                install_retries: self.install_retries,
+                backoff_ms: self.backoff_ns / 1e6,
+                degrades: self.shard_degrades,
+                repairs: self.shard_repairs,
+                degraded_ms: self.repair_ns / 1e6,
+                watchdog_restarts: self.watchdog_restarts,
+                refresh_panics: self.refresh_panics,
+                batch_retries: self.batch_retries,
+                batch_failures: self.batch_failures,
+            },
+            tenants,
+        }
+    }
+
+    /// Multi-line human report — a thin text rendering of
+    /// [`ServingMetrics::snapshot`].
+    pub fn report(&self, elapsed: Duration) -> String {
+        let snap = self.snapshot(elapsed);
+        let tenant_line = snap
+            .tenants
+            .iter()
+            .map(|t| {
+                format!(
+                    "{} req={} p50={:.2}ms p99={:.2}ms feat-hit={:.3} shed={}",
+                    t.class, t.requests, t.p50_ms, t.p99_ms, t.feat_hit_ratio, t.sheds
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" | ");
         format!(
             "requests={} seeds={} batches={} (avg batch {:.1} seeds)\n\
              latency p50={:.2}ms p90={:.2}ms p99={:.2}ms mean={:.2}ms\n\
@@ -189,48 +374,313 @@ impl ServingMetrics {
              tracker: drain={:.2}ms drained-keys={} dropped-touches={}\n\
              elastic: rebalances={} moved={} auto-budget-delta={}\n\
              fault: retries={} backoff={:.1}ms degrades={} repairs={} ({:.1}ms degraded) \
-             watchdog={} panics={} batch-retry={} batch-fail={}",
-            self.requests,
-            self.seeds,
-            self.batches,
-            self.seeds as f64 / self.batches.max(1) as f64,
-            p50 / 1e6,
-            p90 / 1e6,
-            p99 / 1e6,
-            self.latency.mean_ns() / 1e6,
-            self.throughput(elapsed),
-            self.sample_ns / 1e6,
-            self.feature_ns / 1e6,
-            self.compute_ns / 1e6,
-            self.cache.adj_hit_ratio(),
-            self.cache.feat_hit_ratio(),
-            self.refreshes,
-            self.refresh_ns / 1e6,
-            self.drift_checks,
-            self.swap_stalls,
-            self.transfer_staged_ns / 1e6,
-            self.transfer_hidden_ns / 1e6,
-            self.transfer_occupancy(),
-            self.staging_leases,
-            self.staging_fresh_allocs,
-            self.staging_peak_leased,
-            self.cache.feature.staged_fallbacks,
-            self.tracker_drain_ns / 1e6,
-            self.tracker_drained_keys,
-            self.tracker_dropped_touches,
-            self.shard_rebalances,
-            crate::util::format_bytes(self.budget_moved_bytes),
-            self.auto_budget_delta,
-            self.install_retries,
-            self.backoff_ns / 1e6,
-            self.shard_degrades,
-            self.shard_repairs,
-            self.repair_ns / 1e6,
-            self.watchdog_restarts,
-            self.refresh_panics,
-            self.batch_retries,
-            self.batch_failures,
+             watchdog={} panics={} batch-retry={} batch-fail={}\n\
+             tenant: {}",
+            snap.traffic.requests,
+            snap.traffic.seeds,
+            snap.traffic.batches,
+            snap.traffic.avg_batch_seeds,
+            snap.traffic.p50_ms,
+            snap.traffic.p90_ms,
+            snap.traffic.p99_ms,
+            snap.traffic.mean_ms,
+            snap.traffic.throughput_seeds_per_s,
+            snap.stages.sample_ms,
+            snap.stages.feature_ms,
+            snap.stages.compute_ms,
+            snap.cache.adj_hit_ratio,
+            snap.cache.feat_hit_ratio,
+            snap.cache.refreshes,
+            snap.cache.refresh_bg_ms,
+            snap.cache.drift_checks,
+            snap.cache.swap_stalls,
+            snap.transfer.staged_ms,
+            snap.transfer.hidden_ms,
+            snap.transfer.occupancy,
+            snap.transfer.leases,
+            snap.transfer.overflow_allocs,
+            snap.transfer.peak_leased,
+            snap.transfer.fallbacks,
+            snap.tracker.drain_ms,
+            snap.tracker.drained_keys,
+            snap.tracker.dropped_touches,
+            snap.elastic.rebalances,
+            crate::util::format_bytes(snap.elastic.moved_bytes),
+            snap.elastic.auto_budget_delta,
+            snap.fault.install_retries,
+            snap.fault.backoff_ms,
+            snap.fault.degrades,
+            snap.fault.repairs,
+            snap.fault.degraded_ms,
+            snap.fault.watchdog_restarts,
+            snap.fault.refresh_panics,
+            snap.fault.batch_retries,
+            snap.fault.batch_failures,
+            tenant_line,
         )
+    }
+}
+
+/// The typed, derived view of [`ServingMetrics`]: groups mirror the
+/// namespaced config surface (`cache.*`, `transfer.*`, `fault.*`,
+/// `tenant.*`) so a dashboard key and the knob that tunes it share a
+/// vocabulary. Serialize with [`MetricsSnapshot::to_json`].
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Request/seed/batch volume and latency quantiles.
+    pub traffic: TrafficSnapshot,
+    /// Per-stage time totals.
+    pub stages: StageSnapshot,
+    /// Cache hit ratios and refresh-loop health.
+    pub cache: CacheHealthSnapshot,
+    /// Transfer-engine ring and staging-pool health.
+    pub transfer: TransferSnapshot,
+    /// Workload-tracker drain health.
+    pub tracker: TrackerSnapshot,
+    /// Elastic cross-shard budget movement.
+    pub elastic: ElasticSnapshot,
+    /// Fault-tolerance counters.
+    pub fault: FaultSnapshot,
+    /// Per-class SLO views, in [`TenantClass::ALL`] order.
+    pub tenants: [TenantSnapshot; N_CLASSES],
+}
+
+/// Request volume and end-to-end latency quantiles.
+#[derive(Debug, Clone)]
+pub struct TrafficSnapshot {
+    /// Client requests served.
+    pub requests: u64,
+    /// Seed nodes served.
+    pub seeds: u64,
+    /// Engine batches executed.
+    pub batches: u64,
+    /// Mean seeds per batch.
+    pub avg_batch_seeds: f64,
+    /// Median request latency, ms.
+    pub p50_ms: f64,
+    /// 90th-percentile request latency, ms.
+    pub p90_ms: f64,
+    /// 99th-percentile request latency, ms.
+    pub p99_ms: f64,
+    /// Mean request latency, ms.
+    pub mean_ms: f64,
+    /// Seeds served per second of elapsed wall time.
+    pub throughput_seeds_per_s: f64,
+}
+
+/// Per-stage time totals (wall + modeled), ms.
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    /// Sampling-stage total, ms.
+    pub sample_ms: f64,
+    /// Feature-stage total, ms.
+    pub feature_ms: f64,
+    /// Compute-stage total, ms.
+    pub compute_ms: f64,
+}
+
+/// Cache hit ratios and online-refresh health.
+#[derive(Debug, Clone)]
+pub struct CacheHealthSnapshot {
+    /// Adjacency-cache hit ratio.
+    pub adj_hit_ratio: f64,
+    /// Feature-cache hit ratio.
+    pub feat_hit_ratio: f64,
+    /// Re-plans installed.
+    pub refreshes: u64,
+    /// Background re-planning wall time, ms.
+    pub refresh_bg_ms: f64,
+    /// Drift checks evaluated.
+    pub drift_checks: u64,
+    /// Snapshot acquires that blocked on an install (0 when healthy).
+    pub swap_stalls: u64,
+}
+
+/// Transfer-ring and staging-pool health.
+#[derive(Debug, Clone)]
+pub struct TransferSnapshot {
+    /// Modeled staged-H2D time, ms.
+    pub staged_ms: f64,
+    /// Staged time the ring hid under compute, ms.
+    pub hidden_ms: f64,
+    /// `hidden / staged` (0 when nothing staged).
+    pub occupancy: f64,
+    /// Staging-buffer leases handed out.
+    pub leases: u64,
+    /// Leases the pinned pools could not serve.
+    pub overflow_allocs: u64,
+    /// High-water mark of concurrently leased buffers.
+    pub peak_leased: u64,
+    /// Staged copies that degraded to per-row fallback.
+    pub fallbacks: u64,
+}
+
+/// Workload-tracker drain health.
+#[derive(Debug, Clone)]
+pub struct TrackerSnapshot {
+    /// Background drain wall time, ms.
+    pub drain_ms: f64,
+    /// Sparse keys drained across all windows.
+    pub drained_keys: u64,
+    /// Touches the bounded touched set could not enumerate.
+    pub dropped_touches: u64,
+}
+
+/// Elastic cross-shard budget movement.
+#[derive(Debug, Clone)]
+pub struct ElasticSnapshot {
+    /// Budget re-split events applied.
+    pub rebalances: u64,
+    /// Σ bytes gained by growing shards across re-splits.
+    pub moved_bytes: u64,
+    /// Final minus startup global budget (auto-budget runs only).
+    pub auto_budget_delta: i64,
+}
+
+/// Fault-tolerance counters.
+#[derive(Debug, Clone)]
+pub struct FaultSnapshot {
+    /// Shard installs retried after transient failures.
+    pub install_retries: u64,
+    /// Install retry backoff wall time, ms.
+    pub backoff_ms: f64,
+    /// Shards that entered degraded mode.
+    pub degrades: u64,
+    /// Degraded shards repaired back to device residency.
+    pub repairs: u64,
+    /// Σ wall time spent degraded, ms.
+    pub degraded_ms: f64,
+    /// Refresh-loop generations the watchdog respawned.
+    pub watchdog_restarts: u64,
+    /// Refresh-loop panics absorbed.
+    pub refresh_panics: u64,
+    /// Serving batches retried after an isolated panic.
+    pub batch_retries: u64,
+    /// Serving batches that failed after the one retry.
+    pub batch_failures: u64,
+}
+
+/// One class's derived SLO view.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// Class name (`"priority"` / `"standard"` / `"scan"`).
+    pub class: &'static str,
+    /// Requests served under this class.
+    pub requests: u64,
+    /// Seeds served under this class.
+    pub seeds: u64,
+    /// Median request latency, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency, ms.
+    pub p99_ms: f64,
+    /// Feature-cache hit ratio over this class's batches.
+    pub feat_hit_ratio: f64,
+    /// Requests the frontend shed for this class.
+    pub sheds: u64,
+}
+
+impl MetricsSnapshot {
+    /// Canonical JSON encoding (sorted keys, deterministic writer —
+    /// `util::json`): the machine-readable twin of
+    /// [`ServingMetrics::report`].
+    pub fn to_json(&self) -> Json {
+        let n = |x: u64| num(x as f64);
+        obj(vec![
+            (
+                "traffic",
+                obj(vec![
+                    ("requests", n(self.traffic.requests)),
+                    ("seeds", n(self.traffic.seeds)),
+                    ("batches", n(self.traffic.batches)),
+                    ("avg_batch_seeds", num(self.traffic.avg_batch_seeds)),
+                    ("p50_ms", num(self.traffic.p50_ms)),
+                    ("p90_ms", num(self.traffic.p90_ms)),
+                    ("p99_ms", num(self.traffic.p99_ms)),
+                    ("mean_ms", num(self.traffic.mean_ms)),
+                    ("throughput_seeds_per_s", num(self.traffic.throughput_seeds_per_s)),
+                ]),
+            ),
+            (
+                "stages",
+                obj(vec![
+                    ("sample_ms", num(self.stages.sample_ms)),
+                    ("feature_ms", num(self.stages.feature_ms)),
+                    ("compute_ms", num(self.stages.compute_ms)),
+                ]),
+            ),
+            (
+                "cache",
+                obj(vec![
+                    ("adj_hit_ratio", num(self.cache.adj_hit_ratio)),
+                    ("feat_hit_ratio", num(self.cache.feat_hit_ratio)),
+                    ("refreshes", n(self.cache.refreshes)),
+                    ("refresh_bg_ms", num(self.cache.refresh_bg_ms)),
+                    ("drift_checks", n(self.cache.drift_checks)),
+                    ("swap_stalls", n(self.cache.swap_stalls)),
+                ]),
+            ),
+            (
+                "transfer",
+                obj(vec![
+                    ("staged_ms", num(self.transfer.staged_ms)),
+                    ("hidden_ms", num(self.transfer.hidden_ms)),
+                    ("occupancy", num(self.transfer.occupancy)),
+                    ("leases", n(self.transfer.leases)),
+                    ("overflow_allocs", n(self.transfer.overflow_allocs)),
+                    ("peak_leased", n(self.transfer.peak_leased)),
+                    ("fallbacks", n(self.transfer.fallbacks)),
+                ]),
+            ),
+            (
+                "tracker",
+                obj(vec![
+                    ("drain_ms", num(self.tracker.drain_ms)),
+                    ("drained_keys", n(self.tracker.drained_keys)),
+                    ("dropped_touches", n(self.tracker.dropped_touches)),
+                ]),
+            ),
+            (
+                "elastic",
+                obj(vec![
+                    ("rebalances", n(self.elastic.rebalances)),
+                    ("moved_bytes", n(self.elastic.moved_bytes)),
+                    ("auto_budget_delta", num(self.elastic.auto_budget_delta as f64)),
+                ]),
+            ),
+            (
+                "fault",
+                obj(vec![
+                    ("install_retries", n(self.fault.install_retries)),
+                    ("backoff_ms", num(self.fault.backoff_ms)),
+                    ("degrades", n(self.fault.degrades)),
+                    ("repairs", n(self.fault.repairs)),
+                    ("degraded_ms", num(self.fault.degraded_ms)),
+                    ("watchdog_restarts", n(self.fault.watchdog_restarts)),
+                    ("refresh_panics", n(self.fault.refresh_panics)),
+                    ("batch_retries", n(self.fault.batch_retries)),
+                    ("batch_failures", n(self.fault.batch_failures)),
+                ]),
+            ),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("class", s(t.class)),
+                                ("requests", n(t.requests)),
+                                ("seeds", n(t.seeds)),
+                                ("p50_ms", num(t.p50_ms)),
+                                ("p99_ms", num(t.p99_ms)),
+                                ("feat_hit_ratio", num(t.feat_hit_ratio)),
+                                ("sheds", n(t.sheds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -317,5 +767,94 @@ mod tests {
         assert!(rep.contains("rebalances=3"), "{rep}");
         assert!(rep.contains("auto-budget-delta=-512"), "{rep}");
         assert!(rep.contains("degrades=2") && rep.contains("batch-fail=1"), "{rep}");
+    }
+
+    #[test]
+    fn tenant_ledgers_track_per_class_slo() {
+        let mut m = ServingMetrics::new();
+        // a priority batch: 2 requests, 20 seeds, mostly hits
+        m.record_batch(2, 20);
+        m.record_tenant_batch(TenantClass::Priority, 2, 20, 90, 10);
+        m.record_latency_as(TenantClass::Priority, 1_000_000);
+        m.record_latency_as(TenantClass::Priority, 2_000_000);
+        // a scan batch: 1 request, 40 seeds, mostly misses
+        m.record_batch(1, 40);
+        m.record_tenant_batch(TenantClass::Scan, 1, 40, 5, 95);
+        m.record_latency_as(TenantClass::Scan, 50_000_000);
+        m.record_sheds([0, 0, 7]);
+
+        let p = &m.tenants[TenantClass::Priority.index()];
+        assert_eq!(p.requests, 2);
+        assert_eq!(p.seeds, 20);
+        assert!((p.feat_hit_ratio() - 0.9).abs() < 1e-12);
+        assert_eq!(p.sheds, 0);
+        let sc = &m.tenants[TenantClass::Scan.index()];
+        assert_eq!(sc.requests, 1);
+        assert!((sc.feat_hit_ratio() - 0.05).abs() < 1e-12);
+        assert_eq!(sc.sheds, 7);
+        // standard saw nothing
+        assert_eq!(m.tenants[TenantClass::Standard.index()].requests, 0);
+        assert_eq!(m.tenants[TenantClass::Standard.index()].feat_hit_ratio(), 0.0);
+        // the global hist saw every class's latencies
+        assert_eq!(m.latency.count(), 3);
+
+        // merge folds ledgers class-by-class
+        let mut other = ServingMetrics::new();
+        other.record_tenant_batch(TenantClass::Priority, 1, 5, 10, 0);
+        other.record_sheds([1, 0, 0]);
+        m.merge(&other);
+        let p = &m.tenants[TenantClass::Priority.index()];
+        assert_eq!(p.requests, 3);
+        assert_eq!(p.seeds, 25);
+        assert_eq!(p.sheds, 1);
+
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("tenant: priority"), "{rep}");
+        assert!(rep.contains("shed=7"), "{rep}");
+    }
+
+    #[test]
+    fn snapshot_json_is_canonical_and_complete() {
+        let mut m = ServingMetrics::new();
+        m.record_batch(4, 100);
+        m.record_tenant_batch(TenantClass::Standard, 4, 100, 75, 25);
+        for _ in 0..4 {
+            m.record_latency_as(TenantClass::Standard, 3_000_000);
+        }
+        m.shard_rebalances = 2;
+        m.budget_moved_bytes = 1 << 20;
+        m.auto_budget_delta = -256;
+        m.batch_retries = 1;
+
+        let snap = m.snapshot(Duration::from_secs(2));
+        assert_eq!(snap.traffic.requests, 4);
+        assert!((snap.traffic.throughput_seeds_per_s - 50.0).abs() < 1e-9);
+        assert_eq!(snap.tenants[TenantClass::Standard.index()].seeds, 100);
+        assert!(
+            (snap.tenants[TenantClass::Standard.index()].feat_hit_ratio - 0.75).abs() < 1e-12
+        );
+
+        // the JSON encoding round-trips and exposes every group
+        let text = snap.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        for group in ["traffic", "stages", "cache", "transfer", "tracker", "elastic", "fault"] {
+            assert!(parsed.get(group).is_some(), "missing {group} in {text}");
+        }
+        assert_eq!(parsed.req("traffic").unwrap().req("requests").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(
+            parsed.req("elastic").unwrap().req("auto_budget_delta").unwrap().as_f64().unwrap(),
+            -256.0
+        );
+        let tenants = parsed.req("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), N_CLASSES);
+        assert_eq!(tenants[0].req("class").unwrap().as_str().unwrap(), "priority");
+        assert_eq!(tenants[1].req("seeds").unwrap().as_u64().unwrap(), 100);
+        // canonical: serializing the parsed value reproduces the text
+        assert_eq!(parsed.to_string(), text);
+
+        // the human report renders the same snapshot (thin-view check)
+        let rep = m.report(Duration::from_secs(2));
+        assert!(rep.contains("throughput=50"), "{rep}");
+        assert!(rep.contains("tenant: priority"), "{rep}");
     }
 }

@@ -19,9 +19,11 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionError, TenantClass, N_CLASSES,
+};
 pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::ServingMetrics;
+pub use metrics::{MetricsSnapshot, ServingMetrics, TenantLedger, TenantSnapshot};
 pub use router::Router;
 pub use server::{Server, ServerConfig};
 
@@ -33,6 +35,10 @@ use std::time::Instant;
 pub struct Request {
     /// Nodes to classify.
     pub nodes: Vec<NodeId>,
+    /// Admission class assigned at submit time (batching lane, tracker
+    /// tagging, metric ledger). Classes never change the computed
+    /// logits — only what the cache layer learns from the request.
+    pub class: TenantClass,
     /// Submission time (latency measurement).
     pub submitted: Instant,
     /// Where the response goes.

@@ -106,7 +106,12 @@ mod tests {
     fn req(n: usize) -> Request {
         let (tx, _rx) = mpsc::channel();
         std::mem::forget(_rx);
-        Request { nodes: vec![0; n], submitted: Instant::now(), reply: tx }
+        Request {
+            nodes: vec![0; n],
+            class: super::super::TenantClass::Standard,
+            submitted: Instant::now(),
+            reply: tx,
+        }
     }
 
     #[test]

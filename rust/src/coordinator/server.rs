@@ -116,16 +116,22 @@ impl Server {
         self.submit_as("anonymous", nodes)
     }
 
-    /// Submit with a client identity (admission control applies).
+    /// Submit with a client identity (admission control applies). The
+    /// client's [`TenantClass`](super::TenantClass) — derived from the
+    /// identity's `priority:`/`scan:` prefix — rides the request into
+    /// the batcher's per-class lanes and the cache layer's class-tagged
+    /// workload profile; it never changes the computed logits.
     pub fn submit_as(
         &self,
         client: &str,
         nodes: Vec<crate::graph::NodeId>,
     ) -> Result<mpsc::Receiver<Response>> {
-        self.admission
+        let class = self
+            .admission
             .admit(client, nodes.len(), self.router.queued_seeds())?;
         let (tx, rx) = mpsc::channel();
-        self.router.route(Request { nodes, submitted: Instant::now(), reply: tx })?;
+        self.router
+            .route(Request { nodes, class, submitted: Instant::now(), reply: tx })?;
         Ok(rx)
     }
 
@@ -137,13 +143,15 @@ impl Server {
         for m in &self.metrics {
             all.merge(&lock_unpoisoned(m));
         }
+        all.record_sheds(self.admission.shed_counts());
         (all, self.started.elapsed())
     }
 
     /// Stop accepting work, join the workers, and return the final
-    /// metrics (including each worker's refresh + swap counters).
+    /// metrics (including each worker's refresh + swap counters and
+    /// the frontend's per-class shed totals).
     pub fn shutdown(self) -> Result<(ServingMetrics, Duration)> {
-        let Server { router, admission: _, workers, metrics, started } = self;
+        let Server { router, admission, workers, metrics, started } = self;
         drop(router); // closes queues; workers drain + exit
         for j in workers {
             match j.join() {
@@ -155,6 +163,7 @@ impl Server {
         for m in &metrics {
             all.merge(&lock_unpoisoned(m));
         }
+        all.record_sheds(admission.shed_counts());
         Ok((all, started.elapsed()))
     }
 }
@@ -295,8 +304,9 @@ fn serve_requests(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => batcher.poll_deadline(Instant::now()),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // drain and exit
-                if !batcher.is_empty() {
+                // drain and exit: flush() empties one class lane per
+                // call (QoS order), so loop until every lane is dry
+                while !batcher.is_empty() {
                     let b = batcher.flush();
                     serve_batch(engine, b, &mut batch_id, metrics)?;
                 }
@@ -320,12 +330,13 @@ fn serve_batch(
     // is retried once — the engine's fault site fires before any batch
     // state moves, so the retry replays the identical request stream —
     // and a second panic becomes error responses, never a dead worker
-    let first = catch_unwind(AssertUnwindSafe(|| engine.infer_once(&batch.seeds)));
+    let first =
+        catch_unwind(AssertUnwindSafe(|| engine.infer_once_as(&batch.seeds, batch.class)));
     let caught = match first {
         Ok(r) => Ok(r),
         Err(_) => {
             lock_unpoisoned(metrics).batch_retries += 1;
-            catch_unwind(AssertUnwindSafe(|| engine.infer_once(&batch.seeds)))
+            catch_unwind(AssertUnwindSafe(|| engine.infer_once_as(&batch.seeds, batch.class)))
         }
     };
     let out = match caught {
@@ -347,6 +358,15 @@ fn serve_batch(
     let classes = engine.ds.spec.classes;
     let mut m = lock_unpoisoned(metrics);
     m.record_batch(batch.members.len(), batch.seeds.len());
+    // per-tenant SLO ledger: the whole batch is one class (the batcher
+    // never mixes lanes), so its feature ledger attributes cleanly
+    m.record_tenant_batch(
+        batch.class,
+        batch.members.len(),
+        batch.seeds.len(),
+        out.stats.feature.hits,
+        out.stats.feature.misses,
+    );
     m.sample_ns += out.sample.total_ns();
     m.feature_ns += out.feature.total_ns();
     m.compute_ns += out.compute.total_ns();
@@ -357,7 +377,7 @@ fn serve_batch(
 
     for (req, start, len) in batch.members {
         let latency_ns = req.submitted.elapsed().as_nanos() as u64;
-        lock_unpoisoned(metrics).record_latency(latency_ns);
+        lock_unpoisoned(metrics).record_latency_as(batch.class, latency_ns);
         let logits = out.logits.as_ref().map(|l| {
             l[start * classes..(start + len) * classes].to_vec()
         });

@@ -27,6 +27,7 @@ use crate::cache::shard::{ShardedHandle, ShardedRuntime};
 use crate::cache::tracker::WorkloadTracker;
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
+use crate::coordinator::admission::TenantClass;
 use crate::graph::{datasets, Dataset, NodeId};
 use crate::mem::{DeviceGroup, DeviceMemory, StagingPool, StagingStats, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
@@ -553,6 +554,7 @@ impl<'d> InferenceEngine<'d> {
                 &mut prev_inputs,
                 &mut x,
                 None,
+                TenantClass::Standard,
                 staged_on.then(|| stages::StagedGather {
                     fault: fault.as_deref(),
                     batch_index: bi,
@@ -637,10 +639,27 @@ impl<'d> InferenceEngine<'d> {
     /// Serve one batch of seed nodes (the coordinator's request path).
     /// RAIN's cluster-stateful mode is not servable this way.
     ///
+    /// Records the batch's workload-tracker touches as
+    /// [`TenantClass::Standard`]; class-aware callers (the coordinator's
+    /// QoS path) use [`infer_once_as`](Self::infer_once_as).
+    pub fn infer_once(&mut self, seeds: &[NodeId]) -> Result<BatchOutput> {
+        self.infer_once_as(seeds, TenantClass::Standard)
+    }
+
+    /// [`infer_once`](Self::infer_once) with an explicit admission
+    /// class. The class tags only what the [`WorkloadTracker`] learns
+    /// about this batch (the multi-tenant refresh input — see
+    /// `cache::refresh`); the computed logits are bit-identical across
+    /// classes for the same seeds at the same stream position.
+    ///
     /// Hot-path allocation: the sampler (two O(n_nodes) scratch arrays)
     /// comes from the engine's pool and the gather buffer is reused, so
     /// steady-state serving allocates only the mini-batch itself.
-    pub fn infer_once(&mut self, seeds: &[NodeId]) -> Result<BatchOutput> {
+    pub fn infer_once_as(
+        &mut self,
+        seeds: &[NodeId],
+        class: TenantClass,
+    ) -> Result<BatchOutput> {
         anyhow::ensure!(
             !self.prepared.inter_batch_reuse,
             "RAIN's batch-stateful mode cannot serve ad-hoc requests"
@@ -699,6 +718,7 @@ impl<'d> InferenceEngine<'d> {
             &mut no_prev,
             &mut x,
             tracker.as_deref(),
+            class,
             staged_on.then(|| stages::StagedGather {
                 fault: self.fault.as_deref(),
                 batch_index: request,

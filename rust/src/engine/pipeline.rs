@@ -50,6 +50,7 @@ use std::sync::{mpsc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::cache::shard::ShardedHandle;
+use crate::coordinator::admission::TenantClass;
 use crate::graph::NodeId;
 use crate::mem::TransferLedger;
 use crate::util::lock_unpoisoned;
@@ -222,6 +223,7 @@ pub(super) fn run_pipelined(
                             &mut prev_inputs,
                             &mut x,
                             None,
+                            TenantClass::Standard,
                             staged_on.then(|| stages::StagedGather {
                                 fault: fault.as_deref(),
                                 batch_index: idx,

@@ -37,6 +37,7 @@ use anyhow::Result;
 use crate::cache::shard::ShardView;
 use crate::cache::tracker::WorkloadTracker;
 use crate::config::RunConfig;
+use crate::coordinator::admission::TenantClass;
 use crate::graph::{Dataset, NodeId};
 use crate::mem::{CopyPlan, CostModel, TransferLedger};
 use crate::runtime::Compute;
@@ -128,6 +129,11 @@ pub struct StagedGather<'a> {
 /// identical too. A `stage@B` fault degrades that batch to the per-row
 /// charges (byte-identical `x`, `staged_fallbacks` incremented).
 ///
+/// `class` tags the tracker's node-visit records with the batch's
+/// admission class (the multi-tenant refresh input — see
+/// `cache::refresh`); it changes nothing else, and offline paths pass
+/// [`TenantClass::Standard`].
+///
 /// Returns the stage's transfer ledger, wall ns, and the input-node
 /// count.
 #[allow(clippy::too_many_arguments)]
@@ -140,6 +146,7 @@ pub fn gather_stage(
     prev_inputs: &mut HashSet<NodeId>,
     x: &mut Vec<f32>,
     tracker: Option<&dyn WorkloadTracker>,
+    class: TenantClass,
     staged: Option<StagedGather<'_>>,
 ) -> (TransferLedger, f64, usize) {
     let dim = ds.features.dim();
@@ -227,7 +234,7 @@ pub fn gather_stage(
     // bookkeeping, not simulated transfer work; one virtual call for
     // the whole slice, not one per node)
     if let Some(t) = tracker {
-        t.record_nodes(inputs);
+        t.record_nodes_as(class, inputs);
     }
 
     if inter_batch_reuse {

@@ -75,7 +75,7 @@ fn print_usage() {
          \x20             pipeline depth + ring + 2 when the ring is on)\n\
          \x20            device-tiers=CAP[:GBPS],...   (heterogeneous shard devices:\n\
          \x20             per-shard capacity + H2D bandwidth; off = uniform)\n\
-         serve keys:  workers= requests= req-size= batch-wait-ms=\n\
+         serve keys:  workers= requests= req-size= batch-wait-ms= tenant-mix=on|off\n\
          \x20            refresh=on|off refresh-check-ms= refresh-min-batches=\n\
          \x20            refresh-decay= drift-threshold=   (online re-planning)\n\
          \x20            shard-refresh=on|off   (re-plan only drifted shards | all)\n\
@@ -86,7 +86,12 @@ fn print_usage() {
          \x20             the workload's peak claim per epoch)\n\
          \x20            tracker=dense|sketch sketch-width= sketch-depth=\n\
          \x20            (workload tracker: exact counters | count-min sketch\n\
-         \x20             with O(touched) drain; sketch-* keys imply tracker=sketch)"
+         \x20             with O(touched) drain; sketch-* keys imply tracker=sketch)\n\
+         \x20            tenant.weights=P,S,C   (class-weighted refresh planning)\n\
+         \x20            tenant.shed-standard= tenant.shed-scan=   (per-class queue\n\
+         \x20             fraction in [0,1]; the class sheds above it under load)\n\n\
+         config keys accept dotted namespaces (cache.* refresh.* transfer.*\n\
+         fault.* tenant.*); the flat spellings above remain as aliases."
     );
 }
 
@@ -189,6 +194,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut n_requests = 200usize;
     let mut req_size = 16usize;
     let mut batch_wait_ms = 5u64;
+    let mut tenant_mix = false;
     let mut cfg_args = Vec::new();
     for a in args {
         match a.split_once('=') {
@@ -196,6 +202,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(("requests", v)) => n_requests = v.parse()?,
             Some(("req-size", v)) => req_size = v.parse()?,
             Some(("batch-wait-ms", v)) => batch_wait_ms = v.parse()?,
+            Some(("tenant-mix", v)) => {
+                tenant_mix = match v {
+                    "on" => true,
+                    "off" => false,
+                    _ => bail!("tenant-mix must be on|off, got {v:?}"),
+                }
+            }
             _ => cfg_args.push(a.clone()),
         }
     }
@@ -219,18 +232,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 max_wait: Duration::from_millis(batch_wait_ms),
             },
             policy: dci::coordinator::router::RoutePolicy::RoundRobin,
-            admission: dci::coordinator::AdmissionConfig::default(),
+            admission: dci::coordinator::AdmissionConfig {
+                class_queue_fraction: cfg.class_queue_fraction,
+                ..Default::default()
+            },
         },
     )?;
 
-    // synthetic client: random test-node requests
+    // synthetic clients: random test-node requests. With tenant-mix=on
+    // the identities cycle through the three admission classes (the
+    // prefix is the class tag), exercising the per-class batcher lanes
+    // and the tenant ledgers in the final report.
+    let clients: &[&str] = if tenant_mix {
+        &["priority:svc", "dashboard", "scan:crawler"]
+    } else {
+        &["anonymous"]
+    };
     let mut rng = Rng::new(cfg.seed ^ 0xC11E17);
     let mut rxs = Vec::with_capacity(n_requests);
-    for _ in 0..n_requests {
+    for i in 0..n_requests {
         let nodes: Vec<u32> = (0..req_size)
             .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
             .collect();
-        rxs.push(server.submit(nodes)?);
+        rxs.push(server.submit_as(clients[i % clients.len()], nodes)?);
     }
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600))

@@ -287,6 +287,7 @@ fn prop_batcher_conserves_requests() {
             keep.push(rx);
             if let Some(batch) = b.push(dci::coordinator::Request {
                 nodes,
+                class: dci::coordinator::TenantClass::Standard,
                 submitted: Instant::now(),
                 reply: tx,
             }) {
@@ -346,6 +347,7 @@ fn prop_router_conserves_requests() {
             router
                 .route(dci::coordinator::Request {
                     nodes: vec![i as u32],
+                    class: dci::coordinator::TenantClass::Standard,
                     submitted: Instant::now(),
                     reply: tx,
                 })
