@@ -21,6 +21,17 @@ Thresholds format (per file, per metric):
     { "BENCH_foo.json": { "metric": { "min": 0.95, "max": 1.0 } } }
 Either bound may be omitted. Metrics are looked up across every row of
 the bench's `rows` array (last occurrence wins), plus top-level keys.
+
+Scenario matrix: the reserved key "per_scenario" maps a scenario id to
+its own metric bounds, checked against the row(s) whose "scenario"
+field carries that id (rows for the same scenario dict-merge, last
+wins). A gated scenario with no row at all is a failure — a bench that
+silently drops a scenario must not pass. Matrix cells render as
+`metric[scenario]=value` in the trend line:
+    { "BENCH_scenarios.json": {
+        "scenarios": { "min": 5 },
+        "per_scenario": {
+          "flash_crowd": { "recovered_hit_ratio": { "min": 0.9 } } } } }
 """
 
 import argparse
@@ -40,28 +51,34 @@ def flatten(doc):
     return out
 
 
-def check_file(path, bounds):
-    """Returns (trend_cells, failures) for one bench JSON."""
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-    except FileNotFoundError:
-        return [], [f"{path}: missing (bench did not write its JSON)"]
-    except json.JSONDecodeError as e:
-        return [], [f"{path}: unparsable JSON ({e})"]
-    metrics = flatten(doc)
+def scenario_rows(doc):
+    """Scenario id -> merged row dict, from rows tagged with "scenario"."""
+    out = {}
+    for row in doc.get("rows", []):
+        if isinstance(row, dict) and "scenario" in row:
+            out.setdefault(str(row["scenario"]), {}).update(row)
+    return out
+
+
+def check_bounds(path, metrics, bounds, suffix=""):
+    """Check one metric dict against its bounds; returns (cells, failures).
+
+    `suffix` labels scenario-matrix cells (e.g. "[flash_crowd]") so the
+    trend line distinguishes them from the flat metrics.
+    """
     cells, failures = [], []
     for name in sorted(bounds):
         bound = bounds[name]
+        label = f"{name}{suffix}"
         if name not in metrics:
-            cells.append(f"{name}=MISSING")
-            failures.append(f"{path}: missing key {name!r}")
+            cells.append(f"{label}=MISSING")
+            failures.append(f"{path}: missing key {label!r}")
             continue
         try:
             value = float(metrics[name])
         except (TypeError, ValueError):
-            cells.append(f"{name}=NON-NUMERIC")
-            failures.append(f"{path}: {name} is not numeric ({metrics[name]!r})")
+            cells.append(f"{label}=NON-NUMERIC")
+            failures.append(f"{path}: {label} is not numeric ({metrics[name]!r})")
             continue
         lo, hi = bound.get("min"), bound.get("max")
         ok = (lo is None or value >= lo) and (hi is None or value <= hi)
@@ -71,9 +88,34 @@ def check_file(path, bounds):
                 f"<={hi:g}" if hi is not None else "",
             ) if w
         )
-        cells.append(f"{name}={value:g} [{want} {'ok' if ok else 'FAIL'}]")
+        cells.append(f"{label}={value:g} [{want} {'ok' if ok else 'FAIL'}]")
         if not ok:
-            failures.append(f"{path}: {name}={value:g} out of bounds ({want})")
+            failures.append(f"{path}: {label}={value:g} out of bounds ({want})")
+    return cells, failures
+
+
+def check_file(path, bounds):
+    """Returns (trend_cells, failures) for one bench JSON."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return [], [f"{path}: missing (bench did not write its JSON)"]
+    except json.JSONDecodeError as e:
+        return [], [f"{path}: unparsable JSON ({e})"]
+    flat_bounds = {k: v for k, v in bounds.items() if k != "per_scenario"}
+    cells, failures = check_bounds(path, flatten(doc), flat_bounds)
+    per_scenario = bounds.get("per_scenario") or {}
+    by_scenario = scenario_rows(doc)
+    for sid in sorted(per_scenario):
+        row = by_scenario.get(sid)
+        if row is None:
+            cells.append(f"[{sid}]=MISSING")
+            failures.append(f"{path}: no row for scenario {sid!r}")
+            continue
+        c, f = check_bounds(path, row, per_scenario[sid], suffix=f"[{sid}]")
+        cells.extend(c)
+        failures.extend(f)
     return cells, failures
 
 
@@ -87,7 +129,7 @@ def main():
 
     files = args.files or sorted(thresholds)
     all_failures = []
-    width = max(len(p) for p in files)
+    width = max((len(p) for p in files), default=0)
     for path in files:
         # threshold lookup by basename so CI can pass rust/BENCH_x.json
         base = path.rsplit("/", 1)[-1]

@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench gate itself (ci/check_bench.py).
+
+The gate is the last line of defense for every perf and correctness
+threshold in CI; a bug here silently un-gates the whole bench fleet.
+Stdlib unittest only — run as a gating CI step:
+
+    python3 ci/test_check_bench.py
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_bench  # noqa: E402
+
+
+def write_json(dirname, name, doc):
+    path = os.path.join(dirname, name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+SCENARIO_DOC = {
+    "bench": "scenarios",
+    "scenarios": 5,
+    "swap_stalls_total": 0,
+    "rows": [
+        {"scenario": "flash_crowd", "recovered_hit_ratio": 0.97, "swap_stalls": 0},
+        {"scenario": "diurnal", "recovered_hit_ratio": 0.95, "swap_stalls": 0},
+        {"scenario": "scan_storm", "swap_stalls": 0},
+    ],
+}
+
+
+class FlattenTest(unittest.TestCase):
+    def test_top_level_and_rows_merge_last_wins(self):
+        doc = {"a": 1, "rows": [{"b": 2}, {"b": 3, "c": 4}]}
+        self.assertEqual(check_bench.flatten(doc), {"a": 1, "b": 3, "c": 4})
+
+    def test_non_dict_rows_are_skipped(self):
+        doc = {"rows": [[1, 2], {"x": 9}, "junk"]}
+        self.assertEqual(check_bench.flatten(doc), {"x": 9})
+
+    def test_scenario_rows_merge_by_id(self):
+        by = check_bench.scenario_rows(SCENARIO_DOC)
+        self.assertEqual(sorted(by), ["diurnal", "flash_crowd", "scan_storm"])
+        self.assertEqual(by["flash_crowd"]["recovered_hit_ratio"], 0.97)
+        # repeated scenario rows dict-merge, last wins
+        doc = {"rows": [{"scenario": "x", "v": 1}, {"scenario": "x", "v": 2}]}
+        self.assertEqual(check_bench.scenario_rows(doc)["x"]["v"], 2)
+
+
+class CheckFileTest(unittest.TestCase):
+    def check(self, doc, bounds):
+        with tempfile.TemporaryDirectory() as d:
+            return check_bench.check_file(write_json(d, "b.json", doc), bounds)
+
+    def test_in_bound_value_passes(self):
+        cells, failures = self.check({"speedup": 2.0}, {"speedup": {"min": 1.5}})
+        self.assertEqual(failures, [])
+        self.assertIn("speedup=2 [>=1.5 ok]", cells)
+
+    def test_missing_key_fails(self):
+        cells, failures = self.check({"other": 1}, {"speedup": {"min": 1.5}})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("missing key 'speedup'", failures[0])
+        self.assertIn("speedup=MISSING", cells)
+
+    def test_out_of_bound_fails(self):
+        _, failures = self.check({"speedup": 1.0}, {"speedup": {"min": 1.5}})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("out of bounds", failures[0])
+
+    def test_max_bound_fails_high_values(self):
+        _, failures = self.check({"stalls": 3}, {"stalls": {"max": 0}})
+        self.assertEqual(len(failures), 1)
+
+    def test_non_numeric_value_fails(self):
+        _, failures = self.check({"speedup": "fast"}, {"speedup": {"min": 1}})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("not numeric", failures[0])
+
+    def test_missing_file_fails(self):
+        cells, failures = check_bench.check_file("/nonexistent/b.json", {"x": {}})
+        self.assertEqual(cells, [])
+        self.assertEqual(len(failures), 1)
+
+    def test_unparsable_json_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "b.json")
+            with open(path, "w") as f:
+                f.write("{not json")
+            _, failures = check_bench.check_file(path, {"x": {}})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("unparsable", failures[0])
+
+
+class ScenarioMatrixTest(unittest.TestCase):
+    BOUNDS = {
+        "scenarios": {"min": 5},
+        "swap_stalls_total": {"max": 0},
+        "per_scenario": {
+            "flash_crowd": {
+                "recovered_hit_ratio": {"min": 0.9},
+                "swap_stalls": {"max": 0},
+            },
+            "diurnal": {"recovered_hit_ratio": {"min": 0.9}},
+            "scan_storm": {"swap_stalls": {"max": 0}},
+        },
+    }
+
+    def check(self, doc, bounds=None):
+        with tempfile.TemporaryDirectory() as d:
+            path = write_json(d, "BENCH_scenarios.json", doc)
+            return check_bench.check_file(path, bounds or self.BOUNDS)
+
+    def test_matrix_expands_and_passes(self):
+        cells, failures = self.check(SCENARIO_DOC)
+        self.assertEqual(failures, [])
+        # flat metrics plus one cell per (scenario, metric) pair
+        self.assertIn("recovered_hit_ratio[flash_crowd]=0.97 [>=0.9 ok]", cells)
+        self.assertIn("swap_stalls[scan_storm]=0 [<=0 ok]", cells)
+        self.assertEqual(len(cells), 2 + 4)
+
+    def test_scenario_regression_fails(self):
+        doc = json.loads(json.dumps(SCENARIO_DOC))
+        doc["rows"][1]["recovered_hit_ratio"] = 0.5  # diurnal regressed
+        _, failures = self.check(doc)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("recovered_hit_ratio[diurnal]=0.5", failures[0])
+
+    def test_dropped_scenario_row_fails(self):
+        doc = json.loads(json.dumps(SCENARIO_DOC))
+        doc["rows"] = [r for r in doc["rows"] if r["scenario"] != "diurnal"]
+        cells, failures = self.check(doc)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("no row for scenario 'diurnal'", failures[0])
+        self.assertIn("[diurnal]=MISSING", cells)
+
+    def test_per_scenario_key_is_not_a_flat_metric(self):
+        # "per_scenario" must never be looked up as a metric name
+        cells, failures = self.check(SCENARIO_DOC)
+        self.assertEqual(failures, [])
+        self.assertFalse(any("per_scenario=" in c for c in cells))
+
+    def test_scenario_metric_missing_from_row_fails(self):
+        doc = json.loads(json.dumps(SCENARIO_DOC))
+        del doc["rows"][0]["recovered_hit_ratio"]
+        _, failures = self.check(doc)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("recovered_hit_ratio[flash_crowd]", failures[0])
+
+
+class MainTest(unittest.TestCase):
+    def run_main(self, argv):
+        stdout, stderr = io.StringIO(), io.StringIO()
+        old = sys.argv
+        sys.argv = ["check_bench.py"] + argv
+        try:
+            with contextlib.redirect_stdout(stdout), \
+                    contextlib.redirect_stderr(stderr):
+                code = check_bench.main()
+        finally:
+            sys.argv = old
+        return code, stdout.getvalue(), stderr.getvalue()
+
+    def test_trend_table_renders_and_gate_passes(self):
+        with tempfile.TemporaryDirectory() as d:
+            thresholds = write_json(d, "thresholds.json", {
+                "BENCH_a.json": {"speedup": {"min": 1.0}},
+                "BENCH_scenarios.json": self.scenario_bounds(),
+            })
+            write_json(d, "BENCH_a.json", {"speedup": 2.5})
+            write_json(d, "BENCH_scenarios.json", SCENARIO_DOC)
+            cwd = os.getcwd()
+            os.chdir(d)
+            try:
+                code, out, _ = self.run_main(["--thresholds", thresholds])
+            finally:
+                os.chdir(cwd)
+        self.assertEqual(code, 0)
+        self.assertIn("speedup=2.5 [>=1 ok]", out)
+        self.assertIn("recovered_hit_ratio[flash_crowd]=0.97", out)
+        self.assertIn("bench gate ok: 2 file(s)", out)
+
+    def test_failing_bench_exits_nonzero(self):
+        with tempfile.TemporaryDirectory() as d:
+            thresholds = write_json(d, "thresholds.json", {
+                "BENCH_a.json": {"speedup": {"min": 10.0}},
+            })
+            bench = write_json(d, "BENCH_a.json", {"speedup": 2.5})
+            code, _, err = self.run_main(["--thresholds", thresholds, bench])
+        self.assertEqual(code, 1)
+        self.assertIn("out of bounds", err)
+
+    def test_unregistered_file_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            thresholds = write_json(d, "thresholds.json", {})
+            bench = write_json(d, "BENCH_rogue.json", {"x": 1})
+            code, _, err = self.run_main(["--thresholds", thresholds, bench])
+        self.assertEqual(code, 1)
+        self.assertIn("no thresholds registered", err)
+
+    def test_empty_thresholds_and_no_files_is_a_clean_pass(self):
+        # regression: `max(len(p) for p in files)` raised ValueError on
+        # an empty file list before the `default=0` fix
+        with tempfile.TemporaryDirectory() as d:
+            thresholds = write_json(d, "thresholds.json", {})
+            code, out, _ = self.run_main(["--thresholds", thresholds])
+        self.assertEqual(code, 0)
+        self.assertIn("0 file(s)", out)
+
+    def scenario_bounds(self):
+        return {
+            "scenarios": {"min": 5},
+            "per_scenario": {
+                "flash_crowd": {"recovered_hit_ratio": {"min": 0.9}},
+            },
+        }
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Independent (non-Rust) verifier for deterministic run bundles.
+
+A run bundle is a directory sealed by `bench_support::bundle` with a
+`manifest.json` listing every member file's size and sha256 plus a
+`manifest_sha256` self-digest. This script re-derives everything from
+the bytes on disk with Python's stdlib only, so CI proves the bundle
+contract holds *after* the artifact upload round-trip, with none of the
+producing code in the loop.
+
+The cross-language digest works because manifests are float-free by
+construction (strings, bools, integral numbers only — enforced by the
+Rust side's `finalize`):
+
+    json.dumps(obj, sort_keys=True, separators=(",", ":"),
+               ensure_ascii=False)
+
+then byte-for-byte matches Rust's canonical writer.
+
+Usage:
+    python3 ci/verify_bundle.py BUNDLE_DIR [BUNDLE_DIR ...]
+
+Exits non-zero on any digest mismatch, size mismatch, listed-but-
+missing file, or unlisted file in the bundle directory.
+"""
+
+import hashlib
+import json
+import os
+import sys
+
+BUNDLE_SCHEMA = 1
+
+
+def canonical(obj):
+    """Rust `util::json` canonical bytes for a float-free JSON value."""
+    return json.dumps(
+        obj, sort_keys=True, separators=(",", ":"), ensure_ascii=False
+    ).encode("utf-8")
+
+
+def verify(bundle_dir):
+    """Returns a list of failure strings (empty = bundle verified)."""
+    manifest_path = os.path.join(bundle_dir, "manifest.json")
+    try:
+        with open(manifest_path, "rb") as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        return [f"{bundle_dir}: no manifest.json"]
+    except json.JSONDecodeError as e:
+        return [f"{manifest_path}: unparsable ({e})"]
+
+    failures = []
+    if manifest.get("bundle_schema") != BUNDLE_SCHEMA:
+        failures.append(
+            f"{manifest_path}: bundle_schema "
+            f"{manifest.get('bundle_schema')!r} != {BUNDLE_SCHEMA}"
+        )
+
+    claimed = manifest.get("manifest_sha256")
+    body = {k: v for k, v in manifest.items() if k != "manifest_sha256"}
+    derived = hashlib.sha256(canonical(body)).hexdigest()
+    if claimed != derived:
+        failures.append(
+            f"{manifest_path}: manifest_sha256 mismatch "
+            f"(claimed {claimed}, derived {derived})"
+        )
+
+    listed = set()
+    for entry in manifest.get("files", []):
+        name = entry.get("path", "?")
+        listed.add(name)
+        path = os.path.join(bundle_dir, name)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            failures.append(f"{bundle_dir}: listed file missing: {name}")
+            continue
+        if len(data) != entry.get("bytes"):
+            failures.append(
+                f"{path}: size {len(data)} != manifest {entry.get('bytes')}"
+            )
+        digest = hashlib.sha256(data).hexdigest()
+        if digest != entry.get("sha256"):
+            failures.append(
+                f"{path}: sha256 mismatch "
+                f"(manifest {entry.get('sha256')}, file {digest})"
+            )
+
+    for name in sorted(os.listdir(bundle_dir)):
+        if name != "manifest.json" and name not in listed:
+            failures.append(f"{bundle_dir}: unlisted file in bundle: {name}")
+
+    return failures
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    all_failures = []
+    for bundle_dir in sys.argv[1:]:
+        failures = verify(bundle_dir)
+        if failures:
+            all_failures.extend(failures)
+        else:
+            with open(os.path.join(bundle_dir, "manifest.json")) as f:
+                digest = json.load(f)["manifest_sha256"]
+            n = len(os.listdir(bundle_dir)) - 1
+            print(f"{bundle_dir}: verified, {n} file(s), "
+                  f"manifest_sha256={digest}")
+    if all_failures:
+        print("\nbundle verification FAILED:", file=sys.stderr)
+        for failure in all_failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

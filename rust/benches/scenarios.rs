@@ -1,0 +1,493 @@
+//! Scenario-fleet bench: the full workload zoo replayed through the
+//! elastic sharded runtime with refresh, rebalance, and QoS weighting
+//! on.
+//!
+//! Per scenario (`flash_crowd`, `diurnal`, `scan_storm`,
+//! `powerlaw_fanout`, `burst_locality`):
+//!   1. generate the seeded trace, write it into the run bundle as
+//!      canonical JSON, read it back, and replay **from the file** (so
+//!      the file format, not the in-memory object, is what's proven);
+//!   2. plan a 4-shard DCI deployment offline against the trace's warm
+//!      prefix (even budget split — the startup state);
+//!   3. serve the live drift waves through `infer_once_as` with the
+//!      refresh loop armed (per-shard re-plans, cross-shard rebalance,
+//!      default class weights: priority 4 / standard 1 / scan 0.05),
+//!      recording per-class latency and feature traffic;
+//!   4. measure recovery on the final wave: the refreshed live runtime
+//!      vs a fresh offline even-split re-plan of that wave (the
+//!      oracle a static system would need downtime to install).
+//!
+//! Every run writes `BENCH_scenarios.json` inside a run bundle (trace
+//! files, per-scenario metrics snapshots, the bench JSON, manifest with
+//! per-file sha256 + `manifest_sha256`), then re-verifies the sealed
+//! bundle in-process — the same check CI repeats from the uploaded
+//! artifact via `ci/verify_bundle.py`.
+//!
+//! Asserted invariants (the acceptance criteria):
+//!   - zero swap stalls on every shard of every scenario;
+//!   - refresh recovers ≥ 90% of the offline-oracle hit ratio on
+//!     `flash_crowd` and `diurnal` (the two drift shapes a frozen
+//!     cache demonstrably loses);
+//!   - the recomputed `manifest_sha256` matches the sealed one.
+//!
+//! `cargo bench --bench scenarios [-- --quick] [--bundle <dir>]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use dci::baselines::PreparedSystem;
+use dci::bench_support::bundle::{self, RunBundle};
+use dci::bench_support::scenario::{registry, Trace, TraceDims};
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::cache::planner::{DciPlanner, WorkloadProfile};
+use dci::cache::refresh::{RefreshConfig, RefreshJob};
+use dci::cache::shard::{plan_sharded, ShardRouter};
+use dci::cache::tracker::{AccessTracker, WorkloadTracker};
+use dci::cache::CacheStats;
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::coordinator::ServingMetrics;
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, Dataset, NodeId};
+use dci::mem::CostModel;
+use dci::sampler::{presample, Fanout};
+use dci::util::json::{num, s};
+use dci::util::Rng;
+
+/// Trace generation seed for the whole fleet (recorded in every trace
+/// and in the bundle meta).
+const FLEET_SEED: u64 = 7;
+
+struct Params {
+    dataset: &'static str,
+    fanout: &'static str,
+    n_shards: usize,
+    /// Candidate seed pool handed to the generators.
+    pool: usize,
+    dims: TraceDims,
+    /// Global budget, split evenly across shards at startup.
+    budget: u64,
+}
+
+struct ScenarioOutcome {
+    scenario_id: String,
+    events: usize,
+    refreshed_hit: f64,
+    oracle_hit: f64,
+    recovered_hit_ratio: f64,
+    p99_ms: f64,
+    swap_stalls: u64,
+    sheds: u64,
+    replans: u64,
+    rebalances: u64,
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_scenarios.json");
+    let p = if opts.quick {
+        Params {
+            dataset: "tiny",
+            fanout: "2",
+            n_shards: 4,
+            pool: 320,
+            dims: TraceDims::quick(),
+            budget: 16_000,
+        }
+    } else {
+        Params {
+            dataset: "products-sim",
+            fanout: "4",
+            n_shards: 4,
+            pool: 2048,
+            dims: TraceDims::full(),
+            budget: 1 << 20,
+        }
+    };
+
+    // the bundle is assembled by hand here (trace files + per-scenario
+    // metrics land in it as the fleet runs), so keep the harness's
+    // auto-bundle path out of finish()
+    let bundle_dir = opts
+        .bundle_dir
+        .clone()
+        .unwrap_or_else(|| "bundle_scenarios".to_string());
+    let mut finish_opts = opts.clone();
+    finish_opts.bundle_dir = None;
+    let mut run_bundle = RunBundle::create(&bundle_dir)?;
+
+    eprintln!("building {}...", p.dataset);
+    let ds = Arc::new(datasets::spec(p.dataset)?.build());
+    ensure!(ds.test_nodes.len() >= p.pool, "test set smaller than the pool");
+    let mut cfg = RunConfig::default();
+    cfg.dataset = p.dataset.into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.dims.req_size;
+    cfg.fanout = Fanout::parse(p.fanout)?;
+    cfg.budget = Some(p.budget);
+    cfg.shards = p.n_shards;
+    cfg.compute = ComputeKind::Skip;
+
+    let mut outcomes = Vec::new();
+    for sc in registry() {
+        // powerlaw_fanout's skew targets high-fanout nodes: hand it a
+        // degree-sorted pool (hottest first); everyone else sees the
+        // test split's own order
+        let mut pool: Vec<NodeId> = ds.test_nodes[..p.pool].to_vec();
+        if sc.id() == "powerlaw_fanout" {
+            pool.sort_by_key(|&v| std::cmp::Reverse(ds.csc.degree(v)));
+        }
+        let generated = sc.generate(&pool, FLEET_SEED, &p.dims);
+        let trace_name = format!("trace_{}.json", sc.id());
+        run_bundle.write_file(&trace_name, &generated.to_canonical_string())?;
+        // replay from the file, and hold the bit-identity claim in the
+        // serving path itself
+        let trace = Trace::read_file(
+            run_bundle.path_of(&trace_name).to_string_lossy().as_ref(),
+        )?;
+        ensure!(
+            trace == generated
+                && trace.to_canonical_string() == generated.to_canonical_string(),
+            "{}: file replay diverged from direct generation",
+            sc.id()
+        );
+        let outcome = run_scenario(&ds, &cfg, &p, &trace, &mut run_bundle)?;
+        eprintln!(
+            "  [{}] events={} recovery={:.1}% p99={:.2}ms stalls={} replans={} rebalances={}",
+            outcome.scenario_id,
+            outcome.events,
+            100.0 * outcome.recovered_hit_ratio,
+            outcome.p99_ms,
+            outcome.swap_stalls,
+            outcome.replans,
+            outcome.rebalances,
+        );
+        outcomes.push(outcome);
+    }
+
+    let mut report = BenchReport::new(
+        "Scenario fleet: workload zoo through the elastic sharded runtime",
+        &["scenario", "events", "recovery%", "p99 ms", "stalls", "sheds"],
+    );
+    let mut swap_stalls_total = 0u64;
+    for o in &outcomes {
+        swap_stalls_total += o.swap_stalls;
+        report.row(
+            &[
+                o.scenario_id.clone(),
+                o.events.to_string(),
+                format!("{:.1}", 100.0 * o.recovered_hit_ratio),
+                format!("{:.2}", o.p99_ms),
+                o.swap_stalls.to_string(),
+                o.sheds.to_string(),
+            ],
+            vec![
+                ("scenario", s(&o.scenario_id)),
+                ("events", jnum(o.events as f64)),
+                ("refreshed_hit", jnum(o.refreshed_hit)),
+                ("oracle_hit", jnum(o.oracle_hit)),
+                ("recovered_hit_ratio", jnum(o.recovered_hit_ratio)),
+                ("p99_ms", jnum(o.p99_ms)),
+                ("swap_stalls", jnum(o.swap_stalls as f64)),
+                ("sheds", jnum(o.sheds as f64)),
+                ("replans", jnum(o.replans as f64)),
+                ("rebalances", jnum(o.rebalances as f64)),
+            ],
+        );
+    }
+    report.row(
+        &[
+            "fleet total".into(),
+            outcomes.iter().map(|o| o.events).sum::<usize>().to_string(),
+            "-".into(),
+            "-".into(),
+            swap_stalls_total.to_string(),
+            "-".into(),
+        ],
+        vec![
+            ("scenarios", jnum(outcomes.len() as f64)),
+            ("swap_stalls_total", jnum(swap_stalls_total as f64)),
+        ],
+    );
+    report.finish(&finish_opts)?;
+
+    // seal the bundle: the bench JSON joins the traces and metrics
+    // snapshots, then the manifest digest must survive re-verification
+    let json_path = finish_opts.json_path.clone().expect("default json path");
+    let json_name = std::path::Path::new(&json_path)
+        .file_name()
+        .map(|n| n.to_string_lossy().to_string())
+        .unwrap_or_else(|| json_path.clone());
+    run_bundle.copy_file(&json_path, &json_name)?;
+    run_bundle.set_meta("bench", s("scenarios"));
+    run_bundle.set_meta("quick", dci::util::json::Json::Bool(opts.quick));
+    run_bundle.set_meta("dataset", s(p.dataset));
+    run_bundle.set_meta("seed", num(FLEET_SEED as f64));
+    run_bundle.set_meta(
+        "scenarios",
+        s(&outcomes
+            .iter()
+            .map(|o| o.scenario_id.as_str())
+            .collect::<Vec<_>>()
+            .join(",")),
+    );
+    let sealed = run_bundle.finalize()?;
+    let verified = bundle::verify(&bundle_dir)?;
+    ensure!(
+        sealed == verified,
+        "bundle digest drifted between finalize ({sealed}) and verify ({verified})"
+    );
+    println!(
+        "bundle {bundle_dir}: {} scenarios, manifest_sha256 {sealed} (re-verified)",
+        outcomes.len()
+    );
+
+    // the acceptance criteria this bench exists to hold
+    ensure!(outcomes.len() >= 5, "the fleet must span at least 5 scenarios");
+    ensure!(
+        swap_stalls_total == 0,
+        "serving must never block on a snapshot swap anywhere in the fleet"
+    );
+    for o in &outcomes {
+        if o.scenario_id == "flash_crowd" || o.scenario_id == "diurnal" {
+            ensure!(
+                o.recovered_hit_ratio >= 0.9,
+                "{}: refresh recovered only {:.1}% of the offline oracle",
+                o.scenario_id,
+                100.0 * o.recovered_hit_ratio
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Replay one trace through a freshly planned 4-shard deployment with
+/// the refresh loop armed, then measure final-wave recovery against an
+/// offline oracle re-plan.
+fn run_scenario(
+    ds: &Arc<Dataset>,
+    cfg: &RunConfig,
+    p: &Params,
+    trace: &Trace,
+    run_bundle: &mut RunBundle,
+) -> Result<ScenarioOutcome> {
+    let cost = CostModel::default();
+    let router = ShardRouter::new(p.n_shards);
+    let warm: Vec<Vec<NodeId>> =
+        trace.warm_events().iter().map(|e| e.seeds.clone()).collect();
+    let warm_stream: Vec<NodeId> = warm.iter().flatten().copied().collect();
+
+    // offline plan against the warm prefix: even split, per-shard
+    // masked profiles — the deployment's planned state
+    let warm_stats = presample(
+        &ds.csc,
+        &ds.features,
+        &warm_stream,
+        p.dims.req_size,
+        &cfg.fanout,
+        warm.len(),
+        &cost,
+        &mut Rng::new(cfg.seed),
+    );
+    let profile = WorkloadProfile::from_presample(&warm_stats);
+    let plans = plan_sharded(&DciPlanner, ds, &profile, p.budget, &router);
+    ensure!(plans.budgets.iter().sum::<u64>() == p.budget, "split lost bytes");
+    let prepared = PreparedSystem::from_plans(
+        SystemKind::Dci,
+        plans,
+        router.clone(),
+        None,
+        p.budget,
+        0.0,
+        &cost,
+    );
+    let shard_budgets = prepared.shard_budgets.clone();
+    let runtime = Arc::clone(&prepared.runtime);
+    let mut engine = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+    let device = engine.device_group();
+    let tracker = Arc::new(AccessTracker::new(ds.csc.n_nodes(), ds.csc.n_edges()));
+    engine.set_tracker(Arc::clone(&tracker));
+    // refresh + rebalance + QoS: RefreshConfig's default class weights
+    // already encode the QoS policy (priority 4 / standard 1 / scan
+    // 0.05) — scan_storm's storm is tracked at 5% of its raw mass
+    let refresher = RefreshJob::new(
+        Arc::clone(ds),
+        Arc::clone(&runtime),
+        Arc::clone(&tracker) as Arc<dyn WorkloadTracker>,
+        Box::new(DciPlanner),
+        shard_budgets,
+        warm_stats.node_visits.clone(),
+        RefreshConfig {
+            check_interval: Duration::from_millis(20),
+            min_batches: 4,
+            decay: 0.7,
+            drift_threshold: 0.02,
+            rebalance: true,
+            rebalance_threshold: 0.02,
+            rebalance_floor: 0.1,
+            ..RefreshConfig::default()
+        },
+    )
+    .device(Arc::clone(&device))
+    .spawn();
+
+    // serve the whole trace in event order, metering per-class latency
+    // and feature traffic (warm prefix included — it is traffic too)
+    let mut metrics = ServingMetrics::new();
+    let t0 = Instant::now();
+    let mut last_wave = 0u32;
+    for e in &trace.events {
+        if e.wave != last_wave {
+            // wave boundary: give the 20ms refresh loop a poll window,
+            // as a paced serving frontend would
+            std::thread::sleep(Duration::from_millis(25));
+            last_wave = e.wave;
+        }
+        let req0 = Instant::now();
+        let out = engine.infer_once_as(&e.seeds, e.class)?;
+        metrics.record_batch(1, e.seeds.len());
+        metrics.record_tenant_batch(
+            e.class,
+            1,
+            e.seeds.len(),
+            out.stats.feature.hits,
+            out.stats.feature.misses,
+        );
+        metrics.record_latency_as(e.class, req0.elapsed().as_nanos() as u64);
+        metrics.cache.merge(&out.stats);
+    }
+
+    // settle: repeat the final wave until the loop has reacted to the
+    // drift (re-plan or re-split), then a few fixed waves so the
+    // decayed profile converges on it. scan_storm's drift is weighted
+    // down by QoS (that is the point), so a no-reaction outcome is
+    // legal there — the deadline just stops the wait.
+    let last: Vec<Vec<NodeId>> =
+        trace.last_wave_events().iter().map(|e| e.seeds.clone()).collect();
+    let must_react =
+        trace.scenario_id == "flash_crowd" || trace.scenario_id == "diurnal";
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = refresher.stats();
+        if st.replans + st.shard_rebalances > 0 {
+            break;
+        }
+        if Instant::now() >= deadline {
+            ensure!(
+                !must_react,
+                "{}: refresh never reacted to the drift",
+                trace.scenario_id
+            );
+            break;
+        }
+        for seeds in &last {
+            engine.infer_once(seeds)?;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    for _ in 0..10 {
+        for seeds in &last {
+            engine.infer_once(seeds)?;
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let rstats = refresher.stop();
+    let stalls = runtime.swap_stalls();
+    metrics.refreshes = rstats.replans;
+    metrics.drift_checks = rstats.checks;
+    metrics.swap_stalls = stalls;
+    metrics.shard_rebalances = rstats.shard_rebalances;
+    metrics.budget_moved_bytes = rstats.budget_moved_bytes;
+
+    // per-shard structural guarantee, before any ratio math
+    for shard in 0..p.n_shards {
+        ensure!(
+            runtime.shard(shard).swap_stalls() == 0,
+            "{}: shard {shard} blocked a reader on a snapshot swap",
+            trace.scenario_id
+        );
+    }
+
+    // recovery on the final wave: live refreshed runtime vs a fresh
+    // offline even-split re-plan of exactly that wave
+    let last_views: Vec<&[NodeId]> = last.iter().map(|c| c.as_slice()).collect();
+    let refreshed = {
+        let prepared = PreparedSystem {
+            kind: SystemKind::Dci,
+            runtime: Arc::clone(&runtime),
+            cache_budget: p.budget,
+            shard_budgets: rstats.shard_budgets.clone(),
+            presample: None,
+            batch_order: None,
+            inter_batch_reuse: false,
+            preprocess_ns: 0.0,
+            preprocess_wall_ns: 0.0,
+        };
+        let mut e = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+        run_chunks(&mut e, &last_views)?
+    };
+    let oracle = {
+        let last_stream: Vec<NodeId> = last.iter().flatten().copied().collect();
+        let stats = presample(
+            &ds.csc,
+            &ds.features,
+            &last_stream,
+            p.dims.req_size,
+            &cfg.fanout,
+            last.len(),
+            &cost,
+            &mut Rng::new(cfg.seed),
+        );
+        let profile = WorkloadProfile::from_presample(&stats);
+        let plans = plan_sharded(&DciPlanner, ds, &profile, p.budget, &router);
+        let prepared = PreparedSystem::from_plans(
+            SystemKind::Dci,
+            plans,
+            router.clone(),
+            None,
+            p.budget,
+            0.0,
+            &cost,
+        );
+        let mut e = InferenceEngine::with_prepared(ds, cfg.clone(), prepared)?;
+        run_chunks(&mut e, &last_views)?
+    };
+    let recovered_hit_ratio = if oracle.overall_hit_ratio() > 0.0 {
+        refreshed.overall_hit_ratio() / oracle.overall_hit_ratio()
+    } else {
+        1.0
+    };
+
+    // the scenario's metrics snapshot joins the bundle (scenario-tagged
+    // — the row shape the CI matrix keys on)
+    let snap = metrics.snapshot(t0.elapsed());
+    run_bundle.write_file(
+        &format!("metrics_{}.json", trace.scenario_id),
+        &snap.to_json_for_scenario(&trace.scenario_id).to_string(),
+    )?;
+
+    let sheds: u64 = snap.tenants.iter().map(|t| t.sheds).sum();
+    Ok(ScenarioOutcome {
+        scenario_id: trace.scenario_id.clone(),
+        events: trace.events.len(),
+        refreshed_hit: refreshed.overall_hit_ratio(),
+        oracle_hit: oracle.overall_hit_ratio(),
+        recovered_hit_ratio,
+        p99_ms: snap.traffic.p99_ms,
+        swap_stalls: stalls,
+        sheds,
+        replans: rstats.replans,
+        rebalances: rstats.shard_rebalances,
+    })
+}
+
+fn run_chunks(
+    engine: &mut InferenceEngine<'_>,
+    chunks: &[&[NodeId]],
+) -> Result<CacheStats> {
+    let mut stats = CacheStats::new();
+    for chunk in chunks {
+        stats.merge(&engine.infer_once(chunk)?.stats);
+    }
+    Ok(stats)
+}

@@ -1,0 +1,351 @@
+//! Deterministic run bundles: a bench run's trace, resolved knobs,
+//! `BENCH_*.json` reports, and metrics snapshots in one directory with
+//! a sha256 manifest.
+//!
+//! The manifest contract (golden-bundle discipline):
+//! - `manifest.json` lists every other file in the bundle as
+//!   `{path, bytes, sha256}`, sorted by path, plus a `meta` object of
+//!   run identity (trace id, seed, config summary).
+//! - `manifest_sha256` is the SHA-256 of the manifest's canonical JSON
+//!   *without* the `manifest_sha256` field itself.
+//! - The manifest is **float-free** (strings, booleans and integers
+//!   only, enforced at [`RunBundle::finalize`]) so Python's
+//!   `json.dumps(obj, sort_keys=True, separators=(",",":"),
+//!   ensure_ascii=False)` reproduces the exact bytes and CI
+//!   (`ci/verify_bundle.py`) can re-verify the hash from uploaded
+//!   artifacts without a Rust toolchain.
+//!
+//! [`verify`] is the in-process mirror of that CI check: it recomputes
+//! every file digest plus the manifest digest and fails on tampered,
+//! missing, or extra files.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::sha256_hex;
+
+/// Manifest schema version (bumped on any breaking layout change).
+pub const BUNDLE_SCHEMA: u64 = 1;
+
+const MANIFEST: &str = "manifest.json";
+
+/// A run-bundle directory being assembled. Files land via
+/// [`RunBundle::write_file`] / [`RunBundle::copy_file`], run identity
+/// via [`RunBundle::set_meta`]; [`RunBundle::finalize`] seals the
+/// manifest.
+pub struct RunBundle {
+    dir: PathBuf,
+    meta: BTreeMap<String, Json>,
+}
+
+impl RunBundle {
+    /// Create (or wipe and re-create) the bundle directory. A stale
+    /// bundle at the same path is removed so leftover files can never
+    /// leak into the new manifest.
+    pub fn create(dir: impl AsRef<Path>) -> Result<RunBundle> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.exists() {
+            fs::remove_dir_all(&dir)
+                .with_context(|| format!("removing stale bundle {}", dir.display()))?;
+        }
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bundle {}", dir.display()))?;
+        Ok(RunBundle { dir, meta: BTreeMap::new() })
+    }
+
+    /// The bundle directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Absolute path of a bundle member (for callers that stream their
+    /// own output, e.g. a bench pointing its `--json` at the bundle).
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Write `contents` as bundle member `name` (flat names only — the
+    /// manifest scan is non-recursive by design).
+    pub fn write_file(&self, name: &str, contents: &str) -> Result<()> {
+        ensure!(
+            !name.contains('/') && !name.contains('\\'),
+            "bundle member {name:?} must be a flat file name"
+        );
+        ensure!(name != MANIFEST, "{MANIFEST} is reserved for finalize()");
+        fs::write(self.dir.join(name), contents)
+            .with_context(|| format!("writing bundle member {name}"))
+    }
+
+    /// Copy an existing file into the bundle under `name`.
+    pub fn copy_file(&self, src: impl AsRef<Path>, name: &str) -> Result<()> {
+        let text = fs::read_to_string(src.as_ref())
+            .with_context(|| format!("reading {}", src.as_ref().display()))?;
+        self.write_file(name, &text)
+    }
+
+    /// Record a run-identity key in the manifest `meta` object. Values
+    /// must be strings, booleans or integers (checked again, with the
+    /// key named, at finalize) — floats are banned from the manifest so
+    /// its canonical bytes are reproducible from Python.
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    /// Seal the bundle: scan the directory (sorted, non-recursive),
+    /// fingerprint every member, embed the meta object, compute
+    /// `manifest_sha256` over the manifest-without-that-field, and
+    /// write `manifest.json`. Returns the manifest digest.
+    pub fn finalize(self) -> Result<String> {
+        for (k, v) in &self.meta {
+            ensure!(
+                manifest_safe(v),
+                "manifest meta {k:?} must be a string/bool/integer (floats break \
+                 cross-language canonical JSON)"
+            );
+        }
+        let mut names = list_members(&self.dir)?;
+        names.sort();
+        ensure!(!names.is_empty(), "bundle {} has no files", self.dir.display());
+
+        let files: Vec<Json> = names
+            .iter()
+            .map(|name| {
+                let bytes = fs::read(self.dir.join(name))
+                    .with_context(|| format!("reading bundle member {name}"))?;
+                Ok(Json::Obj(BTreeMap::from([
+                    ("bytes".to_string(), Json::Num(bytes.len() as f64)),
+                    ("path".to_string(), Json::Str(name.clone())),
+                    ("sha256".to_string(), Json::Str(sha256_hex(&bytes))),
+                ])))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut manifest = BTreeMap::from([
+            ("bundle_schema".to_string(), Json::Num(BUNDLE_SCHEMA as f64)),
+            ("files".to_string(), Json::Arr(files)),
+            ("meta".to_string(), Json::Obj(self.meta.clone())),
+        ]);
+        let digest = sha256_hex(Json::Obj(manifest.clone()).to_string().as_bytes());
+        manifest.insert("manifest_sha256".to_string(), Json::Str(digest.clone()));
+        fs::write(self.dir.join(MANIFEST), Json::Obj(manifest).to_string())
+            .with_context(|| format!("writing {MANIFEST}"))?;
+        Ok(digest)
+    }
+}
+
+/// Verify a sealed bundle: every listed file exists with the recorded
+/// size and sha256, no unlisted files are present, and the recomputed
+/// `manifest_sha256` matches the embedded one. Returns the digest.
+pub fn verify(dir: impl AsRef<Path>) -> Result<String> {
+    let dir = dir.as_ref();
+    let text = fs::read_to_string(dir.join(MANIFEST))
+        .with_context(|| format!("reading {}", dir.join(MANIFEST).display()))?;
+    let manifest = Json::parse(&text).context("parsing manifest.json")?;
+    let schema = manifest.req("bundle_schema")?.as_u64()?;
+    ensure!(
+        schema == BUNDLE_SCHEMA,
+        "bundle schema {schema} unsupported (this build reads {BUNDLE_SCHEMA})"
+    );
+    let recorded = manifest.req("manifest_sha256")?.as_str()?.to_string();
+
+    // recompute the manifest digest over the canonical bytes without
+    // the manifest_sha256 field
+    let without = match &manifest {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("manifest_sha256");
+            Json::Obj(m)
+        }
+        _ => bail!("manifest.json is not an object"),
+    };
+    let digest = sha256_hex(without.to_string().as_bytes());
+    ensure!(
+        digest == recorded,
+        "manifest_sha256 mismatch: recorded {recorded}, recomputed {digest}"
+    );
+
+    // recompute every member digest and catch extras
+    let mut listed = Vec::new();
+    for f in manifest.req("files")?.as_arr()? {
+        let path = f.req("path")?.as_str()?.to_string();
+        let want_sha = f.req("sha256")?.as_str()?;
+        let want_bytes = f.req("bytes")?.as_u64()? as usize;
+        let bytes = fs::read(dir.join(&path))
+            .with_context(|| format!("bundle member {path} missing"))?;
+        ensure!(
+            bytes.len() == want_bytes,
+            "bundle member {path}: {} bytes, manifest says {want_bytes}",
+            bytes.len()
+        );
+        let got = sha256_hex(&bytes);
+        ensure!(
+            got == want_sha,
+            "bundle member {path} tampered: sha256 {got}, manifest says {want_sha}"
+        );
+        listed.push(path);
+    }
+    let on_disk = list_members(dir)?;
+    for name in &on_disk {
+        ensure!(
+            listed.contains(name),
+            "unlisted file {name} in bundle {}",
+            dir.display()
+        );
+    }
+    ensure!(
+        listed.len() == on_disk.len(),
+        "manifest lists {} files, bundle has {}",
+        listed.len(),
+        on_disk.len()
+    );
+    Ok(digest)
+}
+
+/// Non-recursive member listing, excluding the manifest itself.
+fn list_members(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+    {
+        let entry = entry?;
+        if !entry.file_type()?.is_file() {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name != MANIFEST {
+            names.push(name);
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Whether `v` may appear in the manifest: strings, booleans, and
+/// integral numbers the canonical writer emits without a decimal point.
+fn manifest_safe(v: &Json) -> bool {
+    match v {
+        Json::Str(_) | Json::Bool(_) => true,
+        Json::Num(x) => x.is_finite() && x.fract() == 0.0 && x.abs() < 1e15,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, s};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dci_bundle_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn make(tag: &str) -> (PathBuf, String) {
+        let dir = tmp(tag);
+        let mut b = RunBundle::create(&dir).unwrap();
+        b.write_file("trace_flash_crowd.json", "{\"x\":1}").unwrap();
+        b.write_file("BENCH_scenarios.json", "{\"bench\":\"scenarios\"}").unwrap();
+        b.set_meta("scenario_id", s("flash_crowd"));
+        b.set_meta("seed", num(7.0));
+        let digest = b.finalize().unwrap();
+        (dir, digest)
+    }
+
+    #[test]
+    fn finalize_then_verify_roundtrips() {
+        let (dir, digest) = make("roundtrip");
+        assert_eq!(digest.len(), 64);
+        assert_eq!(verify(&dir).unwrap(), digest);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finalize_is_deterministic() {
+        let (d1, dg1) = make("det_a");
+        let (d2, dg2) = make("det_b");
+        assert_eq!(dg1, dg2);
+        assert_eq!(
+            fs::read_to_string(d1.join(MANIFEST)).unwrap(),
+            fs::read_to_string(d2.join(MANIFEST)).unwrap()
+        );
+        fs::remove_dir_all(&d1).unwrap();
+        fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn tampering_fails_verify() {
+        let (dir, _) = make("tamper");
+        fs::write(dir.join("BENCH_scenarios.json"), "{\"bench\":\"evil\"}").unwrap();
+        let err = verify(&dir).unwrap_err().to_string();
+        assert!(err.contains("tampered") || err.contains("bytes"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn extra_file_fails_verify() {
+        let (dir, _) = make("extra");
+        fs::write(dir.join("stray.json"), "{}").unwrap();
+        let err = verify(&dir).unwrap_err().to_string();
+        assert!(err.contains("unlisted"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_fails_verify() {
+        let (dir, _) = make("missing");
+        fs::remove_file(dir.join("trace_flash_crowd.json")).unwrap();
+        assert!(verify(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn edited_manifest_fails_verify() {
+        let (dir, _) = make("manifest_edit");
+        let text = fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        fs::write(dir.join(MANIFEST), text.replace("flash_crowd", "flash_cr0wd"))
+            .unwrap();
+        let err = verify(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest_sha256 mismatch"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn float_meta_is_rejected() {
+        let dir = tmp("floatmeta");
+        let mut b = RunBundle::create(&dir).unwrap();
+        b.write_file("x.json", "{}").unwrap();
+        b.set_meta("ratio", num(0.5));
+        let err = b.finalize().unwrap_err().to_string();
+        assert!(err.contains("floats"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn nested_and_reserved_names_are_rejected() {
+        let dir = tmp("names");
+        let b = RunBundle::create(&dir).unwrap();
+        assert!(b.write_file("sub/dir.json", "{}").is_err());
+        assert!(b.write_file(MANIFEST, "{}").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_wipes_stale_bundles() {
+        let dir = tmp("stale");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("leftover.json"), "{}").unwrap();
+        let mut b = RunBundle::create(&dir).unwrap();
+        b.write_file("fresh.json", "{}").unwrap();
+        b.set_meta("run", s("second"));
+        b.finalize().unwrap();
+        assert!(!dir.join("leftover.json").exists());
+        verify(&dir).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -3,6 +3,9 @@
 //! criterion in the offline registry; these benches are comparative
 //! system runs, not ns-level microbenches anyway).
 
+pub mod bundle;
+pub mod scenario;
+
 use std::time::Instant;
 
 use anyhow::Result;
@@ -13,11 +16,14 @@ use crate::util::json::{num, obj, s, Json};
 use crate::util::table::Table;
 
 /// Bench-wide options from argv: `--quick` shrinks workloads (CI),
-/// `--json <path>` additionally dumps machine-readable rows.
+/// `--json <path>` additionally dumps machine-readable rows, and
+/// `--bundle <dir>` seals the run's outputs into a manifest-hashed
+/// [`bundle::RunBundle`].
 #[derive(Debug, Clone)]
 pub struct BenchOpts {
     pub quick: bool,
     pub json_path: Option<String>,
+    pub bundle_dir: Option<String>,
 }
 
 impl BenchOpts {
@@ -29,7 +35,12 @@ impl BenchOpts {
             .iter()
             .position(|a| a == "--json")
             .and_then(|i| args.get(i + 1).cloned());
-        BenchOpts { quick, json_path }
+        let bundle_dir = args
+            .iter()
+            .position(|a| a == "--bundle")
+            .and_then(|i| args.get(i + 1).cloned())
+            .or_else(|| std::env::var("DCI_BENCH_BUNDLE").ok());
+        BenchOpts { quick, json_path, bundle_dir }
     }
 
     /// Batch cap for full runs vs. quick runs.
@@ -89,7 +100,10 @@ impl BenchReport {
         self.rows_json.push(obj(json_pairs));
     }
 
-    /// Print the table; write JSON if requested.
+    /// Print the table; write JSON if requested. With `--bundle <dir>`
+    /// (or `DCI_BENCH_BUNDLE`), the bench JSON is additionally sealed
+    /// into a manifest-hashed run bundle — every bench gets
+    /// reproducible artifacts without per-bench wiring.
     pub fn finish(self, opts: &BenchOpts) -> Result<()> {
         println!("\n=== {} ===", self.title);
         print!("{}", self.table.render());
@@ -101,6 +115,18 @@ impl BenchReport {
             ]);
             std::fs::write(path, doc.to_string())?;
             eprintln!("wrote {path}");
+            if let Some(dir) = &opts.bundle_dir {
+                let name = std::path::Path::new(path)
+                    .file_name()
+                    .map(|n| n.to_string_lossy().to_string())
+                    .unwrap_or_else(|| path.clone());
+                let mut b = bundle::RunBundle::create(dir)?;
+                b.copy_file(path, &name)?;
+                b.set_meta("bench", s(&self.title));
+                b.set_meta("quick", Json::Bool(opts.quick));
+                let digest = b.finalize()?;
+                eprintln!("sealed bundle {dir} (manifest_sha256 {digest})");
+            }
         }
         Ok(())
     }
@@ -155,7 +181,29 @@ mod tests {
         let mut r = BenchReport::new("test", &["a", "b"]);
         r.row(&["x".into(), "1".into()], vec![("a", s("x")), ("b", jnum(1.0))]);
         // finish prints; just ensure no error without json
-        r.finish(&BenchOpts { quick: true, json_path: None }).unwrap();
+        r.finish(&BenchOpts { quick: true, json_path: None, bundle_dir: None })
+            .unwrap();
+    }
+
+    #[test]
+    fn finish_seals_a_verifiable_bundle() {
+        let base = std::env::temp_dir()
+            .join(format!("dci_finish_bundle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let json = base.join("BENCH_t.json");
+        let bdir = base.join("bundle");
+        let mut r = BenchReport::new("t", &["a"]);
+        r.row(&["1".into()], vec![("a", jnum(1.0))]);
+        r.finish(&BenchOpts {
+            quick: true,
+            json_path: Some(json.to_string_lossy().into_owned()),
+            bundle_dir: Some(bdir.to_string_lossy().into_owned()),
+        })
+        .unwrap();
+        bundle::verify(&bdir).unwrap();
+        assert!(bdir.join("BENCH_t.json").exists());
+        std::fs::remove_dir_all(&base).unwrap();
     }
 
     #[test]

@@ -1,0 +1,654 @@
+//! Seeded workload zoo: named adversarial request-stream shapes behind
+//! one replayable trace format.
+//!
+//! DCI's claim is *workload-aware* allocation, so the planner / refresh
+//! / rebalance / QoS machinery has to be stressed across workload
+//! diversity, not one drift shape. Each [`Scenario`] is a seeded,
+//! dataset-independent generator that turns a seed pool into a
+//! [`Trace`]: a canonical-JSON event list that can be regenerated
+//! bit-identically from `(scenario_id, seed, knobs, pool)` or replayed
+//! from file through the serving stack (`benches/scenarios.rs`, `dci
+//! serve scenario=…` / `trace=…`).
+//!
+//! Determinism contract (held by `tests/scenarios.rs`):
+//! - `generate` is a pure function of `(pool, seed, dims)`: no clocks,
+//!   no global RNG, no transcendental libm calls (the diurnal wave is a
+//!   triangle approximation for exactly this reason — `sin` is not
+//!   bit-stable across libm builds).
+//! - `Trace::to_canonical_string` is byte-stable: sorted keys, the
+//!   deterministic `util::json` writer, floats only in `knobs` (where
+//!   Rust's shortest-round-trip formatting is platform-independent).
+//! - parse ∘ serialize is the identity on traces.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::TenantClass;
+use crate::graph::NodeId;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::{splitmix64, Rng};
+
+/// Trace schema version (bumped on any breaking field change).
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// Generation geometry shared by every scenario: how much warm-up
+/// traffic precedes the shape-specific drift, and how large each
+/// serving request is. Recorded into [`Trace::knobs`] so a trace is
+/// self-describing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceDims {
+    /// Waves of uniform warm-up traffic the deployment is planned
+    /// against (the phase-A pool of the drift benches).
+    pub warm_waves: usize,
+    /// Shape-specific drift waves that follow.
+    pub drift_waves: usize,
+    /// Requests per wave.
+    pub reqs_per_wave: usize,
+    /// Seed nodes per request.
+    pub req_size: usize,
+}
+
+impl TraceDims {
+    /// CI-sized geometry (the `--quick` default).
+    pub fn quick() -> Self {
+        TraceDims { warm_waves: 2, drift_waves: 6, reqs_per_wave: 8, req_size: 24 }
+    }
+
+    /// Full bench geometry.
+    pub fn full() -> Self {
+        TraceDims { warm_waves: 3, drift_waves: 10, reqs_per_wave: 16, req_size: 64 }
+    }
+}
+
+/// One serving request in a trace: the wave it belongs to (the
+/// replayer's pacing / settle boundary), its admission class, and its
+/// seed nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Wave index (warm waves come first: `wave < warm_waves`).
+    pub wave: u32,
+    /// Admission class (`priority` | `standard` | `scan`).
+    pub class: TenantClass,
+    /// Seed node ids of the request.
+    pub seeds: Vec<NodeId>,
+}
+
+/// A replayable workload trace: `(scenario_id, seed, knobs)` name the
+/// generator invocation, `events` are its output. Canonical JSON via
+/// [`Trace::to_canonical_string`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Generator name (`flash_crowd`, `diurnal`, …).
+    pub scenario_id: String,
+    /// Generator seed.
+    pub seed: u64,
+    /// Generator knobs (dims + shape parameters), name → value. All
+    /// values are finite; integers stay integral so the canonical
+    /// encoding is float-free where possible.
+    pub knobs: BTreeMap<String, f64>,
+    /// The request stream, in serving order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// The warm-up prefix (`wave < knobs["warm_waves"]`) — what the
+    /// deployment's offline plan is built against.
+    pub fn warm_events(&self) -> Vec<&TraceEvent> {
+        let warm = self.knobs.get("warm_waves").copied().unwrap_or(0.0) as u32;
+        self.events.iter().filter(|e| e.wave < warm).collect()
+    }
+
+    /// The drifted live phase (everything after the warm prefix).
+    pub fn live_events(&self) -> Vec<&TraceEvent> {
+        let warm = self.knobs.get("warm_waves").copied().unwrap_or(0.0) as u32;
+        self.events.iter().filter(|e| e.wave >= warm).collect()
+    }
+
+    /// Events of the final wave — the "workload right now" slice the
+    /// recovery measurements run on.
+    pub fn last_wave_events(&self) -> Vec<&TraceEvent> {
+        let last = self.events.iter().map(|e| e.wave).max().unwrap_or(0);
+        self.events.iter().filter(|e| e.wave == last).collect()
+    }
+
+    /// The canonical JSON value (sorted keys via `util::json`).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", num(TRACE_SCHEMA as f64)),
+            ("scenario_id", s(&self.scenario_id)),
+            ("seed", num(self.seed as f64)),
+            (
+                "knobs",
+                Json::Obj(
+                    self.knobs.iter().map(|(k, v)| (k.clone(), num(*v))).collect(),
+                ),
+            ),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("wave", num(e.wave as f64)),
+                                ("class", s(e.class.as_str())),
+                                (
+                                    "seeds",
+                                    Json::Arr(
+                                        e.seeds
+                                            .iter()
+                                            .map(|&v| num(v as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The canonical byte encoding — what the determinism property
+    /// tests compare and what `manifest_sha256` ultimately hashes.
+    pub fn to_canonical_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a trace from its JSON value (schema-checked).
+    pub fn from_json(v: &Json) -> Result<Trace> {
+        let schema = v.req("schema")?.as_u64()?;
+        ensure!(
+            schema == TRACE_SCHEMA,
+            "trace schema {schema} unsupported (this build reads {TRACE_SCHEMA})"
+        );
+        let scenario_id = v.req("scenario_id")?.as_str()?.to_string();
+        let seed = v.req("seed")?.as_u64()?;
+        let mut knobs = BTreeMap::new();
+        match v.req("knobs")? {
+            Json::Obj(m) => {
+                for (k, kv) in m {
+                    let x = kv.as_f64().with_context(|| format!("knob {k:?}"))?;
+                    ensure!(x.is_finite(), "knob {k:?} is not finite");
+                    knobs.insert(k.clone(), x);
+                }
+            }
+            other => bail!("knobs must be an object, got {other:?}"),
+        }
+        let mut events = Vec::new();
+        for (i, e) in v.req("events")?.as_arr()?.iter().enumerate() {
+            let wave = e.req("wave")?.as_u64()? as u32;
+            let class = TenantClass::parse(e.req("class")?.as_str()?)
+                .with_context(|| format!("event {i}"))?;
+            let seeds: Vec<NodeId> = e
+                .req("seeds")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_u64()? as NodeId))
+                .collect::<Result<_>>()
+                .with_context(|| format!("event {i}"))?;
+            ensure!(!seeds.is_empty(), "event {i} has no seeds");
+            events.push(TraceEvent { wave, class, seeds });
+        }
+        ensure!(!events.is_empty(), "trace has no events");
+        Ok(Trace { scenario_id, seed, knobs, events })
+    }
+
+    /// Parse a trace from canonical (or any valid) JSON text.
+    pub fn parse(text: &str) -> Result<Trace> {
+        Trace::from_json(&Json::parse(text).context("trace JSON")?)
+    }
+
+    /// Write the canonical encoding to `path`.
+    pub fn write_file(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_canonical_string())
+            .with_context(|| format!("writing trace {path}"))
+    }
+
+    /// Read and parse a trace file.
+    pub fn read_file(path: &str) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path}"))?;
+        Trace::parse(&text).with_context(|| format!("parsing trace {path}"))
+    }
+}
+
+/// A named, seeded workload generator. Implementations must be pure:
+/// the same `(pool, seed, dims)` always yields the identical trace.
+pub trait Scenario {
+    /// Stable generator name (the trace's `scenario_id`).
+    fn id(&self) -> &'static str;
+    /// One-line description for tables and docs.
+    fn describe(&self) -> &'static str;
+    /// Generate the trace for `pool` (the candidate seed nodes, in a
+    /// deterministic caller-chosen order) under `seed` and `dims`.
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace;
+}
+
+/// Every zoo scenario id, in registry order.
+pub const SCENARIO_IDS: [&str; 5] =
+    ["flash_crowd", "diurnal", "scan_storm", "powerlaw_fanout", "burst_locality"];
+
+/// The full zoo, in [`SCENARIO_IDS`] order.
+pub fn registry() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(FlashCrowd),
+        Box::new(Diurnal),
+        Box::new(ScanStorm),
+        Box::new(PowerlawFanout),
+        Box::new(BurstLocality),
+    ]
+}
+
+/// Look a scenario up by id.
+pub fn by_id(id: &str) -> Option<Box<dyn Scenario>> {
+    registry().into_iter().find(|sc| sc.id() == id)
+}
+
+/// Whether `id` names a zoo scenario (config-time validation for
+/// `scenario=`).
+pub fn is_known(id: &str) -> bool {
+    SCENARIO_IDS.contains(&id)
+}
+
+/// Deterministic per-scenario RNG root: the scenario id is folded into
+/// the seed so two scenarios on the same seed draw unrelated streams.
+fn scenario_rng(id: &str, seed: u64) -> Rng {
+    let tag = id
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| splitmix64(h ^ b as u64));
+    Rng::new(splitmix64(seed ^ tag))
+}
+
+/// Shared knob bookkeeping: every trace records its dims plus the pool
+/// size it was generated against (a regeneration sanity check).
+fn base_knobs(dims: &TraceDims, pool_len: usize) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    m.insert("warm_waves".into(), dims.warm_waves as f64);
+    m.insert("drift_waves".into(), dims.drift_waves as f64);
+    m.insert("reqs_per_wave".into(), dims.reqs_per_wave as f64);
+    m.insert("req_size".into(), dims.req_size as f64);
+    m.insert("pool".into(), pool_len as f64);
+    m
+}
+
+/// Uniform warm-up waves over the head half of the pool — identical
+/// across scenarios so every deployment starts from the same planned
+/// state shape.
+fn warm_events(pool: &[NodeId], rng: &mut Rng, dims: &TraceDims) -> Vec<TraceEvent> {
+    let warm_pool = &pool[..(pool.len() / 2).max(1)];
+    let mut events = Vec::new();
+    for wave in 0..dims.warm_waves {
+        for _ in 0..dims.reqs_per_wave {
+            let seeds = (0..dims.req_size)
+                .map(|_| warm_pool[rng.gen_usize(warm_pool.len())])
+                .collect();
+            events.push(TraceEvent {
+                wave: wave as u32,
+                class: TenantClass::Standard,
+                seeds,
+            });
+        }
+    }
+    events
+}
+
+/// Sudden 100× hot-set shift: warm traffic is uniform, then the stream
+/// collapses onto a tiny hot set from the tail of the pool (each hot
+/// seed served ~100× more often than any warm-phase node), with a
+/// trickle of uniform background.
+pub struct FlashCrowd;
+
+impl Scenario for FlashCrowd {
+    fn id(&self) -> &'static str {
+        "flash_crowd"
+    }
+
+    fn describe(&self) -> &'static str {
+        "sudden 100x hot-set shift onto a tiny tail working set"
+    }
+
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace {
+        let mut rng = scenario_rng(self.id(), seed);
+        let mut events = warm_events(pool, &mut rng, dims);
+        // the hot set: ~1% of the pool (floored at one request's worth),
+        // drawn from the tail half the warm phase never touched
+        let tail = &pool[pool.len() / 2..];
+        let hot_n = (pool.len() / 100).max(dims.req_size).min(tail.len());
+        let hot = &tail[..hot_n];
+        let hot_fraction = 0.9;
+        for wave in 0..dims.drift_waves {
+            for _ in 0..dims.reqs_per_wave {
+                let seeds = (0..dims.req_size)
+                    .map(|_| {
+                        if rng.f64() < hot_fraction {
+                            hot[rng.gen_usize(hot.len())]
+                        } else {
+                            pool[rng.gen_usize(pool.len())]
+                        }
+                    })
+                    .collect();
+                events.push(TraceEvent {
+                    wave: (dims.warm_waves + wave) as u32,
+                    class: TenantClass::Standard,
+                    seeds,
+                });
+            }
+        }
+        let mut knobs = base_knobs(dims, pool.len());
+        knobs.insert("hot_set".into(), hot_n as f64);
+        knobs.insert("hot_fraction".into(), hot_fraction);
+        Trace { scenario_id: self.id().into(), seed, knobs, events }
+    }
+}
+
+/// Slow sinusoidal drift: a window of `window_frac` of the pool slides
+/// across it and back over the drift waves. The waveform is a triangle
+/// approximation of the sinusoid — computed with exact arithmetic so
+/// traces stay bit-identical across libm builds.
+pub struct Diurnal;
+
+impl Scenario for Diurnal {
+    fn id(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn describe(&self) -> &'static str {
+        "slow sinusoidal (triangle) drift of a sliding hot window"
+    }
+
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace {
+        let mut rng = scenario_rng(self.id(), seed);
+        let mut events = warm_events(pool, &mut rng, dims);
+        let window_frac = 0.25;
+        let window = ((pool.len() as f64 * window_frac) as usize).max(dims.req_size);
+        let span = pool.len().saturating_sub(window).max(1);
+        for wave in 0..dims.drift_waves {
+            // triangle wave over the drift phase: 0 → 1 → 0 across
+            // `drift_waves`, in exact rational arithmetic
+            let half = dims.drift_waves.max(2) / 2;
+            let phase = if wave <= half {
+                wave as f64 / half as f64
+            } else {
+                (dims.drift_waves - wave) as f64 / (dims.drift_waves - half) as f64
+            };
+            let start = (phase * span as f64) as usize;
+            let w = &pool[start..(start + window).min(pool.len())];
+            for _ in 0..dims.reqs_per_wave {
+                let seeds =
+                    (0..dims.req_size).map(|_| w[rng.gen_usize(w.len())]).collect();
+                events.push(TraceEvent {
+                    wave: (dims.warm_waves + wave) as u32,
+                    class: TenantClass::Standard,
+                    seeds,
+                });
+            }
+        }
+        let mut knobs = base_knobs(dims, pool.len());
+        knobs.insert("window_frac".into(), window_frac);
+        Trace { scenario_id: self.id().into(), seed, knobs, events }
+    }
+}
+
+/// Adversarial cache-busting sequential scans: after the warm phase,
+/// requests sweep the pool in stride order under the `scan` admission
+/// class, touching everything and re-using nothing — the workload QoS
+/// weighting exists to keep *out* of the cache.
+pub struct ScanStorm;
+
+impl Scenario for ScanStorm {
+    fn id(&self) -> &'static str {
+        "scan_storm"
+    }
+
+    fn describe(&self) -> &'static str {
+        "cache-busting sequential scans under the scan class"
+    }
+
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace {
+        let mut rng = scenario_rng(self.id(), seed);
+        let mut events = warm_events(pool, &mut rng, dims);
+        // stride chosen odd so consecutive scans cover different
+        // residues before wrapping (coprime with any power-of-two-ish
+        // pool layout)
+        let stride = 3usize;
+        let mut cursor = 0usize;
+        for wave in 0..dims.drift_waves {
+            for r in 0..dims.reqs_per_wave {
+                // one standard request per wave keeps a live signal for
+                // the planner; the rest is the storm
+                let (class, seeds): (TenantClass, Vec<NodeId>) = if r == 0 {
+                    let warm_pool = &pool[..(pool.len() / 2).max(1)];
+                    (
+                        TenantClass::Standard,
+                        (0..dims.req_size)
+                            .map(|_| warm_pool[rng.gen_usize(warm_pool.len())])
+                            .collect(),
+                    )
+                } else {
+                    let seeds = (0..dims.req_size)
+                        .map(|i| pool[(cursor + i * stride) % pool.len()])
+                        .collect();
+                    cursor = (cursor + dims.req_size * stride) % pool.len();
+                    (TenantClass::Scan, seeds)
+                };
+                events.push(TraceEvent {
+                    wave: (dims.warm_waves + wave) as u32,
+                    class,
+                    seeds,
+                });
+            }
+        }
+        let mut knobs = base_knobs(dims, pool.len());
+        knobs.insert("stride".into(), stride as f64);
+        Trace { scenario_id: self.id().into(), seed, knobs, events }
+    }
+}
+
+/// Skewed-degree seed selection: requests draw from the pool with a
+/// power-law-ish head bias (P(rank < n/2^k) = 2^-k, by repeated
+/// halving — pure integer arithmetic, no `powf`). Callers order the
+/// pool hottest-first (the bench sorts by degree) so the skew lands on
+/// the high-fanout nodes.
+pub struct PowerlawFanout;
+
+impl Scenario for PowerlawFanout {
+    fn id(&self) -> &'static str {
+        "powerlaw_fanout"
+    }
+
+    fn describe(&self) -> &'static str {
+        "power-law head-biased seed selection over a degree-sorted pool"
+    }
+
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace {
+        let mut rng = scenario_rng(self.id(), seed);
+        let mut events = warm_events(pool, &mut rng, dims);
+        for wave in 0..dims.drift_waves {
+            for _ in 0..dims.reqs_per_wave {
+                let seeds = (0..dims.req_size)
+                    .map(|_| {
+                        // geometric range-halving: each coin flip halves
+                        // the candidate prefix, biasing hard toward the
+                        // head of the (degree-sorted) pool
+                        let mut range = pool.len();
+                        while range > 1 && rng.next_u64() & 1 == 1 {
+                            range /= 2;
+                        }
+                        pool[rng.gen_usize(range)]
+                    })
+                    .collect();
+                events.push(TraceEvent {
+                    wave: (dims.warm_waves + wave) as u32,
+                    class: TenantClass::Standard,
+                    seeds,
+                });
+            }
+        }
+        let knobs = base_knobs(dims, pool.len());
+        Trace { scenario_id: self.id().into(), seed, knobs, events }
+    }
+}
+
+/// Temporally clustered repeats: traffic arrives in bursts, each burst
+/// pinning a small locality set and replaying it for several
+/// consecutive requests before moving on — high short-range reuse,
+/// little long-range reuse.
+pub struct BurstLocality;
+
+impl Scenario for BurstLocality {
+    fn id(&self) -> &'static str {
+        "burst_locality"
+    }
+
+    fn describe(&self) -> &'static str {
+        "temporally clustered repeats over per-burst locality sets"
+    }
+
+    fn generate(&self, pool: &[NodeId], seed: u64, dims: &TraceDims) -> Trace {
+        let mut rng = scenario_rng(self.id(), seed);
+        let mut events = warm_events(pool, &mut rng, dims);
+        let burst_len = 4usize;
+        let locality = (dims.req_size * 2).min(pool.len());
+        let mut burst_left = 0usize;
+        let mut set: Vec<NodeId> = Vec::new();
+        for wave in 0..dims.drift_waves {
+            for _ in 0..dims.reqs_per_wave {
+                if burst_left == 0 {
+                    set = (0..locality)
+                        .map(|_| pool[rng.gen_usize(pool.len())])
+                        .collect();
+                    burst_left = burst_len;
+                }
+                burst_left -= 1;
+                let seeds =
+                    (0..dims.req_size).map(|_| set[rng.gen_usize(set.len())]).collect();
+                events.push(TraceEvent {
+                    wave: (dims.warm_waves + wave) as u32,
+                    class: TenantClass::Standard,
+                    seeds,
+                });
+            }
+        }
+        let mut knobs = base_knobs(dims, pool.len());
+        knobs.insert("burst_len".into(), burst_len as f64);
+        knobs.insert("locality".into(), locality as f64);
+        Trace { scenario_id: self.id().into(), seed, knobs, events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize) -> Vec<NodeId> {
+        (0..n as NodeId).collect()
+    }
+
+    #[test]
+    fn registry_matches_ids() {
+        let zoo = registry();
+        assert_eq!(zoo.len(), SCENARIO_IDS.len());
+        for (sc, id) in zoo.iter().zip(SCENARIO_IDS) {
+            assert_eq!(sc.id(), id);
+            assert!(is_known(id));
+            assert!(by_id(id).is_some());
+            assert!(!sc.describe().is_empty());
+        }
+        assert!(by_id("nope").is_none());
+        assert!(!is_known("nope"));
+    }
+
+    #[test]
+    fn traces_have_expected_shape() {
+        let dims = TraceDims::quick();
+        let p = pool(400);
+        for sc in registry() {
+            let t = sc.generate(&p, 7, &dims);
+            assert_eq!(t.scenario_id, sc.id());
+            assert_eq!(t.seed, 7);
+            assert_eq!(
+                t.events.len(),
+                (dims.warm_waves + dims.drift_waves) * dims.reqs_per_wave,
+                "{}",
+                sc.id()
+            );
+            assert_eq!(
+                t.warm_events().len(),
+                dims.warm_waves * dims.reqs_per_wave,
+                "{}",
+                sc.id()
+            );
+            assert_eq!(t.last_wave_events().len(), dims.reqs_per_wave, "{}", sc.id());
+            for e in &t.events {
+                assert_eq!(e.seeds.len(), dims.req_size);
+                assert!(e.seeds.iter().all(|&v| (v as usize) < p.len()));
+            }
+            // every seed the generator drew is in range and the knob
+            // record is self-describing
+            assert_eq!(t.knobs["pool"], p.len() as f64);
+            assert_eq!(t.knobs["req_size"], dims.req_size as f64);
+        }
+    }
+
+    #[test]
+    fn scan_storm_tags_the_scan_class() {
+        let t = ScanStorm.generate(&pool(300), 1, &TraceDims::quick());
+        assert!(t.live_events().iter().any(|e| e.class == TenantClass::Scan));
+        assert!(t.warm_events().iter().all(|e| e.class == TenantClass::Standard));
+    }
+
+    #[test]
+    fn generation_is_pure() {
+        let dims = TraceDims::quick();
+        let p = pool(500);
+        for sc in registry() {
+            let a = sc.generate(&p, 42, &dims);
+            let b = sc.generate(&p, 42, &dims);
+            assert_eq!(a, b, "{} not pure", sc.id());
+            assert_eq!(a.to_canonical_string(), b.to_canonical_string());
+            // a different seed must actually change the stream
+            let c = sc.generate(&p, 43, &dims);
+            assert_ne!(
+                a.to_canonical_string(),
+                c.to_canonical_string(),
+                "{} ignores its seed",
+                sc.id()
+            );
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip() {
+        let dims = TraceDims::quick();
+        let p = pool(300);
+        for sc in registry() {
+            let t = sc.generate(&p, 9, &dims);
+            let text = t.to_canonical_string();
+            let back = Trace::parse(&text).unwrap();
+            assert_eq!(back, t, "{}", sc.id());
+            // canonical: re-serializing the parsed trace reproduces the
+            // bytes
+            assert_eq!(back.to_canonical_string(), text, "{}", sc.id());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        // wrong schema
+        let bad = r#"{"schema":99,"scenario_id":"x","seed":1,"knobs":{},"events":[{"wave":0,"class":"standard","seeds":[1]}]}"#;
+        assert!(Trace::parse(bad).is_err());
+        // unknown class
+        let bad = r#"{"schema":1,"scenario_id":"x","seed":1,"knobs":{},"events":[{"wave":0,"class":"vip","seeds":[1]}]}"#;
+        assert!(Trace::parse(bad).is_err());
+        // empty events / empty seeds
+        let bad = r#"{"schema":1,"scenario_id":"x","seed":1,"knobs":{},"events":[]}"#;
+        assert!(Trace::parse(bad).is_err());
+        let bad = r#"{"schema":1,"scenario_id":"x","seed":1,"knobs":{},"events":[{"wave":0,"class":"scan","seeds":[]}]}"#;
+        assert!(Trace::parse(bad).is_err());
+        // missing keys
+        assert!(Trace::parse(r#"{"schema":1}"#).is_err());
+        assert!(Trace::parse("not json").is_err());
+    }
+}

@@ -193,6 +193,19 @@ pub struct RunConfig {
     /// and the injection sites cost one pointer null-check. Chaos
     /// testing only — never set in production runs.
     pub fault: Option<String>,
+    /// Named workload-zoo scenario (`scenario=flash_crowd`; see
+    /// [`crate::bench_support::scenario`]) driving serve mode: the
+    /// request stream is generated from the scenario instead of the
+    /// uniform synthetic default. `None` = no scenario.
+    pub scenario: Option<String>,
+    /// Seed for scenario trace generation (`scenario.seed=`); `None` =
+    /// reuse the engine `seed`, so one knob still describes a fully
+    /// deterministic run.
+    pub scenario_seed: Option<u64>,
+    /// Canonical JSON trace file to replay in serve mode
+    /// (`scenario.trace=` / `trace=`). Takes precedence over
+    /// `scenario=` — a file is the stronger reproducibility claim.
+    pub trace: Option<String>,
     /// Per-class admission queue fractions for serve mode, indexed by
     /// [`TenantClass::index`](crate::coordinator::TenantClass::index):
     /// class *c* is shed once the queue exceeds `fraction × max-queued`
@@ -228,6 +241,9 @@ impl Default for RunConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             fault: None,
+            scenario: None,
+            scenario_seed: None,
+            trace: None,
             class_queue_fraction: [1.0, 1.0, 0.5],
         }
     }
@@ -308,6 +324,13 @@ pub const VALID_KEYS: &[&str] = &[
     "tenant.weights",
     "tenant.shed-standard",
     "tenant.shed-scan",
+    // scenario.* — `scenario=` is both the group switch and its own
+    // canonical spelling (the `refresh=` precedent); `trace` keeps a
+    // flat alias because bench scripts pass bare trace files
+    "scenario",
+    "scenario.seed",
+    "scenario.trace",
+    "trace",
 ];
 
 /// The keyspace grouped by namespace for the unknown-key error: each
@@ -381,6 +404,10 @@ const KEY_GROUPS: &[(&str, &[&str])] = &[
         "tenant",
         &["tenant.weights", "tenant.shed-standard", "tenant.shed-scan"],
     ),
+    (
+        "scenario",
+        &["scenario", "scenario.seed", "scenario.trace (trace)"],
+    ),
 ];
 
 /// Render [`KEY_GROUPS`] as the multi-line listing the unknown-key
@@ -421,6 +448,7 @@ fn dealias(key: &str) -> &str {
         "fault.install-retries" => "install-retries",
         "fault.install-backoff-ms" => "install-backoff-ms",
         "fault.watchdog-ms" => "watchdog-ms",
+        "scenario.trace" => "trace",
         other => other,
     }
 }
@@ -659,6 +687,33 @@ impl RunConfig {
                     }
                     self.class_queue_fraction[1] = f;
                 }
+                "scenario" => {
+                    self.scenario = match value {
+                        "off" | "none" => None,
+                        name => {
+                            // validate at parse time, like fault=: a
+                            // typoed scenario must fail the run, not
+                            // silently serve the uniform default
+                            if !crate::bench_support::scenario::is_known(name) {
+                                bail!(
+                                    "unknown scenario {name:?} (known: {})",
+                                    crate::bench_support::scenario::SCENARIO_IDS
+                                        .join("|")
+                                );
+                            }
+                            Some(name.to_string())
+                        }
+                    };
+                }
+                "scenario.seed" => {
+                    self.scenario_seed = Some(value.parse().context("scenario.seed")?);
+                }
+                "trace" => {
+                    self.trace = match value {
+                        "off" | "none" => None,
+                        path => Some(path.to_string()),
+                    };
+                }
                 "tenant.shed-scan" => {
                     let f: f64 = value.parse().context("tenant.shed-scan")?;
                     if !(0.0..=1.0).contains(&f) {
@@ -726,6 +781,14 @@ impl RunConfig {
         }
         if let Some(f) = &self.fault {
             s.push_str(&format!(" fault={f}"));
+        }
+        if let Some(t) = &self.trace {
+            s.push_str(&format!(" trace={t}"));
+        } else if let Some(sc) = &self.scenario {
+            s.push_str(&format!(" scenario={sc}"));
+            if let Some(seed) = self.scenario_seed {
+                s.push_str(&format!("@{seed}"));
+            }
         }
         s
     }
@@ -915,9 +978,11 @@ mod tests {
             let value = match *key {
                 "tenant.weights" => "4,1,0.05",
                 "tenant.shed-standard" | "tenant.shed-scan" => "0.5",
+                "scenario" => "flash_crowd",
                 k => match dealias(k) {
                     "dataset" => "tiny",
                     "model" => "gcn",
+                    "trace" => "trace_flash_crowd.json",
                     "fanout" => "3,2",
                     "system" => "dci",
                     "budget" => "1MB",
@@ -1050,6 +1115,49 @@ mod tests {
         // tenant knobs are post-namespace: no flat alias exists
         assert!(RunConfig::from_args(&args(&["shed-scan=0.5"])).is_err());
         assert!(RunConfig::from_args(&args(&["weights=4,1,0.05"])).is_err());
+    }
+
+    #[test]
+    fn scenario_knobs() {
+        // defaults: no scenario, no trace, seed piggybacks on `seed`
+        let cfg = RunConfig::default();
+        assert!(cfg.scenario.is_none() && cfg.trace.is_none());
+        assert!(cfg.scenario_seed.is_none());
+        // every zoo scenario parses; a typo fails at parse time and
+        // the error teaches the zoo
+        for id in crate::bench_support::scenario::SCENARIO_IDS {
+            let cfg =
+                RunConfig::from_args(&args(&[&format!("scenario={id}")])).unwrap();
+            assert_eq!(cfg.scenario.as_deref(), Some(id));
+            assert!(cfg.summary().contains(&format!("scenario={id}")));
+        }
+        let err = RunConfig::from_args(&args(&["scenario=flash_cr0wd"])).unwrap_err();
+        assert!(format!("{err:#}").contains("flash_crowd"), "{err:#}");
+        // scenario.seed composes and shows in the summary
+        let cfg =
+            RunConfig::from_args(&args(&["scenario=diurnal", "scenario.seed=9"]))
+                .unwrap();
+        assert_eq!(cfg.scenario_seed, Some(9));
+        assert!(cfg.summary().contains("scenario=diurnal@9"));
+        // a trace file wins over the generator in the summary, and the
+        // dotted spelling is the same knob
+        let cfg = RunConfig::from_args(&args(&[
+            "scenario=diurnal",
+            "scenario.trace=t.json",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("t.json"));
+        assert!(cfg.summary().contains("trace=t.json"));
+        assert!(!cfg.summary().contains("scenario=diurnal"));
+        let flat = RunConfig::from_args(&args(&["trace=t.json"])).unwrap();
+        assert_eq!(flat.trace, cfg.trace);
+        // off/none disarm (last writer wins)
+        let cfg =
+            RunConfig::from_args(&args(&["scenario=diurnal", "scenario=off"])).unwrap();
+        assert!(cfg.scenario.is_none());
+        let cfg = RunConfig::from_args(&args(&["trace=t.json", "trace=none"])).unwrap();
+        assert!(cfg.trace.is_none());
+        assert!(RunConfig::from_args(&args(&["scenario.seed=x"])).is_err());
     }
 
     #[test]

@@ -682,6 +682,19 @@ impl MetricsSnapshot {
             ),
         ])
     }
+
+    /// [`to_json`](Self::to_json) with a top-level `"scenario"` tag —
+    /// the per-scenario metrics artifact inside a run bundle, and the
+    /// row shape `ci/check_bench.py`'s scenario matrix keys on.
+    pub fn to_json_for_scenario(&self, scenario_id: &str) -> Json {
+        match self.to_json() {
+            Json::Obj(mut m) => {
+                m.insert("scenario".to_string(), s(scenario_id));
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -856,5 +869,23 @@ mod tests {
         let rep = m.report(Duration::from_secs(2));
         assert!(rep.contains("throughput=50"), "{rep}");
         assert!(rep.contains("tenant: priority"), "{rep}");
+    }
+
+    #[test]
+    fn scenario_tagged_snapshot_json() {
+        let mut m = ServingMetrics::new();
+        m.record_batch(2, 50);
+        let snap = m.snapshot(Duration::from_secs(1));
+        let tagged = snap.to_json_for_scenario("flash_crowd");
+        assert_eq!(tagged.req("scenario").unwrap().as_str().unwrap(), "flash_crowd");
+        // the tag is additive: every group of the untagged encoding is
+        // still present, and the encoding stays canonical
+        let plain = snap.to_json();
+        for group in ["traffic", "stages", "cache", "tenants"] {
+            assert!(tagged.get(group).is_some(), "missing {group}");
+            assert_eq!(tagged.get(group), plain.get(group));
+        }
+        let text = tagged.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
     }
 }

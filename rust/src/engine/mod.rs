@@ -437,7 +437,13 @@ impl<'d> InferenceEngine<'d> {
         self.run_batches(&views)
     }
 
-    fn run_batches(&mut self, batches: &[&[NodeId]]) -> Result<InferenceReport> {
+    /// Run inference over an explicit batch list (the trace-replay
+    /// entry point: `tests/scenarios.rs` and the scenario bench drive
+    /// the engine off [`Trace`](crate::bench_support::scenario::Trace)
+    /// event seed lists instead of the dataset's test split). Honors
+    /// `max_batches`; logits are bit-identical across execution shapes
+    /// for the same batch list.
+    pub fn run_batches(&mut self, batches: &[&[NodeId]]) -> Result<InferenceReport> {
         let n = self
             .cfg
             .max_batches

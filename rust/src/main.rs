@@ -18,6 +18,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use dci::bench_support::scenario;
 use dci::config::RunConfig;
 use dci::coordinator::{BatcherConfig, Server, ServerConfig};
 use dci::engine::run_config;
@@ -89,9 +90,13 @@ fn print_usage() {
          \x20             with O(touched) drain; sketch-* keys imply tracker=sketch)\n\
          \x20            tenant.weights=P,S,C   (class-weighted refresh planning)\n\
          \x20            tenant.shed-standard= tenant.shed-scan=   (per-class queue\n\
-         \x20             fraction in [0,1]; the class sheds above it under load)\n\n\
+         \x20             fraction in [0,1]; the class sheds above it under load)\n\
+         \x20            scenario=flash_crowd|diurnal|scan_storm|powerlaw_fanout|\n\
+         \x20             burst_locality   (workload-zoo request stream; scenario.seed=\n\
+         \x20             reseeds generation) trace=FILE   (replay a canonical JSON\n\
+         \x20             trace instead; wins over scenario=)\n\n\
          config keys accept dotted namespaces (cache.* refresh.* transfer.*\n\
-         fault.* tenant.*); the flat spellings above remain as aliases."
+         fault.* tenant.* scenario.*); the flat spellings above remain as aliases."
     );
 }
 
@@ -239,22 +244,61 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         },
     )?;
 
-    // synthetic clients: random test-node requests. With tenant-mix=on
-    // the identities cycle through the three admission classes (the
-    // prefix is the class tag), exercising the per-class batcher lanes
-    // and the tenant ledgers in the final report.
-    let clients: &[&str] = if tenant_mix {
-        &["priority:svc", "dashboard", "scan:crawler"]
+    // request stream: a trace file wins, then a scenario generator,
+    // then the uniform synthetic default
+    let trace = if let Some(path) = &cfg.trace {
+        Some(scenario::Trace::read_file(path)?)
+    } else if let Some(name) = &cfg.scenario {
+        let sc = scenario::by_id(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown scenario {name:?}"))?;
+        // geometry from the serve knobs: ~n_requests events total, in
+        // 10 waves (2 warm + 8 drift)
+        let dims = scenario::TraceDims {
+            warm_waves: 2,
+            drift_waves: 8,
+            reqs_per_wave: (n_requests / 10).max(1),
+            req_size,
+        };
+        Some(sc.generate(&ds.test_nodes, cfg.scenario_seed.unwrap_or(cfg.seed), &dims))
     } else {
-        &["anonymous"]
+        None
     };
-    let mut rng = Rng::new(cfg.seed ^ 0xC11E17);
+
     let mut rxs = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        let nodes: Vec<u32> = (0..req_size)
-            .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
-            .collect();
-        rxs.push(server.submit_as(clients[i % clients.len()], nodes)?);
+    match &trace {
+        Some(t) => {
+            // trace replay: each event's class prefixes the identity,
+            // so the admission frontend sees the scenario's QoS mix
+            println!(
+                "replaying {} events from {} trace (seed {})",
+                t.events.len(),
+                t.scenario_id,
+                t.seed
+            );
+            for e in &t.events {
+                let identity = format!("{}:trace", e.class.as_str());
+                rxs.push(server.submit_as(&identity, e.seeds.clone())?);
+            }
+        }
+        None => {
+            // synthetic clients: random test-node requests. With
+            // tenant-mix=on the identities cycle through the three
+            // admission classes (the prefix is the class tag),
+            // exercising the per-class batcher lanes and the tenant
+            // ledgers in the final report.
+            let clients: &[&str] = if tenant_mix {
+                &["priority:svc", "dashboard", "scan:crawler"]
+            } else {
+                &["anonymous"]
+            };
+            let mut rng = Rng::new(cfg.seed ^ 0xC11E17);
+            for i in 0..n_requests {
+                let nodes: Vec<u32> = (0..req_size)
+                    .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
+                    .collect();
+                rxs.push(server.submit_as(clients[i % clients.len()], nodes)?);
+            }
+        }
     }
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600))

@@ -103,7 +103,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; emit null rather than an
+                    // unparseable token (matches Python's strictest mode)
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -387,6 +391,60 @@ mod tests {
         assert_eq!(v.req("is").unwrap().as_i32_vec().unwrap(), vec![1, -2]);
         assert!(v.req("missing").is_err());
         assert!(v.req("xs").unwrap().as_u64().is_err());
+    }
+
+    // -- canonical-encoding invariants: manifest_sha256 and the trace
+    // determinism property tests silently depend on every one of these
+
+    #[test]
+    fn canonical_key_order_is_sorted() {
+        // insertion order must not leak into the encoding
+        let a = Json::parse(r#"{"zebra":1,"apple":2,"mango":3}"#).unwrap();
+        let b = Json::parse(r#"{"mango":3,"apple":2,"zebra":1}"#).unwrap();
+        assert_eq!(a.to_string(), b.to_string());
+        assert_eq!(a.to_string(), r#"{"apple":2,"mango":3,"zebra":1}"#);
+    }
+
+    #[test]
+    fn canonical_float_formatting_is_stable() {
+        // integral values (and -0.0) collapse to integer tokens;
+        // fractional values use Rust's shortest-round-trip formatting,
+        // which is platform-independent
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        assert_eq!(Json::Num(-0.0).to_string(), "0");
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(-7.0).to_string(), "-7");
+        assert_eq!(Json::Num(0.9).to_string(), "0.9");
+        assert_eq!(Json::Num(0.1 + 0.2).to_string(), "0.30000000000000004");
+        // huge magnitudes print as plain decimals (Rust Display never
+        // uses exponent notation) but must still parse back exactly
+        assert_eq!(Json::parse(&Json::Num(1e300).to_string()).unwrap(), Json::Num(1e300));
+        // non-finite values must never produce unparseable tokens
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn canonical_encoding_is_a_fixed_point() {
+        // to_string(parse(t)) == t for already-canonical text, so
+        // serialize → parse → serialize can never drift
+        for t in [
+            r#"{"a":1,"b":[true,null,"x"],"c":{"d":0.25}}"#,
+            r#"[1,2.5,-3,"s\n\t\"q\""]"#,
+            r#"{"events":[{"class":"scan","seeds":[1,2,3],"wave":0}]}"#,
+            "0.30000000000000004",
+        ] {
+            let v = Json::parse(t).unwrap();
+            assert_eq!(v.to_string(), t);
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn canonical_encoding_has_no_whitespace() {
+        let v = Json::parse("{ \"a\" : [ 1 , 2 ] ,\n\"b\" : { } }").unwrap();
+        assert_eq!(v.to_string(), r#"{"a":[1,2],"b":{}}"#);
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod human;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod table;
 pub mod timer;
@@ -13,4 +14,5 @@ pub mod timer;
 pub use fault::{lock_unpoisoned, FaultPlan};
 pub use human::{format_bytes, parse_bytes};
 pub use rng::{splitmix64, Rng};
+pub use sha256::{sha256, sha256_hex};
 pub use timer::Stopwatch;

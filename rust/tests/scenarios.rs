@@ -1,0 +1,173 @@
+//! Scenario-fleet determinism and cross-shape equivalence.
+//!
+//! Two property families per zoo scenario:
+//!   1. **Trace determinism** — generation is a pure function of
+//!      `(pool, seed, dims)`; generate → serialize → parse → serialize
+//!      is byte-identical to direct generation (the invariant
+//!      `manifest_sha256` rests on), including through a file on disk.
+//!   2. **Engine equivalence** — replaying the same trace through the
+//!      serial engine, the staged pipeline, a 4-shard runtime, and the
+//!      staged transfer ring produces bit-identical logits and ledger
+//!      counters, extending the PR 3/7 bit-identity matrices from the
+//!      uniform test split to every workload shape in the zoo.
+
+use dci::bench_support::scenario::{registry, Trace, TraceDims, SCENARIO_IDS};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::{InferenceEngine, InferenceReport};
+use dci::graph::{datasets, Dataset, NodeId};
+use dci::sampler::Fanout;
+
+fn dims() -> TraceDims {
+    TraceDims { warm_waves: 1, drift_waves: 3, reqs_per_wave: 4, req_size: 48 }
+}
+
+fn pool(ds: &Dataset) -> Vec<NodeId> {
+    ds.test_nodes[..256.min(ds.test_nodes.len())].to_vec()
+}
+
+// -- trace determinism ----------------------------------------------------
+
+#[test]
+fn generation_serialization_and_file_roundtrip_are_bit_identical() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let p = pool(&ds);
+    let tmp = std::env::temp_dir()
+        .join(format!("dci_scenario_traces_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for sc in registry() {
+        for seed in [1u64, 7] {
+            let a = sc.generate(&p, seed, &dims());
+            let b = sc.generate(&p, seed, &dims());
+            assert_eq!(a, b, "{} seed {seed}: generation not pure", sc.id());
+            let text = a.to_canonical_string();
+            assert_eq!(
+                b.to_canonical_string(),
+                text,
+                "{} seed {seed}: canonical bytes differ",
+                sc.id()
+            );
+            // serialize → parse → serialize is the identity on bytes
+            let parsed = Trace::parse(&text).unwrap();
+            assert_eq!(parsed, a, "{} seed {seed}: parse changed the trace", sc.id());
+            assert_eq!(
+                parsed.to_canonical_string(),
+                text,
+                "{} seed {seed}: re-serialization drifted",
+                sc.id()
+            );
+            // and through a file on disk
+            let path = tmp.join(format!("{}_{seed}.json", sc.id()));
+            let path = path.to_string_lossy();
+            a.write_file(&path).unwrap();
+            let from_file = Trace::read_file(&path).unwrap();
+            assert_eq!(from_file, a, "{} seed {seed}: file roundtrip", sc.id());
+            assert_eq!(
+                from_file.to_canonical_string(),
+                text,
+                "{} seed {seed}: file bytes drifted",
+                sc.id()
+            );
+        }
+    }
+    std::fs::remove_dir_all(&tmp).unwrap();
+}
+
+#[test]
+fn different_seeds_and_scenarios_give_different_traces() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let p = pool(&ds);
+    let mut encodings = std::collections::BTreeSet::new();
+    for sc in registry() {
+        for seed in [1u64, 7] {
+            encodings.insert(sc.generate(&p, seed, &dims()).to_canonical_string());
+        }
+    }
+    assert_eq!(
+        encodings.len(),
+        SCENARIO_IDS.len() * 2,
+        "every (scenario, seed) pair must produce a distinct trace"
+    );
+}
+
+// -- engine equivalence across execution shapes ---------------------------
+
+fn shape_cfg(depth: usize, threads: usize, shards: usize, ring: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = 48;
+    cfg.fanout = Fanout::parse("3,2").unwrap();
+    cfg.budget = Some(300_000);
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    cfg.pipeline_depth = depth;
+    cfg.sample_threads = threads;
+    cfg.shards = shards;
+    cfg.transfer_ring = ring;
+    cfg
+}
+
+fn replay(ds: &Dataset, trace: &Trace, cfg: RunConfig) -> InferenceReport {
+    let batches: Vec<&[NodeId]> =
+        trace.events.iter().map(|e| e.seeds.as_slice()).collect();
+    let mut engine = InferenceEngine::prepare(ds, cfg).unwrap();
+    engine.run_batches(&batches).unwrap()
+}
+
+fn assert_identical(tag: &str, a: &InferenceReport, b: &InferenceReport) {
+    assert_eq!(a.n_batches, b.n_batches, "{tag}: n_batches");
+    assert_eq!(a.n_seeds, b.n_seeds, "{tag}: n_seeds");
+    assert_eq!(a.loaded_nodes, b.loaded_nodes, "{tag}: loaded_nodes");
+    assert_eq!(a.stats.sample.hits, b.stats.sample.hits, "{tag}: sample hits");
+    assert_eq!(a.stats.sample.misses, b.stats.sample.misses, "{tag}: sample misses");
+    assert_eq!(a.stats.feature.hits, b.stats.feature.hits, "{tag}: feature hits");
+    assert_eq!(a.stats.feature.misses, b.stats.feature.misses, "{tag}: feature misses");
+    assert_eq!(
+        a.logits_checksum.to_bits(),
+        b.logits_checksum.to_bits(),
+        "{tag}: logits checksum {} vs {}",
+        a.logits_checksum,
+        b.logits_checksum
+    );
+}
+
+#[test]
+fn every_scenario_replays_bit_identically_across_execution_shapes() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let p = pool(&ds);
+    for sc in registry() {
+        let trace = sc.generate(&p, 7, &dims());
+        // the serial single-shard engine is the reference semantics
+        let serial = replay(&ds, &trace, shape_cfg(1, 1, 1, 0));
+        assert!(
+            serial.logits_checksum > 0.0,
+            "{}: reference logits flowed",
+            sc.id()
+        );
+        let piped = replay(&ds, &trace, shape_cfg(3, 2, 1, 0));
+        assert_identical(&format!("{} pipelined", sc.id()), &serial, &piped);
+        let sharded = replay(&ds, &trace, shape_cfg(1, 1, 4, 0));
+        assert_identical(&format!("{} shards=4", sc.id()), &serial, &sharded);
+        let ringed = replay(&ds, &trace, shape_cfg(1, 1, 1, 2));
+        assert_identical(&format!("{} transfer-ring=2", sc.id()), &serial, &ringed);
+    }
+}
+
+#[test]
+fn replay_from_file_matches_replay_from_memory() {
+    // the bench replays from the file; the semantics must not depend on
+    // which side of the serialization boundary the trace came from
+    let ds = datasets::spec("tiny").unwrap().build();
+    let p = pool(&ds);
+    let sc = &registry()[0];
+    let trace = sc.generate(&p, 7, &dims());
+    let path = std::env::temp_dir()
+        .join(format!("dci_replay_file_{}.json", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    trace.write_file(&path).unwrap();
+    let from_file = Trace::read_file(&path).unwrap();
+    let a = replay(&ds, &trace, shape_cfg(1, 1, 1, 0));
+    let b = replay(&ds, &from_file, shape_cfg(1, 1, 1, 0));
+    assert_identical("file vs memory", &a, &b);
+    std::fs::remove_file(&path).unwrap();
+}
