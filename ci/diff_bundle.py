@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Cross-PR run-bundle diffing: this run's sealed bundle vs the prior one.
+
+CI uploads every sealed run bundle as an artifact; this script takes the
+bundle a previous run produced (downloaded via `actions/download-artifact`
+with a run id, or the `gh run download` fallback) and the bundle the
+current run just sealed, re-verifies BOTH manifests with
+`ci/verify_bundle.py`'s digest logic, and renders a per-file metric
+delta table into the job summary — the cross-PR perf trajectory next to
+the code that changed it.
+
+Tolerates a missing prior bundle (first run on a branch, expired
+artifact, fork PR without artifact access): the diff is skipped with a
+note, never a failure. A *current* bundle that fails verification is a
+hard failure — the diff must not launder a broken seal.
+
+Usage:
+    python3 ci/diff_bundle.py --current DIR [--previous DIR]
+                              [--summary FILE]
+
+`--summary` defaults to $GITHUB_STEP_SUMMARY when set (appended), else
+stdout. Stdlib only.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import verify_bundle  # noqa: E402
+
+
+def flatten_numeric(doc, prefix=""):
+    """Dotted-path -> numeric value over a parsed JSON document.
+
+    Booleans are skipped (a flipped flag is not a metric delta); list
+    indices are part of the path, which is stable because bundles are
+    sealed from deterministic runs.
+    """
+    out = {}
+    if isinstance(doc, dict):
+        for key in sorted(doc):
+            path = f"{prefix}.{key}" if prefix else str(key)
+            out.update(flatten_numeric(doc[key], path))
+    elif isinstance(doc, list):
+        for i, item in enumerate(doc):
+            out.update(flatten_numeric(item, f"{prefix}[{i}]"))
+    elif isinstance(doc, (int, float)) and not isinstance(doc, bool):
+        out[prefix] = float(doc)
+    return out
+
+
+def bundle_metrics(bundle_dir):
+    """File name -> {metric path -> value} for every JSON member.
+
+    The manifest itself is excluded (its hashes differ by construction);
+    unparsable members are skipped — verification already ruled on their
+    integrity, and a non-JSON member is simply not a metrics source.
+    """
+    out = {}
+    for name in sorted(os.listdir(bundle_dir)):
+        if name == "manifest.json" or not name.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(bundle_dir, name)) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue
+        metrics = flatten_numeric(doc)
+        if metrics:
+            out[name] = metrics
+    return out
+
+
+def fmt(value):
+    if value == int(value):
+        return str(int(value))
+    return f"{value:.6g}"
+
+
+def diff_table(prev, curr):
+    """Markdown lines for the per-file metric delta table."""
+    lines = [
+        "| file | metric | prev | curr | delta |",
+        "| --- | --- | ---: | ---: | ---: |",
+    ]
+    changed = 0
+    for name in sorted(set(prev) | set(curr)):
+        if name not in prev:
+            lines.append(f"| `{name}` | *(new file)* | — | — | — |")
+            continue
+        if name not in curr:
+            lines.append(f"| `{name}` | *(removed)* | — | — | — |")
+            continue
+        p, c = prev[name], curr[name]
+        for metric in sorted(set(p) | set(c)):
+            if metric not in p:
+                lines.append(f"| `{name}` | `{metric}` | — | {fmt(c[metric])} | new |")
+                continue
+            if metric not in c:
+                lines.append(f"| `{name}` | `{metric}` | {fmt(p[metric])} | — | gone |")
+                continue
+            pv, cv = p[metric], c[metric]
+            if pv == cv:
+                continue
+            changed += 1
+            if pv != 0:
+                delta = f"{100.0 * (cv - pv) / abs(pv):+.1f}%"
+            else:
+                delta = f"{cv - pv:+g}"
+            lines.append(
+                f"| `{name}` | `{metric}` | {fmt(pv)} | {fmt(cv)} | {delta} |"
+            )
+    if changed == 0:
+        lines.append("| — | *(no metric changed)* | — | — | — |")
+    return lines
+
+
+def emit(summary_path, lines):
+    text = "\n".join(lines) + "\n"
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(text)
+    else:
+        sys.stdout.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="this run's sealed bundle")
+    ap.add_argument("--previous", help="prior run's bundle (may be absent)")
+    ap.add_argument(
+        "--summary",
+        default=os.environ.get("GITHUB_STEP_SUMMARY", ""),
+        help="markdown output path (appended); default $GITHUB_STEP_SUMMARY "
+        "or stdout",
+    )
+    args = ap.parse_args()
+
+    lines = ["## Run-bundle diff", ""]
+
+    # the current bundle gates: a broken seal fails the job here even
+    # though verify_bundle.py also runs as its own step (defense in
+    # depth — this script may be wired into other workflows)
+    failures = verify_bundle.verify(args.current)
+    if failures:
+        print(f"current bundle {args.current} FAILED verification:",
+              file=sys.stderr)
+        for failure in failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    with open(os.path.join(args.current, "manifest.json")) as f:
+        curr_digest = json.load(f)["manifest_sha256"]
+    lines.append(f"current: `{args.current}` manifest_sha256 `{curr_digest}`")
+
+    # the prior bundle is best-effort: absent or unverifiable skips the
+    # diff with a note, because the first run on a branch (or an expired
+    # artifact) is not a regression
+    prev_dir = args.previous
+    if not prev_dir or not os.path.isdir(prev_dir):
+        lines += ["", "*No prior bundle available — diff skipped.*"]
+        emit(args.summary, lines)
+        print("no prior bundle; diff skipped")
+        return 0
+    failures = verify_bundle.verify(prev_dir)
+    if failures:
+        lines += [
+            "",
+            f"*Prior bundle `{prev_dir}` failed verification "
+            f"({len(failures)} problem(s)) — diff skipped.*",
+        ]
+        emit(args.summary, lines)
+        print(f"prior bundle {prev_dir} failed verification; diff skipped")
+        return 0
+    with open(os.path.join(prev_dir, "manifest.json")) as f:
+        prev_digest = json.load(f)["manifest_sha256"]
+    lines.append(f"previous: `{prev_dir}` manifest_sha256 `{prev_digest}`")
+    lines.append("")
+
+    if prev_digest == curr_digest:
+        lines.append("*Bundles are byte-identical.*")
+    else:
+        lines += diff_table(bundle_metrics(prev_dir), bundle_metrics(args.current))
+    emit(args.summary, lines)
+    print(f"diffed {args.current} against {prev_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

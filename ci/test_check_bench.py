@@ -158,6 +158,73 @@ class ScenarioMatrixTest(unittest.TestCase):
         self.assertIn("recovered_hit_ratio[flash_crowd]", failures[0])
 
 
+class LiveGraphGateTest(unittest.TestCase):
+    """The shipped thresholds must actually gate the live-graph bench:
+    a clean run passes, and each mutation-specific regression (logits
+    divergence, a swap stall, zero compactions) fails on its own."""
+
+    GOOD = {
+        "bench": "live_graph",
+        "rows": [
+            {"wave": 0, "logits_match": 1, "p99_ms": 0.4},
+            {
+                "epochs_checked": 8,
+                "edges_inserted": 400,
+                "compactions": 2,
+                "logits_match": 1,
+                "swap_stalls": 0,
+                "graph_swap_stalls": 0,
+                "compaction_p99_inflation": 1.2,
+            },
+        ],
+    }
+
+    def bounds(self):
+        thresholds = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "bench_thresholds.json"
+        )
+        with open(thresholds) as f:
+            return json.load(f)["BENCH_live_graph.json"]
+
+    def check(self, doc):
+        with tempfile.TemporaryDirectory() as d:
+            path = write_json(d, "BENCH_live_graph.json", doc)
+            return check_bench.check_file(path, self.bounds())
+
+    def test_shipped_thresholds_gate_the_required_keys(self):
+        for key in ("logits_match", "swap_stalls", "graph_swap_stalls",
+                    "compactions", "compaction_p99_inflation"):
+            self.assertIn(key, self.bounds())
+
+    def test_clean_run_passes(self):
+        _, failures = self.check(self.GOOD)
+        self.assertEqual(failures, [])
+
+    def test_logits_divergence_fails(self):
+        doc = json.loads(json.dumps(self.GOOD))
+        doc["rows"][1]["logits_match"] = 0
+        _, failures = self.check(doc)
+        self.assertTrue(any("logits_match" in x for x in failures))
+
+    def test_graph_swap_stall_fails(self):
+        doc = json.loads(json.dumps(self.GOOD))
+        doc["rows"][1]["graph_swap_stalls"] = 1
+        _, failures = self.check(doc)
+        self.assertTrue(any("graph_swap_stalls" in x for x in failures))
+
+    def test_unbounded_compaction_inflation_fails(self):
+        doc = json.loads(json.dumps(self.GOOD))
+        doc["rows"][1]["compaction_p99_inflation"] = 80.0
+        _, failures = self.check(doc)
+        self.assertTrue(any("compaction_p99_inflation" in x for x in failures))
+
+    def test_missing_compaction_fails(self):
+        doc = json.loads(json.dumps(self.GOOD))
+        doc["rows"][1]["compactions"] = 0
+        _, failures = self.check(doc)
+        self.assertTrue(any("compactions" in x for x in failures))
+
+
 class MainTest(unittest.TestCase):
     def run_main(self, argv):
         stdout, stderr = io.StringIO(), io.StringIO()

@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Unit tests for the bundle verifier (ci/verify_bundle.py) and the
+cross-PR bundle differ (ci/diff_bundle.py).
+
+The verifier is the independent half of the bundle contract — a bug
+here lets a tampered or vacuous artifact pass as "verified". Stdlib
+unittest only — run as a gating CI step:
+
+    python3 ci/test_verify_bundle.py
+"""
+
+import hashlib
+import io
+import contextlib
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import diff_bundle  # noqa: E402
+import verify_bundle  # noqa: E402
+
+
+def seal(dirname, members, files_key="files"):
+    """Write member files + a self-consistent manifest, like the Rust
+    sealer would — except no refusal on zero members, so the tests can
+    build exactly the degenerate manifests the verifier must reject."""
+    entries = []
+    for name in sorted(members):
+        data = members[name].encode("utf-8")
+        with open(os.path.join(dirname, name), "wb") as f:
+            f.write(data)
+        entries.append({
+            "path": name,
+            "bytes": len(data),
+            "sha256": hashlib.sha256(data).hexdigest(),
+        })
+    manifest = {"bundle_schema": verify_bundle.BUNDLE_SCHEMA}
+    if files_key is not None:
+        manifest[files_key] = entries
+    manifest["manifest_sha256"] = hashlib.sha256(
+        verify_bundle.canonical(manifest)
+    ).hexdigest()
+    with open(os.path.join(dirname, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+class VerifyTest(unittest.TestCase):
+    def test_well_formed_bundle_verifies(self):
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {"a.json": '{"x":1}', "b.txt": "hello"})
+            self.assertEqual(verify_bundle.verify(d), [])
+
+    def test_tampered_member_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {"a.json": '{"x":1}'})
+            with open(os.path.join(d, "a.json"), "w") as f:
+                f.write('{"x":2}')
+            failures = verify_bundle.verify(d)
+            self.assertTrue(any("sha256 mismatch" in x for x in failures))
+
+    def test_unlisted_file_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {"a.json": '{"x":1}'})
+            with open(os.path.join(d, "rogue.txt"), "w") as f:
+                f.write("stowaway")
+            failures = verify_bundle.verify(d)
+            self.assertTrue(any("unlisted file" in x for x in failures))
+
+    def test_empty_files_list_is_a_hard_failure(self):
+        # regression: a manifest whose `files` array is empty used to
+        # verify vacuously — zero checked members, exit 0. An empty
+        # bundle proves nothing and must never pass.
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {})
+            failures = verify_bundle.verify(d)
+            self.assertTrue(
+                any("no member files" in x for x in failures),
+                f"empty bundle verified: {failures}",
+            )
+
+    def test_missing_files_key_is_a_hard_failure(self):
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {}, files_key=None)
+            failures = verify_bundle.verify(d)
+            self.assertTrue(any("no member files" in x for x in failures))
+
+    def test_empty_bundle_fails_through_main_too(self):
+        with tempfile.TemporaryDirectory() as d:
+            seal(d, {})
+            old = sys.argv
+            sys.argv = ["verify_bundle.py", d]
+            try:
+                with contextlib.redirect_stdout(io.StringIO()), \
+                        contextlib.redirect_stderr(io.StringIO()):
+                    code = verify_bundle.main()
+            finally:
+                sys.argv = old
+            self.assertEqual(code, 1)
+
+
+class DiffTest(unittest.TestCase):
+    def run_diff(self, argv):
+        stdout, stderr = io.StringIO(), io.StringIO()
+        old = sys.argv
+        sys.argv = ["diff_bundle.py"] + argv
+        try:
+            with contextlib.redirect_stdout(stdout), \
+                    contextlib.redirect_stderr(stderr):
+                code = diff_bundle.main()
+        finally:
+            sys.argv = old
+        return code, stdout.getvalue(), stderr.getvalue()
+
+    def test_flatten_numeric_skips_bools_and_walks_rows(self):
+        doc = {"a": 1, "ok": True, "rows": [{"p99": 2.5}, {"p99": 3.5}]}
+        flat = diff_bundle.flatten_numeric(doc)
+        self.assertEqual(
+            flat, {"a": 1.0, "rows[0].p99": 2.5, "rows[1].p99": 3.5}
+        )
+
+    def test_missing_previous_is_tolerated(self):
+        with tempfile.TemporaryDirectory() as d:
+            curr = os.path.join(d, "curr")
+            os.makedirs(curr)
+            seal(curr, {"m.json": '{"v": 1}'})
+            summary = os.path.join(d, "summary.md")
+            code, out, _ = self.run_diff([
+                "--current", curr,
+                "--previous", os.path.join(d, "never_downloaded"),
+                "--summary", summary,
+            ])
+            self.assertEqual(code, 0)
+            self.assertIn("diff skipped", out)
+            with open(summary) as f:
+                self.assertIn("No prior bundle", f.read())
+
+    def test_broken_current_bundle_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            curr = os.path.join(d, "curr")
+            os.makedirs(curr)
+            seal(curr, {})  # empty = broken by the verifier's rules
+            code, _, err = self.run_diff(["--current", curr, "--summary",
+                                          os.path.join(d, "s.md")])
+            self.assertEqual(code, 1)
+            self.assertIn("FAILED verification", err)
+
+    def test_delta_table_reports_changed_metrics(self):
+        with tempfile.TemporaryDirectory() as d:
+            prev = os.path.join(d, "prev")
+            curr = os.path.join(d, "curr")
+            os.makedirs(prev)
+            os.makedirs(curr)
+            seal(prev, {"m.json": '{"p99": 2.0, "stalls": 0}'})
+            seal(curr, {"m.json": '{"p99": 3.0, "stalls": 0}'})
+            summary = os.path.join(d, "summary.md")
+            code, _, _ = self.run_diff([
+                "--current", curr, "--previous", prev, "--summary", summary,
+            ])
+            self.assertEqual(code, 0)
+            with open(summary) as f:
+                text = f.read()
+            self.assertIn("`p99`", text)
+            self.assertIn("+50.0%", text)
+            # unchanged metrics stay out of the table
+            self.assertNotIn("`stalls`", text)
+
+    def test_identical_bundles_short_circuit(self):
+        with tempfile.TemporaryDirectory() as d:
+            prev = os.path.join(d, "prev")
+            curr = os.path.join(d, "curr")
+            os.makedirs(prev)
+            os.makedirs(curr)
+            seal(prev, {"m.json": '{"v": 1}'})
+            seal(curr, {"m.json": '{"v": 1}'})
+            summary = os.path.join(d, "summary.md")
+            code, _, _ = self.run_diff([
+                "--current", curr, "--previous", prev, "--summary", summary,
+            ])
+            self.assertEqual(code, 0)
+            with open(summary) as f:
+                self.assertIn("byte-identical", f.read())
+
+
+if __name__ == "__main__":
+    unittest.main()

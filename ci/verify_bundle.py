@@ -66,8 +66,20 @@ def verify(bundle_dir):
             f"(claimed {claimed}, derived {derived})"
         )
 
+    # a zero-member bundle verifies nothing: the Rust sealer refuses to
+    # finalize one, so an empty (or absent) files list here means the
+    # manifest was tampered with or the seal path was bypassed — hard
+    # failure, never a vacuous pass
+    members = manifest.get("files")
+    if not members:
+        failures.append(
+            f"{manifest_path}: manifest lists no member files "
+            "(empty bundles must not verify)"
+        )
+        members = []
+
     listed = set()
-    for entry in manifest.get("files", []):
+    for entry in members:
         name = entry.get("path", "?")
         listed.add(name)
         path = os.path.join(bundle_dir, name)

@@ -1,0 +1,344 @@
+//! Live-graph mutation bench: serving through epoch-swapped base+delta
+//! graph snapshots while a seeded insert stream mutates the graph.
+//!
+//! Shape of the run:
+//!   1. build the dataset, freeze its CSC as epoch 1 of a [`LiveGraph`],
+//!      and point a DCI engine's samplers at it (overlay reads: cached
+//!      base prefix + delta tail);
+//!   2. serve W waves of batches; before each wave a chunk of the
+//!      seeded mutation stream is applied (epoch swap), and every K-th
+//!      wave a background thread compacts the delta into a new base CSR
+//!      *while the wave is being served*;
+//!   3. after every wave, rebuild the mutated graph offline
+//!      (`GraphEpoch::merged_csc`) into a fresh dataset + fresh engine
+//!      and replay the same wave: the logits checksum must be
+//!      **bit-identical** (prefix stability: compaction appends log
+//!      inserts after each column's base prefix, so degrees, neighbor
+//!      order, and therefore every RNG draw match the overlay).
+//!
+//! Asserted invariants (the acceptance criteria):
+//!   - logits bit-identical to the offline rebuild at every epoch;
+//!   - zero snapshot-swap stalls on the cache runtime AND the live
+//!     graph — serving never blocks on a mutation or a compaction;
+//!   - compaction-window p99 latency stays within a small multiple of
+//!     the steady-wave p99 (the hot swap does not stall the servers);
+//!   - the sealed run-bundle digest survives re-verification.
+//!
+//! Writes `BENCH_live_graph.json` (value-checked by `ci/check_bench.py`
+//! against `ci/bench_thresholds.json`) inside a sealed run bundle.
+//!
+//! `cargo bench --bench live_graph [-- --quick] [--bundle <dir>]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use dci::bench_support::bundle::{self, RunBundle};
+use dci::bench_support::{jnum, BenchOpts, BenchReport};
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::InferenceEngine;
+use dci::graph::{datasets, mutation_stream, Dataset, LiveGraph, NodeId};
+use dci::sampler::Fanout;
+use dci::util::json::{num, obj, s, Json};
+use dci::util::Rng;
+
+/// Mutation-stream seed for the whole bench (recorded in bundle meta).
+const MUTATION_SEED: u64 = 11;
+
+struct Params {
+    dataset: &'static str,
+    fanout: &'static str,
+    batch_size: usize,
+    waves: usize,
+    batches_per_wave: usize,
+    /// Total edge inserts, spread evenly across the waves.
+    edge_inserts: u64,
+    /// Background-compact every K-th wave.
+    compact_every: usize,
+    budget: u64,
+}
+
+struct WaveOutcome {
+    wave: usize,
+    epoch: u64,
+    inserted_so_far: u64,
+    live_bits: u64,
+    oracle_bits: u64,
+    p99_ms: f64,
+    compaction_window: bool,
+}
+
+fn main() -> Result<()> {
+    let opts = BenchOpts::from_env_default_json("BENCH_live_graph.json");
+    let p = if opts.quick {
+        Params {
+            dataset: "tiny",
+            fanout: "3,2",
+            batch_size: 32,
+            waves: 8,
+            batches_per_wave: 6,
+            edge_inserts: 400,
+            compact_every: 3,
+            budget: 16_000,
+        }
+    } else {
+        Params {
+            dataset: "reddit-sim",
+            fanout: "4,3",
+            batch_size: 64,
+            waves: 16,
+            batches_per_wave: 8,
+            edge_inserts: 6_000,
+            compact_every: 4,
+            budget: 1 << 20,
+        }
+    };
+
+    let bundle_dir = opts
+        .bundle_dir
+        .clone()
+        .unwrap_or_else(|| "bundle_live_graph".to_string());
+    let mut finish_opts = opts.clone();
+    finish_opts.bundle_dir = None;
+    let mut run_bundle = RunBundle::create(&bundle_dir)?;
+
+    eprintln!("building {}...", p.dataset);
+    let ds = datasets::spec(p.dataset)?.build();
+    let mut cfg = RunConfig::default();
+    cfg.dataset = p.dataset.into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = p.batch_size;
+    cfg.fanout = Fanout::parse(p.fanout)?;
+    cfg.budget = Some(p.budget);
+    // real logits (not compute=skip): the bit-identity claim is about
+    // the numbers a client would see, so there must be numbers
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+
+    // wave batches: fixed up front so the live and oracle replays see
+    // byte-identical seed lists
+    let mut rng = Rng::new(cfg.seed ^ 0x11fe_0b47);
+    let wave_batches: Vec<Vec<Vec<NodeId>>> = (0..p.waves)
+        .map(|_| {
+            (0..p.batches_per_wave)
+                .map(|_| {
+                    (0..p.batch_size)
+                        .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    // the live side: one engine, one LiveGraph, epoch-swapped under it
+    let lg = Arc::new(LiveGraph::new(ds.csc.clone()));
+    let mut live = InferenceEngine::prepare(&ds, cfg.clone())?;
+    live.set_live_graph(Arc::clone(&lg));
+    let runtime = live.runtime();
+
+    let stream = mutation_stream(ds.csc.n_nodes(), p.edge_inserts, MUTATION_SEED);
+    let per_wave = stream.len().div_ceil(p.waves).max(1);
+
+    let mut outcomes: Vec<WaveOutcome> = Vec::with_capacity(p.waves);
+    let mut latencies_steady: Vec<f64> = Vec::new();
+    let mut latencies_compact: Vec<f64> = Vec::new();
+    for (wave, batches) in wave_batches.iter().enumerate() {
+        // mutate at the wave boundary: deterministic epoch per wave
+        let chunk_lo = (wave * per_wave).min(stream.len());
+        let chunk_hi = ((wave + 1) * per_wave).min(stream.len());
+        lg.mutate(&stream[chunk_lo..chunk_hi]);
+        let epoch = lg.epoch();
+
+        // every K-th wave, compact concurrently with serving: the merge
+        // is O(E) off the serving path, the swap is one Arc store —
+        // readers must ride through it without a stall (and without a
+        // logits change: compaction preserves every column's order)
+        let compaction_window = (wave + 1) % p.compact_every == 0;
+        let compactor = compaction_window.then(|| {
+            let lg = Arc::clone(&lg);
+            std::thread::spawn(move || lg.compact())
+        });
+
+        let mut wave_lat_ms: Vec<f64> = Vec::with_capacity(batches.len());
+        let mut live_sum = 0.0f64;
+        for b in batches {
+            let t0 = Instant::now();
+            let r = live.run_batches(&[b.as_slice()])?;
+            wave_lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            live_sum += r.logits_checksum;
+        }
+        if let Some(j) = compactor {
+            j.join().expect("compactor panicked");
+        }
+
+        // offline oracle: rebuild the mutated graph from scratch, plan
+        // a fresh engine on it, replay the same wave. Same seeds, same
+        // per-batch RNG stream (batch indices restart at 0 both sides).
+        let rebuilt = lg.load().merged_csc();
+        let oracle_ds = Dataset {
+            spec: ds.spec.clone(),
+            csc: rebuilt,
+            features: ds.features.clone(),
+            test_nodes: ds.test_nodes.clone(),
+        };
+        let mut oracle = InferenceEngine::prepare(&oracle_ds, cfg.clone())?;
+        let mut oracle_sum = 0.0f64;
+        for b in batches {
+            oracle_sum += oracle.run_batches(&[b.as_slice()])?.logits_checksum;
+        }
+
+        wave_lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let p99 = percentile(&wave_lat_ms, 0.99);
+        if compaction_window {
+            latencies_compact.extend_from_slice(&wave_lat_ms);
+        } else {
+            latencies_steady.extend_from_slice(&wave_lat_ms);
+        }
+        eprintln!(
+            "  [wave {wave:2}] epoch={epoch} inserted={} logits {} p99={:.2}ms{}",
+            lg.edges_inserted(),
+            if live_sum.to_bits() == oracle_sum.to_bits() { "match" } else { "MISMATCH" },
+            p99,
+            if compaction_window { " (compaction)" } else { "" },
+        );
+        outcomes.push(WaveOutcome {
+            wave,
+            epoch,
+            inserted_so_far: lg.edges_inserted(),
+            live_bits: live_sum.to_bits(),
+            oracle_bits: oracle_sum.to_bits(),
+            p99_ms: p99,
+            compaction_window,
+        });
+    }
+
+    let logits_match = outcomes.iter().all(|o| o.live_bits == o.oracle_bits);
+    latencies_steady.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    latencies_compact.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let steady_p99 = percentile(&latencies_steady, 0.99);
+    let compact_p99 = percentile(&latencies_compact, 0.99);
+    let inflation = if steady_p99 > 0.0 { compact_p99 / steady_p99 } else { 1.0 };
+
+    let mut report = BenchReport::new(
+        "Live graph mutation: epoch-swapped base+delta snapshots under serving",
+        &["wave", "epoch", "inserted", "logits", "p99 ms", "compaction"],
+    );
+    for o in &outcomes {
+        report.row(
+            &[
+                o.wave.to_string(),
+                o.epoch.to_string(),
+                o.inserted_so_far.to_string(),
+                if o.live_bits == o.oracle_bits { "match".into() } else { "MISMATCH".into() },
+                format!("{:.2}", o.p99_ms),
+                if o.compaction_window { "yes".into() } else { "-".into() },
+            ],
+            vec![
+                ("wave", jnum(o.wave as f64)),
+                ("epoch", jnum(o.epoch as f64)),
+                ("inserted", jnum(o.inserted_so_far as f64)),
+                ("logits_match", jnum(u64::from(o.live_bits == o.oracle_bits) as f64)),
+                ("p99_ms", jnum(o.p99_ms)),
+                ("compaction_window", Json::Bool(o.compaction_window)),
+            ],
+        );
+    }
+    report.row(
+        &[
+            "total".into(),
+            lg.epoch().to_string(),
+            lg.edges_inserted().to_string(),
+            if logits_match { "match".into() } else { "MISMATCH".into() },
+            format!("{:.2}", compact_p99),
+            format!("x{inflation:.2}"),
+        ],
+        vec![
+            ("epochs_checked", jnum(outcomes.len() as f64)),
+            ("edges_inserted", jnum(lg.edges_inserted() as f64)),
+            ("compactions", jnum(lg.compactions() as f64)),
+            ("logits_match", jnum(u64::from(logits_match) as f64)),
+            ("swap_stalls", jnum(runtime.swap_stalls() as f64)),
+            ("graph_swap_stalls", jnum(lg.swap_stalls() as f64)),
+            ("steady_p99_ms", jnum(steady_p99)),
+            ("compaction_p99_ms", jnum(compact_p99)),
+            ("compaction_p99_inflation", jnum(inflation)),
+        ],
+    );
+    report.finish(&finish_opts)?;
+
+    // seal the bundle: bench JSON + per-wave ledger, digest must
+    // survive re-verification (CI repeats it via ci/verify_bundle.py)
+    let waves_json = Json::Arr(
+        outcomes
+            .iter()
+            .map(|o| {
+                obj(vec![
+                    ("wave", num(o.wave as f64)),
+                    ("epoch", num(o.epoch as f64)),
+                    ("live_bits", s(&format!("{:016x}", o.live_bits))),
+                    ("oracle_bits", s(&format!("{:016x}", o.oracle_bits))),
+                    ("compaction_window", Json::Bool(o.compaction_window)),
+                ])
+            })
+            .collect(),
+    );
+    run_bundle.write_file("waves.json", &waves_json.to_string())?;
+    let json_path = finish_opts.json_path.clone().expect("default json path");
+    let json_name = std::path::Path::new(&json_path)
+        .file_name()
+        .map(|n| n.to_string_lossy().to_string())
+        .unwrap_or_else(|| json_path.clone());
+    run_bundle.copy_file(&json_path, &json_name)?;
+    run_bundle.set_meta("bench", s("live_graph"));
+    run_bundle.set_meta("quick", Json::Bool(opts.quick));
+    run_bundle.set_meta("dataset", s(p.dataset));
+    run_bundle.set_meta("mutation_seed", num(MUTATION_SEED as f64));
+    let sealed = run_bundle.finalize()?;
+    let verified = bundle::verify(&bundle_dir)?;
+    ensure!(
+        sealed == verified,
+        "bundle digest drifted between finalize ({sealed}) and verify ({verified})"
+    );
+    println!(
+        "bundle {bundle_dir}: {} waves, manifest_sha256 {sealed} (re-verified)",
+        outcomes.len()
+    );
+
+    // the acceptance criteria this bench exists to hold
+    for o in &outcomes {
+        ensure!(
+            o.live_bits == o.oracle_bits,
+            "wave {}: live logits diverged from the offline rebuild \
+             (live {:016x} vs oracle {:016x})",
+            o.wave,
+            o.live_bits,
+            o.oracle_bits
+        );
+    }
+    ensure!(lg.swaps() as usize >= p.waves, "every wave must swap an epoch");
+    ensure!(lg.compactions() >= 1, "at least one compaction must have run");
+    ensure!(
+        runtime.swap_stalls() == 0,
+        "cache snapshot swaps must never stall serving"
+    );
+    ensure!(
+        lg.swap_stalls() == 0,
+        "graph epoch swaps must never stall serving (got {})",
+        lg.swap_stalls()
+    );
+    ensure!(
+        inflation.is_finite() && inflation > 0.0,
+        "compaction p99 inflation must be a real ratio, got {inflation}"
+    );
+    Ok(())
+}
+
+/// Percentile over an ascending-sorted slice (nearest-rank).
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 * q).ceil() as usize).clamp(1, sorted_ms.len());
+    sorted_ms[idx - 1]
+}

@@ -204,6 +204,15 @@ pub struct RefreshConfig {
     /// whose default weight of 1 reproduces the unweighted profile
     /// bit-for-bit.
     pub class_weights: ClassWeights,
+    /// Visits credited to each mutated node when the live graph takes
+    /// an edge insert (`refresh.mutation-boost=`; see
+    /// [`WorkloadTracker::record_nodes_boosted`] and
+    /// `graph::LiveGraph::set_tracker`). Mutation never *invalidates*
+    /// a cache entry — prefix stability keeps cached positions correct
+    /// across compactions — it only raises the mutated nodes' mass in
+    /// the decayed drift profile so the next re-plan re-caches their
+    /// grown neighborhoods. `0` disables the bump.
+    pub mutation_boost: u32,
 }
 
 impl Default for RefreshConfig {
@@ -222,6 +231,7 @@ impl Default for RefreshConfig {
             install_backoff: Duration::from_millis(5),
             watchdog_timeout: Duration::from_secs(2),
             class_weights: ClassWeights::default(),
+            mutation_boost: 4,
         }
     }
 }

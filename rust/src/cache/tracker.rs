@@ -109,6 +109,18 @@ pub trait WorkloadTracker: Send + Sync {
         }
     }
 
+    /// Record `boost` untagged visits of every node — the live-graph
+    /// mutation bump (`refresh.mutation-boost=`): mutated nodes get
+    /// extra mass in the drift profile so the next re-plan re-caches
+    /// them even before organic traffic finds the new edges. Off the
+    /// serving hot path (mutations are rare), so the default loop is
+    /// fine for both implementations.
+    fn record_nodes_boosted(&self, nodes: &[NodeId], boost: u32) {
+        for _ in 0..boost {
+            self.record_nodes(nodes);
+        }
+    }
+
     /// Record one adjacency-element access at CSC offset `at`
     /// (sampling stage). Deliberately class-blind: a per-class elem
     /// split would multiply the O(n_edges) counter memory by

@@ -213,6 +213,18 @@ pub struct RunConfig {
     /// sees the full ceiling). Default `[1.0, 1.0, 0.5]` — scan sheds
     /// first under overload.
     pub class_queue_fraction: [f64; N_CLASSES],
+    /// Seeded live-mutation insert stream for serve mode
+    /// (`graph.mutate=EDGES[@SEED]`, parsed by
+    /// [`crate::graph::MutationSpec`]; `off`/`none` disarms). The
+    /// server promotes the dataset's CSC into a
+    /// [`crate::graph::LiveGraph`] and a driver thread inserts the
+    /// seeded edge stream in waves concurrent with request serving.
+    /// `None` = frozen graph, the pre-live-mutation behavior.
+    pub graph_mutate: Option<String>,
+    /// Compact the live graph's delta into a fresh base CSC every N
+    /// mutation waves (`graph.compact-batches=`). `None` = never
+    /// compact during the run (the delta overlay serves alone).
+    pub graph_compact_batches: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -245,6 +257,8 @@ impl Default for RunConfig {
             scenario_seed: None,
             trace: None,
             class_queue_fraction: [1.0, 1.0, 0.5],
+            graph_mutate: None,
+            graph_compact_batches: None,
         }
     }
 }
@@ -302,6 +316,7 @@ pub const VALID_KEYS: &[&str] = &[
     "shard-refresh",
     "refresh.auto-budget",
     "auto-budget-refresh",
+    "refresh.mutation-boost",
     // transfer.* canonical + flat aliases
     "transfer.ring",
     "transfer-ring",
@@ -331,6 +346,9 @@ pub const VALID_KEYS: &[&str] = &[
     "scenario.seed",
     "scenario.trace",
     "trace",
+    // graph.* — live-mutation knobs, dotted-only (no flat alias)
+    "graph.mutate",
+    "graph.compact-batches",
 ];
 
 /// The keyspace grouped by namespace for the unknown-key error: each
@@ -380,6 +398,7 @@ const KEY_GROUPS: &[(&str, &[&str])] = &[
             "refresh.drift-threshold (drift-threshold)",
             "refresh.per-shard (shard-refresh)",
             "refresh.auto-budget (auto-budget-refresh)",
+            "refresh.mutation-boost",
         ],
     ),
     (
@@ -408,6 +427,7 @@ const KEY_GROUPS: &[(&str, &[&str])] = &[
         "scenario",
         &["scenario", "scenario.seed", "scenario.trace (trace)"],
     ),
+    ("graph", &["graph.mutate", "graph.compact-batches"]),
 ];
 
 /// Render [`KEY_GROUPS`] as the multi-line listing the unknown-key
@@ -721,6 +741,34 @@ impl RunConfig {
                     }
                     self.class_queue_fraction[2] = f;
                 }
+                "refresh.mutation-boost" => {
+                    self.refresh
+                        .get_or_insert_with(RefreshConfig::default)
+                        .mutation_boost =
+                        value.parse().context("refresh.mutation-boost")?;
+                }
+                "graph.mutate" => {
+                    self.graph_mutate = match value {
+                        "off" | "none" => None,
+                        spec => {
+                            // validate at parse time, like fault= and
+                            // scenario=: a typoed stream spec must fail
+                            // the run, not silently serve frozen
+                            crate::graph::MutationSpec::parse(spec)?;
+                            Some(spec.to_string())
+                        }
+                    };
+                }
+                "graph.compact-batches" => {
+                    let n: usize = value.parse().context("graph.compact-batches")?;
+                    if n == 0 {
+                        bail!(
+                            "graph.compact-batches must be positive (mutation waves \
+                             per compaction)"
+                        );
+                    }
+                    self.graph_compact_batches = Some(n);
+                }
                 other => bail!(
                     "unknown config key {other:?}; valid keys:\n{}",
                     grouped_key_listing()
@@ -789,6 +837,13 @@ impl RunConfig {
             if let Some(seed) = self.scenario_seed {
                 s.push_str(&format!("@{seed}"));
             }
+        }
+        if let Some(m) = &self.graph_mutate {
+            s.push_str(&format!(" graph(mutate={m}"));
+            if let Some(k) = self.graph_compact_batches {
+                s.push_str(&format!(" compact={k}"));
+            }
+            s.push(')');
         }
         s
     }
@@ -1006,6 +1061,27 @@ mod tests {
             RunConfig::from_args(&[arg.clone()])
                 .unwrap_or_else(|e| panic!("advertised knob {arg} rejected: {e}"));
         }
+    }
+
+    #[test]
+    fn graph_mutation_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_args(&args(&[
+            "graph.mutate=256@7",
+            "graph.compact-batches=4",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.graph_mutate.as_deref(), Some("256@7"));
+        assert_eq!(cfg.graph_compact_batches, Some(4));
+        assert!(cfg.summary().contains("graph(mutate=256@7 compact=4)"));
+        // off/none disarm; a bad spec or zero interval fails the run
+        let cfg = RunConfig::from_args(&args(&["graph.mutate=off"])).unwrap();
+        assert_eq!(cfg.graph_mutate, None);
+        assert!(RunConfig::from_args(&args(&["graph.mutate=0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["graph.mutate=x@1"])).is_err());
+        assert!(RunConfig::from_args(&args(&["graph.compact-batches=0"])).is_err());
+        // the mutation-boost refresh knob arms refresh like its siblings
+        let cfg = RunConfig::from_args(&args(&["refresh.mutation-boost=9"])).unwrap();
+        assert_eq!(cfg.refresh.unwrap().mutation_boost, 9);
     }
 
     #[test]

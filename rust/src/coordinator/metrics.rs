@@ -160,6 +160,17 @@ pub struct ServingMetrics {
     /// Serving batches that failed after the one retry (clients got an
     /// error response; the worker kept serving).
     pub batch_failures: u64,
+    /// Live-graph epochs published during the run (mutation waves +
+    /// compactions; 0 on frozen-graph runs). Folded once from the
+    /// shared [`LiveGraph`](crate::graph::LiveGraph), not per worker.
+    pub graph_epochs: u64,
+    /// Edges the mutation driver inserted into the live graph.
+    pub graph_edges_inserted: u64,
+    /// Delta-into-base compactions the live graph performed.
+    pub graph_compactions: u64,
+    /// Graph-epoch acquires that blocked on a swap (the live graph's
+    /// never-block gate; 0 in a healthy deployment).
+    pub graph_swap_stalls: u64,
 }
 
 impl ServingMetrics {
@@ -251,6 +262,21 @@ impl ServingMetrics {
         self.refresh_panics += other.refresh_panics;
         self.batch_retries += other.batch_retries;
         self.batch_failures += other.batch_failures;
+        self.graph_epochs += other.graph_epochs;
+        self.graph_edges_inserted += other.graph_edges_inserted;
+        self.graph_compactions += other.graph_compactions;
+        self.graph_swap_stalls += other.graph_swap_stalls;
+    }
+
+    /// Fold the shared live graph's lifetime counters in (called once
+    /// per report/shutdown on a freshly merged snapshot — the graph is
+    /// shared across workers, so folding it per worker would
+    /// double-count).
+    pub fn record_graph(&mut self, lg: &crate::graph::LiveGraph) {
+        self.graph_epochs += lg.swaps();
+        self.graph_edges_inserted += lg.edges_inserted();
+        self.graph_compactions += lg.compactions();
+        self.graph_swap_stalls += lg.swap_stalls();
     }
 
     /// Fraction of staged-H2D time the transfer ring hid under compute
@@ -363,7 +389,7 @@ impl ServingMetrics {
             })
             .collect::<Vec<_>>()
             .join(" | ");
-        format!(
+        let mut out = format!(
             "requests={} seeds={} batches={} (avg batch {:.1} seeds)\n\
              latency p50={:.2}ms p90={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              throughput={:.0} seeds/s\n\
@@ -417,7 +443,17 @@ impl ServingMetrics {
             snap.fault.batch_retries,
             snap.fault.batch_failures,
             tenant_line,
-        )
+        );
+        if self.graph_epochs > 0 {
+            out.push_str(&format!(
+                "\ngraph: epochs={} inserted={} compactions={} swap-stalls={}",
+                self.graph_epochs,
+                self.graph_edges_inserted,
+                self.graph_compactions,
+                self.graph_swap_stalls
+            ));
+        }
+        out
     }
 }
 

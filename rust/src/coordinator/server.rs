@@ -26,7 +26,7 @@ use crate::baselines::planner_for;
 use crate::cache::refresh::{AutoBudgetPolicy, RefreshJob, Refresher};
 use crate::config::RunConfig;
 use crate::engine::InferenceEngine;
-use crate::graph::Dataset;
+use crate::graph::{Dataset, LiveGraph};
 use crate::mem::per_node_claim_bytes;
 use crate::util::lock_unpoisoned;
 
@@ -67,6 +67,10 @@ pub struct Server {
     workers: Vec<JoinHandle<Result<()>>>,
     metrics: Vec<Arc<Mutex<ServingMetrics>>>,
     started: Instant,
+    /// The one live graph every worker samples through (`graph.mutate=`
+    /// runs; `None` = frozen graph). Shared, not per worker: mutation
+    /// epochs are graph state, and all workers must see one history.
+    live_graph: Option<Arc<LiveGraph>>,
 }
 
 impl Server {
@@ -79,6 +83,13 @@ impl Server {
         let mut handles = Vec::new();
         let mut joins = Vec::new();
         let mut metrics = Vec::new();
+        // graph.mutate= promotes the dataset's CSC into a live graph
+        // shared by every worker; the caller drives mutations against
+        // it (Server::live_graph) concurrent with serving
+        let live_graph = run_cfg
+            .graph_mutate
+            .as_ref()
+            .map(|_| Arc::new(LiveGraph::new(ds.csc.clone())));
         for w in 0..cfg.n_workers.max(1) {
             let (tx, rx) = mpsc::channel::<Request>();
             let queued = Arc::new(AtomicUsize::new(0));
@@ -95,9 +106,10 @@ impl Server {
             let batcher_cfg = cfg.batcher.clone();
             let queued2 = Arc::clone(&queued);
             let m2 = Arc::clone(&m);
+            let lg2 = live_graph.clone();
             let join = std::thread::Builder::new()
                 .name(format!("dci-worker-{w}"))
-                .spawn(move || worker_loop(&ds, rc, batcher_cfg, rx, queued2, m2))?;
+                .spawn(move || worker_loop(&ds, rc, batcher_cfg, rx, queued2, m2, lg2))?;
             handles.push(WorkerHandle { tx, queued_seeds: queued });
             joins.push(join);
             metrics.push(m);
@@ -108,7 +120,15 @@ impl Server {
             workers: joins,
             metrics,
             started: Instant::now(),
+            live_graph,
         })
+    }
+
+    /// The shared live graph (`graph.mutate=` runs): the caller's
+    /// mutation driver inserts edges and triggers compactions on it
+    /// while the workers serve. `None` on frozen-graph runs.
+    pub fn live_graph(&self) -> Option<Arc<LiveGraph>> {
+        self.live_graph.clone()
     }
 
     /// Submit a request; the response arrives on the returned receiver.
@@ -144,6 +164,11 @@ impl Server {
             all.merge(&lock_unpoisoned(m));
         }
         all.record_sheds(self.admission.shed_counts());
+        // once, not per worker: the live graph is shared, so its
+        // counters are graph totals rather than per-worker deltas
+        if let Some(lg) = &self.live_graph {
+            all.record_graph(lg);
+        }
         (all, self.started.elapsed())
     }
 
@@ -151,7 +176,7 @@ impl Server {
     /// metrics (including each worker's refresh + swap counters and
     /// the frontend's per-class shed totals).
     pub fn shutdown(self) -> Result<(ServingMetrics, Duration)> {
-        let Server { router, admission, workers, metrics, started } = self;
+        let Server { router, admission, workers, metrics, started, live_graph } = self;
         drop(router); // closes queues; workers drain + exit
         for j in workers {
             match j.join() {
@@ -164,6 +189,9 @@ impl Server {
             all.merge(&lock_unpoisoned(m));
         }
         all.record_sheds(admission.shed_counts());
+        if let Some(lg) = &live_graph {
+            all.record_graph(lg);
+        }
         Ok((all, started.elapsed()))
     }
 }
@@ -175,6 +203,7 @@ fn worker_loop(
     rx: mpsc::Receiver<Request>,
     queued: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServingMetrics>>,
+    live_graph: Option<Arc<LiveGraph>>,
 ) -> Result<()> {
     let refresh_cfg = run_cfg.refresh.clone();
     let tracker_cfg = run_cfg.tracker.clone();
@@ -182,6 +211,9 @@ fn worker_loop(
     let budget_is_auto = run_cfg.budget.is_none();
     let hidden = run_cfg.hidden;
     let mut engine = InferenceEngine::prepare(ds.as_ref(), run_cfg)?;
+    if let Some(lg) = &live_graph {
+        engine.set_live_graph(Arc::clone(lg));
+    }
 
     // online refresh: tracker on the serving path (dense or sketch,
     // per `RunConfig::tracker`), re-planner on a background thread,
@@ -198,6 +230,11 @@ fn worker_loop(
         if let Some(planner) = planner_for(system) {
             let tracker = tracker_cfg.build(ds.csc.n_nodes(), ds.csc.n_edges());
             engine.set_tracker(Arc::clone(&tracker));
+            // mutation-aware invalidation: mutated nodes get boosted
+            // tracker mass so the next drift re-plan re-caches them
+            if let Some(lg) = &live_graph {
+                lg.set_tracker(Arc::clone(&tracker), rcfg.mutation_boost);
+            }
             // drift baseline: the pre-sample profile the startup plan
             // was built from
             let baseline = engine

@@ -28,7 +28,7 @@ use crate::cache::tracker::WorkloadTracker;
 use crate::cache::CacheStats;
 use crate::config::{RunConfig, SystemKind};
 use crate::coordinator::admission::TenantClass;
-use crate::graph::{datasets, Dataset, NodeId};
+use crate::graph::{datasets, Dataset, GraphHandle, LiveGraph, NodeId};
 use crate::mem::{DeviceGroup, DeviceMemory, StagingPool, StagingStats, PAPER_RESERVE_BYTES};
 use crate::runtime::Compute;
 use crate::sampler::{seed_batches, SamplerPool};
@@ -227,6 +227,12 @@ pub struct InferenceEngine<'d> {
     /// when `transfer-ring` is off); batch runs use a fresh clock per
     /// run instead.
     serve_sim: Option<TransferSim>,
+    /// This thread's cursor over the live graph's mutation epochs
+    /// (`None` = frozen graph, the pre-live-mutation path bit for
+    /// bit). Acquired once per batch alongside the cache snapshot;
+    /// pipeline workers make their own handles from the shared
+    /// [`LiveGraph`].
+    graph: Option<GraphHandle>,
 }
 
 /// The per-device prototype arena `cfg` asks for (each shard of a
@@ -337,6 +343,7 @@ impl<'d> InferenceEngine<'d> {
             fault,
             staging,
             serve_sim,
+            graph: None,
         })
     }
 
@@ -377,6 +384,7 @@ impl<'d> InferenceEngine<'d> {
             fault,
             staging,
             serve_sim,
+            graph: None,
         })
     }
 
@@ -400,6 +408,23 @@ impl<'d> InferenceEngine<'d> {
     /// refresh loop.
     pub fn set_tracker(&mut self, tracker: Arc<dyn WorkloadTracker>) {
         self.tracker = Some(tracker);
+    }
+
+    /// Attach a shared live graph (`graph.mutate=` serve runs): every
+    /// subsequent batch samples base∪delta through the freshest epoch
+    /// this thread can acquire without blocking, instead of the frozen
+    /// preprocessing-time CSC. The dataset the engine was prepared on
+    /// must be the graph's base (the overlay delegates prefix
+    /// positions to the cached reads planned against it).
+    pub fn set_live_graph(&mut self, graph: Arc<LiveGraph>) {
+        self.graph = Some(GraphHandle::new(&graph));
+    }
+
+    /// The shared live graph, if one is attached (spawn per-thread
+    /// handles from it; the mutation driver calls `mutate`/`compact`
+    /// on it directly).
+    pub fn live_graph(&self) -> Option<Arc<LiveGraph>> {
+        self.graph.as_ref().map(|h| Arc::clone(h.live()))
     }
 
     /// The fault schedule parsed from `cfg.fault`, shared so the server
@@ -529,6 +554,7 @@ impl<'d> InferenceEngine<'d> {
         for (bi, seeds) in batches.iter().take(n).enumerate() {
             // one snapshot per shard per batch: both stages of a batch
             // see the same cache epochs even if a refresh lands mid-batch
+            let graph_epoch = self.graph.as_mut().map(|h| h.acquire_arc());
             let snap = self.snap.acquire();
 
             // ---- stage 1: sampling -------------------------------------
@@ -540,6 +566,7 @@ impl<'d> InferenceEngine<'d> {
                 bi,
                 self.cfg.seed,
                 None,
+                graph_epoch.as_deref(),
             );
             report.sample.add(sb.wall_ns, sb.ledger.modeled_ns(&self.cfg.cost));
             report.stats.sample.merge(&sb.ledger);
@@ -694,6 +721,9 @@ impl<'d> InferenceEngine<'d> {
             std::mem::take(&mut self.x_buf)
         };
         let mut sampler = self.pool.checkout();
+        // one graph epoch per request too: a concurrent mutation or
+        // compaction lands on the *next* request, never mid-batch
+        let graph_epoch = self.graph.as_mut().map(|h| h.acquire_arc());
         let snap = self.snap.acquire();
         let cache_epoch = snap.max_epoch();
 
@@ -706,6 +736,7 @@ impl<'d> InferenceEngine<'d> {
             request,
             self.cfg.seed ^ SERVE_STREAM_XOR,
             tracker.as_deref(),
+            graph_epoch.as_deref(),
         );
         self.pool.checkin(sampler);
         let sample = StageTimes {

@@ -45,13 +45,13 @@
 use std::collections::{HashMap, HashSet};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::cache::shard::ShardedHandle;
 use crate::coordinator::admission::TenantClass;
-use crate::graph::NodeId;
+use crate::graph::{GraphHandle, NodeId};
 use crate::mem::TransferLedger;
 use crate::util::lock_unpoisoned;
 
@@ -97,6 +97,9 @@ pub(super) fn run_pipelined(
     let classes = ds.spec.classes;
 
     let fault = engine.fault.clone();
+    // shared live graph (if attached), cloned before the borrow split;
+    // each sampling worker cursors its epochs through its own handle
+    let live_graph = engine.graph.as_ref().map(|h| Arc::clone(h.live()));
 
     let next = AtomicUsize::new(0);
     // `None` marks a batch whose sampling panicked twice (panic
@@ -132,12 +135,14 @@ pub(super) fn run_pipelined(
             let tickets = &tickets;
             let retried = &retried;
             let fault = fault.clone();
+            let live_graph = live_graph.clone();
             scope.spawn(move || {
                 let mut sampler = pool.checkout();
                 // each worker cursors every shard's epochs independently;
                 // acquire is per batch, so one batch never mixes epochs
                 // within a shard
                 let mut snap = ShardedHandle::new(runtime);
+                let mut graph = live_graph.as_ref().map(GraphHandle::new);
                 loop {
                     // Err = ticket sender dropped = gather unwound
                     if lock_unpoisoned(tickets).recv().is_err() {
@@ -158,6 +163,8 @@ pub(super) fn run_pipelined(
                                     panic!("injected fault: batch {bi} panicked");
                                 }
                             }
+                            let graph_epoch =
+                                graph.as_mut().map(|h| h.acquire_arc());
                             let view = snap.acquire();
                             stages::sample_stage(
                                 ds,
@@ -167,6 +174,7 @@ pub(super) fn run_pipelined(
                                 bi,
                                 cfg.seed,
                                 None,
+                                graph_epoch.as_deref(),
                             )
                         }))
                     };

@@ -38,10 +38,10 @@ use crate::cache::shard::ShardView;
 use crate::cache::tracker::WorkloadTracker;
 use crate::config::RunConfig;
 use crate::coordinator::admission::TenantClass;
-use crate::graph::{Dataset, NodeId};
+use crate::graph::{Csc, Dataset, GraphEpoch, NodeId, OverlayAdj};
 use crate::mem::{CopyPlan, CostModel, TransferLedger};
 use crate::runtime::Compute;
-use crate::sampler::{presample::row_txns, MiniBatch, NeighborSampler};
+use crate::sampler::{presample::row_txns, AdjSource, MiniBatch, NeighborSampler};
 use crate::util::{FaultPlan, Rng};
 
 use super::model_flops;
@@ -62,6 +62,17 @@ pub struct SampledBatch {
 
 /// Stage 1: fan-out sampling over the view's routed adjacency source
 /// (per-shard device prefixes hit, everything else falls back to UVA).
+///
+/// `graph: Some(epoch)` layers a live-mutation epoch's delta over the
+/// cached reads ([`OverlayAdj`]): positions inside the
+/// preprocessing-time CSC route through the view unchanged (prefix
+/// stability keeps cached entries correct across compactions — see
+/// `graph::delta`), delta positions read the epoch directly as host
+/// misses. `None` is the frozen-graph path, bit-identical to before
+/// the overlay existed. The epoch joins the determinism contract's
+/// dataset state: outputs depend on `(dataset, epoch, seeds,
+/// batch_index, seed)`, never on cache or scheduling state.
+#[allow(clippy::too_many_arguments)]
 pub fn sample_stage(
     ds: &Dataset,
     view: &ShardView<'_>,
@@ -70,6 +81,7 @@ pub fn sample_stage(
     index: usize,
     seed: u64,
     tracker: Option<&dyn WorkloadTracker>,
+    graph: Option<&GraphEpoch>,
 ) -> SampledBatch {
     let mut rng = batch_rng(seed, index as u64);
     let mut ledger = TransferLedger::new();
@@ -80,14 +92,29 @@ pub fn sample_stage(
     let mut touched: Vec<usize> = Vec::new();
     let src = view.adj_source(&ds.csc);
     let t0 = Instant::now();
-    let mb = match tracker {
-        None => sampler.sample_batch(&src, seeds, &mut rng, &mut ledger),
-        Some(_) => {
-            let csc = &ds.csc;
-            let mut on_access = |v: NodeId, pos: usize| {
-                touched.push(csc.neighbor_offset(v) as usize + pos);
-            };
-            sampler.sample_batch_counting(&src, seeds, &mut rng, &mut ledger, &mut on_access)
+    let mb = match graph {
+        None => run_sampler(
+            sampler,
+            &src,
+            &ds.csc,
+            seeds,
+            &mut rng,
+            &mut ledger,
+            tracker.is_some(),
+            &mut touched,
+        ),
+        Some(epoch) => {
+            let overlay = OverlayAdj { cached: src, epoch, orig: &ds.csc };
+            run_sampler(
+                sampler,
+                &overlay,
+                &ds.csc,
+                seeds,
+                &mut rng,
+                &mut ledger,
+                tracker.is_some(),
+                &mut touched,
+            )
         }
     };
     let wall_ns = t0.elapsed().as_nanos() as f64;
@@ -97,6 +124,35 @@ pub fn sample_stage(
         }
     }
     SampledBatch { index, mb, ledger, wall_ns }
+}
+
+/// The sampling inner call shared by the frozen and overlay adjacency
+/// shapes. Tracked runs log touched CSC offsets for positions inside
+/// the preprocessing-time CSC only — a delta position has no offset in
+/// the planner's elem space (it stays a host read until a compaction
+/// folds it into a future base; node-visit mass, not elem counts, is
+/// what re-caches mutated nodes).
+#[allow(clippy::too_many_arguments)]
+fn run_sampler<A: AdjSource>(
+    sampler: &mut NeighborSampler,
+    src: &A,
+    csc: &Csc,
+    seeds: &[NodeId],
+    rng: &mut Rng,
+    ledger: &mut TransferLedger,
+    tracked: bool,
+    touched: &mut Vec<usize>,
+) -> MiniBatch {
+    if !tracked {
+        sampler.sample_batch(src, seeds, rng, ledger)
+    } else {
+        let mut on_access = |v: NodeId, pos: usize| {
+            if pos < csc.degree(v) {
+                touched.push(csc.neighbor_offset(v) as usize + pos);
+            }
+        };
+        sampler.sample_batch_counting(src, seeds, rng, ledger, &mut on_access)
+    }
 }
 
 /// Staged-transfer mode for [`gather_stage`]: the batch's miss rows are

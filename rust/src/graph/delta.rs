@@ -1,0 +1,702 @@
+//! Live graph mutation: an immutable base CSC plus a mutable delta
+//! overlay, published through the same epoch-swap discipline the cache
+//! layer trusts (`cache/runtime.rs`) — see DESIGN.md §Live graph
+//! mutation.
+//!
+//! Production graphs take edge/node inserts continuously (the setting
+//! BGL targets; the frozen-CSC assumption is the gap the dynamic-graph
+//! survey flags in cache-based inference systems). Rebuilding the CSC
+//! per insert is out of the question on the serving path, so the graph
+//! becomes a chain of immutable **epochs**:
+//!
+//! - [`GraphEpoch`] — an `Arc<Csc>` base plus an append-only edge log
+//!   and a per-node patch index (`dst → appended in-neighbors`, in log
+//!   order). Node `v`'s live neighbor list is `base column v` followed
+//!   by `extras[v]` — the base order is never disturbed.
+//! - [`LiveGraph`] — the swappable holder, a mirror of
+//!   `DualCacheRuntime`: readers clone an `Arc` under a mutex that is
+//!   only ever held for the swap itself, the current epoch number is
+//!   published through an atomic with `Release` ordering *while the
+//!   lock is held* (so the fast-path epoch check can never observe an
+//!   epoch ahead of the snapshot it guards), and every reader that
+//!   would have blocked is counted (`swap_stalls`; the live-graph
+//!   bench asserts zero).
+//! - [`GraphHandle`] — a reader's cursor, a mirror of
+//!   `SnapshotHandle`: `acquire` is one `Acquire` load + pointer
+//!   compare on the hot path, refreshing through `try_lock` with a
+//!   bounded deferral streak before it ever blocks.
+//! - [`LiveGraph::compact`] — the background compactor: merges the
+//!   delta into a fresh base CSC (base edges keep their per-column
+//!   order, log edges append after — the **prefix-stability**
+//!   invariant below) and hot-swaps it as the next epoch with an empty
+//!   delta. Serving never stalls: the rebuild happens before the epoch
+//!   is published, so no reader's fast path misses until the swap is
+//!   already done.
+//!
+//! **Prefix stability.** `coo_to_csc` is a stable counting sort and
+//! `csc_to_coo` emits per-column order, so a compacted base's column
+//! `v` is exactly the old base's column `v` followed by the log's
+//! inserts into `v`, transitively across compactions. Two load-bearing
+//! consequences:
+//!
+//! 1. Reading *base then extras* through [`OverlayAdj`] is
+//!    bit-identical to an offline rebuild of the whole graph — equal
+//!    degrees mean identical sampler RNG draws, so logits match the
+//!    rebuild exactly at every epoch (the `live_graph` bench gate).
+//! 2. The adjacency cache's position-prefix entries (planned against
+//!    the preprocessing-time CSC) stay **correct** across any number
+//!    of mutations and compactions: position `pos < old degree` still
+//!    names the same neighbor. Mutation therefore never has to
+//!    invalidate a cache for correctness — it only bumps the mutated
+//!    nodes' tracker mass ([`LiveGraph::set_tracker`]) so the drift
+//!    detector re-caches them for hit rate.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::tracker::WorkloadTracker;
+use crate::mem::TransferLedger;
+use crate::sampler::AdjSource;
+use crate::util::{lock_unpoisoned, Rng};
+
+use super::csr::{coo_to_csc, csc_to_coo};
+use super::{Csc, NodeId};
+
+/// One immutable epoch of the live graph: a shared base CSC plus the
+/// delta accumulated since that base was built. Readers hold an epoch
+/// for the duration of one batch; a concurrent mutation or compaction
+/// publishes the *next* epoch without disturbing this one.
+pub struct GraphEpoch {
+    /// The compacted base (shared across epochs until the next
+    /// compaction replaces it).
+    base: Arc<Csc>,
+    /// Per-node patch index: `dst → in-neighbors appended since the
+    /// base`, in insertion (log) order.
+    extras: HashMap<NodeId, Vec<NodeId>>,
+    /// Append-only `(src, dst)` log of every edge inserted since the
+    /// base — the compactor's input, in arrival order.
+    log: Vec<(NodeId, NodeId)>,
+    /// Epoch tag (stamped by [`LiveGraph`] on publish; starts at 1).
+    epoch: u64,
+}
+
+impl GraphEpoch {
+    /// This epoch's tag.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The immutable base CSC.
+    #[inline]
+    pub fn base(&self) -> &Csc {
+        &self.base
+    }
+
+    /// Number of nodes (fixed at construction; a "node insert" is the
+    /// first edge into a previously isolated id).
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.base.n_nodes()
+    }
+
+    /// Live edge count: base edges plus the pending delta.
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.base.n_edges() + self.log.len()
+    }
+
+    /// Edges inserted since the base was compacted.
+    #[inline]
+    pub fn pending_edges(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Live in-degree of `v`: base degree plus appended extras.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        self.base.degree(v) + self.extra_degree(v)
+    }
+
+    /// Delta-only in-degree of `v`.
+    #[inline]
+    pub fn extra_degree(&self, v: NodeId) -> usize {
+        self.extras.get(&v).map_or(0, |e| e.len())
+    }
+
+    /// The neighbor at `pos ∈ [0, degree(v))` of the base∪delta view:
+    /// base column first, extras after, both in their stored order.
+    #[inline]
+    pub fn neighbor(&self, v: NodeId, pos: usize) -> NodeId {
+        let bd = self.base.degree(v);
+        if pos < bd {
+            self.base.neighbors(v)[pos]
+        } else {
+            self.extras[&v][pos - bd]
+        }
+    }
+
+    /// Whether `src` is already an in-neighbor of `dst` in this epoch
+    /// (base or delta) — the duplicate-insert check.
+    pub fn has_edge(&self, src: NodeId, dst: NodeId) -> bool {
+        self.base.neighbors(dst).contains(&src)
+            || self.extras.get(&dst).is_some_and(|e| e.contains(&src))
+    }
+
+    /// Merge base∪delta into a fresh standalone CSC — the compactor's
+    /// rebuild, also the bench's offline oracle. Base edges keep their
+    /// per-column order and log edges append after them (prefix
+    /// stability; see the module docs).
+    pub fn merged_csc(&self) -> Csc {
+        let mut coo = csc_to_coo(&self.base);
+        for &(src, dst) in &self.log {
+            coo.src.push(src);
+            coo.dst.push(dst);
+        }
+        coo_to_csc(&coo)
+    }
+}
+
+/// How many consecutive acquires a [`GraphHandle`] may serve a stale
+/// epoch before it blocks for the new one (the `SnapshotHandle` bound).
+const MAX_DEFERRALS: u32 = 8;
+
+/// The swappable live graph: the current [`GraphEpoch`] behind a
+/// mutex held only for swaps, with the epoch number published through
+/// an atomic so readers check staleness without touching the lock.
+///
+/// Mirrors `DualCacheRuntime`'s never-block contract: `mutate` and
+/// `compact` build the next epoch *before* publishing it, readers on
+/// the current epoch keep serving throughout, and a reader that blocks
+/// on the swap window is counted in [`LiveGraph::swap_stalls`].
+pub struct LiveGraph {
+    /// The current epoch. The mutex is held only to swap the `Arc` (or
+    /// briefly by a refreshing reader cloning it).
+    current: Mutex<Arc<GraphEpoch>>,
+    /// Current epoch number, published with `Release` while the swap
+    /// lock is held.
+    epoch: AtomicU64,
+    /// Epochs published (mutations + compactions).
+    swaps: AtomicU64,
+    /// Readers that blocked on the swap lock past their deferral
+    /// budget (the benches assert zero).
+    stalls: AtomicU64,
+    /// Acquires that kept a stale epoch because the lock was busy.
+    deferrals: AtomicU64,
+    /// Delta-into-base merges performed.
+    compactions: AtomicU64,
+    /// Lifetime accepted edge inserts (duplicates excluded).
+    inserted: AtomicU64,
+    /// Mutation-driven cache invalidation: mutated nodes get `boost`
+    /// extra visits recorded here so the drift detector re-plans them
+    /// (`None` = untracked, offline runs).
+    tracker: Mutex<Option<(Arc<dyn WorkloadTracker>, u32)>>,
+}
+
+impl LiveGraph {
+    /// Wrap a base CSC as epoch 1 with an empty delta. Edge values are
+    /// unsupported (the benchmark graphs are unweighted; a compaction
+    /// would drop them silently otherwise).
+    pub fn new(base: Csc) -> LiveGraph {
+        assert!(
+            base.values.is_none(),
+            "LiveGraph does not carry edge values (compaction would drop them)"
+        );
+        let snapshot = GraphEpoch {
+            base: Arc::new(base),
+            extras: HashMap::new(),
+            log: Vec::new(),
+            epoch: 1,
+        };
+        LiveGraph {
+            current: Mutex::new(Arc::new(snapshot)),
+            epoch: AtomicU64::new(1),
+            swaps: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            deferrals: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
+            tracker: Mutex::new(None),
+        }
+    }
+
+    /// The current epoch (an `Arc` clone under the swap lock — the
+    /// slow path; readers on the hot path go through [`GraphHandle`]).
+    pub fn load(&self) -> Arc<GraphEpoch> {
+        Arc::clone(&lock_unpoisoned(&self.current))
+    }
+
+    /// Current epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Epochs published over the graph's lifetime.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Readers that blocked on a swap (the never-block gate: 0).
+    pub fn swap_stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Acquires that deferred to a stale epoch instead of blocking.
+    pub fn swap_deferrals(&self) -> u64 {
+        self.deferrals.load(Ordering::Relaxed)
+    }
+
+    /// Delta-into-base merges performed.
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime accepted edge inserts (duplicates excluded).
+    pub fn edges_inserted(&self) -> u64 {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
+    /// Attach the serving-path workload tracker: every subsequent
+    /// mutation records `boost` visits of each mutated node, raising
+    /// its mass in the decayed drift profile so the next re-plan
+    /// re-caches it (`refresh.mutation-boost=`; see `cache::refresh`).
+    pub fn set_tracker(&self, tracker: Arc<dyn WorkloadTracker>, boost: u32) {
+        *lock_unpoisoned(&self.tracker) = Some((tracker, boost));
+    }
+
+    /// Insert edges `(src, dst)` — `src` becomes an in-neighbor of
+    /// `dst`, i.e. samplers expanding `dst` can now draw `src`.
+    /// Duplicates (already present in base or delta, or repeated
+    /// within the call) are dropped: inserts are idempotent. If
+    /// nothing new remains the current epoch is kept (no swap).
+    /// Returns the epoch the edges are visible in.
+    ///
+    /// Ids must be in range — the node set is fixed at construction
+    /// (a "node insert" is the first edge touching an isolated id).
+    pub fn mutate(&self, edges: &[(NodeId, NodeId)]) -> u64 {
+        let mut guard = lock_unpoisoned(&self.current);
+        let cur: &GraphEpoch = &guard;
+        let n = cur.base.n_nodes() as NodeId;
+        let mut fresh: Vec<(NodeId, NodeId)> = Vec::new();
+        for &(src, dst) in edges {
+            assert!(
+                src < n && dst < n,
+                "edge ({src},{dst}) out of range for n={n} (node set is fixed)"
+            );
+            if cur.has_edge(src, dst) || fresh.contains(&(src, dst)) {
+                continue;
+            }
+            fresh.push((src, dst));
+        }
+        if fresh.is_empty() {
+            return cur.epoch;
+        }
+        let mut extras = cur.extras.clone();
+        let mut log = cur.log.clone();
+        let mut mutated: Vec<NodeId> = Vec::with_capacity(fresh.len());
+        for &(src, dst) in &fresh {
+            extras.entry(dst).or_default().push(src);
+            log.push((src, dst));
+            mutated.push(dst);
+        }
+        let e = cur.epoch + 1;
+        let next = GraphEpoch { base: Arc::clone(&cur.base), extras, log, epoch: e };
+        *guard = Arc::new(next);
+        // publish while holding the lock: the fast-path epoch check can
+        // never run ahead of the snapshot it guards (runtime.rs rule)
+        self.epoch.store(e, Ordering::Release);
+        drop(guard);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.inserted.fetch_add(mutated.len() as u64, Ordering::Relaxed);
+        // the drift-detector bump happens off the swap lock: the next
+        // re-plan sees the mutated nodes as hot and re-caches them
+        if let Some((tracker, boost)) = lock_unpoisoned(&self.tracker).clone() {
+            tracker.record_nodes_boosted(&mutated, boost);
+        }
+        e
+    }
+
+    /// Merge the pending delta into a fresh base CSC and hot-swap it
+    /// as the next epoch (empty delta). A no-op (current epoch
+    /// returned, nothing counted) when the delta is empty.
+    ///
+    /// Never stalls serving: the O(edges) rebuild happens before the
+    /// epoch is published, so readers' fast-path epoch checks keep
+    /// passing until the swap itself — by prefix stability the
+    /// compacted columns extend the old ones in place, so even a
+    /// reader that held the old epoch across the swap reads the same
+    /// neighbors. Concurrent `mutate` calls queue behind the rebuild
+    /// (mutators are rare; readers are the never-block contract).
+    pub fn compact(&self) -> u64 {
+        let mut guard = lock_unpoisoned(&self.current);
+        let cur: &GraphEpoch = &guard;
+        if cur.log.is_empty() {
+            return cur.epoch;
+        }
+        let merged = cur.merged_csc();
+        debug_assert_eq!(merged.validate(), Ok(()));
+        let e = cur.epoch + 1;
+        let next = GraphEpoch {
+            base: Arc::new(merged),
+            extras: HashMap::new(),
+            log: Vec::new(),
+            epoch: e,
+        };
+        *guard = Arc::new(next);
+        self.epoch.store(e, Ordering::Release);
+        drop(guard);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        e
+    }
+}
+
+/// A reader's cursor over the live graph's epochs — the
+/// `SnapshotHandle` mirror. One per serving thread; `acquire` once per
+/// batch so a batch never mixes epochs.
+pub struct GraphHandle {
+    lg: Arc<LiveGraph>,
+    cached: Arc<GraphEpoch>,
+    /// Consecutive acquires served stale because the swap lock was
+    /// busy; at [`MAX_DEFERRALS`] the next refresh blocks (counted).
+    deferred_streak: u32,
+}
+
+impl GraphHandle {
+    /// A handle starting at the graph's current epoch.
+    pub fn new(lg: &Arc<LiveGraph>) -> GraphHandle {
+        GraphHandle {
+            cached: lg.load(),
+            lg: Arc::clone(lg),
+            deferred_streak: 0,
+        }
+    }
+
+    /// The shared [`LiveGraph`] this handle cursors (spawn more
+    /// handles from it — one per thread).
+    pub fn live(&self) -> &Arc<LiveGraph> {
+        &self.lg
+    }
+
+    /// The freshest epoch available without blocking: one `Acquire`
+    /// load on the fast path; on staleness, a `try_lock` refresh that
+    /// falls back to the held epoch ([`MAX_DEFERRALS`] times at most).
+    #[inline]
+    pub fn acquire(&mut self) -> &GraphEpoch {
+        let e = self.lg.epoch.load(Ordering::Acquire);
+        if e != self.cached.epoch {
+            self.refresh_slow();
+        }
+        &self.cached
+    }
+
+    /// [`GraphHandle::acquire`], returning an owned `Arc` (held across
+    /// a whole batch so both stages see one epoch).
+    pub fn acquire_arc(&mut self) -> Arc<GraphEpoch> {
+        self.acquire();
+        Arc::clone(&self.cached)
+    }
+
+    /// The epoch of the last acquire, without checking for newer ones.
+    #[inline]
+    pub fn peek(&self) -> &GraphEpoch {
+        &self.cached
+    }
+
+    #[cold]
+    fn refresh_slow(&mut self) {
+        if self.deferred_streak >= MAX_DEFERRALS {
+            // the bounded-staleness escape hatch; counted so the
+            // benches can assert it never fires
+            self.lg.stalls.fetch_add(1, Ordering::Relaxed);
+            self.cached = Arc::clone(&lock_unpoisoned(&self.lg.current));
+            self.deferred_streak = 0;
+            return;
+        }
+        match self.lg.current.try_lock() {
+            Ok(guard) => {
+                self.cached = Arc::clone(&guard);
+                self.deferred_streak = 0;
+            }
+            Err(_) => {
+                self.lg.deferrals.fetch_add(1, Ordering::Relaxed);
+                self.deferred_streak += 1;
+            }
+        }
+    }
+}
+
+/// Adjacency source layering a [`GraphEpoch`]'s delta over the cached
+/// base reads: positions inside the preprocessing-time CSC go to the
+/// wrapped (cache-routed) source unchanged — prefix stability keeps
+/// those entries correct across compactions — and delta positions read
+/// the epoch directly, priced as host misses (an appended edge cannot
+/// be cached before the next re-plan).
+///
+/// With an empty delta this is bit-identical (reads *and* ledger) to
+/// the wrapped source.
+pub struct OverlayAdj<'a, A: AdjSource> {
+    /// The cache-routed source over the preprocessing-time CSC.
+    pub cached: A,
+    /// The epoch this batch reads (base∪delta).
+    pub epoch: &'a GraphEpoch,
+    /// The preprocessing-time CSC the caches were planned against —
+    /// positions below its degree are servable from `cached`.
+    pub orig: &'a Csc,
+}
+
+impl<'a, A: AdjSource> AdjSource for OverlayAdj<'a, A> {
+    #[inline]
+    fn degree(&self, v: NodeId) -> usize {
+        self.epoch.degree(v)
+    }
+
+    #[inline]
+    fn neighbor_at(&self, v: NodeId, pos: usize, ledger: &mut TransferLedger) -> NodeId {
+        if pos < self.orig.degree(v) {
+            self.cached.neighbor_at(v, pos, ledger)
+        } else {
+            // beyond the planned prefix: compacted-in or delta edge,
+            // always a host read until a re-plan caches it
+            ledger.miss(std::mem::size_of::<NodeId>() as u64, 1);
+            self.epoch.neighbor(v, pos)
+        }
+    }
+}
+
+/// Parsed `graph.mutate=EDGES[@SEED]` spec: how many edges the serve
+/// driver inserts over the run, and the stream seed (`None` = derive
+/// from the run seed, so one knob still describes a fully
+/// deterministic run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MutationSpec {
+    /// Total edges to insert over the serve run.
+    pub edges: u64,
+    /// Insert-stream seed override.
+    pub seed: Option<u64>,
+}
+
+impl MutationSpec {
+    /// Parse `EDGES` or `EDGES@SEED` (e.g. `graph.mutate=256@7`).
+    pub fn parse(s: &str) -> Result<MutationSpec> {
+        let (edges, seed) = match s.split_once('@') {
+            Some((e, sd)) => (
+                e.parse::<u64>().context("graph.mutate edge count")?,
+                Some(sd.parse::<u64>().context("graph.mutate seed")?),
+            ),
+            None => (s.parse::<u64>().context("graph.mutate edge count")?, None),
+        };
+        if edges == 0 {
+            bail!("graph.mutate needs a positive edge count (or off/none)");
+        }
+        Ok(MutationSpec { edges, seed })
+    }
+}
+
+/// The seeded insert stream every consumer shares (serve driver,
+/// bench, tests): `edges` uniform `(src, dst)` pairs over the fixed
+/// node set. Pure in `(n_nodes, edges, seed)` — replaying the stream
+/// against an offline rebuild is the bench's bit-identity oracle.
+pub fn mutation_stream(n_nodes: usize, edges: u64, seed: u64) -> Vec<(NodeId, NodeId)> {
+    let mut rng = Rng::new(seed ^ 0x11fe_6a4f_edde_7a17);
+    (0..edges)
+        .map(|_| {
+            (
+                rng.gen_usize(n_nodes) as NodeId,
+                rng.gen_usize(n_nodes) as NodeId,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::UvaAdj;
+
+    /// 4 nodes; node 3 has zero base in-neighbors.
+    fn small() -> Csc {
+        Csc {
+            col_ptr: vec![0, 2, 3, 5, 5],
+            row_index: vec![1, 2, 0, 0, 3, /* col 3 empty */],
+            values: None,
+        }
+    }
+
+    #[test]
+    fn mutate_bumps_epoch_and_readers_follow() {
+        let lg = Arc::new(LiveGraph::new(small()));
+        let mut h = GraphHandle::new(&lg);
+        assert_eq!(h.acquire().epoch(), 1);
+        assert_eq!(lg.mutate(&[(3, 0)]), 2);
+        let ep = h.acquire();
+        assert_eq!(ep.epoch(), 2);
+        assert_eq!(ep.degree(0), 3);
+        assert_eq!(ep.neighbor(0, 0), 1, "base order undisturbed");
+        assert_eq!(ep.neighbor(0, 2), 3, "extras append after base");
+        assert_eq!(lg.swaps(), 1);
+        assert_eq!(lg.swap_stalls(), 0);
+    }
+
+    #[test]
+    fn duplicate_inserts_are_idempotent() {
+        let lg = LiveGraph::new(small());
+        // (1, 0) already in base; (3, 0) twice in one call; then again
+        let e = lg.mutate(&[(1, 0), (3, 0), (3, 0)]);
+        assert_eq!(e, 2);
+        assert_eq!(lg.load().degree(0), 3);
+        // nothing new: no swap, epoch unchanged
+        assert_eq!(lg.mutate(&[(3, 0), (1, 0)]), 2);
+        assert_eq!(lg.swaps(), 1);
+        assert_eq!(lg.load().pending_edges(), 1);
+    }
+
+    #[test]
+    fn insert_into_zero_degree_node() {
+        let lg = LiveGraph::new(small());
+        assert_eq!(lg.load().degree(3), 0);
+        lg.mutate(&[(0, 3), (1, 3)]);
+        let ep = lg.load();
+        assert_eq!(ep.degree(3), 2);
+        assert_eq!(ep.neighbor(3, 0), 0);
+        assert_eq!(ep.neighbor(3, 1), 1);
+        // compaction folds the isolated node's first edges into base
+        lg.compact();
+        let ep = lg.load();
+        assert_eq!(ep.base().neighbors(3), &[0, 1]);
+        assert_eq!(ep.pending_edges(), 0);
+    }
+
+    #[test]
+    fn compaction_preserves_prefix_order_and_is_transitive() {
+        let lg = LiveGraph::new(small());
+        lg.mutate(&[(3, 0), (0, 1)]);
+        let before = lg.load();
+        assert_eq!(lg.compact(), 3);
+        let after = lg.load();
+        assert_eq!(lg.compactions(), 1);
+        for v in 0..4 as NodeId {
+            // the compacted column = old base column ++ old extras
+            let want: Vec<NodeId> =
+                (0..before.degree(v)).map(|p| before.neighbor(v, p)).collect();
+            assert_eq!(after.base().neighbors(v), want.as_slice(), "node {v}");
+        }
+        // second generation: mutate + compact on the compacted base
+        lg.mutate(&[(3, 1)]);
+        lg.compact();
+        let final_ep = lg.load();
+        assert_eq!(final_ep.base().neighbors(0), &[1, 2, 3]);
+        assert_eq!(final_ep.base().neighbors(1), &[0, 3], "transitive prefix");
+        assert_eq!(lg.compactions(), 2);
+    }
+
+    #[test]
+    fn compact_is_noop_on_empty_delta() {
+        let lg = LiveGraph::new(small());
+        assert_eq!(lg.compact(), 1);
+        assert_eq!(lg.compactions(), 0);
+        assert_eq!(lg.swaps(), 0);
+    }
+
+    #[test]
+    fn snapshot_held_across_compaction_reads_old_epoch() {
+        let lg = LiveGraph::new(small());
+        lg.mutate(&[(3, 0)]);
+        let held = lg.load();
+        assert_eq!(held.epoch(), 2);
+        lg.compact();
+        lg.mutate(&[(0, 3)]);
+        // the held epoch is untouched: delta still pending, new edge
+        // invisible — the never-block property's other half
+        assert_eq!(held.epoch(), 2);
+        assert_eq!(held.pending_edges(), 1);
+        assert_eq!(held.degree(3), 0);
+        assert_eq!(lg.load().epoch(), 4);
+    }
+
+    #[test]
+    fn overlay_matches_raw_epoch_and_prices_delta_as_misses() {
+        let csc = small();
+        let lg = LiveGraph::new(csc.clone());
+        lg.mutate(&[(3, 0), (1, 3)]);
+        let ep = lg.load();
+        let overlay = OverlayAdj { cached: UvaAdj { csc: &csc }, epoch: &ep, orig: &csc };
+        let mut ledger = TransferLedger::new();
+        for v in 0..4 as NodeId {
+            assert_eq!(overlay.degree(v), ep.degree(v));
+            for pos in 0..overlay.degree(v) {
+                assert_eq!(overlay.neighbor_at(v, pos, &mut ledger), ep.neighbor(v, pos));
+            }
+        }
+        // every read was a miss here (UVA base + delta): 5 base + 2 delta
+        assert_eq!(ledger.misses, 7);
+    }
+
+    #[test]
+    fn merged_csc_equals_offline_rebuild() {
+        let csc = small();
+        let stream = mutation_stream(4, 6, 9);
+        let lg = LiveGraph::new(csc.clone());
+        lg.mutate(&stream);
+        // offline oracle: base edges (per-column order) ++ accepted log
+        let merged = lg.load().merged_csc();
+        merged.validate().unwrap();
+        let mut coo = csc_to_coo(&csc);
+        let mut seen: Vec<(NodeId, NodeId)> = coo
+            .src
+            .iter()
+            .zip(&coo.dst)
+            .map(|(&s, &d)| (s, d))
+            .collect();
+        for &(s, d) in &stream {
+            if !seen.contains(&(s, d)) {
+                seen.push((s, d));
+                coo.src.push(s);
+                coo.dst.push(d);
+            }
+        }
+        let oracle = coo_to_csc(&coo);
+        assert_eq!(merged.col_ptr, oracle.col_ptr);
+        assert_eq!(merged.row_index, oracle.row_index);
+    }
+
+    #[test]
+    fn mutation_stream_is_deterministic_and_in_range() {
+        let a = mutation_stream(100, 32, 7);
+        let b = mutation_stream(100, 32, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, mutation_stream(100, 32, 8));
+        assert!(a.iter().all(|&(s, d)| s < 100 && d < 100));
+        assert_eq!(a.len(), 32);
+    }
+
+    #[test]
+    fn mutation_spec_parses() {
+        assert_eq!(
+            MutationSpec::parse("256@7").unwrap(),
+            MutationSpec { edges: 256, seed: Some(7) }
+        );
+        assert_eq!(
+            MutationSpec::parse("64").unwrap(),
+            MutationSpec { edges: 64, seed: None }
+        );
+        assert!(MutationSpec::parse("0").is_err());
+        assert!(MutationSpec::parse("x@1").is_err());
+        assert!(MutationSpec::parse("8@y").is_err());
+    }
+
+    #[test]
+    fn tracker_bump_records_mutated_nodes() {
+        use crate::cache::tracker::AccessTracker;
+        let lg = LiveGraph::new(small());
+        let tracker = Arc::new(AccessTracker::new(4, 5));
+        lg.set_tracker(tracker.clone(), 3);
+        lg.mutate(&[(3, 0), (0, 3)]);
+        let w = tracker.drain();
+        // each mutated dst got `boost` visits
+        assert_eq!(w.node_visits, vec![(0, 3), (3, 3)]);
+    }
+}

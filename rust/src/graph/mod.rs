@@ -1,17 +1,20 @@
 //! Graph substrate: CSC adjacency storage (§II.C of the paper),
-//! builders, synthetic generators, the Table-II dataset stand-ins, and
-//! the host-side node feature store.
+//! builders, synthetic generators, the Table-II dataset stand-ins, the
+//! host-side node feature store, and the epoch-swapped live-mutation
+//! overlay ([`delta`]).
 
 pub mod builder;
 pub mod csc;
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod features;
 pub mod generator;
 pub mod io;
 
 pub use csc::Csc;
 pub use datasets::{Dataset, DatasetSpec};
+pub use delta::{mutation_stream, GraphEpoch, GraphHandle, LiveGraph, MutationSpec, OverlayAdj};
 pub use features::FeatureStore;
 
 /// Node identifier. All graphs here fit u32 (papers100m-sim included).

@@ -22,7 +22,7 @@ use dci::bench_support::scenario;
 use dci::config::RunConfig;
 use dci::coordinator::{BatcherConfig, Server, ServerConfig};
 use dci::engine::run_config;
-use dci::graph::datasets;
+use dci::graph::{datasets, mutation_stream, MutationSpec};
 use dci::mem::DeviceMemory;
 use dci::sampler::presample_threads;
 use dci::util::{format_bytes, Rng};
@@ -94,7 +94,13 @@ fn print_usage() {
          \x20            scenario=flash_crowd|diurnal|scan_storm|powerlaw_fanout|\n\
          \x20             burst_locality   (workload-zoo request stream; scenario.seed=\n\
          \x20             reseeds generation) trace=FILE   (replay a canonical JSON\n\
-         \x20             trace instead; wins over scenario=)\n\n\
+         \x20             trace instead; wins over scenario=)\n\
+         \x20            graph.mutate=N[@SEED]   (live graph: apply N seeded edge\n\
+         \x20             inserts concurrent with serving, epoch-swapped snapshots)\n\
+         \x20            graph.compact-batches=K   (fold the delta into a new base\n\
+         \x20             CSR every K mutation waves; unset = compact once at end)\n\
+         \x20            refresh.mutation-boost=B   (tracker mass multiplier for\n\
+         \x20             mutated nodes; drives re-caching at the next re-plan)\n\n\
          config keys accept dotted namespaces (cache.* refresh.* transfer.*\n\
          fault.* tenant.* scenario.*); the flat spellings above remain as aliases."
     );
@@ -244,6 +250,44 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         },
     )?;
 
+    // live-graph mutation driver: graph.mutate=N[@SEED] applies a
+    // seeded insert stream in waves, concurrent with the request
+    // stream, and compacts the delta every graph.compact-batches
+    // waves. Workers keep serving through every epoch swap — the
+    // snapshot handles never block (see graph/delta.rs).
+    let mutator = if let Some(spec) = &cfg.graph_mutate {
+        let spec = MutationSpec::parse(spec)?;
+        let lg = server
+            .live_graph()
+            .expect("graph.mutate= armed but the server has no live graph");
+        let stream = mutation_stream(
+            ds.csc.n_nodes(),
+            spec.edges,
+            spec.seed.unwrap_or(cfg.seed),
+        );
+        let compact_every = cfg.graph_compact_batches;
+        println!(
+            "mutating: {} edge inserts in waves (compact every {} waves)",
+            stream.len(),
+            compact_every.map_or_else(|| "∞".into(), |k| k.to_string()),
+        );
+        Some(std::thread::spawn(move || {
+            let waves = 16usize.min(stream.len().max(1));
+            let per = stream.len().div_ceil(waves).max(1);
+            for (i, chunk) in stream.chunks(per).enumerate() {
+                lg.mutate(chunk);
+                if compact_every.is_some_and(|k| (i + 1) % k == 0) {
+                    lg.compact();
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // end compacted: the final epoch's base is the full graph
+            lg.compact();
+        }))
+    } else {
+        None
+    };
+
     // request stream: a trace file wins, then a scenario generator,
     // then the uniform synthetic default
     let trace = if let Some(path) = &cfg.trace {
@@ -303,6 +347,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600))
             .map_err(|_| anyhow::anyhow!("response timed out"))?;
+    }
+    if let Some(j) = mutator {
+        j.join()
+            .map_err(|_| anyhow::anyhow!("mutation driver panicked"))?;
     }
     let (metrics, elapsed) = server.shutdown()?;
     println!("\n== serving metrics ==\n{}", metrics.report(elapsed));

@@ -1,0 +1,199 @@
+//! Live-graph mutation: cross-shape equivalence and never-block
+//! serving.
+//!
+//! Three property families:
+//!   1. **Cross-shape bit-identity under mutation** — with the same
+//!      mutated [`LiveGraph`] state (insert stream applied in waves,
+//!      compaction landing mid-stream), the serial engine, the staged
+//!      pipeline, and a 4-shard runtime replay the same batch list with
+//!      bit-identical logits and ledger counters — the PR 3/7/9
+//!      bit-identity matrices extended from frozen graphs to mutated
+//!      ones.
+//!   2. **Overlay = offline rebuild** — serving through the base+delta
+//!      overlay produces logits bit-identical to a fresh engine built
+//!      on `GraphEpoch::merged_csc()` (prefix stability: compaction
+//!      appends each column's log inserts after its base prefix, so
+//!      degrees and neighbor order — and therefore every RNG draw —
+//!      match).
+//!   3. **Never-block** — a mutator thread swapping epochs (and
+//!      compacting) concurrently with serving never stalls a reader:
+//!      `LiveGraph::swap_stalls() == 0`, and the observed epoch is
+//!      monotone.
+
+use std::sync::Arc;
+
+use dci::config::{ComputeKind, RunConfig, SystemKind};
+use dci::engine::{InferenceEngine, InferenceReport};
+use dci::graph::{datasets, mutation_stream, Dataset, LiveGraph, NodeId};
+use dci::sampler::Fanout;
+use dci::util::Rng;
+
+fn shape_cfg(depth: usize, threads: usize, shards: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.system = SystemKind::Dci;
+    cfg.batch_size = 48;
+    cfg.fanout = Fanout::parse("3,2").unwrap();
+    cfg.budget = Some(300_000);
+    cfg.compute = ComputeKind::Reference;
+    cfg.hidden = 16;
+    cfg.pipeline_depth = depth;
+    cfg.sample_threads = threads;
+    cfg.shards = shards;
+    cfg
+}
+
+fn batches(ds: &Dataset, n: usize, bs: usize, seed: u64) -> Vec<Vec<NodeId>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..bs)
+                .map(|_| ds.test_nodes[rng.gen_usize(ds.test_nodes.len())])
+                .collect()
+        })
+        .collect()
+}
+
+/// A LiveGraph carrying real history: two mutation waves with a
+/// compaction between them, so the current epoch has both a merged base
+/// (beyond the original CSC) and a live delta tail.
+fn mutated_graph(ds: &Dataset) -> Arc<LiveGraph> {
+    let lg = Arc::new(LiveGraph::new(ds.csc.clone()));
+    let stream = mutation_stream(ds.csc.n_nodes(), 240, 17);
+    let (first, second) = stream.split_at(stream.len() / 2);
+    lg.mutate(first);
+    lg.compact();
+    lg.mutate(second);
+    assert!(lg.edges_inserted() > 0, "the stream must actually insert");
+    assert_eq!(lg.compactions(), 1);
+    lg
+}
+
+fn replay(
+    ds: &Dataset,
+    lg: &Arc<LiveGraph>,
+    cfg: RunConfig,
+    views: &[&[NodeId]],
+) -> InferenceReport {
+    let mut engine = InferenceEngine::prepare(ds, cfg).unwrap();
+    engine.set_live_graph(Arc::clone(lg));
+    engine.run_batches(views).unwrap()
+}
+
+fn assert_identical(tag: &str, a: &InferenceReport, b: &InferenceReport) {
+    assert_eq!(a.n_batches, b.n_batches, "{tag}: n_batches");
+    assert_eq!(a.n_seeds, b.n_seeds, "{tag}: n_seeds");
+    assert_eq!(a.loaded_nodes, b.loaded_nodes, "{tag}: loaded_nodes");
+    assert_eq!(a.stats.sample.hits, b.stats.sample.hits, "{tag}: sample hits");
+    assert_eq!(a.stats.sample.misses, b.stats.sample.misses, "{tag}: sample misses");
+    assert_eq!(a.stats.feature.hits, b.stats.feature.hits, "{tag}: feature hits");
+    assert_eq!(a.stats.feature.misses, b.stats.feature.misses, "{tag}: feature misses");
+    assert_eq!(
+        a.logits_checksum.to_bits(),
+        b.logits_checksum.to_bits(),
+        "{tag}: logits checksum {} vs {}",
+        a.logits_checksum,
+        b.logits_checksum
+    );
+}
+
+#[test]
+fn mutated_graph_replays_bit_identically_across_execution_shapes() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let lg = mutated_graph(&ds);
+    let owned = batches(&ds, 12, 48, 23);
+    let views: Vec<&[NodeId]> = owned.iter().map(|b| b.as_slice()).collect();
+
+    let serial = replay(&ds, &lg, shape_cfg(1, 1, 1), &views);
+    assert!(serial.logits_checksum > 0.0, "reference logits flowed");
+    let piped = replay(&ds, &lg, shape_cfg(3, 2, 1), &views);
+    assert_identical("pipelined under mutation", &serial, &piped);
+    let sharded = replay(&ds, &lg, shape_cfg(1, 1, 4), &views);
+    assert_identical("shards=4 under mutation", &serial, &sharded);
+    // the delta tail was actually read, not just carried: the same
+    // batches on the frozen graph must answer differently
+    let mut frozen = InferenceEngine::prepare(&ds, shape_cfg(1, 1, 1)).unwrap();
+    let frozen_report = frozen.run_batches(&views).unwrap();
+    assert_ne!(
+        frozen_report.logits_checksum.to_bits(),
+        serial.logits_checksum.to_bits(),
+        "mutations must change what serving computes"
+    );
+    assert_eq!(lg.swap_stalls(), 0, "no shape may stall an epoch swap");
+}
+
+#[test]
+fn overlay_serving_matches_offline_rebuild() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let lg = mutated_graph(&ds);
+    let owned = batches(&ds, 10, 48, 31);
+    let views: Vec<&[NodeId]> = owned.iter().map(|b| b.as_slice()).collect();
+
+    let live = replay(&ds, &lg, shape_cfg(1, 1, 1), &views);
+    // offline oracle: the same graph rebuilt from scratch as a plain
+    // CSC — caches get planned differently (the rebuilt graph has more
+    // edges), so only the logits are comparable, and they must be
+    // bit-identical
+    let oracle_ds = Dataset {
+        spec: ds.spec.clone(),
+        csc: lg.load().merged_csc(),
+        features: ds.features.clone(),
+        test_nodes: ds.test_nodes.clone(),
+    };
+    let mut oracle = InferenceEngine::prepare(&oracle_ds, shape_cfg(1, 1, 1)).unwrap();
+    let oracle_report = oracle.run_batches(&views).unwrap();
+    assert_eq!(
+        live.logits_checksum.to_bits(),
+        oracle_report.logits_checksum.to_bits(),
+        "overlay logits {} diverged from offline rebuild {}",
+        live.logits_checksum,
+        oracle_report.logits_checksum
+    );
+}
+
+#[test]
+fn concurrent_mutation_and_compaction_never_stall_serving() {
+    let ds = datasets::spec("tiny").unwrap().build();
+    let lg = Arc::new(LiveGraph::new(ds.csc.clone()));
+    let epoch0 = lg.epoch();
+    let owned = batches(&ds, 4, 32, 41);
+    let views: Vec<&[NodeId]> = owned.iter().map(|b| b.as_slice()).collect();
+
+    let mut engine = InferenceEngine::prepare(&ds, shape_cfg(1, 1, 1)).unwrap();
+    engine.set_live_graph(Arc::clone(&lg));
+
+    let waves = 12u64;
+    let mutator = {
+        let lg = Arc::clone(&lg);
+        let n = ds.csc.n_nodes();
+        std::thread::spawn(move || {
+            for w in 0..waves {
+                lg.mutate(&mutation_stream(n, 20, 100 + w));
+                if w % 4 == 3 {
+                    lg.compact();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+    };
+
+    // serve continuously while the epochs churn; every acquire must
+    // ride the fast path or a clean deferral — never a blocking wait
+    let mut last_epoch = epoch0;
+    while !mutator.is_finished() {
+        engine.run_batches(&views).unwrap();
+        let e = lg.epoch();
+        assert!(e >= last_epoch, "epoch went backwards: {last_epoch} -> {e}");
+        last_epoch = e;
+    }
+    mutator.join().unwrap();
+    engine.run_batches(&views).unwrap();
+
+    assert!(lg.epoch() > epoch0, "the mutator must have swapped epochs");
+    assert!(lg.compactions() >= 1, "at least one compaction ran");
+    assert_eq!(
+        lg.swap_stalls(),
+        0,
+        "serving blocked on an epoch swap (deferrals are fine, stalls are not)"
+    );
+}
